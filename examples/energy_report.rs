@@ -1,0 +1,65 @@
+//! Energy report: the Appendix E analytic model on the paper's exact
+//! architectures — regenerates the Cons.(%) columns of Tables 2/5 and the
+//! energy axis of Fig. 1.
+//!
+//!     cargo run --release --example energy_report
+
+use bold::energy::{
+    conv_energy, network_energy, resnet18_shapes, vgg_small_shapes, ConvShape, Method, Phase,
+    ASCEND, V100,
+};
+
+fn main() {
+    // ------------- Table 2 energy columns (VGG-SMALL, CIFAR10) ----------
+    for hw in [ASCEND(), V100()] {
+        println!("=== {} — VGG-SMALL (batch 100), 1 training iteration", hw.name);
+        let shapes = vgg_small_shapes(100);
+        let fp = network_energy(&shapes, &hw, Method::Fp32, true).total_pj();
+        println!(
+            "{:<18} {:>12} {:>9} {:>9} {:>8} {:>9}",
+            "method", "total (µJ)", "comp%", "mem%", "opt%", "vs FP%"
+        );
+        for m in Method::all() {
+            let e = network_energy(&shapes, &hw, m, true);
+            let t = e.total_pj();
+            println!(
+                "{:<18} {:>12.1} {:>9.1} {:>9.1} {:>8.1} {:>9.2}",
+                m.name(),
+                t / 1e6,
+                e.compute_pj / t * 100.0,
+                e.mem_pj / t * 100.0,
+                e.optimizer_pj / t * 100.0,
+                t / fp * 100.0
+            );
+        }
+        println!();
+    }
+
+    // ------------- Table 5 energy columns (ResNet18, ImageNet) ----------
+    let hw = V100();
+    println!("=== {} — ResNet18 base sweep (batch 32), vs FP base-64", hw.name);
+    let fp = network_energy(&resnet18_shapes(32, 64), &hw, Method::Fp32, true).total_pj();
+    for base in [64usize, 128, 192, 256] {
+        let e = network_energy(&resnet18_shapes(32, base), &hw, Method::Bold, true).total_pj();
+        println!("B⊕LD base {base:<4} {:>8.2}% of FP training energy", e / fp * 100.0);
+    }
+    println!("(paper Table 5: base 256 at 24.45% of FP on V100)");
+    println!();
+
+    // ------------- per-layer breakdown of one conv ----------------------
+    println!("=== per-layer anatomy: conv2a of VGG-SMALL (256x128x3x3 on 16x16)");
+    let shape = ConvShape { n: 100, c: 128, m: 256, h: 16, w: 16, k: 3, stride: 1, pad: 1 };
+    for m in [Method::Fp32, Method::BinaryNet, Method::Bold] {
+        let bits = bold::energy::method_bitwidths(m);
+        let f = conv_energy(&shape, &hw, &bits, Phase::Forward);
+        let b = conv_energy(&shape, &hw, &bits, Phase::Backward);
+        println!(
+            "{:<18} fwd {:>10.1} µJ (comp {:>6.1} mem {:>6.1})   bwd {:>10.1} µJ",
+            m.name(),
+            f.total() / 1e6,
+            f.compute_pj / 1e6,
+            f.mem_pj / 1e6,
+            b.total() / 1e6
+        );
+    }
+}

@@ -1,0 +1,85 @@
+//! Super-resolution demo (paper §4.2): train the Boolean small-EDSR on
+//! procedural texture patches with the L1 loss, report PSNR against an FP
+//! small-EDSR baseline and against bicubic-like box upsampling.
+//!
+//!     cargo run --release --example super_resolution [steps]
+
+use bold::data::{BatchSampler, SrDataset};
+use bold::models::edsr::psnr;
+use bold::models::{edsr_small, EdsrConfig};
+use bold::nn::{l1_loss, Layer, Value};
+use bold::optim::{Adam, BooleanOptimizer};
+use bold::tensor::Tensor;
+use bold::util::Rng;
+
+fn train(cfg: &EdsrConfig, steps: usize, seed: u64) -> (f32, f64) {
+    let train = SrDataset::textures(96, 3, 8, cfg.scale, seed);
+    let val = SrDataset::textures(16, 3, 8, cfg.scale, seed + 1);
+    let mut rng = Rng::new(seed);
+    let mut model = edsr_small(cfg, &mut rng);
+    let bool_opt = BooleanOptimizer::new(6.0);
+    let mut adam = Adam::new(1e-3);
+    let mut sampler = BatchSampler::new(train.n, 8, seed);
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let idx = sampler.next_batch();
+        let (lr, hr) = train.batch(&idx);
+        let pred = model.forward(Value::F32(lr), true).expect_f32("sr");
+        let out = l1_loss(&pred, &hr);
+        model.zero_grads();
+        let _ = model.backward(out.grad);
+        let mut params = model.params();
+        bool_opt.step(&mut params);
+        adam.step(&mut params);
+        if step % 50 == 0 {
+            println!("  step {step:>4}: L1 {:.4}", out.loss);
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let idx: Vec<usize> = (0..val.n).collect();
+    let (lr, hr) = val.batch(&idx);
+    let pred = model.forward(Value::F32(lr), false).expect_f32("sr");
+    (psnr(&pred, &hr), secs)
+}
+
+/// Nearest-neighbour upsample baseline PSNR (no learning at all).
+fn naive_baseline(scale: usize, seed: u64) -> f32 {
+    let val = SrDataset::textures(16, 3, 8, scale, seed + 1);
+    let idx: Vec<usize> = (0..val.n).collect();
+    let (lr, hr) = val.batch(&idx);
+    let (n, c, h, w) = lr.dims4();
+    let mut up = Tensor::zeros(&hr.shape);
+    for ni in 0..n {
+        for ci in 0..c {
+            for y in 0..h * scale {
+                for x in 0..w * scale {
+                    up.data[((ni * c + ci) * h * scale + y) * w * scale + x] =
+                        lr.data[((ni * c + ci) * h + y / scale) * w + x / scale];
+                }
+            }
+        }
+    }
+    psnr(&up, &hr)
+}
+
+fn main() {
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    println!("Boolean EDSR super-resolution (x2), {} steps\n", steps);
+    let scale = 2;
+
+    println!("training FP small-EDSR baseline…");
+    let fp_cfg = EdsrConfig { features: 16, blocks: 3, scale, boolean: false, ..Default::default() };
+    let (psnr_fp, t_fp) = train(&fp_cfg, steps, 31);
+
+    println!("training B⊕LD EDSR (Boolean residual blocks)…");
+    let bold_cfg = EdsrConfig { features: 16, blocks: 3, scale, boolean: true, ..Default::default() };
+    let (psnr_bold, t_bold) = train(&bold_cfg, steps, 31);
+
+    let psnr_naive = naive_baseline(scale, 31);
+    println!("\n{:<28} {:>10} {:>12}", "method", "PSNR (dB)", "train time");
+    println!("{:<28} {:>10.2} {:>11.1}s", "nearest-neighbour upsample", psnr_naive, 0.0);
+    println!("{:<28} {:>10.2} {:>11.1}s", "SMALL EDSR (FP)", psnr_fp, t_fp);
+    println!("{:<28} {:>10.2} {:>11.1}s", "B⊕LD EDSR", psnr_bold, t_bold);
+    println!("\n(paper Table 3, x2 on Set5: FP 38.01 vs B⊕LD 37.42 — sub-dB gap)");
+    assert!(psnr_bold > psnr_naive, "learned SR must beat naive upsampling");
+}

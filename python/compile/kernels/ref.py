@@ -1,0 +1,101 @@
+# Pure-jnp correctness oracle for the L1 Pallas kernels.
+#
+# Everything is expressed in the ±1 *embedded* domain of Proposition A.2 of
+# the paper:  e : (B, xnor) -> ({±1}, ×)  with e(T)=+1, e(F)=-1.  Under this
+# isomorphism the Boolean neuron of Eq. (1),
+#     s = w0 + sum_i xnor(w_i, x_i)          (counting of TRUEs - FALSEs)
+# is exactly the integer-valued dot product  s = b + <e(x), e(w)>, and the
+# Boolean backward of Algorithms 6/7 (Appendix B) is a plain matmul with the
+# embedded weights/inputs.  All reference functions below therefore take and
+# return ±1-valued (or integer/real-valued) arrays; the bit-level Boolean
+# engine lives on the Rust side and is cross-checked against these semantics.
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "xnor_linear_fwd_ref",
+    "xnor_linear_bwd_ref",
+    "threshold_act_ref",
+    "tanh_prime_scale_ref",
+    "bool_opt_step_ref",
+    "alpha_for_fanin",
+]
+
+
+def xnor_linear_fwd_ref(x, w, bias=None):
+    """Boolean linear forward, Eq. (3), in the ±1 embedding.
+
+    x:    (batch, m)  ±1
+    w:    (n, m)      ±1   (row-major: one row per output neuron)
+    bias: (n,) integer or None
+    returns (batch, n) integer-valued pre-activations
+            s_kj = b_j + sum_i xnor(w_ji, x_ki)  ==  b_j + <x_k, w_j>
+    """
+    s = x @ w.T
+    if bias is not None:
+        s = s + bias[None, :]
+    return s
+
+
+def xnor_linear_bwd_ref(z, x, w):
+    """Boolean backward for the xnor-linear layer (Algorithms 6/7).
+
+    With the xnor kernel, the atomic variations of Eq. (4) are
+        δs_kj/δw_ji = x_ki      δs_kj/δx_ki = w_ji
+    and the aggregations of Eq. (7)/(8) are, in the embedded domain,
+        q_ji = sum_k  z_kj · x_ki        (vote over the batch)
+        g_ki = sum_j  z_kj · w_ji        (vote over the outputs)
+    which hold verbatim whether z is a real-valued downstream gradient
+    (Algorithm 7) or an embedded Boolean signal in {±1} (Algorithm 6).
+
+    z: (batch, n) downstream signal;  x: (batch, m) ±1;  w: (n, m) ±1.
+    returns (g_x: (batch, m), q_w: (n, m), q_b: (n,))
+    """
+    g_x = z @ w
+    q_w = z.T @ x
+    q_b = z.sum(axis=0)
+    return g_x, q_w, q_b
+
+
+def threshold_act_ref(s, tau=0.0):
+    """Forward Boolean activation (§3.1): T (=+1) iff s >= tau."""
+    return jnp.where(s >= tau, 1.0, -1.0).astype(s.dtype)
+
+
+def alpha_for_fanin(m):
+    """Pre-activation scaling α = π / (2 sqrt(3 m)), Eq. (24) (Appendix C.3)."""
+    return np.pi / (2.0 * np.sqrt(3.0 * float(m)))
+
+
+def tanh_prime_scale_ref(z, s, fanin, tau=0.0):
+    """Backprop re-weighting through the threshold activation (Appendix C).
+
+    The downstream signal z is attenuated by tanh'(α·(s-τ)) = 1 - tanh²(α·Δ)
+    so that an action on a weight far from the threshold contributes less.
+    """
+    alpha = alpha_for_fanin(fanin)
+    t = jnp.tanh(alpha * (s - tau))
+    return z * (1.0 - t * t)
+
+
+def bool_opt_step_ref(w, accum, grad, lr, ratio):
+    """One Boolean-optimizer step (Algorithm 8) in the ±1 embedding.
+
+    w:     (...,) ±1 Boolean weights (embedded)
+    accum: (...,) real accumulator m_t
+    grad:  (...,) aggregated optimization signal q_t
+    lr:    scalar η
+    ratio: scalar β_t  (fraction of unchanged weights at t-1, per tensor)
+
+    accum' = ratio·accum + lr·grad
+    flip where accum'·w >= 1  (xnor(m, w) = T with |m| >= 1, Eq. (9))
+    w' = -w there, accum' reset to 0 there (Algorithm 1 lines 11-13)
+    ratio' = 1 - mean(flipped)                        (Eq. (11))
+    returns (w', accum', ratio')
+    """
+    acc = ratio * accum + lr * grad
+    flip = (acc * w) >= 1.0
+    w_new = jnp.where(flip, -w, w)
+    acc_new = jnp.where(flip, 0.0, acc)
+    ratio_new = 1.0 - jnp.mean(flip.astype(jnp.float32))
+    return w_new, acc_new, ratio_new

@@ -1,0 +1,172 @@
+# L1 Pallas kernels for the Boolean linear layer (paper §3.1/§3.3, App. B).
+#
+# Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's Boolean
+# neuron is a popcount of XNORs.  On the TPU MXU the profitable mapping is
+# the ±1 embedding of Proposition A.2 — xnor becomes multiply, counting
+# becomes the systolic accumulation — so each kernel below is a *tiled ±1
+# matmul* whose BlockSpec expresses the HBM↔VMEM schedule (bm×bk / bk×bn
+# tiles double-buffered by the pipeline, fp32 accumulator tile resident in
+# VMEM).  interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+# custom-calls; on a real TPU the same kernels lower to MXU matmuls.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128 matches the MXU systolic array edge; the K tile of
+# 512 keeps the working set (2·128·512·4B + 128·128·4B ≈ 580 KiB) well under
+# a 16 MiB VMEM budget while amortizing the accumulator revisit.
+BM, BN, BK = 128, 128, 512
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, n_k: int):
+    """Grid (M/bm, N/bn, K/bk): accumulate x_tile @ w_tile into o_tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(a, mult0, mult1):
+    """Zero-pad a 2-D array up to multiples of (mult0, mult1).
+
+    Zero padding is exact for the ±1 embedding: padded inputs contribute
+    e(0)=0 — the 𝕄 three-valued logic of Definition 3.1, where any logic op
+    with a 0 operand yields 0 — so padded lanes add nothing to the count.
+    """
+    p0 = (-a.shape[0]) % mult0
+    p1 = (-a.shape[1]) % mult1
+    if p0 == 0 and p1 == 0:
+        return a
+    return jnp.pad(a, ((0, p0), (0, p1)))
+
+
+def matmul_pallas(x, w, bm=BM, bn=BN, bk=BK, interpret=True):
+    """Tiled matmul  (M,K) @ (K,N) -> (M,N)  via pallas_call.
+
+    Shapes need not be multiples of the tile; inputs are zero-padded (exact,
+    see _pad_to) and the result is sliced back.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    xp = _pad_to(x.astype(jnp.float32), bm_, bk_)
+    wp = _pad_to(w.astype(jnp.float32), bk_, bn_)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def xnor_linear_fwd(x, w, bias=None, interpret=True):
+    """Boolean linear forward, Eq. (3):  s = b + x @ wᵀ  in the ±1 embedding.
+
+    x (batch, m) ±1;  w (n, m) ±1;  bias (n,) or None.
+    The transpose is folded into the BlockSpec index map (w is read
+    tile-transposed), not materialized.
+    """
+    s = matmul_pallas(x, w.T, interpret=interpret)
+    if bias is not None:
+        s = s + bias[None, :]
+    return s
+
+
+def xnor_linear_bwd(z, x, w, interpret=True):
+    """Boolean backward (Algorithms 6/7): three ±1 matmuls.
+
+    g_x = z @ w       — upstream signal, Eq. (8) aggregation over outputs
+    q_w = zᵀ @ x      — weight vote,     Eq. (7) aggregation over the batch
+    q_b = Σ_k z       — bias vote (bias pairs with constant TRUE input)
+    """
+    g_x = matmul_pallas(z, w, interpret=interpret)
+    q_w = matmul_pallas(z.T, x, interpret=interpret)
+    q_b = z.sum(axis=0)
+    return g_x, q_w, q_b
+
+
+# ---------------------------------------------------------------------------
+# Elementwise kernels
+# ---------------------------------------------------------------------------
+
+
+def _threshold_kernel(s_ref, o_ref, *, tau: float):
+    o_ref[...] = jnp.where(s_ref[...] >= tau, 1.0, -1.0)
+
+
+def threshold_act(s, tau=0.0, interpret=True):
+    """Forward Boolean activation (§3.1): +1 iff s >= τ (VPU elementwise)."""
+    return pl.pallas_call(
+        functools.partial(_threshold_kernel, tau=float(tau)),
+        out_shape=jax.ShapeDtypeStruct(s.shape, jnp.float32),
+        interpret=interpret,
+    )(s.astype(jnp.float32))
+
+
+def _tanh_prime_kernel(z_ref, s_ref, o_ref, *, alpha: float, tau: float):
+    t = jnp.tanh(alpha * (s_ref[...] - tau))
+    o_ref[...] = z_ref[...] * (1.0 - t * t)
+
+
+def tanh_prime_scale(z, s, fanin, tau=0.0, interpret=True):
+    """Appendix C backprop re-weighting: z · tanh'(α(s-τ)), α=π/(2√(3m))."""
+    import numpy as np
+
+    alpha = float(np.pi / (2.0 * np.sqrt(3.0 * float(fanin))))
+    return pl.pallas_call(
+        functools.partial(_tanh_prime_kernel, alpha=alpha, tau=float(tau)),
+        out_shape=jax.ShapeDtypeStruct(z.shape, jnp.float32),
+        interpret=interpret,
+    )(z.astype(jnp.float32), s.astype(jnp.float32))
+
+
+def _opt_step_kernel(w_ref, m_ref, q_ref, lr_ref, r_ref, wo_ref, mo_ref, f_ref):
+    """Boolean optimizer flip step (Algorithm 8), elementwise on the VPU.
+
+    Outputs the new weights, new accumulator and a flip mask (for β_{t+1}).
+    """
+    acc = r_ref[0] * m_ref[...] + lr_ref[0] * q_ref[...]
+    flip = (acc * w_ref[...]) >= 1.0
+    wo_ref[...] = jnp.where(flip, -w_ref[...], w_ref[...])
+    mo_ref[...] = jnp.where(flip, 0.0, acc)
+    f_ref[...] = flip.astype(jnp.float32)
+
+
+def bool_opt_step(w, accum, grad, lr, ratio, interpret=True):
+    """One Boolean optimizer step. Returns (w', accum', ratio')."""
+    lr_a = jnp.asarray([lr], dtype=jnp.float32)
+    r_a = jnp.asarray([ratio], dtype=jnp.float32)
+    w_new, m_new, flips = pl.pallas_call(
+        _opt_step_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct(w.shape, jnp.float32),
+            jax.ShapeDtypeStruct(w.shape, jnp.float32),
+            jax.ShapeDtypeStruct(w.shape, jnp.float32),
+        ),
+        interpret=interpret,
+    )(
+        w.astype(jnp.float32),
+        accum.astype(jnp.float32),
+        grad.astype(jnp.float32),
+        lr_a,
+        r_a,
+    )
+    ratio_new = 1.0 - flips.mean()
+    return w_new, m_new, ratio_new

@@ -1,0 +1,175 @@
+# L2: the paper's Boolean model forward/backward as a jax compute graph,
+# composed from the L1 Pallas kernels (compile.kernels.xnor_linear).
+#
+# Everything here is *build-time only*: aot.py lowers these functions once to
+# HLO text and the Rust coordinator executes the compiled artifacts via PJRT.
+# Python never sits on the request path.
+#
+# The graph works in the ±1 embedded domain (Proposition A.2), which is
+# exactly isomorphic to the Boolean logic formulation — the Rust native
+# bit-packed engine implements the same semantics at the bit level and the
+# two are cross-checked in rust/tests/.
+#
+# Architecture (the paper's experimental recipe, §4 "Experimental Setup"):
+# first and last layers stay FP and are trained with Adam; interior layers
+# are native Boolean with threshold activations; the backward signal is
+# re-weighted by tanh'(α·Δ) through each threshold (Appendix C).
+import jax
+import jax.numpy as jnp
+
+from .kernels import xnor_linear as K
+
+# Model dimensions for the AOT artifacts (a compact MNIST-scale MLP; the
+# Rust engine builds the larger VGG/ResNet models natively).
+BATCH = 128
+D_IN = 784
+D_H1 = 512
+D_H2 = 256
+D_OUT = 10
+
+
+def param_specs():
+    """ShapeDtypeStructs for (w1, w2, wfc, bfc)."""
+    f = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((D_H1, D_IN), f),   # Boolean, ±1 embedded
+        jax.ShapeDtypeStruct((D_H2, D_H1), f),   # Boolean, ±1 embedded
+        jax.ShapeDtypeStruct((D_OUT, D_H2), f),  # FP last layer
+        jax.ShapeDtypeStruct((D_OUT,), f),
+    )
+
+
+def batch_specs():
+    f = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((BATCH, D_IN), f),   # ±1 binarized inputs
+        jax.ShapeDtypeStruct((BATCH, D_OUT), f),  # one-hot labels
+    )
+
+
+def _forward(x, w1, w2, wfc, bfc):
+    """Boolean MLP forward. Returns (logits, s1, h1, s2, h2)."""
+    s1 = K.xnor_linear_fwd(x, w1)              # Eq. (3), integer-valued
+    h1 = K.threshold_act(s1)                   # §3.1 forward activation
+    s2 = K.xnor_linear_fwd(h1, w2)
+    h2 = K.threshold_act(s2)
+    logits = h2 @ wfc.T + bfc[None, :]         # FP head
+    return logits, s1, h1, s2, h2
+
+
+def bool_mlp_infer(x, w1, w2, wfc, bfc):
+    """Inference entry point: logits only."""
+    logits, *_ = _forward(x, w1, w2, wfc, bfc)
+    return (logits,)
+
+
+def bool_mlp_train_step(x, y, w1, w2, wfc, bfc):
+    """One forward+backward pass. Stateless: optimizer lives in Rust.
+
+    Returns
+      loss        scalar mean cross-entropy
+      n_correct   scalar number of correct top-1 predictions
+      q_w1, q_w2  Boolean-weight optimization signals (Eq. 7 votes)
+      g_wfc, g_bfc FP head gradients
+    The Rust coordinator feeds q_* to the Boolean optimizer (Algorithm 8)
+    and g_* to Adam, mirroring the paper's training setup.
+    """
+    logits, s1, h1, s2, h2 = _forward(x, w1, w2, wfc, bfc)
+
+    # Softmax cross-entropy and its gradient wrt logits.
+    zmax = jnp.max(logits, axis=1, keepdims=True)
+    ez = jnp.exp(logits - zmax)
+    p = ez / jnp.sum(ez, axis=1, keepdims=True)
+    loss = -jnp.mean(jnp.sum(y * jnp.log(p + 1e-12), axis=1))
+    n_correct = jnp.sum(
+        (jnp.argmax(logits, axis=1) == jnp.argmax(y, axis=1)).astype(jnp.float32)
+    )
+    z = (p - y) / BATCH                         # dLoss/dlogits
+
+    # FP head backward.
+    g_wfc = z.T @ h2
+    g_bfc = z.sum(axis=0)
+    g_h2 = z @ wfc
+
+    # Threshold activation 2: Appendix C tanh' re-weighting (fan-in = D_H1).
+    z2 = K.tanh_prime_scale(g_h2, s2, fanin=D_H1)
+    # Boolean layer 2 backward (Algorithm 7: real incoming signal).
+    g_h1, q_w2, _ = K.xnor_linear_bwd(z2, h1, w2)
+
+    # Threshold activation 1 (fan-in = D_IN).
+    z1 = K.tanh_prime_scale(g_h1, s1, fanin=D_IN)
+    # Boolean layer 1 backward: only the weight vote is needed upstream.
+    _, q_w1, _ = K.xnor_linear_bwd(z1, x, w1)
+
+    return loss, n_correct, q_w1, q_w2, g_wfc, g_bfc
+
+
+# ---------------------------------------------------------------------------
+# Compact Boolean CNN (VGG-SMALL-style block) — inference artifact.
+# Boolean conv = im2col + the same xnor matmul kernel; this is exactly how
+# the Rust engine and the energy model (Appendix E) treat convolutions.
+# ---------------------------------------------------------------------------
+CNN_BATCH = 32
+CNN_HW = 16
+CNN_CIN = 3
+CNN_C1 = 32
+CNN_C2 = 64
+CNN_K = 3
+
+
+def cnn_param_specs():
+    f = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((CNN_C1, CNN_CIN * CNN_K * CNN_K), f),
+        jax.ShapeDtypeStruct((CNN_C2, CNN_C1 * CNN_K * CNN_K), f),
+        jax.ShapeDtypeStruct((D_OUT, CNN_C2 * (CNN_HW // 4) * (CNN_HW // 4)), f),
+        jax.ShapeDtypeStruct((D_OUT,), f),
+    )
+
+
+def cnn_batch_specs():
+    return (jax.ShapeDtypeStruct((CNN_BATCH, CNN_CIN, CNN_HW, CNN_HW), jnp.float32),)
+
+
+def _im2col(x, k):
+    """NCHW -> (N·H·W, C·k·k) patches with SAME zero padding.
+
+    Zero padding is exact Boolean 0 (the 𝕄 logic of Definition 3.1): padded
+    taps contribute nothing to the xnor count.
+    """
+    n, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (k // 2, k // 2), (k // 2, k // 2)))
+    cols = []
+    for di in range(k):
+        for dj in range(k):
+            cols.append(xp[:, :, di : di + h, dj : dj + w])
+    # (k·k, N, C, H, W) -> (N, H, W, C·k·k)
+    patches = jnp.stack(cols, axis=0)
+    patches = patches.transpose(1, 3, 4, 2, 0).reshape(n, h, w, c * k * k)
+    return patches.reshape(n * h * w, c * k * k)
+
+
+def _bool_conv(x, w, k):
+    """Boolean conv via im2col + xnor matmul. x NCHW ±1, w (cout, cin·k·k)."""
+    n, c, h, wdt = x.shape
+    cols = _im2col(x, k)
+    s = K.xnor_linear_fwd(cols, w)             # (N·H·W, cout)
+    return s.reshape(n, h, wdt, -1).transpose(0, 3, 1, 2)
+
+
+def _maxpool2(x):
+    n, c, h, w = x.shape
+    x = x.reshape(n, c, h // 2, 2, w // 2, 2)
+    return x.max(axis=(3, 5))
+
+
+def bool_cnn_infer(x, w1, w2, wfc, bfc):
+    """Boolean CNN inference: conv-pool-act ×2 then FP head."""
+    xb = jnp.where(x >= 0, 1.0, -1.0)          # binarize input
+    s1 = _bool_conv(xb, w1, CNN_K)
+    h1 = K.threshold_act(_maxpool2(s1))
+    s2 = _bool_conv(h1, w2, CNN_K)
+    h2 = K.threshold_act(_maxpool2(s2))
+    flat = h2.reshape(CNN_BATCH, -1)
+    logits = flat @ wfc.T + bfc[None, :]
+    return (logits,)

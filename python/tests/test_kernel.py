@@ -1,0 +1,119 @@
+# L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+# hypothesis sweeps shapes/dtypes; equality is exact (integer-valued ±1
+# arithmetic in f32 is lossless far below 2^24).
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref as R
+from compile.kernels import xnor_linear as K
+
+DIMS = st.integers(min_value=1, max_value=96)
+
+
+def pm1(rng, shape, dtype=np.float32):
+    return (rng.integers(0, 2, shape) * 2 - 1).astype(dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=DIMS, m=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_xnor_linear_fwd_matches_ref(b, m, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = pm1(rng, (b, m)), pm1(rng, (n, m))
+    bias = rng.integers(-5, 6, (n,)).astype(np.float32)
+    got = K.xnor_linear_fwd(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias))
+    want = R.xnor_linear_fwd_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(bias))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=DIMS, m=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_xnor_linear_bwd_matches_ref(b, m, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = pm1(rng, (b, m)), pm1(rng, (n, m))
+    z = rng.normal(size=(b, n)).astype(np.float32)
+    got = K.xnor_linear_bwd(jnp.asarray(z), jnp.asarray(x), jnp.asarray(w))
+    want = R.xnor_linear_bwd_ref(jnp.asarray(z), jnp.asarray(x), jnp.asarray(w))
+    for g, r in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=DIMS,
+    m=DIMS,
+    seed=st.integers(0, 2**31 - 1),
+    tau=st.floats(-3, 3, allow_nan=False),
+)
+def test_threshold_act(b, m, seed, tau):
+    rng = np.random.default_rng(seed)
+    s = rng.integers(-20, 21, (b, m)).astype(np.float32)
+    got = K.threshold_act(jnp.asarray(s), tau=tau)
+    want = R.threshold_act_ref(jnp.asarray(s), tau=tau)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=DIMS, m=DIMS, fanin=st.integers(1, 4096), seed=st.integers(0, 2**31 - 1))
+def test_tanh_prime_scale(b, m, fanin, seed):
+    rng = np.random.default_rng(seed)
+    z = rng.normal(size=(b, m)).astype(np.float32)
+    s = rng.integers(-fanin, fanin + 1, (b, m)).astype(np.float32)
+    got = K.tanh_prime_scale(jnp.asarray(z), jnp.asarray(s), fanin=fanin)
+    want = R.tanh_prime_scale_ref(jnp.asarray(z), jnp.asarray(s), fanin=fanin)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 512),
+    seed=st.integers(0, 2**31 - 1),
+    lr=st.floats(0.01, 50.0),
+    ratio=st.floats(0.0, 1.0),
+)
+def test_bool_opt_step_matches_ref(n, seed, lr, ratio):
+    rng = np.random.default_rng(seed)
+    w = pm1(rng, (n,))
+    accum = rng.normal(size=(n,)).astype(np.float32)
+    grad = rng.normal(size=(n,)).astype(np.float32)
+    got = K.bool_opt_step(jnp.asarray(w), jnp.asarray(accum), jnp.asarray(grad), lr, ratio)
+    want = R.bool_opt_step_ref(jnp.asarray(w), jnp.asarray(accum), jnp.asarray(grad), lr, ratio)
+    for g, r in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r), rtol=1e-5, atol=1e-6)
+
+
+def test_opt_step_invariants():
+    """Flip ⇒ accumulator reset; no-flip ⇒ plain accumulation; β ∈ [0,1]."""
+    rng = np.random.default_rng(7)
+    w = pm1(rng, (256,))
+    accum = np.zeros(256, dtype=np.float32)
+    grad = rng.normal(size=(256,)).astype(np.float32) * 5
+    w2, m2, r2 = (np.asarray(a) for a in
+                  R.bool_opt_step_ref(jnp.asarray(w), jnp.asarray(accum), jnp.asarray(grad), 1.0, 1.0))
+    flipped = w2 != w
+    assert np.all(m2[flipped] == 0.0)
+    assert np.allclose(m2[~flipped], grad[~flipped])
+    assert 0.0 <= float(r2) <= 1.0
+    # A weight flips only when the vote agrees with its own sign (Eq. 9).
+    assert np.all((grad[flipped] * w[flipped]) >= 1.0)
+
+
+def test_tile_boundary_shapes():
+    """Shapes straddling the 128/512 tile edges must be exact."""
+    rng = np.random.default_rng(3)
+    for b, m, n in [(128, 512, 128), (129, 513, 129), (127, 511, 127), (1, 1, 1), (256, 1024, 64)]:
+        x, w = pm1(rng, (b, m)), pm1(rng, (n, m))
+        got = K.xnor_linear_fwd(jnp.asarray(x), jnp.asarray(w))
+        want = R.xnor_linear_fwd_ref(jnp.asarray(x), jnp.asarray(w))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_preactivation_parity_range():
+    """Eq. (1): s ≡ m (mod 2) shifted — with fan-in m, s ∈ {-m..m}, s ≡ m mod 2."""
+    rng = np.random.default_rng(11)
+    m = 33
+    x, w = pm1(rng, (64, m)), pm1(rng, (16, m))
+    s = np.asarray(K.xnor_linear_fwd(jnp.asarray(x), jnp.asarray(w)))
+    assert s.min() >= -m and s.max() <= m
+    assert np.all((s.astype(np.int64) - m) % 2 == 0)

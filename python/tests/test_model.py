@@ -1,0 +1,102 @@
+# L2 correctness: the train-step graph trains (loss decreases) and its
+# pieces agree with hand-computed backward on small cases.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref as R
+
+
+def _init(rng):
+    w1 = (rng.integers(0, 2, (model.D_H1, model.D_IN)) * 2 - 1).astype(np.float32)
+    w2 = (rng.integers(0, 2, (model.D_H2, model.D_H1)) * 2 - 1).astype(np.float32)
+    wfc = (rng.normal(size=(model.D_OUT, model.D_H2)) * 0.05).astype(np.float32)
+    bfc = np.zeros(model.D_OUT, dtype=np.float32)
+    return w1, w2, wfc, bfc
+
+
+def _batch(rng, protos=None):
+    """Linearly-separable-ish synthetic task in the ±1 input domain."""
+    if protos is None:
+        protos = np.random.default_rng(99).integers(0, 2, (model.D_OUT, model.D_IN)) * 2 - 1
+    y_idx = rng.integers(0, model.D_OUT, model.BATCH)
+    x = protos[y_idx].astype(np.float32)
+    noise = rng.random((model.BATCH, model.D_IN)) < 0.1
+    x = np.where(noise, -x, x)
+    y = np.eye(model.D_OUT, dtype=np.float32)[y_idx]
+    return x, y
+
+
+def test_train_step_shapes():
+    rng = np.random.default_rng(0)
+    w1, w2, wfc, bfc = _init(rng)
+    x, y = _batch(rng)
+    out = model.bool_mlp_train_step(*map(jnp.asarray, (x, y, w1, w2, wfc, bfc)))
+    loss, ncorr, q1, q2, gw, gb = out
+    assert loss.shape == () and ncorr.shape == ()
+    assert q1.shape == w1.shape and q2.shape == w2.shape
+    assert gw.shape == wfc.shape and gb.shape == bfc.shape
+    assert np.isfinite(float(loss))
+
+
+def test_training_reduces_loss():
+    """A few full Boolean-optimizer steps must cut the loss on an easy task."""
+    rng = np.random.default_rng(1)
+    w1, w2, wfc, bfc = (jnp.asarray(a) for a in _init(rng))
+    m1 = jnp.zeros_like(w1)
+    m2 = jnp.zeros_like(w2)
+    r1 = r2 = 1.0
+    step = jax.jit(model.bool_mlp_train_step)
+    losses = []
+    for it in range(30):
+        x, y = _batch(rng)
+        loss, ncorr, q1, q2, gw, gb = step(jnp.asarray(x), jnp.asarray(y), w1, w2, wfc, bfc)
+        losses.append(float(loss))
+        w1, m1, r1 = R.bool_opt_step_ref(w1, m1, q1, lr=4.0, ratio=r1)
+        w2, m2, r2 = R.bool_opt_step_ref(w2, m2, q2, lr=4.0, ratio=r2)
+        wfc = wfc - 0.05 * gw
+        bfc = bfc - 0.05 * gb
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) * 0.8, losses
+
+
+def test_infer_matches_train_step_forward():
+    rng = np.random.default_rng(2)
+    w1, w2, wfc, bfc = _init(rng)
+    x, y = _batch(rng)
+    (logits,) = model.bool_mlp_infer(*map(jnp.asarray, (x, w1, w2, wfc, bfc)))
+    assert logits.shape == (model.BATCH, model.D_OUT)
+    # argmax agreement with the n_correct reported by the train step
+    loss, ncorr, *_ = model.bool_mlp_train_step(*map(jnp.asarray, (x, y, w1, w2, wfc, bfc)))
+    acc = float(ncorr) / model.BATCH
+    manual = float(np.mean(np.argmax(np.asarray(logits), 1) == np.argmax(y, 1)))
+    assert abs(acc - manual) < 1e-6
+
+
+def test_cnn_infer_shapes_and_binary_interior():
+    rng = np.random.default_rng(3)
+    cw1 = (rng.integers(0, 2, (model.CNN_C1, model.CNN_CIN * 9)) * 2 - 1).astype(np.float32)
+    cw2 = (rng.integers(0, 2, (model.CNN_C2, model.CNN_C1 * 9)) * 2 - 1).astype(np.float32)
+    nflat = model.CNN_C2 * (model.CNN_HW // 4) ** 2
+    cwfc = (rng.normal(size=(model.D_OUT, nflat)) * 0.05).astype(np.float32)
+    cbfc = np.zeros(model.D_OUT, dtype=np.float32)
+    x = rng.normal(size=(model.CNN_BATCH, model.CNN_CIN, model.CNN_HW, model.CNN_HW)).astype(np.float32)
+    (logits,) = model.bool_cnn_infer(*map(jnp.asarray, (x, cw1, cw2, cwfc, cbfc)))
+    assert logits.shape == (model.CNN_BATCH, model.D_OUT)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_im2col_against_lax_conv():
+    """Boolean conv via im2col must equal lax.conv with the same ±1 weights."""
+    rng = np.random.default_rng(4)
+    n, c, h, w, cout, k = 2, 3, 8, 8, 5, 3
+    x = (rng.integers(0, 2, (n, c, h, w)) * 2 - 1).astype(np.float32)
+    wk = (rng.integers(0, 2, (cout, c, k, k)) * 2 - 1).astype(np.float32)
+    got = model._bool_conv(jnp.asarray(x), jnp.asarray(wk.reshape(cout, -1)), k)
+    want = jax.lax.conv_general_dilated(
+        jnp.asarray(x), jnp.asarray(wk.transpose(2, 3, 1, 0)),
+        window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NCHW", "HWIO", "NCHW"),
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)

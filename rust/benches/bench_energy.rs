@@ -1,0 +1,35 @@
+//! Energy-model benchmark + the Fig. 1 / Table 2 / Table 5 energy columns
+//! (the analytic part of every energy table in the paper, end to end).
+
+use bold::energy::{network_energy, resnet18_shapes, vgg_small_shapes, Method, ASCEND, V100};
+use bold::util::Timer;
+
+fn main() {
+    println!("== bench_energy: tiling search + network aggregation wall time");
+    let shapes = resnet18_shapes(32, 64);
+    let hw = V100();
+    let mut t = Timer::new("resnet18 full-network energy eval");
+    t.bench(1, 5, || {
+        std::hint::black_box(network_energy(&shapes, &hw, Method::Bold, true));
+    });
+    t.report(None);
+
+    println!("\n== Fig. 1 / Table 2 energy columns (VGG-SMALL, training iter)");
+    for hw in [ASCEND(), V100()] {
+        let shapes = vgg_small_shapes(100);
+        let fp = network_energy(&shapes, &hw, Method::Fp32, true).total_pj();
+        println!("--- {}", hw.name);
+        for m in Method::all() {
+            let e = network_energy(&shapes, &hw, m, true).total_pj();
+            println!("{:<18} {:>8.2}% of FP", m.name(), e / fp * 100.0);
+        }
+    }
+
+    println!("\n== Table 5 energy column (ResNet18 base sweep, V100, training iter)");
+    let hw = V100();
+    let fp = network_energy(&resnet18_shapes(32, 64), &hw, Method::Fp32, true).total_pj();
+    for base in [64, 128, 192, 256] {
+        let e = network_energy(&resnet18_shapes(32, base), &hw, Method::Bold, true).total_pj();
+        println!("B⊕LD base {base:<4} {:>8.2}% of FP", e / fp * 100.0);
+    }
+}

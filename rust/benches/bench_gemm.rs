@@ -1,0 +1,51 @@
+//! Hot-path benchmark: the xnor-popcount GEMM vs the dense f32 GEMM at
+//! equal logical shape — the paper's core arithmetic claim in wall-clock
+//! form. (Custom harness: no criterion in the offline registry.)
+
+use bold::tensor::{BitMatrix, Tensor};
+use bold::util::{Rng, Timer};
+
+fn main() {
+    println!("== bench_gemm: xnor-popcount vs f32 GEMM (logical MACs equal)");
+    let mut rng = Rng::new(1);
+    for (b, n, m) in [(64, 256, 1024), (128, 512, 4096), (256, 512, 8192)] {
+        let macs = (b * n * m) as f64;
+        let xb = BitMatrix::random(b, m, &mut rng);
+        let wb = BitMatrix::random(n, m, &mut rng);
+        let xf = xb.to_pm1();
+        let wf = wb.to_pm1();
+
+        let mut t_bit = Timer::new(&format!("xnor_gemm {b}x{n}x{m}"));
+        t_bit.bench(2, 7, || {
+            std::hint::black_box(xb.xnor_gemm(&wb));
+        });
+        t_bit.report(Some(macs));
+
+        let mut t_f32 = Timer::new(&format!("f32 matmul {b}x{n}x{m}"));
+        t_f32.bench(1, 5, || {
+            std::hint::black_box(xf.matmul_bt(&wf));
+        });
+        t_f32.report(Some(macs));
+
+        println!(
+            "    speedup: {:.1}x  (paper premise: Boolean dataflow is ~cheap)\n",
+            t_f32.median() / t_bit.median()
+        );
+    }
+
+    println!("== backward kernels (dense z against packed operands)");
+    let (b, n, m) = (128, 512, 4096);
+    let xb = BitMatrix::random(b, m, &mut rng);
+    let wb = BitMatrix::random(n, m, &mut rng);
+    let z = Tensor::randn(&[b, n], 1.0, &mut rng);
+    let mut t = Timer::new("backward_input  z@e(W)");
+    t.bench(1, 5, || {
+        std::hint::black_box(wb.backward_input(&z));
+    });
+    t.report(Some((b * n * m) as f64));
+    let mut t = Timer::new("backward_weight zT@e(X)");
+    t.bench(1, 5, || {
+        std::hint::black_box(xb.backward_weight(&z));
+    });
+    t.report(Some((b * n * m) as f64));
+}

@@ -1,0 +1,13 @@
+//! `cargo bench --bench bench_tables` — regenerates every paper table and
+//! figure in quick mode (the full-budget versions run via
+//! `bold report <id>`). This is the single entry point that exercises the
+//! complete reproduction matrix end to end.
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    bold::report::run("all", true).expect("report harness");
+    println!(
+        "\n== all paper tables/figures regenerated (quick mode) in {:.1}s ==",
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,81 @@
+//! End-to-end train-step latency per method (the whole-stack hot path):
+//! forward + backward + optimizer on the scaled VGG-SMALL, plus the
+//! native-vs-XLA MLP step comparison when artifacts are present.
+
+use bold::baselines::{bnn_vgg_small, BnnKind};
+use bold::config::TrainConfig;
+use bold::coordinator::ClassifierTrainer;
+use bold::data::ImageDataset;
+use bold::models::{vgg_small, VggConfig, VggKind};
+use bold::nn::Value;
+use bold::util::{Rng, Timer};
+
+fn main() {
+    println!("== bench_train_step: one fwd+bwd+step, VGG-SMALL 16x16 w=0.125, batch 64");
+    let cfg = TrainConfig { hw: 16, width_mult: 0.125, batch: 64, cosine: false, ..Default::default() };
+    let ds = ImageDataset::cifar_like(256, 10, 3, cfg.hw, 0.25, 1);
+    let idx: Vec<usize> = (0..cfg.batch).collect();
+    let (x, labels) = ds.batch(&idx);
+
+    let vcfg = VggConfig { hw: cfg.hw, width_mult: cfg.width_mult, ..Default::default() };
+    for name in ["B⊕LD", "FP32", "BinaryNet"] {
+        let mut rng = Rng::new(1);
+        let mut model = match name {
+            "B⊕LD" => vgg_small(&vcfg, &mut rng),
+            "FP32" => vgg_small(&VggConfig { kind: VggKind::Fp, ..vcfg.clone() }, &mut rng),
+            _ => bnn_vgg_small(BnnKind::BinaryNet, &vcfg, &mut rng),
+        };
+        let mut trainer = ClassifierTrainer::new(&cfg);
+        let mut t = Timer::new(&format!("train_step {name}"));
+        let mut step = 0usize;
+        t.bench(2, 7, || {
+            let _ = trainer.train_step(&mut model, Value::F32(x.clone()), &labels, step);
+            step += 1;
+        });
+        t.report(None);
+    }
+
+    // XLA path (skipped when artifacts are absent)
+    if std::path::Path::new("artifacts/bool_mlp_train_step.hlo.txt").exists() {
+        println!("\n== XLA train step (compiled L2 graph, MLP 784-512-256-10, batch 128)");
+        let exec = bold::runtime::PjrtExecutor::load_dir("artifacts").expect("artifacts");
+        let mut rng = Rng::new(3);
+        let x = bold::tensor::Tensor::rand_pm1(&[128, 784], &mut rng);
+        let mut y = bold::tensor::Tensor::zeros(&[128, 10]);
+        for i in 0..128 {
+            *y.at2_mut(i, i % 10) = 1.0;
+        }
+        let w1 = bold::tensor::Tensor::rand_pm1(&[512, 784], &mut rng);
+        let w2 = bold::tensor::Tensor::rand_pm1(&[256, 512], &mut rng);
+        let wfc = bold::tensor::Tensor::randn(&[10, 256], 0.05, &mut rng);
+        let bfc = bold::tensor::Tensor::zeros(&[10]);
+        let mut t = Timer::new("xla bool_mlp_train_step");
+        t.bench(2, 9, || {
+            std::hint::black_box(
+                exec.execute(
+                    "bool_mlp_train_step",
+                    &[x.clone(), y.clone(), w1.clone(), w2.clone(), wfc.clone(), bfc.clone()],
+                )
+                .unwrap(),
+            );
+        });
+        t.report(None);
+
+        // native equivalent for the same shapes
+        use bold::models::{boolean_mlp, MlpConfig};
+        let mcfg = MlpConfig { d_in: 784, hidden: vec![512, 256], d_out: 10, tanh_scale: true };
+        let mut model = boolean_mlp(&mcfg, &mut Rng::new(4));
+        let labels: Vec<usize> = (0..128).map(|i| i % 10).collect();
+        let cfg2 = TrainConfig { batch: 128, cosine: false, ..Default::default() };
+        let mut trainer = ClassifierTrainer::new(&cfg2);
+        let mut t = Timer::new("native bool mlp train_step");
+        let mut step = 0usize;
+        t.bench(2, 9, || {
+            let _ = trainer.train_step(&mut model, Value::bit_from_pm1(&x), &labels, step);
+            step += 1;
+        });
+        t.report(None);
+    } else {
+        println!("(artifacts absent — run `make artifacts` for the XLA comparison)");
+    }
+}

@@ -1,0 +1,382 @@
+//! Latent-weight binarized layers (the classic BNN recipe).
+//!
+//! Forward: w_bin = sign(w_fp) (optionally scaled by the XNOR-Net
+//! per-output α = mean|w_fp|); activations optionally sign-binarized by
+//! [`SignSTE`]. Backward: STE — the gradient w.r.t. the binarized tensor is
+//! passed to the latent tensor, masked by the hard-tanh clip 1{|w| ≤ 1}
+//! (Courbariaux et al.). Latent weights are `ParamRef::Real` → Adam.
+
+use crate::nn::{Layer, ParamRef, Value};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Which baseline recipe a network follows (paper Table 1 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BnnKind {
+    /// 1-bit weights, 32-bit activations (Courbariaux et al. 2015).
+    BinaryConnect,
+    /// 1-bit weights and activations (Hubara et al. 2016).
+    BinaryNet,
+    /// 1-bit weights (α-scaled) and activations (Rastegari et al. 2016).
+    XnorNet,
+}
+
+impl BnnKind {
+    pub fn binarize_activations(&self) -> bool {
+        !matches!(self, BnnKind::BinaryConnect)
+    }
+
+    pub fn scale_weights(&self) -> bool {
+        matches!(self, BnnKind::XnorNet)
+    }
+
+    /// (weight, activation) bitwidths for the energy model.
+    pub fn bitwidths(&self) -> (u32, u32) {
+        match self {
+            BnnKind::BinaryConnect => (1, 32),
+            _ => (1, 1),
+        }
+    }
+}
+
+fn sign(v: f32) -> f32 {
+    if v >= 0.0 { 1.0 } else { -1.0 }
+}
+
+/// Binarize the latent weights row-wise: w_bin[j,·] = α_j · sign(w_fp[j,·]).
+fn binarize_weights(w_fp: &Tensor, scale: bool) -> Tensor {
+    let (r, c) = (w_fp.rows(), w_fp.cols());
+    let mut out = Tensor::zeros(&[r, c]);
+    for j in 0..r {
+        let row = &w_fp.data[j * c..(j + 1) * c];
+        let alpha = if scale {
+            row.iter().map(|v| v.abs()).sum::<f32>() / c as f32
+        } else {
+            1.0
+        };
+        for i in 0..c {
+            out.data[j * c + i] = alpha * sign(row[i]);
+        }
+    }
+    out
+}
+
+/// Sign activation with hard-tanh STE backward: z·1{|x| ≤ 1}.
+pub struct SignSTE {
+    name: String,
+    cache_x: Option<Tensor>,
+}
+
+impl SignSTE {
+    pub fn new(name: &str) -> Self {
+        SignSTE { name: name.to_string(), cache_x: None }
+    }
+}
+
+impl Layer for SignSTE {
+    fn forward(&mut self, x: Value, train: bool) -> Value {
+        let t = x.to_f32();
+        let y = t.sign_pm1();
+        if train {
+            self.cache_x = Some(t);
+        }
+        Value::F32(y)
+    }
+
+    fn backward(&mut self, z: Tensor) -> Tensor {
+        let x = self.cache_x.as_ref().expect("backward before forward");
+        Tensor {
+            shape: z.shape.clone(),
+            data: z
+                .data
+                .iter()
+                .zip(&x.data)
+                .map(|(&zv, &xv)| if xv.abs() <= 1.0 { zv } else { 0.0 })
+                .collect(),
+        }
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+/// Conv2d with latent FP weights binarized in the forward.
+pub struct LatentBinConv2d {
+    pub c_in: usize,
+    pub c_out: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub w_fp: Tensor,
+    pub scale: bool,
+    name: String,
+    gw: Tensor,
+    cache_cols: Option<Tensor>,
+    cache_dims: Option<(usize, usize, usize, usize, usize)>,
+    cache_wbin: Option<Tensor>,
+}
+
+impl LatentBinConv2d {
+    pub fn new(
+        name: &str,
+        c_in: usize,
+        c_out: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        scale: bool,
+        rng: &mut Rng,
+    ) -> Self {
+        let fanin = c_in * k * k;
+        LatentBinConv2d {
+            c_in,
+            c_out,
+            k,
+            stride,
+            pad,
+            w_fp: Tensor::randn(&[c_out, fanin], 0.3, rng),
+            scale,
+            name: name.to_string(),
+            gw: Tensor::zeros(&[c_out, fanin]),
+            cache_cols: None,
+            cache_dims: None,
+            cache_wbin: None,
+        }
+    }
+}
+
+impl Layer for LatentBinConv2d {
+    fn forward(&mut self, x: Value, train: bool) -> Value {
+        let t = x.to_f32();
+        let (n, c, h, w) = t.dims4();
+        assert_eq!(c, self.c_in);
+        let oh = (h + 2 * self.pad - self.k) / self.stride + 1;
+        let ow = (w + 2 * self.pad - self.k) / self.stride + 1;
+        let cols = t.im2col(self.k, self.stride, self.pad);
+        let w_bin = binarize_weights(&self.w_fp, self.scale);
+        let y = cols.matmul_bt(&w_bin).rows_to_nchw(n, self.c_out, oh, ow);
+        if train {
+            self.cache_cols = Some(cols);
+            self.cache_dims = Some((n, h, w, oh, ow));
+            self.cache_wbin = Some(w_bin);
+        }
+        Value::F32(y)
+    }
+
+    fn backward(&mut self, z: Tensor) -> Tensor {
+        let (n, h, w, oh, ow) = self.cache_dims.expect("backward before forward");
+        assert_eq!(z.shape, vec![n, self.c_out, oh, ow]);
+        let z_rows = z.nchw_to_rows();
+        let cols = self.cache_cols.as_ref().unwrap();
+        // STE to the latent weights: dL/dw_fp = dL/dw_bin · 1{|w_fp| ≤ 1}
+        let g_wbin = z_rows.matmul_at(cols);
+        for i in 0..g_wbin.len() {
+            if self.w_fp.data[i].abs() <= 1.0 {
+                self.gw.data[i] += g_wbin.data[i];
+            }
+        }
+        let w_bin = self.cache_wbin.as_ref().unwrap();
+        z_rows.matmul(w_bin).col2im(n, self.c_in, h, w, self.k, self.stride, self.pad)
+    }
+
+    fn params(&mut self) -> Vec<ParamRef<'_>> {
+        vec![ParamRef::Real {
+            name: format!("{}.w_fp", self.name),
+            w: &mut self.w_fp,
+            grad: &mut self.gw,
+        }]
+    }
+
+    fn zero_grads(&mut self) {
+        self.gw.scale_inplace(0.0);
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+/// Linear layer with latent FP weights binarized in the forward.
+pub struct LatentBinLinear {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub w_fp: Tensor,
+    pub scale: bool,
+    name: String,
+    gw: Tensor,
+    cache_x: Option<Tensor>,
+    cache_wbin: Option<Tensor>,
+}
+
+impl LatentBinLinear {
+    pub fn new(name: &str, n_in: usize, n_out: usize, scale: bool, rng: &mut Rng) -> Self {
+        LatentBinLinear {
+            n_in,
+            n_out,
+            w_fp: Tensor::randn(&[n_out, n_in], 0.3, rng),
+            scale,
+            name: name.to_string(),
+            gw: Tensor::zeros(&[n_out, n_in]),
+            cache_x: None,
+            cache_wbin: None,
+        }
+    }
+}
+
+impl Layer for LatentBinLinear {
+    fn forward(&mut self, x: Value, train: bool) -> Value {
+        let t = x.to_f32();
+        let flat = t.view(&[t.shape[0], self.n_in]);
+        let w_bin = binarize_weights(&self.w_fp, self.scale);
+        let y = flat.matmul_bt(&w_bin);
+        if train {
+            self.cache_x = Some(flat);
+            self.cache_wbin = Some(w_bin);
+        }
+        Value::F32(y)
+    }
+
+    fn backward(&mut self, z: Tensor) -> Tensor {
+        let x = self.cache_x.as_ref().expect("backward before forward");
+        let g_wbin = z.matmul_at(x);
+        for i in 0..g_wbin.len() {
+            if self.w_fp.data[i].abs() <= 1.0 {
+                self.gw.data[i] += g_wbin.data[i];
+            }
+        }
+        z.matmul(self.cache_wbin.as_ref().unwrap())
+    }
+
+    fn params(&mut self) -> Vec<ParamRef<'_>> {
+        vec![ParamRef::Real {
+            name: format!("{}.w_fp", self.name),
+            w: &mut self.w_fp,
+            grad: &mut self.gw,
+        }]
+    }
+
+    fn zero_grads(&mut self) {
+        self.gw.scale_inplace(0.0);
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+/// VGG-SMALL in a BNN-baseline flavour (first conv and last FC stay FP,
+/// the standard BNN convention — same as the paper's setup for B⊕LD).
+pub fn bnn_vgg_small(
+    kind: BnnKind,
+    cfg: &crate::models::VggConfig,
+    rng: &mut Rng,
+) -> crate::nn::Sequential {
+    use crate::nn::{BatchNorm2d, Conv2d, Flatten, Linear, MaxPool2d, Sequential};
+    let [c1, c2, c3] = cfg.channels();
+    let scale = kind.scale_weights();
+    let binact = kind.binarize_activations();
+    let mut net = Sequential::new(&format!("vgg_small_{kind:?}"));
+
+    let act = |net: &mut Sequential, name: &str| {
+        if binact {
+            net.push(Box::new(SignSTE::new(name)));
+        } else {
+            net.push(Box::new(crate::nn::ReLU::new(name)));
+        }
+    };
+
+    net.push(Box::new(Conv2d::new("conv1a", cfg.in_channels, c1, 3, 1, 1, rng)));
+    net.push(Box::new(BatchNorm2d::new("bn1a", c1)));
+    act(&mut net, "act1a");
+    net.push(Box::new(LatentBinConv2d::new("conv1b", c1, c1, 3, 1, 1, scale, rng)));
+    net.push(Box::new(MaxPool2d::new("mp1", 2)));
+    net.push(Box::new(BatchNorm2d::new("bn1b", c1)));
+    act(&mut net, "act1b");
+
+    net.push(Box::new(LatentBinConv2d::new("conv2a", c1, c2, 3, 1, 1, scale, rng)));
+    net.push(Box::new(BatchNorm2d::new("bn2a", c2)));
+    act(&mut net, "act2a");
+    net.push(Box::new(LatentBinConv2d::new("conv2b", c2, c2, 3, 1, 1, scale, rng)));
+    net.push(Box::new(MaxPool2d::new("mp2", 2)));
+    net.push(Box::new(BatchNorm2d::new("bn2b", c2)));
+    act(&mut net, "act2b");
+
+    net.push(Box::new(LatentBinConv2d::new("conv3a", c2, c3, 3, 1, 1, scale, rng)));
+    net.push(Box::new(BatchNorm2d::new("bn3a", c3)));
+    act(&mut net, "act3a");
+    net.push(Box::new(LatentBinConv2d::new("conv3b", c3, c3, 3, 1, 1, scale, rng)));
+    net.push(Box::new(MaxPool2d::new("mp3", 2)));
+    net.push(Box::new(BatchNorm2d::new("bn3b", c3)));
+    act(&mut net, "act3b");
+
+    net.push(Box::new(Flatten::new("flat")));
+    let spatial = cfg.hw / 8;
+    net.push(Box::new(Linear::new("head", c3 * spatial * spatial, cfg.classes, rng)));
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::VggConfig;
+    use crate::nn::Layer;
+
+    #[test]
+    fn weight_binarization_is_pm_alpha() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&[3, 8], 0.5, &mut rng);
+        let plain = binarize_weights(&w, false);
+        assert!(plain.data.iter().all(|&v| v == 1.0 || v == -1.0));
+        let scaled = binarize_weights(&w, true);
+        for j in 0..3 {
+            let alpha = w.data[j * 8..(j + 1) * 8].iter().map(|v| v.abs()).sum::<f32>() / 8.0;
+            for i in 0..8 {
+                assert!((scaled.at2(j, i).abs() - alpha).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn ste_clips_gradient() {
+        let mut s = SignSTE::new("s");
+        let x = Tensor::from_vec(&[1, 3], vec![0.5, -2.0, 0.9]);
+        let _ = s.forward(Value::F32(x), true);
+        let g = s.backward(Tensor::full(&[1, 3], 1.0));
+        assert_eq!(g.data, vec![1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn latent_linear_ste_masks_saturated_weights() {
+        let mut rng = Rng::new(2);
+        let mut l = LatentBinLinear::new("l", 4, 2, false, &mut rng);
+        l.w_fp.data[0] = 3.0; // saturated: no gradient
+        l.w_fp.data[1] = 0.5;
+        let x = Tensor::full(&[1, 4], 1.0);
+        let _ = l.forward(Value::F32(x), true);
+        let _ = l.backward(Tensor::full(&[1, 2], 1.0));
+        assert_eq!(l.gw.data[0], 0.0);
+        assert_eq!(l.gw.data[1], 1.0);
+    }
+
+    #[test]
+    fn all_kinds_build_and_run() {
+        let mut rng = Rng::new(3);
+        let cfg = VggConfig { hw: 16, width_mult: 0.0625, ..Default::default() };
+        for kind in [BnnKind::BinaryConnect, BnnKind::BinaryNet, BnnKind::XnorNet] {
+            let mut net = bnn_vgg_small(kind, &cfg, &mut rng);
+            let x = Tensor::randn(&[2, 3, 16, 16], 1.0, &mut rng);
+            let y = net.forward(Value::F32(x), true).expect_f32("t");
+            assert_eq!(y.shape, vec![2, 10], "{kind:?}");
+            let g = net.backward(Tensor::full(&[2, 10], 0.1));
+            assert_eq!(g.shape, vec![2, 3, 16, 16]);
+        }
+    }
+
+    #[test]
+    fn bitwidths_match_table1() {
+        assert_eq!(BnnKind::BinaryConnect.bitwidths(), (1, 32));
+        assert_eq!(BnnKind::BinaryNet.bitwidths(), (1, 1));
+        assert_eq!(BnnKind::XnorNet.bitwidths(), (1, 1));
+    }
+}

@@ -1,0 +1,13 @@
+//! BNN baselines (paper §2, Table 1): BINARYCONNECT, BINARYNET and
+//! XNOR-NET, implemented exactly as the paper characterizes them —
+//! *latent-weight* training: FP latent weights, sign binarization in the
+//! forward, straight-through-estimator (STE) gradients, Adam updates.
+//!
+//! These exist to regenerate the comparison rows of Fig. 1 / Table 2 /
+//! Table 5 (accuracy + training-energy): the whole point is that they keep
+//! an FP copy of every weight and FP gradients throughout training, which
+//! is what the energy model charges them for.
+
+mod latent;
+
+pub use latent::{bnn_vgg_small, BnnKind, LatentBinConv2d, LatentBinLinear, SignSTE};

@@ -1,0 +1,169 @@
+//! Configuration system: a small TOML-subset parser (offline registry has
+//! no serde/toml) plus the typed experiment configs the launcher consumes.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! (quoted), bool, integer, float, and flat arrays of numbers/strings.
+//! Comments with `#`. That covers every config this project ships.
+
+mod toml_lite;
+
+pub use toml_lite::{ConfigDoc, ConfigError, Value as ConfigValue};
+
+/// Training run configuration (populated from a config file + CLI
+/// overrides by the launcher).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Model family: "mlp" | "vgg" | "resnet" | "edsr" | "segnet" | "bert".
+    pub model: String,
+    /// Method: "bold" | "bold_bn" | "fp" | "binaryconnect" | "binarynet"
+    /// | "xnornet".
+    pub method: String,
+    pub steps: usize,
+    pub batch: usize,
+    /// Boolean-optimizer accumulation rate η (paper: 12 without BN, 150
+    /// with BN for VGG; scaled tasks use smaller values).
+    pub lr_bool: f32,
+    /// Adam learning rate for the FP parameters (paper: 1e-3).
+    pub lr_fp: f32,
+    pub seed: u64,
+    /// Dataset size (synthetic).
+    pub train_size: usize,
+    pub val_size: usize,
+    /// Input spatial size / sequence length, model-dependent.
+    pub hw: usize,
+    pub classes: usize,
+    pub width_mult: f32,
+    /// Parallel training workers (batch-parallel vote aggregation).
+    pub workers: usize,
+    /// Cosine schedule on both optimizers (paper Appendix D.1.1).
+    pub cosine: bool,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "vgg".into(),
+            method: "bold".into(),
+            steps: 300,
+            batch: 64,
+            lr_bool: 12.0,
+            lr_fp: 1e-3,
+            seed: 42,
+            train_size: 2048,
+            val_size: 512,
+            hw: 16,
+            classes: 10,
+            width_mult: 0.125,
+            workers: 1,
+            cosine: true,
+            log_every: 25,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Build from a parsed config document (section `[train]`).
+    pub fn from_doc(doc: &ConfigDoc) -> Result<Self, ConfigError> {
+        let mut cfg = TrainConfig::default();
+        let get = |k: &str| doc.get("train", k);
+        if let Some(v) = get("model") {
+            cfg.model = v.as_str()?.to_string();
+        }
+        if let Some(v) = get("method") {
+            cfg.method = v.as_str()?.to_string();
+        }
+        if let Some(v) = get("steps") {
+            cfg.steps = v.as_usize()?;
+        }
+        if let Some(v) = get("batch") {
+            cfg.batch = v.as_usize()?;
+        }
+        if let Some(v) = get("lr_bool") {
+            cfg.lr_bool = v.as_f32()?;
+        }
+        if let Some(v) = get("lr_fp") {
+            cfg.lr_fp = v.as_f32()?;
+        }
+        if let Some(v) = get("seed") {
+            cfg.seed = v.as_usize()? as u64;
+        }
+        if let Some(v) = get("train_size") {
+            cfg.train_size = v.as_usize()?;
+        }
+        if let Some(v) = get("val_size") {
+            cfg.val_size = v.as_usize()?;
+        }
+        if let Some(v) = get("hw") {
+            cfg.hw = v.as_usize()?;
+        }
+        if let Some(v) = get("classes") {
+            cfg.classes = v.as_usize()?;
+        }
+        if let Some(v) = get("width_mult") {
+            cfg.width_mult = v.as_f32()?;
+        }
+        if let Some(v) = get("workers") {
+            cfg.workers = v.as_usize()?;
+        }
+        if let Some(v) = get("cosine") {
+            cfg.cosine = v.as_bool()?;
+        }
+        if let Some(v) = get("log_every") {
+            cfg.log_every = v.as_usize()?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError::new(format!("read {path}: {e}")))?;
+        let doc = ConfigDoc::parse(&text)?;
+        Self::from_doc(&doc)
+    }
+
+    /// Apply `--key value` CLI overrides (key names match config keys).
+    pub fn apply_override(&mut self, key: &str, value: &str) -> Result<(), ConfigError> {
+        let bad = |k: &str, v: &str| ConfigError::new(format!("bad value '{v}' for --{k}"));
+        match key {
+            "model" => self.model = value.to_string(),
+            "method" => self.method = value.to_string(),
+            "steps" => self.steps = value.parse().map_err(|_| bad(key, value))?,
+            "batch" => self.batch = value.parse().map_err(|_| bad(key, value))?,
+            "lr_bool" => self.lr_bool = value.parse().map_err(|_| bad(key, value))?,
+            "lr_fp" => self.lr_fp = value.parse().map_err(|_| bad(key, value))?,
+            "seed" => self.seed = value.parse().map_err(|_| bad(key, value))?,
+            "train_size" => self.train_size = value.parse().map_err(|_| bad(key, value))?,
+            "val_size" => self.val_size = value.parse().map_err(|_| bad(key, value))?,
+            "hw" => self.hw = value.parse().map_err(|_| bad(key, value))?,
+            "classes" => self.classes = value.parse().map_err(|_| bad(key, value))?,
+            "width_mult" => self.width_mult = value.parse().map_err(|_| bad(key, value))?,
+            "workers" => self.workers = value.parse().map_err(|_| bad(key, value))?,
+            "cosine" => self.cosine = value.parse().map_err(|_| bad(key, value))?,
+            "log_every" => self.log_every = value.parse().map_err(|_| bad(key, value))?,
+            _ => return Err(ConfigError::new(format!("unknown option --{key}"))),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_doc_and_overrides() {
+        let doc = ConfigDoc::parse(
+            "# experiment\n[train]\nmodel = \"resnet\"\nsteps = 100\nlr_bool = 6.5\ncosine = false\n",
+        )
+        .unwrap();
+        let mut cfg = TrainConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.model, "resnet");
+        assert_eq!(cfg.steps, 100);
+        assert!((cfg.lr_bool - 6.5).abs() < 1e-6);
+        assert!(!cfg.cosine);
+        cfg.apply_override("batch", "32").unwrap();
+        assert_eq!(cfg.batch, 32);
+        assert!(cfg.apply_override("nope", "1").is_err());
+    }
+}

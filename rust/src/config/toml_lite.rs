@@ -1,0 +1,190 @@
+//! TOML-subset parser: sections, scalars, flat arrays, `#` comments.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parse/typing error with a human-readable message.
+#[derive(Debug, Clone)]
+pub struct ConfigError {
+    pub msg: String,
+}
+
+impl ConfigError {
+    pub fn new(msg: impl Into<String>) -> Self {
+        ConfigError { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str, ConfigError> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => Err(ConfigError::new(format!("expected string, got {other:?}"))),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize, ConfigError> {
+        match self {
+            Value::Int(i) if *i >= 0 => Ok(*i as usize),
+            other => Err(ConfigError::new(format!("expected non-negative int, got {other:?}"))),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<f32, ConfigError> {
+        match self {
+            Value::Float(f) => Ok(*f as f32),
+            Value::Int(i) => Ok(*i as f32),
+            other => Err(ConfigError::new(format!("expected number, got {other:?}"))),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool, ConfigError> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => Err(ConfigError::new(format!("expected bool, got {other:?}"))),
+        }
+    }
+}
+
+fn parse_scalar(s: &str, line_no: usize) -> Result<Value, ConfigError> {
+    let s = s.trim();
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(ConfigError::new(format!("line {line_no}: cannot parse value '{s}'")))
+}
+
+/// Parsed document: (section, key) → value. Keys before any section go
+/// into the "" section.
+#[derive(Debug, Default)]
+pub struct ConfigDoc {
+    map: BTreeMap<(String, String), Value>,
+}
+
+impl ConfigDoc {
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut doc = ConfigDoc::default();
+        let mut section = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line_no = i + 1;
+            // strip comments (naive: assumes no '#' inside strings we care about)
+            let line = match raw.find('#') {
+                Some(p) if !raw[..p].contains('"') || raw[..p].matches('"').count() % 2 == 0 => {
+                    &raw[..p]
+                }
+                _ => raw,
+            };
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| ConfigError::new(format!("line {line_no}: missing '='")))?;
+            let key = line[..eq].trim().to_string();
+            let val_s = line[eq + 1..].trim();
+            let value = if val_s.starts_with('[') && val_s.ends_with(']') {
+                let inner = &val_s[1..val_s.len() - 1];
+                let items: Result<Vec<Value>, _> = inner
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(|s| parse_scalar(s, line_no))
+                    .collect();
+                Value::Array(items?)
+            } else {
+                parse_scalar(val_s, line_no)?
+            };
+            doc.map.insert((section.clone(), key), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.map.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn sections(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.map.keys().map(|(s, _)| s.clone()).collect();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_types() {
+        let doc = ConfigDoc::parse(
+            r#"
+# top comment
+name = "bold"          # trailing comment
+[train]
+steps = 300
+lr = 1.5e-3
+flag = true
+dims = [1, 2, 3]
+tags = ["a", "b"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str().unwrap(), "bold");
+        assert_eq!(doc.get("train", "steps").unwrap().as_usize().unwrap(), 300);
+        assert!((doc.get("train", "lr").unwrap().as_f32().unwrap() - 0.0015).abs() < 1e-7);
+        assert!(doc.get("train", "flag").unwrap().as_bool().unwrap());
+        match doc.get("train", "dims").unwrap() {
+            Value::Array(v) => assert_eq!(v.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ConfigDoc::parse("key value\n").is_err());
+        assert!(ConfigDoc::parse("[s]\nk = @@\n").is_err());
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        let doc = ConfigDoc::parse("[t]\nk = 5\n").unwrap();
+        assert!(doc.get("t", "k").unwrap().as_str().is_err());
+        assert!(doc.get("t", "k").unwrap().as_bool().is_err());
+        assert_eq!(doc.get("t", "k").unwrap().as_f32().unwrap(), 5.0);
+    }
+}

@@ -1,0 +1,87 @@
+//! Metric logging: named scalar series with CSV export — the training
+//! telemetry the examples and the report harness consume.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+
+/// Append-only scalar series keyed by metric name.
+#[derive(Debug, Default)]
+pub struct MetricLog {
+    series: BTreeMap<String, Vec<(usize, f64)>>,
+}
+
+impl MetricLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, name: &str, step: usize, value: f64) {
+        self.series.entry(name.to_string()).or_default().push((step, value));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[(usize, f64)]> {
+        self.series.get(name).map(|v| v.as_slice())
+    }
+
+    pub fn last(&self, name: &str) -> Option<f64> {
+        self.series.get(name).and_then(|v| v.last()).map(|&(_, v)| v)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.series.keys().map(String::as_str).collect()
+    }
+
+    /// Mean over the final `k` entries of a series.
+    pub fn tail_mean(&self, name: &str, k: usize) -> Option<f64> {
+        let v = self.series.get(name)?;
+        if v.is_empty() {
+            return None;
+        }
+        let k = k.min(v.len());
+        Some(v[v.len() - k..].iter().map(|&(_, x)| x).sum::<f64>() / k as f64)
+    }
+
+    /// Dump all series as long-format CSV (metric,step,value).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("metric,step,value\n");
+        for (name, vs) in &self.series {
+            for &(step, v) in vs {
+                s.push_str(&format!("{name},{step},{v}\n"));
+            }
+        }
+        s
+    }
+
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_get_tail() {
+        let mut m = MetricLog::new();
+        for i in 0..10 {
+            m.push("loss", i, 10.0 - i as f64);
+        }
+        assert_eq!(m.last("loss"), Some(1.0));
+        assert_eq!(m.tail_mean("loss", 2), Some(1.5));
+        assert_eq!(m.get("loss").unwrap().len(), 10);
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut m = MetricLog::new();
+        m.push("a", 0, 1.5);
+        m.push("b", 2, -3.0);
+        let csv = m.to_csv();
+        assert!(csv.starts_with("metric,step,value\n"));
+        assert!(csv.contains("a,0,1.5"));
+        assert!(csv.contains("b,2,-3"));
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 coordinator: training orchestration on top of the native engine —
+//! the launcher-facing layer (single- and multi-worker trainers, metric
+//! logging, checkpointing).
+//!
+//! The paper's contribution lives at the algorithm level (L1/L2 and the
+//! Boolean engine), so per the architecture rule this coordinator is a
+//! *real but focused* training driver: config → data → train loop →
+//! metrics → checkpoint, plus batch-parallel workers whose Boolean votes
+//! are aggregated before a single optimizer step (the multi-GPU setup of
+//! Appendix D.1.1, 8×V100, mapped to threads).
+
+mod checkpoint;
+mod metrics;
+mod parallel;
+mod trainer;
+
+pub use checkpoint::{load_checkpoint, load_model, save_checkpoint, save_model, CheckpointError};
+pub use metrics::MetricLog;
+pub use parallel::ParallelTrainer;
+pub use trainer::{evaluate_classifier, forward_eval, ClassifierTrainer, TrainReport};

@@ -1,0 +1,284 @@
+//! Batch-parallel training: the coordinator's multi-worker mode, mapping
+//! the paper's 8×V100 data-parallel setup (Appendix D.1.1) onto threads.
+//!
+//! Each worker holds a full model replica and processes a shard of the
+//! batch; the leader *sums the Boolean votes* (Eq. 7 aggregation is
+//! additive over samples, so vote summation across workers is exactly
+//! equivalent to a single large batch — tested below), applies the
+//! optimizers once, and broadcasts the updated weights. Note the
+//! communication payload for Boolean weights is 1 bit/weight — the
+//! distributed-training face of the paper's energy argument.
+
+use crate::config::TrainConfig;
+use crate::data::ImageDataset;
+use crate::nn::{softmax_cross_entropy, Layer, ParamRef, Sequential, Value};
+use crate::optim::{Adam, BooleanOptimizer, CosineSchedule, FlipStats};
+
+/// Multi-worker trainer with vote aggregation.
+pub struct ParallelTrainer {
+    pub replicas: Vec<Sequential>,
+    pub lr_bool: f32,
+    pub bool_sched: Option<CosineSchedule>,
+    adam: Adam,
+    fp_sched: Option<CosineSchedule>,
+}
+
+impl ParallelTrainer {
+    /// Build `workers` replicas from a factory. The factory is called with
+    /// the SAME seed-derived RNG for every replica so all start identical.
+    pub fn new<F>(workers: usize, cfg: &TrainConfig, factory: F) -> Self
+    where
+        F: Fn(u64) -> Sequential,
+    {
+        assert!(workers >= 1);
+        let replicas: Vec<Sequential> = (0..workers).map(|_| factory(cfg.seed)).collect();
+        let (bool_sched, fp_sched) = if cfg.cosine {
+            (
+                Some(CosineSchedule::new(cfg.lr_bool, cfg.lr_bool * 0.05, cfg.steps)),
+                Some(CosineSchedule::new(cfg.lr_fp, cfg.lr_fp * 0.05, cfg.steps)),
+            )
+        } else {
+            (None, None)
+        };
+        ParallelTrainer {
+            replicas,
+            lr_bool: cfg.lr_bool,
+            bool_sched,
+            adam: Adam::new(cfg.lr_fp),
+            fp_sched,
+        }
+    }
+
+    pub fn leader(&mut self) -> &mut Sequential {
+        &mut self.replicas[0]
+    }
+
+    /// One synchronous data-parallel step over shard inputs.
+    /// `shards[i]` feeds replica i. Returns (mean loss, correct, flips).
+    pub fn train_step(
+        &mut self,
+        shards: Vec<(Value, Vec<usize>)>,
+        step: usize,
+    ) -> (f32, usize, FlipStats) {
+        assert_eq!(shards.len(), self.replicas.len());
+        let total: usize = shards.iter().map(|(_, l)| l.len()).sum();
+        // --- parallel forward/backward on each replica's shard ---
+        let results: Vec<(f32, usize)> = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (model, (x, labels)) in self.replicas.iter_mut().zip(shards) {
+                handles.push(scope.spawn(move || {
+                    let logits = model.forward(x, true).expect_f32("worker");
+                    let out = softmax_cross_entropy(&logits, &labels);
+                    model.zero_grads();
+                    // scale shard gradient by shard/total so the summed
+                    // votes equal the single-large-batch gradient
+                    let scale = labels.len() as f32 / total as f32;
+                    let _ = model.backward(out.grad.scale(scale));
+                    (out.loss * scale, out.correct)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+        });
+        let loss: f32 = results.iter().map(|(l, _)| l).sum();
+        let correct: usize = results.iter().map(|(_, c)| c).sum();
+
+        // --- vote aggregation: sum worker grads into the leader ---
+        {
+            let (leader, rest) = self.replicas.split_at_mut(1);
+            let mut p0 = leader[0].params();
+            for worker in rest.iter_mut() {
+                let pw = worker.params();
+                assert_eq!(p0.len(), pw.len(), "replica param mismatch");
+                for (a, b) in p0.iter_mut().zip(pw) {
+                    match (a, b) {
+                        (ParamRef::Bool { grad: ga, .. }, ParamRef::Bool { grad: gb, .. }) => {
+                            ga.add_inplace(gb);
+                        }
+                        (ParamRef::Real { grad: ga, .. }, ParamRef::Real { grad: gb, .. }) => {
+                            ga.add_inplace(gb);
+                        }
+                        _ => panic!("replica param kind mismatch"),
+                    }
+                }
+            }
+        }
+
+        // --- single optimizer step on the leader ---
+        let lr_b = self.bool_sched.map_or(self.lr_bool, |s| s.at(step));
+        if let Some(s) = self.fp_sched {
+            self.adam.lr = s.at(step);
+        }
+        let bool_opt = BooleanOptimizer::new(lr_b);
+        let stats = {
+            let mut p0 = self.replicas[0].params();
+            let stats = bool_opt.step(&mut p0);
+            self.adam.step(&mut p0);
+            stats
+        };
+
+        // --- broadcast: copy leader weights to all workers ---
+        self.broadcast();
+        (loss, correct, stats)
+    }
+
+    /// Copy the leader's weights (bits + FP) to every other replica.
+    pub fn broadcast(&mut self) {
+        let (leader, rest) = self.replicas.split_at_mut(1);
+        let mut p0 = leader[0].params();
+        for worker in rest.iter_mut() {
+            let pw = worker.params();
+            for (a, b) in p0.iter_mut().zip(pw) {
+                match (a, b) {
+                    (ParamRef::Bool { bits: src, .. }, ParamRef::Bool { bits: dst, .. }) => {
+                        dst.words.copy_from_slice(&src.words);
+                    }
+                    (ParamRef::Real { w: src, .. }, ParamRef::Real { w: dst, .. }) => {
+                        dst.data.copy_from_slice(&src.data);
+                    }
+                    _ => panic!("replica param kind mismatch"),
+                }
+            }
+        }
+    }
+
+    /// Fit a classifier dataset, sharding each batch across workers.
+    pub fn fit(
+        &mut self,
+        train: &ImageDataset,
+        val: &ImageDataset,
+        cfg: &TrainConfig,
+        log: bool,
+    ) -> super::TrainReport {
+        let workers = self.replicas.len();
+        let mut sampler = crate::data::BatchSampler::new(train.n, cfg.batch, cfg.seed ^ 0x5A);
+        let mut report = super::TrainReport { steps: cfg.steps, ..Default::default() };
+        let flat = train.h == 1;
+        for step in 0..cfg.steps {
+            let idx = sampler.next_batch();
+            let shard_size = idx.len().div_ceil(workers);
+            let shards: Vec<(Value, Vec<usize>)> = idx
+                .chunks(shard_size)
+                .map(|chunk| {
+                    let (x, labels) =
+                        if flat { train.batch_flat(chunk) } else { train.batch(chunk) };
+                    let v = if flat { Value::bit_from_pm1(&x) } else { Value::F32(x) };
+                    (v, labels)
+                })
+                .collect();
+            // pad with empty shards if the batch didn't split evenly
+            let mut shards = shards;
+            while shards.len() < workers {
+                let (x, labels) = if flat { train.batch_flat(&idx[..1]) } else { train.batch(&idx[..1]) };
+                let v = if flat { Value::bit_from_pm1(&x) } else { Value::F32(x) };
+                shards.push((v, labels));
+            }
+            let (loss, correct, stats) = self.train_step(shards, step);
+            report.losses.push(loss);
+            report.train_acc.push(correct as f32 / idx.len().max(1) as f32);
+            report.flip_rates.push(stats.flip_rate());
+            if log && step % 25 == 0 {
+                println!("step {step:>5}  loss {loss:>8.4}  [{} workers]", workers);
+            }
+        }
+        report.val_acc = super::evaluate_classifier(&mut self.replicas[0], val, cfg.batch);
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{boolean_mlp, MlpConfig};
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    fn mk_factory(mcfg: MlpConfig) -> impl Fn(u64) -> Sequential {
+        move |seed| {
+            let mut rng = Rng::new(seed);
+            boolean_mlp(&mcfg, &mut rng)
+        }
+    }
+
+    #[test]
+    fn replicas_start_identical() {
+        let cfg = TrainConfig { workers: 3, ..Default::default() };
+        let mcfg = MlpConfig { d_in: 32, hidden: vec![16], d_out: 4, tanh_scale: true };
+        let mut pt = ParallelTrainer::new(3, &cfg, mk_factory(mcfg));
+        let mut rng = Rng::new(7);
+        let x = Tensor::rand_pm1(&[4, 32], &mut rng);
+        let outs: Vec<Tensor> = pt
+            .replicas
+            .iter_mut()
+            .map(|m| m.forward(Value::bit_from_pm1(&x), false).expect_f32("t"))
+            .collect();
+        assert_eq!(outs[0].max_abs_diff(&outs[1]), 0.0);
+        assert_eq!(outs[0].max_abs_diff(&outs[2]), 0.0);
+    }
+
+    #[test]
+    fn two_workers_equal_one_big_batch() {
+        // vote additivity: 2-worker aggregated step == single-model step
+        // on the concatenated batch (exact, not approximate).
+        let cfg = TrainConfig {
+            workers: 2,
+            steps: 1,
+            lr_bool: 2.0,
+            cosine: false,
+            ..Default::default()
+        };
+        let mcfg = MlpConfig { d_in: 64, hidden: vec![32], d_out: 4, tanh_scale: true };
+        let ds = ImageDataset::mnist_like(32, 4, 64, 0.1, 5);
+        let idx: Vec<usize> = (0..16).collect();
+        let (x, labels) = ds.batch_flat(&idx);
+
+        // parallel: two shards of 8
+        let mut pt = ParallelTrainer::new(2, &cfg, mk_factory(mcfg.clone()));
+        let (xa, la) = ds.batch_flat(&idx[..8]);
+        let (xb, lb) = ds.batch_flat(&idx[8..]);
+        let _ = pt.train_step(
+            vec![
+                (Value::bit_from_pm1(&xa), la),
+                (Value::bit_from_pm1(&xb), lb),
+            ],
+            0,
+        );
+
+        // reference: single model, full batch
+        let mut single = mk_factory(mcfg)(cfg.seed);
+        let logits = single.forward(Value::bit_from_pm1(&x), true).expect_f32("t");
+        let out = softmax_cross_entropy(&logits, &labels);
+        single.zero_grads();
+        let _ = single.backward(out.grad);
+        let bool_opt = BooleanOptimizer::new(cfg.lr_bool);
+        let mut adam = Adam::new(cfg.lr_fp);
+        let mut ps = single.params();
+        bool_opt.step(&mut ps);
+        adam.step(&mut ps);
+
+        // weights must match exactly
+        let mut rng = Rng::new(11);
+        let probe = Tensor::rand_pm1(&[6, 64], &mut rng);
+        let y_par = pt.leader().forward(Value::bit_from_pm1(&probe), false).expect_f32("t");
+        let y_single = single.forward(Value::bit_from_pm1(&probe), false).expect_f32("t");
+        assert!(
+            y_par.max_abs_diff(&y_single) < 1e-4,
+            "parallel vote aggregation must equal big-batch training"
+        );
+    }
+
+    #[test]
+    fn parallel_fit_learns() {
+        let cfg = TrainConfig {
+            workers: 2,
+            steps: 40,
+            batch: 64,
+            lr_bool: 4.0,
+            ..Default::default()
+        };
+        let (train, val) = ImageDataset::mnist_like(640, 4, 64, 0.08, 1).split(512);
+        let mcfg = MlpConfig { d_in: 64, hidden: vec![32], d_out: 4, tanh_scale: true };
+        let mut pt = ParallelTrainer::new(2, &cfg, mk_factory(mcfg));
+        let report = pt.fit(&train, &val, &cfg, false);
+        assert!(report.val_acc > 0.8, "val acc {}", report.val_acc);
+    }
+}

@@ -1,0 +1,204 @@
+//! Single-process trainer: the paper's dual-optimizer loop (Boolean
+//! optimizer for native Boolean weights, Adam for FP parameters — §4
+//! Experimental Setup) with cosine schedules on both.
+
+use crate::config::TrainConfig;
+use crate::data::ImageDataset;
+use crate::nn::{softmax_cross_entropy, Layer, Sequential, Value};
+use crate::optim::{Adam, BooleanOptimizer, CosineSchedule, FlipStats};
+use crate::tensor::Tensor;
+
+/// Per-run training record (loss curve, accuracy, flip-rate diagnostics).
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    pub train_acc: Vec<f32>,
+    pub flip_rates: Vec<f32>,
+    pub val_acc: f32,
+    pub steps: usize,
+}
+
+impl TrainReport {
+    /// Mean of the last `k` recorded losses.
+    pub fn tail_loss(&self, k: usize) -> f32 {
+        let n = self.losses.len();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let k = k.min(n);
+        self.losses[n - k..].iter().sum::<f32>() / k as f32
+    }
+}
+
+/// Classifier trainer: owns both optimizers and their schedules.
+pub struct ClassifierTrainer {
+    pub lr_bool: f32,
+    pub lr_fp: f32,
+    pub bool_sched: Option<CosineSchedule>,
+    pub fp_sched: Option<CosineSchedule>,
+    adam: Adam,
+}
+
+impl ClassifierTrainer {
+    pub fn new(cfg: &TrainConfig) -> Self {
+        let (bool_sched, fp_sched) = if cfg.cosine {
+            (
+                Some(CosineSchedule::new(cfg.lr_bool, cfg.lr_bool * 0.05, cfg.steps)),
+                Some(CosineSchedule::new(cfg.lr_fp, cfg.lr_fp * 0.05, cfg.steps)),
+            )
+        } else {
+            (None, None)
+        };
+        ClassifierTrainer {
+            lr_bool: cfg.lr_bool,
+            lr_fp: cfg.lr_fp,
+            bool_sched,
+            fp_sched,
+            adam: Adam::new(cfg.lr_fp),
+        }
+    }
+
+    /// One optimizer step on an already-accumulated model (grads filled by
+    /// the caller's backward pass).
+    pub fn apply(&mut self, model: &mut Sequential, step: usize) -> FlipStats {
+        let lr_b = self.bool_sched.map_or(self.lr_bool, |s| s.at(step));
+        if let Some(s) = self.fp_sched {
+            self.adam.lr = s.at(step);
+        }
+        let bool_opt = BooleanOptimizer::new(lr_b);
+        let mut params = model.params();
+        let stats = bool_opt.step(&mut params);
+        self.adam.step(&mut params);
+        stats
+    }
+
+    /// Full forward + loss + backward + step on one batch.
+    /// Returns (loss, correct, flip stats).
+    pub fn train_step(
+        &mut self,
+        model: &mut Sequential,
+        x: Value,
+        labels: &[usize],
+        step: usize,
+    ) -> (f32, usize, FlipStats) {
+        let logits = model.forward(x, true).expect_f32("trainer");
+        let out = softmax_cross_entropy(&logits, labels);
+        model.zero_grads();
+        let _ = model.backward(out.grad);
+        let stats = self.apply(model, step);
+        (out.loss, out.correct, stats)
+    }
+
+    /// Train on a classification dataset per the config; returns the
+    /// report with the loss curve and final validation accuracy.
+    pub fn fit(
+        &mut self,
+        model: &mut Sequential,
+        train: &ImageDataset,
+        val: &ImageDataset,
+        cfg: &TrainConfig,
+        log: bool,
+    ) -> TrainReport {
+        let mut sampler = crate::data::BatchSampler::new(train.n, cfg.batch, cfg.seed ^ 0x5A);
+        let mut report = TrainReport { steps: cfg.steps, ..Default::default() };
+        let flat = train.h == 1; // MLP-style flat features
+        for step in 0..cfg.steps {
+            let idx = sampler.next_batch();
+            let (x, labels) = if flat { train.batch_flat(&idx) } else { train.batch(&idx) };
+            let value = if flat { Value::bit_from_pm1(&x) } else { Value::F32(x) };
+            let (loss, correct, stats) = self.train_step(model, value, &labels, step);
+            report.losses.push(loss);
+            report.train_acc.push(correct as f32 / labels.len() as f32);
+            report.flip_rates.push(stats.flip_rate());
+            if log && (step % 25 == 0 || step + 1 == cfg.steps) {
+                println!(
+                    "step {step:>5}  loss {loss:>8.4}  acc {:>6.3}  flip-rate {:>8.5}",
+                    report.train_acc.last().unwrap(),
+                    stats.flip_rate()
+                );
+            }
+        }
+        report.val_acc = evaluate_classifier(model, val, cfg.batch);
+        report
+    }
+}
+
+/// Top-1 accuracy on a dataset (eval mode, running BN stats).
+pub fn evaluate_classifier(model: &mut Sequential, ds: &ImageDataset, batch: usize) -> f32 {
+    let flat = ds.h == 1;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut i = 0;
+    while i < ds.n {
+        let hi = (i + batch).min(ds.n);
+        let idx: Vec<usize> = (i..hi).collect();
+        let (x, labels) = if flat { ds.batch_flat(&idx) } else { ds.batch(&idx) };
+        let value = if flat { Value::bit_from_pm1(&x) } else { Value::F32(x) };
+        let logits = model.forward(value, false).expect_f32("eval");
+        let preds = logits.argmax_rows();
+        correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
+        total += labels.len();
+        i = hi;
+    }
+    correct as f32 / total.max(1) as f32
+}
+
+/// Helper: evaluate a model on explicit tensors (used by SR/seg drivers).
+pub fn forward_eval(model: &mut Sequential, x: Tensor) -> Tensor {
+    model.forward(Value::F32(x), false).expect_f32("forward_eval")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{boolean_mlp, MlpConfig};
+    use crate::util::Rng;
+
+    #[test]
+    fn boolean_mlp_learns_mnist_like() {
+        let cfg = TrainConfig {
+            model: "mlp".into(),
+            steps: 60,
+            batch: 64,
+            lr_bool: 4.0,
+            train_size: 1024,
+            val_size: 256,
+            ..Default::default()
+        };
+        let (train, val) =
+            ImageDataset::mnist_like(cfg.train_size + cfg.val_size, 10, 128, 0.08, 1)
+                .split(cfg.train_size);
+        let mut rng = Rng::new(cfg.seed);
+        let mcfg = MlpConfig { d_in: 128, hidden: vec![64], d_out: 10, tanh_scale: true };
+        let mut model = boolean_mlp(&mcfg, &mut rng);
+        let mut trainer = ClassifierTrainer::new(&cfg);
+        let report = trainer.fit(&mut model, &train, &val, &cfg, false);
+        assert!(
+            report.tail_loss(10) < report.losses[0] * 0.5,
+            "loss must drop: {} -> {}",
+            report.losses[0],
+            report.tail_loss(10)
+        );
+        assert!(report.val_acc > 0.8, "val acc {}", report.val_acc);
+    }
+
+    #[test]
+    fn flip_rate_decays_roughly() {
+        // As training converges, weight flips should become rarer.
+        let cfg = TrainConfig {
+            steps: 80,
+            batch: 64,
+            lr_bool: 4.0,
+            ..Default::default()
+        };
+        let (train, val) = ImageDataset::mnist_like(640, 4, 64, 0.05, 3).split(512);
+        let mut rng = Rng::new(1);
+        let mcfg = MlpConfig { d_in: 64, hidden: vec![32], d_out: 4, tanh_scale: true };
+        let mut model = boolean_mlp(&mcfg, &mut rng);
+        let mut trainer = ClassifierTrainer::new(&cfg);
+        let report = trainer.fit(&mut model, &train, &val, &cfg, false);
+        let early: f32 = report.flip_rates[5..15].iter().sum::<f32>() / 10.0;
+        let late: f32 = report.flip_rates[report.flip_rates.len() - 10..].iter().sum::<f32>() / 10.0;
+        assert!(late <= early, "flips should not grow: early {early} late {late}");
+    }
+}

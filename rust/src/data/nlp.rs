@@ -1,0 +1,169 @@
+//! GLUE-like synthetic NLU tasks (stands in for the GLUE benchmark —
+//! DESIGN.md §5). Each task is a sequence-classification problem over a
+//! small vocabulary with the discriminative structure of its GLUE
+//! namesake: presence/absence (COLA-like acceptability), sentence-pair
+//! agreement (MRPC/QQP-like), majority sentiment tokens (SST-2-like),
+//! order sensitivity (RTE-like entailment).
+
+use crate::util::Rng;
+
+/// The synthetic GLUE-like task family (Table 7 columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GlueLikeTask {
+    /// SST-2-like: label = majority of positive vs negative token groups.
+    Sentiment,
+    /// COLA-like: label = whether a required "grammar" token pair appears
+    /// in order.
+    Acceptability,
+    /// MRPC/QQP-like: two halves; label = whether they share > half tokens.
+    Paraphrase,
+    /// RTE-like: label = whether the second half is a subset of the first.
+    Entailment,
+}
+
+impl GlueLikeTask {
+    pub fn all() -> [GlueLikeTask; 4] {
+        [
+            GlueLikeTask::Sentiment,
+            GlueLikeTask::Acceptability,
+            GlueLikeTask::Paraphrase,
+            GlueLikeTask::Entailment,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GlueLikeTask::Sentiment => "SST2-like",
+            GlueLikeTask::Acceptability => "COLA-like",
+            GlueLikeTask::Paraphrase => "MRPC-like",
+            GlueLikeTask::Entailment => "RTE-like",
+        }
+    }
+}
+
+/// Token-sequence dataset: flat tokens (n × len), binary labels.
+pub struct NlpDataset {
+    pub tokens: Vec<usize>,
+    pub labels: Vec<usize>,
+    pub n: usize,
+    pub len: usize,
+    pub vocab: usize,
+}
+
+impl NlpDataset {
+    pub fn generate(task: GlueLikeTask, n: usize, len: usize, vocab: usize, seed: u64) -> Self {
+        assert!(vocab >= 8 && len >= 6);
+        let mut rng = Rng::new(seed);
+        let mut tokens = Vec::with_capacity(n * len);
+        let mut labels = Vec::with_capacity(n);
+        // token groups: [2, vocab/2) "positive", [vocab/2, vocab) "negative"
+        let half = vocab / 2;
+        for _ in 0..n {
+            let label = rng.bernoulli(0.5) as usize;
+            let mut seq: Vec<usize>;
+            match task {
+                GlueLikeTask::Sentiment => {
+                    // majority of pos/neg tokens decides the label
+                    let npos = if label == 1 { len / 2 + 1 + rng.below(len / 4) } else { rng.below(len / 2) };
+                    seq = (0..len)
+                        .map(|i| {
+                            if i < npos {
+                                2 + rng.below(half - 2)
+                            } else {
+                                half + rng.below(vocab - half)
+                            }
+                        })
+                        .collect();
+                    rng.shuffle(&mut seq);
+                }
+                GlueLikeTask::Acceptability => {
+                    // "grammatical" iff token 2 appears before token 3
+                    seq = (0..len).map(|_| 4 + rng.below(vocab - 4)).collect();
+                    let a = rng.below(len / 2);
+                    let b = len / 2 + rng.below(len / 2);
+                    if label == 1 {
+                        seq[a] = 2;
+                        seq[b] = 3;
+                    } else {
+                        seq[a] = 3;
+                        seq[b] = 2;
+                    }
+                }
+                GlueLikeTask::Paraphrase => {
+                    let h = len / 2;
+                    let first: Vec<usize> = (0..h).map(|_| 2 + rng.below(vocab - 2)).collect();
+                    let second: Vec<usize> = if label == 1 {
+                        // copy with light noise
+                        first
+                            .iter()
+                            .map(|&t| if rng.bernoulli(0.2) { 2 + rng.below(vocab - 2) } else { t })
+                            .collect()
+                    } else {
+                        (0..h).map(|_| 2 + rng.below(vocab - 2)).collect()
+                    };
+                    seq = first.into_iter().chain(second).collect();
+                }
+                GlueLikeTask::Entailment => {
+                    let h = len / 2;
+                    let premise: Vec<usize> = (0..h).map(|_| 2 + rng.below(vocab - 2)).collect();
+                    let hypothesis: Vec<usize> = if label == 1 {
+                        (0..h).map(|_| premise[rng.below(h)]).collect()
+                    } else {
+                        (0..h).map(|_| 2 + rng.below(vocab - 2)).collect()
+                    };
+                    seq = premise.into_iter().chain(hypothesis).collect();
+                }
+            }
+            debug_assert_eq!(seq.len(), len);
+            tokens.extend(seq);
+            labels.push(label);
+        }
+        NlpDataset { tokens, labels, n, len, vocab }
+    }
+
+    pub fn batch(&self, idx: &[usize]) -> (Vec<usize>, Vec<usize>) {
+        let mut toks = Vec::with_capacity(idx.len() * self.len);
+        let mut labels = Vec::with_capacity(idx.len());
+        for &i in idx {
+            toks.extend_from_slice(&self.tokens[i * self.len..(i + 1) * self.len]);
+            labels.push(self.labels[i]);
+        }
+        (toks, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate_balanced_labels() {
+        for task in GlueLikeTask::all() {
+            let d = NlpDataset::generate(task, 400, 12, 32, 1);
+            let pos: usize = d.labels.iter().sum();
+            assert!(pos > 120 && pos < 280, "{:?}: {pos}", task);
+            assert!(d.tokens.iter().all(|&t| t < 32));
+        }
+    }
+
+    #[test]
+    fn acceptability_encodes_order() {
+        let d = NlpDataset::generate(GlueLikeTask::Acceptability, 100, 10, 16, 2);
+        for i in 0..100 {
+            let seq = &d.tokens[i * 10..(i + 1) * 10];
+            let pa = seq.iter().position(|&t| t == 2);
+            let pb = seq.iter().position(|&t| t == 3);
+            if let (Some(a), Some(b)) = (pa, pb) {
+                assert_eq!(d.labels[i], usize::from(a < b), "seq {seq:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = NlpDataset::generate(GlueLikeTask::Paraphrase, 50, 12, 24, 7);
+        let b = NlpDataset::generate(GlueLikeTask::Paraphrase, 50, 12, 24, 7);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.labels, b.labels);
+    }
+}

@@ -1,0 +1,136 @@
+//! Batch sampling: shuffled epochs and rare-class sampling (RCS) — the
+//! paper's Appendix D.3.3, Eqs. (48)–(49): classes with low occurrence
+//! frequency f_c are oversampled with probability
+//! p_c ∝ exp((1 − f_c)/T).
+
+use crate::util::Rng;
+
+/// Epoch-based shuffled batch iterator, optionally with RCS.
+pub struct BatchSampler {
+    order: Vec<usize>,
+    batch: usize,
+    cursor: usize,
+    rng: Rng,
+    /// RCS: per-sample weights (unnormalized); `None` = uniform shuffle.
+    weights: Option<Vec<f32>>,
+    n: usize,
+}
+
+impl BatchSampler {
+    pub fn new(n: usize, batch: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        BatchSampler { order, batch, cursor: 0, rng, weights: None, n }
+    }
+
+    /// Enable rare-class sampling from per-sample class labels.
+    pub fn with_rcs(mut self, labels: &[usize], classes: usize, temperature: f32) -> Self {
+        let p_c = rcs_probabilities(labels, classes, temperature);
+        self.weights = Some(labels.iter().map(|&l| p_c[l]).collect());
+        self
+    }
+
+    /// Next batch of indices (wraps across epochs, reshuffling).
+    pub fn next_batch(&mut self) -> Vec<usize> {
+        if let Some(w) = &self.weights {
+            // weighted sampling with replacement (RCS semantics)
+            let total: f32 = w.iter().sum();
+            (0..self.batch)
+                .map(|_| {
+                    let mut t = self.rng.uniform() * total;
+                    for (i, &wi) in w.iter().enumerate() {
+                        if t < wi {
+                            return i;
+                        }
+                        t -= wi;
+                    }
+                    w.len() - 1
+                })
+                .collect()
+        } else {
+            let mut out = Vec::with_capacity(self.batch);
+            for _ in 0..self.batch {
+                if self.cursor >= self.order.len() {
+                    self.rng.shuffle(&mut self.order);
+                    self.cursor = 0;
+                }
+                out.push(self.order[self.cursor]);
+                self.cursor += 1;
+            }
+            out
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+}
+
+/// Eq. (48)–(49): class sampling probabilities from occurrence frequency.
+/// `labels` may contain ids ≥ `classes` (e.g. an ignore label); they get
+/// probability 0.
+pub fn rcs_probabilities(labels: &[usize], classes: usize, temperature: f32) -> Vec<f32> {
+    let mut counts = vec![0usize; classes];
+    let mut total = 0usize;
+    for &l in labels {
+        if l < classes {
+            counts[l] += 1;
+            total += 1;
+        }
+    }
+    let f: Vec<f32> = counts
+        .iter()
+        .map(|&c| if total == 0 { 0.0 } else { c as f32 / total as f32 })
+        .collect();
+    let e: Vec<f32> = f.iter().map(|&fc| ((1.0 - fc) / temperature).exp()).collect();
+    let z: f32 = e.iter().sum();
+    e.iter().map(|&v| v / z).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_sampler_covers_epoch() {
+        let mut s = BatchSampler::new(10, 5, 1);
+        let mut seen: Vec<usize> = s.next_batch();
+        seen.extend(s.next_batch());
+        seen.sort_unstable();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>(), "one epoch covers all");
+    }
+
+    #[test]
+    fn rcs_prefers_rare_classes() {
+        // class 0 frequent, class 1 rare
+        let labels: Vec<usize> = (0..100).map(|i| usize::from(i >= 95)).collect();
+        let p = rcs_probabilities(&labels, 2, 0.5);
+        assert!(p[1] > p[0], "rare class must be upsampled: {p:?}");
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        // and the sampler actually draws it more often than its frequency
+        let mut s = BatchSampler::new(100, 50, 2).with_rcs(&labels, 2, 0.5);
+        let mut rare = 0;
+        for _ in 0..20 {
+            for i in s.next_batch() {
+                if labels[i] == 1 {
+                    rare += 1;
+                }
+            }
+        }
+        let frac = rare as f32 / 1000.0;
+        assert!(frac > 0.15, "rare fraction {frac} should beat base rate 0.05");
+    }
+
+    #[test]
+    fn rcs_temperature_sharpens() {
+        let labels: Vec<usize> = (0..100).map(|i| usize::from(i >= 90)).collect();
+        let cold = rcs_probabilities(&labels, 2, 0.1);
+        let warm = rcs_probabilities(&labels, 2, 10.0);
+        assert!(cold[1] > warm[1], "lower T → sharper preference");
+    }
+}

@@ -1,0 +1,172 @@
+//! Segmentation dataset (stands in for Cityscapes / PASCAL VOC —
+//! DESIGN.md §5): scenes of textured background plus randomly placed
+//! rectangles/discs of class-specific texture. Class frequencies are
+//! long-tailed by construction, reproducing the imbalance that motivates
+//! the paper's rare-class sampling ablation (Appendix D.3.3, Table 11/12).
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Images (NCHW, [-1,1]) with per-pixel labels (class ids; `background`=0).
+pub struct SegDataset {
+    pub images: Vec<f32>,
+    pub labels: Vec<usize>,
+    pub n: usize,
+    pub c: usize,
+    pub hw: usize,
+    pub classes: usize,
+}
+
+impl SegDataset {
+    /// `classes` ≥ 2. Object class k appears with probability ∝ tail^k —
+    /// higher classes are progressively rarer (long tail).
+    pub fn scenes(n: usize, classes: usize, c: usize, hw: usize, tail: f32, seed: u64) -> Self {
+        assert!(classes >= 2);
+        let mut rng = Rng::new(seed);
+        // class texture parameters (freq pair per class per channel)
+        let tex: Vec<(f32, f32, f32)> = (0..classes * c)
+            .map(|_| (rng.range(1.0, 8.0), rng.range(1.0, 8.0), rng.range(-0.5, 0.5)))
+            .collect();
+        let mut images = vec![0.0f32; n * c * hw * hw];
+        let mut labels = vec![0usize; n * hw * hw];
+        let probs: Vec<f32> = (1..classes).map(|k| tail.powi(k as i32 - 1)).collect();
+        for i in 0..n {
+            // background texture (class 0)
+            for ch in 0..c {
+                let (fx, fy, off) = tex[ch];
+                for y in 0..hw {
+                    for x in 0..hw {
+                        let u = x as f32 / hw as f32;
+                        let v = y as f32 / hw as f32;
+                        images[((i * c + ch) * hw + y) * hw + x] =
+                            (0.4 * (6.28 * (fx * u + fy * v)).sin() + off
+                                + 0.1 * rng.normal())
+                            .clamp(-1.0, 1.0);
+                    }
+                }
+            }
+            // 1–4 objects
+            let nobj = 1 + rng.below(4);
+            for _ in 0..nobj {
+                // sample class by the long-tailed distribution
+                let total: f32 = probs.iter().sum();
+                let mut t = rng.uniform() * total;
+                let mut cls = 1;
+                for (k, &p) in probs.iter().enumerate() {
+                    if t < p {
+                        cls = k + 1;
+                        break;
+                    }
+                    t -= p;
+                }
+                let size = 3 + rng.below(hw / 2);
+                let cy = rng.below(hw);
+                let cx = rng.below(hw);
+                let disc = rng.bernoulli(0.5);
+                for y in 0..hw {
+                    for x in 0..hw {
+                        let inside = if disc {
+                            let dy = y as isize - cy as isize;
+                            let dx = x as isize - cx as isize;
+                            (dy * dy + dx * dx) as usize <= (size / 2) * (size / 2)
+                        } else {
+                            y >= cy.saturating_sub(size / 2)
+                                && y < (cy + size / 2).min(hw)
+                                && x >= cx.saturating_sub(size / 2)
+                                && x < (cx + size / 2).min(hw)
+                        };
+                        if inside {
+                            labels[(i * hw + y) * hw + x] = cls;
+                            for ch in 0..c {
+                                let (fx, fy, off) = tex[cls * c + ch];
+                                let u = x as f32 / hw as f32;
+                                let v = y as f32 / hw as f32;
+                                images[((i * c + ch) * hw + y) * hw + x] =
+                                    (0.6 * (6.28 * (fx * u + fy * v)).cos() + off
+                                        + 0.1 * rng.normal())
+                                    .clamp(-1.0, 1.0);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        SegDataset { images, labels, n, c, hw, classes }
+    }
+
+    pub fn batch(&self, idx: &[usize]) -> (Tensor, Vec<usize>) {
+        let sample = self.c * self.hw * self.hw;
+        let lsample = self.hw * self.hw;
+        let mut out = vec![0.0f32; idx.len() * sample];
+        let mut labels = Vec::with_capacity(idx.len() * lsample);
+        for (bi, &i) in idx.iter().enumerate() {
+            out[bi * sample..(bi + 1) * sample]
+                .copy_from_slice(&self.images[i * sample..(i + 1) * sample]);
+            labels.extend_from_slice(&self.labels[i * lsample..(i + 1) * lsample]);
+        }
+        (
+            Tensor::from_vec(&[idx.len(), self.c, self.hw, self.hw], out),
+            labels,
+        )
+    }
+
+    /// Per-image class labels (for the RCS sampler): dominant object class.
+    pub fn dominant_class(&self) -> Vec<usize> {
+        let lsample = self.hw * self.hw;
+        (0..self.n)
+            .map(|i| {
+                let mut counts = vec![0usize; self.classes];
+                for &l in &self.labels[i * lsample..(i + 1) * lsample] {
+                    counts[l] += 1;
+                }
+                counts[0] = 0; // ignore background for dominance
+                counts
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, &c)| c)
+                    .map(|(k, _)| k)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// Class pixel frequencies (for the Table 11-style report).
+    pub fn class_frequencies(&self) -> Vec<f32> {
+        let mut counts = vec![0usize; self.classes];
+        for &l in &self.labels {
+            counts[l] += 1;
+        }
+        let total = self.labels.len() as f32;
+        counts.iter().map(|&c| c as f32 / total).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn long_tailed_frequencies() {
+        let d = SegDataset::scenes(40, 6, 3, 16, 0.5, 1);
+        let f = d.class_frequencies();
+        assert!(f[0] > 0.3, "background dominates: {f:?}");
+        // later object classes are rarer than class 1
+        assert!(f[1] > f[4], "tail should decay: {f:?}");
+    }
+
+    #[test]
+    fn labels_in_range_and_batch_shapes() {
+        let d = SegDataset::scenes(8, 4, 3, 16, 0.6, 2);
+        assert!(d.labels.iter().all(|&l| l < 4));
+        let (x, y) = d.batch(&[0, 3]);
+        assert_eq!(x.shape, vec![2, 3, 16, 16]);
+        assert_eq!(y.len(), 2 * 16 * 16);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = SegDataset::scenes(5, 4, 1, 8, 0.5, 3);
+        let b = SegDataset::scenes(5, 4, 1, 8, 0.5, 3);
+        assert_eq!(a.labels, b.labels);
+    }
+}

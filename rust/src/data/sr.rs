@@ -1,0 +1,121 @@
+//! Super-resolution dataset (stands in for DIV2K/Set5/... — DESIGN.md §5):
+//! procedural multi-frequency textures as HR ground truth, box-downsampled
+//! LR inputs. Patch-based training exactly like the paper's EDSR setup
+//! (Appendix D.2).
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Paired LR/HR patches, values in [0, 1], NCHW.
+pub struct SrDataset {
+    pub lr: Vec<f32>,
+    pub hr: Vec<f32>,
+    pub n: usize,
+    pub c: usize,
+    pub lr_hw: usize,
+    pub scale: usize,
+}
+
+impl SrDataset {
+    /// Generate `n` texture patches; HR is `lr_hw·scale` square.
+    pub fn textures(n: usize, c: usize, lr_hw: usize, scale: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let hr_hw = lr_hw * scale;
+        let mut hr = vec![0.0f32; n * c * hr_hw * hr_hw];
+        for i in 0..n {
+            // random texture: 4 sinusoid components + a soft edge
+            let comps: Vec<(f32, f32, f32, f32)> = (0..4)
+                .map(|_| {
+                    (
+                        rng.range(0.5, 6.0),
+                        rng.range(0.5, 6.0),
+                        rng.range(0.0, 6.28),
+                        rng.range(0.15, 0.5),
+                    )
+                })
+                .collect();
+            let edge = rng.range(0.2, 0.8);
+            for ch in 0..c {
+                let chs = 1.0 + 0.3 * ch as f32;
+                for y in 0..hr_hw {
+                    for x in 0..hr_hw {
+                        let u = x as f32 / hr_hw as f32;
+                        let v = y as f32 / hr_hw as f32;
+                        let mut val = 0.5;
+                        for &(fx, fy, ph, amp) in &comps {
+                            val += amp * 0.4 * (6.28 * (fx * u * chs + fy * v) + ph).sin();
+                        }
+                        if u > edge {
+                            val += 0.15; // sharp vertical edge: SR-relevant detail
+                        }
+                        hr[((i * c + ch) * hr_hw + y) * hr_hw + x] = val.clamp(0.0, 1.0);
+                    }
+                }
+            }
+        }
+        // LR = scale×scale box filter (bicubic-like low-pass, simplified)
+        let mut lr = vec![0.0f32; n * c * lr_hw * lr_hw];
+        let inv = 1.0 / (scale * scale) as f32;
+        for i in 0..n {
+            for ch in 0..c {
+                for y in 0..lr_hw {
+                    for x in 0..lr_hw {
+                        let mut s = 0.0;
+                        for dy in 0..scale {
+                            for dx in 0..scale {
+                                s += hr[((i * c + ch) * hr_hw + y * scale + dy) * hr_hw
+                                    + x * scale
+                                    + dx];
+                            }
+                        }
+                        lr[((i * c + ch) * lr_hw + y) * lr_hw + x] = s * inv;
+                    }
+                }
+            }
+        }
+        SrDataset { lr, hr, n, c, lr_hw, scale }
+    }
+
+    pub fn batch(&self, idx: &[usize]) -> (Tensor, Tensor) {
+        let ls = self.c * self.lr_hw * self.lr_hw;
+        let hr_hw = self.lr_hw * self.scale;
+        let hs = self.c * hr_hw * hr_hw;
+        let mut lr = vec![0.0f32; idx.len() * ls];
+        let mut hr = vec![0.0f32; idx.len() * hs];
+        for (bi, &i) in idx.iter().enumerate() {
+            lr[bi * ls..(bi + 1) * ls].copy_from_slice(&self.lr[i * ls..(i + 1) * ls]);
+            hr[bi * hs..(bi + 1) * hs].copy_from_slice(&self.hr[i * hs..(i + 1) * hs]);
+        }
+        (
+            Tensor::from_vec(&[idx.len(), self.c, self.lr_hw, self.lr_hw], lr),
+            Tensor::from_vec(&[idx.len(), self.c, hr_hw, hr_hw], hr),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_range() {
+        let d = SrDataset::textures(4, 3, 8, 2, 1);
+        assert_eq!(d.hr.len(), 4 * 3 * 16 * 16);
+        assert_eq!(d.lr.len(), 4 * 3 * 8 * 8);
+        assert!(d.hr.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn lr_is_box_mean_of_hr() {
+        let d = SrDataset::textures(1, 1, 4, 2, 2);
+        let want: f32 = (d.hr[0] + d.hr[1] + d.hr[8] + d.hr[9]) / 4.0;
+        assert!((d.lr[0] - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = SrDataset::textures(2, 3, 8, 3, 9);
+        let b = SrDataset::textures(2, 3, 8, 3, 9);
+        assert_eq!(a.hr, b.hr);
+    }
+}

@@ -1,0 +1,186 @@
+//! Synthetic image-classification datasets (CIFAR10/100- and MNIST-like).
+//!
+//! Each class gets a smooth random prototype (mixture of low-frequency
+//! sinusoids) plus per-sample structured noise and a random shift — enough
+//! intra-class variation that models must actually generalize, while
+//! remaining CPU-trainable. This exercises the identical code path the
+//! paper's CIFAR/ImageNet experiments exercise (conv stacks, augmentation,
+//! Boolean optimizer); DESIGN.md §5 documents the substitution.
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// In-memory labelled image dataset (NCHW, values in [-1, 1]).
+pub struct ImageDataset {
+    pub images: Vec<f32>,
+    pub labels: Vec<usize>,
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub classes: usize,
+}
+
+impl ImageDataset {
+    /// CIFAR-like: `classes` smooth prototypes, additive noise σ, ±2px
+    /// shifts. Same seed ⇒ same dataset.
+    pub fn cifar_like(
+        n: usize,
+        classes: usize,
+        c: usize,
+        hw: usize,
+        noise: f32,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::new(seed);
+        // class prototypes: sum of random low-frequency waves per channel
+        let mut protos = vec![0.0f32; classes * c * hw * hw];
+        for cls in 0..classes {
+            for ch in 0..c {
+                let (fx, fy) = (rng.range(0.5, 2.5), rng.range(0.5, 2.5));
+                let (px, py) = (rng.range(0.0, 6.28), rng.range(0.0, 6.28));
+                let amp2 = rng.range(0.2, 0.8);
+                let (gx, gy) = (rng.range(0.5, 3.0), rng.range(0.5, 3.0));
+                // class-keyed component: guarantees prototype separation
+                // even when the random waves happen to collide
+                let key = (cls + 1) as f32 / classes as f32 * 3.0 + 0.5;
+                for y in 0..hw {
+                    for x in 0..hw {
+                        let u = x as f32 / hw as f32 * 6.28;
+                        let v = y as f32 / hw as f32 * 6.28;
+                        let val = (fx * u + px).sin() * (fy * v + py).cos()
+                            + amp2 * (gx * u + gy * v).sin()
+                            + 0.5 * (key * (u + 0.7 * v) + ch as f32).sin();
+                        protos[((cls * c + ch) * hw + y) * hw + x] = val * 0.5;
+                    }
+                }
+            }
+        }
+        let mut images = vec![0.0f32; n * c * hw * hw];
+        let mut labels = vec![0usize; n];
+        for i in 0..n {
+            let cls = rng.below(classes);
+            labels[i] = cls;
+            let (sx, sy) = (rng.below(5) as isize - 2, rng.below(5) as isize - 2);
+            for ch in 0..c {
+                for y in 0..hw {
+                    for x in 0..hw {
+                        let yy = (y as isize + sy).rem_euclid(hw as isize) as usize;
+                        let xx = (x as isize + sx).rem_euclid(hw as isize) as usize;
+                        let p = protos[((cls * c + ch) * hw + yy) * hw + xx];
+                        images[((i * c + ch) * hw + y) * hw + x] =
+                            (p + noise * rng.normal()).clamp(-1.0, 1.0);
+                    }
+                }
+            }
+        }
+        ImageDataset { images, labels, n, c, h: hw, w: hw, classes }
+    }
+
+    /// MNIST-like: binary ±1 patterns from class prototype bit-templates
+    /// with label-preserving bit flips — the MLP/AOT-artifact workload.
+    pub fn mnist_like(n: usize, classes: usize, d: usize, flip_p: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let protos: Vec<f32> = (0..classes * d).map(|_| rng.sign()).collect();
+        let mut images = vec![0.0f32; n * d];
+        let mut labels = vec![0usize; n];
+        for i in 0..n {
+            let cls = rng.below(classes);
+            labels[i] = cls;
+            for j in 0..d {
+                let v = protos[cls * d + j];
+                images[i * d + j] = if rng.bernoulli(flip_p) { -v } else { v };
+            }
+        }
+        ImageDataset { images, labels, n, c: 1, h: 1, w: d, classes }
+    }
+
+    /// Split into (train, val) with `n_train` samples in train — the two
+    /// halves share the same class prototypes (same underlying task).
+    pub fn split(self, n_train: usize) -> (ImageDataset, ImageDataset) {
+        assert!(n_train < self.n);
+        let sample = self.c * self.h * self.w;
+        let train = ImageDataset {
+            images: self.images[..n_train * sample].to_vec(),
+            labels: self.labels[..n_train].to_vec(),
+            n: n_train,
+            c: self.c,
+            h: self.h,
+            w: self.w,
+            classes: self.classes,
+        };
+        let val = ImageDataset {
+            images: self.images[n_train * sample..].to_vec(),
+            labels: self.labels[n_train..].to_vec(),
+            n: self.n - n_train,
+            c: self.c,
+            h: self.h,
+            w: self.w,
+            classes: self.classes,
+        };
+        (train, val)
+    }
+
+    /// Gather a batch by indices into an NCHW tensor + label vec.
+    pub fn batch(&self, idx: &[usize]) -> (Tensor, Vec<usize>) {
+        let sample = self.c * self.h * self.w;
+        let mut out = vec![0.0f32; idx.len() * sample];
+        let mut labels = Vec::with_capacity(idx.len());
+        for (bi, &i) in idx.iter().enumerate() {
+            debug_assert!(i < self.n);
+            out[bi * sample..(bi + 1) * sample]
+                .copy_from_slice(&self.images[i * sample..(i + 1) * sample]);
+            labels.push(self.labels[i]);
+        }
+        (
+            Tensor::from_vec(&[idx.len(), self.c, self.h, self.w], out),
+            labels,
+        )
+    }
+
+    /// Flat (batch, features) view for MLP workloads.
+    pub fn batch_flat(&self, idx: &[usize]) -> (Tensor, Vec<usize>) {
+        let (t, l) = self.batch(idx);
+        let cols = self.c * self.h * self.w;
+        (t.reshape(&[idx.len(), cols]), l)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = ImageDataset::cifar_like(20, 4, 3, 8, 0.1, 7);
+        let b = ImageDataset::cifar_like(20, 4, 3, 8, 0.1, 7);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        let c = ImageDataset::cifar_like(20, 4, 3, 8, 0.1, 8);
+        assert_ne!(a.labels, c.labels);
+    }
+
+    #[test]
+    fn values_in_range_and_all_classes_present() {
+        let d = ImageDataset::cifar_like(200, 10, 3, 8, 0.2, 1);
+        assert!(d.images.iter().all(|&v| (-1.0..=1.0).contains(&v)));
+        for cls in 0..10 {
+            assert!(d.labels.iter().any(|&l| l == cls), "class {cls} missing");
+        }
+    }
+
+    #[test]
+    fn mnist_like_is_pm1() {
+        let d = ImageDataset::mnist_like(50, 10, 64, 0.1, 3);
+        assert!(d.images.iter().all(|&v| v == 1.0 || v == -1.0));
+    }
+
+    #[test]
+    fn batch_gather() {
+        let d = ImageDataset::cifar_like(10, 2, 1, 4, 0.0, 2);
+        let (t, l) = d.batch(&[3, 7]);
+        assert_eq!(t.shape, vec![2, 1, 4, 4]);
+        assert_eq!(l, vec![d.labels[3], d.labels[7]]);
+        assert_eq!(&t.data[0..16], &d.images[3 * 16..4 * 16]);
+    }
+}

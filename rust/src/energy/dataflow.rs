@@ -1,0 +1,147 @@
+//! Access-count formulas (Tables 18/19, data movement of Algorithm 10).
+//!
+//! For the forward convolution with the weight-stationary / input-cycling
+//! movement, each stream's access count *per element* at each level forms
+//! a cascade (Eq. 51): an element is fetched `n₃` times from DRAM, each
+//! of those appears `n₂` times at L2, etc.
+
+use super::layer_cost::ConvShape;
+use super::tiling::{out_dim, Tiling};
+
+/// Per-level access multipliers for the three streams.
+/// Index 0 = DRAM (Table 18's "DRAM (L3)" column), increasing inward.
+#[derive(Debug, Clone)]
+pub struct AccessCounts {
+    pub i: Vec<f64>,
+    pub f: Vec<f64>,
+    pub o: Vec<f64>,
+}
+
+fn alpha(in_dim: usize, k: usize, stride: usize) -> f64 {
+    out_dim(in_dim, k, stride) as f64 / in_dim as f64
+}
+
+/// Table 18: forward access counts given the chosen tiling.
+pub fn access_counts_forward(shape: &ConvShape, tiling: &Tiling) -> AccessCounts {
+    let levels = tiling.tiles.len() + 1;
+    let mut i = Vec::with_capacity(levels);
+    let mut f = Vec::with_capacity(levels);
+    let mut o = Vec::with_capacity(levels);
+    let k = shape.k;
+    let s = shape.stride;
+    for lvl in 0..levels {
+        if lvl + 1 < levels {
+            let cur = tiling.at(shape, lvl);
+            let nxt = tiling.at(shape, lvl + 1);
+            // IFMAPS: re-read once per child filter-block, inflated by the
+            // halo overlap ratio α_cur/α_next (Table 18 row I).
+            let n_i = (cur.m as f64 / nxt.m as f64).ceil()
+                * (alpha(cur.h, k, s) / alpha(nxt.h, k, s))
+                * (alpha(cur.w, k, s) / alpha(nxt.w, k, s));
+            // FILTERS: DRAM read once; below, once per (batch × spatial)
+            // child block (Table 18 row F).
+            let n_f = if lvl == 0 {
+                1.0
+            } else {
+                let oh_c = out_dim(cur.h, k, s).max(1) as f64;
+                let ow_c = out_dim(cur.w, k, s).max(1) as f64;
+                let oh_n = out_dim(nxt.h, k, s).max(1) as f64;
+                let ow_n = out_dim(nxt.w, k, s).max(1) as f64;
+                (cur.n as f64 / nxt.n as f64).ceil()
+                    * (oh_c / oh_n).ceil()
+                    * (ow_c / ow_n).ceil()
+            };
+            i.push(n_i.max(1.0));
+            f.push(n_f.max(1.0));
+        } else {
+            // innermost level (L0): convolutional reuse (Table 18 last col)
+            let t = tiling.at(shape, lvl);
+            let a_v = alpha(t.h, k, s);
+            let a_h = alpha(t.w, k, s);
+            i.push(((k * k) as f64 * a_v * a_h).max(1.0));
+            f.push(1.0);
+        }
+        // outputs: written once per level (partial sums stay in the cube —
+        // output-stationary L0, Appendix E.3.2)
+        o.push(1.0);
+    }
+    AccessCounts { i, f, o }
+}
+
+/// Table 19: backward access counts. The backward passes are convolutions
+/// too (Eqs. 53–54) with IFMAPS↔OFMAPS roles swapped; the β ratios of
+/// Table 19 mirror the α ratios with output/input dims exchanged. We
+/// reuse the forward machinery on the role-swapped shape.
+pub fn access_counts_backward(shape: &ConvShape, tiling: &Tiling) -> AccessCounts {
+    // Role swap: the "input" stream of ∂Loss/∂I is ∂Loss/∂O with the same
+    // spatial extent (full conv with rotated filters, stride-1 geometry).
+    let (oh, ow) = shape.out_hw();
+    let swapped = ConvShape {
+        n: shape.n,
+        c: shape.m,
+        m: shape.c,
+        h: oh,
+        w: ow,
+        k: shape.k,
+        stride: 1,
+        pad: shape.k.saturating_sub(1),
+    };
+    access_counts_forward(&swapped, tiling)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::hardware::ascend;
+    use crate::energy::tiling::search_tiling;
+
+    fn shape() -> ConvShape {
+        ConvShape { n: 16, c: 64, m: 128, h: 32, w: 32, k: 3, stride: 1, pad: 1 }
+    }
+
+    #[test]
+    fn filters_read_once_from_dram() {
+        let hw = ascend();
+        let t = search_tiling(&shape(), &hw, 32, 32);
+        let ac = access_counts_forward(&shape(), &t);
+        assert_eq!(ac.f[0], 1.0, "Table 18: n₃^F = 1");
+    }
+
+    #[test]
+    fn ifmap_dram_reads_grow_when_l2_filter_tile_shrinks() {
+        // With a tiny L2 (forcing small M₂), IFMAPS must be re-read
+        // ⌈M/M₂⌉ times from DRAM.
+        let mut hw = ascend();
+        let t_big = search_tiling(&shape(), &hw, 32, 32);
+        let ac_big = access_counts_forward(&shape(), &t_big);
+        hw.levels[1].capacity = 8 * 1024; // shrink L2 to 8 KiB
+        let t_small = search_tiling(&shape(), &hw, 32, 32);
+        let ac_small = access_counts_forward(&shape(), &t_small);
+        assert!(
+            ac_small.i[0] >= ac_big.i[0],
+            "smaller L2 ⇒ more DRAM refetches ({} vs {})",
+            ac_small.i[0],
+            ac_big.i[0]
+        );
+    }
+
+    #[test]
+    fn innermost_has_convolutional_reuse() {
+        let hw = ascend();
+        let t = search_tiling(&shape(), &hw, 32, 32);
+        let ac = access_counts_forward(&shape(), &t);
+        let last = *ac.i.last().unwrap();
+        assert!(last >= 1.0 && last <= (shape().k * shape().k) as f64);
+    }
+
+    #[test]
+    fn all_counts_at_least_one() {
+        let hw = ascend();
+        let t = search_tiling(&shape(), &hw, 1, 1);
+        for ac in [access_counts_forward(&shape(), &t), access_counts_backward(&shape(), &t)] {
+            for v in ac.i.iter().chain(&ac.f).chain(&ac.o) {
+                assert!(*v >= 1.0, "{v}");
+            }
+        }
+    }
+}

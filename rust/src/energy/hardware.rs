@@ -1,0 +1,120 @@
+//! Hardware specifications: Ascend (Table 14) and Tesla V100 (Table 15).
+
+/// One memory level: capacity (bytes; `usize::MAX` = unbounded DRAM) and
+/// energy cost per byte moved (picojoules).
+#[derive(Debug, Clone, Copy)]
+pub struct MemLevel {
+    pub name: &'static str,
+    pub capacity: usize,
+    pub pj_per_byte: f64,
+}
+
+/// A hardware target for the Appendix E model. Levels are ordered from
+/// DRAM (index 0) down to the level nearest the compute unit.
+#[derive(Debug, Clone)]
+pub struct Hardware {
+    pub name: &'static str,
+    pub levels: Vec<MemLevel>,
+    /// Energy per FP32 MAC at the compute unit (pJ).
+    pub pj_per_mac_fp32: f64,
+    /// Energy per elementary Boolean logic op (XNOR/popcount lane) (pJ).
+    pub pj_per_logic_op: f64,
+}
+
+impl Hardware {
+    pub fn dram(&self) -> &MemLevel {
+        &self.levels[0]
+    }
+
+    pub fn n_levels(&self) -> usize {
+        self.levels.len()
+    }
+}
+
+/// Ascend core (Table 14). Energy efficiency in GBPS/mW converts to
+/// pJ/byte as 1/EE (1 GBPS/mW == 1 byte/nJ ⇒ cost = 1/EE nJ/byte… the
+/// model only needs *relative* numbers, so we use pJ/byte = 1000/EE with
+/// EE in GBPS/mW, keeping DRAM ≫ L2 > L1 ≫ L0 exactly as published):
+/// DRAM 0.02 → 50 000, L2 0.2 → 5 000, L1 0.4 → 2 500,
+/// L0-A 4.9 → 204, L0-B 3.5 → 286, L0-C 5.4 → 185 (we fold the three L0
+/// buffers into per-stream costs). Capacities from Table 14.
+pub fn ascend() -> Hardware {
+    Hardware {
+        name: "Ascend",
+        levels: vec![
+            MemLevel { name: "DRAM", capacity: usize::MAX, pj_per_byte: 50_000.0 / 1000.0 },
+            MemLevel { name: "L2", capacity: 8192 * 1024, pj_per_byte: 5_000.0 / 1000.0 },
+            MemLevel { name: "L1", capacity: 1024 * 1024, pj_per_byte: 2_500.0 / 1000.0 },
+            // L0: average of the L0-A/B/C efficiencies (4.9/3.5/5.4 → 4.6)
+            MemLevel { name: "L0", capacity: 64 * 1024, pj_per_byte: 1.0 / 4.6 },
+        ],
+        // compute efficiency 1.7 TOPS/W (Appendix E.2) ⇒ 1/1.7 pJ per op;
+        // an FP32 MAC is counted as one "op" of that rate on the cube.
+        pj_per_mac_fp32: 1.0 / 1.7,
+        // a Boolean logic op is a single gate-level op; on the same 1.7
+        // TOPS/W fabric with 1-bit lanes we charge 1/32 of a 32-bit op.
+        pj_per_logic_op: 1.0 / 1.7 / 32.0,
+    }
+}
+
+/// Tesla V100 normalized model (Table 15): costs relative to one MAC at
+/// the ALU — DRAM 200×, L2 6×, L1 2×, RF 1×. We set the MAC to 1.0 "unit"
+/// and scale per-byte costs by assuming the published ratios are for
+/// 32-bit words (4 bytes).
+pub fn v100() -> Hardware {
+    let mac = 1.0;
+    Hardware {
+        name: "Tesla V100",
+        levels: vec![
+            MemLevel { name: "DRAM", capacity: usize::MAX, pj_per_byte: 200.0 * mac / 4.0 },
+            MemLevel { name: "L2", capacity: 6 * 1024 * 1024, pj_per_byte: 6.0 * mac / 4.0 },
+            MemLevel { name: "L1", capacity: 64 * 1024, pj_per_byte: 2.0 * mac / 4.0 },
+            MemLevel { name: "RF", capacity: 16 * 1024, pj_per_byte: 1.0 * mac / 4.0 },
+        ],
+        pj_per_mac_fp32: mac,
+        // 1-bit logic lane ≈ 1/32 of a 32-bit ALU op (Appendix E.2's
+        // (2n−1)-gates rule applied at n=1 relative to FP32 ALU width).
+        pj_per_logic_op: mac / 32.0,
+    }
+}
+
+/// Static Ascend instance accessor (convenience).
+pub static ASCEND: fn() -> Hardware = ascend;
+/// Static V100 instance accessor (convenience).
+pub static V100: fn() -> Hardware = v100;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_hierarchy_is_monotone() {
+        for hw in [ascend(), v100()] {
+            for pair in hw.levels.windows(2) {
+                assert!(
+                    pair[0].pj_per_byte > pair[1].pj_per_byte,
+                    "{}: outer levels must cost more ({} vs {})",
+                    hw.name,
+                    pair[0].name,
+                    pair[1].name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dram_ratio_matches_tables() {
+        // Table 14: DRAM/L2 = 0.2/0.02 = 10×; Table 15: DRAM/L2 = 200/6.
+        let a = ascend();
+        assert!((a.levels[0].pj_per_byte / a.levels[1].pj_per_byte - 10.0).abs() < 1e-6);
+        let v = v100();
+        assert!((v.levels[0].pj_per_byte / v.levels[1].pj_per_byte - 200.0 / 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn logic_op_is_much_cheaper_than_mac() {
+        for hw in [ascend(), v100()] {
+            assert!(hw.pj_per_logic_op * 8.0 < hw.pj_per_mac_fp32, "{}", hw.name);
+        }
+    }
+}

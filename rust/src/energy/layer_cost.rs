@@ -1,0 +1,256 @@
+//! Per-layer energy: shapes, compute energy (Appendix E.2) and the glue
+//! that combines tiling + access counts + per-level costs into joules
+//! (Eqs. 51–54).
+
+use super::dataflow::{access_counts_backward, access_counts_forward};
+use super::hardware::Hardware;
+use super::methods::Bitwidths;
+use super::tiling::search_tiling;
+
+/// Convolution shape parameters (Table 16). A linear layer is the 1×1
+/// special case (h = w = k = 1, c = fan-in, m = fan-out).
+#[derive(Debug, Clone, Copy)]
+pub struct ConvShape {
+    /// Batch size N.
+    pub n: usize,
+    /// Input channels C.
+    pub c: usize,
+    /// Output channels M.
+    pub m: usize,
+    /// Input plane H^I × W^I.
+    pub h: usize,
+    pub w: usize,
+    /// Filter size H^F = W^F = k.
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvShape {
+    pub fn linear(n: usize, fan_in: usize, fan_out: usize) -> Self {
+        ConvShape { n, c: fan_in, m: fan_out, h: 1, w: 1, k: 1, stride: 1, pad: 0 }
+    }
+
+    pub fn out_hw(&self) -> (usize, usize) {
+        (
+            (self.h + 2 * self.pad - self.k) / self.stride + 1,
+            (self.w + 2 * self.pad - self.k) / self.stride + 1,
+        )
+    }
+
+    /// MAC count of the forward convolution.
+    pub fn macs(&self) -> f64 {
+        let (oh, ow) = self.out_hw();
+        self.n as f64
+            * self.m as f64
+            * self.c as f64
+            * oh as f64
+            * ow as f64
+            * (self.k * self.k) as f64
+    }
+
+    pub fn ifmap_elems(&self) -> f64 {
+        (self.n * self.c * self.h * self.w) as f64
+    }
+
+    pub fn filter_elems(&self) -> f64 {
+        (self.m * self.c * self.k * self.k) as f64
+    }
+
+    pub fn ofmap_elems(&self) -> f64 {
+        let (oh, ow) = self.out_hw();
+        (self.n * self.m * oh * ow) as f64
+    }
+}
+
+/// Which pass is being costed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Forward,
+    /// Backward = ∂Loss/∂I (Eq. 54) + ∂Loss/∂F (Eq. 53), both convs.
+    Backward,
+}
+
+/// Energy result in picojoules, split by source.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EnergyBreakdown {
+    pub compute_pj: f64,
+    pub mem_pj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.compute_pj + self.mem_pj
+    }
+
+    pub fn add(&mut self, other: EnergyBreakdown) {
+        self.compute_pj += other.compute_pj;
+        self.mem_pj += other.mem_pj;
+    }
+}
+
+/// Compute energy for `macs` multiply-accumulates at integer bitwidth `n`
+/// (Appendix E.2: ADD INT-n costs (2n−1) logic ops; we cost an INT-n MAC
+/// at (2n−1)/(2·32−1) of an FP32 MAC) or as pure Boolean logic
+/// (XNOR + count = 2 logic-lane ops per pair).
+fn compute_energy(macs: f64, bits: u32, logic: bool, hw: &Hardware) -> f64 {
+    if logic {
+        2.0 * macs * hw.pj_per_logic_op
+    } else if bits >= 32 {
+        macs * hw.pj_per_mac_fp32
+    } else {
+        macs * hw.pj_per_mac_fp32 * ((2 * bits - 1) as f64 / 63.0)
+    }
+}
+
+/// Memory energy of one conv pass: per-stream access-count cascade
+/// (Eq. 51) + the single output write (Eq. 52 with n_i = 1).
+fn mem_energy(
+    shape: &ConvShape,
+    hw: &Hardware,
+    bits_i: u32,
+    bits_f: u32,
+    bits_o: u32,
+    backward: bool,
+) -> f64 {
+    let tiling = search_tiling(shape, hw, bits_i, bits_f);
+    let ac = if backward {
+        access_counts_backward(shape, &tiling)
+    } else {
+        access_counts_forward(shape, &tiling)
+    };
+    let bytes_i = shape.ifmap_elems() * bits_i as f64 / 8.0;
+    let bytes_f = shape.filter_elems() * bits_f as f64 / 8.0;
+    let bytes_o = shape.ofmap_elems() * bits_o as f64 / 8.0;
+    let mut e = 0.0;
+    // Eq. (51): cascade of products down the hierarchy.
+    let mut prod_i = 1.0;
+    let mut prod_f = 1.0;
+    for (lvl, mem) in hw.levels.iter().enumerate() {
+        prod_i *= ac.i[lvl];
+        prod_f *= ac.f[lvl];
+        e += bytes_i * prod_i * mem.pj_per_byte;
+        e += bytes_f * prod_f * mem.pj_per_byte;
+    }
+    // Eq. (52) with n_i = 1 at every level: one write of O to DRAM plus
+    // one pass through each level.
+    for mem in &hw.levels {
+        e += bytes_o * mem.pj_per_byte;
+    }
+    e
+}
+
+/// Energy of one convolution layer for one pass of one batch.
+pub fn conv_energy(
+    shape: &ConvShape,
+    hw: &Hardware,
+    bits: &Bitwidths,
+    phase: Phase,
+) -> EnergyBreakdown {
+    match phase {
+        Phase::Forward => EnergyBreakdown {
+            compute_pj: compute_energy(
+                shape.macs(),
+                bits.weight_fwd.max(bits.act),
+                bits.logic_forward,
+                hw,
+            ),
+            mem_pj: mem_energy(shape, hw, bits.act, bits.weight_fwd, bits.act, false),
+        },
+        Phase::Backward => {
+            // ∂Loss/∂I = conv(rot(F), ∂Loss/∂O)  (Eq. 54): streams dO + F.
+            let e_di = EnergyBreakdown {
+                compute_pj: compute_energy(
+                    shape.macs(),
+                    bits.grad.max(bits.weight_fwd),
+                    false, // gradient arithmetic is numeric (INT16/FP), not logic
+                    hw,
+                ),
+                mem_pj: mem_energy(shape, hw, bits.grad, bits.weight_fwd, bits.grad, true),
+            };
+            // ∂Loss/∂F = conv(I, ∂Loss/∂O)  (Eq. 53): streams I + dO.
+            let e_dw = EnergyBreakdown {
+                compute_pj: compute_energy(shape.macs(), bits.grad.max(bits.act), false, hw),
+                mem_pj: mem_energy(shape, hw, bits.act, bits.grad, bits.grad, true),
+            };
+            let mut e = e_di;
+            e.add(e_dw);
+            e
+        }
+    }
+}
+
+/// Energy of a linear layer (1×1-conv special case).
+pub fn linear_energy(
+    n: usize,
+    fan_in: usize,
+    fan_out: usize,
+    hw: &Hardware,
+    bits: &Bitwidths,
+    phase: Phase,
+) -> EnergyBreakdown {
+    conv_energy(&ConvShape::linear(n, fan_in, fan_out), hw, bits, phase)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::hardware::{ascend, v100};
+    use crate::energy::methods::{method_bitwidths, Method};
+
+    fn shape() -> ConvShape {
+        ConvShape { n: 32, c: 128, m: 128, h: 16, w: 16, k: 3, stride: 1, pad: 1 }
+    }
+
+    #[test]
+    fn macs_formula() {
+        let s = ConvShape { n: 2, c: 3, m: 4, h: 8, w: 8, k: 3, stride: 1, pad: 1 };
+        // OH=OW=8 → 2·4·3·8·8·9
+        assert_eq!(s.macs(), (2 * 4 * 3 * 8 * 8 * 9) as f64);
+    }
+
+    #[test]
+    fn bold_forward_is_much_cheaper_than_fp() {
+        for hw in [ascend(), v100()] {
+            let fp = conv_energy(&shape(), &hw, &method_bitwidths(Method::Fp32), Phase::Forward);
+            let bold = conv_energy(&shape(), &hw, &method_bitwidths(Method::Bold), Phase::Forward);
+            assert!(
+                bold.total() < fp.total() / 8.0,
+                "{}: bold {} vs fp {}",
+                hw.name,
+                bold.total(),
+                fp.total()
+            );
+        }
+    }
+
+    #[test]
+    fn backward_costs_more_than_forward() {
+        let hw = v100();
+        let bits = method_bitwidths(Method::Fp32);
+        let f = conv_energy(&shape(), &hw, &bits, Phase::Forward);
+        let b = conv_energy(&shape(), &hw, &bits, Phase::Backward);
+        assert!(b.total() > f.total(), "two convs in backward");
+    }
+
+    #[test]
+    fn binarynet_training_not_much_cheaper_than_fp() {
+        // the paper's point: latent-weight BNN *training* stays FP-bound
+        let hw = v100();
+        let fp = conv_energy(&shape(), &hw, &method_bitwidths(Method::Fp32), Phase::Backward);
+        let bnn =
+            conv_energy(&shape(), &hw, &method_bitwidths(Method::BinaryNet), Phase::Backward);
+        // FP32 gradients keep the BNN backward within a small factor of FP
+        // (Table 2 reports ~44% for the full iteration incl. optimizer).
+        assert!(bnn.total() > fp.total() * 0.2, "bnn bwd {} vs fp {}", bnn.total(), fp.total());
+    }
+
+    #[test]
+    fn linear_is_conv_special_case() {
+        let hw = ascend();
+        let bits = method_bitwidths(Method::Fp32);
+        let a = linear_energy(16, 1024, 10, &hw, &bits, Phase::Forward);
+        let b = conv_energy(&ConvShape::linear(16, 1024, 10), &hw, &bits, Phase::Forward);
+        assert_eq!(a.total(), b.total());
+    }
+}

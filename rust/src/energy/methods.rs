@@ -1,0 +1,128 @@
+//! Per-method bitwidth accounting (Table 1 + Table 6's W/A/G column).
+//!
+//! What each method moves and computes with during *training* is the crux
+//! of the paper's argument: latent-weight BNNs binarize the forward but
+//! keep FP latent weights, FP gradients and FP optimizer state, while
+//! B⊕LD keeps 1-bit weights/activations end-to-end with an INT16
+//! backward signal (Table 6: W/A/G = 1/1/16).
+
+/// Bitwidths of the three data streams per phase, in bits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Bitwidths {
+    /// Weights as used in the forward compute.
+    pub weight_fwd: u32,
+    /// Activations / feature maps.
+    pub act: u32,
+    /// Backward signal (gradients or Boolean-variation votes).
+    pub grad: u32,
+    /// Weight representation carried by the *optimizer* (latent weights).
+    pub weight_store: u32,
+    /// True when forward arithmetic is Boolean logic (XNOR+popcount)
+    /// rather than MACs.
+    pub logic_forward: bool,
+}
+
+/// The methods compared across Fig. 1 / Tables 2 & 5.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    Fp32,
+    BinaryConnect,
+    BinaryNet,
+    XnorNet,
+    /// B⊕LD without BN.
+    Bold,
+    /// B⊕LD with BN (extra FP BN tensors; same Boolean core).
+    BoldBn,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Fp32 => "Full-precision",
+            Method::BinaryConnect => "BinaryConnect",
+            Method::BinaryNet => "BinaryNet",
+            Method::XnorNet => "XNOR-Net",
+            Method::Bold => "B⊕LD w/o BN",
+            Method::BoldBn => "B⊕LD with BN",
+        }
+    }
+
+    pub fn all() -> [Method; 6] {
+        [
+            Method::Fp32,
+            Method::BinaryConnect,
+            Method::BinaryNet,
+            Method::XnorNet,
+            Method::Bold,
+            Method::BoldBn,
+        ]
+    }
+}
+
+/// Table 1 + §4 bitwidths for each method.
+pub fn method_bitwidths(m: Method) -> Bitwidths {
+    match m {
+        Method::Fp32 => Bitwidths {
+            weight_fwd: 32,
+            act: 32,
+            grad: 32,
+            weight_store: 32,
+            logic_forward: false,
+        },
+        // BinaryConnect: 1-bit weights in the forward, 32-bit activations,
+        // FP latent weights + FP gradients in training.
+        Method::BinaryConnect => Bitwidths {
+            weight_fwd: 1,
+            act: 32,
+            grad: 32,
+            weight_store: 32,
+            logic_forward: false,
+        },
+        // BinaryNet / XNOR-Net: 1/1 forward (XNOR+popcount inference
+        // arithmetic) but still FP latent weights + FP gradients.
+        Method::BinaryNet | Method::XnorNet => Bitwidths {
+            weight_fwd: 1,
+            act: 1,
+            grad: 32,
+            weight_store: 32,
+            logic_forward: true,
+        },
+        // B⊕LD: native Boolean weights (stored as 1 bit), Boolean
+        // activations, INT16 backward signal (Table 6: 1/1/16).
+        Method::Bold | Method::BoldBn => Bitwidths {
+            weight_fwd: 1,
+            act: 1,
+            grad: 16,
+            weight_store: 1,
+            logic_forward: true,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bold_is_native_boolean() {
+        let b = method_bitwidths(Method::Bold);
+        assert_eq!(b.weight_store, 1, "no latent FP weights");
+        assert_eq!((b.weight_fwd, b.act, b.grad), (1, 1, 16), "Table 6 W/A/G");
+        assert!(b.logic_forward);
+    }
+
+    #[test]
+    fn bnns_keep_fp_latent_weights() {
+        for m in [Method::BinaryConnect, Method::BinaryNet, Method::XnorNet] {
+            let b = method_bitwidths(m);
+            assert_eq!(b.weight_store, 32, "{m:?} trains on FP latent weights");
+            assert_eq!(b.grad, 32);
+        }
+    }
+
+    #[test]
+    fn binaryconnect_keeps_fp_activations() {
+        assert_eq!(method_bitwidths(Method::BinaryConnect).act, 32);
+        assert_eq!(method_bitwidths(Method::BinaryNet).act, 1);
+    }
+}

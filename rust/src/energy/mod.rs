@@ -1,0 +1,32 @@
+//! Analytic energy model — Appendix E of the paper, implemented in full.
+//!
+//! Energy = compute energy + memory energy.
+//! * Compute: #arithmetic ops × per-op cost, with ADD INT-n costed at
+//!   (2n−1) logic-gate ops (Appendix E.2) and FP32 MACs at the hardware
+//!   MAC cost.
+//! * Memory: data movement through the memory hierarchy — tiling search
+//!   (Algorithm 9) chooses per-level tile sizes under capacity
+//!   constraints; the weight-stationary/input-cycling movement of
+//!   Algorithm 10 yields the access counts of Tables 18/19; Eqs. (51)–(52)
+//!   convert access counts × per-level cost into energy, for the forward
+//!   AND the two backward convolutions (Eqs. 53–54).
+//!
+//! Two hardware targets are encoded: Ascend (Table 14 energy-efficiency
+//! per level) and an Nvidia V100-normalized model (Table 15). Per-method
+//! bitwidths (B⊕LD 1/1/16, BNN latent-weight FP, FP32 baseline) determine
+//! the bytes moved and the arithmetic cost — regenerating the Cons.(%)
+//! columns of Tables 2/5 and Fig. 1.
+
+mod dataflow;
+mod hardware;
+mod layer_cost;
+mod methods;
+mod network;
+mod tiling;
+
+pub use dataflow::{access_counts_backward, access_counts_forward, AccessCounts};
+pub use hardware::{Hardware, MemLevel, ASCEND, V100};
+pub use layer_cost::{conv_energy, linear_energy, ConvShape, EnergyBreakdown, Phase};
+pub use methods::{method_bitwidths, Bitwidths, Method};
+pub use network::{network_energy, resnet18_shapes, vgg_small_shapes, NetworkEnergy};
+pub use tiling::{search_tiling, Tiling};

@@ -1,0 +1,235 @@
+//! Network-level energy: per-layer shape lists for the paper's exact
+//! architectures (VGG-SMALL on CIFAR10, ResNet18 on ImageNet) and the
+//! whole-training-iteration aggregation (forward + backward + optimizer
+//! update) that regenerates the Cons.(%) columns of Tables 2/5 and Fig. 1.
+
+use super::hardware::Hardware;
+use super::layer_cost::{conv_energy, ConvShape, EnergyBreakdown, Phase};
+use super::methods::{method_bitwidths, Method};
+
+/// Named layer shape.
+#[derive(Debug, Clone)]
+pub struct NamedShape {
+    pub name: String,
+    pub shape: ConvShape,
+    /// First/last layers stay FP for every binarized method (§4 setup).
+    pub always_fp: bool,
+}
+
+/// VGG-SMALL on 32×32 CIFAR10 (paper dims: 2×128C3-MP2-2×256C3-MP2-
+/// 2×512C3-MP2-1024FC-10FC), batch `n`.
+pub fn vgg_small_shapes(n: usize) -> Vec<NamedShape> {
+    let conv = |name: &str, c, m, hw_| NamedShape {
+        name: name.into(),
+        shape: ConvShape { n, c, m, h: hw_, w: hw_, k: 3, stride: 1, pad: 1 },
+        always_fp: false,
+    };
+    let mut v = vec![
+        NamedShape { always_fp: true, ..conv("conv1a", 3, 128, 32) },
+        conv("conv1b", 128, 128, 32),
+        conv("conv2a", 128, 256, 16),
+        conv("conv2b", 256, 256, 16),
+        conv("conv3a", 256, 512, 8),
+        conv("conv3b", 512, 512, 8),
+    ];
+    v.push(NamedShape {
+        name: "fc1".into(),
+        shape: ConvShape::linear(n, 512 * 4 * 4, 1024),
+        always_fp: false,
+    });
+    v.push(NamedShape {
+        name: "head".into(),
+        shape: ConvShape::linear(n, 1024, 10),
+        always_fp: true,
+    });
+    v
+}
+
+/// ResNet18 on 224×224 ImageNet with first-layer mapping dimension
+/// `base` (Table 5's knob; 64 = standard).
+pub fn resnet18_shapes(n: usize, base: usize) -> Vec<NamedShape> {
+    let mut v = Vec::new();
+    // stem: 7×7/2 conv, FP
+    v.push(NamedShape {
+        name: "stem".into(),
+        shape: ConvShape { n, c: 3, m: base, h: 224, w: 224, k: 7, stride: 2, pad: 3 },
+        always_fp: true,
+    });
+    // 4 stages × 2 blocks × 2 convs (+1 shortcut conv per downsampling
+    // block, Block I style)
+    let mut c_in = base;
+    let mut hw_ = 56; // after stem/2 + maxpool/2
+    for stage in 0..4 {
+        let c_out = base << stage;
+        for block in 0..2 {
+            let stride = if stage > 0 && block == 0 { 2 } else { 1 };
+            let h_in = if stride == 2 { hw_ * 2 } else { hw_ };
+            if stage > 0 && block == 0 {
+                hw_ = h_in / 2;
+            }
+            v.push(NamedShape {
+                name: format!("s{stage}b{block}c1"),
+                shape: ConvShape { n, c: c_in, m: c_out, h: h_in, w: h_in, k: 3, stride, pad: 1 },
+                always_fp: false,
+            });
+            v.push(NamedShape {
+                name: format!("s{stage}b{block}c2"),
+                shape: ConvShape { n, c: c_out, m: c_out, h: hw_, w: hw_, k: 3, stride: 1, pad: 1 },
+                always_fp: false,
+            });
+            if stride == 2 || c_in != c_out {
+                v.push(NamedShape {
+                    name: format!("s{stage}b{block}sc"),
+                    shape: ConvShape {
+                        n,
+                        c: c_in,
+                        m: c_out,
+                        h: h_in,
+                        w: h_in,
+                        k: 3,
+                        stride,
+                        pad: 1,
+                    },
+                    always_fp: false,
+                });
+            }
+            c_in = c_out;
+        }
+    }
+    v.push(NamedShape {
+        name: "head".into(),
+        shape: ConvShape::linear(n, base * 8, 1000),
+        always_fp: true,
+    });
+    v
+}
+
+/// Whole-network energy for one training iteration (or inference pass).
+#[derive(Debug, Clone)]
+pub struct NetworkEnergy {
+    pub method: Method,
+    pub hw_name: &'static str,
+    pub per_layer_pj: Vec<(String, f64)>,
+    pub compute_pj: f64,
+    pub mem_pj: f64,
+    /// Optimizer-state movement (latent weights, Adam moments, Boolean
+    /// accumulators) — the training-only cost the paper's argument hinges
+    /// on.
+    pub optimizer_pj: f64,
+}
+
+impl NetworkEnergy {
+    pub fn total_pj(&self) -> f64 {
+        self.compute_pj + self.mem_pj + self.optimizer_pj
+    }
+}
+
+/// Evaluate a network's energy for one pass.
+/// `train` adds the backward pass and optimizer-state movement.
+pub fn network_energy(
+    shapes: &[NamedShape],
+    hw: &Hardware,
+    method: Method,
+    train: bool,
+) -> NetworkEnergy {
+    let bits = method_bitwidths(method);
+    let fp_bits = method_bitwidths(Method::Fp32);
+    let mut per_layer = Vec::new();
+    let mut total = EnergyBreakdown::default();
+    let mut opt_pj = 0.0;
+    for layer in shapes {
+        let b = if layer.always_fp { &fp_bits } else { &bits };
+        let mut e = conv_energy(&layer.shape, hw, b, Phase::Forward);
+        if train {
+            e.add(conv_energy(&layer.shape, hw, b, Phase::Backward));
+            // Optimizer update: read+write the stored weights and state.
+            let params = layer.shape.filter_elems();
+            let state_bits = if layer.always_fp || b.weight_store == 32 {
+                // Adam: latent w (32) + m, v moments (2×32)
+                32.0 + 64.0
+            } else {
+                // Boolean optimizer: 1-bit weight + INT16 accumulator
+                1.0 + 16.0
+            };
+            let bytes = params * state_bits / 8.0;
+            opt_pj += 2.0 * bytes * hw.dram().pj_per_byte; // read + write
+        }
+        // "B⊕LD with BN": FP BatchNorm on every non-FP conv output.
+        if method == Method::BoldBn && !layer.always_fp && layer.shape.k > 1 {
+            let elems = layer.shape.ofmap_elems();
+            let bn = EnergyBreakdown {
+                compute_pj: 2.0 * elems * hw.pj_per_mac_fp32,
+                mem_pj: 2.0 * elems * 4.0 * hw.levels[1].pj_per_byte,
+            };
+            total.add(bn);
+        }
+        per_layer.push((layer.name.clone(), e.total()));
+        total.add(e);
+    }
+    NetworkEnergy {
+        method,
+        hw_name: hw.name,
+        per_layer_pj: per_layer,
+        compute_pj: total.compute_pj,
+        mem_pj: total.mem_pj,
+        optimizer_pj: opt_pj,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::hardware::{ascend, v100};
+
+    #[test]
+    fn vgg_shapes_match_paper() {
+        let v = vgg_small_shapes(100);
+        assert_eq!(v.len(), 8);
+        assert_eq!(v[1].shape.c, 128);
+        assert_eq!(v[5].shape.m, 512);
+        assert_eq!(v[6].shape.c, 512 * 16);
+        assert!(v[0].always_fp && v[7].always_fp);
+    }
+
+    #[test]
+    fn resnet_shapes_scale_with_base() {
+        let a = resnet18_shapes(1, 64);
+        let b = resnet18_shapes(1, 256);
+        let total_params =
+            |v: &[NamedShape]| v.iter().map(|s| s.shape.filter_elems()).sum::<f64>();
+        assert!(total_params(&b) > 10.0 * total_params(&a));
+    }
+
+    #[test]
+    fn table2_ordering_holds() {
+        // Training-energy ordering of Table 2 / Fig. 1:
+        // FP > BinaryConnect > BinaryNet > B⊕LD+BN > B⊕LD.
+        for hw in [ascend(), v100()] {
+            let shapes = vgg_small_shapes(100);
+            let e = |m| network_energy(&shapes, &hw, m, true).total_pj();
+            let fp = e(Method::Fp32);
+            let bc = e(Method::BinaryConnect);
+            let bn = e(Method::BinaryNet);
+            let bold = e(Method::Bold);
+            let bold_bn = e(Method::BoldBn);
+            assert!(bc < fp, "{}: BinaryConnect {bc} < FP {fp}", hw.name);
+            assert!(bn < bc, "{}: BinaryNet {bn} < BinaryConnect {bc}", hw.name);
+            assert!(bold < bn, "{}: B⊕LD {bold} < BinaryNet {bn}", hw.name);
+            assert!(bold < bold_bn, "{}: BN costs extra", hw.name);
+            assert!(bold_bn < bn, "{}: even with BN, B⊕LD beats BinaryNet", hw.name);
+            // and the headline claim: an order of magnitude vs FP
+            assert!(bold < fp / 8.0, "{}: bold {bold} vs fp {fp}", hw.name);
+        }
+    }
+
+    #[test]
+    fn inference_cheaper_than_training() {
+        let hw = v100();
+        let shapes = vgg_small_shapes(100);
+        for m in Method::all() {
+            let inf = network_energy(&shapes, &hw, m, false).total_pj();
+            let tr = network_energy(&shapes, &hw, m, true).total_pj();
+            assert!(tr > 2.0 * inf, "{m:?}");
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Loop-tiling search (Algorithm 9, Table 17): choose per-level tile
+//! sizes (M_i filters, N_i batch, H_i×W_i ifmap plane) under the buffer
+//! capacity constraint, minimizing the data-movement energy of the
+//! weight-stationary / input-cycling dataflow (Algorithm 10).
+//!
+//! The paper notes the exact problem is NP-hard; like the paper we search
+//! a structured candidate set — halving ladders per dimension — which
+//! preserves the qualitative behaviour (large buffers → big tiles → few
+//! re-fetches) at tractable cost.
+
+use super::hardware::Hardware;
+use super::layer_cost::ConvShape;
+
+/// Tile parameters at one memory level (Table 17 row).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LevelTile {
+    pub m: usize,
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+/// Chosen tiles for every level below DRAM (levels\[1..\]).
+#[derive(Debug, Clone)]
+pub struct Tiling {
+    pub tiles: Vec<LevelTile>,
+}
+
+impl Tiling {
+    /// Tile at hierarchy level `lvl` (0 = DRAM = full tensor).
+    pub fn at(&self, shape: &ConvShape, lvl: usize) -> LevelTile {
+        if lvl == 0 {
+            LevelTile { m: shape.m, n: shape.n, h: shape.h, w: shape.w }
+        } else {
+            self.tiles[lvl - 1]
+        }
+    }
+}
+
+/// Halving ladder {v, ⌈v/2⌉, …, 1}, deduped.
+fn ladder(v: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut x = v.max(1);
+    loop {
+        out.push(x);
+        if x == 1 {
+            break;
+        }
+        x = x.div_ceil(2);
+    }
+    out.dedup();
+    out
+}
+
+/// Bytes needed at a level for a tile (Eq. 50): IFMAPS + FILTERS.
+fn tile_bytes(shape: &ConvShape, t: &LevelTile, bits_i: u32, bits_f: u32) -> f64 {
+    let q_i = (t.n * shape.c * t.h * t.w) as f64 * bits_i as f64 / 8.0;
+    let q_f = (t.m * shape.c * shape.k * shape.k) as f64 * bits_f as f64 / 8.0;
+    q_i + q_f
+}
+
+/// Output-tile height for an input-tile height (same stride/kernel).
+pub fn out_dim(in_dim: usize, k: usize, stride: usize) -> usize {
+    if in_dim < k {
+        1
+    } else {
+        (in_dim - k) / stride + 1
+    }
+}
+
+/// Per-level movement-cost proxy used by the greedy search (the ε_i term
+/// of Algorithm 9 line 9): accesses from the parent level for this tile
+/// choice, costed at the parent's per-byte energy.
+fn level_cost(
+    shape: &ConvShape,
+    parent: &LevelTile,
+    tile: &LevelTile,
+    parent_pj: f64,
+    bits_i: u32,
+    bits_f: u32,
+) -> f64 {
+    // IFMAPS re-fetched once per filter block of the parent (Alg. 10):
+    let refetch_i = (parent.m as f64 / tile.m as f64).ceil();
+    // halo overlap: tiles of H_i cover H with overlap k−1
+    let oh_t = out_dim(tile.h, shape.k, shape.stride).max(1);
+    let ow_t = out_dim(tile.w, shape.k, shape.stride).max(1);
+    let halo = (tile.h as f64 / oh_t as f64) * (tile.w as f64 / ow_t as f64);
+    let bytes_i = (parent.n * shape.c * parent.h * parent.w) as f64 * bits_i as f64 / 8.0;
+    // FILTERS re-fetched once per (batch × spatial) block of the parent:
+    let oh_p = out_dim(parent.h, shape.k, shape.stride).max(1);
+    let ow_p = out_dim(parent.w, shape.k, shape.stride).max(1);
+    let refetch_f = (parent.n as f64 / tile.n as f64).ceil()
+        * (oh_p as f64 / oh_t as f64).ceil()
+        * (ow_p as f64 / ow_t as f64).ceil();
+    let bytes_f = (parent.m * shape.c * shape.k * shape.k) as f64 * bits_f as f64 / 8.0;
+    (bytes_i * refetch_i * halo + bytes_f * refetch_f) * parent_pj
+}
+
+/// Algorithm 9: greedy per-level search over halving ladders.
+pub fn search_tiling(shape: &ConvShape, hw: &Hardware, bits_i: u32, bits_f: u32) -> Tiling {
+    let mut tiles = Vec::new();
+    let mut parent = LevelTile { m: shape.m, n: shape.n, h: shape.h, w: shape.w };
+    for lvl in 1..hw.n_levels() {
+        let cap = hw.levels[lvl].capacity as f64;
+        let parent_pj = hw.levels[lvl - 1].pj_per_byte;
+        let mut best: Option<(f64, LevelTile)> = None;
+        for &m in &ladder(parent.m) {
+            for &n in &ladder(parent.n) {
+                for &h in &ladder(parent.h) {
+                    for &w in &ladder(parent.w) {
+                        let t = LevelTile { m, n, h: h.max(shape.k.min(parent.h)), w: w.max(shape.k.min(parent.w)) };
+                        if tile_bytes(shape, &t, bits_i, bits_f) > cap {
+                            continue;
+                        }
+                        let cost = level_cost(shape, &parent, &t, parent_pj, bits_i, bits_f);
+                        if best.map_or(true, |(bc, _)| cost < bc) {
+                            best = Some((cost, t));
+                        }
+                    }
+                }
+            }
+        }
+        // Fall back to the minimal tile if nothing fits (tiny buffers).
+        let chosen = best.map(|(_, t)| t).unwrap_or(LevelTile {
+            m: 1,
+            n: 1,
+            h: shape.k.min(parent.h),
+            w: shape.k.min(parent.w),
+        });
+        tiles.push(chosen);
+        parent = chosen;
+    }
+    Tiling { tiles }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::hardware::{ascend, v100};
+
+    fn shape() -> ConvShape {
+        ConvShape { n: 32, c: 64, m: 128, h: 32, w: 32, k: 3, stride: 1, pad: 1 }
+    }
+
+    #[test]
+    fn tiles_respect_capacity() {
+        for hw in [ascend(), v100()] {
+            for bits in [(32, 32), (1, 1), (16, 1)] {
+                let t = search_tiling(&shape(), &hw, bits.0, bits.1);
+                for (lvl, tile) in t.tiles.iter().enumerate() {
+                    let cap = hw.levels[lvl + 1].capacity as f64;
+                    assert!(
+                        tile_bytes(&shape(), tile, bits.0, bits.1) <= cap,
+                        "{} level {} tile {:?} overflows",
+                        hw.name,
+                        lvl + 1,
+                        tile
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiles_shrink_monotonically() {
+        let hw = ascend();
+        let t = search_tiling(&shape(), &hw, 32, 32);
+        let mut prev = LevelTile { m: 128, n: 32, h: 32, w: 32 };
+        for tile in &t.tiles {
+            assert!(tile.m <= prev.m && tile.n <= prev.n && tile.h <= prev.h);
+            prev = *tile;
+        }
+    }
+
+    #[test]
+    fn binary_data_allows_bigger_tiles() {
+        // 1-bit streams fit 32× more data per buffer → innermost tile
+        // should hold at least as many elements as the 32-bit one.
+        let hw = v100();
+        let t32 = search_tiling(&shape(), &hw, 32, 32);
+        let t1 = search_tiling(&shape(), &hw, 1, 1);
+        let elems = |t: &LevelTile| t.m * t.n * t.h * t.w;
+        let last32 = t32.tiles.last().unwrap();
+        let last1 = t1.tiles.last().unwrap();
+        assert!(elems(last1) >= elems(last32), "{last1:?} vs {last32:?}");
+    }
+
+    #[test]
+    fn ladder_contains_extremes() {
+        let l = ladder(37);
+        assert_eq!(*l.first().unwrap(), 37);
+        assert_eq!(*l.last().unwrap(), 1);
+    }
+}

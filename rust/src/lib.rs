@@ -1,0 +1,32 @@
+//! # B⊕LD: Boolean Logic Deep Learning — full-system reproduction
+//!
+//! Reproduction of *B⊕LD: Boolean Logic Deep Learning* (Nguyen et al.,
+//! NeurIPS 2024): deep models with **native Boolean weights and
+//! activations**, trained directly in the Boolean domain by the *Boolean
+//! variation* calculus (§3.2) and the Boolean optimizer (§3.3) — no
+//! gradient descent, no FP latent weights.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! Layer map (three-layer rust+JAX architecture):
+//! * L3 — this crate: coordinator, native bit-packed training engine,
+//!   energy model, baselines, data pipeline, bench/report harness;
+//! * L2 — `python/compile/model.py`: jax Boolean train-step graphs, AOT
+//!   lowered to `artifacts/*.hlo.txt` (loaded by [`runtime`]);
+//! * L1 — `python/compile/kernels/`: Pallas xnor-popcount kernels.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod energy;
+pub mod logic;
+pub mod models;
+pub mod nn;
+pub mod optim;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+pub mod util;

@@ -1,0 +1,236 @@
+//! Three-valued logic 𝕄 = {T, 0, F} (Definition 3.1) and the numeric
+//! embedding/projection maps of Definition A.1:
+//!
+//! p : ℕ → 𝕃  projects a number onto its logic value (Definition 3.3),
+//! e : 𝕃 → ℕ  embeds T ↦ +1, 0 ↦ 0, F ↦ −1.
+//!
+//! Proposition A.2(2) makes (𝔹, xnor) ≅ ({±1}, ×): this isomorphism is the
+//! bridge between the bit-level engine (tensor::bitmatrix) and the ±1
+//! arithmetic used by the L2 jax graphs — tested below.
+
+/// Element of the three-valued logic 𝕄 (Definition 3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum B3 {
+    /// TRUE.
+    T,
+    /// The absorbing "no information" value adjoined to 𝔹.
+    Zero,
+    /// FALSE.
+    F,
+}
+
+pub use B3::{F, T};
+/// Convenience alias: `B3::Zero` under the paper's symbol `0`.
+pub const ZERO: B3 = B3::Zero;
+
+impl B3 {
+    /// Negation: ¬T = F, ¬F = T, ¬0 = 0 (Definition 3.1).
+    #[inline]
+    pub fn not(self) -> B3 {
+        match self {
+            T => F,
+            F => T,
+            B3::Zero => B3::Zero,
+        }
+    }
+
+    /// True iff the value is in 𝔹 (not the adjoined 0).
+    #[inline]
+    pub fn is_bool(self) -> bool {
+        !matches!(self, B3::Zero)
+    }
+
+    /// Magnitude |x| (Definition 3.4): 0 for 0, 1 otherwise.
+    #[inline]
+    pub fn magnitude(self) -> i32 {
+        if self.is_bool() { 1 } else { 0 }
+    }
+
+    /// XNOR in 𝕄: equality on 𝔹, 0 if either operand is 0 (Definition 3.1).
+    #[inline]
+    pub fn xnor(self, other: B3) -> B3 {
+        match (self, other) {
+            (B3::Zero, _) | (_, B3::Zero) => B3::Zero,
+            (a, b) if a == b => T,
+            _ => F,
+        }
+    }
+
+    /// XOR in 𝕄 (¬xnor on 𝔹, 0-absorbing).
+    #[inline]
+    pub fn xor(self, other: B3) -> B3 {
+        self.xnor(other).not()
+    }
+
+    /// AND in 𝕄.
+    #[inline]
+    pub fn and(self, other: B3) -> B3 {
+        match (self, other) {
+            (B3::Zero, _) | (_, B3::Zero) => B3::Zero,
+            (T, T) => T,
+            _ => F,
+        }
+    }
+
+    /// OR in 𝕄.
+    #[inline]
+    pub fn or(self, other: B3) -> B3 {
+        match (self, other) {
+            (B3::Zero, _) | (_, B3::Zero) => B3::Zero,
+            (F, F) => F,
+            _ => T,
+        }
+    }
+
+    /// Order relation of Definition 3.6 extended to 𝕄: F < 0 < T.
+    #[inline]
+    pub fn cmp_logic(self, other: B3) -> std::cmp::Ordering {
+        fn rank(x: B3) -> i32 {
+            match x {
+                F => -1,
+                B3::Zero => 0,
+                T => 1,
+            }
+        }
+        rank(self).cmp(&rank(other))
+    }
+
+    /// The variation δ(a → b) of Definition 3.7: T if b > a, 0 if equal,
+    /// F if b < a.
+    #[inline]
+    pub fn delta_to(self, b: B3) -> B3 {
+        match self.cmp_logic(b) {
+            std::cmp::Ordering::Less => T,    // b > a
+            std::cmp::Ordering::Equal => B3::Zero,
+            std::cmp::Ordering::Greater => F, // b < a
+        }
+    }
+}
+
+/// Embedding e : 𝕃 → ℕ of Definition A.1 — e(T)=+1, e(0)=0, e(F)=−1.
+#[inline]
+pub fn embed(x: B3) -> i32 {
+    match x {
+        T => 1,
+        B3::Zero => 0,
+        F => -1,
+    }
+}
+
+/// Projection p : ℕ → 𝕃 of Definition A.1 — sign of the number.
+#[inline]
+pub fn project(x: i32) -> B3 {
+    match x.cmp(&0) {
+        std::cmp::Ordering::Greater => T,
+        std::cmp::Ordering::Equal => B3::Zero,
+        std::cmp::Ordering::Less => F,
+    }
+}
+
+/// Mixed-type xnor of Definition 3.5: |c| = |a||b| and
+/// c_logic = xnor(a_logic, b_logic). With a Boolean operand the result is
+/// `e(a)·x` (Proposition A.3(1)); numeric×numeric degenerates to the
+/// product (Proposition A.3(2)).
+#[inline]
+pub fn mixed_xnor(a: B3, x: f32) -> f32 {
+    embed(a) as f32 * x
+}
+
+/// Mixed-type xor (Proposition A.3(5)): xor(a, x) = −xnor(a, x).
+#[inline]
+pub fn mixed_xor(a: B3, x: f32) -> f32 {
+    -mixed_xnor(a, x)
+}
+
+/// All three values, for exhaustive truth-table tests.
+pub const ALL3: [B3; 3] = [T, B3::Zero, F];
+/// The two Boolean values.
+pub const ALL2: [B3; 2] = [T, F];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn negation_table() {
+        assert_eq!(T.not(), F);
+        assert_eq!(F.not(), T);
+        assert_eq!(ZERO.not(), ZERO);
+    }
+
+    #[test]
+    fn xnor_restricted_to_bool_is_equality() {
+        for &a in &ALL2 {
+            for &b in &ALL2 {
+                assert_eq!(a.xnor(b), if a == b { T } else { F });
+            }
+        }
+    }
+
+    #[test]
+    fn zero_absorbs_all_connectives() {
+        for &a in &ALL3 {
+            assert_eq!(a.xnor(ZERO), ZERO);
+            assert_eq!(ZERO.xnor(a), ZERO);
+            assert_eq!(a.xor(ZERO), ZERO);
+            assert_eq!(a.and(ZERO), ZERO);
+            assert_eq!(a.or(ZERO), ZERO);
+        }
+    }
+
+    #[test]
+    fn embedding_isomorphism_prop_a2() {
+        // Prop A.2(2): e(xnor(a,b)) = e(a)·e(b) on all of 𝕄.
+        for &a in &ALL3 {
+            for &b in &ALL3 {
+                assert_eq!(embed(a.xnor(b)), embed(a) * embed(b), "{a:?} {b:?}");
+                // and xor is the negated product
+                assert_eq!(embed(a.xor(b)), -embed(a) * embed(b));
+            }
+        }
+    }
+
+    #[test]
+    fn projection_embedding_roundtrip() {
+        for &a in &ALL3 {
+            assert_eq!(project(embed(a)), a);
+        }
+        // Prop A.2(1): p(xy) = xnor(p(x), p(y)).
+        for x in -3..=3 {
+            for y in -3..=3 {
+                assert_eq!(project(x * y), project(x).xnor(project(y)));
+            }
+        }
+    }
+
+    #[test]
+    fn variation_definition_3_7() {
+        assert_eq!(F.delta_to(T), T);
+        assert_eq!(T.delta_to(F), F);
+        assert_eq!(T.delta_to(T), ZERO);
+        assert_eq!(F.delta_to(F), ZERO);
+    }
+
+    #[test]
+    fn mixed_type_ops_prop_a3() {
+        let sign3 = |v: f32| project(if v > 0.0 { 1 } else if v < 0.0 { -1 } else { 0 });
+        for &a in &ALL3 {
+            for x in [-2.5f32, -1.0, 0.0, 0.5, 3.0] {
+                let v = mixed_xnor(a, x);
+                // Definition 3.5: |c| = |a||x| and c_logic = xnor(a_logic, x_logic).
+                assert_eq!(v.abs(), a.magnitude() as f32 * x.abs());
+                assert_eq!(sign3(v), a.xnor(sign3(x)), "logic value of mixed xnor");
+                // Prop A.3(5): xor = −xnor.
+                assert_eq!(mixed_xor(a, x), -v);
+            }
+        }
+    }
+
+    #[test]
+    fn order_relation() {
+        assert!(F.cmp_logic(T).is_lt());
+        assert!(T.cmp_logic(F).is_gt());
+        assert!(ZERO.cmp_logic(T).is_lt());
+        assert!(F.cmp_logic(ZERO).is_lt());
+    }
+}

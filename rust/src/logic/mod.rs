@@ -1,0 +1,15 @@
+//! The paper's mathematical foundation (§3.2, Appendix A.1):
+//! three-valued logic 𝕄 = 𝔹 ∪ {0}, mixed-type connectives, the Boolean
+//! *variation* δ and the variation calculus with its chain rules
+//! (Theorem 3.11, Propositions A.2–A.6).
+//!
+//! This module is the executable form of the math: every definition and
+//! theorem in Appendix A.1 has a direct counterpart here, and the unit /
+//! property tests check the theorem statements on exhaustive or random
+//! inputs (including the Table 8 truth table).
+
+mod bool3;
+mod variation;
+
+pub use bool3::{embed, mixed_xnor, mixed_xor, project, B3, ALL2, ALL3, F, T, ZERO};
+pub use variation::{chain_bb, chain_bz, variation, variation_multi, BoolFn};

@@ -1,0 +1,233 @@
+//! The variation calculus (Definitions 3.7–3.12, Theorem 3.11,
+//! Propositions A.4–A.6) over function *tables*, so the chain rules can be
+//! checked on arbitrary Boolean functions — this is the machinery behind
+//! the property tests that validate the paper's math, and the formal
+//! justification for the closed-form backward rules used by `nn::`.
+
+use super::bool3::{B3, F, T};
+
+/// A univariate function 𝔹 → 𝕄 represented by its value table
+/// (`at_t` = f(T), `at_f` = f(F)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BoolFn {
+    pub at_t: B3,
+    pub at_f: B3,
+}
+
+impl BoolFn {
+    pub fn new(at_t: B3, at_f: B3) -> Self {
+        BoolFn { at_t, at_f }
+    }
+
+    #[inline]
+    pub fn eval(&self, x: B3) -> B3 {
+        match x {
+            T => self.at_t,
+            F => self.at_f,
+            B3::Zero => B3::Zero,
+        }
+    }
+
+    /// Pointwise negation ¬f.
+    pub fn not(&self) -> BoolFn {
+        BoolFn::new(self.at_t.not(), self.at_f.not())
+    }
+
+    /// Composition g ∘ f for f, g : 𝔹 → 𝔹.
+    pub fn compose(&self, g: &BoolFn) -> BoolFn {
+        BoolFn::new(g.eval(self.at_t), g.eval(self.at_f))
+    }
+
+    /// All 9 functions 𝔹 → 𝕄 (and the 4 with range 𝔹 among them).
+    pub fn all_m() -> Vec<BoolFn> {
+        use super::bool3::ALL3;
+        let mut v = Vec::new();
+        for &a in &ALL3 {
+            for &b in &ALL3 {
+                v.push(BoolFn::new(a, b));
+            }
+        }
+        v
+    }
+
+    /// All 4 functions 𝔹 → 𝔹.
+    pub fn all_b() -> Vec<BoolFn> {
+        use super::bool3::ALL2;
+        let mut v = Vec::new();
+        for &a in &ALL2 {
+            for &b in &ALL2 {
+                v.push(BoolFn::new(a, b));
+            }
+        }
+        v
+    }
+}
+
+/// The variation f'(x) of Definition 3.8:
+/// f'(x) = xnor(δ(x → ¬x), δf(x → ¬x)).
+pub fn variation(f: &BoolFn, x: B3) -> B3 {
+    if !x.is_bool() {
+        return B3::Zero;
+    }
+    let dx = x.delta_to(x.not());
+    let df = f.eval(x).delta_to(f.eval(x.not()));
+    dx.xnor(df)
+}
+
+/// Partial variation of a multivariate f : 𝔹ⁿ → 𝕄 w.r.t. coordinate `i`
+/// (Definition 3.12), with `f` given as a closure over the full input.
+pub fn variation_multi<Fn_: Fn(&[B3]) -> B3>(f: Fn_, x: &[B3], i: usize) -> B3 {
+    let xi = x[i];
+    if !xi.is_bool() {
+        return B3::Zero;
+    }
+    let mut xneg = x.to_vec();
+    xneg[i] = xi.not();
+    let dx = xi.delta_to(xi.not());
+    let df = f(x).delta_to(f(&xneg));
+    dx.xnor(df)
+}
+
+/// Chain rule for 𝔹 → 𝔹 → 𝕄 (Theorem 3.11(4) / Proposition A.6(1)):
+/// (g ∘ f)'(x) = xnor(g'(f(x)), f'(x)).
+pub fn chain_bb(f: &BoolFn, g: &BoolFn, x: B3) -> B3 {
+    variation(g, f.eval(x)).xnor(variation(f, x))
+}
+
+/// Chain rule for 𝔹 → ℤ → 𝕄 (Theorem 3.11(5) / Proposition A.6(2)).
+///
+/// `f` is given by its two integer values, `g'` by a closure returning the
+/// ℤ-variation g'(z) = δg(z → z+1) (Definition 3.10). The theorem requires
+/// |f'(x)| ≤ 1 and g'(f(x)) = g'(f(x)−1); the caller is responsible for
+/// checking applicability (the tests verify the conclusion under it).
+pub fn chain_bz<G: Fn(i64) -> B3>(f_t: i64, f_f: i64, g_var: G, x: B3) -> B3 {
+    let fx = match x {
+        T => f_t,
+        F => f_f,
+        B3::Zero => return B3::Zero,
+    };
+    // f'(x) in ℤ-embedded form: xnor(δ(x→¬x), f(¬x) − f(x)).
+    let fnx = match x {
+        T => f_f,
+        F => f_t,
+        B3::Zero => unreachable!(),
+    };
+    let dxe: i64 = match x {
+        T => -1, // δ(T→F) = F
+        F => 1,  // δ(F→T) = T
+        B3::Zero => unreachable!(),
+    };
+    let fprime = dxe * (fnx - fx);
+    let fp_logic = super::bool3::project(fprime.clamp(-1, 1) as i32);
+    g_var(fx).xnor(fp_logic)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::bool3::{embed, ALL2};
+
+    /// Table 8 of the paper: f(x) = xor(a, x) has f'(x) = ¬a.
+    #[test]
+    fn table8_xor_variation() {
+        for &a in &ALL2 {
+            let f = BoolFn::new(T.xor(a), F.xor(a));
+            for &x in &ALL2 {
+                assert_eq!(variation(&f, x), a.not(), "a={a:?} x={x:?}");
+            }
+        }
+    }
+
+    /// Example 3.14: xnor(x, a)' = a (via Theorem 3.11(1)).
+    #[test]
+    fn xnor_variation_is_a() {
+        for &a in &ALL2 {
+            let f = BoolFn::new(T.xnor(a), F.xnor(a));
+            for &x in &ALL2 {
+                assert_eq!(variation(&f, x), a);
+            }
+        }
+    }
+
+    /// Theorem 3.11(1): (¬f)' = ¬f', exhaustively over all f : 𝔹 → 𝔹.
+    #[test]
+    fn negation_rule_exhaustive() {
+        for f in BoolFn::all_b() {
+            for &x in &ALL2 {
+                assert_eq!(variation(&f.not(), x), variation(&f, x).not());
+            }
+        }
+    }
+
+    /// Theorem 3.11(4): chain rule over all 16 pairs (f, g) of 𝔹 → 𝔹.
+    #[test]
+    fn chain_rule_bb_exhaustive() {
+        for f in BoolFn::all_b() {
+            for g in BoolFn::all_b() {
+                for &x in &ALL2 {
+                    let lhs = variation(&f.compose(&g), x);
+                    let rhs = chain_bb(&f, &g, x);
+                    assert_eq!(lhs, rhs, "f={f:?} g={g:?} x={x:?}");
+                }
+            }
+        }
+    }
+
+    /// Proposition A.4(1): δf(x → y) = xnor(δ(x → y), f'(x)).
+    #[test]
+    fn delta_f_identity() {
+        for f in BoolFn::all_b() {
+            for &x in &ALL2 {
+                for &y in &ALL2 {
+                    let lhs = f.eval(x).delta_to(f.eval(y));
+                    let rhs = x.delta_to(y).xnor(variation(&f, x));
+                    assert_eq!(lhs, rhs);
+                }
+            }
+        }
+    }
+
+    /// Definition 3.12 partial variation on a concrete 3-input majority.
+    #[test]
+    fn multivariate_majority_variation() {
+        let maj = |xs: &[B3]| -> B3 {
+            let s: i32 = xs.iter().map(|&b| embed(b)).sum();
+            crate::logic::bool3::project(s)
+        };
+        // If the other two disagree, x_i decides: variation is T
+        // (the output moves with x_i).
+        assert_eq!(variation_multi(maj, &[T, T, F], 0), T);
+        assert_eq!(variation_multi(maj, &[F, F, T], 0), T);
+        // If the other two agree, flipping x_i cannot change the output: 0.
+        assert_eq!(variation_multi(maj, &[T, T, F], 2), B3::Zero);
+        assert_eq!(variation_multi(maj, &[T, F, F], 0), B3::Zero);
+    }
+
+    /// Theorem 3.11(5) on g(z) = z (identity, g' ≡ T) and f counting-like.
+    #[test]
+    fn chain_rule_bz() {
+        // f: T ↦ 3, F ↦ 2 (|f'| = 1), g' ≡ T (monotone increasing g).
+        let got = chain_bz(3, 2, |_| T, T);
+        // f'(T) = xnor(δ(T→F), 2−3) = xnor(F, F-ish) ... direct: f
+        // decreases when x decreases: same direction ⇒ f' = T; chain = T.
+        assert_eq!(got, T);
+        // Decreasing g (g' ≡ F) flips the sign.
+        assert_eq!(chain_bz(3, 2, |_| F, T), F);
+        // Constant f (f' = 0) kills the variation.
+        assert_eq!(chain_bz(5, 5, |_| T, T), B3::Zero);
+    }
+
+    /// Embedded-domain consistency: e(f'(x)) equals the sign of the
+    /// discrete derivative of e∘f in the direction of increasing e(x).
+    #[test]
+    fn variation_matches_embedded_slope() {
+        for f in BoolFn::all_b() {
+            // slope = (e(f(T)) − e(f(F))) / (e(T) − e(F)) ∈ {−1, 0, 1}
+            let slope = (embed(f.at_t) - embed(f.at_f)) / 2;
+            for &x in &ALL2 {
+                assert_eq!(embed(variation(&f, x)), slope.signum() * slope.abs(),
+                    "f={f:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,302 @@
+//! `bold` — launcher CLI for the B⊕LD reproduction.
+//!
+//! Subcommands:
+//!   train   [--config FILE] [--model M] [--method M] [--steps N] …
+//!   report  <fig1|table2|…|all> [--quick]
+//!   energy  [--arch vgg|resnet] [--base N] [--batch N]
+//!   serve   [--artifacts DIR]          (PJRT inference demo)
+//!   info                               (build + artifact status)
+
+use bold::config::TrainConfig;
+use bold::coordinator::{save_model, ClassifierTrainer, MetricLog, ParallelTrainer};
+use bold::data::ImageDataset;
+use bold::energy::{network_energy, resnet18_shapes, vgg_small_shapes, Method};
+use bold::models::{boolean_mlp, resnet_boolean, vgg_small, MlpConfig, ResNetConfig, VggConfig, VggKind};
+use bold::nn::Layer;
+use bold::util::Rng;
+
+fn usage() -> ! {
+    eprintln!(
+        r#"bold — Boolean Logic Deep Learning (NeurIPS 2024 reproduction)
+
+USAGE:
+  bold train  [--config FILE] [--model mlp|vgg|resnet] [--method bold|bold_bn|fp|binaryconnect|binarynet|xnornet]
+              [--steps N] [--batch N] [--lr_bool X] [--lr_fp X] [--workers N] [--seed N]
+              [--ckpt PATH] [--metrics CSV]
+  bold report <{reports}|all> [--quick]
+  bold energy [--arch vgg|resnet] [--base N] [--batch N] [--inference]
+  bold serve  [--artifacts DIR]
+  bold info
+"#,
+        reports = bold::report::ALL_REPORTS.join("|")
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let rest = &args[1..];
+    let result = match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "report" => cmd_report(rest),
+        "energy" => cmd_energy(rest),
+        "serve" => cmd_serve(rest),
+        "info" => cmd_info(),
+        "-h" | "--help" | "help" => usage(),
+        other => {
+            eprintln!("unknown command '{other}'");
+            usage()
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+/// Parse `--key value` pairs into a map; returns (flags, positional).
+fn parse_kv(args: &[String]) -> Result<(Vec<(String, String)>, Vec<String>), String> {
+    let mut kv = Vec::new();
+    let mut pos = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if key == "quick" || key == "inference" {
+                kv.push((key.to_string(), "true".to_string()));
+                i += 1;
+            } else {
+                let val = args.get(i + 1).ok_or_else(|| format!("--{key} needs a value"))?;
+                kv.push((key.to_string(), val.clone()));
+                i += 2;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    Ok((kv, pos))
+}
+
+fn cmd_train(args: &[String]) -> Result<(), String> {
+    let (kv, _pos) = parse_kv(args)?;
+    let mut cfg = TrainConfig::default();
+    let mut ckpt: Option<String> = None;
+    let mut metrics_path: Option<String> = None;
+    for (k, v) in &kv {
+        match k.as_str() {
+            "config" => cfg = TrainConfig::from_file(v).map_err(|e| e.to_string())?,
+            _ => {}
+        }
+    }
+    for (k, v) in &kv {
+        match k.as_str() {
+            "config" => {}
+            "ckpt" => ckpt = Some(v.clone()),
+            "metrics" => metrics_path = Some(v.clone()),
+            _ => cfg.apply_override(k, v).map_err(|e| e.to_string())?,
+        }
+    }
+    println!("config: {cfg:?}");
+    let mut log = MetricLog::new();
+
+    let report = match cfg.model.as_str() {
+        "mlp" => {
+            let (train, val) =
+                ImageDataset::mnist_like(cfg.train_size + cfg.val_size, cfg.classes, 256, 0.08, cfg.seed)
+                    .split(cfg.train_size);
+            let mcfg = MlpConfig { d_in: 256, hidden: vec![128, 64], d_out: cfg.classes, tanh_scale: true };
+            if cfg.workers > 1 {
+                let mcfg2 = mcfg.clone();
+                let mut pt = ParallelTrainer::new(cfg.workers, &cfg, move |seed| {
+                    boolean_mlp(&mcfg2, &mut Rng::new(seed))
+                });
+                let r = pt.fit(&train, &val, &cfg, true);
+                if let Some(p) = &ckpt {
+                    save_model(pt.leader(), p).map_err(|e| e.to_string())?;
+                }
+                r
+            } else {
+                let mut model = boolean_mlp(&mcfg, &mut Rng::new(cfg.seed));
+                let mut tr = ClassifierTrainer::new(&cfg);
+                let r = tr.fit(&mut model, &train, &val, &cfg, true);
+                if let Some(p) = &ckpt {
+                    save_model(&mut model, p).map_err(|e| e.to_string())?;
+                }
+                r
+            }
+        }
+        "vgg" => {
+            let (train, val) =
+                ImageDataset::cifar_like(cfg.train_size + cfg.val_size, cfg.classes, 3, cfg.hw, 0.25, cfg.seed)
+                    .split(cfg.train_size);
+            let kind = if cfg.method == "fp" { VggKind::Fp } else { VggKind::Bold };
+            let vcfg = VggConfig {
+                kind,
+                hw: cfg.hw,
+                width_mult: cfg.width_mult,
+                classes: cfg.classes,
+                with_bn: cfg.method == "bold_bn",
+                ..Default::default()
+            };
+            let mut model = match cfg.method.as_str() {
+                "binaryconnect" => bold::baselines::bnn_vgg_small(
+                    bold::baselines::BnnKind::BinaryConnect, &vcfg, &mut Rng::new(cfg.seed)),
+                "binarynet" => bold::baselines::bnn_vgg_small(
+                    bold::baselines::BnnKind::BinaryNet, &vcfg, &mut Rng::new(cfg.seed)),
+                "xnornet" => bold::baselines::bnn_vgg_small(
+                    bold::baselines::BnnKind::XnorNet, &vcfg, &mut Rng::new(cfg.seed)),
+                _ => vgg_small(&vcfg, &mut Rng::new(cfg.seed)),
+            };
+            let mut tr = ClassifierTrainer::new(&cfg);
+            let r = tr.fit(&mut model, &train, &val, &cfg, true);
+            if let Some(p) = &ckpt {
+                save_model(&mut model, p).map_err(|e| e.to_string())?;
+            }
+            r
+        }
+        "resnet" => {
+            let (train, val) =
+                ImageDataset::cifar_like(cfg.train_size + cfg.val_size, cfg.classes, 3, cfg.hw, 0.25, cfg.seed)
+                    .split(cfg.train_size);
+            let rcfg = ResNetConfig {
+                base: ((16.0 * cfg.width_mult * 8.0) as usize).max(4),
+                blocks: vec![2, 2],
+                hw: cfg.hw,
+                classes: cfg.classes,
+                ..Default::default()
+            };
+            let mut model = resnet_boolean(&rcfg, &mut Rng::new(cfg.seed));
+            let mut tr = ClassifierTrainer::new(&cfg);
+            let r = tr.fit(&mut model, &train, &val, &cfg, true);
+            if let Some(p) = &ckpt {
+                save_model(&mut model, p).map_err(|e| e.to_string())?;
+            }
+            r
+        }
+        other => return Err(format!("unknown model '{other}' (mlp|vgg|resnet)")),
+    };
+
+    for (i, &l) in report.losses.iter().enumerate() {
+        log.push("loss", i, l as f64);
+    }
+    for (i, &a) in report.train_acc.iter().enumerate() {
+        log.push("train_acc", i, a as f64);
+    }
+    for (i, &f) in report.flip_rates.iter().enumerate() {
+        log.push("flip_rate", i, f as f64);
+    }
+    println!(
+        "done: final loss {:.4}, val acc {:.2}%",
+        report.tail_loss(10),
+        report.val_acc * 100.0
+    );
+    if let Some(p) = metrics_path {
+        log.write_csv(&p).map_err(|e| e.to_string())?;
+        println!("metrics written to {p}");
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &[String]) -> Result<(), String> {
+    let (kv, pos) = parse_kv(args)?;
+    let quick = kv.iter().any(|(k, _)| k == "quick");
+    let id = pos.first().map(String::as_str).unwrap_or("all");
+    bold::report::run(id, quick)
+}
+
+fn cmd_energy(args: &[String]) -> Result<(), String> {
+    let (kv, _) = parse_kv(args)?;
+    let mut arch = "vgg".to_string();
+    let mut base = 64usize;
+    let mut batch = 100usize;
+    let mut train = true;
+    for (k, v) in &kv {
+        match k.as_str() {
+            "arch" => arch = v.clone(),
+            "base" => base = v.parse().map_err(|_| "bad --base")?,
+            "batch" => batch = v.parse().map_err(|_| "bad --batch")?,
+            "inference" => train = false,
+            _ => return Err(format!("unknown option --{k}")),
+        }
+    }
+    let shapes = match arch.as_str() {
+        "vgg" => vgg_small_shapes(batch),
+        "resnet" => resnet18_shapes(batch, base),
+        other => return Err(format!("unknown arch '{other}'")),
+    };
+    for hw in [bold::energy::ASCEND(), bold::energy::V100()] {
+        println!(
+            "--- {} / {} (batch {batch}{}) — {}",
+            hw.name,
+            arch,
+            if arch == "resnet" { format!(", base {base}") } else { String::new() },
+            if train { "1 training iteration" } else { "inference" }
+        );
+        let fp = network_energy(&shapes, &hw, Method::Fp32, train).total_pj();
+        println!(
+            "{:<18} {:>14} {:>10} {:>10} {:>10} {:>9}",
+            "method", "total (µJ)", "compute%", "memory%", "optim%", "vs FP%"
+        );
+        for m in Method::all() {
+            let e = network_energy(&shapes, &hw, m, train);
+            let t = e.total_pj();
+            println!(
+                "{:<18} {:>14.1} {:>10.1} {:>10.1} {:>10.1} {:>9.2}",
+                m.name(),
+                t / 1e6,
+                e.compute_pj / t * 100.0,
+                e.mem_pj / t * 100.0,
+                e.optimizer_pj / t * 100.0,
+                t / fp * 100.0
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<(), String> {
+    let (kv, _) = parse_kv(args)?;
+    let dir = kv
+        .iter()
+        .find(|(k, _)| k == "artifacts")
+        .map(|(_, v)| v.clone())
+        .unwrap_or_else(|| "artifacts".to_string());
+    let exec = bold::runtime::PjrtExecutor::load_dir(&dir).map_err(|e| format!("{e:#}"))?;
+    println!("PJRT platform: {}", exec.platform());
+    println!("compiled entries: {:?}", exec.entries());
+    // demo: run the MLP inference artifact on random ±1 inputs
+    let mut rng = Rng::new(0);
+    let x = bold::tensor::Tensor::rand_pm1(&[128, 784], &mut rng);
+    let w1 = bold::tensor::Tensor::rand_pm1(&[512, 784], &mut rng);
+    let w2 = bold::tensor::Tensor::rand_pm1(&[256, 512], &mut rng);
+    let wfc = bold::tensor::Tensor::randn(&[10, 256], 0.05, &mut rng);
+    let bfc = bold::tensor::Tensor::zeros(&[10]);
+    let t0 = std::time::Instant::now();
+    let out = exec
+        .execute("bool_mlp_infer", &[x, w1, w2, wfc, bfc])
+        .map_err(|e| format!("{e:#}"))?;
+    println!(
+        "bool_mlp_infer: logits {:?} in {:.2} ms",
+        out[0].shape,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<(), String> {
+    println!("bold {} — B⊕LD reproduction", env!("CARGO_PKG_VERSION"));
+    let artifacts = std::path::Path::new("artifacts");
+    if artifacts.exists() {
+        let entries: Vec<String> = std::fs::read_dir(artifacts)
+            .map_err(|e| e.to_string())?
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".hlo.txt"))
+            .collect();
+        println!("artifacts: {entries:?}");
+    } else {
+        println!("artifacts: none (run `make artifacts`)");
+    }
+    Ok(())
+}

@@ -1,0 +1,399 @@
+//! Boolean BERT-mini (paper §4.3 "BERT fine-tuning for NLU", Table 7).
+//!
+//! Transformer encoder in the paper's Boolean regime: the Q/K/V/output and
+//! FFN projections are native Boolean layers (1-bit weights, 1-bit
+//! activations via the threshold activation), while softmax attention,
+//! LayerNorm, embeddings and the classifier head stay FP — mirroring how
+//! the paper's Boolean BERT keeps the non-linear transformer core in FP
+//! and swaps the arithmetic-heavy linear layers to Boolean logic.
+//!
+//! Single-head, explicit backward: the closed-form softmax-attention
+//! adjoint composed with the Boolean variation backward of the
+//! projections — the Theorem 3.11 chain rules applied across module
+//! boundaries (Fig. 2's mixed ℝ/𝔹 backpropagation).
+
+use crate::nn::{
+    softmax_cross_entropy, BackwardScale, BoolLinear, Layer, LayerNorm, Linear, LossOut,
+    ParamRef, ThresholdAct, Value,
+};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct BertConfig {
+    pub vocab: usize,
+    pub max_len: usize,
+    pub d: usize,
+    pub ff: usize,
+    pub layers: usize,
+    pub classes: usize,
+}
+
+impl Default for BertConfig {
+    fn default() -> Self {
+        BertConfig { vocab: 64, max_len: 16, d: 32, ff: 64, layers: 2, classes: 2 }
+    }
+}
+
+struct EncoderLayer {
+    ln1: LayerNorm,
+    act_attn: ThresholdAct,
+    q: BoolLinear,
+    k: BoolLinear,
+    v: BoolLinear,
+    o: BoolLinear,
+    act_o: ThresholdAct,
+    ln2: LayerNorm,
+    act_ff: ThresholdAct,
+    ff1: BoolLinear,
+    act_mid: ThresholdAct,
+    ff2: BoolLinear,
+    d: usize,
+    // attention caches: per batch sample (L×L) attention + Q/K/V (N·L × d)
+    cache: Option<AttnCache>,
+}
+
+struct AttnCache {
+    n: usize,
+    l: usize,
+    q: Tensor,
+    k: Tensor,
+    v: Tensor,
+    attn: Vec<Tensor>, // per-sample (L×L) post-softmax
+}
+
+impl EncoderLayer {
+    fn new(name: &str, cfg: &BertConfig, rng: &mut Rng) -> Self {
+        let d = cfg.d;
+        let mk_act = |n: String, fanin: usize| {
+            ThresholdAct::new(&n, 0.0, BackwardScale::TanhPrime { fanin })
+        };
+        EncoderLayer {
+            ln1: LayerNorm::new(&format!("{name}.ln1"), d),
+            act_attn: mk_act(format!("{name}.act_attn"), d),
+            q: BoolLinear::new(&format!("{name}.q"), d, d, rng),
+            k: BoolLinear::new(&format!("{name}.k"), d, d, rng),
+            v: BoolLinear::new(&format!("{name}.v"), d, d, rng),
+            o: BoolLinear::new(&format!("{name}.o"), d, d, rng),
+            act_o: mk_act(format!("{name}.act_o"), d),
+            ln2: LayerNorm::new(&format!("{name}.ln2"), d),
+            act_ff: mk_act(format!("{name}.act_ff"), d),
+            ff1: BoolLinear::new(&format!("{name}.ff1"), d, cfg.ff, rng),
+            act_mid: mk_act(format!("{name}.act_mid"), cfg.ff),
+            ff2: BoolLinear::new(&format!("{name}.ff2"), cfg.ff, d, rng),
+            d,
+            cache: None,
+        }
+    }
+
+    /// h: (N·L × d). Returns the transformed hidden states.
+    fn fwd(&mut self, h: &Tensor, n: usize, l: usize, train: bool) -> Tensor {
+        let d = self.d;
+        // --- attention sublayer ---
+        let a = self.ln1.fwd(h, train);
+        let a_bits = self.act_attn.forward(Value::F32(a), train);
+        let q = self.q.forward(a_bits.clone(), train).expect_f32("q");
+        let k = self.k.forward(a_bits.clone(), train).expect_f32("k");
+        let v = self.v.forward(a_bits, train).expect_f32("v");
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut ctx = Tensor::zeros(&[n * l, d]);
+        let mut attns = Vec::with_capacity(n);
+        for ni in 0..n {
+            let qs = Tensor::from_vec(&[l, d], q.data[ni * l * d..(ni + 1) * l * d].to_vec());
+            let ks = Tensor::from_vec(&[l, d], k.data[ni * l * d..(ni + 1) * l * d].to_vec());
+            let vs = Tensor::from_vec(&[l, d], v.data[ni * l * d..(ni + 1) * l * d].to_vec());
+            let mut scores = qs.matmul_bt(&ks);
+            scores.scale_inplace(scale);
+            // row softmax
+            for i in 0..l {
+                let row = &mut scores.data[i * l..(i + 1) * l];
+                let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let mut z = 0.0;
+                for r in row.iter_mut() {
+                    *r = (*r - mx).exp();
+                    z += *r;
+                }
+                for r in row.iter_mut() {
+                    *r /= z;
+                }
+            }
+            let c = scores.matmul(&vs);
+            ctx.data[ni * l * d..(ni + 1) * l * d].copy_from_slice(&c.data);
+            attns.push(scores);
+        }
+        let ctx_bits = self.act_o.forward(Value::F32(ctx), train);
+        let attn_out = self.o.forward(ctx_bits, train).expect_f32("o");
+        let h1 = h.add(&attn_out); // residual
+
+        // --- FFN sublayer ---
+        let a2 = self.ln2.fwd(&h1, train);
+        let a2_bits = self.act_ff.forward(Value::F32(a2), train);
+        let m = self.ff1.forward(a2_bits, train).expect_f32("ff1");
+        let m_bits = self.act_mid.forward(Value::F32(m), train);
+        let ff_out = self.ff2.forward(m_bits, train).expect_f32("ff2");
+        let out = h1.add(&ff_out);
+
+        if train {
+            self.cache = Some(AttnCache { n, l, q, k, v, attn: attns });
+        }
+        out
+    }
+
+    /// z: (N·L × d) downstream signal; returns signal w.r.t. the input h.
+    fn bwd(&mut self, z: &Tensor) -> Tensor {
+        let cache = self.cache.take().expect("backward before forward");
+        let (n, l, d) = (cache.n, cache.l, self.d);
+        let scale = 1.0 / (d as f32).sqrt();
+
+        // --- FFN sublayer backward (residual splits the signal) ---
+        let g_ff2 = self.ff2.backward(z.clone());
+        let g_mid = self.act_mid.backward(g_ff2);
+        let g_ff1 = self.ff1.backward(g_mid);
+        let g_a2 = self.act_ff.backward(g_ff1);
+        let g_h1 = z.add(&self.ln2.bwd(&g_a2));
+
+        // --- attention sublayer backward ---
+        let g_o = self.o.backward(g_h1.clone());
+        let g_ctx = self.act_o.backward(g_o);
+        let mut g_q = Tensor::zeros(&[n * l, d]);
+        let mut g_k = Tensor::zeros(&[n * l, d]);
+        let mut g_v = Tensor::zeros(&[n * l, d]);
+        for ni in 0..n {
+            let span = ni * l * d..(ni + 1) * l * d;
+            let dctx = Tensor::from_vec(&[l, d], g_ctx.data[span.clone()].to_vec());
+            let qs = Tensor::from_vec(&[l, d], cache.q.data[span.clone()].to_vec());
+            let ks = Tensor::from_vec(&[l, d], cache.k.data[span.clone()].to_vec());
+            let vs = Tensor::from_vec(&[l, d], cache.v.data[span.clone()].to_vec());
+            let a = &cache.attn[ni];
+            // dV = Aᵀ dctx;  dA = dctx Vᵀ
+            let dv = a.matmul_at(&dctx);
+            let da = dctx.matmul_bt(&vs);
+            // softmax backward: dS = A ⊙ (dA − rowsum(dA ⊙ A))
+            let mut ds = Tensor::zeros(&[l, l]);
+            for i in 0..l {
+                let arow = &a.data[i * l..(i + 1) * l];
+                let darow = &da.data[i * l..(i + 1) * l];
+                let dot: f32 = arow.iter().zip(darow).map(|(x, y)| x * y).sum();
+                for j in 0..l {
+                    ds.data[i * l + j] = arow[j] * (darow[j] - dot);
+                }
+            }
+            ds.scale_inplace(scale);
+            let dq = ds.matmul(&ks);
+            let dk = ds.matmul_at(&qs); // dK = dSᵀ·Q
+            g_q.data[span.clone()].copy_from_slice(&dq.data);
+            g_k.data[span.clone()].copy_from_slice(&dk.data);
+            g_v.data[span].copy_from_slice(&dv.data);
+        }
+        let gq_in = self.q.backward(g_q);
+        let gk_in = self.k.backward(g_k);
+        let gv_in = self.v.backward(g_v);
+        let g_a = self.act_attn.backward(gq_in.add(&gk_in).add(&gv_in));
+        g_h1.add(&self.ln1.bwd(&g_a))
+    }
+
+    fn params(&mut self) -> Vec<ParamRef<'_>> {
+        let mut p = self.ln1.params();
+        p.extend(self.q.params());
+        p.extend(self.k.params());
+        p.extend(self.v.params());
+        p.extend(self.o.params());
+        p.extend(self.ln2.params());
+        p.extend(self.ff1.params());
+        p.extend(self.ff2.params());
+        p
+    }
+
+    fn zero_grads(&mut self) {
+        self.ln1.zero_grads();
+        self.q.zero_grads();
+        self.k.zero_grads();
+        self.v.zero_grads();
+        self.o.zero_grads();
+        self.ln2.zero_grads();
+        self.ff1.zero_grads();
+        self.ff2.zero_grads();
+    }
+}
+
+/// Boolean BERT-mini for sequence classification.
+pub struct BertMini {
+    pub cfg: BertConfig,
+    tok_emb: Tensor,
+    pos_emb: Tensor,
+    g_tok: Tensor,
+    g_pos: Tensor,
+    encoder: Vec<EncoderLayer>,
+    ln_f: LayerNorm,
+    head: Linear,
+    cache_tokens: Option<Vec<usize>>,
+    cache_nl: Option<(usize, usize)>,
+}
+
+impl BertMini {
+    pub fn new(cfg: &BertConfig, rng: &mut Rng) -> Self {
+        let d = cfg.d;
+        BertMini {
+            cfg: cfg.clone(),
+            tok_emb: Tensor::randn(&[cfg.vocab, d], 0.5, rng),
+            pos_emb: Tensor::randn(&[cfg.max_len, d], 0.1, rng),
+            g_tok: Tensor::zeros(&[cfg.vocab, d]),
+            g_pos: Tensor::zeros(&[cfg.max_len, d]),
+            encoder: (0..cfg.layers)
+                .map(|i| EncoderLayer::new(&format!("enc{i}"), cfg, rng))
+                .collect(),
+            ln_f: LayerNorm::new("ln_f", d),
+            head: Linear::new("cls_head", d, cfg.classes, rng),
+            cache_tokens: None,
+            cache_nl: None,
+        }
+    }
+
+    /// tokens: flat (N·L) ids; returns (N × classes) logits.
+    pub fn forward(&mut self, tokens: &[usize], n: usize, l: usize, train: bool) -> Tensor {
+        assert_eq!(tokens.len(), n * l);
+        assert!(l <= self.cfg.max_len);
+        let d = self.cfg.d;
+        let mut h = Tensor::zeros(&[n * l, d]);
+        for (i, &t) in tokens.iter().enumerate() {
+            debug_assert!(t < self.cfg.vocab);
+            let pos = i % l;
+            for j in 0..d {
+                h.data[i * d + j] = self.tok_emb.at2(t, j) + self.pos_emb.at2(pos, j);
+            }
+        }
+        for layer in self.encoder.iter_mut() {
+            h = layer.fwd(&h, n, l, train);
+        }
+        let hn = self.ln_f.fwd(&h, train);
+        // CLS pooling: first token of every sequence.
+        let mut pooled = Tensor::zeros(&[n, d]);
+        for ni in 0..n {
+            pooled.data[ni * d..(ni + 1) * d]
+                .copy_from_slice(&hn.data[ni * l * d..ni * l * d + d]);
+        }
+        if train {
+            self.cache_tokens = Some(tokens.to_vec());
+            self.cache_nl = Some((n, l));
+        }
+        self.head.forward(Value::F32(pooled), train).expect_f32("head")
+    }
+
+    /// Backward from logits gradient; accumulates all parameter signals.
+    pub fn backward(&mut self, g_logits: Tensor) {
+        let (n, l) = self.cache_nl.expect("backward before forward");
+        let d = self.cfg.d;
+        let g_pooled = self.head.backward(g_logits);
+        // un-pool: signal lands on token 0 of each sequence
+        let mut g_hn = Tensor::zeros(&[n * l, d]);
+        for ni in 0..n {
+            g_hn.data[ni * l * d..ni * l * d + d]
+                .copy_from_slice(&g_pooled.data[ni * d..(ni + 1) * d]);
+        }
+        let mut g_h = self.ln_f.bwd(&g_hn);
+        for layer in self.encoder.iter_mut().rev() {
+            g_h = layer.bwd(&g_h);
+        }
+        // embedding scatter
+        let tokens = self.cache_tokens.take().unwrap();
+        for (i, &t) in tokens.iter().enumerate() {
+            let pos = i % l;
+            for j in 0..d {
+                let g = g_h.data[i * d + j];
+                *self.g_tok.at2_mut(t, j) += g;
+                *self.g_pos.at2_mut(pos, j) += g;
+            }
+        }
+    }
+
+    /// Convenience: one loss evaluation (forward + CE) without updates.
+    pub fn loss(&mut self, tokens: &[usize], labels: &[usize], n: usize, l: usize) -> LossOut {
+        let logits = self.forward(tokens, n, l, false);
+        softmax_cross_entropy(&logits, labels)
+    }
+
+    pub fn params(&mut self) -> Vec<ParamRef<'_>> {
+        let mut p = vec![
+            ParamRef::Real { name: "tok_emb".into(), w: &mut self.tok_emb, grad: &mut self.g_tok },
+            ParamRef::Real { name: "pos_emb".into(), w: &mut self.pos_emb, grad: &mut self.g_pos },
+        ];
+        for layer in self.encoder.iter_mut() {
+            p.extend(layer.params());
+        }
+        p.extend(self.ln_f.params());
+        p.extend(self.head.params());
+        p
+    }
+
+    pub fn zero_grads(&mut self) {
+        self.g_tok.scale_inplace(0.0);
+        self.g_pos.scale_inplace(0.0);
+        for layer in self.encoder.iter_mut() {
+            layer.zero_grads();
+        }
+        self.ln_f.zero_grads();
+        self.head.zero_grads();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{Adam, BooleanOptimizer};
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::new(1);
+        let cfg = BertConfig { vocab: 16, max_len: 8, d: 16, ff: 32, layers: 1, classes: 3 };
+        let mut bert = BertMini::new(&cfg, &mut rng);
+        let tokens: Vec<usize> = (0..4 * 8).map(|i| i % 16).collect();
+        let logits = bert.forward(&tokens, 4, 8, true);
+        assert_eq!(logits.shape, vec![4, 3]);
+        bert.backward(Tensor::full(&[4, 3], 0.1));
+    }
+
+    #[test]
+    fn learns_token_presence_task() {
+        // label = does token 0 appear in the sequence (easy separable task)
+        let mut rng = Rng::new(2);
+        let cfg = BertConfig { vocab: 12, max_len: 8, d: 16, ff: 32, layers: 1, classes: 2 };
+        let mut bert = BertMini::new(&cfg, &mut rng);
+        let boolopt = BooleanOptimizer::new(20.0);
+        let mut adam = Adam::new(2e-3);
+        let (n, l) = (16, 8);
+        let mut make_batch = |rng: &mut Rng| {
+            let mut toks = Vec::with_capacity(n * l);
+            let mut labels = Vec::with_capacity(n);
+            for _ in 0..n {
+                let has = rng.bernoulli(0.5);
+                let mut seq: Vec<usize> = (0..l).map(|_| 1 + rng.below(11)).collect();
+                if has {
+                    seq[rng.below(l)] = 0;
+                }
+                labels.push(has as usize);
+                toks.extend(seq);
+            }
+            (toks, labels)
+        };
+        let mut first_loss = 0.0;
+        let mut last_loss = 0.0;
+        for step in 0..60 {
+            let (toks, labels) = make_batch(&mut rng);
+            let logits = bert.forward(&toks, n, l, true);
+            let out = softmax_cross_entropy(&logits, &labels);
+            bert.zero_grads();
+            bert.backward(out.grad.clone());
+            let mut params = bert.params();
+            boolopt.step(&mut params);
+            adam.step(&mut params);
+            if step == 0 {
+                first_loss = out.loss;
+            }
+            last_loss = out.loss;
+        }
+        assert!(
+            last_loss < first_loss * 0.9,
+            "loss should drop: first {first_loss} last {last_loss}"
+        );
+    }
+}

@@ -1,0 +1,167 @@
+//! Small EDSR for super-resolution (paper §4.2 / Appendix D.2, Table 3):
+//! FP stem conv → 8 Boolean residual blocks (no BN, per EDSR and per the
+//! paper) → FP upsampler conv + pixel-shuffle → FP output conv.
+//! Trained with L1 loss, like the paper.
+
+use super::layers_extra::{PixelShuffle, ScaleLayer, UpsampleNearest};
+use crate::nn::{
+    BackwardScale, BoolConv2d, Conv2d, Residual, Sequential, ThresholdAct,
+};
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct EdsrConfig {
+    /// Feature width κ (paper: 256; scaled down for CPU runs).
+    pub features: usize,
+    /// Residual blocks (paper small EDSR: 8).
+    pub blocks: usize,
+    /// Upscale factor ∈ {2, 3, 4}.
+    pub scale: usize,
+    pub colors: usize,
+    /// Boolean residual blocks (B⊕LD) vs FP blocks (SMALL EDSR baseline).
+    pub boolean: bool,
+}
+
+impl Default for EdsrConfig {
+    fn default() -> Self {
+        EdsrConfig { features: 16, blocks: 4, scale: 2, colors: 3, boolean: true }
+    }
+}
+
+impl EdsrConfig {
+    /// Paper-shaped small EDSR for the energy model.
+    pub fn paper(scale: usize) -> Self {
+        EdsrConfig { features: 256, blocks: 8, scale, ..Default::default() }
+    }
+}
+
+fn bool_block(name: &str, f: usize, rng: &mut Rng) -> Residual {
+    // Figure 8: Boolean residual block = act → boolconv → act → boolconv,
+    // identity shortcut summing in the integer/real domain. The final
+    // α-scale (Eq. 24) brings the integer count back to the O(1) range of
+    // the FP feature stream so the residual sum stays balanced.
+    let fanin = f * 9;
+    let mut main = Sequential::new(&format!("{name}.main"));
+    main.push(Box::new(ThresholdAct::new(
+        &format!("{name}.act1"),
+        0.0,
+        BackwardScale::TanhPrime { fanin },
+    )));
+    main.push(Box::new(BoolConv2d::new(&format!("{name}.conv1"), f, f, 3, 1, 1, rng)));
+    main.push(Box::new(ThresholdAct::new(
+        &format!("{name}.act2"),
+        0.0,
+        BackwardScale::TanhPrime { fanin },
+    )));
+    main.push(Box::new(BoolConv2d::new(&format!("{name}.conv2"), f, f, 3, 1, 1, rng)));
+    main.push(Box::new(ScaleLayer::new(
+        &format!("{name}.scale"),
+        BackwardScale::alpha(fanin),
+    )));
+    Residual::new(name, main, Sequential::new(&format!("{name}.short")))
+}
+
+fn fp_block(name: &str, f: usize, rng: &mut Rng) -> Residual {
+    let mut main = Sequential::new(&format!("{name}.main"));
+    main.push(Box::new(Conv2d::new(&format!("{name}.conv1"), f, f, 3, 1, 1, rng)));
+    main.push(Box::new(crate::nn::ReLU::new(&format!("{name}.relu"))));
+    main.push(Box::new(Conv2d::new(&format!("{name}.conv2"), f, f, 3, 1, 1, rng)));
+    Residual::new(name, main, Sequential::new(&format!("{name}.short")))
+}
+
+/// Build small EDSR. Input: F32 NCHW image in [0, 1]; output: upscaled
+/// image (N, colors, H·scale, W·scale).
+///
+/// A *global* residual skip (nearest-neighbour upsample of the input)
+/// wraps the whole network — standard SR practice, so the body only
+/// learns the high-frequency correction.
+pub fn edsr_small(cfg: &EdsrConfig, rng: &mut Rng) -> Sequential {
+    let f = cfg.features;
+    let mut body = Sequential::new("body");
+    body.push(Box::new(Conv2d::new("stem", cfg.colors, f, 3, 1, 1, rng)));
+    for b in 0..cfg.blocks {
+        if cfg.boolean {
+            body.push(Box::new(bool_block(&format!("rb{b}"), f, rng)));
+        } else {
+            body.push(Box::new(fp_block(&format!("rb{b}"), f, rng)));
+        }
+    }
+    // Upsampler: FP conv expands channels by scale², then pixel shuffle.
+    body.push(Box::new(Conv2d::new("up_conv", f, f * cfg.scale * cfg.scale, 3, 1, 1, rng)));
+    body.push(Box::new(PixelShuffle::new("shuffle", cfg.scale)));
+    // Zero-init the output conv: the network starts as the exact identity
+    // skip and learns only the high-frequency correction (standard SR
+    // residual-learning init).
+    let mut out_conv = Conv2d::new("out_conv", f, cfg.colors, 3, 1, 1, rng);
+    out_conv.w.scale_inplace(0.0);
+    out_conv.b.scale_inplace(0.0);
+    body.push(Box::new(out_conv));
+
+    let mut skip = Sequential::new("global_skip");
+    skip.push(Box::new(UpsampleNearest::new("up_skip", cfg.scale)));
+
+    let mut net = Sequential::new(if cfg.boolean { "edsr_bold" } else { "edsr_fp" });
+    net.push(Box::new(Residual::new("global", body, skip)));
+    net
+}
+
+/// PSNR in dB for predictions/targets in [0, 1].
+pub fn psnr(pred: &crate::tensor::Tensor, target: &crate::tensor::Tensor) -> f32 {
+    assert_eq!(pred.shape, target.shape);
+    let n = pred.len() as f64;
+    let mse: f64 = pred
+        .data
+        .iter()
+        .zip(&target.data)
+        .map(|(a, b)| {
+            let d = (a.clamp(0.0, 1.0) - b) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / n;
+    if mse <= 1e-12 {
+        return 99.0;
+    }
+    (10.0 * (1.0 / mse).log10()) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Layer, Value};
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn upscales_by_factor() {
+        let mut rng = Rng::new(1);
+        for scale in [2, 3] {
+            let cfg = EdsrConfig { features: 8, blocks: 1, scale, ..Default::default() };
+            let mut net = edsr_small(&cfg, &mut rng);
+            let x = Tensor::randn(&[1, 3, 8, 8], 0.3, &mut rng);
+            let y = net.forward(Value::F32(x), true).expect_f32("t");
+            assert_eq!(y.shape, vec![1, 3, 8 * scale, 8 * scale], "scale {scale}");
+            let g = net.backward(Tensor::full(&y.shape.clone(), 0.01));
+            assert_eq!(g.shape, vec![1, 3, 8, 8]);
+        }
+    }
+
+    #[test]
+    fn psnr_sanity() {
+        let a = Tensor::full(&[1, 1, 4, 4], 0.5);
+        assert_eq!(psnr(&a, &a), 99.0);
+        let mut b = a.clone();
+        b.data[0] = 0.6;
+        let p = psnr(&a, &b);
+        assert!(p > 20.0 && p < 40.0, "{p}");
+    }
+
+    #[test]
+    fn fp_variant_builds() {
+        let mut rng = Rng::new(2);
+        let cfg = EdsrConfig { features: 8, blocks: 1, boolean: false, ..Default::default() };
+        let mut net = edsr_small(&cfg, &mut rng);
+        let x = Tensor::randn(&[1, 3, 6, 6], 0.3, &mut rng);
+        let y = net.forward(Value::F32(x), false).expect_f32("t");
+        assert_eq!(y.shape, vec![1, 3, 12, 12]);
+    }
+}

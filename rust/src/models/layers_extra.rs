@@ -1,0 +1,229 @@
+//! Model-specific layers: pixel shuffle (EDSR upsampler) and nearest
+//! upsampling (segmentation decoder). Both are pure permutations /
+//! replications with exact adjoint backwards.
+
+use crate::nn::{Layer, Value};
+use crate::tensor::Tensor;
+
+/// Depth-to-space: (N, C·r², H, W) → (N, C, H·r, W·r) (EDSR upsampler).
+pub struct PixelShuffle {
+    pub r: usize,
+    name: String,
+    cache_dims: Option<(usize, usize, usize, usize)>, // input dims
+}
+
+impl PixelShuffle {
+    pub fn new(name: &str, r: usize) -> Self {
+        PixelShuffle { r, name: name.to_string(), cache_dims: None }
+    }
+
+    fn shuffle(&self, t: &Tensor) -> Tensor {
+        let (n, c_in, h, w) = t.dims4();
+        let r = self.r;
+        assert_eq!(c_in % (r * r), 0, "{}: C not divisible by r²", self.name);
+        let c = c_in / (r * r);
+        let mut out = Tensor::zeros(&[n, c, h * r, w * r]);
+        for ni in 0..n {
+            for ci in 0..c {
+                for dy in 0..r {
+                    for dx in 0..r {
+                        let src_c = ci * r * r + dy * r + dx;
+                        for y in 0..h {
+                            for x in 0..w {
+                                let src = ((ni * c_in + src_c) * h + y) * w + x;
+                                let dst =
+                                    ((ni * c + ci) * (h * r) + y * r + dy) * (w * r) + x * r + dx;
+                                out.data[dst] = t.data[src];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn unshuffle(&self, z: &Tensor, dims: (usize, usize, usize, usize)) -> Tensor {
+        let (n, c_in, h, w) = dims;
+        let r = self.r;
+        let c = c_in / (r * r);
+        let mut g = Tensor::zeros(&[n, c_in, h, w]);
+        for ni in 0..n {
+            for ci in 0..c {
+                for dy in 0..r {
+                    for dx in 0..r {
+                        let src_c = ci * r * r + dy * r + dx;
+                        for y in 0..h {
+                            for x in 0..w {
+                                let dst = ((ni * c_in + src_c) * h + y) * w + x;
+                                let src =
+                                    ((ni * c + ci) * (h * r) + y * r + dy) * (w * r) + x * r + dx;
+                                g.data[dst] = z.data[src];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        g
+    }
+}
+
+impl Layer for PixelShuffle {
+    fn forward(&mut self, x: Value, train: bool) -> Value {
+        let t = x.to_f32();
+        if train {
+            self.cache_dims = Some(t.dims4());
+        }
+        Value::F32(self.shuffle(&t))
+    }
+
+    fn backward(&mut self, z: Tensor) -> Tensor {
+        let dims = self.cache_dims.expect("backward before forward");
+        self.unshuffle(&z, dims)
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+/// Nearest-neighbour upsampling ×k; backward sums the replicated lanes.
+pub struct UpsampleNearest {
+    pub k: usize,
+    name: String,
+    cache_dims: Option<(usize, usize, usize, usize)>,
+}
+
+impl UpsampleNearest {
+    pub fn new(name: &str, k: usize) -> Self {
+        UpsampleNearest { k, name: name.to_string(), cache_dims: None }
+    }
+}
+
+impl Layer for UpsampleNearest {
+    fn forward(&mut self, x: Value, train: bool) -> Value {
+        let t = x.to_f32();
+        let (n, c, h, w) = t.dims4();
+        if train {
+            self.cache_dims = Some((n, c, h, w));
+        }
+        let k = self.k;
+        let mut out = Tensor::zeros(&[n, c, h * k, w * k]);
+        for ni in 0..n {
+            for ci in 0..c {
+                let plane = (ni * c + ci) * h * w;
+                let oplane = (ni * c + ci) * h * k * w * k;
+                for y in 0..h * k {
+                    for x2 in 0..w * k {
+                        out.data[oplane + y * w * k + x2] = t.data[plane + (y / k) * w + x2 / k];
+                    }
+                }
+            }
+        }
+        Value::F32(out)
+    }
+
+    fn backward(&mut self, z: Tensor) -> Tensor {
+        let (n, c, h, w) = self.cache_dims.expect("backward before forward");
+        let k = self.k;
+        let mut g = Tensor::zeros(&[n, c, h, w]);
+        for ni in 0..n {
+            for ci in 0..c {
+                let plane = (ni * c + ci) * h * w;
+                let oplane = (ni * c + ci) * h * k * w * k;
+                for y in 0..h * k {
+                    for x2 in 0..w * k {
+                        g.data[plane + (y / k) * w + x2 / k] += z.data[oplane + y * w * k + x2];
+                    }
+                }
+            }
+        }
+        g
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+/// Fixed scalar scale `y = s·x` (forward and backward) — used to bring
+/// Boolean conv integer counts (O(fan-in)) back to the O(1) range of an FP
+/// feature stream before a residual summation. The factor α = π/(2√(3m))
+/// of Eq. (24) matches the count's standard deviation (Appendix C.3).
+pub struct ScaleLayer {
+    pub s: f32,
+    name: String,
+}
+
+impl ScaleLayer {
+    pub fn new(name: &str, s: f32) -> Self {
+        ScaleLayer { s, name: name.to_string() }
+    }
+}
+
+impl Layer for ScaleLayer {
+    fn forward(&mut self, x: Value, _train: bool) -> Value {
+        Value::F32(x.to_f32().scale(self.s))
+    }
+
+    fn backward(&mut self, z: Tensor) -> Tensor {
+        z.scale(self.s)
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn scale_layer_scales_both_ways() {
+        let mut s = ScaleLayer::new("s", 0.25);
+        let x = Tensor::from_vec(&[1, 2], vec![4.0, -8.0]);
+        let y = s.forward(Value::F32(x), true).expect_f32("t");
+        assert_eq!(y.data, vec![1.0, -2.0]);
+        let g = s.backward(Tensor::from_vec(&[1, 2], vec![1.0, 1.0]));
+        assert_eq!(g.data, vec![0.25, 0.25]);
+    }
+
+    #[test]
+    fn pixel_shuffle_shapes_and_inverse() {
+        let mut rng = Rng::new(1);
+        let mut ps = PixelShuffle::new("ps", 2);
+        let x = Tensor::randn(&[2, 8, 3, 3], 1.0, &mut rng);
+        let y = ps.forward(Value::F32(x.clone()), true).expect_f32("t");
+        assert_eq!(y.shape, vec![2, 2, 6, 6]);
+        // backward is the exact inverse permutation
+        let g = ps.backward(y);
+        assert!(g.max_abs_diff(&x) < 1e-6);
+    }
+
+    #[test]
+    fn pixel_shuffle_is_adjoint() {
+        let mut rng = Rng::new(2);
+        let mut ps = PixelShuffle::new("ps", 3);
+        let x = Tensor::randn(&[1, 9, 2, 2], 1.0, &mut rng);
+        let y = ps.forward(Value::F32(x.clone()), true).expect_f32("t");
+        let z = Tensor::randn(&y.shape, 1.0, &mut rng);
+        let g = ps.backward(z.clone());
+        let lhs: f32 = y.data.iter().zip(&z.data).map(|(a, b)| a * b).sum();
+        let rhs: f32 = x.data.iter().zip(&g.data).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-3);
+    }
+
+    #[test]
+    fn upsample_nearest_replicates_and_sums() {
+        let mut up = UpsampleNearest::new("up", 2);
+        let x = Tensor::from_vec(&[1, 1, 1, 2], vec![3.0, 5.0]);
+        let y = up.forward(Value::F32(x), true).expect_f32("t");
+        assert_eq!(y.shape, vec![1, 1, 2, 4]);
+        assert_eq!(y.data, vec![3.0, 3.0, 5.0, 5.0, 3.0, 3.0, 5.0, 5.0]);
+        let g = up.backward(Tensor::full(&[1, 1, 2, 4], 1.0));
+        assert_eq!(g.data, vec![4.0, 4.0]);
+    }
+}

@@ -1,0 +1,85 @@
+//! Boolean MLP matching the L2 AOT artifact (python/compile/model.py):
+//! BoolLinear(784→512) → act → BoolLinear(512→256) → act → FP Linear(→10).
+//! The native engine and the PJRT-compiled artifact are cross-checked in
+//! rust/tests/xla_crosscheck.rs.
+
+use crate::nn::{BackwardScale, BoolLinear, Linear, Sequential, ThresholdAct};
+use crate::util::Rng;
+
+/// MLP configuration (defaults mirror the AOT artifact dims).
+#[derive(Debug, Clone)]
+pub struct MlpConfig {
+    pub d_in: usize,
+    pub hidden: Vec<usize>,
+    pub d_out: usize,
+    /// Appendix C tanh' backward scaling (on by default, as in the paper).
+    pub tanh_scale: bool,
+}
+
+impl Default for MlpConfig {
+    fn default() -> Self {
+        MlpConfig { d_in: 784, hidden: vec![512, 256], d_out: 10, tanh_scale: true }
+    }
+}
+
+fn scale(cfg: &MlpConfig, fanin: usize) -> BackwardScale {
+    if cfg.tanh_scale { BackwardScale::TanhPrime { fanin } } else { BackwardScale::Identity }
+}
+
+/// Native Boolean MLP: Boolean interior, FP head (the paper's recipe).
+/// Input is expected as a Bit value (±1-binarized features).
+pub fn boolean_mlp(cfg: &MlpConfig, rng: &mut Rng) -> Sequential {
+    let mut net = Sequential::new("bool_mlp");
+    let mut d = cfg.d_in;
+    for (i, &h) in cfg.hidden.iter().enumerate() {
+        net.push(Box::new(BoolLinear::new(&format!("bl{i}"), d, h, rng)));
+        net.push(Box::new(ThresholdAct::new(&format!("act{i}"), 0.0, scale(cfg, d))));
+        d = h;
+    }
+    net.push(Box::new(Linear::new("head", d, cfg.d_out, rng)));
+    net
+}
+
+/// FP baseline of the same shape (ReLU MLP).
+pub fn fp_mlp(cfg: &MlpConfig, rng: &mut Rng) -> Sequential {
+    let mut net = Sequential::new("fp_mlp");
+    let mut d = cfg.d_in;
+    for (i, &h) in cfg.hidden.iter().enumerate() {
+        net.push(Box::new(Linear::new(&format!("fc{i}"), d, h, rng)));
+        net.push(Box::new(crate::nn::ReLU::new(&format!("relu{i}"))));
+        d = h;
+    }
+    net.push(Box::new(Linear::new("head", d, cfg.d_out, rng)));
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Layer, Value};
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn boolean_mlp_shapes() {
+        let mut rng = Rng::new(1);
+        let cfg = MlpConfig { d_in: 64, hidden: vec![32, 16], d_out: 4, tanh_scale: true };
+        let mut net = boolean_mlp(&cfg, &mut rng);
+        let x = Tensor::rand_pm1(&[8, 64], &mut rng);
+        let y = net.forward(Value::bit_from_pm1(&x), true).expect_f32("t");
+        assert_eq!(y.shape, vec![8, 4]);
+        let g = net.backward(Tensor::full(&[8, 4], 0.1));
+        assert_eq!(g.shape, vec![8, 64]);
+    }
+
+    #[test]
+    fn param_split_bool_vs_real() {
+        let mut rng = Rng::new(2);
+        let cfg = MlpConfig { d_in: 32, hidden: vec![16], d_out: 4, tanh_scale: false };
+        let mut net = boolean_mlp(&cfg, &mut rng);
+        let params = net.params();
+        let bools = params.iter().filter(|p| matches!(p, crate::nn::ParamRef::Bool { .. })).count();
+        let reals = params.iter().filter(|p| matches!(p, crate::nn::ParamRef::Real { .. })).count();
+        assert_eq!(bools, 1, "one Boolean weight tensor");
+        assert_eq!(reals, 2, "FP head w + b");
+    }
+}

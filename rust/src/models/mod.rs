@@ -1,0 +1,25 @@
+//! Model zoo: the architectures of the paper's evaluation (§4, App. D),
+//! built from `nn::` layers in both B⊕LD (native Boolean) and FP flavours,
+//! plus the BNN-baseline variants assembled in `baselines::`.
+//!
+//! Paper ↔ module map:
+//! * Table 2/6/9, Fig. 1 — [`vgg_small`] (VGG-SMALL on CIFAR-scale inputs)
+//! * Table 5/10 — [`resnet`] (Boolean ResNet Block-I family, base 64…256)
+//! * Table 3 — [`edsr`] (small EDSR super-resolution)
+//! * Table 4/12/13 — [`segnet`] (Boolean segmentation with BOOL-ASPP-lite)
+//! * Table 7 — [`bert`] (Boolean BERT-mini encoder for GLUE-like tasks)
+//! * the L2/L1 AOT MLP — [`mlp`] (matches python/compile/model.py dims)
+
+pub mod bert;
+pub mod edsr;
+pub mod layers_extra;
+pub mod mlp;
+pub mod resnet;
+pub mod segnet;
+pub mod vgg_small;
+
+pub use edsr::{edsr_small, EdsrConfig};
+pub use mlp::{boolean_mlp, fp_mlp, MlpConfig};
+pub use resnet::{resnet_boolean, ResNetConfig};
+pub use segnet::{segnet_boolean, SegNetConfig};
+pub use vgg_small::{vgg_small, VggConfig, VggKind};

@@ -1,0 +1,180 @@
+//! Boolean ResNet — the paper's "Block I" family (Appendix D.1.3, Fig. 6a;
+//! Table 5/10). Block I: two Boolean 3×3 convs on the main path, a Boolean
+//! conv on the shortcut (stride handles downsampling), BN removed, ReLU
+//! replaced by the threshold activation; the paths merge on integer
+//! pre-activations, with the activation after the sum.
+//!
+//! `base` is the mapping dimension of the first layer — the paper's Table 5
+//! knob (64 standard, 256 for the "large" model that beats the FP baseline).
+
+use crate::nn::{
+    AvgPool2dGlobal, BackwardScale, BoolConv2d, Conv2d, Flatten, Linear, Residual,
+    Sequential, ThresholdAct,
+};
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct ResNetConfig {
+    /// Mapping dimension of the first layer ("Base" in Table 5).
+    pub base: usize,
+    /// Blocks per stage (ResNet18 layout = [2, 2, 2, 2]).
+    pub blocks: Vec<usize>,
+    pub in_channels: usize,
+    pub classes: usize,
+    pub hw: usize,
+    /// Shortcut kernel size: 3 (paper's best, Table 10) or 1 (ablation).
+    pub shortcut_k: usize,
+    /// Stages that downsample (stride 2) at entry; stage 0 never does.
+    pub downsample_from: usize,
+}
+
+impl Default for ResNetConfig {
+    fn default() -> Self {
+        ResNetConfig {
+            base: 16,
+            blocks: vec![2, 2, 2, 2],
+            in_channels: 3,
+            classes: 10,
+            hw: 32,
+            shortcut_k: 3,
+            downsample_from: 1,
+        }
+    }
+}
+
+impl ResNetConfig {
+    /// Paper-shaped ImageNet config for the energy model (base 64…256).
+    pub fn paper(base: usize) -> Self {
+        ResNetConfig { base, hw: 224, classes: 1000, ..Default::default() }
+    }
+}
+
+fn block(
+    name: &str,
+    c_in: usize,
+    c_out: usize,
+    stride: usize,
+    shortcut_k: usize,
+    rng: &mut Rng,
+) -> Residual {
+    // Main path: act → conv → act → conv (input arrives as integer
+    // pre-activations from the previous merge).
+    let mut main = Sequential::new(&format!("{name}.main"));
+    main.push(Box::new(
+        ThresholdAct::new(&format!("{name}.act1"), 0.0, BackwardScale::TanhPrime { fanin: c_in * 9 })
+            .centered(),
+    ));
+    main.push(Box::new(BoolConv2d::new(&format!("{name}.conv1"), c_in, c_out, 3, stride, 1, rng)));
+    main.push(Box::new(
+        ThresholdAct::new(&format!("{name}.act2"), 0.0, BackwardScale::TanhPrime { fanin: c_out * 9 })
+            .centered(),
+    ));
+    main.push(Box::new(BoolConv2d::new(&format!("{name}.conv2"), c_out, c_out, 3, 1, 1, rng)));
+
+    // Shortcut: Boolean conv with matching stride (Block I always has one;
+    // the 3×3 keeps the dynamic range comparable to the main path —
+    // Appendix D.3.1).
+    let mut shortcut = Sequential::new(&format!("{name}.short"));
+    shortcut.push(Box::new(
+        ThresholdAct::new(
+            &format!("{name}.sact"),
+            0.0,
+            BackwardScale::TanhPrime { fanin: c_in * shortcut_k * shortcut_k },
+        )
+        .centered(),
+    ));
+    shortcut.push(Box::new(BoolConv2d::new(
+        &format!("{name}.sconv"),
+        c_in,
+        c_out,
+        shortcut_k,
+        stride,
+        shortcut_k / 2,
+        rng,
+    )));
+
+    Residual::new(name, main, shortcut)
+}
+
+/// Build the Boolean ResNet. Input: F32 NCHW; stem conv is FP (paper
+/// setup), head is FP Linear.
+pub fn resnet_boolean(cfg: &ResNetConfig, rng: &mut Rng) -> Sequential {
+    let mut net = Sequential::new("resnet_bold");
+    // FP stem.
+    net.push(Box::new(Conv2d::new("stem", cfg.in_channels, cfg.base, 3, 1, 1, rng)));
+    let mut c = cfg.base;
+    for (s, &nblocks) in cfg.blocks.iter().enumerate() {
+        let c_out = cfg.base << s.min(3); // 1×, 2×, 4×, 8×
+        for b in 0..nblocks {
+            let stride = if b == 0 && s >= cfg.downsample_from { 2 } else { 1 };
+            net.push(Box::new(block(
+                &format!("s{s}b{b}"),
+                c,
+                c_out,
+                stride,
+                cfg.shortcut_k,
+                rng,
+            )));
+            c = c_out;
+        }
+    }
+    // Head: final activation-free GAP on integer pre-activations + FP FC.
+    net.push(Box::new(AvgPool2dGlobal::new("gap")));
+    net.push(Box::new(Flatten::new("flat")));
+    net.push(Box::new(Linear::new("head", c, cfg.classes, rng)));
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Layer, Value};
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn forward_backward_shapes() {
+        let mut rng = Rng::new(1);
+        let cfg = ResNetConfig {
+            base: 8,
+            blocks: vec![1, 1],
+            hw: 16,
+            ..Default::default()
+        };
+        let mut net = resnet_boolean(&cfg, &mut rng);
+        let x = Tensor::randn(&[2, 3, 16, 16], 1.0, &mut rng);
+        let y = net.forward(Value::F32(x), true).expect_f32("t");
+        assert_eq!(y.shape, vec![2, 10]);
+        let g = net.backward(Tensor::full(&[2, 10], 0.1));
+        assert_eq!(g.shape, vec![2, 3, 16, 16]);
+    }
+
+    #[test]
+    fn base_width_scales_param_count() {
+        let mut rng = Rng::new(2);
+        let count = |base: usize, rng: &mut Rng| {
+            let cfg = ResNetConfig { base, blocks: vec![1], hw: 8, ..Default::default() };
+            resnet_boolean(&cfg, rng).param_count()
+        };
+        let p8 = count(8, &mut rng);
+        let p16 = count(16, &mut rng);
+        assert!(p16 > 3 * p8, "doubling base ≈ 4× boolean params: {p8} vs {p16}");
+    }
+
+    #[test]
+    fn shortcut_kernel_ablation_builds() {
+        let mut rng = Rng::new(3);
+        for k in [1, 3] {
+            let cfg = ResNetConfig {
+                base: 8,
+                blocks: vec![1, 1],
+                hw: 16,
+                shortcut_k: k,
+                ..Default::default()
+            };
+            let mut net = resnet_boolean(&cfg, &mut rng);
+            let x = Tensor::randn(&[1, 3, 16, 16], 1.0, &mut rng);
+            let y = net.forward(Value::F32(x), false).expect_f32("t");
+            assert_eq!(y.shape, vec![1, 10], "k={k}");
+        }
+    }
+}

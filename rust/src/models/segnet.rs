@@ -1,0 +1,304 @@
+//! Boolean semantic segmentation (paper §4.3 / Appendix D.3, Tables 4/12/13).
+//!
+//! Scaled DeepLab-style layout: Boolean encoder (÷4 spatial, like the
+//! paper's ÷8 strategy scaled down), a BOOL-ASPP-lite context module, a FP
+//! 1×1 classifier and nearest upsampling back to input resolution.
+//!
+//! The Table 12 ablation point is preserved: the *naive* ASPP binarizes the
+//! features before global average pooling (losing image-level statistics),
+//! while BOOL-ASPP keeps the GAP branch on the integer pre-activations
+//! (Fig. 12c vs 12d). Dilated convs are replaced by an extra 3×3 branch —
+//! a substitution documented in DESIGN.md (no dilation support in the
+//! minimal conv engine; the multi-branch structure is what matters for the
+//! ablation).
+
+use super::layers_extra::UpsampleNearest;
+use crate::nn::{
+    BackwardScale, BatchNorm2d, BoolConv2d, Conv2d, Layer, ParamRef, Residual, Sequential,
+    ThresholdAct, Value,
+};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct SegNetConfig {
+    pub classes: usize,
+    pub in_channels: usize,
+    pub hw: usize,
+    pub width: usize,
+    /// Naive BOOL-ASPP (binarized GAP branch) vs the paper's BOOL-ASPP
+    /// (integer GAP branch) — the Table 12 ablation switch.
+    pub naive_aspp: bool,
+}
+
+impl Default for SegNetConfig {
+    fn default() -> Self {
+        SegNetConfig { classes: 6, in_channels: 3, hw: 32, width: 16, naive_aspp: false }
+    }
+}
+
+/// BOOL-ASPP-lite: two Boolean conv branches + a GAP branch, summed.
+struct BoolAspp {
+    branch1: Sequential,
+    branch2: Sequential,
+    /// GAP branch: BN + FP 1×1 conv on either integer (paper) or
+    /// binarized (naive) features.
+    gap_bn: BatchNorm2d,
+    gap_conv: Conv2d,
+    naive: bool,
+    name: String,
+    cache_dims: Option<(usize, usize, usize, usize)>,
+    cache_gap_in: Option<Tensor>,
+}
+
+impl BoolAspp {
+    fn new(name: &str, c: usize, naive: bool, rng: &mut Rng) -> Self {
+        let mk_branch = |bn: &str, k: usize, rng: &mut Rng| {
+            let mut s = Sequential::new(bn);
+            s.push(Box::new(ThresholdAct::new(
+                &format!("{bn}.act"),
+                0.0,
+                BackwardScale::TanhPrime { fanin: c * k * k },
+            )));
+            s.push(Box::new(BoolConv2d::new(&format!("{bn}.conv"), c, c, k, 1, k / 2, rng)));
+            s
+        };
+        BoolAspp {
+            branch1: mk_branch(&format!("{name}.b1"), 1, rng),
+            branch2: mk_branch(&format!("{name}.b2"), 3, rng),
+            gap_bn: BatchNorm2d::new(&format!("{name}.gap_bn"), c),
+            gap_conv: Conv2d::new(&format!("{name}.gap_conv"), c, c, 1, 1, 0, rng),
+            naive,
+            name: name.to_string(),
+            cache_dims: None,
+            cache_gap_in: None,
+        }
+    }
+}
+
+impl Layer for BoolAspp {
+    fn forward(&mut self, x: Value, train: bool) -> Value {
+        let t = x.to_f32();
+        let (n, c, h, w) = t.dims4();
+        self.cache_dims = Some((n, c, h, w));
+
+        let y1 = self.branch1.forward(Value::F32(t.clone()), train).expect_f32("aspp b1");
+        let y2 = self.branch2.forward(Value::F32(t.clone()), train).expect_f32("aspp b2");
+
+        // GAP branch (Fig. 12c naive: binarize first / 12d: keep integer).
+        let gap_in = if self.naive { t.sign_pm1() } else { t.clone() };
+        if train {
+            self.cache_gap_in = Some(gap_in.clone());
+        }
+        // global average per (n, c), broadcast back
+        let mut pooled = Tensor::zeros(&[n, c, 1, 1]);
+        let inv = 1.0 / (h * w) as f32;
+        for ni in 0..n {
+            for ci in 0..c {
+                let plane = (ni * c + ci) * h * w;
+                pooled.data[ni * c + ci] =
+                    gap_in.data[plane..plane + h * w].iter().sum::<f32>() * inv;
+            }
+        }
+        let bn_out = self.gap_bn.forward(Value::F32(pooled), train).expect_f32("gap bn");
+        let gap_feat = self.gap_conv.forward(Value::F32(bn_out), train).expect_f32("gap conv");
+        // broadcast-add the three branches
+        let mut out = y1.add(&y2);
+        for ni in 0..n {
+            for ci in 0..c {
+                let v = gap_feat.data[ni * c + ci];
+                let plane = (ni * c + ci) * h * w;
+                for p in 0..h * w {
+                    out.data[plane + p] += v;
+                }
+            }
+        }
+        Value::F32(out)
+    }
+
+    fn backward(&mut self, z: Tensor) -> Tensor {
+        let (n, c, h, w) = self.cache_dims.expect("backward before forward");
+        let g1 = self.branch1.backward(z.clone());
+        let g2 = self.branch2.backward(z.clone());
+        // GAP branch backward: sum z over space → conv → bn → spread mean.
+        let mut z_pooled = Tensor::zeros(&[n, c, 1, 1]);
+        for ni in 0..n {
+            for ci in 0..c {
+                let plane = (ni * c + ci) * h * w;
+                z_pooled.data[ni * c + ci] = z.data[plane..plane + h * w].iter().sum();
+            }
+        }
+        let g_conv = self.gap_conv.backward(z_pooled);
+        let g_bn = self.gap_bn.backward(g_conv);
+        let inv = 1.0 / (h * w) as f32;
+        let mut g = g1.add(&g2);
+        if !self.naive {
+            // integer GAP branch: signal flows back into the features
+            for ni in 0..n {
+                for ci in 0..c {
+                    let v = g_bn.data[ni * c + ci] * inv;
+                    let plane = (ni * c + ci) * h * w;
+                    for p in 0..h * w {
+                        g.data[plane + p] += v;
+                    }
+                }
+            }
+        }
+        // naive: binarization blocks the (dense) signal — information loss,
+        // which is exactly the Table 12 failure mode being reproduced.
+        g
+    }
+
+    fn params(&mut self) -> Vec<ParamRef<'_>> {
+        let mut v = self.branch1.params();
+        v.extend(self.branch2.params());
+        v.extend(self.gap_bn.params());
+        v.extend(self.gap_conv.params());
+        v
+    }
+
+    fn zero_grads(&mut self) {
+        self.branch1.zero_grads();
+        self.branch2.zero_grads();
+        self.gap_bn.zero_grads();
+        self.gap_conv.zero_grads();
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+/// Build the Boolean segmentation net: logits at input resolution.
+pub fn segnet_boolean(cfg: &SegNetConfig, rng: &mut Rng) -> Sequential {
+    let wdt = cfg.width;
+    let mut net = Sequential::new("segnet_bold");
+    // FP stem, stride 2.
+    net.push(Box::new(Conv2d::new("stem", cfg.in_channels, wdt, 3, 2, 1, rng)));
+    // Boolean encoder block, stride 2 (÷4 total).
+    {
+        let mut main = Sequential::new("enc.main");
+        main.push(Box::new(ThresholdAct::new(
+            "enc.act1",
+            0.0,
+            BackwardScale::TanhPrime { fanin: wdt * 9 },
+        )));
+        main.push(Box::new(BoolConv2d::new("enc.conv1", wdt, wdt, 3, 2, 1, rng)));
+        main.push(Box::new(ThresholdAct::new(
+            "enc.act2",
+            0.0,
+            BackwardScale::TanhPrime { fanin: wdt * 9 },
+        )));
+        main.push(Box::new(BoolConv2d::new("enc.conv2", wdt, wdt, 3, 1, 1, rng)));
+        let mut short = Sequential::new("enc.short");
+        short.push(Box::new(ThresholdAct::new(
+            "enc.sact",
+            0.0,
+            BackwardScale::TanhPrime { fanin: wdt * 9 },
+        )));
+        short.push(Box::new(BoolConv2d::new("enc.sconv", wdt, wdt, 3, 2, 1, rng)));
+        net.push(Box::new(Residual::new("enc", main, short)));
+    }
+    // Context module.
+    net.push(Box::new(BoolAspp::new("aspp", wdt, cfg.naive_aspp, rng)));
+    // FP classifier + upsample to input resolution.
+    net.push(Box::new(Conv2d::new("cls", wdt, cfg.classes, 1, 1, 0, rng)));
+    net.push(Box::new(UpsampleNearest::new("up", 4)));
+    net
+}
+
+/// Mean intersection-over-union over `classes`, ignoring `ignore` labels.
+pub fn mean_iou(pred: &[usize], target: &[usize], classes: usize, ignore: Option<usize>) -> f32 {
+    assert_eq!(pred.len(), target.len());
+    let mut inter = vec![0usize; classes];
+    let mut union = vec![0usize; classes];
+    for (&p, &t) in pred.iter().zip(target) {
+        if Some(t) == ignore {
+            continue;
+        }
+        if p == t {
+            inter[t] += 1;
+            union[t] += 1;
+        } else {
+            if p < classes {
+                union[p] += 1;
+            }
+            union[t] += 1;
+        }
+    }
+    let mut sum = 0.0;
+    let mut cnt = 0;
+    for c in 0..classes {
+        if union[c] > 0 {
+            sum += inter[c] as f32 / union[c] as f32;
+            cnt += 1;
+        }
+    }
+    if cnt == 0 { 0.0 } else { sum / cnt as f32 }
+}
+
+/// Per-class IoU (for the Table 12 class-wise report).
+pub fn class_iou(pred: &[usize], target: &[usize], classes: usize) -> Vec<f32> {
+    let mut inter = vec![0usize; classes];
+    let mut union = vec![0usize; classes];
+    for (&p, &t) in pred.iter().zip(target) {
+        if p == t && t < classes {
+            inter[t] += 1;
+            union[t] += 1;
+        } else {
+            if p < classes {
+                union[p] += 1;
+            }
+            if t < classes {
+                union[t] += 1;
+            }
+        }
+    }
+    (0..classes)
+        .map(|c| if union[c] == 0 { 0.0 } else { inter[c] as f32 / union[c] as f32 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_backward_shapes() {
+        let mut rng = Rng::new(1);
+        for naive in [false, true] {
+            let cfg = SegNetConfig { hw: 16, width: 8, naive_aspp: naive, ..Default::default() };
+            let mut net = segnet_boolean(&cfg, &mut rng);
+            let x = Tensor::randn(&[2, 3, 16, 16], 1.0, &mut rng);
+            let y = net.forward(Value::F32(x), true).expect_f32("t");
+            assert_eq!(y.shape, vec![2, 6, 16, 16], "naive={naive}");
+            let g = net.backward(Tensor::full(&y.shape.clone(), 0.01));
+            assert_eq!(g.shape, vec![2, 3, 16, 16]);
+        }
+    }
+
+    #[test]
+    fn miou_perfect_and_disjoint() {
+        let t = vec![0, 0, 1, 1, 2, 2];
+        assert!((mean_iou(&t, &t, 3, None) - 1.0).abs() < 1e-6);
+        let p = vec![1, 1, 2, 2, 0, 0];
+        assert_eq!(mean_iou(&p, &t, 3, None), 0.0);
+    }
+
+    #[test]
+    fn miou_ignores_void() {
+        let t = vec![0, 0, 255, 1];
+        let p = vec![0, 0, 1, 1];
+        let m = mean_iou(&p, &t, 2, Some(255));
+        assert!((m - 1.0).abs() < 1e-6, "{m}");
+    }
+
+    #[test]
+    fn class_iou_partial() {
+        let t = vec![0, 0, 1, 1];
+        let p = vec![0, 1, 1, 1];
+        let ious = class_iou(&p, &t, 2);
+        assert!((ious[0] - 0.5).abs() < 1e-6); // inter 1, union 2
+        assert!((ious[1] - 2.0 / 3.0).abs() < 1e-6); // inter 2, union 3
+    }
+}

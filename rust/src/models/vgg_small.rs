@@ -1,0 +1,209 @@
+//! VGG-SMALL (Simonyan & Zisserman layout, the BinaryConnect variant used
+//! throughout the paper: Table 2, Table 6, Table 9, Fig. 1).
+//!
+//! Paper dims on CIFAR10 (32×32): 2×128C3 – MP2 – 2×256C3 – MP2 – 2×512C3
+//! – MP2 – 1024FC – 10. B⊕LD keeps the first conv and the last FC in FP
+//! (§4 Experimental Setup); everything in between is native Boolean with
+//! threshold activations, optionally BN ("B⊕LD with BN", Table 2).
+//! `width_mult` scales channels down for CPU-scale runs.
+
+use crate::nn::{
+    BackwardScale, BatchNorm2d, BoolConv2d, Conv2d, Flatten, Linear, MaxPool2d, ReLU,
+    Sequential, ThresholdAct,
+};
+use crate::util::Rng;
+
+/// Which training paradigm the net implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VggKind {
+    /// Full-precision baseline (ReLU + BN).
+    Fp,
+    /// B⊕LD: native Boolean interior.
+    Bold,
+}
+
+#[derive(Debug, Clone)]
+pub struct VggConfig {
+    pub kind: VggKind,
+    /// Input spatial size (paper: 32).
+    pub hw: usize,
+    pub in_channels: usize,
+    pub classes: usize,
+    /// Channel multiplier vs the paper's [128, 256, 512].
+    pub width_mult: f32,
+    /// Insert BN after each conv (the "with BN" rows of Table 2).
+    pub with_bn: bool,
+    /// Number of FC hidden layers (paper App. D.1.2: 3-FC classic vs 1-FC
+    /// modern — Table 9 uses the 1-FC variant).
+    pub fc_layers: usize,
+    pub fc_width: usize,
+}
+
+impl Default for VggConfig {
+    fn default() -> Self {
+        VggConfig {
+            kind: VggKind::Bold,
+            hw: 32,
+            in_channels: 3,
+            classes: 10,
+            width_mult: 0.25,
+            with_bn: false,
+            fc_layers: 1,
+            fc_width: 256,
+        }
+    }
+}
+
+impl VggConfig {
+    pub fn channels(&self) -> [usize; 3] {
+        let m = |c: f32| ((c * self.width_mult).round() as usize).max(8);
+        [m(128.0), m(256.0), m(512.0)]
+    }
+
+    /// Paper-exact shapes (width_mult = 1) for the energy model.
+    pub fn paper() -> Self {
+        VggConfig { width_mult: 1.0, fc_width: 1024, ..Default::default() }
+    }
+}
+
+/// Build VGG-SMALL per the config. Input: F32 NCHW in [-1, 1].
+pub fn vgg_small(cfg: &VggConfig, rng: &mut Rng) -> Sequential {
+    match cfg.kind {
+        VggKind::Fp => vgg_fp(cfg, rng),
+        VggKind::Bold => vgg_bold(cfg, rng),
+    }
+}
+
+fn vgg_bold(cfg: &VggConfig, rng: &mut Rng) -> Sequential {
+    let [c1, c2, c3] = cfg.channels();
+    let mut net = Sequential::new("vgg_small_bold");
+    let act = |name: &str, fanin: usize| {
+        // centered: see ThresholdAct::center — stabilizes post-MaxPool stats
+        Box::new(ThresholdAct::new(name, 0.0, BackwardScale::TanhPrime { fanin }).centered())
+    };
+    let bn = |net: &mut Sequential, name: &str, c: usize| {
+        if cfg.with_bn {
+            net.push(Box::new(BatchNorm2d::new(name, c)));
+        }
+    };
+
+    // Stage 1 — first conv stays FP on the real input (paper setup).
+    net.push(Box::new(Conv2d::new("conv1a", cfg.in_channels, c1, 3, 1, 1, rng)));
+    bn(&mut net, "bn1a", c1);
+    net.push(act("act1a", cfg.in_channels * 9));
+    net.push(Box::new(BoolConv2d::new("conv1b", c1, c1, 3, 1, 1, rng)));
+    net.push(Box::new(MaxPool2d::new("mp1", 2)));
+    bn(&mut net, "bn1b", c1);
+    net.push(act("act1b", c1 * 9));
+
+    // Stage 2
+    net.push(Box::new(BoolConv2d::new("conv2a", c1, c2, 3, 1, 1, rng)));
+    bn(&mut net, "bn2a", c2);
+    net.push(act("act2a", c1 * 9));
+    net.push(Box::new(BoolConv2d::new("conv2b", c2, c2, 3, 1, 1, rng)));
+    net.push(Box::new(MaxPool2d::new("mp2", 2)));
+    bn(&mut net, "bn2b", c2);
+    net.push(act("act2b", c2 * 9));
+
+    // Stage 3
+    net.push(Box::new(BoolConv2d::new("conv3a", c2, c3, 3, 1, 1, rng)));
+    bn(&mut net, "bn3a", c3);
+    net.push(act("act3a", c2 * 9));
+    net.push(Box::new(BoolConv2d::new("conv3b", c3, c3, 3, 1, 1, rng)));
+    net.push(Box::new(MaxPool2d::new("mp3", 2)));
+    bn(&mut net, "bn3b", c3);
+    net.push(act("act3b", c3 * 9));
+
+    // Classifier
+    net.push(Box::new(Flatten::new("flat")));
+    let spatial = cfg.hw / 8;
+    let mut d = c3 * spatial * spatial;
+    // Hidden FCs are Boolean; the final classifier stays FP (paper setup).
+    for i in 0..cfg.fc_layers.saturating_sub(1) {
+        net.push(Box::new(BoolLinear::new(&format!("fc{i}"), d, cfg.fc_width, rng)));
+        net.push(Box::new(
+            ThresholdAct::new(&format!("actfc{i}"), 0.0, BackwardScale::TanhPrime { fanin: d })
+                .centered(),
+        ));
+        d = cfg.fc_width;
+    }
+    net.push(Box::new(Linear::new("head", d, cfg.classes, rng)));
+    net
+}
+
+use crate::nn::BoolLinear;
+
+fn vgg_fp(cfg: &VggConfig, rng: &mut Rng) -> Sequential {
+    let [c1, c2, c3] = cfg.channels();
+    let mut net = Sequential::new("vgg_small_fp");
+    let mut stage = |net: &mut Sequential, idx: usize, cin: usize, cout: usize| {
+        net.push(Box::new(Conv2d::new(&format!("conv{idx}a"), cin, cout, 3, 1, 1, rng)));
+        if cfg.with_bn {
+            net.push(Box::new(BatchNorm2d::new(&format!("bn{idx}a"), cout)));
+        }
+        net.push(Box::new(ReLU::new(&format!("relu{idx}a"))));
+        net.push(Box::new(Conv2d::new(&format!("conv{idx}b"), cout, cout, 3, 1, 1, rng)));
+        net.push(Box::new(MaxPool2d::new(&format!("mp{idx}"), 2)));
+        if cfg.with_bn {
+            net.push(Box::new(BatchNorm2d::new(&format!("bn{idx}b"), cout)));
+        }
+        net.push(Box::new(ReLU::new(&format!("relu{idx}b"))));
+    };
+    stage(&mut net, 1, cfg.in_channels, c1);
+    stage(&mut net, 2, c1, c2);
+    stage(&mut net, 3, c2, c3);
+    net.push(Box::new(Flatten::new("flat")));
+    let spatial = cfg.hw / 8;
+    let mut d = c3 * spatial * spatial;
+    for i in 0..cfg.fc_layers.saturating_sub(1) {
+        net.push(Box::new(Linear::new(&format!("fc{i}"), d, cfg.fc_width, rng)));
+        net.push(Box::new(ReLU::new(&format!("relufc{i}"))));
+        d = cfg.fc_width;
+    }
+    net.push(Box::new(Linear::new("head", d, cfg.classes, rng)));
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Layer, Value};
+    use crate::tensor::Tensor;
+
+    fn smoke(cfg: &VggConfig) {
+        let mut rng = Rng::new(1);
+        let mut net = vgg_small(cfg, &mut rng);
+        let x = Tensor::randn(&[2, cfg.in_channels, cfg.hw, cfg.hw], 1.0, &mut rng);
+        let y = net.forward(Value::F32(x), true).expect_f32("t");
+        assert_eq!(y.shape, vec![2, cfg.classes]);
+        let g = net.backward(Tensor::full(&[2, cfg.classes], 0.1));
+        assert_eq!(g.shape, vec![2, cfg.in_channels, cfg.hw, cfg.hw]);
+    }
+
+    #[test]
+    fn bold_forward_backward_shapes() {
+        smoke(&VggConfig { hw: 16, width_mult: 0.125, ..Default::default() });
+    }
+
+    #[test]
+    fn bold_with_bn_shapes() {
+        smoke(&VggConfig { hw: 16, width_mult: 0.125, with_bn: true, ..Default::default() });
+    }
+
+    #[test]
+    fn fp_shapes() {
+        smoke(&VggConfig {
+            kind: VggKind::Fp,
+            hw: 16,
+            width_mult: 0.125,
+            with_bn: true,
+            ..Default::default()
+        });
+    }
+
+    #[test]
+    fn paper_channels() {
+        let cfg = VggConfig::paper();
+        assert_eq!(cfg.channels(), [128, 256, 512]);
+    }
+}

@@ -1,0 +1,268 @@
+//! Activations: the paper's threshold Boolean activation (§3.1) with the
+//! Appendix C backprop re-weighting, input binarization, and plain ReLU
+//! for FP baselines.
+
+use super::{Layer, Value};
+use crate::tensor::Tensor;
+
+/// Backward re-weighting through the step activation (Appendix C.1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BackwardScale {
+    /// Straight-through: pass z unchanged.
+    Identity,
+    /// z · tanh'(α·(s−τ)) with α = π/(2√(3m)) (Eq. 24) — the paper's
+    /// choice; m is the layer fan-in (pre-activation range).
+    TanhPrime { fanin: usize },
+    /// z · (1+|s−τ|)⁻² — an alternative inverse-square window mentioned in
+    /// Appendix C.1, kept for the ablation benches.
+    InvSquare,
+    /// z · exp(−|s−τ|) — ditto.
+    ExpDecay,
+}
+
+impl BackwardScale {
+    /// α of Eq. (24).
+    pub fn alpha(fanin: usize) -> f32 {
+        std::f32::consts::PI / (2.0 * (3.0 * fanin as f32).sqrt())
+    }
+
+    fn weight(&self, delta: f32) -> f32 {
+        match *self {
+            BackwardScale::Identity => 1.0,
+            BackwardScale::TanhPrime { fanin } => {
+                let t = (Self::alpha(fanin) * delta).tanh();
+                1.0 - t * t
+            }
+            BackwardScale::InvSquare => {
+                let d = 1.0 + delta.abs();
+                1.0 / (d * d)
+            }
+            BackwardScale::ExpDecay => (-delta.abs()).exp(),
+        }
+    }
+}
+
+/// The forward Boolean activation of §3.1: y = T iff s ≥ τ.
+///
+/// Output is bit-packed (`Value::Bit`); the backward applies the chosen
+/// [`BackwardScale`] window to the downstream signal — the variation of a
+/// step function is re-weighted by proximity to the threshold, which is
+/// the Appendix C regularization that makes deep Boolean training stable.
+pub struct ThresholdAct {
+    pub tau: f32,
+    pub scale: BackwardScale,
+    /// Centre the pre-activation at its batch mean before thresholding
+    /// (running mean at eval). This is the paper's "0-centered" variant
+    /// (code sample, Algorithm 4) — essential after MaxPool, whose max of
+    /// integer counts is biased positive and would otherwise saturate the
+    /// Boolean activations to T.
+    pub center: bool,
+    running_mean: Vec<f32>,
+    momentum: f32,
+    name: String,
+    cache_s: Option<Tensor>,
+    cache_shift: f32,
+}
+
+impl ThresholdAct {
+    pub fn new(name: &str, tau: f32, scale: BackwardScale) -> Self {
+        ThresholdAct {
+            tau,
+            scale,
+            center: false,
+            running_mean: vec![0.0],
+            momentum: 0.1,
+            name: name.to_string(),
+            cache_s: None,
+            cache_shift: 0.0,
+        }
+    }
+
+    pub fn centered(mut self) -> Self {
+        self.center = true;
+        self
+    }
+}
+
+impl Layer for ThresholdAct {
+    fn forward(&mut self, x: Value, train: bool) -> Value {
+        let s = x.expect_f32(&self.name);
+        let shift = if self.center {
+            if train {
+                let m = s.mean();
+                self.running_mean[0] =
+                    (1.0 - self.momentum) * self.running_mean[0] + self.momentum * m;
+                m
+            } else {
+                self.running_mean[0]
+            }
+        } else {
+            0.0
+        };
+        let thr = self.tau + shift;
+        let y = s.map(|v| if v >= thr { 1.0 } else { -1.0 });
+        if train {
+            self.cache_s = Some(s);
+            self.cache_shift = shift;
+        }
+        Value::bit_from_pm1(&y)
+    }
+
+    fn backward(&mut self, z: Tensor) -> Tensor {
+        let s = self.cache_s.as_ref().expect("backward before forward");
+        assert_eq!(z.shape, s.shape, "{}: z shape", self.name);
+        let thr = self.tau + self.cache_shift;
+        let scale = self.scale;
+        Tensor {
+            shape: z.shape.clone(),
+            data: z
+                .data
+                .iter()
+                .zip(&s.data)
+                .map(|(&zv, &sv)| zv * scale.weight(sv - thr))
+                .collect(),
+        }
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn buffers(&mut self) -> Vec<(String, &mut Vec<f32>)> {
+        if self.center {
+            vec![(format!("{}.running_mean", self.name), &mut self.running_mean)]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// Input binarization: real input → ±1 bits (sign). Used at the front of
+/// fully-Boolean models; the backward passes the signal through unchanged
+/// (there is nothing upstream to optimize).
+pub struct Binarize {
+    name: String,
+}
+
+impl Binarize {
+    pub fn new(name: &str) -> Self {
+        Binarize { name: name.to_string() }
+    }
+}
+
+impl Layer for Binarize {
+    fn forward(&mut self, x: Value, _train: bool) -> Value {
+        let t = x.to_f32();
+        Value::bit_from_pm1(&t.sign_pm1())
+    }
+
+    fn backward(&mut self, z: Tensor) -> Tensor {
+        z
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+/// Plain ReLU for the FP baselines and FP heads.
+pub struct ReLU {
+    name: String,
+    cache_mask: Option<Vec<bool>>,
+}
+
+impl ReLU {
+    pub fn new(name: &str) -> Self {
+        ReLU { name: name.to_string(), cache_mask: None }
+    }
+}
+
+impl Layer for ReLU {
+    fn forward(&mut self, x: Value, train: bool) -> Value {
+        let t = x.expect_f32(&self.name);
+        if train {
+            self.cache_mask = Some(t.data.iter().map(|&v| v > 0.0).collect());
+        }
+        Value::F32(t.map(|v| v.max(0.0)))
+    }
+
+    fn backward(&mut self, z: Tensor) -> Tensor {
+        let mask = self.cache_mask.as_ref().expect("backward before forward");
+        assert_eq!(mask.len(), z.len());
+        Tensor {
+            shape: z.shape.clone(),
+            data: z.data.iter().zip(mask).map(|(&v, &m)| if m { v } else { 0.0 }).collect(),
+        }
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn threshold_forward_signs() {
+        let mut a = ThresholdAct::new("act", 0.0, BackwardScale::Identity);
+        let s = Tensor::from_vec(&[1, 4], vec![-2.0, 0.0, 0.5, -0.1]);
+        let y = a.forward(Value::F32(s), true).to_f32();
+        assert_eq!(y.data, vec![-1.0, 1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn tanh_prime_attenuates_far_from_threshold() {
+        let fanin = 256;
+        let mut a = ThresholdAct::new("act", 0.0, BackwardScale::TanhPrime { fanin });
+        let s = Tensor::from_vec(&[1, 3], vec![0.0, 20.0, 200.0]);
+        let _ = a.forward(Value::F32(s), true);
+        let g = a.backward(Tensor::full(&[1, 3], 1.0));
+        assert!((g.data[0] - 1.0).abs() < 1e-6, "at threshold, full signal");
+        assert!(g.data[1] < g.data[0] && g.data[2] < g.data[1], "{:?}", g.data);
+    }
+
+    #[test]
+    fn alpha_matches_eq_24() {
+        // α = π / (2 √(3m))
+        let a = BackwardScale::alpha(27);
+        assert!((a - std::f32::consts::PI / 18.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn all_scales_are_unit_at_threshold_and_decay() {
+        for scale in [
+            BackwardScale::TanhPrime { fanin: 64 },
+            BackwardScale::InvSquare,
+            BackwardScale::ExpDecay,
+        ] {
+            assert!((scale.weight(0.0) - 1.0).abs() < 1e-6, "{scale:?}");
+            assert!(scale.weight(5.0) < 1.0);
+            assert!(scale.weight(10.0) < scale.weight(5.0));
+            // symmetric window
+            assert!((scale.weight(-3.0) - scale.weight(3.0)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn relu_backward_masks() {
+        let mut r = ReLU::new("relu");
+        let x = Tensor::from_vec(&[1, 4], vec![-1.0, 2.0, -3.0, 4.0]);
+        let y = r.forward(Value::F32(x), true).expect_f32("t");
+        assert_eq!(y.data, vec![0.0, 2.0, 0.0, 4.0]);
+        let g = r.backward(Tensor::full(&[1, 4], 1.0));
+        assert_eq!(g.data, vec![0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn binarize_outputs_bits() {
+        let mut rng = Rng::new(1);
+        let mut b = Binarize::new("bin");
+        let x = Tensor::randn(&[2, 8], 1.0, &mut rng);
+        let y = b.forward(Value::F32(x.clone()), true);
+        assert!(y.is_bit());
+        assert_eq!(y.to_f32(), x.sign_pm1());
+    }
+}

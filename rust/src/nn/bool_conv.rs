@@ -1,0 +1,281 @@
+//! Boolean 2-D convolution: the conv form of the paper's Boolean neuron.
+//!
+//! Conv = bit-level im2col + the same xnor-popcount GEMM as `BoolLinear`.
+//! Zero padding is the adjoined 0 of the three-valued logic 𝕄
+//! (Definition 3.1): padded taps are carried in a validity *mask* and
+//! contribute nothing to the count — forward uses
+//! [`BitMatrix::xnor_gemm_masked`], the weight vote uses
+//! [`BitMatrix::backward_weight_masked`].
+
+use super::{Layer, ParamRef, Value};
+use crate::tensor::{BitMatrix, Tensor};
+use crate::util::Rng;
+
+/// Boolean Conv2d (NCHW, square kernel).
+pub struct BoolConv2d {
+    pub c_in: usize,
+    pub c_out: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Packed weights: `c_out` rows of `c_in·k·k` bits.
+    pub weights: BitMatrix,
+    pub bool_bprop: bool,
+    name: String,
+    grad: Tensor,
+    accum: Tensor,
+    ratio: f32,
+    // caches
+    cache_patches: Option<BitMatrix>,
+    cache_mask: Option<BitMatrix>,
+    cache_dims: Option<(usize, usize, usize, usize, usize)>, // n, h, w, oh, ow
+    /// Geometry-keyed validity-mask cache: (n, h, w, mask).
+    cache_mask_geom: Option<(usize, usize, usize, BitMatrix)>,
+}
+
+impl BoolConv2d {
+    pub fn new(
+        name: &str,
+        c_in: usize,
+        c_out: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        let fanin = c_in * k * k;
+        BoolConv2d {
+            c_in,
+            c_out,
+            k,
+            stride,
+            pad,
+            weights: BitMatrix::random(c_out, fanin, rng),
+            bool_bprop: false,
+            name: name.to_string(),
+            grad: Tensor::zeros(&[c_out, fanin]),
+            accum: Tensor::zeros(&[c_out, fanin]),
+            ratio: 1.0,
+            cache_patches: None,
+            cache_mask: None,
+            cache_dims: None,
+            cache_mask_geom: None,
+        }
+    }
+
+    pub fn with_bool_bprop(mut self) -> Self {
+        self.bool_bprop = true;
+        self
+    }
+
+    pub fn fanin(&self) -> usize {
+        self.c_in * self.k * self.k
+    }
+
+    /// Output spatial size for an input of size (h, w).
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        (
+            (h + 2 * self.pad - self.k) / self.stride + 1,
+            (w + 2 * self.pad - self.k) / self.stride + 1,
+        )
+    }
+
+    /// Bit-level im2col: patches (N·OH·OW × C·k·k) + validity mask.
+    ///
+    /// The k taps along x map to *consecutive* source columns, so each
+    /// (output-row, channel, ky) copies one ≤k-bit run with a single
+    /// word-level `get_bits`/`set_bits` pair — ~k× fewer bit ops than the
+    /// naive per-tap loop (§Perf iteration log). The mask depends only on
+    /// the geometry, so it is built once and cached by the layer.
+    fn bit_im2col(
+        &mut self,
+        bits: &BitMatrix,
+        n: usize,
+        h: usize,
+        w: usize,
+    ) -> (BitMatrix, BitMatrix, usize, usize) {
+        let (oh, ow) = self.out_hw(h, w);
+        let (c, k, s, p) = (self.c_in, self.k, self.stride, self.pad);
+        assert!(k <= 56, "kernel too large for word-level im2col");
+        let cols = c * k * k;
+        let mut patches = BitMatrix::zeros(n * oh * ow, cols);
+        let build_mask = match &self.cache_mask_geom {
+            Some((gn, gh, gw, _)) if (*gn, *gh, *gw) == (n, h, w) => false,
+            _ => true,
+        };
+        let mut mask = if build_mask {
+            BitMatrix::zeros(n * oh * ow, cols)
+        } else {
+            BitMatrix::zeros(0, 0) // placeholder, replaced below
+        };
+        for ni in 0..n {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let row = (ni * oh + oy) * ow + ox;
+                    // valid kx range is contiguous: ix = ox·s + kx − p ∈ [0, w)
+                    let kx_lo = p.saturating_sub(ox * s).min(k);
+                    let kx_hi = k.min((w + p).saturating_sub(ox * s));
+                    if kx_lo >= kx_hi {
+                        continue;
+                    }
+                    let run = kx_hi - kx_lo;
+                    let ix0 = ox * s + kx_lo - p;
+                    for ky in 0..k {
+                        let iy = (oy * s + ky) as isize - p as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for ci in 0..c {
+                            let src_col = (ci * h + iy as usize) * w + ix0;
+                            let dst_col = (ci * k + ky) * k + kx_lo;
+                            let chunk = bits.get_bits(ni, src_col, run);
+                            patches.set_bits(row, dst_col, run, chunk);
+                            if build_mask {
+                                mask.set_bits(row, dst_col, run, u64::MAX);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if build_mask {
+            self.cache_mask_geom = Some((n, h, w, mask));
+        }
+        let mask = self.cache_mask_geom.as_ref().unwrap().3.clone();
+        (patches, mask, oh, ow)
+    }
+}
+
+impl Layer for BoolConv2d {
+    fn forward(&mut self, x: Value, train: bool) -> Value {
+        let (bits, shape) = x.expect_bit(&self.name);
+        assert_eq!(shape.len(), 4, "{}: need NCHW", self.name);
+        let (n, c, h, w) = (shape[0], shape[1], shape[2], shape[3]);
+        assert_eq!(c, self.c_in, "{}: channel mismatch", self.name);
+        let (patches, mask, oh, ow) = self.bit_im2col(&bits, n, h, w);
+        let s_rows = patches.xnor_gemm_masked(&self.weights, &mask); // (N·OH·OW × Cout)
+        let s = s_rows.rows_to_nchw(n, self.c_out, oh, ow);
+        if train {
+            self.cache_patches = Some(patches);
+            self.cache_mask = Some(mask);
+            self.cache_dims = Some((n, h, w, oh, ow));
+        }
+        Value::F32(s)
+    }
+
+    fn backward(&mut self, z: Tensor) -> Tensor {
+        let (n, h, w, oh, ow) = self.cache_dims.expect("backward before forward");
+        assert_eq!(z.shape, vec![n, self.c_out, oh, ow], "{}: bad z", self.name);
+        let z_rows = z.nchw_to_rows(); // (N·OH·OW × Cout)
+        let patches = self.cache_patches.as_ref().unwrap();
+        let mask = self.cache_mask.as_ref().unwrap();
+
+        // Weight vote (Eq. 7): padded taps vote 0.
+        let q_w = patches.backward_weight_masked(&z_rows, mask);
+        self.grad.add_inplace(&q_w);
+
+        // Upstream signal (Eq. 8): scatter the patch-level signal back to
+        // input positions. Padded lanes are dropped by col2im geometry —
+        // the same masking, expressed spatially.
+        let g_cols = self.weights.backward_input(&z_rows); // (N·OH·OW × C·k·k)
+        let mut g_x = g_cols.col2im(n, self.c_in, h, w, self.k, self.stride, self.pad);
+        if self.bool_bprop {
+            g_x = g_x.sign_pm1();
+        }
+        g_x
+    }
+
+    fn params(&mut self) -> Vec<ParamRef<'_>> {
+        vec![ParamRef::Bool {
+            name: format!("{}.weight", self.name),
+            bits: &mut self.weights,
+            grad: &mut self.grad,
+            accum: &mut self.accum,
+            ratio: &mut self.ratio,
+        }]
+    }
+
+    fn zero_grads(&mut self) {
+        self.grad.scale_inplace(0.0);
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Dense reference conv in the embedded domain with 𝕄-zero padding.
+    fn ref_conv(x: &Tensor, wbits: &BitMatrix, c_out: usize, k: usize, s: usize, p: usize) -> Tensor {
+        let cols = x.im2col(k, s, p); // zero padding == e(0)
+        let w = wbits.to_pm1();
+        let (n, _c, h, wd) = x.dims4();
+        let oh = (h + 2 * p - k) / s + 1;
+        let ow = (wd + 2 * p - k) / s + 1;
+        cols.matmul_bt(&w).rows_to_nchw(n, c_out, oh, ow)
+    }
+
+    #[test]
+    fn forward_matches_dense_embedded_conv() {
+        let mut rng = Rng::new(1);
+        for (s, p) in [(1, 1), (1, 0), (2, 1)] {
+            let mut conv = BoolConv2d::new("bc", 3, 5, 3, s, p, &mut rng);
+            let x = Tensor::rand_pm1(&[2, 3, 8, 8], &mut rng);
+            let out = conv.forward(Value::bit_from_pm1(&x), true).expect_f32("t");
+            let want = ref_conv(&x, &conv.weights, 5, 3, s, p);
+            assert_eq!(out.max_abs_diff(&want), 0.0, "s={s} p={p}");
+        }
+    }
+
+    #[test]
+    fn backward_weight_vote_matches_dense() {
+        let mut rng = Rng::new(2);
+        let mut conv = BoolConv2d::new("bc", 2, 4, 3, 1, 1, &mut rng);
+        let x = Tensor::rand_pm1(&[2, 2, 6, 6], &mut rng);
+        let _ = conv.forward(Value::bit_from_pm1(&x), true);
+        let z = Tensor::randn(&[2, 4, 6, 6], 1.0, &mut rng);
+        let _ = conv.backward(z.clone());
+        // dense: q_w = z_rowsᵀ @ cols (cols with 0 at padded taps)
+        let cols = x.im2col(3, 1, 1);
+        let q_ref = z.nchw_to_rows().matmul_at(&cols);
+        assert!(conv.grad.max_abs_diff(&q_ref) < 1e-3);
+    }
+
+    #[test]
+    fn backward_input_matches_dense() {
+        let mut rng = Rng::new(3);
+        let mut conv = BoolConv2d::new("bc", 2, 3, 3, 1, 1, &mut rng);
+        let x = Tensor::rand_pm1(&[1, 2, 5, 5], &mut rng);
+        let _ = conv.forward(Value::bit_from_pm1(&x), true);
+        let z = Tensor::randn(&[1, 3, 5, 5], 1.0, &mut rng);
+        let g = conv.backward(z.clone());
+        let g_cols = z.nchw_to_rows().matmul(&conv.weights.to_pm1());
+        let g_ref = g_cols.col2im(1, 2, 5, 5, 3, 1, 1);
+        assert!(g.max_abs_diff(&g_ref) < 1e-3);
+    }
+
+    #[test]
+    fn strided_shapes() {
+        let mut rng = Rng::new(4);
+        let mut conv = BoolConv2d::new("bc", 3, 8, 3, 2, 1, &mut rng);
+        let x = Tensor::rand_pm1(&[2, 3, 8, 8], &mut rng);
+        let out = conv.forward(Value::bit_from_pm1(&x), false).expect_f32("t");
+        assert_eq!(out.shape, vec![2, 8, 4, 4]);
+    }
+
+    #[test]
+    fn preactivation_range_respects_valid_fanin() {
+        // Interior positions see full fan-in; corners see fewer valid taps.
+        let mut rng = Rng::new(5);
+        let mut conv = BoolConv2d::new("bc", 1, 1, 3, 1, 1, &mut rng);
+        let x = Tensor::rand_pm1(&[1, 1, 4, 4], &mut rng);
+        let out = conv.forward(Value::bit_from_pm1(&x), false).expect_f32("t");
+        // corner has 4 valid taps → |s| ≤ 4; interior ≤ 9
+        assert!(out.data[0].abs() <= 4.0);
+        let interior = out.data[1 * 4 + 1]; // position (0,0,1,1)
+        assert!(interior.abs() <= 9.0);
+    }
+}

@@ -1,0 +1,254 @@
+//! The paper's Boolean linear layer (Eq. 1/3) with xnor logic, native
+//! Boolean weights and the Boolean backward of §3.3 / Appendix B.
+
+use super::{Layer, ParamRef, Value};
+use crate::tensor::{BitMatrix, Tensor};
+use crate::util::Rng;
+
+/// Fully-connected Boolean layer: `n_out` neurons of fan-in `n_in`.
+///
+/// Forward (Eq. 3): `s_kj = b_j + Σ_i xnor(x_ki, w_ji)` — computed as
+/// XOR+POPCNT on packed words for Boolean inputs, or as the mixed-type
+/// neuron of Definition 3.5 (`s = x · e(W)ᵀ`) for real inputs.
+///
+/// Backward (Eqs. 4–8, Algorithms 6/7): with downstream signal `z`,
+/// `q_W = zᵀ e(X)` (vote over the batch) and `g_X = z e(W)` (vote over the
+/// outputs). With `bool_bprop`, `g_X` is sign-quantized before being passed
+/// upstream (the Boolean-signal case of Fig. 2).
+pub struct BoolLinear {
+    pub n_in: usize,
+    pub n_out: usize,
+    /// Packed weights: `n_out` rows of `n_in` bits (bit=1 ↔ T ↔ +1).
+    pub weights: BitMatrix,
+    /// Optional Boolean bias (pairs with a constant-T input).
+    pub bias: Option<BitMatrix>,
+    /// Quantize the upstream signal to ±1 (Algorithm 6) instead of passing
+    /// the real-valued vote (Algorithm 7).
+    pub bool_bprop: bool,
+    /// Centre pre-activations at 0 (subtract fan-in/2 of the counting
+    /// form): with the ±1 embedding the sum is already 0-centred, so this
+    /// is an optional extra shift used with BN, kept for parity with the
+    /// paper's code sample (Algorithm 4).
+    name: String,
+    // --- optimizer state (Boolean optimizer, Algorithm 8) ---
+    grad: Tensor,
+    accum: Tensor,
+    ratio: f32,
+    bias_grad: Tensor,
+    bias_accum: Tensor,
+    bias_ratio: f32,
+    // --- cached forward inputs ---
+    cache_bits: Option<BitMatrix>,
+    cache_f32: Option<Tensor>,
+}
+
+impl BoolLinear {
+    pub fn new(name: &str, n_in: usize, n_out: usize, rng: &mut Rng) -> Self {
+        BoolLinear {
+            n_in,
+            n_out,
+            weights: BitMatrix::random(n_out, n_in, rng),
+            bias: None,
+            bool_bprop: false,
+            name: name.to_string(),
+            grad: Tensor::zeros(&[n_out, n_in]),
+            accum: Tensor::zeros(&[n_out, n_in]),
+            ratio: 1.0,
+            bias_grad: Tensor::zeros(&[1, n_out]),
+            bias_accum: Tensor::zeros(&[1, n_out]),
+            bias_ratio: 1.0,
+            cache_bits: None,
+            cache_f32: None,
+        }
+    }
+
+    pub fn with_bias(mut self, rng: &mut Rng) -> Self {
+        self.bias = Some(BitMatrix::random(1, self.n_out, rng));
+        self
+    }
+
+    pub fn with_bool_bprop(mut self) -> Self {
+        self.bool_bprop = true;
+        self
+    }
+
+    fn add_bias(&self, s: &mut Tensor) {
+        if let Some(b) = &self.bias {
+            let n = self.n_out;
+            for i in 0..s.rows() {
+                for j in 0..n {
+                    *s.at2_mut(i, j) += b.pm1(0, j);
+                }
+            }
+        }
+    }
+}
+
+impl Layer for BoolLinear {
+    fn forward(&mut self, x: Value, train: bool) -> Value {
+        let mut s = match &x {
+            Value::Bit { bits, shape } => {
+                assert_eq!(shape.iter().skip(1).product::<usize>(), self.n_in,
+                    "{}: fan-in mismatch {:?}", self.name, shape);
+                let s = bits.xnor_gemm(&self.weights);
+                if train {
+                    self.cache_bits = Some(bits.clone());
+                    self.cache_f32 = None;
+                }
+                s
+            }
+            Value::F32(t) => {
+                // Mixed-type neuron (Definition 3.5): real inputs, Boolean
+                // weights — s = x · e(W)ᵀ via a dense matmul against the
+                // unpacked ±1 weight view.
+                let flat = t.view(&[t.shape[0], self.n_in]);
+                let wd = self.weights.to_pm1();
+                let s = flat.matmul_bt(&wd);
+                if train {
+                    self.cache_f32 = Some(flat);
+                    self.cache_bits = None;
+                }
+                s
+            }
+        };
+        self.add_bias(&mut s);
+        Value::F32(s)
+    }
+
+    fn backward(&mut self, z: Tensor) -> Tensor {
+        assert_eq!(z.cols(), self.n_out, "{}: bad z", self.name);
+        // Weight vote, Eq. (7): q_W += zᵀ · e(X).
+        let q_w = if let Some(bits) = &self.cache_bits {
+            bits.backward_weight(&z)
+        } else if let Some(xf) = &self.cache_f32 {
+            z.matmul_at(xf) // zᵀ (n_out×B) · x (B×n_in)
+        } else {
+            panic!("{}: backward before forward", self.name)
+        };
+        self.grad.add_inplace(&q_w);
+        // Bias vote: pairs with constant TRUE input ⇒ q_b = Σ_k z.
+        if self.bias.is_some() {
+            let qb = z.sum_rows().reshape(&[1, self.n_out]);
+            self.bias_grad.add_inplace(&qb);
+        }
+        // Upstream signal, Eq. (8): g_X = z · e(W).
+        let mut g_x = self.weights.backward_input(&z);
+        if self.bool_bprop {
+            // Algorithm 6: the upstream layer receives a Boolean signal —
+            // sign-quantize in the embedded domain.
+            g_x = g_x.sign_pm1();
+        }
+        g_x
+    }
+
+    fn params(&mut self) -> Vec<ParamRef<'_>> {
+        let mut v = vec![ParamRef::Bool {
+            name: format!("{}.weight", self.name),
+            bits: &mut self.weights,
+            grad: &mut self.grad,
+            accum: &mut self.accum,
+            ratio: &mut self.ratio,
+        }];
+        if let Some(b) = &mut self.bias {
+            v.push(ParamRef::Bool {
+                name: format!("{}.bias", self.name),
+                bits: b,
+                grad: &mut self.bias_grad,
+                accum: &mut self.bias_accum,
+                ratio: &mut self.bias_ratio,
+            });
+        }
+        v
+    }
+
+    fn zero_grads(&mut self) {
+        self.grad.scale_inplace(0.0);
+        self.bias_grad.scale_inplace(0.0);
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_matches_embedded_matmul() {
+        let mut rng = Rng::new(1);
+        let mut l = BoolLinear::new("bl", 70, 12, &mut rng);
+        let x = Tensor::rand_pm1(&[5, 70], &mut rng);
+        let out = l.forward(Value::bit_from_pm1(&x), true).expect_f32("t");
+        let want = x.matmul_bt(&l.weights.to_pm1());
+        assert_eq!(out.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn forward_mixed_type_real_inputs() {
+        // Definition 3.5: Boolean weights, real inputs.
+        let mut rng = Rng::new(2);
+        let mut l = BoolLinear::new("bl", 33, 7, &mut rng);
+        let x = Tensor::randn(&[4, 33], 1.0, &mut rng);
+        let out = l.forward(Value::F32(x.clone()), true).expect_f32("t");
+        let want = x.matmul_bt(&l.weights.to_pm1());
+        assert!(out.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn backward_votes_match_reference() {
+        let mut rng = Rng::new(3);
+        let mut l = BoolLinear::new("bl", 48, 9, &mut rng);
+        let x = Tensor::rand_pm1(&[6, 48], &mut rng);
+        let _ = l.forward(Value::bit_from_pm1(&x), true);
+        let z = Tensor::randn(&[6, 9], 1.0, &mut rng);
+        let g_x = l.backward(z.clone());
+        // reference: g_X = z·e(W), q_W = zᵀ·e(X)
+        let wd = l.weights.to_pm1();
+        assert!(g_x.max_abs_diff(&z.matmul(&wd)) < 1e-4);
+        let q_ref = z.matmul_at(&x);
+        assert!(l.grad.max_abs_diff(&q_ref) < 1e-4);
+    }
+
+    #[test]
+    fn bool_bprop_signs_the_signal() {
+        let mut rng = Rng::new(4);
+        let mut l = BoolLinear::new("bl", 32, 8, &mut rng).with_bool_bprop();
+        let x = Tensor::rand_pm1(&[3, 32], &mut rng);
+        let _ = l.forward(Value::bit_from_pm1(&x), true);
+        let g = l.backward(Tensor::randn(&[3, 8], 1.0, &mut rng));
+        assert!(g.data.iter().all(|&v| v == 1.0 || v == -1.0));
+    }
+
+    #[test]
+    fn bias_shifts_by_pm1() {
+        let mut rng = Rng::new(5);
+        let mut l = BoolLinear::new("bl", 16, 4, &mut rng).with_bias(&mut rng);
+        let x = Tensor::rand_pm1(&[2, 16], &mut rng);
+        let with_bias = l.forward(Value::bit_from_pm1(&x), false).expect_f32("t");
+        let b = l.bias.take().unwrap();
+        let without = l.forward(Value::bit_from_pm1(&x), false).expect_f32("t");
+        for i in 0..2 {
+            for j in 0..4 {
+                assert_eq!(with_bias.at2(i, j) - without.at2(i, j), b.pm1(0, j));
+            }
+        }
+    }
+
+    #[test]
+    fn grads_accumulate_and_zero() {
+        let mut rng = Rng::new(6);
+        let mut l = BoolLinear::new("bl", 16, 4, &mut rng);
+        let x = Tensor::rand_pm1(&[2, 16], &mut rng);
+        let _ = l.forward(Value::bit_from_pm1(&x), true);
+        let z = Tensor::full(&[2, 4], 1.0);
+        l.backward(z.clone());
+        let g1 = l.grad.clone();
+        let _ = l.forward(Value::bit_from_pm1(&x), true);
+        l.backward(z);
+        assert!(l.grad.max_abs_diff(&g1.scale(2.0)) < 1e-5);
+        l.zero_grads();
+        assert_eq!(l.grad.sum(), 0.0);
+    }
+}

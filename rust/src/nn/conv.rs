@@ -1,0 +1,170 @@
+//! Dense FP 2-D convolution (im2col + GEMM) with full backward — the
+//! substrate for FP baselines and the BNN baselines' latent-weight path.
+
+use super::{Layer, ParamRef, Value};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// FP Conv2d (NCHW, square kernel). Weights stored (c_out × c_in·k·k).
+pub struct Conv2d {
+    pub c_in: usize,
+    pub c_out: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub w: Tensor,
+    pub b: Tensor,
+    name: String,
+    gw: Tensor,
+    gb: Tensor,
+    cache_cols: Option<Tensor>,
+    cache_dims: Option<(usize, usize, usize, usize, usize)>,
+}
+
+impl Conv2d {
+    pub fn new(
+        name: &str,
+        c_in: usize,
+        c_out: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        let fanin = c_in * k * k;
+        let std = (2.0 / fanin as f32).sqrt();
+        Conv2d {
+            c_in,
+            c_out,
+            k,
+            stride,
+            pad,
+            w: Tensor::randn(&[c_out, fanin], std, rng),
+            b: Tensor::zeros(&[c_out]),
+            name: name.to_string(),
+            gw: Tensor::zeros(&[c_out, fanin]),
+            gb: Tensor::zeros(&[c_out]),
+            cache_cols: None,
+            cache_dims: None,
+        }
+    }
+
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        (
+            (h + 2 * self.pad - self.k) / self.stride + 1,
+            (w + 2 * self.pad - self.k) / self.stride + 1,
+        )
+    }
+}
+
+impl Layer for Conv2d {
+    fn forward(&mut self, x: Value, train: bool) -> Value {
+        let t = x.to_f32();
+        let (n, c, h, w) = t.dims4();
+        assert_eq!(c, self.c_in, "{}: channels", self.name);
+        let (oh, ow) = self.out_hw(h, w);
+        let cols = t.im2col(self.k, self.stride, self.pad);
+        let mut y_rows = cols.matmul_bt(&self.w); // (N·OH·OW × Cout)
+        for i in 0..y_rows.rows() {
+            for j in 0..self.c_out {
+                *y_rows.at2_mut(i, j) += self.b.data[j];
+            }
+        }
+        let y = y_rows.rows_to_nchw(n, self.c_out, oh, ow);
+        if train {
+            self.cache_cols = Some(cols);
+            self.cache_dims = Some((n, h, w, oh, ow));
+        }
+        Value::F32(y)
+    }
+
+    fn backward(&mut self, z: Tensor) -> Tensor {
+        let (n, h, w, oh, ow) = self.cache_dims.expect("backward before forward");
+        assert_eq!(z.shape, vec![n, self.c_out, oh, ow]);
+        let z_rows = z.nchw_to_rows();
+        let cols = self.cache_cols.as_ref().unwrap();
+        self.gw.add_inplace(&z_rows.matmul_at(cols));
+        self.gb.add_inplace(&z_rows.sum_rows());
+        let g_cols = z_rows.matmul(&self.w);
+        g_cols.col2im(n, self.c_in, h, w, self.k, self.stride, self.pad)
+    }
+
+    fn params(&mut self) -> Vec<ParamRef<'_>> {
+        vec![
+            ParamRef::Real { name: format!("{}.w", self.name), w: &mut self.w, grad: &mut self.gw },
+            ParamRef::Real { name: format!("{}.b", self.name), w: &mut self.b, grad: &mut self.gb },
+        ]
+    }
+
+    fn zero_grads(&mut self) {
+        self.gw.scale_inplace(0.0);
+        self.gb.scale_inplace(0.0);
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_kernel_passthrough() {
+        // 1x1 conv with identity-ish weights reproduces the input channel.
+        let mut rng = Rng::new(1);
+        let mut conv = Conv2d::new("c", 2, 2, 1, 1, 0, &mut rng);
+        conv.w = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        conv.b = Tensor::zeros(&[2]);
+        let x = Tensor::randn(&[1, 2, 3, 3], 1.0, &mut rng);
+        let y = conv.forward(Value::F32(x.clone()), false).expect_f32("t");
+        assert!(y.max_abs_diff(&x) < 1e-6);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let mut rng = Rng::new(2);
+        let mut conv = Conv2d::new("c", 2, 3, 3, 1, 1, &mut rng);
+        let x = Tensor::randn(&[2, 2, 4, 4], 1.0, &mut rng);
+        let y = conv.forward(Value::F32(x.clone()), true).expect_f32("t");
+        let gx = conv.backward(y.clone()); // L = ||y||²/2
+        let eps = 1e-3;
+        let loss = |c: &mut Conv2d, x: &Tensor| -> f32 {
+            let y = c.forward(Value::F32(x.clone()), false).expect_f32("t");
+            0.5 * y.data.iter().map(|v| v * v).sum::<f32>()
+        };
+        for &(i, j) in &[(0usize, 0usize), (2, 17), (1, 9)] {
+            let orig = conv.w.at2(i, j);
+            *conv.w.at2_mut(i, j) = orig + eps;
+            let lp = loss(&mut conv, &x);
+            *conv.w.at2_mut(i, j) = orig - eps;
+            let lm = loss(&mut conv, &x);
+            *conv.w.at2_mut(i, j) = orig;
+            let num = (lp - lm) / (2.0 * eps);
+            assert!(
+                (num - conv.gw.at2(i, j)).abs() < 0.05 * num.abs().max(1.0),
+                "w[{i},{j}]: fd {num} vs analytic {}",
+                conv.gw.at2(i, j)
+            );
+        }
+        // input gradient spot check
+        let idx = 7;
+        let mut x2 = x.clone();
+        x2.data[idx] += eps;
+        let lp = loss(&mut conv, &x2);
+        x2.data[idx] -= 2.0 * eps;
+        let lm = loss(&mut conv, &x2);
+        let num = (lp - lm) / (2.0 * eps);
+        assert!((num - gx.data[idx]).abs() < 0.05 * num.abs().max(1.0));
+    }
+
+    #[test]
+    fn strided_output_shape() {
+        let mut rng = Rng::new(3);
+        let mut conv = Conv2d::new("c", 3, 8, 3, 2, 1, &mut rng);
+        let x = Tensor::zeros(&[2, 3, 8, 8]);
+        let y = conv.forward(Value::F32(x), false).expect_f32("t");
+        assert_eq!(y.shape, vec![2, 8, 4, 4]);
+    }
+}

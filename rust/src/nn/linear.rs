@@ -1,0 +1,128 @@
+//! Dense FP linear layer (the paper keeps the first/last layers in FP and
+//! optimizes them with Adam — §4 Experimental Setup).
+
+use super::{Layer, ParamRef, Value};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// y = x·Wᵀ + b with W (n_out × n_in) FP.
+pub struct Linear {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub w: Tensor,
+    pub b: Tensor,
+    name: String,
+    gw: Tensor,
+    gb: Tensor,
+    cache_x: Option<Tensor>,
+}
+
+impl Linear {
+    pub fn new(name: &str, n_in: usize, n_out: usize, rng: &mut Rng) -> Self {
+        let std = (2.0 / n_in as f32).sqrt();
+        Linear {
+            n_in,
+            n_out,
+            w: Tensor::randn(&[n_out, n_in], std, rng),
+            b: Tensor::zeros(&[n_out]),
+            name: name.to_string(),
+            gw: Tensor::zeros(&[n_out, n_in]),
+            gb: Tensor::zeros(&[n_out]),
+            cache_x: None,
+        }
+    }
+}
+
+impl Layer for Linear {
+    fn forward(&mut self, x: Value, train: bool) -> Value {
+        // Accepts Bit input too (converted to ±1): the "real weights,
+        // Boolean inputs" mixed case of Definition 3.5.
+        let t = x.to_f32();
+        let flat = t.view(&[t.shape[0], self.n_in]);
+        let mut y = flat.matmul_bt(&self.w);
+        for i in 0..y.rows() {
+            for j in 0..self.n_out {
+                *y.at2_mut(i, j) += self.b.data[j];
+            }
+        }
+        if train {
+            self.cache_x = Some(flat);
+        }
+        Value::F32(y)
+    }
+
+    fn backward(&mut self, z: Tensor) -> Tensor {
+        let x = self.cache_x.as_ref().expect("backward before forward");
+        self.gw.add_inplace(&z.matmul_at(x));
+        self.gb.add_inplace(&z.sum_rows());
+        z.matmul(&self.w)
+    }
+
+    fn params(&mut self) -> Vec<ParamRef<'_>> {
+        vec![
+            ParamRef::Real { name: format!("{}.w", self.name), w: &mut self.w, grad: &mut self.gw },
+            ParamRef::Real { name: format!("{}.b", self.name), w: &mut self.b, grad: &mut self.gb },
+        ]
+    }
+
+    fn zero_grads(&mut self) {
+        self.gw.scale_inplace(0.0);
+        self.gb.scale_inplace(0.0);
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Finite-difference check of the analytic gradient.
+    #[test]
+    fn gradients_match_finite_difference() {
+        let mut rng = Rng::new(1);
+        let mut l = Linear::new("fc", 6, 3, &mut rng);
+        let x = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        // scalar objective: sum of outputs squared / 2
+        let y = l.forward(Value::F32(x.clone()), true).expect_f32("t");
+        let z = y.clone(); // dL/dy = y for L = ||y||²/2
+        let gx = l.backward(z);
+        let eps = 1e-3;
+        let loss = |l: &mut Linear, x: &Tensor| -> f32 {
+            let y = l.forward(Value::F32(x.clone()), false).expect_f32("t");
+            0.5 * y.data.iter().map(|v| v * v).sum::<f32>()
+        };
+        // dL/dw numeric spot checks
+        for &(i, j) in &[(0usize, 0usize), (2, 5), (1, 3)] {
+            let orig = l.w.at2(i, j);
+            *l.w.at2_mut(i, j) = orig + eps;
+            let lp = loss(&mut l, &x);
+            *l.w.at2_mut(i, j) = orig - eps;
+            let lm = loss(&mut l, &x);
+            *l.w.at2_mut(i, j) = orig;
+            let num = (lp - lm) / (2.0 * eps);
+            assert!((num - l.gw.at2(i, j)).abs() < 2e-2, "w[{i}{j}]: {num} vs {}", l.gw.at2(i, j));
+        }
+        // dL/dx numeric spot check
+        let mut x2 = x.clone();
+        let orig = x2.at2(1, 2);
+        *x2.at2_mut(1, 2) = orig + eps;
+        let lp = loss(&mut l, &x2);
+        *x2.at2_mut(1, 2) = orig - eps;
+        let lm = loss(&mut l, &x2);
+        let num = (lp - lm) / (2.0 * eps);
+        assert!((num - gx.at2(1, 2)).abs() < 2e-2);
+    }
+
+    #[test]
+    fn accepts_bit_input() {
+        let mut rng = Rng::new(2);
+        let mut l = Linear::new("fc", 8, 2, &mut rng);
+        let x = Tensor::rand_pm1(&[3, 8], &mut rng);
+        let y1 = l.forward(Value::bit_from_pm1(&x), false).expect_f32("t");
+        let y2 = l.forward(Value::F32(x), false).expect_f32("t");
+        assert!(y1.max_abs_diff(&y2) < 1e-6);
+    }
+}

@@ -1,0 +1,186 @@
+//! Losses: softmax cross-entropy (classification/segmentation), MSE and L1
+//! (super-resolution, matching the paper's EDSR training, Appendix D.2).
+
+use crate::tensor::Tensor;
+
+/// Loss evaluation result: scalar loss, gradient w.r.t. the prediction,
+/// and (for classification) the number of correct top-1 predictions.
+pub struct LossOut {
+    pub loss: f32,
+    pub grad: Tensor,
+    pub correct: usize,
+}
+
+/// Mean softmax cross-entropy over integer labels.
+/// Gradient is (softmax − onehot) / batch.
+pub fn softmax_cross_entropy(logits: &Tensor, labels: &[usize]) -> LossOut {
+    let (b, c) = (logits.rows(), logits.cols());
+    assert_eq!(labels.len(), b);
+    let mut grad = Tensor::zeros(&[b, c]);
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for i in 0..b {
+        let row = &logits.data[i * c..(i + 1) * c];
+        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = row.iter().map(|&v| (v - mx).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        let y = labels[i];
+        debug_assert!(y < c);
+        let p_y = exps[y] / z;
+        loss -= (p_y.max(1e-12) as f64).ln();
+        let mut best = 0;
+        for j in 0..c {
+            if row[j] > row[best] {
+                best = j;
+            }
+            let p = exps[j] / z;
+            *grad.at2_mut(i, j) = (p - if j == y { 1.0 } else { 0.0 }) / b as f32;
+        }
+        if best == y {
+            correct += 1;
+        }
+    }
+    LossOut { loss: (loss / b as f64) as f32, grad, correct }
+}
+
+/// Per-pixel softmax cross-entropy for segmentation: logits NCHW, labels
+/// (N·H·W) of class ids; `ignore` skips a label id (e.g. void class).
+pub fn softmax_cross_entropy_nchw(
+    logits: &Tensor,
+    labels: &[usize],
+    ignore: Option<usize>,
+) -> LossOut {
+    let (n, c, h, w) = logits.dims4();
+    assert_eq!(labels.len(), n * h * w);
+    let rows = logits.nchw_to_rows(); // (N·H·W × C)
+    let mut grad_rows = Tensor::zeros(&[n * h * w, c]);
+    let mut loss = 0.0f64;
+    let mut counted = 0usize;
+    let mut correct = 0usize;
+    for (i, &y) in labels.iter().enumerate() {
+        if Some(y) == ignore {
+            continue;
+        }
+        counted += 1;
+        let row = &rows.data[i * c..(i + 1) * c];
+        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = row.iter().map(|&v| (v - mx).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        let p_y = exps[y] / z;
+        loss -= (p_y.max(1e-12) as f64).ln();
+        let mut best = 0;
+        for j in 0..c {
+            if row[j] > row[best] {
+                best = j;
+            }
+            *grad_rows.at2_mut(i, j) = exps[j] / z - if j == y { 1.0 } else { 0.0 };
+        }
+        if best == y {
+            correct += 1;
+        }
+    }
+    let denom = counted.max(1) as f32;
+    grad_rows.scale_inplace(1.0 / denom);
+    LossOut {
+        loss: (loss / denom as f64) as f32,
+        grad: grad_rows.rows_to_nchw(n, c, h, w),
+        correct,
+    }
+}
+
+/// Mean squared error. Gradient is 2(pred − target)/numel.
+pub fn mse_loss(pred: &Tensor, target: &Tensor) -> LossOut {
+    assert_eq!(pred.shape, target.shape);
+    let n = pred.len() as f32;
+    let mut grad = Tensor::zeros(&pred.shape);
+    let mut loss = 0.0f64;
+    for i in 0..pred.len() {
+        let d = pred.data[i] - target.data[i];
+        loss += (d * d) as f64;
+        grad.data[i] = 2.0 * d / n;
+    }
+    LossOut { loss: (loss / n as f64) as f32, grad, correct: 0 }
+}
+
+/// Mean absolute error (the EDSR training loss). Gradient is sign(d)/numel.
+pub fn l1_loss(pred: &Tensor, target: &Tensor) -> LossOut {
+    assert_eq!(pred.shape, target.shape);
+    let n = pred.len() as f32;
+    let mut grad = Tensor::zeros(&pred.shape);
+    let mut loss = 0.0f64;
+    for i in 0..pred.len() {
+        let d = pred.data[i] - target.data[i];
+        loss += d.abs() as f64;
+        grad.data[i] = d.signum() / n;
+    }
+    LossOut { loss: (loss / n as f64) as f32, grad, correct: 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn ce_uniform_logits() {
+        // uniform logits over C classes ⇒ loss = ln C
+        let logits = Tensor::zeros(&[4, 10]);
+        let out = softmax_cross_entropy(&logits, &[0, 1, 2, 3]);
+        assert!((out.loss - (10.0f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn ce_gradient_matches_finite_difference() {
+        let mut rng = Rng::new(1);
+        let logits = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        let labels = [2usize, 0, 4];
+        let out = softmax_cross_entropy(&logits, &labels);
+        let eps = 1e-3;
+        for idx in [0usize, 7, 14] {
+            let mut lp = logits.clone();
+            lp.data[idx] += eps;
+            let lm = {
+                let mut t = logits.clone();
+                t.data[idx] -= eps;
+                softmax_cross_entropy(&t, &labels).loss
+            };
+            let num = (softmax_cross_entropy(&lp, &labels).loss - lm) / (2.0 * eps);
+            assert!((num - out.grad.data[idx]).abs() < 1e-3, "idx {idx}");
+        }
+    }
+
+    #[test]
+    fn ce_perfect_prediction_low_loss() {
+        let mut logits = Tensor::zeros(&[2, 3]);
+        *logits.at2_mut(0, 1) = 20.0;
+        *logits.at2_mut(1, 2) = 20.0;
+        let out = softmax_cross_entropy(&logits, &[1, 2]);
+        assert!(out.loss < 1e-4);
+        assert_eq!(out.correct, 2);
+    }
+
+    #[test]
+    fn nchw_ce_with_ignore() {
+        let mut rng = Rng::new(2);
+        let logits = Tensor::randn(&[1, 3, 2, 2], 1.0, &mut rng);
+        let labels = vec![0usize, 1, 255, 2];
+        let out = softmax_cross_entropy_nchw(&logits, &labels, Some(255));
+        assert!(out.loss.is_finite());
+        // ignored pixel has zero gradient in all channels
+        for c in 0..3 {
+            assert_eq!(out.grad.data[c * 4 + 2], 0.0);
+        }
+    }
+
+    #[test]
+    fn l1_and_mse_basics() {
+        let p = Tensor::from_vec(&[1, 4], vec![1.0, 2.0, 3.0, 4.0]);
+        let t = Tensor::from_vec(&[1, 4], vec![1.0, 1.0, 5.0, 4.0]);
+        let l1 = l1_loss(&p, &t);
+        assert!((l1.loss - 0.75).abs() < 1e-6);
+        assert_eq!(l1.grad.data[1], 0.25);
+        assert_eq!(l1.grad.data[2], -0.25);
+        let mse = mse_loss(&p, &t);
+        assert!((mse.loss - (1.0 + 4.0) / 4.0).abs() < 1e-6);
+    }
+}

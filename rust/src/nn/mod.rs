@@ -1,0 +1,121 @@
+//! Neural-network layers: the paper's native Boolean layers (§3.1, §3.3)
+//! plus the FP substrate (first/last layers, BN, pooling, losses) needed to
+//! reproduce the experimental setup of §4.
+//!
+//! # Dataflow
+//!
+//! Values flowing forward are either dense f32 ([`Value::F32`]) or
+//! bit-packed Boolean ([`Value::Bit`]) — the latter is what makes the
+//! Boolean dataflow cheap (64 lanes per word). Backward signals are always
+//! dense f32 tensors holding either the usual gradient (downstream FP
+//! layer) or an (integer-valued) aggregated Boolean variation, matching
+//! Fig. 2 of the paper; a Boolean layer with `bool_bprop` quantizes its
+//! outgoing signal to ±1, which is exactly the Algorithm 6 case under the
+//! Proposition A.2 embedding.
+//!
+//! # Backward rules
+//!
+//! Each layer implements its closed-form backward derived from the
+//! variation calculus (`logic::variation`): there is no general autodiff
+//! because Boolean layers have *variations*, not gradients — the chain
+//! rule of Theorem 3.11 is what justifies composing them layer by layer.
+
+mod activation;
+mod bool_conv;
+mod bool_linear;
+mod conv;
+mod linear;
+mod loss;
+mod norm;
+mod pool;
+mod sequential;
+mod value;
+
+pub use activation::{BackwardScale, Binarize, ReLU, ThresholdAct};
+pub use bool_conv::BoolConv2d;
+pub use bool_linear::BoolLinear;
+pub use conv::Conv2d;
+pub use linear::Linear;
+pub use loss::{l1_loss, mse_loss, softmax_cross_entropy, softmax_cross_entropy_nchw, LossOut};
+pub use norm::{BatchNorm1d, BatchNorm2d, LayerNorm};
+pub use pool::{AvgPool2dGlobal, MaxPool2d};
+pub use sequential::{Flatten, Residual, Sequential};
+pub use value::Value;
+
+use crate::tensor::{BitMatrix, Tensor};
+
+/// Mutable references to a layer's parameters, grouped by kind so the
+/// coordinator can route them to the right optimizer (Boolean optimizer
+/// for `Bool`, Adam for `Real` — the paper's §4 setup).
+pub enum ParamRef<'a> {
+    /// Native Boolean parameter: packed bits + vote buffer + accumulator
+    /// m_t (Eq. 10) + per-tensor unchanged-ratio β_t (Eq. 11).
+    Bool {
+        name: String,
+        bits: &'a mut BitMatrix,
+        grad: &'a mut Tensor,
+        accum: &'a mut Tensor,
+        ratio: &'a mut f32,
+    },
+    /// FP parameter with its gradient buffer.
+    Real {
+        name: String,
+        w: &'a mut Tensor,
+        grad: &'a mut Tensor,
+    },
+}
+
+impl ParamRef<'_> {
+    pub fn name(&self) -> &str {
+        match self {
+            ParamRef::Bool { name, .. } => name,
+            ParamRef::Real { name, .. } => name,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            ParamRef::Bool { bits, .. } => bits.rows * bits.cols,
+            ParamRef::Real { w, .. } => w.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A trainable layer. `forward` caches whatever `backward` needs; the
+/// trainer guarantees the backward call matches the latest forward.
+pub trait Layer: Send {
+    /// Forward pass. `train` enables training-only behaviour (BN batch
+    /// stats, caching for backward).
+    fn forward(&mut self, x: Value, train: bool) -> Value;
+
+    /// Backward pass: takes the downstream signal w.r.t. this layer's
+    /// output, accumulates parameter votes/gradients, returns the signal
+    /// w.r.t. this layer's input.
+    fn backward(&mut self, z: Tensor) -> Tensor;
+
+    /// Parameter references for the optimizers (stable order).
+    fn params(&mut self) -> Vec<ParamRef<'_>> {
+        Vec::new()
+    }
+
+    /// Reset accumulated votes/gradients (before each step).
+    fn zero_grads(&mut self) {}
+
+    /// Human-readable name for logs and checkpoints.
+    fn name(&self) -> String;
+
+    /// Total number of trainable scalars (Boolean bits count as 1 each).
+    fn param_count(&mut self) -> usize {
+        self.params().iter().map(|p| p.len()).sum()
+    }
+
+    /// Non-trainable state that must survive checkpointing (running
+    /// statistics: BN running mean/var, centered-threshold running mean).
+    fn buffers(&mut self) -> Vec<(String, &mut Vec<f32>)> {
+        Vec::new()
+    }
+}

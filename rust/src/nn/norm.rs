@@ -1,0 +1,472 @@
+//! Batch normalization (Ioffe & Szegedy), the FP module the paper
+//! optionally integrates into Boolean models ("B⊕LD with BN", Table 2).
+//! Full training backward; running stats for eval.
+
+use super::{Layer, ParamRef, Value};
+use crate::tensor::Tensor;
+
+/// Shared BN core operating on a (rows × features) view, where `rows`
+/// aggregates every dimension that is normalized over.
+struct BnCore {
+    features: usize,
+    gamma: Tensor,
+    beta: Tensor,
+    g_gamma: Tensor,
+    g_beta: Tensor,
+    running_mean: Vec<f32>,
+    running_var: Vec<f32>,
+    momentum: f32,
+    eps: f32,
+    // caches
+    xhat: Option<Tensor>,
+    inv_std: Option<Vec<f32>>,
+}
+
+impl BnCore {
+    fn new(features: usize) -> Self {
+        BnCore {
+            features,
+            gamma: Tensor::full(&[features], 1.0),
+            beta: Tensor::zeros(&[features]),
+            g_gamma: Tensor::zeros(&[features]),
+            g_beta: Tensor::zeros(&[features]),
+            running_mean: vec![0.0; features],
+            running_var: vec![1.0; features],
+            momentum: 0.1,
+            eps: 1e-5,
+            xhat: None,
+            inv_std: None,
+        }
+    }
+
+    /// x is (rows × features); returns normalized output.
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let (r, f) = (x.rows(), x.cols());
+        assert_eq!(f, self.features);
+        let mut out = Tensor::zeros(&[r, f]);
+        if train {
+            let mut mean = vec![0.0f32; f];
+            let mut var = vec![0.0f32; f];
+            for i in 0..r {
+                for j in 0..f {
+                    mean[j] += x.at2(i, j);
+                }
+            }
+            for m in mean.iter_mut() {
+                *m /= r as f32;
+            }
+            for i in 0..r {
+                for j in 0..f {
+                    let d = x.at2(i, j) - mean[j];
+                    var[j] += d * d;
+                }
+            }
+            for v in var.iter_mut() {
+                *v /= r as f32;
+            }
+            let inv_std: Vec<f32> = var.iter().map(|&v| 1.0 / (v + self.eps).sqrt()).collect();
+            let mut xhat = Tensor::zeros(&[r, f]);
+            for i in 0..r {
+                for j in 0..f {
+                    let h = (x.at2(i, j) - mean[j]) * inv_std[j];
+                    *xhat.at2_mut(i, j) = h;
+                    *out.at2_mut(i, j) = self.gamma.data[j] * h + self.beta.data[j];
+                }
+            }
+            for j in 0..f {
+                self.running_mean[j] =
+                    (1.0 - self.momentum) * self.running_mean[j] + self.momentum * mean[j];
+                self.running_var[j] =
+                    (1.0 - self.momentum) * self.running_var[j] + self.momentum * var[j];
+            }
+            self.xhat = Some(xhat);
+            self.inv_std = Some(inv_std);
+        } else {
+            for i in 0..r {
+                for j in 0..f {
+                    let h = (x.at2(i, j) - self.running_mean[j])
+                        / (self.running_var[j] + self.eps).sqrt();
+                    *out.at2_mut(i, j) = self.gamma.data[j] * h + self.beta.data[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Standard BN backward over the (rows × features) view.
+    fn backward(&mut self, z: &Tensor) -> Tensor {
+        let xhat = self.xhat.as_ref().expect("backward before forward");
+        let inv_std = self.inv_std.as_ref().unwrap();
+        let (r, f) = (z.rows(), z.cols());
+        let rn = r as f32;
+        let mut sum_z = vec![0.0f32; f];
+        let mut sum_zh = vec![0.0f32; f];
+        for i in 0..r {
+            for j in 0..f {
+                sum_z[j] += z.at2(i, j);
+                sum_zh[j] += z.at2(i, j) * xhat.at2(i, j);
+            }
+        }
+        for j in 0..f {
+            self.g_beta.data[j] += sum_z[j];
+            self.g_gamma.data[j] += sum_zh[j];
+        }
+        let mut gx = Tensor::zeros(&[r, f]);
+        for i in 0..r {
+            for j in 0..f {
+                let zv = z.at2(i, j);
+                let g = self.gamma.data[j] * inv_std[j];
+                *gx.at2_mut(i, j) =
+                    g * (zv - sum_z[j] / rn - xhat.at2(i, j) * sum_zh[j] / rn);
+            }
+        }
+        gx
+    }
+}
+
+/// BatchNorm over the feature dimension of a (batch × features) tensor.
+pub struct BatchNorm1d {
+    core: BnCore,
+    name: String,
+}
+
+impl BatchNorm1d {
+    pub fn new(name: &str, features: usize) -> Self {
+        BatchNorm1d { core: BnCore::new(features), name: name.to_string() }
+    }
+}
+
+impl BatchNorm1d {
+    fn core_buffers(&mut self) -> Vec<(String, &mut Vec<f32>)> {
+        vec![
+            (format!("{}.running_mean", self.name), &mut self.core.running_mean),
+            (format!("{}.running_var", self.name), &mut self.core.running_var),
+        ]
+    }
+}
+
+impl Layer for BatchNorm1d {
+    fn forward(&mut self, x: Value, train: bool) -> Value {
+        let t = x.to_f32();
+        Value::F32(self.core.forward(&t, train))
+    }
+
+    fn backward(&mut self, z: Tensor) -> Tensor {
+        self.core.backward(&z)
+    }
+
+    fn params(&mut self) -> Vec<ParamRef<'_>> {
+        vec![
+            ParamRef::Real {
+                name: format!("{}.gamma", self.name),
+                w: &mut self.core.gamma,
+                grad: &mut self.core.g_gamma,
+            },
+            ParamRef::Real {
+                name: format!("{}.beta", self.name),
+                w: &mut self.core.beta,
+                grad: &mut self.core.g_beta,
+            },
+        ]
+    }
+
+    fn zero_grads(&mut self) {
+        self.core.g_gamma.scale_inplace(0.0);
+        self.core.g_beta.scale_inplace(0.0);
+    }
+
+    fn buffers(&mut self) -> Vec<(String, &mut Vec<f32>)> {
+        self.core_buffers()
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+/// BatchNorm over channels of an NCHW tensor (stats over N·H·W).
+pub struct BatchNorm2d {
+    core: BnCore,
+    name: String,
+    cache_dims: Option<(usize, usize, usize, usize)>,
+}
+
+impl BatchNorm2d {
+    pub fn new(name: &str, channels: usize) -> Self {
+        BatchNorm2d { core: BnCore::new(channels), name: name.to_string(), cache_dims: None }
+    }
+}
+
+impl BatchNorm2d {
+    fn core_buffers(&mut self) -> Vec<(String, &mut Vec<f32>)> {
+        vec![
+            (format!("{}.running_mean", self.name), &mut self.core.running_mean),
+            (format!("{}.running_var", self.name), &mut self.core.running_var),
+        ]
+    }
+}
+
+impl Layer for BatchNorm2d {
+    fn forward(&mut self, x: Value, train: bool) -> Value {
+        let t = x.to_f32();
+        let (n, c, h, w) = t.dims4();
+        self.cache_dims = Some((n, c, h, w));
+        let rows = t.nchw_to_rows(); // (N·H·W × C)
+        let out = self.core.forward(&rows, train);
+        Value::F32(out.rows_to_nchw(n, c, h, w))
+    }
+
+    fn backward(&mut self, z: Tensor) -> Tensor {
+        let (n, c, h, w) = self.cache_dims.expect("backward before forward");
+        let gz = self.core.backward(&z.nchw_to_rows());
+        gz.rows_to_nchw(n, c, h, w)
+    }
+
+    fn params(&mut self) -> Vec<ParamRef<'_>> {
+        vec![
+            ParamRef::Real {
+                name: format!("{}.gamma", self.name),
+                w: &mut self.core.gamma,
+                grad: &mut self.core.g_gamma,
+            },
+            ParamRef::Real {
+                name: format!("{}.beta", self.name),
+                w: &mut self.core.beta,
+                grad: &mut self.core.g_beta,
+            },
+        ]
+    }
+
+    fn zero_grads(&mut self) {
+        self.core.g_gamma.scale_inplace(0.0);
+        self.core.g_beta.scale_inplace(0.0);
+    }
+
+    fn buffers(&mut self) -> Vec<(String, &mut Vec<f32>)> {
+        self.core_buffers()
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+/// Layer normalization (per-row over the last dim) — the transformer
+/// norm used by the Boolean BERT model (Table 7). FP, trained with Adam.
+pub struct LayerNorm {
+    pub features: usize,
+    pub gamma: Tensor,
+    pub beta: Tensor,
+    g_gamma: Tensor,
+    g_beta: Tensor,
+    eps: f32,
+    name: String,
+    cache: Option<(Tensor, Vec<f32>)>, // (xhat, inv_std per row)
+}
+
+impl LayerNorm {
+    pub fn new(name: &str, features: usize) -> Self {
+        LayerNorm {
+            features,
+            gamma: Tensor::full(&[features], 1.0),
+            beta: Tensor::zeros(&[features]),
+            g_gamma: Tensor::zeros(&[features]),
+            g_beta: Tensor::zeros(&[features]),
+            eps: 1e-5,
+            name: name.to_string(),
+            cache: None,
+        }
+    }
+
+    /// Forward on a (rows × features) tensor.
+    pub fn fwd(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let (r, f) = (x.rows(), x.cols());
+        assert_eq!(f, self.features);
+        let mut out = Tensor::zeros(&[r, f]);
+        let mut xhat = Tensor::zeros(&[r, f]);
+        let mut inv_stds = vec![0.0f32; r];
+        for i in 0..r {
+            let row = &x.data[i * f..(i + 1) * f];
+            let mean: f32 = row.iter().sum::<f32>() / f as f32;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / f as f32;
+            let inv = 1.0 / (var + self.eps).sqrt();
+            inv_stds[i] = inv;
+            for j in 0..f {
+                let h = (row[j] - mean) * inv;
+                *xhat.at2_mut(i, j) = h;
+                *out.at2_mut(i, j) = self.gamma.data[j] * h + self.beta.data[j];
+            }
+        }
+        if train {
+            self.cache = Some((xhat, inv_stds));
+        }
+        out
+    }
+
+    /// Backward on a (rows × features) signal.
+    pub fn bwd(&mut self, z: &Tensor) -> Tensor {
+        let (xhat, inv_stds) = self.cache.as_ref().expect("backward before forward");
+        let (r, f) = (z.rows(), z.cols());
+        let fn_ = f as f32;
+        let mut gx = Tensor::zeros(&[r, f]);
+        for i in 0..r {
+            let mut sum_z = 0.0f32;
+            let mut sum_zh = 0.0f32;
+            for j in 0..f {
+                let zg = z.at2(i, j) * self.gamma.data[j];
+                sum_z += zg;
+                sum_zh += zg * xhat.at2(i, j);
+                self.g_beta.data[j] += z.at2(i, j);
+                self.g_gamma.data[j] += z.at2(i, j) * xhat.at2(i, j);
+            }
+            for j in 0..f {
+                let zg = z.at2(i, j) * self.gamma.data[j];
+                *gx.at2_mut(i, j) =
+                    inv_stds[i] * (zg - sum_z / fn_ - xhat.at2(i, j) * sum_zh / fn_);
+            }
+        }
+        gx
+    }
+
+    pub fn params(&mut self) -> Vec<ParamRef<'_>> {
+        vec![
+            ParamRef::Real {
+                name: format!("{}.gamma", self.name),
+                w: &mut self.gamma,
+                grad: &mut self.g_gamma,
+            },
+            ParamRef::Real {
+                name: format!("{}.beta", self.name),
+                w: &mut self.beta,
+                grad: &mut self.g_beta,
+            },
+        ]
+    }
+
+    pub fn zero_grads(&mut self) {
+        self.g_gamma.scale_inplace(0.0);
+        self.g_beta.scale_inplace(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn layernorm_normalizes_rows() {
+        let mut rng = Rng::new(9);
+        let mut ln = LayerNorm::new("ln", 16);
+        let x = Tensor::randn(&[4, 16], 3.0, &mut rng).map(|v| v + 5.0);
+        let y = ln.fwd(&x, true);
+        for i in 0..4 {
+            let row = &y.data[i * 16..(i + 1) * 16];
+            let mean: f32 = row.iter().sum::<f32>() / 16.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 16.0;
+            assert!(mean.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn layernorm_backward_fd() {
+        let mut rng = Rng::new(10);
+        let mut ln = LayerNorm::new("ln", 5);
+        let x = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        let y = ln.fwd(&x, true);
+        let gx = ln.bwd(&y); // L = ||y||²/2
+        let eps = 1e-3;
+        let loss = |ln: &mut LayerNorm, x: &Tensor| -> f32 {
+            let y = ln.fwd(x, true);
+            0.5 * y.data.iter().map(|v| v * v).sum::<f32>()
+        };
+        for idx in [0usize, 7, 12] {
+            let mut x2 = x.clone();
+            x2.data[idx] += eps;
+            let lp = loss(&mut ln, &x2);
+            x2.data[idx] -= 2.0 * eps;
+            let lm = loss(&mut ln, &x2);
+            let num = (lp - lm) / (2.0 * eps);
+            assert!((num - gx.data[idx]).abs() < 0.05 * num.abs().max(0.5),
+                "idx {idx}: {num} vs {}", gx.data[idx]);
+        }
+    }
+
+    #[test]
+    fn train_output_is_normalized() {
+        let mut rng = Rng::new(1);
+        let mut bn = BatchNorm1d::new("bn", 5);
+        let x = Tensor::randn(&[64, 5], 3.0, &mut rng).map(|v| v + 7.0);
+        let y = bn.forward(Value::F32(x), true).expect_f32("t");
+        for j in 0..5 {
+            let col: Vec<f32> = (0..64).map(|i| y.at2(i, j)).collect();
+            let mean = col.iter().sum::<f32>() / 64.0;
+            let var = col.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 64.0;
+            assert!(mean.abs() < 1e-4, "mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "var {var}");
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        let mut rng = Rng::new(2);
+        let mut bn = BatchNorm1d::new("bn", 3);
+        let x = Tensor::randn(&[8, 3], 1.0, &mut rng);
+        let y = bn.forward(Value::F32(x.clone()), true).expect_f32("t");
+        let gx = bn.backward(y.clone()); // L = ||y||²/2
+        let eps = 1e-3;
+        let loss = |bn: &mut BatchNorm1d, x: &Tensor| -> f32 {
+            let y = bn.forward(Value::F32(x.clone()), true).expect_f32("t");
+            0.5 * y.data.iter().map(|v| v * v).sum::<f32>()
+        };
+        for idx in [0usize, 7, 13] {
+            let mut x2 = x.clone();
+            x2.data[idx] += eps;
+            let lp = loss(&mut bn, &x2);
+            x2.data[idx] -= 2.0 * eps;
+            let lm = loss(&mut bn, &x2);
+            let num = (lp - lm) / (2.0 * eps);
+            assert!(
+                (num - gx.data[idx]).abs() < 0.05 * num.abs().max(0.5),
+                "idx {idx}: fd {num} vs {}", gx.data[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn eval_uses_running_stats() {
+        let mut rng = Rng::new(3);
+        let mut bn = BatchNorm1d::new("bn", 2);
+        // train several batches to populate running stats
+        for _ in 0..50 {
+            let x = Tensor::randn(&[32, 2], 2.0, &mut rng).map(|v| v + 1.0);
+            let _ = bn.forward(Value::F32(x), true);
+        }
+        // eval on a constant input: output should be ~(const-1)/2 scaled
+        let x = Tensor::full(&[4, 2], 1.0);
+        let y = bn.forward(Value::F32(x), false).expect_f32("t");
+        for &v in &y.data {
+            assert!(v.abs() < 0.2, "running mean should center ~1.0: {v}");
+        }
+    }
+
+    #[test]
+    fn bn2d_normalizes_per_channel() {
+        let mut rng = Rng::new(4);
+        let mut bn = BatchNorm2d::new("bn2", 3);
+        let x = Tensor::randn(&[4, 3, 5, 5], 2.0, &mut rng).map(|v| v - 3.0);
+        let y = bn.forward(Value::F32(x), true).expect_f32("t");
+        let (n, c, h, w) = y.dims4();
+        for ci in 0..c {
+            let mut vals = Vec::new();
+            for ni in 0..n {
+                for p in 0..h * w {
+                    vals.push(y.data[((ni * c + ci) * h * w) + p]);
+                }
+            }
+            let mean = vals.iter().sum::<f32>() / vals.len() as f32;
+            assert!(mean.abs() < 1e-4);
+        }
+    }
+}

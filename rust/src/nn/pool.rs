@@ -1,0 +1,181 @@
+//! Pooling layers. MaxPool operates on the integer pre-activations before
+//! the threshold activation, matching the paper's Appendix C Eq. (44)
+//! pipeline (Conv → MP → tanh'-scaled activation).
+
+use super::{Layer, Value};
+use crate::tensor::Tensor;
+
+/// 2×2 (or k×k) max pooling with stride = k on NCHW f32 tensors.
+pub struct MaxPool2d {
+    pub k: usize,
+    name: String,
+    cache_argmax: Option<Vec<usize>>,
+    cache_dims: Option<(usize, usize, usize, usize)>,
+}
+
+impl MaxPool2d {
+    pub fn new(name: &str, k: usize) -> Self {
+        MaxPool2d { k, name: name.to_string(), cache_argmax: None, cache_dims: None }
+    }
+}
+
+impl Layer for MaxPool2d {
+    fn forward(&mut self, x: Value, train: bool) -> Value {
+        let t = x.to_f32();
+        let (n, c, h, w) = t.dims4();
+        let k = self.k;
+        assert!(h % k == 0 && w % k == 0, "{}: {h}x{w} not divisible by {k}", self.name);
+        let (oh, ow) = (h / k, w / k);
+        let mut out = Tensor::zeros(&[n, c, oh, ow]);
+        let mut argmax = vec![0usize; n * c * oh * ow];
+        for ni in 0..n {
+            for ci in 0..c {
+                let plane = (ni * c + ci) * h * w;
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut best = f32::NEG_INFINITY;
+                        let mut best_idx = 0;
+                        for dy in 0..k {
+                            for dx in 0..k {
+                                let idx = plane + (oy * k + dy) * w + (ox * k + dx);
+                                if t.data[idx] > best {
+                                    best = t.data[idx];
+                                    best_idx = idx;
+                                }
+                            }
+                        }
+                        let o = ((ni * c + ci) * oh + oy) * ow + ox;
+                        out.data[o] = best;
+                        argmax[o] = best_idx;
+                    }
+                }
+            }
+        }
+        if train {
+            self.cache_argmax = Some(argmax);
+            self.cache_dims = Some((n, c, h, w));
+        }
+        Value::F32(out)
+    }
+
+    fn backward(&mut self, z: Tensor) -> Tensor {
+        let argmax = self.cache_argmax.as_ref().expect("backward before forward");
+        let (n, c, h, w) = self.cache_dims.unwrap();
+        let mut g = Tensor::zeros(&[n, c, h, w]);
+        for (o, &src) in argmax.iter().enumerate() {
+            g.data[src] += z.data[o];
+        }
+        g
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+/// Global average pooling: NCHW → (N, C). Used by the ResNet/DeepLab heads.
+pub struct AvgPool2dGlobal {
+    name: String,
+    cache_dims: Option<(usize, usize, usize, usize)>,
+}
+
+impl AvgPool2dGlobal {
+    pub fn new(name: &str) -> Self {
+        AvgPool2dGlobal { name: name.to_string(), cache_dims: None }
+    }
+}
+
+impl Layer for AvgPool2dGlobal {
+    fn forward(&mut self, x: Value, train: bool) -> Value {
+        let t = x.to_f32();
+        let (n, c, h, w) = t.dims4();
+        if train {
+            self.cache_dims = Some((n, c, h, w));
+        }
+        let mut out = Tensor::zeros(&[n, c]);
+        let inv = 1.0 / (h * w) as f32;
+        for ni in 0..n {
+            for ci in 0..c {
+                let plane = (ni * c + ci) * h * w;
+                let s: f32 = t.data[plane..plane + h * w].iter().sum();
+                *out.at2_mut(ni, ci) = s * inv;
+            }
+        }
+        Value::F32(out)
+    }
+
+    fn backward(&mut self, z: Tensor) -> Tensor {
+        let (n, c, h, w) = self.cache_dims.expect("backward before forward");
+        let inv = 1.0 / (h * w) as f32;
+        let mut g = Tensor::zeros(&[n, c, h, w]);
+        for ni in 0..n {
+            for ci in 0..c {
+                let v = z.at2(ni, ci) * inv;
+                let plane = (ni * c + ci) * h * w;
+                for p in 0..h * w {
+                    g.data[plane + p] = v;
+                }
+            }
+        }
+        g
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn maxpool_picks_maxima() {
+        let mut p = MaxPool2d::new("mp", 2);
+        let x = Tensor::from_vec(
+            &[1, 1, 2, 4],
+            vec![1.0, 2.0, 5.0, 6.0, 3.0, 4.0, 7.0, 8.0],
+        );
+        let y = p.forward(Value::F32(x), true).expect_f32("t");
+        assert_eq!(y.shape, vec![1, 1, 1, 2]);
+        assert_eq!(y.data, vec![4.0, 8.0]);
+    }
+
+    #[test]
+    fn maxpool_backward_routes_to_argmax() {
+        let mut p = MaxPool2d::new("mp", 2);
+        let x = Tensor::from_vec(
+            &[1, 1, 2, 2],
+            vec![1.0, 9.0, 3.0, 4.0],
+        );
+        let _ = p.forward(Value::F32(x), true);
+        let g = p.backward(Tensor::from_vec(&[1, 1, 1, 1], vec![5.0]));
+        assert_eq!(g.data, vec![0.0, 5.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn maxpool_ties_route_once() {
+        // all-equal window: gradient must land exactly once (first index)
+        let mut p = MaxPool2d::new("mp", 2);
+        let x = Tensor::full(&[1, 1, 2, 2], 1.0);
+        let _ = p.forward(Value::F32(x), true);
+        let g = p.backward(Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]));
+        assert_eq!(g.sum(), 1.0);
+    }
+
+    #[test]
+    fn gap_forward_backward() {
+        let mut rng = Rng::new(1);
+        let mut p = AvgPool2dGlobal::new("gap");
+        let x = Tensor::randn(&[2, 3, 4, 4], 1.0, &mut rng);
+        let y = p.forward(Value::F32(x.clone()), true).expect_f32("t");
+        assert_eq!(y.shape, vec![2, 3]);
+        // mean of plane (0, 1)
+        let plane = &x.data[16..32];
+        let m = plane.iter().sum::<f32>() / 16.0;
+        assert!((y.at2(0, 1) - m).abs() < 1e-5);
+        let g = p.backward(Tensor::full(&[2, 3], 16.0));
+        assert!(g.data.iter().all(|&v| (v - 1.0).abs() < 1e-6));
+    }
+}

@@ -1,0 +1,240 @@
+//! Composition: sequential stacks, flatten, and the residual block used by
+//! the Boolean ResNet/EDSR architectures (paper Appendix D.1.3 "Block I":
+//! both paths end on integer pre-activations, summed before activation).
+
+use super::{Layer, ParamRef, Value};
+use crate::tensor::Tensor;
+
+/// A stack of layers applied in order.
+pub struct Sequential {
+    pub layers: Vec<Box<dyn Layer>>,
+    name: String,
+}
+
+impl Sequential {
+    pub fn new(name: &str) -> Self {
+        Sequential { layers: Vec::new(), name: name.to_string() }
+    }
+
+    pub fn push(&mut self, l: Box<dyn Layer>) -> &mut Self {
+        self.layers.push(l);
+        self
+    }
+
+    pub fn with(mut self, l: Box<dyn Layer>) -> Self {
+        self.layers.push(l);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+}
+
+impl Layer for Sequential {
+    fn forward(&mut self, mut x: Value, train: bool) -> Value {
+        for l in self.layers.iter_mut() {
+            x = l.forward(x, train);
+        }
+        x
+    }
+
+    fn backward(&mut self, mut z: Tensor) -> Tensor {
+        for l in self.layers.iter_mut().rev() {
+            z = l.backward(z);
+        }
+        z
+    }
+
+    fn params(&mut self) -> Vec<ParamRef<'_>> {
+        self.layers.iter_mut().flat_map(|l| l.params()).collect()
+    }
+
+    fn zero_grads(&mut self) {
+        for l in self.layers.iter_mut() {
+            l.zero_grads();
+        }
+    }
+
+    fn buffers(&mut self) -> Vec<(String, &mut Vec<f32>)> {
+        self.layers.iter_mut().flat_map(|l| l.buffers()).collect()
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+/// Flatten any value to (batch, features). For Bit values this is free
+/// (shape metadata only).
+pub struct Flatten {
+    name: String,
+    cache_shape: Option<Vec<usize>>,
+}
+
+impl Flatten {
+    pub fn new(name: &str) -> Self {
+        Flatten { name: name.to_string(), cache_shape: None }
+    }
+}
+
+impl Layer for Flatten {
+    fn forward(&mut self, x: Value, train: bool) -> Value {
+        if train {
+            self.cache_shape = Some(x.shape().to_vec());
+        }
+        let b = x.batch();
+        let cols: usize = x.shape()[1..].iter().product();
+        match x {
+            Value::F32(t) => Value::F32(t.reshape(&[b, cols])),
+            Value::Bit { bits, .. } => Value::Bit { bits, shape: vec![b, cols] },
+        }
+    }
+
+    fn backward(&mut self, z: Tensor) -> Tensor {
+        let shape = self.cache_shape.as_ref().expect("backward before forward");
+        z.reshape(shape)
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+/// Residual block: `out = main(x) + shortcut(x)` on f32 (integer-valued)
+/// pre-activations, the summation point of the paper's Block I. The input
+/// value is cloned into both paths; the backward signal is routed through
+/// both and the upstream contributions are *summed* — this is Theorem
+/// 3.11(3) (additivity of the variation) in layer form.
+pub struct Residual {
+    pub main: Sequential,
+    pub shortcut: Sequential,
+    name: String,
+}
+
+impl Residual {
+    pub fn new(name: &str, main: Sequential, shortcut: Sequential) -> Self {
+        Residual { main, shortcut, name: name.to_string() }
+    }
+}
+
+impl Layer for Residual {
+    fn forward(&mut self, x: Value, train: bool) -> Value {
+        let a = self.main.forward(x.clone(), train).expect_f32("residual main");
+        let b = if self.shortcut.is_empty() {
+            x.to_f32()
+        } else {
+            self.shortcut.forward(x, train).expect_f32("residual shortcut")
+        };
+        assert_eq!(a.shape, b.shape, "{}: path shapes {:?} vs {:?}", self.name, a.shape, b.shape);
+        Value::F32(a.add(&b))
+    }
+
+    fn backward(&mut self, z: Tensor) -> Tensor {
+        let g_main = self.main.backward(z.clone());
+        let g_short = if self.shortcut.is_empty() {
+            z
+        } else {
+            self.shortcut.backward(z)
+        };
+        assert_eq!(g_main.shape, g_short.shape, "{}: backward shapes", self.name);
+        g_main.add(&g_short)
+    }
+
+    fn params(&mut self) -> Vec<ParamRef<'_>> {
+        let mut v = self.main.params();
+        v.extend(self.shortcut.params());
+        v
+    }
+
+    fn zero_grads(&mut self) {
+        self.main.zero_grads();
+        self.shortcut.zero_grads();
+    }
+
+    fn buffers(&mut self) -> Vec<(String, &mut Vec<f32>)> {
+        let mut v = self.main.buffers();
+        v.extend(self.shortcut.buffers());
+        v
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{BackwardScale, BoolLinear, Linear, ThresholdAct};
+    use crate::util::Rng;
+
+    #[test]
+    fn sequential_chains_forward_backward() {
+        let mut rng = Rng::new(1);
+        let mut net = Sequential::new("net")
+            .with(Box::new(BoolLinear::new("l1", 64, 32, &mut rng)))
+            .with(Box::new(ThresholdAct::new("a1", 0.0, BackwardScale::TanhPrime { fanin: 64 })))
+            .with(Box::new(Linear::new("fc", 32, 4, &mut rng)));
+        let x = Tensor::rand_pm1(&[8, 64], &mut rng);
+        let y = net.forward(Value::bit_from_pm1(&x), true).expect_f32("t");
+        assert_eq!(y.shape, vec![8, 4]);
+        let g = net.backward(Tensor::full(&[8, 4], 1.0));
+        assert_eq!(g.shape, vec![8, 64]);
+        assert_eq!(net.params().len(), 3); // bool w, fc w, fc b
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let mut rng = Rng::new(2);
+        let mut f = Flatten::new("fl");
+        let x = Tensor::rand_pm1(&[2, 3, 4, 4], &mut rng);
+        let y = f.forward(Value::bit_from_pm1(&x), true);
+        assert_eq!(y.shape(), &[2, 48]);
+        let g = f.backward(Tensor::zeros(&[2, 48]));
+        assert_eq!(g.shape, vec![2, 3, 4, 4]);
+    }
+
+    #[test]
+    fn residual_identity_shortcut_adds_input() {
+        let mut rng = Rng::new(3);
+        // main: linear with zero weights ⇒ out == input (identity shortcut)
+        let mut lin = Linear::new("l", 8, 8, &mut rng);
+        lin.w.scale_inplace(0.0);
+        lin.b.scale_inplace(0.0);
+        let main = Sequential::new("m").with(Box::new(lin));
+        let mut res = Residual::new("res", main, Sequential::new("s"));
+        let x = Tensor::randn(&[2, 8], 1.0, &mut rng);
+        let y = res.forward(Value::F32(x.clone()), true).expect_f32("t");
+        assert!(y.max_abs_diff(&x) < 1e-6);
+        // backward: identity shortcut passes z, main contributes W᷀z = 0
+        let g = res.backward(Tensor::full(&[2, 8], 1.0));
+        assert!(g.max_abs_diff(&Tensor::full(&[2, 8], 1.0)) < 1e-6);
+    }
+
+    #[test]
+    fn residual_backward_sums_both_paths() {
+        let mut rng = Rng::new(4);
+        let mk = |rng: &mut Rng| {
+            let mut l = Linear::new("l", 4, 4, rng);
+            // identity weights
+            l.w.scale_inplace(0.0);
+            for i in 0..4 {
+                *l.w.at2_mut(i, i) = 1.0;
+            }
+            l
+        };
+        let main = Sequential::new("m").with(Box::new(mk(&mut rng)));
+        let short = Sequential::new("s").with(Box::new(mk(&mut rng)));
+        let mut res = Residual::new("res", main, short);
+        let x = Tensor::randn(&[1, 4], 1.0, &mut rng);
+        let y = res.forward(Value::F32(x.clone()), true).expect_f32("t");
+        assert!(y.max_abs_diff(&x.scale(2.0)) < 1e-6);
+        let g = res.backward(Tensor::full(&[1, 4], 1.0));
+        assert!(g.max_abs_diff(&Tensor::full(&[1, 4], 2.0)) < 1e-6);
+    }
+}

@@ -1,0 +1,83 @@
+//! The value type flowing between layers: dense f32 or packed Boolean.
+
+use crate::tensor::{BitMatrix, Tensor};
+
+/// Forward dataflow value.
+#[derive(Debug, Clone)]
+pub enum Value {
+    /// Dense f32 tensor of arbitrary shape.
+    F32(Tensor),
+    /// Bit-packed Boolean data. `shape` is the logical shape; the packing
+    /// is batch-major: `bits` has `shape[0]` rows and `∏ shape[1..]` cols.
+    Bit { bits: BitMatrix, shape: Vec<usize> },
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::Bit { shape, .. } => shape,
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.shape()[0]
+    }
+
+    /// Unpack to a dense ±1 (or original) f32 tensor.
+    pub fn to_f32(&self) -> Tensor {
+        match self {
+            Value::F32(t) => t.clone(),
+            Value::Bit { bits, shape } => bits.to_pm1().reshape(shape),
+        }
+    }
+
+    /// Pack from a ±1 tensor, flattening all non-batch dims.
+    pub fn bit_from_pm1(t: &Tensor) -> Value {
+        let batch = t.shape[0];
+        let cols: usize = t.shape[1..].iter().product();
+        let flat = t.view(&[batch, cols]);
+        Value::Bit { bits: BitMatrix::from_pm1(&flat), shape: t.shape.clone() }
+    }
+
+    pub fn expect_f32(self, who: &str) -> Tensor {
+        match self {
+            Value::F32(t) => t,
+            Value::Bit { .. } => panic!("{who}: expected F32 value, got Bit"),
+        }
+    }
+
+    pub fn expect_bit(self, who: &str) -> (BitMatrix, Vec<usize>) {
+        match self {
+            Value::Bit { bits, shape } => (bits, shape),
+            Value::F32(_) => panic!("{who}: expected Bit value, got F32"),
+        }
+    }
+
+    pub fn is_bit(&self) -> bool {
+        matches!(self, Value::Bit { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn bit_roundtrip_through_f32() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::rand_pm1(&[3, 2, 4, 4], &mut rng);
+        let v = Value::bit_from_pm1(&t);
+        assert_eq!(v.shape(), &[3, 2, 4, 4]);
+        assert_eq!(v.to_f32(), t);
+    }
+
+    #[test]
+    fn f32_passthrough() {
+        let t = Tensor::from_vec(&[2, 2], vec![0.5, -1.5, 2.0, 0.0]);
+        let v = Value::F32(t.clone());
+        assert_eq!(v.to_f32(), t);
+        assert_eq!(v.batch(), 2);
+    }
+}

@@ -1,0 +1,116 @@
+//! Adam (Kingma & Ba) for the FP parameters — the paper trains first/last
+//! FP layers and BN with Adam at lr 1e-3 (§4 / Appendix D.1.1).
+
+use crate::nn::ParamRef;
+
+/// Adam with per-parameter state kept by parameter *name* (layer names are
+/// stable across steps, so the state follows the parameter even if the
+/// collection order changes).
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    t: u64,
+    state: std::collections::HashMap<String, (Vec<f32>, Vec<f32>)>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            t: 0,
+            state: std::collections::HashMap::new(),
+        }
+    }
+
+    pub fn with_weight_decay(mut self, wd: f32) -> Self {
+        self.weight_decay = wd;
+        self
+    }
+
+    /// Apply one step to every `ParamRef::Real` (Bool params are ignored —
+    /// they belong to the Boolean optimizer).
+    pub fn step(&mut self, params: &mut [ParamRef<'_>]) {
+        self.t += 1;
+        let t = self.t as f32;
+        let bc1 = 1.0 - self.beta1.powf(t);
+        let bc2 = 1.0 - self.beta2.powf(t);
+        for p in params.iter_mut() {
+            if let ParamRef::Real { name, w, grad } = p {
+                let n = w.len();
+                let (m, v) = self
+                    .state
+                    .entry(name.clone())
+                    .or_insert_with(|| (vec![0.0; n], vec![0.0; n]));
+                assert_eq!(m.len(), n, "param {name} changed size");
+                for i in 0..n {
+                    let mut g = grad.data[i];
+                    if self.weight_decay != 0.0 {
+                        g += self.weight_decay * w.data[i];
+                    }
+                    m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * g;
+                    v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g * g;
+                    let mhat = m[i] / bc1;
+                    let vhat = v[i] / bc2;
+                    w.data[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        // minimize ||w − target||² with analytic gradient
+        let mut w = Tensor::from_vec(&[4], vec![5.0, -3.0, 2.0, 0.0]);
+        let target = [1.0f32, 1.0, 1.0, 1.0];
+        let mut grad = Tensor::zeros(&[4]);
+        let mut opt = Adam::new(0.1);
+        for _ in 0..300 {
+            for i in 0..4 {
+                grad.data[i] = 2.0 * (w.data[i] - target[i]);
+            }
+            let mut params = vec![ParamRef::Real { name: "w".into(), w: &mut w, grad: &mut grad }];
+            opt.step(&mut params);
+        }
+        for i in 0..4 {
+            assert!((w.data[i] - target[i]).abs() < 1e-2, "w[{i}] = {}", w.data[i]);
+        }
+    }
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        // Adam's first update has magnitude ≈ lr regardless of grad scale.
+        let mut w = Tensor::from_vec(&[1], vec![0.0]);
+        let mut grad = Tensor::from_vec(&[1], vec![1234.0]);
+        let mut opt = Adam::new(0.01);
+        let mut params = vec![ParamRef::Real { name: "w".into(), w: &mut w, grad: &mut grad }];
+        opt.step(&mut params);
+        assert!((w.data[0] + 0.01).abs() < 1e-4, "{}", w.data[0]);
+    }
+
+    #[test]
+    fn state_follows_name() {
+        let mut w = Tensor::from_vec(&[1], vec![0.0]);
+        let mut grad = Tensor::from_vec(&[1], vec![1.0]);
+        let mut opt = Adam::new(0.1);
+        for _ in 0..3 {
+            let mut params =
+                vec![ParamRef::Real { name: "same".into(), w: &mut w, grad: &mut grad }];
+            opt.step(&mut params);
+        }
+        assert_eq!(opt.state.len(), 1);
+        assert_eq!(opt.t, 3);
+    }
+}

@@ -1,0 +1,219 @@
+//! The Boolean optimizer of §3.3 (Eq. 9–11, Algorithms 1/2/8).
+//!
+//! Per Boolean parameter tensor it keeps an accumulator m (Eq. 10) and the
+//! auto-regularizing factor β = fraction of unchanged weights (Eq. 11,
+//! per-layer basis as in the paper's experiments). One step:
+//!
+//!   m ← β·m + η·q              (q = aggregated vote, Eq. 7)
+//!   flip w where  m·e(w) ≥ 1   (xnor(m, w) = T with |m| ≥ 1 — Eq. 9)
+//!   m ← 0 at flipped positions
+//!   β ← 1 − (#flips / #weights)
+//!
+//! The flip rule reads: if the accumulated loss-variation w.r.t. w has the
+//! same sign as w itself, then flipping w decreases the loss — the purely
+//! logical counterpart of "step against the gradient".
+
+use crate::nn::ParamRef;
+
+/// Flip statistics for one step (for logging / Fig. 4-style diagnostics).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FlipStats {
+    pub flips: usize,
+    pub total: usize,
+}
+
+impl FlipStats {
+    pub fn flip_rate(&self) -> f32 {
+        if self.total == 0 { 0.0 } else { self.flips as f32 / self.total as f32 }
+    }
+}
+
+/// Boolean optimizer with a tunable accumulation rate η.
+pub struct BooleanOptimizer {
+    pub lr: f32,
+    /// Optional |m| clip (κ of assumption A.5 in the convergence proof).
+    pub clip: Option<f32>,
+}
+
+impl BooleanOptimizer {
+    pub fn new(lr: f32) -> Self {
+        BooleanOptimizer { lr, clip: None }
+    }
+
+    pub fn with_clip(mut self, kappa: f32) -> Self {
+        self.clip = Some(kappa);
+        self
+    }
+
+    /// Apply one step to every `ParamRef::Bool` in `params` (others are
+    /// ignored — they belong to the FP optimizer).
+    pub fn step(&self, params: &mut [ParamRef<'_>]) -> FlipStats {
+        let mut stats = FlipStats::default();
+        for p in params.iter_mut() {
+            if let ParamRef::Bool { bits, grad, accum, ratio, .. } = p {
+                let rows = bits.rows;
+                let cols = bits.cols;
+                debug_assert_eq!(grad.len(), rows * cols);
+                let beta: f32 = **ratio;
+                let mut flips = 0usize;
+                for r in 0..rows {
+                    for c in 0..cols {
+                        let idx = r * cols + c;
+                        // m ← β·m + η·q  (Eq. 10)
+                        let mut m = beta * accum.data[idx] + self.lr * grad.data[idx];
+                        if let Some(k) = self.clip {
+                            m = m.clamp(-k, k);
+                        }
+                        // Eq. (9): flip when xnor(m, w) = T with |m| ≥ 1.
+                        let w = if bits.get(r, c) { 1.0 } else { -1.0 };
+                        if m * w >= 1.0 {
+                            bits.flip(r, c);
+                            accum.data[idx] = 0.0; // reset (Algorithm 1 l.12)
+                            flips += 1;
+                        } else {
+                            accum.data[idx] = m;
+                        }
+                    }
+                }
+                let total = rows * cols;
+                **ratio = 1.0 - flips as f32 / total.max(1) as f32; // Eq. (11)
+                stats.flips += flips;
+                stats.total += total;
+            }
+        }
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{BitMatrix, Tensor};
+    use crate::util::Rng;
+
+    fn mk(rows: usize, cols: usize, seed: u64) -> (BitMatrix, Tensor, Tensor, f32) {
+        let mut rng = Rng::new(seed);
+        (
+            BitMatrix::random(rows, cols, &mut rng),
+            Tensor::zeros(&[rows, cols]),
+            Tensor::zeros(&[rows, cols]),
+            1.0,
+        )
+    }
+
+    #[test]
+    fn flip_rule_eq9_semantics() {
+        // q aligned with w and |η·q| ≥ 1 ⇒ flip; opposite sign ⇒ no flip.
+        let (mut bits, mut grad, mut accum, mut ratio) = mk(1, 2, 1);
+        bits.set(0, 0, true); // w0 = +1
+        bits.set(0, 1, false); // w1 = −1
+        grad.data[0] = 1.0; // same sign as w0 ⇒ flip
+        grad.data[1] = 1.0; // opposite sign to w1 ⇒ accumulate
+        let opt = BooleanOptimizer::new(1.0);
+        let mut params = vec![ParamRef::Bool {
+            name: "w".into(),
+            bits: &mut bits,
+            grad: &mut grad,
+            accum: &mut accum,
+            ratio: &mut ratio,
+        }];
+        let stats = opt.step(&mut params);
+        assert_eq!(stats.flips, 1);
+        assert!(!bits.get(0, 0), "w0 flipped to F");
+        assert!(!bits.get(0, 1), "w1 unchanged");
+        assert_eq!(accum.data[0], 0.0, "flipped accumulator reset");
+        assert_eq!(accum.data[1], 1.0, "unflipped accumulates η·q");
+        assert!((ratio - 0.5).abs() < 1e-6, "β = 1 − 1/2");
+    }
+
+    #[test]
+    fn small_votes_accumulate_until_threshold() {
+        let (mut bits, mut grad, mut accum, mut ratio) = mk(1, 1, 2);
+        bits.set(0, 0, true);
+        grad.data[0] = 0.4; // η·q = 0.4 per step, same sign as w
+        let opt = BooleanOptimizer::new(1.0);
+        for step in 0..3 {
+            let mut params = vec![ParamRef::Bool {
+                name: "w".into(),
+                bits: &mut bits,
+                grad: &mut grad,
+                accum: &mut accum,
+                ratio: &mut ratio,
+            }];
+            let stats = opt.step(&mut params);
+            if step < 2 {
+                assert_eq!(stats.flips, 0, "no flip until |m| ≥ 1 (step {step})");
+            } else {
+                // m = 0.4, 0.8, 1.2 (β stays 1 while nothing flips)
+                assert_eq!(stats.flips, 1, "flip at step {step}");
+            }
+        }
+        assert!(!bits.get(0, 0));
+    }
+
+    #[test]
+    fn beta_damps_stale_accumulation() {
+        // After a step with many flips, β < 1 shrinks old accumulator mass.
+        let mut rng = Rng::new(3);
+        let mut bits = BitMatrix::random(8, 8, &mut rng);
+        let before = bits.clone();
+        let mut grad = Tensor::zeros(&[8, 8]);
+        // strong votes aligned with every weight ⇒ all flip
+        for r in 0..8 {
+            for c in 0..8 {
+                grad.data[r * 8 + c] = if before.get(r, c) { 2.0 } else { -2.0 };
+            }
+        }
+        let mut accum = Tensor::zeros(&[8, 8]);
+        let mut ratio = 1.0;
+        let opt = BooleanOptimizer::new(1.0);
+        let mut params = vec![ParamRef::Bool {
+            name: "w".into(),
+            bits: &mut bits,
+            grad: &mut grad,
+            accum: &mut accum,
+            ratio: &mut ratio,
+        }];
+        let stats = opt.step(&mut params);
+        assert_eq!(stats.flips, 64);
+        assert_eq!(ratio, 0.0, "β = 0 after everything flipped");
+        assert_eq!(bits.hamming(&before), 64);
+    }
+
+    #[test]
+    fn clip_bounds_accumulator() {
+        let (mut bits, mut grad, mut accum, mut ratio) = mk(1, 1, 4);
+        bits.set(0, 0, false); // w = −1; positive votes will never flip it
+        grad.data[0] = 10.0;
+        let opt = BooleanOptimizer::new(1.0).with_clip(2.5);
+        for _ in 0..5 {
+            let mut params = vec![ParamRef::Bool {
+                name: "w".into(),
+                bits: &mut bits,
+                grad: &mut grad,
+                accum: &mut accum,
+                ratio: &mut ratio,
+            }];
+            opt.step(&mut params);
+        }
+        assert!(accum.data[0] <= 2.5, "A.5 bound respected: {}", accum.data[0]);
+    }
+
+    #[test]
+    fn zero_grad_never_flips() {
+        let (mut bits, mut grad, mut accum, mut ratio) = mk(16, 16, 5);
+        let before = bits.clone();
+        grad.scale_inplace(0.0);
+        let opt = BooleanOptimizer::new(100.0);
+        let mut params = vec![ParamRef::Bool {
+            name: "w".into(),
+            bits: &mut bits,
+            grad: &mut grad,
+            accum: &mut accum,
+            ratio: &mut ratio,
+        }];
+        let stats = opt.step(&mut params);
+        assert_eq!(stats.flips, 0);
+        assert_eq!(bits, before);
+    }
+}

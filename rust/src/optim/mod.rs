@@ -1,0 +1,13 @@
+//! Optimizers: the paper's Boolean optimizer (Algorithm 8 + Eqs. 9–11) for
+//! native Boolean weights, Adam for the FP layers (the paper's §4 setup),
+//! plain SGD for baselines, and a cosine learning-rate schedule.
+
+mod adam;
+mod boolean;
+mod schedule;
+mod sgd;
+
+pub use adam::Adam;
+pub use boolean::{BooleanOptimizer, FlipStats};
+pub use schedule::CosineSchedule;
+pub use sgd::Sgd;

@@ -1,0 +1,52 @@
+//! Cosine learning-rate schedule (the paper's choice, Appendix D.1.1:
+//! "both optimizers used the cosine scheduler").
+
+/// lr(t) = lr_min + (lr_max − lr_min)·(1 + cos(π·t/T))/2
+#[derive(Debug, Clone, Copy)]
+pub struct CosineSchedule {
+    pub lr_max: f32,
+    pub lr_min: f32,
+    pub total_steps: usize,
+}
+
+impl CosineSchedule {
+    pub fn new(lr_max: f32, lr_min: f32, total_steps: usize) -> Self {
+        CosineSchedule { lr_max, lr_min, total_steps }
+    }
+
+    pub fn at(&self, step: usize) -> f32 {
+        if self.total_steps == 0 {
+            return self.lr_max;
+        }
+        let p = (step.min(self.total_steps) as f32) / self.total_steps as f32;
+        self.lr_min
+            + (self.lr_max - self.lr_min) * 0.5 * (1.0 + (std::f32::consts::PI * p).cos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints_and_midpoint() {
+        let s = CosineSchedule::new(10.0, 1.0, 100);
+        assert!((s.at(0) - 10.0).abs() < 1e-5);
+        assert!((s.at(100) - 1.0).abs() < 1e-5);
+        assert!((s.at(50) - 5.5).abs() < 1e-4);
+    }
+
+    #[test]
+    fn monotone_decreasing() {
+        let s = CosineSchedule::new(3.0, 0.0, 10);
+        for t in 0..10 {
+            assert!(s.at(t) >= s.at(t + 1));
+        }
+    }
+
+    #[test]
+    fn clamps_past_total() {
+        let s = CosineSchedule::new(5.0, 0.5, 10);
+        assert_eq!(s.at(50), s.at(10));
+    }
+}

@@ -1,0 +1,47 @@
+//! Plain SGD with momentum — used by some BNN baseline recipes.
+
+use crate::nn::ParamRef;
+
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    state: std::collections::HashMap<String, Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, momentum: f32) -> Self {
+        Sgd { lr, momentum, state: std::collections::HashMap::new() }
+    }
+
+    pub fn step(&mut self, params: &mut [ParamRef<'_>]) {
+        for p in params.iter_mut() {
+            if let ParamRef::Real { name, w, grad } = p {
+                let n = w.len();
+                let v = self.state.entry(name.clone()).or_insert_with(|| vec![0.0; n]);
+                for i in 0..n {
+                    v[i] = self.momentum * v[i] + grad.data[i];
+                    w.data[i] -= self.lr * v[i];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn sgd_descends() {
+        let mut w = Tensor::from_vec(&[1], vec![10.0]);
+        let mut grad = Tensor::zeros(&[1]);
+        let mut opt = Sgd::new(0.1, 0.9);
+        for _ in 0..100 {
+            grad.data[0] = 2.0 * w.data[0];
+            let mut params = vec![ParamRef::Real { name: "w".into(), w: &mut w, grad: &mut grad }];
+            opt.step(&mut params);
+        }
+        assert!(w.data[0].abs() < 0.1);
+    }
+}

@@ -1,0 +1,336 @@
+//! Classification reports: Fig. 1, Tables 2/5/6/9/10.
+
+use crate::baselines::{bnn_vgg_small, BnnKind};
+use crate::config::TrainConfig;
+use crate::coordinator::{evaluate_classifier, ClassifierTrainer};
+use crate::data::ImageDataset;
+use crate::energy::{network_energy, resnet18_shapes, vgg_small_shapes, Method};
+use crate::models::{resnet_boolean, vgg_small, ResNetConfig, VggConfig, VggKind};
+use crate::nn::Sequential;
+use crate::util::Rng;
+
+fn cifar_cfg(quick: bool) -> TrainConfig {
+    TrainConfig {
+        steps: if quick { 60 } else { 400 },
+        batch: 64,
+        lr_bool: 8.0,
+        lr_fp: 2e-3,
+        train_size: if quick { 512 } else { 2048 },
+        val_size: if quick { 128 } else { 512 },
+        hw: 16,
+        width_mult: 0.125,
+        ..Default::default()
+    }
+}
+
+fn cifar_data(cfg: &TrainConfig, classes: usize, seed: u64) -> (ImageDataset, ImageDataset) {
+    ImageDataset::cifar_like(cfg.train_size + cfg.val_size, classes, 3, cfg.hw, 0.25, seed)
+        .split(cfg.train_size)
+}
+
+/// Build a VGG-SMALL variant for a method id.
+fn build_vgg(method: Method, cfg: &TrainConfig, rng: &mut Rng) -> Sequential {
+    let vcfg = VggConfig {
+        hw: cfg.hw,
+        width_mult: cfg.width_mult,
+        classes: cfg.classes,
+        with_bn: matches!(method, Method::BoldBn),
+        kind: if matches!(method, Method::Fp32) { VggKind::Fp } else { VggKind::Bold },
+        ..Default::default()
+    };
+    match method {
+        Method::Fp32 | Method::Bold | Method::BoldBn => vgg_small(&vcfg, rng),
+        Method::BinaryConnect => bnn_vgg_small(BnnKind::BinaryConnect, &vcfg, rng),
+        Method::BinaryNet => bnn_vgg_small(BnnKind::BinaryNet, &vcfg, rng),
+        Method::XnorNet => bnn_vgg_small(BnnKind::XnorNet, &vcfg, rng),
+    }
+}
+
+/// Train one method and return (val accuracy %, loss curve tail).
+fn train_method(method: Method, cfg: &TrainConfig, quick: bool) -> f32 {
+    let mut cfg = cfg.clone();
+    if matches!(method, Method::Fp32 | Method::BinaryConnect | Method::BinaryNet | Method::XnorNet)
+    {
+        cfg.lr_bool = 0.0; // no Boolean params in those nets
+    }
+    if matches!(method, Method::BoldBn) {
+        // BN normalizes the backward signal, so the Boolean accumulator
+        // needs a much larger η (the paper: 150 with BN vs 12 without).
+        cfg.lr_bool *= 8.0;
+    }
+    let _ = quick;
+    let (train, val) = cifar_data(&cfg, cfg.classes, cfg.seed * 7 + 1);
+    let mut rng = Rng::new(cfg.seed);
+    let mut model = build_vgg(method, &cfg, &mut rng);
+    let mut trainer = ClassifierTrainer::new(&cfg);
+    let report = trainer.fit(&mut model, &train, &val, &cfg, false);
+    report.val_acc * 100.0
+}
+
+/// Energy (% of FP) on the paper-exact VGG-SMALL shapes.
+fn vgg_energy_pct(method: Method, v100: bool) -> f64 {
+    let hw = if v100 { crate::energy::V100() } else { crate::energy::ASCEND() };
+    let shapes = vgg_small_shapes(100); // paper batch 100-ish per GPU
+    let fp = network_energy(&shapes, &hw, Method::Fp32, true).total_pj();
+    network_energy(&shapes, &hw, method, true).total_pj() / fp * 100.0
+}
+
+/// Fig. 1: accuracy vs training-energy scatter, VGG-SMALL / CIFAR10 / V100.
+pub fn fig1(quick: bool) -> Result<(), String> {
+    println!("Fig. 1 — accuracy vs training energy (VGG-SMALL, CIFAR10-like, V100 model)");
+    println!("{:<18} {:>10} {:>22}", "method", "acc (%)", "energy vs FP (%)");
+    let cfg = cifar_cfg(quick);
+    for m in Method::all() {
+        let acc = train_method(m, &cfg, quick);
+        let e = vgg_energy_pct(m, true);
+        println!("{:<18} {:>10.2} {:>22.2}", m.name(), acc, e);
+    }
+    println!("(paper: B⊕LD 36× less energy than FP, more accurate than the BNNs)");
+    Ok(())
+}
+
+/// Table 2: VGG-SMALL on CIFAR10 — accuracy + Cons.% on both hardwares.
+pub fn table2(quick: bool) -> Result<(), String> {
+    println!("Table 2 — VGG-SMALL / CIFAR10-like: W/A, Acc, Cons.% (Ascend, V100)");
+    println!(
+        "{:<18} {:>6} {:>9} {:>14} {:>14}",
+        "method", "W/A", "Acc(%)", "Cons.% Ascend", "Cons.% V100"
+    );
+    let cfg = cifar_cfg(quick);
+    let rows: &[(Method, &str)] = &[
+        (Method::Fp32, "32/32"),
+        (Method::BinaryConnect, "1/32"),
+        (Method::XnorNet, "1/1"),
+        (Method::BinaryNet, "1/1"),
+        (Method::Bold, "1/1"),
+        (Method::BoldBn, "1/1"),
+    ];
+    for &(m, wa) in rows {
+        let acc = train_method(m, &cfg, quick);
+        println!(
+            "{:<18} {:>6} {:>9.2} {:>14.2} {:>14.2}",
+            m.name(),
+            wa,
+            acc,
+            vgg_energy_pct(m, false),
+            vgg_energy_pct(m, true)
+        );
+    }
+    println!("(paper: FP 93.80 / B⊕LD 90.29 / B⊕LD+BN 92.37; Cons. 100 / 2.78–3.64 / 3.71–4.87)");
+    Ok(())
+}
+
+/// Table 5: ResNet18-family — Boolean ResNet at several base widths +
+/// energy on the paper-exact ImageNet shapes.
+pub fn table5(quick: bool) -> Result<(), String> {
+    println!("Table 5 — Boolean ResNet (Block I family): base-width sweep + ImageNet-shape energy");
+    let mut cfg = cifar_cfg(quick);
+    cfg.steps = if quick { 40 } else { 250 };
+    cfg.lr_bool = 4.0;
+    let (train, val) = cifar_data(&cfg, cfg.classes, 99);
+    println!(
+        "{:<26} {:>9} {:>14} {:>14}",
+        "model", "Acc(%)", "Cons.% Ascend", "Cons.% V100"
+    );
+    // FP energy reference on paper shapes (base 64)
+    let e_pct = |base: usize, m: Method, v100: bool| -> f64 {
+        let hw = if v100 { crate::energy::V100() } else { crate::energy::ASCEND() };
+        let fp = network_energy(&resnet18_shapes(32, 64), &hw, Method::Fp32, true).total_pj();
+        network_energy(&resnet18_shapes(32, base), &hw, m, true).total_pj() / fp * 100.0
+    };
+    println!(
+        "{:<26} {:>9} {:>14.2} {:>14.2}",
+        "FP ResNet18 (base 64)", "—", 100.0, 100.0
+    );
+    for (base, paper_base) in [(8usize, 64usize), (16, 128), (32, 256)] {
+        let mut rng = Rng::new(cfg.seed + base as u64);
+        let rcfg = ResNetConfig {
+            base,
+            blocks: vec![2, 2],
+            hw: cfg.hw,
+            classes: cfg.classes,
+            ..Default::default()
+        };
+        let mut model = resnet_boolean(&rcfg, &mut rng);
+        let mut trainer = ClassifierTrainer::new(&cfg);
+        let report = trainer.fit(&mut model, &train, &val, &cfg, false);
+        println!(
+            "{:<26} {:>9.2} {:>14.2} {:>14.2}",
+            format!("B⊕LD (base {paper_base})"),
+            report.val_acc * 100.0,
+            e_pct(paper_base, Method::Bold, false),
+            e_pct(paper_base, Method::Bold, true)
+        );
+    }
+    println!("(paper: base 64→51.8%, base 256→70.0% beating FP 69.7% at 24.45% energy)");
+    Ok(())
+}
+
+/// Table 6: adaptability — train-from-scratch vs fine-tuning transfers
+/// across two related synthetic datasets (refs A–H of the paper).
+pub fn table6(quick: bool) -> Result<(), String> {
+    println!("Table 6 — fine-tuning adaptability (refs C/D/F/H) + FP baselines (A/B/E/G)");
+    let mut cfg = cifar_cfg(quick);
+    cfg.steps = if quick { 50 } else { 300 };
+    // two tasks with the same input space: 10-class and 4-class variants
+    let (tr10, va10) = cifar_data(&cfg, 10, 11);
+    let (tr4, va4) = ImageDataset::cifar_like(cfg.train_size + cfg.val_size, 4, 3, cfg.hw, 0.25, 22)
+        .split(cfg.train_size);
+
+    let build = |kind: VggKind, classes: usize, rng: &mut Rng, cfg: &TrainConfig| {
+        vgg_small(
+            &VggConfig {
+                kind,
+                hw: cfg.hw,
+                width_mult: cfg.width_mult,
+                classes,
+                ..Default::default()
+            },
+            rng,
+        )
+    };
+    #[allow(clippy::too_many_arguments)]
+    let run = |name: &str,
+                   kind: VggKind,
+                   pre: Option<(&ImageDataset, &ImageDataset, usize)>,
+                   tr: &ImageDataset,
+                   va: &ImageDataset,
+                   classes: usize| {
+        let mut rng = Rng::new(7);
+        let mut cfg_l = cfg.clone();
+        cfg_l.classes = classes;
+        if kind == VggKind::Fp {
+            cfg_l.lr_bool = 0.0;
+        }
+        let mut model = build(kind, classes, &mut rng, &cfg_l);
+        let mut trainer = ClassifierTrainer::new(&cfg_l);
+        if let Some((ptr, pva, pcls)) = pre {
+            // pre-train on the source task with a temporary head size:
+            // heads differ per task, so pre-train a same-head model and
+            // transfer everything (heads here share `classes`): emulate by
+            // pre-training on the source dataset remapped mod `classes`.
+            let src = ptr.clone_remap(classes);
+            let src_val = pva.clone_remap(classes);
+            let _ = pcls;
+            let mut pre_cfg = cfg_l.clone();
+            pre_cfg.steps /= 2;
+            let _ = trainer.fit(&mut model, &src, &src_val, &pre_cfg, false);
+        }
+        let report = trainer.fit(&mut model, tr, va, &cfg_l, false);
+        println!("{:<44} acc {:>6.2}%", name, report.val_acc * 100.0);
+        report.val_acc
+    };
+
+    let a = run("A: FP, random init, task-10", VggKind::Fp, None, &tr10, &va10, 10);
+    let c = run("C: B⊕LD, random init, task-10", VggKind::Bold, None, &tr10, &va10, 10);
+    let d = run("D: B⊕LD, random init, task-4", VggKind::Bold, None, &tr4, &va4, 4);
+    let f = run(
+        "F: B⊕LD, init from task-10 run, FT on task-4",
+        VggKind::Bold,
+        Some((&tr10, &va10, 10)),
+        &tr4,
+        &va4,
+        4,
+    );
+    let h = run(
+        "H: B⊕LD, init from task-4 run, FT on task-10",
+        VggKind::Bold,
+        Some((&tr4, &va4, 4)),
+        &tr10,
+        &va10,
+        10,
+    );
+    let _ = (a, c);
+    println!(
+        "(paper: FT ≈ from-scratch — here F {:.2} vs D {:.2}, H {:.2} vs C {:.2})",
+        f * 100.0,
+        d * 100.0,
+        h * 100.0,
+        c * 100.0
+    );
+    Ok(())
+}
+
+/// Table 9: modified VGG-SMALL (single FC) comparison.
+pub fn table9(quick: bool) -> Result<(), String> {
+    println!("Table 9 — modified VGG-SMALL (1 FC): Boolean vs FP vs BNNs");
+    let cfg = cifar_cfg(quick);
+    println!("{:<18} {:>12} {:>12} {:>9}", "method", "fwd W/A", "train W/G", "Acc(%)");
+    let rows: &[(Method, &str, &str)] = &[
+        (Method::Fp32, "32/32", "32/32"),
+        (Method::XnorNet, "1/1", "32/32"),
+        (Method::BinaryNet, "1/1", "32/32"),
+        (Method::Bold, "1/1", "1/16"),
+    ];
+    for &(m, wa, wg) in rows {
+        let acc = train_method(m, &cfg, quick);
+        println!("{:<18} {:>12} {:>12} {:>9.2}", m.name(), wa, wg, acc);
+    }
+    println!("(paper: FP 93.8, XNOR 87.4, B⊕LD 90.8 with 1/16 training bitwidth)");
+    Ok(())
+}
+
+/// Table 10: block-design ablation — shortcut kernel size, base width,
+/// augmentation.
+pub fn table10(quick: bool) -> Result<(), String> {
+    println!("Table 10 — Boolean ResNet block ablation (shortcut k, base width, augmentation)");
+    let mut cfg = cifar_cfg(quick);
+    cfg.steps = if quick { 40 } else { 250 };
+    cfg.lr_bool = 4.0;
+    let (train, val) = cifar_data(&cfg, cfg.classes, 55);
+    println!(
+        "{:<12} {:>10} {:>12} {:>9}",
+        "base", "shortcut", "augment", "Acc(%)"
+    );
+    for (base, k, augment) in
+        [(8usize, 1usize, false), (8, 3, false), (16, 3, false), (16, 3, true)]
+    {
+        let mut rng = Rng::new(cfg.seed + (base * 10 + k) as u64);
+        let rcfg = ResNetConfig {
+            base,
+            blocks: vec![2, 2],
+            hw: cfg.hw,
+            classes: cfg.classes,
+            shortcut_k: k,
+            ..Default::default()
+        };
+        let mut model = resnet_boolean(&rcfg, &mut rng);
+        let mut trainer = ClassifierTrainer::new(&cfg);
+        // augmentation: crop+flip on each batch
+        let mut sampler = crate::data::BatchSampler::new(train.n, cfg.batch, cfg.seed);
+        let mut arng = Rng::new(77);
+        for step in 0..cfg.steps {
+            let idx = sampler.next_batch();
+            let (mut x, labels) = train.batch(&idx);
+            if augment {
+                x = crate::data::random_crop_flip(&x, 2, &mut arng);
+            }
+            let _ = trainer.train_step(&mut model, crate::nn::Value::F32(x), &labels, step);
+        }
+        let acc = evaluate_classifier(&mut model, &val, cfg.batch);
+        println!(
+            "{:<12} {:>10} {:>12} {:>9.2}",
+            base,
+            format!("{k}x{k}"),
+            if augment { "crop+flip" } else { "basic" },
+            acc * 100.0
+        );
+    }
+    println!("(paper: 3×3 shortcut > 1×1; wider base > narrower; augmentation helps ~3 pts)");
+    Ok(())
+}
+
+// Helper: remap labels mod `classes` for the Table 6 head transfer.
+impl ImageDataset {
+    fn clone_remap(&self, classes: usize) -> ImageDataset {
+        ImageDataset {
+            images: self.images.clone(),
+            labels: self.labels.iter().map(|&l| l % classes).collect(),
+            n: self.n,
+            c: self.c,
+            h: self.h,
+            w: self.w,
+            classes,
+        }
+    }
+}

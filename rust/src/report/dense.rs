@@ -1,0 +1,218 @@
+//! Dense-prediction reports: Table 3 (super-resolution), Table 4
+//! (segmentation mIoU), Table 12 (class-wise IoU / BOOL-ASPP ablation),
+//! Table 13 (segmentation heads).
+
+use crate::data::{SegDataset, SrDataset};
+use crate::models::edsr::psnr;
+use crate::models::segnet::{class_iou, mean_iou};
+use crate::models::{edsr_small, segnet_boolean, EdsrConfig, SegNetConfig};
+use crate::nn::{l1_loss, softmax_cross_entropy_nchw, Layer, Value};
+use crate::optim::{Adam, BooleanOptimizer};
+use crate::util::Rng;
+
+/// Train an EDSR model with the paper's recipe (L1 loss, Adam for FP,
+/// Boolean optimizer for Boolean params); return mean PSNR on a val set.
+fn train_sr(cfg: &EdsrConfig, steps: usize, seed: u64) -> f32 {
+    let train = SrDataset::textures(96, cfg.colors, 8, cfg.scale, seed);
+    let val = SrDataset::textures(16, cfg.colors, 8, cfg.scale, seed + 1);
+    let mut rng = Rng::new(seed);
+    let mut model = edsr_small(cfg, &mut rng);
+    let bool_opt = BooleanOptimizer::new(6.0);
+    let mut adam = Adam::new(1e-3);
+    let mut sampler = crate::data::BatchSampler::new(train.n, 8, seed);
+    for _ in 0..steps {
+        let idx = sampler.next_batch();
+        let (lr, hr) = train.batch(&idx);
+        let pred = model.forward(Value::F32(lr), true).expect_f32("sr");
+        let out = l1_loss(&pred, &hr);
+        model.zero_grads();
+        let _ = model.backward(out.grad);
+        let mut params = model.params();
+        bool_opt.step(&mut params);
+        adam.step(&mut params);
+    }
+    // validation PSNR
+    let idx: Vec<usize> = (0..val.n).collect();
+    let (lr, hr) = val.batch(&idx);
+    let pred = model.forward(Value::F32(lr), false).expect_f32("sr");
+    psnr(&pred, &hr)
+}
+
+/// Table 3: PSNR at ×2/×3/×4, FP small-EDSR vs Boolean EDSR.
+pub fn table3(quick: bool) -> Result<(), String> {
+    println!("Table 3 — super-resolution PSNR (dB) on synthetic textures (stand-in for Set5/...)");
+    println!("{:<8} {:<22} {:>10}", "scale", "method", "PSNR (dB)");
+    let steps = if quick { 60 } else { 400 };
+    let scales: &[usize] = if quick { &[2] } else { &[2, 3, 4] };
+    for &scale in scales {
+        for boolean in [false, true] {
+            let cfg = EdsrConfig { features: 16, blocks: 3, scale, boolean, ..Default::default() };
+            let p = train_sr(&cfg, steps, 31 + scale as u64);
+            println!(
+                "x{:<7} {:<22} {:>10.2}",
+                scale,
+                if boolean { "B⊕LD EDSR" } else { "SMALL EDSR (FP)" },
+                p
+            );
+        }
+    }
+    println!("(paper ×2: FP 38.01 vs B⊕LD 37.42 on Set5 — ~0.5–1.5 dB gap, shrinking at ×2)");
+    Ok(())
+}
+
+/// Train a segmentation net; returns (mIoU, per-class IoU).
+fn train_seg(
+    scfg: &SegNetConfig,
+    data: &SegDataset,
+    val: &SegDataset,
+    steps: usize,
+    rcs: bool,
+    seed: u64,
+) -> (f32, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut model = segnet_boolean(scfg, &mut rng);
+    let bool_opt = BooleanOptimizer::new(6.0);
+    let mut adam = Adam::new(1e-3);
+    let mut sampler = crate::data::BatchSampler::new(data.n, 8, seed);
+    if rcs {
+        sampler = crate::data::BatchSampler::new(data.n, 8, seed).with_rcs(
+            &data.dominant_class(),
+            scfg.classes,
+            0.5,
+        );
+    }
+    for _ in 0..steps {
+        let idx = sampler.next_batch();
+        let (x, labels) = data.batch(&idx);
+        let logits = model.forward(Value::F32(x), true).expect_f32("seg");
+        let out = softmax_cross_entropy_nchw(&logits, &labels, None);
+        model.zero_grads();
+        let _ = model.backward(out.grad);
+        let mut params = model.params();
+        bool_opt.step(&mut params);
+        adam.step(&mut params);
+    }
+    // evaluate
+    let idx: Vec<usize> = (0..val.n).collect();
+    let (x, labels) = val.batch(&idx);
+    let logits = model.forward(Value::F32(x), false).expect_f32("seg");
+    let rows = logits.nchw_to_rows();
+    let preds = rows.argmax_rows();
+    (
+        mean_iou(&preds, &labels, scfg.classes, None),
+        class_iou(&preds, &labels, scfg.classes),
+    )
+}
+
+fn seg_data(quick: bool, seed: u64) -> (SegDataset, SegDataset) {
+    let hw = 16;
+    let n = if quick { 48 } else { 160 };
+    (
+        SegDataset::scenes(n, 6, 3, hw, 0.55, seed),
+        SegDataset::scenes(24, 6, 3, hw, 0.55, seed + 100),
+    )
+}
+
+/// Table 4: segmentation mIoU — Boolean model vs an FP-width reference.
+pub fn table4(quick: bool) -> Result<(), String> {
+    println!("Table 4 — segmentation mIoU on synthetic scenes (stand-in for Cityscapes/VOC)");
+    let steps = if quick { 50 } else { 300 };
+    let (train, val) = seg_data(quick, 5);
+    // FP reference: same topology with much wider FP-equivalent capacity
+    // is out of scope for the scaled run; we report B⊕LD with the paper's
+    // BOOL-ASPP and the naive variant for the gap.
+    let (miou, _) = train_seg(
+        &SegNetConfig { hw: 16, width: 12, naive_aspp: false, ..Default::default() },
+        &train,
+        &val,
+        steps,
+        true,
+        3,
+    );
+    let (miou_naive, _) = train_seg(
+        &SegNetConfig { hw: 16, width: 12, naive_aspp: true, ..Default::default() },
+        &train,
+        &val,
+        steps,
+        false,
+        3,
+    );
+    println!("{:<36} {:>10.1}", "B⊕LD (BOOL-ASPP + RCS)  mIoU(%)", miou * 100.0);
+    println!("{:<36} {:>10.1}", "B⊕LD (naive ASPP)       mIoU(%)", miou_naive * 100.0);
+    println!("(paper: 67.4 vs naive 66.3 on Cityscapes; FP baseline 70.7)");
+    Ok(())
+}
+
+/// Table 12: class-wise IoU, naive BOOL-ASPP vs BOOL-ASPP + RCS.
+pub fn table12(quick: bool) -> Result<(), String> {
+    println!("Table 12 — class-wise IoU: naive ASPP vs BOOL-ASPP (+RCS), rare classes improve");
+    let steps = if quick { 50 } else { 300 };
+    let (train, val) = seg_data(quick, 9);
+    let freqs = train.class_frequencies();
+    let (m_naive, iou_naive) = train_seg(
+        &SegNetConfig { hw: 16, width: 12, naive_aspp: true, ..Default::default() },
+        &train,
+        &val,
+        steps,
+        false,
+        4,
+    );
+    let (m_bold, iou_bold) = train_seg(
+        &SegNetConfig { hw: 16, width: 12, naive_aspp: false, ..Default::default() },
+        &train,
+        &val,
+        steps,
+        true,
+        4,
+    );
+    println!(
+        "{:<8} {:>10} {:>14} {:>18} {:>8}",
+        "class", "freq(%)", "naive IoU(%)", "BOOL-ASPP+RCS(%)", "Δ"
+    );
+    for c in 0..6 {
+        println!(
+            "{:<8} {:>10.2} {:>14.1} {:>18.1} {:>8.1}",
+            c,
+            freqs[c] * 100.0,
+            iou_naive[c] * 100.0,
+            iou_bold[c] * 100.0,
+            (iou_bold[c] - iou_naive[c]) * 100.0
+        );
+    }
+    println!(
+        "mIoU: naive {:.1}% → BOOL-ASPP+RCS {:.1}% (paper: 66.3 → 67.4)",
+        m_naive * 100.0,
+        m_bold * 100.0
+    );
+    Ok(())
+}
+
+/// Table 13: segmentation heads — FCN-32s-like (no context module) vs
+/// DeepLab-like (BOOL-ASPP).
+pub fn table13(quick: bool) -> Result<(), String> {
+    println!("Table 13 — segmentation heads (FCN-like vs DeepLab/BOOL-ASPP-like)");
+    let steps = if quick { 50 } else { 300 };
+    let (train, val) = seg_data(quick, 13);
+    // FCN-like: reuse the segnet with the naive context module as the
+    // weaker head (no integer GAP, no RCS).
+    let (m_fcn, _) = train_seg(
+        &SegNetConfig { hw: 16, width: 12, naive_aspp: true, ..Default::default() },
+        &train,
+        &val,
+        steps,
+        false,
+        6,
+    );
+    let (m_dl, _) = train_seg(
+        &SegNetConfig { hw: 16, width: 12, naive_aspp: false, ..Default::default() },
+        &train,
+        &val,
+        steps,
+        true,
+        6,
+    );
+    println!("{:<30} {:>10.1}", "B⊕LD + FCN-like head  mIoU(%)", m_fcn * 100.0);
+    println!("{:<30} {:>10.1}", "B⊕LD + ASPP head      mIoU(%)", m_dl * 100.0);
+    println!("(paper VOC: FCN-32s head 60.1 vs DeepLabV3 head 67.3)");
+    Ok(())
+}

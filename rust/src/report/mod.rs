@@ -1,0 +1,53 @@
+//! Report harness: regenerate every table and figure of the paper's
+//! evaluation (§4 + Appendices C/D/E) on the scaled workloads documented
+//! in DESIGN.md §2. Invoked as `bold report <artifact>`.
+//!
+//! Absolute numbers are testbed-scaled; what must (and does) reproduce is
+//! the *shape*: which method wins, by roughly what factor, where the
+//! crossovers fall. EXPERIMENTS.md records paper-vs-measured per artifact.
+
+mod classification;
+mod dense;
+mod mathrep;
+mod nlp;
+
+pub use classification::{fig1, table10, table2, table5, table6, table9};
+pub use dense::{table12, table13, table3, table4};
+pub use mathrep::{convergence, fig4, fig5, hw_tables, table8};
+pub use nlp::table7;
+
+/// All report ids, in paper order.
+pub const ALL_REPORTS: &[&str] = &[
+    "fig1", "table2", "table3", "table4", "table5", "table6", "table7", "table8", "table9",
+    "table10", "table12", "table13", "fig4", "fig5", "hw", "convergence",
+];
+
+/// Dispatch a report by id. `quick` shrinks workloads for CI/smoke runs.
+pub fn run(id: &str, quick: bool) -> Result<(), String> {
+    match id {
+        "fig1" => fig1(quick),
+        "table2" => table2(quick),
+        "table3" => table3(quick),
+        "table4" => table4(quick),
+        "table5" => table5(quick),
+        "table6" => table6(quick),
+        "table7" => table7(quick),
+        "table8" => table8(),
+        "table9" => table9(quick),
+        "table10" => table10(quick),
+        "table12" => table12(quick),
+        "table13" => table13(quick),
+        "fig4" => fig4(quick),
+        "fig5" => fig5(),
+        "hw" => hw_tables(),
+        "convergence" => convergence(quick),
+        "all" => {
+            for r in ALL_REPORTS {
+                println!("\n================ {r} ================");
+                run(r, quick)?;
+            }
+            Ok(())
+        }
+        other => Err(format!("unknown report '{other}'; available: {ALL_REPORTS:?} or 'all'")),
+    }
+}

@@ -1,0 +1,575 @@
+//! Bit-packed Boolean matrix: the simulated "native Boolean accelerator"
+//! dataflow (DESIGN.md §Hardware-Adaptation).
+//!
+//! Layout: row-major, 64 Boolean values per `u64` word, bit = 1 ↔ T ↔ +1
+//! under the Definition A.1 embedding. The Boolean neuron of Eq. (1) with
+//! the xnor connective becomes, per output unit,
+//!
+//! ```text
+//! s = Σ_i xnor(w_i, x_i) = (#agree) − (#disagree)
+//!   = m_valid − 2·popcount((x ⊕ w) & valid)
+//! ```
+//!
+//! i.e. one XOR + POPCNT per 64 weights — this is the energy story of the
+//! paper made concrete. Optional validity masks implement the three-valued
+//! 0 of Definition 3.1 (zero-padding in convolutions): masked-off lanes
+//! contribute nothing to the count.
+
+use super::Tensor;
+use crate::util::Rng;
+
+/// Byte → 8-lane ±1 pattern lookup (bit=1 ↦ +1, bit=0 ↦ −1). 8 KiB,
+/// cache-resident; turns the per-bit branchy backward loops into straight
+/// fused multiply-adds (see §Perf in EXPERIMENTS.md: ~8× on backward).
+static PM1_LUT: [[f32; 8]; 256] = {
+    let mut lut = [[0.0f32; 8]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        let mut k = 0usize;
+        while k < 8 {
+            lut[b][k] = if (b >> k) & 1 == 1 { 1.0 } else { -1.0 };
+            k += 1;
+        }
+        b += 1;
+    }
+    lut
+};
+
+/// Byte → 8-lane 0/1 mask pattern (for the 𝕄-zero masked variants).
+static BIT_LUT: [[f32; 8]; 256] = {
+    let mut lut = [[0.0f32; 8]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        let mut k = 0usize;
+        while k < 8 {
+            lut[b][k] = ((b >> k) & 1) as f32;
+            k += 1;
+        }
+        b += 1;
+    }
+    lut
+};
+
+/// out[0..len] += zv · e(bits) for one packed row, via the byte LUT.
+#[inline]
+fn axpy_pm1_row(out: &mut [f32], words: &[u64], zv: f32) {
+    let len = out.len();
+    let mut lane = 0usize;
+    'words: for &word in words {
+        let bytes = word.to_le_bytes();
+        for &byte in &bytes {
+            let pat = &PM1_LUT[byte as usize];
+            if lane + 8 <= len {
+                let o = &mut out[lane..lane + 8];
+                for k in 0..8 {
+                    o[k] += zv * pat[k];
+                }
+            } else {
+                for k in 0..len - lane {
+                    out[lane + k] += zv * pat[k];
+                }
+                break 'words;
+            }
+            lane += 8;
+        }
+    }
+}
+
+/// out[0..len] += zv · e(bits)·mask for one packed row (masked lanes add 0).
+#[inline]
+fn axpy_pm1_masked_row(out: &mut [f32], words: &[u64], mask: &[u64], zv: f32) {
+    let len = out.len();
+    let mut lane = 0usize;
+    'words: for (&word, &mword) in words.iter().zip(mask) {
+        let wb = word.to_le_bytes();
+        let mb = mword.to_le_bytes();
+        for (&byte, &mbyte) in wb.iter().zip(&mb) {
+            let pat = &PM1_LUT[byte as usize];
+            let mpat = &BIT_LUT[mbyte as usize];
+            if lane + 8 <= len {
+                let o = &mut out[lane..lane + 8];
+                for k in 0..8 {
+                    o[k] += zv * pat[k] * mpat[k];
+                }
+            } else {
+                for k in 0..len - lane {
+                    out[lane + k] += zv * pat[k] * mpat[k];
+                }
+                break 'words;
+            }
+            lane += 8;
+        }
+    }
+}
+
+/// Bit-packed Boolean matrix (rows × cols), row-major, 64 cols per word.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// words per row = ceil(cols / 64)
+    pub wpr: usize,
+    pub words: Vec<u64>,
+}
+
+impl BitMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        let wpr = cols.div_ceil(64);
+        BitMatrix { rows, cols, wpr, words: vec![0u64; rows * wpr] }
+    }
+
+    /// Random ±1 content (each bit Bernoulli(1/2)).
+    pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let mut m = BitMatrix::zeros(rows, cols);
+        for w in m.words.iter_mut() {
+            *w = rng.next_u64();
+        }
+        m.mask_tail();
+        m
+    }
+
+    /// Zero out the bits beyond `cols` in each row's last word so that
+    /// whole-word popcounts never see garbage. Invariant maintained by all
+    /// constructors and mutators.
+    fn mask_tail(&mut self) {
+        let rem = self.cols % 64;
+        if rem == 0 {
+            return;
+        }
+        let mask = (1u64 << rem) - 1;
+        for r in 0..self.rows {
+            self.words[r * self.wpr + self.wpr - 1] &= mask;
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        debug_assert!(r < self.rows && c < self.cols);
+        (self.words[r * self.wpr + c / 64] >> (c % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        debug_assert!(r < self.rows && c < self.cols);
+        let w = &mut self.words[r * self.wpr + c / 64];
+        if v {
+            *w |= 1u64 << (c % 64);
+        } else {
+            *w &= !(1u64 << (c % 64));
+        }
+    }
+
+    #[inline]
+    pub fn flip(&mut self, r: usize, c: usize) {
+        self.words[r * self.wpr + c / 64] ^= 1u64 << (c % 64);
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u64] {
+        &self.words[r * self.wpr..(r + 1) * self.wpr]
+    }
+
+    /// Read `len ≤ 56` bits starting at (r, c) as the low bits of a u64
+    /// (word-level, crosses at most one word boundary).
+    #[inline]
+    pub fn get_bits(&self, r: usize, c: usize, len: usize) -> u64 {
+        debug_assert!(len <= 56 && c + len <= self.cols);
+        let base = r * self.wpr;
+        let wi = c / 64;
+        let off = c % 64;
+        let lo = self.words[base + wi] >> off;
+        let val = if off + len > 64 {
+            lo | (self.words[base + wi + 1] << (64 - off))
+        } else {
+            lo
+        };
+        val & ((1u64 << len) - 1)
+    }
+
+    /// Write `len ≤ 56` bits starting at (r, c) from the low bits of `v`.
+    #[inline]
+    pub fn set_bits(&mut self, r: usize, c: usize, len: usize, v: u64) {
+        debug_assert!(len <= 56 && c + len <= self.cols);
+        let mask = (1u64 << len) - 1;
+        let v = v & mask;
+        let base = r * self.wpr;
+        let wi = c / 64;
+        let off = c % 64;
+        self.words[base + wi] = (self.words[base + wi] & !(mask << off)) | (v << off);
+        if off + len > 64 {
+            let hi_len = off + len - 64;
+            let hi_mask = (1u64 << hi_len) - 1;
+            self.words[base + wi + 1] =
+                (self.words[base + wi + 1] & !hi_mask) | (v >> (64 - off));
+        }
+    }
+
+    /// Value in the ±1 embedding: +1 for set bit (T), −1 otherwise.
+    #[inline]
+    pub fn pm1(&self, r: usize, c: usize) -> f32 {
+        if self.get(r, c) { 1.0 } else { -1.0 }
+    }
+
+    /// Pack a ±1 f32 2-D tensor (x ≥ 0 ⇒ T, matching the threshold
+    /// activation convention s ≥ τ ⇒ T).
+    pub fn from_pm1(t: &Tensor) -> Self {
+        let (r, c) = (t.rows(), t.cols());
+        let mut m = BitMatrix::zeros(r, c);
+        for i in 0..r {
+            for j in 0..c {
+                if t.at2(i, j) >= 0.0 {
+                    m.set(i, j, true);
+                }
+            }
+        }
+        m
+    }
+
+    /// Unpack to a ±1 f32 tensor.
+    pub fn to_pm1(&self) -> Tensor {
+        let mut t = Tensor::zeros(&[self.rows, self.cols]);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                *t.at2_mut(i, j) = self.pm1(i, j);
+            }
+        }
+        t
+    }
+
+    /// Count of set bits (TRUEs).
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Number of positions where `self` and `other` differ.
+    pub fn hamming(&self, other: &BitMatrix) -> usize {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a ^ b).count_ones() as usize)
+            .sum()
+    }
+
+    /// Boolean linear forward, Eq. (3): `self` is the input X (B × M bits),
+    /// `w` the weights (N × M bits); result (B × N) integer pre-activations
+    /// as f32. One XOR+POPCNT per word pair.
+    pub fn xnor_gemm(&self, w: &BitMatrix) -> Tensor {
+        assert_eq!(self.cols, w.cols, "fan-in mismatch {} vs {}", self.cols, w.cols);
+        let (b, n, m) = (self.rows, w.rows, self.cols);
+        let mut out = vec![0.0f32; b * n];
+        // 2×2 register blocking: each x/w word load is reused twice and
+        // four popcount chains run independently (§Perf iteration log).
+        let mut i = 0;
+        while i + 2 <= b {
+            let x0 = self.row(i);
+            let x1 = self.row(i + 1);
+            let (o_lo, o_hi) = out[i * n..(i + 2) * n].split_at_mut(n);
+            let mut j = 0;
+            while j + 2 <= n {
+                let w0 = w.row(j);
+                let w1 = w.row(j + 1);
+                let (mut d00, mut d01, mut d10, mut d11) = (0u32, 0u32, 0u32, 0u32);
+                for k in 0..x0.len() {
+                    let (a0, a1) = (x0[k], x1[k]);
+                    let (c0, c1) = (w0[k], w1[k]);
+                    d00 += (a0 ^ c0).count_ones();
+                    d01 += (a0 ^ c1).count_ones();
+                    d10 += (a1 ^ c0).count_ones();
+                    d11 += (a1 ^ c1).count_ones();
+                }
+                o_lo[j] = (m as i64 - 2 * d00 as i64) as f32;
+                o_lo[j + 1] = (m as i64 - 2 * d01 as i64) as f32;
+                o_hi[j] = (m as i64 - 2 * d10 as i64) as f32;
+                o_hi[j + 1] = (m as i64 - 2 * d11 as i64) as f32;
+                j += 2;
+            }
+            // tail output column
+            while j < n {
+                let wr = w.row(j);
+                let (mut d0, mut d1) = (0u32, 0u32);
+                for k in 0..x0.len() {
+                    d0 += (x0[k] ^ wr[k]).count_ones();
+                    d1 += (x1[k] ^ wr[k]).count_ones();
+                }
+                o_lo[j] = (m as i64 - 2 * d0 as i64) as f32;
+                o_hi[j] = (m as i64 - 2 * d1 as i64) as f32;
+                j += 1;
+            }
+            i += 2;
+        }
+        // tail input row
+        while i < b {
+            let xr = self.row(i);
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let wr = w.row(j);
+                let mut disagree = 0u32;
+                for (&xw, &ww) in xr.iter().zip(wr) {
+                    disagree += (xw ^ ww).count_ones();
+                }
+                *o = (m as i64 - 2 * disagree as i64) as f32;
+            }
+            i += 1;
+        }
+        Tensor::from_vec(&[b, n], out)
+    }
+
+    /// Masked Boolean forward for three-valued inputs (Definition 3.1 /
+    /// 3.5): lanes with `mask` bit 0 are the adjoined 0 and contribute
+    /// nothing. `mask` has the same shape as `self` (per input row).
+    ///
+    /// ```text
+    /// s_ij = popc(mask_i) − 2·popc((x_i ⊕ w_j) & mask_i)
+    /// ```
+    pub fn xnor_gemm_masked(&self, w: &BitMatrix, mask: &BitMatrix) -> Tensor {
+        assert_eq!(self.cols, w.cols);
+        assert_eq!((self.rows, self.cols), (mask.rows, mask.cols));
+        let (b, n) = (self.rows, w.rows);
+        let mut out = vec![0.0f32; b * n];
+        for i in 0..b {
+            let xr = self.row(i);
+            let mr = mask.row(i);
+            let valid: i64 = mr.iter().map(|w| w.count_ones() as i64).sum();
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let wr = w.row(j);
+                let mut disagree = 0i64;
+                for ((&xw, &ww), &mw) in xr.iter().zip(wr).zip(mr) {
+                    disagree += ((xw ^ ww) & mw).count_ones() as i64;
+                }
+                *o = (valid - 2 * disagree) as f32;
+            }
+        }
+        Tensor::from_vec(&[b, n], out)
+    }
+
+    /// z @ e(W): real backward signal times embedded Boolean weights
+    /// (Algorithm 7, `G_X`). z is (B × N), self is W (N × M) → (B × M).
+    ///
+    /// Computed as gx = (Σ_{j: w_jk=T} z_ij) − (Σ_{j: w_jk=F} z_ij)
+    ///            = 2·Σ_{j: w_jk=T} z_ij − Σ_j z_ij,
+    /// walking each weight row once and adding ±z — no unpacking to f32.
+    pub fn backward_input(&self, z: &Tensor) -> Tensor {
+        let (n, m) = (self.rows, self.cols);
+        assert_eq!(z.cols(), n, "z cols {} vs N {}", z.cols(), n);
+        let b = z.rows();
+        let mut out = vec![0.0f32; b * m];
+        for i in 0..b {
+            let zr = &z.data[i * n..(i + 1) * n];
+            let orow = &mut out[i * m..(i + 1) * m];
+            for (j, &zv) in zr.iter().enumerate() {
+                if zv == 0.0 {
+                    continue;
+                }
+                axpy_pm1_row(orow, self.row(j), zv);
+            }
+        }
+        Tensor::from_vec(&[b, m], out)
+    }
+
+    /// Masked variant of [`Self::backward_weight`]: lanes with mask bit 0
+    /// are the three-valued 0 (e.g. conv zero-padding) and contribute no
+    /// vote — e(0) = 0 in Definition A.1.
+    pub fn backward_weight_masked(&self, z: &Tensor, mask: &BitMatrix) -> Tensor {
+        let (b, m) = (self.rows, self.cols);
+        assert_eq!(z.rows(), b);
+        assert_eq!((mask.rows, mask.cols), (b, m));
+        let n = z.cols();
+        let mut out = vec![0.0f32; n * m];
+        // j-outer / k-inner (see backward_weight): accumulator row stays hot.
+        for j in 0..n {
+            let orow = &mut out[j * m..(j + 1) * m];
+            for k in 0..b {
+                let zv = z.data[k * n + j];
+                if zv == 0.0 {
+                    continue;
+                }
+                axpy_pm1_masked_row(orow, self.row(k), mask.row(k), zv);
+            }
+        }
+        Tensor::from_vec(&[n, m], out)
+    }
+
+    /// zᵀ @ e(X): the weight vote of Eq. (7) (Algorithm 7, `G_W`).
+    /// z is (B × N), self is X (B × M bits) → (N × M).
+    pub fn backward_weight(&self, z: &Tensor) -> Tensor {
+        let (b, m) = (self.rows, self.cols);
+        assert_eq!(z.rows(), b, "z rows {} vs B {}", z.rows(), b);
+        let n = z.cols();
+        let mut out = vec![0.0f32; n * m];
+        // j-outer / k-inner: the accumulator row stays L1-resident while
+        // the (much smaller) packed input rows stream through (§Perf).
+        for j in 0..n {
+            let orow = &mut out[j * m..(j + 1) * m];
+            for k in 0..b {
+                let zv = z.data[k * n + j];
+                if zv == 0.0 {
+                    continue;
+                }
+                axpy_pm1_row(orow, self.row(k), zv);
+            }
+        }
+        Tensor::from_vec(&[n, m], out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_xnor_gemm(x: &BitMatrix, w: &BitMatrix) -> Tensor {
+        let mut out = Tensor::zeros(&[x.rows, w.rows]);
+        for i in 0..x.rows {
+            for j in 0..w.rows {
+                let mut s = 0i64;
+                for k in 0..x.cols {
+                    // xnor in the embedding: product of ±1
+                    s += (x.pm1(i, k) * w.pm1(j, k)) as i64;
+                }
+                *out.at2_mut(i, j) = s as f32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Rng::new(1);
+        for cols in [1, 63, 64, 65, 100, 128] {
+            let m = BitMatrix::random(5, cols, &mut rng);
+            let back = BitMatrix::from_pm1(&m.to_pm1());
+            assert_eq!(m, back, "cols={cols}");
+        }
+    }
+
+    #[test]
+    fn xnor_gemm_matches_naive() {
+        let mut rng = Rng::new(2);
+        for (b, n, m) in [(3, 4, 5), (7, 9, 64), (5, 6, 65), (4, 3, 200)] {
+            let x = BitMatrix::random(b, m, &mut rng);
+            let w = BitMatrix::random(n, m, &mut rng);
+            let fast = x.xnor_gemm(&w);
+            let slow = naive_xnor_gemm(&x, &w);
+            assert_eq!(fast, slow, "b={b} n={n} m={m}");
+        }
+    }
+
+    #[test]
+    fn xnor_gemm_matches_f32_matmul_via_embedding() {
+        // Prop A.2: bit-level xnor-count == ±1 matmul, exactly.
+        let mut rng = Rng::new(3);
+        let x = BitMatrix::random(8, 77, &mut rng);
+        let w = BitMatrix::random(6, 77, &mut rng);
+        let bits = x.xnor_gemm(&w);
+        let dense = x.to_pm1().matmul_bt(&w.to_pm1());
+        assert!(bits.max_abs_diff(&dense) == 0.0);
+    }
+
+    #[test]
+    fn masked_gemm_zero_mask_kills_everything() {
+        let mut rng = Rng::new(4);
+        let x = BitMatrix::random(3, 70, &mut rng);
+        let w = BitMatrix::random(2, 70, &mut rng);
+        let mask = BitMatrix::zeros(3, 70);
+        let out = x.xnor_gemm_masked(&w, &mask);
+        assert!(out.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn masked_gemm_full_mask_equals_unmasked() {
+        let mut rng = Rng::new(5);
+        let x = BitMatrix::random(4, 130, &mut rng);
+        let w = BitMatrix::random(3, 130, &mut rng);
+        let mut mask = BitMatrix::zeros(4, 130);
+        for i in 0..4 {
+            for j in 0..130 {
+                mask.set(i, j, true);
+            }
+        }
+        assert_eq!(x.xnor_gemm_masked(&w, &mask), x.xnor_gemm(&w));
+    }
+
+    #[test]
+    fn masked_gemm_partial() {
+        // Masked lanes behave like the 𝕄 zero: removing them changes the
+        // count by exactly their ±1 contribution.
+        let mut rng = Rng::new(6);
+        let x = BitMatrix::random(1, 64, &mut rng);
+        let w = BitMatrix::random(1, 64, &mut rng);
+        let mut mask = BitMatrix::zeros(1, 64);
+        for j in 0..64 {
+            mask.set(0, j, true);
+        }
+        let full = x.xnor_gemm_masked(&w, &mask).data[0];
+        mask.set(0, 17, false);
+        let part = x.xnor_gemm_masked(&w, &mask).data[0];
+        let contrib = x.pm1(0, 17) * w.pm1(0, 17);
+        assert_eq!(part, full - contrib);
+    }
+
+    #[test]
+    fn backward_input_matches_dense() {
+        let mut rng = Rng::new(7);
+        let w = BitMatrix::random(9, 83, &mut rng);
+        let z = Tensor::randn(&[5, 9], 1.0, &mut rng);
+        let fast = w.backward_input(&z);
+        let dense = z.matmul(&w.to_pm1());
+        assert!(fast.max_abs_diff(&dense) < 1e-4);
+    }
+
+    #[test]
+    fn backward_weight_matches_dense() {
+        let mut rng = Rng::new(8);
+        let x = BitMatrix::random(5, 83, &mut rng);
+        let z = Tensor::randn(&[5, 9], 1.0, &mut rng);
+        let fast = x.backward_weight(&z);
+        let dense = z.transpose2().matmul(&x.to_pm1());
+        assert!(fast.max_abs_diff(&dense) < 1e-4);
+    }
+
+    #[test]
+    fn backward_weight_masked_matches_dense_with_zeroed_lanes() {
+        let mut rng = Rng::new(12);
+        let x = BitMatrix::random(4, 70, &mut rng);
+        let mut mask = BitMatrix::zeros(4, 70);
+        for i in 0..4 {
+            for j in 0..70 {
+                mask.set(i, j, rng.bernoulli(0.8));
+            }
+        }
+        let z = Tensor::randn(&[4, 3], 1.0, &mut rng);
+        let fast = x.backward_weight_masked(&z, &mask);
+        // dense reference: embedded x with masked lanes set to 0
+        let mut xd = x.to_pm1();
+        for i in 0..4 {
+            for j in 0..70 {
+                if !mask.get(i, j) {
+                    *xd.at2_mut(i, j) = 0.0;
+                }
+            }
+        }
+        let dense = z.transpose2().matmul(&xd);
+        assert!(fast.max_abs_diff(&dense) < 1e-4);
+    }
+
+    #[test]
+    fn flip_changes_exactly_one_bit() {
+        let mut rng = Rng::new(9);
+        let m0 = BitMatrix::random(4, 100, &mut rng);
+        let mut m = m0.clone();
+        m.flip(2, 99);
+        assert_eq!(m.hamming(&m0), 1);
+        assert_eq!(m.get(2, 99), !m0.get(2, 99));
+    }
+
+    #[test]
+    fn tail_bits_stay_clear() {
+        let mut rng = Rng::new(10);
+        let m = BitMatrix::random(3, 65, &mut rng);
+        for r in 0..3 {
+            let last = m.row(r)[1];
+            assert_eq!(last >> 1, 0, "tail garbage in row {r}");
+        }
+    }
+}

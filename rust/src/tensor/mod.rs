@@ -1,0 +1,20 @@
+//! Tensor substrate.
+//!
+//! Two representations flow through the engine:
+//!
+//! * [`Tensor`] — dense f32, for FP layers, integer-valued pre-activations
+//!   and backward signals (the ℤ/ℝ-typed data of Fig. 2 in the paper);
+//! * [`BitMatrix`] — bit-packed Boolean data, 64 values per word, bit=1 ↔ T
+//!   (+1 under the Definition A.1 embedding). This is the "native Boolean
+//!   accelerator" dataflow the paper argues for: forward is word-level
+//!   XNOR + popcount, 64 lanes per instruction.
+//!
+//! The two are exactly interconvertible through the ±1 embedding
+//! (Proposition A.2), which the property tests exercise.
+
+mod bitmatrix;
+#[allow(clippy::module_inception)]
+mod tensor;
+
+pub use bitmatrix::BitMatrix;
+pub use tensor::Tensor;

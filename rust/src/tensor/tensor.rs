@@ -1,0 +1,491 @@
+//! Dense f32 tensor with the small, explicit op set the engine needs.
+//!
+//! Deliberately not a general autodiff tensor: every layer implements its
+//! own closed-form backward (the paper's Boolean layers do not have true
+//! gradients anyway — they have *variations*), so all we need here is
+//! shaped storage plus GEMM, elementwise ops and im2col/col2im.
+
+use crate::util::Rng;
+
+/// Row-major dense f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+            "shape {shape:?} vs data len {}", data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// He-style normal init scaled by 1/sqrt(fan_in) (for FP layers).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..n).map(|_| rng.normal() * std).collect(),
+        }
+    }
+
+    /// Uniform random ±1 tensor (embedded Boolean init).
+    pub fn rand_pm1(shape: &[usize], rng: &mut Rng) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: (0..n).map(|_| rng.sign()).collect() }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "rows() on non-2D {:?}", self.shape);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "cols() on non-2D {:?}", self.shape);
+        self.shape[1]
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn at2_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.shape[1] + j]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len(),
+            "reshape {:?} -> {:?}", self.shape, shape);
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn view(&self, shape: &[usize]) -> Tensor {
+        self.clone().reshape(shape)
+    }
+
+    // ----- elementwise ---------------------------------------------------
+
+    pub fn map<F: Fn(f32) -> f32>(&self, f: F) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn map_inplace<F: Fn(f32) -> f32>(&mut self, f: F) {
+        for x in self.data.iter_mut() {
+            *x = f(*x);
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    pub fn add_inplace(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn hadamard(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn scale_inplace(&mut self, s: f32) {
+        self.map_inplace(|x| x * s);
+    }
+
+    /// axpy: self += alpha * other.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Sign in the ±1 embedding (0 maps to +1, matching `s >= τ`).
+    pub fn sign_pm1(&self) -> Tensor {
+        self.map(|x| if x >= 0.0 { 1.0 } else { -1.0 })
+    }
+
+    // ----- reductions ----------------------------------------------------
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    pub fn mean(&self) -> f32 {
+        self.sum() / self.len() as f32
+    }
+
+    /// Column sums of a 2-D tensor → vector of length `cols`.
+    pub fn sum_rows(&self) -> Tensor {
+        let (r, c) = (self.rows(), self.cols());
+        let mut out = vec![0.0f32; c];
+        for i in 0..r {
+            let row = &self.data[i * c..(i + 1) * c];
+            for (o, &v) in out.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+        Tensor::from_vec(&[c], out)
+    }
+
+    /// Per-row argmax of a 2-D tensor.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        let (r, c) = (self.rows(), self.cols());
+        (0..r)
+            .map(|i| {
+                let row = &self.data[i * c..(i + 1) * c];
+                let mut best = 0;
+                for j in 1..c {
+                    if row[j] > row[best] {
+                        best = j;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
+    // ----- GEMM ----------------------------------------------------------
+
+    /// C = A·B with A (m×k), B (k×n). ikj loop order, slice inner loop.
+    pub fn matmul(&self, b: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (k2, n) = (b.rows(), b.cols());
+        assert_eq!(k, k2, "matmul {:?}x{:?}", self.shape, b.shape);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (p, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += a * bv;
+                }
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    /// C = A·Bᵀ with A (m×k), B (n×k) — the natural layout for row-major
+    /// weights (one row per output unit). Four independent accumulators
+    /// break the serial FP dependency chain so the k-loop vectorizes
+    /// (§Perf iteration log).
+    pub fn matmul_bt(&self, b: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (n, k2) = (b.rows(), b.cols());
+        assert_eq!(k, k2, "matmul_bt {:?}x{:?}", self.shape, b.shape);
+        let mut out = vec![0.0f32; m * n];
+        let k4 = k - k % 4;
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &b.data[j * k..(j + 1) * k];
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                let mut p = 0;
+                while p < k4 {
+                    s0 += arow[p] * brow[p];
+                    s1 += arow[p + 1] * brow[p + 1];
+                    s2 += arow[p + 2] * brow[p + 2];
+                    s3 += arow[p + 3] * brow[p + 3];
+                    p += 4;
+                }
+                let mut acc = (s0 + s1) + (s2 + s3);
+                for q in k4..k {
+                    acc += arow[q] * brow[q];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    /// C = Aᵀ·B with A (k×m), B (k×n) — gradient accumulation layout.
+    pub fn matmul_at(&self, b: &Tensor) -> Tensor {
+        let (k, m) = (self.rows(), self.cols());
+        let (k2, n) = (b.rows(), b.cols());
+        assert_eq!(k, k2, "matmul_at {:?}x{:?}", self.shape, b.shape);
+        let mut out = vec![0.0f32; m * n];
+        for p in 0..k {
+            let arow = &self.data[p * m..(p + 1) * m];
+            let brow = &b.data[p * n..(p + 1) * n];
+            for (i, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += a * bv;
+                }
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        let (r, c) = (self.rows(), self.cols());
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor::from_vec(&[c, r], out)
+    }
+
+    // ----- conv helpers ----------------------------------------------------
+
+    /// im2col for NCHW input: output is (N·OH·OW) × (C·k·k), zero padding.
+    ///
+    /// In the Boolean reading, the zero pads are the adjoined 0 of the
+    /// three-valued logic 𝕄 (Definition 3.1): they contribute nothing to
+    /// the xnor count, exactly like a multiplicative 0 here.
+    pub fn im2col(&self, k: usize, stride: usize, pad: usize) -> Tensor {
+        let (n, c, h, w) = self.dims4();
+        let oh = (h + 2 * pad - k) / stride + 1;
+        let ow = (w + 2 * pad - k) / stride + 1;
+        let cols = c * k * k;
+        let mut out = vec![0.0f32; n * oh * ow * cols];
+        for ni in 0..n {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let row = ((ni * oh + oy) * ow + ox) * cols;
+                    for ci in 0..c {
+                        for ky in 0..k {
+                            let iy = (oy * stride + ky) as isize - pad as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            let src = ((ni * c + ci) * h + iy as usize) * w;
+                            let dst = row + (ci * k + ky) * k;
+                            for kx in 0..k {
+                                let ix = (ox * stride + kx) as isize - pad as isize;
+                                if ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                out[dst + kx] = self.data[src + ix as usize];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Tensor::from_vec(&[n * oh * ow, cols], out)
+    }
+
+    /// col2im: scatter-add the patch gradient back to NCHW (adjoint of
+    /// `im2col` with identical geometry).
+    pub fn col2im(
+        &self,
+        n: usize,
+        c: usize,
+        h: usize,
+        w: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Tensor {
+        let oh = (h + 2 * pad - k) / stride + 1;
+        let ow = (w + 2 * pad - k) / stride + 1;
+        let cols = c * k * k;
+        assert_eq!(self.shape, vec![n * oh * ow, cols]);
+        let mut out = vec![0.0f32; n * c * h * w];
+        for ni in 0..n {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let row = ((ni * oh + oy) * ow + ox) * cols;
+                    for ci in 0..c {
+                        for ky in 0..k {
+                            let iy = (oy * stride + ky) as isize - pad as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            let dst = ((ni * c + ci) * h + iy as usize) * w;
+                            let src = row + (ci * k + ky) * k;
+                            for kx in 0..k {
+                                let ix = (ox * stride + kx) as isize - pad as isize;
+                                if ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                out[dst + ix as usize] += self.data[src + kx];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Tensor::from_vec(&[n, c, h, w], out)
+    }
+
+    /// NCHW → (N·H·W, C): the row layout produced by `im2col`, used to
+    /// express conv as GEMM (channel-last per output position).
+    pub fn nchw_to_rows(&self) -> Tensor {
+        let (n, c, h, w) = self.dims4();
+        let mut out = vec![0.0f32; n * h * w * c];
+        for ni in 0..n {
+            for ci in 0..c {
+                let src = ((ni * c) + ci) * h * w;
+                for p in 0..h * w {
+                    out[(ni * h * w + p) * c + ci] = self.data[src + p];
+                }
+            }
+        }
+        Tensor::from_vec(&[n * h * w, c], out)
+    }
+
+    /// (N·H·W, C) → NCHW, inverse of `nchw_to_rows`.
+    pub fn rows_to_nchw(&self, n: usize, c: usize, h: usize, w: usize) -> Tensor {
+        assert_eq!(self.shape, vec![n * h * w, c]);
+        let mut out = vec![0.0f32; n * c * h * w];
+        for ni in 0..n {
+            for ci in 0..c {
+                let dst = ((ni * c) + ci) * h * w;
+                for p in 0..h * w {
+                    out[dst + p] = self.data[(ni * h * w + p) * c + ci];
+                }
+            }
+        }
+        Tensor::from_vec(&[n, c, h, w], out)
+    }
+
+    /// Interpret shape as (N, C, H, W).
+    pub fn dims4(&self) -> (usize, usize, usize, usize) {
+        assert_eq!(self.shape.len(), 4, "dims4 on {:?}", self.shape);
+        (self.shape[0], self.shape[1], self.shape[2], self.shape[3])
+    }
+
+    /// Max absolute difference to another tensor (test helper).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[7, 5], 1.0, &mut rng);
+        let b = Tensor::randn(&[5, 9], 1.0, &mut rng);
+        let c1 = a.matmul(&b);
+        let c2 = a.matmul_bt(&b.transpose2());
+        let c3 = a.transpose2().matmul_at(&b);
+        assert!(c1.max_abs_diff(&c2) < 1e-5);
+        assert!(c1.max_abs_diff(&c3) < 1e-5);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        assert_eq!(a, a.transpose2().transpose2());
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1x1 kernel, stride 1, no pad: im2col is a pure reshape/permute.
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[2, 3, 4, 4], 1.0, &mut rng);
+        let cols = x.im2col(1, 1, 0);
+        assert_eq!(cols.shape, vec![2 * 4 * 4, 3]);
+        // spot check: element (n=1, c=2, y=3, x=0)
+        let v = x.data[((1 * 3 + 2) * 4 + 3) * 4];
+        assert_eq!(cols.at2((1 * 4 + 3) * 4, 2), v);
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // <im2col(x), y> == <x, col2im(y)> — the defining adjoint property.
+        let mut rng = Rng::new(4);
+        let (n, c, h, w, k, s, p) = (2, 3, 5, 5, 3, 1, 1);
+        let x = Tensor::randn(&[n, c, h, w], 1.0, &mut rng);
+        let cx = x.im2col(k, s, p);
+        let y = Tensor::randn(&cx.shape, 1.0, &mut rng);
+        let lhs: f32 = cx.data.iter().zip(&y.data).map(|(a, b)| a * b).sum();
+        let back = y.col2im(n, c, h, w, k, s, p);
+        let rhs: f32 = x.data.iter().zip(&back.data).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0));
+    }
+
+    #[test]
+    fn strided_im2col_shapes() {
+        let x = Tensor::zeros(&[1, 2, 8, 8]);
+        let cols = x.im2col(3, 2, 1);
+        // OH = OW = (8 + 2 - 3)/2 + 1 = 4
+        assert_eq!(cols.shape, vec![16, 18]);
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.sum(), 21.0);
+        assert_eq!(t.sum_rows().data, vec![5., 7., 9.]);
+        assert_eq!(t.argmax_rows(), vec![2, 2]);
+    }
+}

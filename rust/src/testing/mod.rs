@@ -1,0 +1,105 @@
+//! Minimal property-testing harness (the offline registry has no
+//! `proptest`). Deterministic seed sweep with failing-seed reporting; case
+//! sizes grow across the sweep so the first failure is naturally small.
+//! Used by the invariant tests in `rust/tests/prop_invariants.rs`.
+
+use crate::util::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum "size" hint passed to the generator (e.g. tensor dims).
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xB01D, max_size: 96 }
+    }
+}
+
+/// Context handed to each property case: an RNG plus a size hint.
+pub struct Case<'a> {
+    pub rng: &'a mut Rng,
+    pub size: usize,
+    pub index: usize,
+}
+
+impl Case<'_> {
+    /// Dimension in [1, size].
+    pub fn dim(&mut self) -> usize {
+        1 + self.rng.below(self.size.max(1))
+    }
+
+    /// ±1 vector of length n.
+    pub fn pm1_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.sign()).collect()
+    }
+
+    /// Standard-normal vector of length n.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal()).collect()
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases. Panics with the failing seed
+/// and case index on the first failure (re-run with that seed to debug).
+pub fn forall<P>(name: &str, cfg: PropConfig, mut prop: P)
+where
+    P: FnMut(&mut Case<'_>) -> Result<(), String>,
+{
+    for i in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        // sweep sizes: small cases first so failures shrink naturally
+        let size = 1 + (cfg.max_size * (i + 1)) / cfg.cases;
+        let mut case = Case { rng: &mut rng, size, index: i };
+        if let Err(msg) = prop(&mut case) {
+            panic!(
+                "property '{name}' failed at case {i} (seed {case_seed:#x}, size {size}): {msg}"
+            );
+        }
+    }
+}
+
+/// Elementwise closeness check returning a property-friendly Result.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > tol {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("trivial", PropConfig::default(), |c| {
+            let n = c.dim();
+            if n >= 1 { Ok(()) } else { Err("dim 0".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn forall_reports_failures() {
+        forall("fails", PropConfig { cases: 4, ..Default::default() }, |c| {
+            if c.index < 2 { Ok(()) } else { Err("boom".into()) }
+        });
+    }
+
+    #[test]
+    fn assert_close_works() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3).is_err());
+    }
+}

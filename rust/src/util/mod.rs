@@ -1,0 +1,11 @@
+//! Small self-contained utilities: deterministic PRNG and a wall-clock timer.
+//!
+//! The offline crate registry has no `rand`, so we ship a SplitMix64-seeded
+//! xoshiro256** generator — more than enough statistical quality for data
+//! synthesis, init and property tests, and fully reproducible across runs.
+
+pub mod rng;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Timer;

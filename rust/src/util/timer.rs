@@ -1,0 +1,78 @@
+//! Wall-clock timing helpers for the bench harness (no criterion offline).
+
+use std::time::Instant;
+
+/// Measure a closure's wall time in seconds.
+pub fn time_it<F: FnMut()>(mut f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
+
+/// A simple named timer that reports median/min over repeated runs.
+pub struct Timer {
+    pub name: String,
+    samples: Vec<f64>,
+}
+
+impl Timer {
+    pub fn new(name: &str) -> Self {
+        Timer { name: name.to_string(), samples: Vec::new() }
+    }
+
+    /// Run `f` `reps` times after `warmup` unrecorded runs.
+    pub fn bench<F: FnMut()>(&mut self, warmup: usize, reps: usize, mut f: F) -> &mut Self {
+        for _ in 0..warmup {
+            f();
+        }
+        for _ in 0..reps {
+            self.samples.push(time_it(&mut f));
+        }
+        self
+    }
+
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if s.is_empty() { f64::NAN } else { s[s.len() / 2] }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Print a one-line report; `work` = logical ops per run for a rate.
+    pub fn report(&self, work: Option<f64>) {
+        let med = self.median();
+        match work {
+            Some(w) => println!(
+                "{:<44} median {:>10.3} ms   min {:>10.3} ms   {:>8.2} Gop/s",
+                self.name,
+                med * 1e3,
+                self.min() * 1e3,
+                w / med / 1e9
+            ),
+            None => println!(
+                "{:<44} median {:>10.3} ms   min {:>10.3} ms",
+                self.name,
+                med * 1e3,
+                self.min() * 1e3
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_collects_samples() {
+        let mut t = Timer::new("noop");
+        t.bench(1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(t.median() >= 0.0);
+        assert!(t.min() <= t.median());
+    }
+}

@@ -1,0 +1,25 @@
+// Printable sanity check: `cargo test --test energy_numbers -- --nocapture`
+use bold::energy::*;
+
+#[test]
+fn print_table2_style_numbers() {
+    for hw in [hardware_ascend(), hardware_v100()] {
+        let shapes = vgg_small_shapes(100);
+        let fp = network_energy(&shapes, &hw, Method::Fp32, true).total_pj();
+        println!("--- {} (VGG-SMALL, 1 training iter, % of FP)", hw.name);
+        for m in Method::all() {
+            let e = network_energy(&shapes, &hw, m, true);
+            println!(
+                "{:<18} {:6.2}%   (comp {:.1}% mem {:.1}% opt {:.1}%)",
+                m.name(),
+                e.total_pj() / fp * 100.0,
+                e.compute_pj / fp * 100.0,
+                e.mem_pj / fp * 100.0,
+                e.optimizer_pj / fp * 100.0
+            );
+        }
+    }
+}
+
+fn hardware_ascend() -> Hardware { ASCEND() }
+fn hardware_v100() -> Hardware { V100() }

@@ -1,0 +1,193 @@
+//! Property-based invariant tests over the whole stack, using the
+//! `bold::testing` harness (seed-swept deterministic cases).
+
+use bold::logic::{embed, project, B3, F, T};
+use bold::nn::{BackwardScale, BoolLinear, Layer, ParamRef, ThresholdAct, Value};
+use bold::optim::BooleanOptimizer;
+use bold::tensor::{BitMatrix, Tensor};
+use bold::testing::{assert_close, forall, PropConfig};
+
+#[test]
+fn prop_embedding_isomorphism_on_streams() {
+    // Prop. A.2: e(xnor(a,b)) = e(a)·e(b), on random Boolean streams.
+    forall("embedding-isomorphism", PropConfig::default(), |c| {
+        let n = c.dim() * 4;
+        for _ in 0..n {
+            let a = if c.rng.bernoulli(0.5) { T } else { F };
+            let b = if c.rng.bernoulli(0.45) { T } else { F };
+            if embed(a.xnor(b)) != embed(a) * embed(b) {
+                return Err(format!("{a:?} xnor {b:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_projection_retracts_embedding() {
+    forall("projection-retraction", PropConfig::default(), |c| {
+        let k = (c.rng.next_u64() % 2000) as i32 - 1000;
+        let want = match k.cmp(&0) {
+            std::cmp::Ordering::Greater => T,
+            std::cmp::Ordering::Equal => B3::Zero,
+            std::cmp::Ordering::Less => F,
+        };
+        if project(k) != want {
+            return Err(format!("project({k})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_xnor_gemm_equals_dense_matmul() {
+    // Bit-level forward == embedded ±1 matmul, exactly, any shape.
+    forall("xnor-gemm-vs-dense", PropConfig { cases: 40, ..Default::default() }, |c| {
+        let (b, n, m) = (c.dim(), c.dim(), c.dim());
+        let x = BitMatrix::random(b, m, c.rng);
+        let w = BitMatrix::random(n, m, c.rng);
+        let bits = x.xnor_gemm(&w);
+        let dense = x.to_pm1().matmul_bt(&w.to_pm1());
+        assert_close(&bits.data, &dense.data, 0.0)
+    });
+}
+
+#[test]
+fn prop_bool_linear_backward_is_adjoint() {
+    // <z, L(x)> == <Lᵀ(z), x> in the embedded domain: the Boolean
+    // backward g_X = z·e(W) is the exact adjoint of the forward.
+    forall("bool-linear-adjoint", PropConfig { cases: 30, ..Default::default() }, |c| {
+        let (b, n_in, n_out) = (1 + c.dim() / 2, c.dim(), c.dim());
+        let mut rng2 = c.rng.fork(1);
+        let mut layer = BoolLinear::new("l", n_in, n_out, &mut rng2);
+        let x = Tensor::rand_pm1(&[b, n_in], c.rng);
+        let y = layer.forward(Value::bit_from_pm1(&x), true).expect_f32("f");
+        let z = Tensor::from_vec(&[b, n_out], c.normal_vec(b * n_out));
+        let gx = layer.backward(z.clone());
+        let lhs: f64 = y.data.iter().zip(&z.data).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        let rhs: f64 = x.data.iter().zip(&gx.data).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        if (lhs - rhs).abs() > 1e-2 * lhs.abs().max(1.0) {
+            return Err(format!("adjoint broken: {lhs} vs {rhs}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_threshold_backward_bounded_by_input_signal() {
+    // The tanh' window is in (0, 1]: |out| ≤ |in| elementwise, equality at
+    // the threshold.
+    forall("threshold-window", PropConfig { cases: 40, ..Default::default() }, |c| {
+        let n = c.dim();
+        let mut act = ThresholdAct::new("a", 0.0, BackwardScale::TanhPrime { fanin: n.max(1) });
+        let s = Tensor::from_vec(&[1, n], c.normal_vec(n)).scale(n as f32);
+        let _ = act.forward(Value::F32(s), true);
+        let z = Tensor::from_vec(&[1, n], c.normal_vec(n));
+        let g = act.backward(z.clone());
+        for i in 0..n {
+            if g.data[i].abs() > z.data[i].abs() + 1e-6 {
+                return Err(format!("window > 1 at {i}"));
+            }
+            if g.data[i] * z.data[i] < -1e-9 {
+                return Err("window flipped sign".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_optimizer_flip_iff_aligned_and_saturated() {
+    // Eq. 9 exhaustive per-element check on random states.
+    forall("flip-rule", PropConfig { cases: 40, ..Default::default() }, |c| {
+        let n = c.dim();
+        let mut bits = BitMatrix::random(1, n, c.rng);
+        let before = bits.clone();
+        let mut grad = Tensor::from_vec(&[1, n], c.normal_vec(n)).scale(2.0);
+        let mut accum = Tensor::from_vec(&[1, n], c.normal_vec(n));
+        let accum0 = accum.clone();
+        let mut ratio = c.rng.uniform();
+        let beta = ratio;
+        let lr = 0.5 + c.rng.uniform();
+        let opt = BooleanOptimizer::new(lr);
+        let mut params = vec![ParamRef::Bool {
+            name: "w".into(),
+            bits: &mut bits,
+            grad: &mut grad,
+            accum: &mut accum,
+            ratio: &mut ratio,
+        }];
+        opt.step(&mut params);
+        for i in 0..n {
+            let m = beta * accum0.data[i] + lr * grad.data[i];
+            let w = before.pm1(0, i);
+            let should_flip = m * w >= 1.0;
+            let flipped = bits.get(0, i) != before.get(0, i);
+            if should_flip != flipped {
+                return Err(format!("elem {i}: m={m} w={w} flip={flipped}"));
+            }
+            if flipped && accum.data[i] != 0.0 {
+                return Err(format!("elem {i}: accumulator not reset"));
+            }
+            if !flipped && (accum.data[i] - m).abs() > 1e-5 {
+                return Err(format!("elem {i}: accumulator wrong"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bit_pack_roundtrip_any_shape() {
+    forall("pack-roundtrip", PropConfig { cases: 50, max_size: 200, ..Default::default() }, |c| {
+        let (r, cdim) = (1 + c.dim() / 8, c.dim());
+        let t = Tensor::rand_pm1(&[r.max(1), cdim], c.rng);
+        let m = BitMatrix::from_pm1(&t);
+        if m.to_pm1() != t {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_energy_monotone_in_bitwidth_and_batch() {
+    use bold::energy::{conv_energy, method_bitwidths, ConvShape, Method, Phase, V100};
+    forall("energy-monotone", PropConfig { cases: 15, max_size: 32, ..Default::default() }, |c| {
+        let hw = V100();
+        let n = 1 + c.dim();
+        let ch = 8 + c.dim();
+        let shape = ConvShape { n, c: ch, m: ch, h: 16, w: 16, k: 3, stride: 1, pad: 1 };
+        let shape2 = ConvShape { n: n * 2, ..shape };
+        let fp = method_bitwidths(Method::Fp32);
+        let bold_bits = method_bitwidths(Method::Bold);
+        let e_fp = conv_energy(&shape, &hw, &fp, Phase::Forward).total();
+        let e_bold = conv_energy(&shape, &hw, &bold_bits, Phase::Forward).total();
+        let e_fp2 = conv_energy(&shape2, &hw, &fp, Phase::Forward).total();
+        if e_bold >= e_fp {
+            return Err(format!("1-bit ≥ 32-bit: {e_bold} vs {e_fp}"));
+        }
+        if e_fp2 <= e_fp {
+            return Err("bigger batch must cost more".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chain_rule_on_random_function_tables() {
+    use bold::logic::{chain_bb, variation, BoolFn};
+    forall("chain-rule", PropConfig { cases: 64, ..Default::default() }, |c| {
+        let pick = |rng: &mut bold::util::Rng| if rng.bernoulli(0.5) { T } else { F };
+        let f = BoolFn::new(pick(c.rng), pick(c.rng));
+        let g = BoolFn::new(pick(c.rng), pick(c.rng));
+        for x in [T, F] {
+            let lhs = variation(&f.compose(&g), x);
+            let rhs = chain_bb(&f, &g, x);
+            if lhs != rhs {
+                return Err(format!("f={f:?} g={g:?} x={x:?}"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,213 @@
+//! End-to-end training integration tests across tasks: the full
+//! coordinator stack must learn on every workload family the paper
+//! evaluates (classification, SR, segmentation, NLU) — fast smoke-scale
+//! versions of the report experiments.
+
+use bold::config::TrainConfig;
+use bold::coordinator::{evaluate_classifier, ClassifierTrainer};
+use bold::data::{ImageDataset, SegDataset, SrDataset};
+use bold::models::edsr::psnr;
+use bold::models::{
+    edsr_small, segnet_boolean, vgg_small, EdsrConfig, SegNetConfig, VggConfig, VggKind,
+};
+use bold::nn::{l1_loss, softmax_cross_entropy_nchw, Layer, Value};
+use bold::optim::{Adam, BooleanOptimizer};
+use bold::util::Rng;
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow training test: run with cargo test --release")]
+fn boolean_vgg_learns_cifar_like() {
+    let cfg = TrainConfig {
+        steps: 120,
+        batch: 64,
+        lr_bool: 8.0,
+        lr_fp: 2e-3,
+        train_size: 768,
+        val_size: 192,
+        hw: 16,
+        width_mult: 0.125,
+        ..Default::default()
+    };
+    let (train, val) =
+        ImageDataset::cifar_like(cfg.train_size + cfg.val_size, 10, 3, cfg.hw, 0.25, 1)
+            .split(cfg.train_size);
+    let vcfg = VggConfig {
+        kind: VggKind::Bold,
+        hw: cfg.hw,
+        width_mult: cfg.width_mult,
+        ..Default::default()
+    };
+    let mut model = vgg_small(&vcfg, &mut Rng::new(cfg.seed));
+    let mut trainer = ClassifierTrainer::new(&cfg);
+    let report = trainer.fit(&mut model, &train, &val, &cfg, false);
+    assert!(
+        report.val_acc > 0.5,
+        "Boolean VGG should be well above 10% chance: {:.3}",
+        report.val_acc
+    );
+    assert!(report.tail_loss(10) < report.losses[0], "loss must decrease");
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow training test: run with cargo test --release")]
+fn boolean_edsr_beats_naive_upsampling() {
+    let cfg = EdsrConfig { features: 12, blocks: 2, scale: 2, boolean: true, ..Default::default() };
+    let train = SrDataset::textures(64, 3, 8, 2, 7);
+    let val = SrDataset::textures(12, 3, 8, 2, 8);
+    let mut model = edsr_small(&cfg, &mut Rng::new(1));
+    let bool_opt = BooleanOptimizer::new(6.0);
+    let mut adam = Adam::new(1e-3);
+    let mut sampler = bold::data::BatchSampler::new(train.n, 8, 1);
+    for _ in 0..120 {
+        let idx = sampler.next_batch();
+        let (lr, hr) = train.batch(&idx);
+        let pred = model.forward(Value::F32(lr), true).expect_f32("sr");
+        let out = l1_loss(&pred, &hr);
+        model.zero_grads();
+        let _ = model.backward(out.grad);
+        let mut params = model.params();
+        bool_opt.step(&mut params);
+        adam.step(&mut params);
+    }
+    let idx: Vec<usize> = (0..val.n).collect();
+    let (lr, hr) = val.batch(&idx);
+    // naive baseline: nearest-neighbour upsample
+    let (n, c, h, w) = lr.dims4();
+    let mut naive = bold::tensor::Tensor::zeros(&hr.shape);
+    for ni in 0..n {
+        for ci in 0..c {
+            for y in 0..h * 2 {
+                for x in 0..w * 2 {
+                    naive.data[((ni * c + ci) * h * 2 + y) * w * 2 + x] =
+                        lr.data[((ni * c + ci) * h + y / 2) * w + x / 2];
+                }
+            }
+        }
+    }
+    let pred = model.forward(Value::F32(lr), false).expect_f32("sr");
+    let p_model = psnr(&pred, &hr);
+    let p_naive = psnr(&naive, &hr);
+    assert!(p_model > p_naive, "Boolean EDSR {p_model:.2} dB ≤ naive {p_naive:.2} dB");
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow training test: run with cargo test --release")]
+fn boolean_segnet_beats_majority_class() {
+    let train = SegDataset::scenes(48, 5, 3, 16, 0.6, 2);
+    let val = SegDataset::scenes(16, 5, 3, 16, 0.6, 3);
+    let scfg = SegNetConfig { classes: 5, hw: 16, width: 10, ..Default::default() };
+    let mut model = segnet_boolean(&scfg, &mut Rng::new(4));
+    let bool_opt = BooleanOptimizer::new(6.0);
+    let mut adam = Adam::new(1e-3);
+    let mut sampler = bold::data::BatchSampler::new(train.n, 8, 1);
+    for _ in 0..100 {
+        let idx = sampler.next_batch();
+        let (x, labels) = train.batch(&idx);
+        let logits = model.forward(Value::F32(x), true).expect_f32("seg");
+        let out = softmax_cross_entropy_nchw(&logits, &labels, None);
+        model.zero_grads();
+        let _ = model.backward(out.grad);
+        let mut params = model.params();
+        bool_opt.step(&mut params);
+        adam.step(&mut params);
+    }
+    let idx: Vec<usize> = (0..val.n).collect();
+    let (x, labels) = val.batch(&idx);
+    let logits = model.forward(Value::F32(x), false).expect_f32("seg");
+    let preds = logits.nchw_to_rows().argmax_rows();
+    let acc = preds.iter().zip(&labels).filter(|(p, l)| p == l).count() as f32
+        / labels.len() as f32;
+    // majority-class (background) baseline
+    // mIoU comparison vs an all-background predictor: predicting only the
+    // majority class gets IoU≈bg on class 0 and 0 elsewhere.
+    use bold::models::segnet::mean_iou;
+    let miou = mean_iou(&preds, &labels, 5, None);
+    let all_bg = vec![0usize; labels.len()];
+    let miou_bg = mean_iou(&all_bg, &labels, 5, None);
+    assert!(
+        miou > miou_bg,
+        "mIoU {miou:.3} must beat all-background {miou_bg:.3} (pixel acc {acc:.3})"
+    );
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow training test: run with cargo test --release")]
+fn fp_vs_boolean_accuracy_ordering() {
+    // The paper's qualitative ordering on the same task: FP ≥ B⊕LD ≫ chance.
+    let cfg = TrainConfig {
+        steps: 100,
+        batch: 64,
+        lr_bool: 8.0,
+        lr_fp: 2e-3,
+        train_size: 640,
+        val_size: 160,
+        hw: 16,
+        width_mult: 0.125,
+        ..Default::default()
+    };
+    let (train, val) =
+        ImageDataset::cifar_like(cfg.train_size + cfg.val_size, 10, 3, cfg.hw, 0.25, 5)
+            .split(cfg.train_size);
+    let mut accs = Vec::new();
+    for kind in [VggKind::Fp, VggKind::Bold] {
+        let mut cfg_l = cfg.clone();
+        if kind == VggKind::Fp {
+            cfg_l.lr_bool = 0.0;
+        }
+        let vcfg = VggConfig { kind, hw: cfg.hw, width_mult: cfg.width_mult, ..Default::default() };
+        let mut model = vgg_small(&vcfg, &mut Rng::new(7));
+        let mut trainer = ClassifierTrainer::new(&cfg_l);
+        let report = trainer.fit(&mut model, &train, &val, &cfg_l, false);
+        accs.push(report.val_acc);
+    }
+    assert!(accs[1] > 0.4, "B⊕LD ≫ chance: {:.3}", accs[1]);
+    assert!(
+        accs[0] > accs[1] - 0.15,
+        "FP should not lose badly to Boolean at this scale: {accs:?}"
+    );
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow training test: run with cargo test --release")]
+fn finetuning_transfers() {
+    // Table 6's headline: a Boolean model fine-tuned from a related task
+    // reaches (at least) from-scratch accuracy.
+    let cfg = TrainConfig {
+        steps: 80,
+        batch: 64,
+        lr_bool: 8.0,
+        train_size: 640,
+        val_size: 160,
+        hw: 16,
+        width_mult: 0.125,
+        ..Default::default()
+    };
+    let (tr_a, va_a) =
+        ImageDataset::cifar_like(cfg.train_size + cfg.val_size, 10, 3, cfg.hw, 0.25, 21)
+            .split(cfg.train_size);
+    let (tr_b, va_b) =
+        ImageDataset::cifar_like(cfg.train_size + cfg.val_size, 10, 3, cfg.hw, 0.25, 22)
+            .split(cfg.train_size);
+    let vcfg = VggConfig {
+        kind: VggKind::Bold,
+        hw: cfg.hw,
+        width_mult: cfg.width_mult,
+        ..Default::default()
+    };
+    // from scratch on B
+    let mut scratch = vgg_small(&vcfg, &mut Rng::new(3));
+    let mut t1 = ClassifierTrainer::new(&cfg);
+    let r_scratch = t1.fit(&mut scratch, &tr_b, &va_b, &cfg, false);
+    // pretrain on A then fine-tune on B
+    let mut ft = vgg_small(&vcfg, &mut Rng::new(3));
+    let mut t2 = ClassifierTrainer::new(&cfg);
+    let _ = t2.fit(&mut ft, &tr_a, &va_a, &cfg, false);
+    let mut t3 = ClassifierTrainer::new(&cfg);
+    let r_ft = t3.fit(&mut ft, &tr_b, &va_b, &cfg, false);
+    assert!(
+        r_ft.val_acc > r_scratch.val_acc - 0.1,
+        "fine-tuned {:.3} should be ≈ or better than scratch {:.3}",
+        r_ft.val_acc,
+        r_scratch.val_acc
+    );
+}

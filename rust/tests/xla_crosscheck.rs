@@ -1,0 +1,123 @@
+//! Cross-check: the native bit-packed Rust engine and the PJRT-compiled L2
+//! jax graph must agree EXACTLY (the ±1 embedding of Prop. A.2 makes
+//! Boolean logic and integer arithmetic isomorphic — equality, not
+//! approximation, modulo f32 rounding in the FP head).
+//!
+//! Requires `make artifacts` (skips gracefully if absent).
+
+use bold::models::{boolean_mlp, MlpConfig};
+use bold::nn::{Layer, Value};
+use bold::runtime::PjrtExecutor;
+use bold::tensor::Tensor;
+use bold::util::Rng;
+
+fn load_exec() -> Option<PjrtExecutor> {
+    if !std::path::Path::new("artifacts/bool_mlp_infer.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(PjrtExecutor::load_dir("artifacts").expect("load artifacts"))
+}
+
+/// Build the artifact-shaped native MLP and extract its weight tensors.
+fn artifact_mlp(rng: &mut Rng) -> (bold::nn::Sequential, Tensor, Tensor, Tensor, Tensor) {
+    let cfg = MlpConfig { d_in: 784, hidden: vec![512, 256], d_out: 10, tanh_scale: true };
+    let mut model = boolean_mlp(&cfg, rng);
+    let mut w1 = None;
+    let mut w2 = None;
+    let mut wfc = None;
+    let mut bfc = None;
+    for p in model.params() {
+        match p {
+            bold::nn::ParamRef::Bool { name, bits, .. } => {
+                if name.starts_with("bl0") {
+                    w1 = Some(bits.to_pm1());
+                } else {
+                    w2 = Some(bits.to_pm1());
+                }
+            }
+            bold::nn::ParamRef::Real { name, w, .. } => {
+                if name.ends_with(".w") {
+                    wfc = Some(w.clone());
+                } else {
+                    bfc = Some(w.clone());
+                }
+            }
+        }
+    }
+    (model, w1.unwrap(), w2.unwrap(), wfc.unwrap(), bfc.unwrap())
+}
+
+#[test]
+fn native_and_xla_forward_agree() {
+    let Some(exec) = load_exec() else { return };
+    let mut rng = Rng::new(11);
+    let (mut model, w1, w2, wfc, bfc) = artifact_mlp(&mut rng);
+    let x = Tensor::rand_pm1(&[128, 784], &mut rng);
+    let native = model.forward(Value::bit_from_pm1(&x), false).expect_f32("native");
+    let xla = exec
+        .execute("bool_mlp_infer", &[x, w1, w2, wfc, bfc])
+        .expect("xla")
+        .remove(0);
+    assert_eq!(native.shape, xla.shape);
+    let diff = native.max_abs_diff(&xla);
+    assert!(diff < 1e-3, "native vs XLA logits differ by {diff}");
+}
+
+#[test]
+fn native_and_xla_weight_votes_agree() {
+    let Some(exec) = load_exec() else { return };
+    let mut rng = Rng::new(13);
+    let (mut model, w1, w2, wfc, bfc) = artifact_mlp(&mut rng);
+    let x = Tensor::rand_pm1(&[128, 784], &mut rng);
+    let labels: Vec<usize> = (0..128).map(|i| i % 10).collect();
+    let mut y = Tensor::zeros(&[128, 10]);
+    for (i, &l) in labels.iter().enumerate() {
+        *y.at2_mut(i, l) = 1.0;
+    }
+
+    // native: forward + CE + backward
+    let logits = model.forward(Value::bit_from_pm1(&x), true).expect_f32("native");
+    let out = bold::nn::softmax_cross_entropy(&logits, &labels);
+    model.zero_grads();
+    let _ = model.backward(out.grad);
+    let mut q1_native = None;
+    let mut q2_native = None;
+    for p in model.params() {
+        if let bold::nn::ParamRef::Bool { name, grad, .. } = p {
+            if name.starts_with("bl0") {
+                q1_native = Some(grad.clone());
+            } else {
+                q2_native = Some(grad.clone());
+            }
+        }
+    }
+
+    // XLA: the compiled train step
+    let res = exec
+        .execute("bool_mlp_train_step", &[x, y, w1, w2, wfc, bfc])
+        .expect("xla step");
+    let (loss_xla, q1_xla, q2_xla) = (res[0].data[0], &res[2], &res[3]);
+
+    assert!((out.loss - loss_xla).abs() < 1e-4, "loss {} vs {}", out.loss, loss_xla);
+    let d1 = q1_native.unwrap().max_abs_diff(q1_xla);
+    let d2 = q2_native.unwrap().max_abs_diff(q2_xla);
+    // Both sides compute the identical closed-form Boolean backward; the
+    // only noise is f32 summation order.
+    assert!(d1 < 5e-3, "q_w1 votes differ by {d1}");
+    assert!(d2 < 5e-3, "q_w2 votes differ by {d2}");
+}
+
+#[test]
+fn cnn_artifact_executes() {
+    let Some(exec) = load_exec() else { return };
+    let mut rng = Rng::new(17);
+    let x = Tensor::randn(&[32, 3, 16, 16], 1.0, &mut rng);
+    let w1 = Tensor::rand_pm1(&[32, 27], &mut rng);
+    let w2 = Tensor::rand_pm1(&[64, 288], &mut rng);
+    let wfc = Tensor::randn(&[10, 64 * 16], 0.05, &mut rng);
+    let bfc = Tensor::zeros(&[10]);
+    let out = exec.execute("bool_cnn_infer", &[x, w1, w2, wfc, bfc]).expect("cnn");
+    assert_eq!(out[0].shape, vec![32, 10]);
+    assert!(out[0].data.iter().all(|v| v.is_finite()));
+}
