@@ -1,112 +1,142 @@
-//! PJRT serving demo: the Rust coordinator loads the AOT-compiled L2
-//! graphs (artifacts/*.hlo.txt) and trains the Boolean MLP *through XLA* —
-//! the forward/backward runs in the compiled artifact, the Boolean
-//! optimizer and Adam run natively in Rust on the returned votes.
-//! Python is nowhere on this path.
+//! PJRT serving demo (feature `xla-runtime`): the Rust coordinator loads
+//! the AOT-compiled L2 graphs (artifacts/*.hlo.txt) and trains the Boolean
+//! MLP *through XLA* — the forward/backward runs in the compiled artifact,
+//! the Boolean optimizer and Adam run natively in Rust on the returned
+//! votes. Python is nowhere on this path.
 //!
-//!     make artifacts && cargo run --release --example hlo_serve [steps]
+//!     make artifacts && cargo run --release --features xla-runtime --example hlo_serve [steps]
+//!
+//! Built without the feature, this example prints what is missing and
+//! exits instead of failing to compile. For the dependency-free native
+//! serving path, see `bold serve-native` and examples in
+//! rust/benches/bench_serve.rs.
 
-use bold::data::{BatchSampler, ImageDataset};
-use bold::nn::ParamRef;
-use bold::optim::{Adam, BooleanOptimizer};
-use bold::runtime::PjrtExecutor;
-use bold::tensor::{BitMatrix, Tensor};
-use bold::util::Rng;
+#[cfg(feature = "xla-runtime")]
+mod demo {
+    use bold::data::{BatchSampler, ImageDataset};
+    use bold::nn::ParamRef;
+    use bold::optim::{Adam, BooleanOptimizer};
+    use bold::runtime::PjrtExecutor;
+    use bold::tensor::{BitMatrix, Tensor};
+    use bold::util::Rng;
 
+    pub fn run() {
+        let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(60);
+        let exec = match PjrtExecutor::load_dir("artifacts") {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("cannot load artifacts ({e:#}); run `make artifacts` first");
+                std::process::exit(1);
+            }
+        };
+        println!("PJRT platform {}, entries {:?}", exec.platform(), exec.entries());
+
+        // Artifact dims (python/compile/model.py): 784 → 512 → 256 → 10, batch 128.
+        let (batch, d_in, h1, h2, classes) = (128usize, 784usize, 512usize, 256usize, 10usize);
+        let (train, val) =
+            ImageDataset::mnist_like(4096 + 1024, classes, d_in, 0.08, 3).split(4096);
+
+        let mut rng = Rng::new(42);
+        // Boolean weights live in Rust as packed bits; the artifact takes the
+        // ±1 embedding (Prop. A.2 makes the two exactly equivalent).
+        let mut w1 = BitMatrix::random(h1, d_in, &mut rng);
+        let mut w2 = BitMatrix::random(h2, h1, &mut rng);
+        let mut m1 = Tensor::zeros(&[h1, d_in]);
+        let mut m2 = Tensor::zeros(&[h2, h1]);
+        let (mut r1, mut r2) = (1.0f32, 1.0f32);
+        let mut wfc = Tensor::randn(&[classes, h2], 0.05, &mut rng);
+        let mut bfc = Tensor::zeros(&[classes]);
+
+        let bool_opt = BooleanOptimizer::new(4.0);
+        let mut adam = Adam::new(1e-3);
+        let mut sampler = BatchSampler::new(train.n, batch, 1);
+        let onehot = |labels: &[usize]| {
+            let mut y = Tensor::zeros(&[labels.len(), classes]);
+            for (i, &l) in labels.iter().enumerate() {
+                *y.at2_mut(i, l) = 1.0;
+            }
+            y
+        };
+
+        let t0 = std::time::Instant::now();
+        for step in 0..steps {
+            let idx = sampler.next_batch();
+            let (x, labels) = train.batch_flat(&idx);
+            let y = onehot(&labels);
+            let out = exec
+                .execute(
+                    "bool_mlp_train_step",
+                    &[x, y, w1.to_pm1(), w2.to_pm1(), wfc.clone(), bfc.clone()],
+                )
+                .expect("train step");
+            // outputs: loss, n_correct, q_w1, q_w2, g_wfc, g_bfc
+            let loss = out[0].data[0];
+            let correct = out[1].data[0];
+            // the artifact's q votes are the grads the Boolean optimizer consumes
+            let mut q1m = out[2].clone();
+            let mut q2m = out[3].clone();
+            let mut params = vec![
+                ParamRef::Bool { name: "w1".into(), bits: &mut w1, grad: &mut q1m, accum: &mut m1, ratio: &mut r1 },
+                ParamRef::Bool { name: "w2".into(), bits: &mut w2, grad: &mut q2m, accum: &mut m2, ratio: &mut r2 },
+            ];
+            let stats = bool_opt.step(&mut params);
+            let mut gfc_w = out[4].clone();
+            let mut gfc_b = out[5].clone();
+            let mut fc_params = vec![
+                ParamRef::Real { name: "wfc".into(), w: &mut wfc, grad: &mut gfc_w },
+                ParamRef::Real { name: "bfc".into(), w: &mut bfc, grad: &mut gfc_b },
+            ];
+            adam.step(&mut fc_params);
+            if step % 10 == 0 {
+                println!(
+                    "step {step:>4}: loss {loss:>7.4}  acc {:>5.3}  flips {}",
+                    correct / batch as f32,
+                    stats.flips
+                );
+            }
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        println!(
+            "{steps} XLA train steps in {elapsed:.2}s ({:.1} ms/step)",
+            elapsed * 1e3 / steps as f64
+        );
+
+        // Validation through the inference artifact.
+        let mut correct = 0usize;
+        let mut seen = 0usize;
+        let mut i = 0;
+        while i + batch <= val.n {
+            let idx: Vec<usize> = (i..i + batch).collect();
+            let (x, labels) = val.batch_flat(&idx);
+            let out = exec
+                .execute("bool_mlp_infer", &[x, w1.to_pm1(), w2.to_pm1(), wfc.clone(), bfc.clone()])
+                .expect("infer");
+            let preds = out[0].argmax_rows();
+            correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
+            seen += labels.len();
+            i += batch;
+        }
+        println!(
+            "validation accuracy (XLA path): {:.2}%",
+            correct as f32 / seen as f32 * 100.0
+        );
+        assert!(correct as f32 / seen as f32 > 0.85);
+        println!("OK — the compiled L2 graph trains the Boolean model with no Python on the path.");
+    }
+}
+
+#[cfg(feature = "xla-runtime")]
 fn main() {
-    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(60);
-    let exec = match PjrtExecutor::load_dir("artifacts") {
-        Ok(e) => e,
-        Err(e) => {
-            eprintln!("cannot load artifacts ({e:#}); run `make artifacts` first");
-            std::process::exit(1);
-        }
-    };
-    println!("PJRT platform {}, entries {:?}", exec.platform(), exec.entries());
+    demo::run();
+}
 
-    // Artifact dims (python/compile/model.py): 784 → 512 → 256 → 10, batch 128.
-    let (batch, d_in, h1, h2, classes) = (128usize, 784usize, 512usize, 256usize, 10usize);
-    let (train, val) =
-        ImageDataset::mnist_like(4096 + 1024, classes, d_in, 0.08, 3).split(4096);
-
-    let mut rng = Rng::new(42);
-    // Boolean weights live in Rust as packed bits; the artifact takes the
-    // ±1 embedding (Prop. A.2 makes the two exactly equivalent).
-    let mut w1 = BitMatrix::random(h1, d_in, &mut rng);
-    let mut w2 = BitMatrix::random(h2, h1, &mut rng);
-    let mut m1 = Tensor::zeros(&[h1, d_in]);
-    let mut m2 = Tensor::zeros(&[h2, h1]);
-    let (mut r1, mut r2) = (1.0f32, 1.0f32);
-    let mut wfc = Tensor::randn(&[classes, h2], 0.05, &mut rng);
-    let mut bfc = Tensor::zeros(&[classes]);
-
-    let bool_opt = BooleanOptimizer::new(4.0);
-    let mut adam = Adam::new(1e-3);
-    let mut sampler = BatchSampler::new(train.n, batch, 1);
-    let onehot = |labels: &[usize]| {
-        let mut y = Tensor::zeros(&[labels.len(), classes]);
-        for (i, &l) in labels.iter().enumerate() {
-            *y.at2_mut(i, l) = 1.0;
-        }
-        y
-    };
-
-    let t0 = std::time::Instant::now();
-    for step in 0..steps {
-        let idx = sampler.next_batch();
-        let (x, labels) = train.batch_flat(&idx);
-        let y = onehot(&labels);
-        let out = exec
-            .execute(
-                "bool_mlp_train_step",
-                &[x, y, w1.to_pm1(), w2.to_pm1(), wfc.clone(), bfc.clone()],
-            )
-            .expect("train step");
-        // outputs: loss, n_correct, q_w1, q_w2, g_wfc, g_bfc
-        let loss = out[0].data[0];
-        let correct = out[1].data[0];
-        // the artifact's q votes are the grads the Boolean optimizer consumes
-        let mut q1m = out[2].clone();
-        let mut q2m = out[3].clone();
-        let mut params = vec![
-            ParamRef::Bool { name: "w1".into(), bits: &mut w1, grad: &mut q1m, accum: &mut m1, ratio: &mut r1 },
-            ParamRef::Bool { name: "w2".into(), bits: &mut w2, grad: &mut q2m, accum: &mut m2, ratio: &mut r2 },
-        ];
-        let stats = bool_opt.step(&mut params);
-        let mut gfc_w = out[4].clone();
-        let mut gfc_b = out[5].clone();
-        let mut fc_params = vec![
-            ParamRef::Real { name: "wfc".into(), w: &mut wfc, grad: &mut gfc_w },
-            ParamRef::Real { name: "bfc".into(), w: &mut bfc, grad: &mut gfc_b },
-        ];
-        adam.step(&mut fc_params);
-        if step % 10 == 0 {
-            println!(
-                "step {step:>4}: loss {loss:>7.4}  acc {:>5.3}  flips {}",
-                correct / batch as f32,
-                stats.flips
-            );
-        }
-    }
-    let elapsed = t0.elapsed().as_secs_f64();
-    println!("{steps} XLA train steps in {elapsed:.2}s ({:.1} ms/step)", elapsed * 1e3 / steps as f64);
-
-    // Validation through the inference artifact.
-    let mut correct = 0usize;
-    let mut seen = 0usize;
-    let mut i = 0;
-    while i + batch <= val.n {
-        let idx: Vec<usize> = (i..i + batch).collect();
-        let (x, labels) = val.batch_flat(&idx);
-        let out = exec
-            .execute("bool_mlp_infer", &[x, w1.to_pm1(), w2.to_pm1(), wfc.clone(), bfc.clone()])
-            .expect("infer");
-        let preds = out[0].argmax_rows();
-        correct += preds.iter().zip(&labels).filter(|(p, l)| p == l).count();
-        seen += labels.len();
-        i += batch;
-    }
-    println!("validation accuracy (XLA path): {:.2}%", correct as f32 / seen as f32 * 100.0);
-    assert!(correct as f32 / seen as f32 > 0.85);
-    println!("OK — the compiled L2 graph trains the Boolean model with no Python on the path.");
+#[cfg(not(feature = "xla-runtime"))]
+fn main() {
+    eprintln!(
+        "hlo_serve needs the XLA/PJRT path, which this build omits.\n\
+         rebuild with `cargo run --release --features xla-runtime --example hlo_serve`\n\
+         (and link a real xla binding — see rust/vendor/xla-stub/README.md).\n\
+         For dependency-free serving, use the native engine: `bold serve-native`."
+    );
+    std::process::exit(1);
 }

@@ -1,0 +1,108 @@
+//! Serving benchmark (EXPERIMENTS.md §Perf): single-stream latency vs
+//! micro-batched multi-worker throughput of the native packed engine on
+//! the artifact-shaped MLP (784-512-256-10).
+//!
+//! Acceptance target: batch 64 with 4 workers delivers ≥4× the
+//! single-example (batch 1, 1 worker) throughput on the same model.
+
+use bold::models::{boolean_mlp, MlpConfig};
+use bold::runtime::{NativeServer, PackedMlp, ServeConfig};
+use bold::tensor::BitMatrix;
+use bold::util::{Rng, Timer};
+use std::time::{Duration, Instant};
+
+fn engine() -> PackedMlp {
+    let mut model = boolean_mlp(&MlpConfig::default(), &mut Rng::new(7));
+    PackedMlp::from_layer(&mut model).expect("engine")
+}
+
+/// Drive `n` requests through the server from `clients` pipelined client
+/// threads; returns requests/second.
+fn drive(server: &NativeServer, n: usize, clients: usize, depth: usize) -> f64 {
+    let d_in = server.d_in();
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let n_c = n / clients + usize::from(c < n % clients);
+            s.spawn(move || {
+                let mut rng = Rng::new(77 + c as u64);
+                let mut inflight = Vec::with_capacity(depth);
+                for _ in 0..n_c {
+                    let feats: Vec<f32> = (0..d_in).map(|_| rng.sign()).collect();
+                    inflight.push(server.submit(&feats).expect("submit"));
+                    if inflight.len() >= depth {
+                        for p in inflight.drain(..) {
+                            p.wait().expect("response");
+                        }
+                    }
+                }
+                for p in inflight {
+                    p.wait().expect("response");
+                }
+            });
+        }
+    });
+    n as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    println!("== bench_serve: native packed engine, MLP 784-512-256-10");
+
+    // --- raw engine: per-example cost, batch 1 vs batch 64 --------------
+    let eng = engine();
+    let mut rng = Rng::new(9);
+    let x1 = BitMatrix::random(1, 784, &mut rng);
+    let x64 = BitMatrix::random(64, 784, &mut rng);
+    let mut t = Timer::new("engine forward batch 1 (single-stream)");
+    t.bench(3, 15, || {
+        std::hint::black_box(eng.forward_bits(&x1));
+    });
+    t.report(None);
+    let lat1 = t.median();
+    let mut t = Timer::new("engine forward batch 64");
+    t.bench(2, 9, || {
+        std::hint::black_box(eng.forward_bits(&x64));
+    });
+    t.report(None);
+    let lat64 = t.median();
+    println!(
+        "    single-stream latency {:.1} µs/req; per-example batching gain {:.2}x\n",
+        lat1 * 1e6,
+        lat1 / (lat64 / 64.0)
+    );
+
+    // --- full server: queue + micro-batching + worker pool --------------
+    let n_requests = 8192;
+    let configs = [
+        (1usize, 1usize, 1usize, "1 worker, batch 1 (single-example)"),
+        (1, 64, 128, "1 worker, batch 64"),
+        (4, 64, 128, "4 workers, batch 64"),
+    ];
+    let mut rates = Vec::new();
+    for &(workers, batch, clients, label) in &configs {
+        let server = NativeServer::start(
+            engine(),
+            ServeConfig {
+                workers,
+                max_batch: batch,
+                queue_cap: 4096,
+                batch_window: Duration::from_micros(200),
+            },
+        );
+        let rate = drive(&server, n_requests, clients, 32);
+        let stats = server.shutdown();
+        println!(
+            "{label:<38} {rate:>10.0} req/s   (avg batch fill {:.1})",
+            stats.avg_batch()
+        );
+        rates.push(rate);
+    }
+    println!(
+        "\nbatch 64 + 4 workers vs single-example: {:.1}x  (target >= 4x)",
+        rates[2] / rates[0]
+    );
+    println!(
+        "batch 64, same worker count:            {:.1}x  (micro-batching alone)",
+        rates[1] / rates[0]
+    );
+}

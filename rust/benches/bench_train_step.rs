@@ -35,6 +35,13 @@ fn main() {
         t.report(None);
     }
 
+    xla_comparison();
+}
+
+/// XLA-vs-native step comparison; only meaningful with the `xla-runtime`
+/// feature and `make artifacts`.
+#[cfg(feature = "xla-runtime")]
+fn xla_comparison() {
     // XLA path (skipped when artifacts are absent)
     if std::path::Path::new("artifacts/bool_mlp_train_step.hlo.txt").exists() {
         println!("\n== XLA train step (compiled L2 graph, MLP 784-512-256-10, batch 128)");
@@ -78,4 +85,9 @@ fn main() {
     } else {
         println!("(artifacts absent — run `make artifacts` for the XLA comparison)");
     }
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+fn xla_comparison() {
+    println!("(built without --features xla-runtime — skipping the XLA step comparison)");
 }

@@ -115,9 +115,15 @@ pub fn load_model(model: &mut dyn Layer, path: &str) -> Result<usize, Checkpoint
     Ok(loaded)
 }
 
-enum Record {
+/// One parsed checkpoint record. Public so forward-only consumers (the
+/// native serving engine in `runtime::engine`) can rebuild a frozen model
+/// from a [`save_model`] file without instantiating trainable layers.
+pub enum Record {
+    /// Bit-packed Boolean parameter (kind 0).
     Bool { name: String, rows: usize, cols: usize, words: Vec<u64> },
+    /// Dense FP parameter, stored flat (kind 1).
     Real { name: String, data: Vec<f32> },
+    /// Non-trainable buffer, e.g. running statistics (kind 2).
     Buffer { name: String, data: Vec<f32> },
 }
 
@@ -146,7 +152,9 @@ fn write_param(f: &mut impl Write, p: &ParamRef<'_>) -> Result<(), CheckpointErr
     Ok(())
 }
 
-fn read_records(path: &str) -> Result<Vec<Record>, CheckpointError> {
+/// Parse every record of a checkpoint written by [`save_model`] /
+/// [`save_checkpoint`] without needing a live model to load into.
+pub fn read_records(path: &str) -> Result<Vec<Record>, CheckpointError> {
     let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;

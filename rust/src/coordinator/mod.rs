@@ -14,7 +14,10 @@ mod metrics;
 mod parallel;
 mod trainer;
 
-pub use checkpoint::{load_checkpoint, load_model, save_checkpoint, save_model, CheckpointError};
+pub use checkpoint::{
+    load_checkpoint, load_model, read_records, save_checkpoint, save_model, CheckpointError,
+    Record,
+};
 pub use metrics::MetricLog;
 pub use parallel::ParallelTrainer;
 pub use trainer::{evaluate_classifier, forward_eval, ClassifierTrainer, TrainReport};

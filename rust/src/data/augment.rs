@@ -29,8 +29,8 @@ pub fn random_crop_flip(x: &Tensor, pad: usize, rng: &mut Rng) -> Tensor {
     out
 }
 
-/// Mixup: x' = λ·x + (1−λ)·x[perm]; returns (mixed, perm, λ).
-/// The caller mixes the loss as λ·CE(y) + (1−λ)·CE(y[perm]).
+/// Mixup: `x' = λ·x + (1−λ)·x[perm]`; returns (mixed, perm, λ).
+/// The caller mixes the loss as `λ·CE(y) + (1−λ)·CE(y[perm])`.
 pub fn mixup(x: &Tensor, alpha: f32, rng: &mut Rng) -> (Tensor, Vec<usize>, f32) {
     let n = x.shape[0];
     // Beta(α, α) via two gamma draws would need a gamma sampler; for the

@@ -7,14 +7,25 @@
 //! gradient descent, no FP latent weights.
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
-//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//! and `EXPERIMENTS.md` for paper-vs-measured results and the bench/perf
+//! log.
 //!
 //! Layer map (three-layer rust+JAX architecture):
 //! * L3 — this crate: coordinator, native bit-packed training engine,
-//!   energy model, baselines, data pipeline, bench/report harness;
+//!   energy model, baselines, data pipeline, bench/report harness, and
+//!   the forward-only packed serving stack ([`runtime`]: engine + batch
+//!   server, `bold serve-native`);
 //! * L2 — `python/compile/model.py`: jax Boolean train-step graphs, AOT
-//!   lowered to `artifacts/*.hlo.txt` (loaded by [`runtime`]);
+//!   lowered to `artifacts/*.hlo.txt` (loaded by [`runtime`] when built
+//!   with the off-by-default `xla-runtime` feature);
 //! * L1 — `python/compile/kernels/`: Pallas xnor-popcount kernels.
+//!
+//! Default builds have **zero external dependencies**: the XLA/PJRT path
+//! is feature-gated so `cargo build --release` works fully offline and the
+//! serving hot path is the paper's own XOR+POPCNT kernel
+//! ([`tensor::BitMatrix::xnor_threshold`]).
+
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod baselines;
 pub mod config;

@@ -1,18 +1,19 @@
 //! `bold` — launcher CLI for the B⊕LD reproduction.
 //!
 //! Subcommands:
-//!   train   [--config FILE] [--model M] [--method M] [--steps N] …
-//!   report  <fig1|table2|…|all> [--quick]
-//!   energy  [--arch vgg|resnet] [--base N] [--batch N]
-//!   serve   [--artifacts DIR]          (PJRT inference demo)
-//!   info                               (build + artifact status)
+//!   train        [--config FILE] [--model M] [--method M] [--steps N] …
+//!   report       <fig1|table2|…|all> [--quick]
+//!   energy       [--arch vgg|resnet] [--base N] [--batch N]
+//!   serve-native [--model CKPT] [--workers N] [--batch N] …
+//!                                      (native packed-bit batch server)
+//!   serve        [--artifacts DIR]     (PJRT demo, feature xla-runtime)
+//!   info                               (build + feature + artifact status)
 
 use bold::config::TrainConfig;
 use bold::coordinator::{save_model, ClassifierTrainer, MetricLog, ParallelTrainer};
 use bold::data::ImageDataset;
 use bold::energy::{network_energy, resnet18_shapes, vgg_small_shapes, Method};
 use bold::models::{boolean_mlp, resnet_boolean, vgg_small, MlpConfig, ResNetConfig, VggConfig, VggKind};
-use bold::nn::Layer;
 use bold::util::Rng;
 
 fn usage() -> ! {
@@ -25,7 +26,9 @@ USAGE:
               [--ckpt PATH] [--metrics CSV]
   bold report <{reports}|all> [--quick]
   bold energy [--arch vgg|resnet] [--base N] [--batch N] [--inference]
-  bold serve  [--artifacts DIR]
+  bold serve-native [--model CKPT] [--workers N] [--batch N] [--requests N]
+              [--clients N] [--window-us U] [--queue N]
+  bold serve  [--artifacts DIR]                 (needs --features xla-runtime)
   bold info
 "#,
         reports = bold::report::ALL_REPORTS.join("|")
@@ -41,6 +44,7 @@ fn main() {
         "train" => cmd_train(rest),
         "report" => cmd_report(rest),
         "energy" => cmd_energy(rest),
+        "serve-native" => cmd_serve_native(rest),
         "serve" => cmd_serve(rest),
         "info" => cmd_info(),
         "-h" | "--help" | "help" => usage(),
@@ -255,6 +259,137 @@ fn cmd_energy(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// Native packed-bit batch serving: load (or build) a frozen Boolean MLP,
+/// start the worker pool, drive synthetic client traffic through it and
+/// report throughput + latency percentiles.
+fn cmd_serve_native(args: &[String]) -> Result<(), String> {
+    use bold::runtime::{NativeServer, PackedMlp, ServeConfig};
+    use std::time::{Duration, Instant};
+
+    let (kv, _) = parse_kv(args)?;
+    let mut model_path: Option<String> = None;
+    let mut workers = 4usize;
+    let mut batch = 64usize;
+    let mut requests = 8192usize;
+    let mut clients = 64usize;
+    let mut window_us = 200u64;
+    let mut queue_cap = 1024usize;
+    for (k, v) in &kv {
+        match k.as_str() {
+            "model" => model_path = Some(v.clone()),
+            "workers" => workers = v.parse().map_err(|_| "bad --workers")?,
+            "batch" => batch = v.parse().map_err(|_| "bad --batch")?,
+            "requests" => requests = v.parse().map_err(|_| "bad --requests")?,
+            "clients" => clients = v.parse().map_err(|_| "bad --clients")?,
+            "window-us" => window_us = v.parse().map_err(|_| "bad --window-us")?,
+            "queue" => queue_cap = v.parse().map_err(|_| "bad --queue")?,
+            _ => return Err(format!("unknown option --{k}")),
+        }
+    }
+    if workers == 0 || batch == 0 || clients == 0 || queue_cap == 0 || requests == 0 {
+        return Err("--workers/--batch/--clients/--queue/--requests must be >= 1".into());
+    }
+    let engine = match &model_path {
+        Some(p) => {
+            let e = PackedMlp::load(p).map_err(|e| e.to_string())?;
+            println!("loaded frozen model from {p}");
+            e
+        }
+        None => {
+            println!("no --model given — serving a randomly initialised 784-512-256-10 MLP");
+            let mut model = boolean_mlp(&MlpConfig::default(), &mut Rng::new(7));
+            PackedMlp::from_layer(&mut model).map_err(|e| e.to_string())?
+        }
+    };
+    let (d_in, d_out) = (engine.d_in(), engine.d_out());
+    println!(
+        "native engine: {} Boolean layers, d_in {d_in}, d_out {d_out}, {} packed weight bits \
+         ({} KiB)",
+        engine.layers.len(),
+        engine.param_bits(),
+        engine.param_bits() / 8 / 1024
+    );
+    println!(
+        "server: {workers} workers, micro-batch {batch} (window {window_us} µs), queue cap \
+         {queue_cap}; driving {requests} requests from {clients} clients\n"
+    );
+    let server = NativeServer::start(
+        engine,
+        ServeConfig {
+            workers,
+            max_batch: batch,
+            queue_cap,
+            batch_window: Duration::from_micros(window_us),
+        },
+    );
+
+    // spot-check: one known input answered identically to a direct forward
+    let mut rng = Rng::new(1);
+    let probe: Vec<f32> = (0..d_in).map(|_| rng.sign()).collect();
+    let want = server
+        .model()
+        .forward_f32(&bold::tensor::Tensor::from_vec(&[1, d_in], probe.clone()));
+    let got = server
+        .submit(&probe)
+        .map_err(|e| e.to_string())?
+        .wait()
+        .map_err(|e| e.to_string())?;
+    if got.logits != want.data {
+        return Err("spot-check failed: server response differs from direct forward".into());
+    }
+    // counters so far belong to the spot-check, not the measured run
+    let pre = server.stats();
+
+    let t_start = Instant::now();
+    let mut lat_ns: Vec<u64> = Vec::with_capacity(requests);
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let server = &server;
+            let n = requests / clients + usize::from(c < requests % clients);
+            handles.push(s.spawn(move || {
+                let mut rng = Rng::new(1000 + c as u64);
+                let mut lats = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let feats: Vec<f32> = (0..d_in).map(|_| rng.sign()).collect();
+                    let t0 = Instant::now();
+                    let resp = server
+                        .submit(&feats)
+                        .expect("submit")
+                        .wait()
+                        .expect("response");
+                    lats.push(t0.elapsed().as_nanos() as u64);
+                    std::hint::black_box(resp.class);
+                }
+                lats
+            }));
+        }
+        for h in handles {
+            lat_ns.extend(h.join().expect("client thread"));
+        }
+    });
+    let wall = t_start.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+    let reqs = stats.requests - pre.requests;
+    let batches = stats.batches - pre.batches;
+    let fill = if batches == 0 { 0.0 } else { reqs as f64 / batches as f64 };
+    lat_ns.sort_unstable();
+    let pct = |p: f64| lat_ns[((lat_ns.len() - 1) as f64 * p) as usize] as f64 / 1e3;
+    println!("answered {reqs} requests in {wall:.3}s over {batches} batched forwards");
+    println!(
+        "throughput: {:>10.0} req/s   (avg batch fill {fill:.1})",
+        lat_ns.len() as f64 / wall
+    );
+    println!(
+        "latency:    p50 {:>8.1} µs   p95 {:>8.1} µs   p99 {:>8.1} µs",
+        pct(0.50),
+        pct(0.95),
+        pct(0.99)
+    );
+    Ok(())
+}
+
+#[cfg(feature = "xla-runtime")]
 fn cmd_serve(args: &[String]) -> Result<(), String> {
     let (kv, _) = parse_kv(args)?;
     let dir = kv
@@ -284,8 +419,25 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// Without the `xla-runtime` feature the PJRT path is compiled out; keep
+/// the subcommand present and fail with guidance instead of "unknown
+/// command".
+#[cfg(not(feature = "xla-runtime"))]
+fn cmd_serve(_args: &[String]) -> Result<(), String> {
+    Err("`bold serve` needs the XLA/PJRT path, which this binary was built without.\n\
+         rebuild with `cargo build --release --features xla-runtime` (and link a real xla \
+         binding, see rust/vendor/xla-stub/README.md), or use the native engine instead: \
+         `bold serve-native`"
+        .to_string())
+}
+
 fn cmd_info() -> Result<(), String> {
     println!("bold {} — B⊕LD reproduction", env!("CARGO_PKG_VERSION"));
+    if cfg!(feature = "xla-runtime") {
+        println!("features: xla-runtime ON (PJRT `serve` path compiled in)");
+    } else {
+        println!("features: xla-runtime off — native packed-bit engine only (`serve-native`)");
+    }
     let artifacts = std::path::Path::new("artifacts");
     if artifacts.exists() {
         let entries: Vec<String> = std::fs::read_dir(artifacts)

@@ -29,6 +29,33 @@ impl FlipStats {
 }
 
 /// Boolean optimizer with a tunable accumulation rate η.
+///
+/// ```
+/// use bold::nn::ParamRef;
+/// use bold::optim::BooleanOptimizer;
+/// use bold::tensor::{BitMatrix, Tensor};
+///
+/// // One 1×2 Boolean weight tensor: w = [T, F] in the ±1 embedding.
+/// let mut bits = BitMatrix::zeros(1, 2);
+/// bits.set(0, 0, true);
+/// let mut grad = Tensor::from_vec(&[1, 2], vec![1.0, 1.0]); // votes q
+/// let mut accum = Tensor::zeros(&[1, 2]);
+/// let mut ratio = 1.0;
+///
+/// let opt = BooleanOptimizer::new(1.0); // η = 1
+/// let mut params = vec![ParamRef::Bool {
+///     name: "w".into(),
+///     bits: &mut bits,
+///     grad: &mut grad,
+///     accum: &mut accum,
+///     ratio: &mut ratio,
+/// }];
+/// let stats = opt.step(&mut params);
+///
+/// // Eq. (9): w₀ = T agrees with its vote ⇒ flipped; w₁ = F does not.
+/// assert_eq!(stats.flips, 1);
+/// assert!(!bits.get(0, 0) && !bits.get(0, 1));
+/// ```
 pub struct BooleanOptimizer {
     pub lr: f32,
     /// Optional |m| clip (κ of assumption A.5 in the convergence proof).

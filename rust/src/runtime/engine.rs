@@ -1,0 +1,422 @@
+//! Forward-only packed-bit inference engine (DESIGN.md §Serving-Runtime).
+//!
+//! The training stack (`nn::`) keeps f32 vote/gradient buffers next to
+//! every Boolean parameter; for serving none of that is needed. This
+//! engine freezes a trained Boolean MLP into exactly the data the paper's
+//! Eq. (1) neuron consumes — packed weight bits, per-layer thresholds and
+//! an FP head — and runs the whole interior as fused XNOR+POPCNT with the
+//! activation re-packed straight to bits
+//! ([`BitMatrix::xnor_threshold`]): no XLA, no f32 unpacking between
+//! Boolean layers.
+//!
+//! Frozen-model format: the engine loads the ordinary checkpoint files
+//! written by [`crate::coordinator::save_model`] (see
+//! `coordinator/checkpoint.rs` for the binary layout), so any trained
+//! `models::boolean_mlp` checkpoint is directly servable. Supported
+//! architecture: a stack of `BoolLinear` (+ optional Boolean bias,
+//! optional centered threshold) closed by one FP `Linear` head — the
+//! MLP family of the paper's §4.1. Layers may additionally carry a
+//! validity lane-mask implementing the three-valued 𝕄 zero of
+//! Definition 3.1 for padded/invalid input features (DESIGN.md
+//! §Three-valued logic 𝕄).
+//!
+//! The FP head intentionally replays the reference `nn::Linear`
+//! accumulation order on a single cache-resident ±1 scratch row, so
+//! engine logits are **bit-identical** to the training-stack forward —
+//! the parity tests in `rust/tests/native_engine.rs` assert exact
+//! equality, not tolerance.
+
+use crate::coordinator::{read_records, CheckpointError, Record};
+use crate::nn::{Layer, ParamRef};
+use crate::tensor::{BitMatrix, Tensor};
+use std::fmt;
+
+/// Error building or loading a frozen model.
+#[derive(Debug)]
+pub struct EngineError {
+    pub msg: String,
+}
+
+impl EngineError {
+    fn new(msg: impl Into<String>) -> Self {
+        EngineError { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "engine error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+impl From<CheckpointError> for EngineError {
+    fn from(e: CheckpointError) -> Self {
+        EngineError::new(e.to_string())
+    }
+}
+
+/// One frozen Boolean layer: weights + optional ±1 bias, fused with its
+/// threshold activation.
+pub struct PackedLayer {
+    /// Packed weights, `n_out` rows × `n_in` bits.
+    pub weights: BitMatrix,
+    /// Optional Boolean bias (1 × n_out) in the ±1 embedding.
+    pub bias: Option<BitMatrix>,
+    /// Activation threshold: τ plus the centered running-mean shift when
+    /// the training-time activation was `ThresholdAct::centered`.
+    pub threshold: f32,
+    /// Optional validity lane-mask (`wpr` packed words shared by every
+    /// batch row): zero lanes are the three-valued 𝕄 zero and contribute
+    /// nothing to the pre-activation count.
+    pub input_mask: Option<Vec<u64>>,
+}
+
+impl PackedLayer {
+    /// Fused forward: packed bits in, packed bits out.
+    pub fn apply(&self, x: &BitMatrix) -> BitMatrix {
+        match &self.input_mask {
+            Some(m) => {
+                x.xnor_threshold_masked(&self.weights, m, self.bias.as_ref(), self.threshold)
+            }
+            None => x.xnor_threshold(&self.weights, self.bias.as_ref(), self.threshold),
+        }
+    }
+}
+
+/// A frozen Boolean MLP ready for serving: Boolean interior + FP head.
+///
+/// Thread-safe by construction — `forward_*` take `&self` and keep no
+/// cache, so one instance can be shared across a worker pool (see
+/// `runtime::serve`).
+pub struct PackedMlp {
+    /// Boolean interior, in forward order.
+    pub layers: Vec<PackedLayer>,
+    /// FP head weights (d_out × d_last).
+    pub head_w: Tensor,
+    /// FP head bias (d_out).
+    pub head_b: Tensor,
+}
+
+impl PackedMlp {
+    /// Input width in bits.
+    pub fn d_in(&self) -> usize {
+        self.layers.first().map(|l| l.weights.cols).unwrap_or_else(|| self.head_w.cols())
+    }
+
+    /// Number of output logits.
+    pub fn d_out(&self) -> usize {
+        self.head_w.rows()
+    }
+
+    /// Total Boolean weight bits (the "model size" of the energy story:
+    /// 1 bit per interior parameter).
+    pub fn param_bits(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.weights.rows * l.weights.cols + l.bias.as_ref().map(|b| b.cols).unwrap_or(0)
+            })
+            .sum()
+    }
+
+    /// Load a frozen model from a [`crate::coordinator::save_model`]
+    /// checkpoint.
+    pub fn load(path: &str) -> Result<Self, EngineError> {
+        let records = read_records(path)?;
+        Self::from_records(&records)
+    }
+
+    /// Freeze a live model (e.g. fresh out of the trainer) without a disk
+    /// round-trip. The layer must expose `boolean_mlp`-style parameters:
+    /// `*.weight` / `*.bias` Boolean records, one FP `*.w`/`*.b` head.
+    pub fn from_layer(model: &mut dyn Layer) -> Result<Self, EngineError> {
+        let mut records = Vec::new();
+        for p in model.params() {
+            match p {
+                ParamRef::Bool { name, bits, .. } => records.push(Record::Bool {
+                    name,
+                    rows: bits.rows,
+                    cols: bits.cols,
+                    words: bits.words.clone(),
+                }),
+                ParamRef::Real { name, w, .. } => {
+                    records.push(Record::Real { name, data: w.data.clone() })
+                }
+            }
+        }
+        for (name, buf) in model.buffers() {
+            records.push(Record::Buffer { name, data: buf.clone() });
+        }
+        Self::from_records(&records)
+    }
+
+    /// Build from parsed checkpoint records (the frozen-model format).
+    pub fn from_records(records: &[Record]) -> Result<Self, EngineError> {
+        let mut layers: Vec<(String, PackedLayer)> = Vec::new();
+        let mut head_w: Option<Vec<f32>> = None;
+        let mut head_b: Option<Vec<f32>> = None;
+        let mut shifts: Vec<(Option<usize>, f32)> = Vec::new();
+        for rec in records {
+            match rec {
+                Record::Bool { name, rows, cols, words } => {
+                    if let Some(prefix) = name.strip_suffix(".weight") {
+                        if *rows == 0 || *cols == 0 {
+                            return Err(EngineError::new(format!(
+                                "layer '{name}' has degenerate shape {rows}x{cols}"
+                            )));
+                        }
+                        layers.push((
+                            prefix.to_string(),
+                            PackedLayer {
+                                weights: BitMatrix::from_words(*rows, *cols, words.clone()),
+                                bias: None,
+                                threshold: 0.0,
+                                input_mask: None,
+                            },
+                        ));
+                    } else if let Some(prefix) = name.strip_suffix(".bias") {
+                        let (_, layer) = layers
+                            .iter_mut()
+                            .find(|(p, _)| p.as_str() == prefix)
+                            .ok_or_else(|| {
+                                EngineError::new(format!("bias '{name}' has no matching weight"))
+                            })?;
+                        if *rows != 1 || *cols != layer.weights.rows {
+                            return Err(EngineError::new(format!(
+                                "bias '{name}': shape {rows}x{cols} vs {} outputs",
+                                layer.weights.rows
+                            )));
+                        }
+                        layer.bias = Some(BitMatrix::from_words(1, *cols, words.clone()));
+                    } else {
+                        return Err(EngineError::new(format!(
+                            "unsupported Boolean record '{name}' (need *.weight / *.bias)"
+                        )));
+                    }
+                }
+                Record::Real { name, data } => {
+                    if name.ends_with(".w") {
+                        if head_w.is_some() {
+                            return Err(EngineError::new(
+                                "more than one FP weight tensor — the native engine serves \
+                                 Boolean-linear stacks with a single FP head",
+                            ));
+                        }
+                        head_w = Some(data.clone());
+                    } else if name.ends_with(".b") {
+                        if head_b.is_some() {
+                            return Err(EngineError::new("more than one FP bias tensor"));
+                        }
+                        head_b = Some(data.clone());
+                    } else {
+                        return Err(EngineError::new(format!("unsupported FP record '{name}'")));
+                    }
+                }
+                Record::Buffer { name, data } => {
+                    if let Some(prefix) = name.strip_suffix(".running_mean") {
+                        if data.is_empty() {
+                            return Err(EngineError::new(format!("empty buffer '{name}'")));
+                        }
+                        shifts.push((trailing_index(prefix), data[0]));
+                    } else {
+                        return Err(EngineError::new(format!(
+                            "unsupported buffer '{name}' — BN/stat-carrying architectures are \
+                             not servable by the native engine yet (see DESIGN.md \
+                             §Serving-Runtime)"
+                        )));
+                    }
+                }
+            }
+        }
+        if layers.is_empty() {
+            return Err(EngineError::new("no Boolean layers in checkpoint"));
+        }
+        // threshold shifts: by parsed layer index when available, else in
+        // order of appearance.
+        for (slot, (idx, shift)) in shifts.iter().enumerate() {
+            let i = idx.unwrap_or(slot);
+            let n_layers = layers.len();
+            let layer = layers.get_mut(i).ok_or_else(|| {
+                EngineError::new(format!(
+                    "running_mean buffer maps to layer {i} but the model has {n_layers} layers"
+                ))
+            })?;
+            layer.1.threshold += *shift;
+        }
+        // validate the layer chain
+        for w in layers.windows(2) {
+            let (a, b) = (&w[0].1.weights, &w[1].1.weights);
+            if b.cols != a.rows {
+                return Err(EngineError::new(format!(
+                    "layer chain mismatch: {} outputs feed a fan-in of {}",
+                    a.rows, b.cols
+                )));
+            }
+        }
+        let d_last = layers.last().map(|(_, l)| l.weights.rows).unwrap();
+        let head_w = head_w.ok_or_else(|| EngineError::new("missing FP head weights (*.w)"))?;
+        let head_b = head_b.ok_or_else(|| EngineError::new("missing FP head bias (*.b)"))?;
+        if head_w.is_empty() || head_w.len() % d_last != 0 {
+            return Err(EngineError::new(format!(
+                "head weight len {} not a multiple of last hidden width {d_last}",
+                head_w.len()
+            )));
+        }
+        let d_out = head_w.len() / d_last;
+        if head_b.len() != d_out {
+            return Err(EngineError::new(format!(
+                "head bias len {} vs {d_out} outputs",
+                head_b.len()
+            )));
+        }
+        Ok(PackedMlp {
+            layers: layers.into_iter().map(|(_, l)| l).collect(),
+            head_w: Tensor::from_vec(&[d_out, d_last], head_w),
+            head_b: Tensor::from_vec(&[d_out], head_b),
+        })
+    }
+
+    /// Forward on packed inputs (B × d_in bits) → logits (B × d_out).
+    /// Boolean layers stay packed end to end; only the FP head produces
+    /// f32, via a single reused scratch row.
+    pub fn forward_bits(&self, x: &BitMatrix) -> Tensor {
+        assert_eq!(x.cols, self.d_in(), "input width {} vs model d_in {}", x.cols, self.d_in());
+        match self.layers.split_first() {
+            None => self.head_forward(x),
+            Some((first, rest)) => {
+                let mut cur = first.apply(x);
+                for l in rest {
+                    cur = l.apply(&cur);
+                }
+                self.head_forward(&cur)
+            }
+        }
+    }
+
+    /// Convenience: pack real-valued features (`v ≥ 0 ⇒ T`, the
+    /// `BitMatrix::from_pm1` convention) and run [`Self::forward_bits`].
+    pub fn forward_f32(&self, x: &Tensor) -> Tensor {
+        let b = x.shape[0];
+        let cols: usize = x.shape[1..].iter().product();
+        let flat = x.view(&[b, cols]);
+        self.forward_bits(&BitMatrix::from_pm1(&flat))
+    }
+
+    /// Per-row argmax class ids for a packed batch.
+    pub fn predict(&self, x: &BitMatrix) -> Vec<usize> {
+        self.forward_bits(x).argmax_rows()
+    }
+
+    /// FP head on the last packed activation. Replays the exact
+    /// `Tensor::matmul_bt` accumulation order (4 independent partial sums
+    /// + tail) over one decoded ±1 scratch row, then adds the bias — so
+    /// the result is bit-identical to `nn::Linear::forward` on the
+    /// unpacked activations.
+    fn head_forward(&self, bits: &BitMatrix) -> Tensor {
+        let b = bits.rows;
+        let (n_out, n_in) = (self.head_w.rows(), self.head_w.cols());
+        assert_eq!(bits.cols, n_in, "head fan-in {} vs {}", bits.cols, n_in);
+        let mut out = vec![0.0f32; b * n_out];
+        let mut scratch = vec![0.0f32; n_in];
+        let k4 = n_in - n_in % 4;
+        for i in 0..b {
+            bits.decode_pm1_row(i, &mut scratch);
+            let orow = &mut out[i * n_out..(i + 1) * n_out];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let wrow = &self.head_w.data[j * n_in..(j + 1) * n_in];
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                let mut p = 0;
+                while p < k4 {
+                    s0 += scratch[p] * wrow[p];
+                    s1 += scratch[p + 1] * wrow[p + 1];
+                    s2 += scratch[p + 2] * wrow[p + 2];
+                    s3 += scratch[p + 3] * wrow[p + 3];
+                    p += 4;
+                }
+                let mut acc = (s0 + s1) + (s2 + s3);
+                for q in k4..n_in {
+                    acc += scratch[q] * wrow[q];
+                }
+                *o = acc + self.head_b.data[j];
+            }
+        }
+        Tensor::from_vec(&[b, n_out], out)
+    }
+}
+
+/// Parse a trailing decimal index from a layer-name prefix ("act3" → 3).
+fn trailing_index(prefix: &str) -> Option<usize> {
+    let digits: String =
+        prefix.chars().rev().take_while(|c| c.is_ascii_digit()).collect::<Vec<_>>()
+            .into_iter()
+            .rev()
+            .collect();
+    if digits.is_empty() {
+        None
+    } else {
+        digits.parse().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{boolean_mlp, MlpConfig};
+    use crate::nn::Value;
+    use crate::util::Rng;
+
+    #[test]
+    fn from_layer_matches_reference_eval() {
+        let cfg = MlpConfig { d_in: 70, hidden: vec![33, 17], d_out: 5, tanh_scale: true };
+        let mut rng = Rng::new(3);
+        let mut model = boolean_mlp(&cfg, &mut rng);
+        let engine = PackedMlp::from_layer(&mut model).expect("engine");
+        assert_eq!(engine.d_in(), 70);
+        assert_eq!(engine.d_out(), 5);
+        assert_eq!(engine.param_bits(), 70 * 33 + 33 * 17);
+        let x = Tensor::rand_pm1(&[6, 70], &mut rng);
+        let want = model.forward(Value::bit_from_pm1(&x), false).expect_f32("ref");
+        let got = engine.forward_f32(&x);
+        assert_eq!(got.max_abs_diff(&want), 0.0, "exact parity required");
+    }
+
+    #[test]
+    fn rejects_unsupported_architectures() {
+        // A BN-style buffer must be refused with a clear message, not
+        // silently dropped.
+        let records = vec![
+            Record::Bool { name: "bl0.weight".into(), rows: 4, cols: 8, words: vec![0; 4] },
+            Record::Real { name: "head.w".into(), data: vec![0.0; 8] },
+            Record::Real { name: "head.b".into(), data: vec![0.0; 2] },
+            Record::Buffer { name: "bn0.running_var".into(), data: vec![1.0] },
+        ];
+        let err = PackedMlp::from_records(&records).unwrap_err();
+        assert!(err.to_string().contains("not servable"), "{err}");
+    }
+
+    #[test]
+    fn rejects_broken_layer_chain() {
+        let records = vec![
+            Record::Bool { name: "bl0.weight".into(), rows: 4, cols: 8, words: vec![0; 4] },
+            Record::Bool { name: "bl1.weight".into(), rows: 3, cols: 5, words: vec![0; 3] },
+            Record::Real { name: "head.w".into(), data: vec![0.0; 6] },
+            Record::Real { name: "head.b".into(), data: vec![0.0; 2] },
+        ];
+        let err = PackedMlp::from_records(&records).unwrap_err();
+        assert!(err.to_string().contains("chain mismatch"), "{err}");
+    }
+
+    #[test]
+    fn centered_running_mean_shifts_threshold() {
+        let records = vec![
+            Record::Bool { name: "bl0.weight".into(), rows: 4, cols: 8, words: vec![0; 4] },
+            Record::Real { name: "head.w".into(), data: vec![0.0; 8] },
+            Record::Real { name: "head.b".into(), data: vec![0.0; 2] },
+            Record::Buffer { name: "act0.running_mean".into(), data: vec![1.5] },
+        ];
+        let engine = PackedMlp::from_records(&records).unwrap();
+        assert_eq!(engine.layers[0].threshold, 1.5);
+    }
+}

@@ -1,114 +1,24 @@
-//! PJRT runtime: load the AOT-compiled L2 graphs (`artifacts/*.hlo.txt`,
-//! produced once by `make artifacts`) and execute them from the Rust hot
-//! path. Python never runs at request time — the HLO text is compiled to
-//! a PJRT CPU executable here and called like a function.
+//! Serving runtime (DESIGN.md §Serving-Runtime and §Runtime).
 //!
-//! HLO *text* is the interchange format (not serialized protos): jax ≥0.5
-//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids. See /opt/xla-example/README.md and DESIGN.md.
+//! Two serving paths share this module:
+//!
+//! * **Native path** (default, zero dependencies): [`engine`] freezes a
+//!   trained Boolean model into packed weight bits and runs forward-only
+//!   inference as pure XNOR+POPCNT — the paper's one-XOR-per-64-weights
+//!   energy story executed literally — and [`serve`] wraps it in a
+//!   multi-threaded micro-batching server (`bold serve-native`).
+//! * **XLA path** (feature `xla-runtime`): `PjrtExecutor` compiles the
+//!   AOT-lowered L2 jax graphs (`artifacts/*.hlo.txt`) with PJRT and
+//!   executes them from Rust (`bold serve`). Off by default so the
+//!   default build stays dependency-light; without the feature the CLI
+//!   degrades with a clear message instead of failing to compile.
 
-use crate::tensor::Tensor;
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+pub mod engine;
+#[cfg(feature = "xla-runtime")]
+pub mod pjrt;
+pub mod serve;
 
-/// A compiled artifact registry: one PJRT executable per L2 entry point.
-pub struct PjrtExecutor {
-    client: xla::PjRtClient,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
-    dir: PathBuf,
-}
-
-impl PjrtExecutor {
-    /// Compile every `*.hlo.txt` in `dir` (skipping the Makefile sentinel
-    /// `model.hlo.txt`, a duplicate of the train step).
-    pub fn load_dir(dir: &str) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        let mut exes = HashMap::new();
-        let dirp = Path::new(dir);
-        for entry in std::fs::read_dir(dirp).with_context(|| format!("read {dir}"))? {
-            let path = entry?.path();
-            let fname = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
-            if !fname.ends_with(".hlo.txt") || fname == "model.hlo.txt" {
-                continue;
-            }
-            let name = fname.trim_end_matches(".hlo.txt").to_string();
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-            )
-            .with_context(|| format!("parse {fname}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).with_context(|| format!("compile {fname}"))?;
-            exes.insert(name, exe);
-        }
-        if exes.is_empty() {
-            return Err(anyhow!("no artifacts in {dir} — run `make artifacts` first"));
-        }
-        Ok(PjrtExecutor { client, exes, dir: dirp.to_path_buf() })
-    }
-
-    pub fn entries(&self) -> Vec<&str> {
-        let mut v: Vec<&str> = self.exes.keys().map(String::as_str).collect();
-        v.sort_unstable();
-        v
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn artifacts_dir(&self) -> &Path {
-        &self.dir
-    }
-
-    /// Execute an entry point. Inputs/outputs are dense f32 [`Tensor`]s;
-    /// jax lowers with `return_tuple=True`, so the single output literal
-    /// is a tuple that we decompose.
-    pub fn execute(&self, entry: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let exe = self
-            .exes
-            .get(entry)
-            .ok_or_else(|| anyhow!("unknown entry '{entry}' (have: {:?})", self.entries()))?;
-        let literals: Result<Vec<xla::Literal>> = inputs.iter().map(tensor_to_literal).collect();
-        let result = exe.execute::<xla::Literal>(&literals?)?;
-        let out = result
-            .first()
-            .and_then(|r| r.first())
-            .ok_or_else(|| anyhow!("empty execution result"))?
-            .to_literal_sync()?;
-        let parts = out.to_tuple()?;
-        parts.into_iter().map(|l| literal_to_tensor(&l)).collect()
-    }
-}
-
-/// Tensor (f32, row-major) → xla Literal of the same shape.
-pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
-}
-
-/// xla Literal (f32) → Tensor.
-pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
-    let shape = l.array_shape()?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    let data = l.to_vec::<f32>()?;
-    let dims = if dims.is_empty() { vec![1] } else { dims };
-    Ok(Tensor::from_vec(&dims, data))
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    // Round-trip tests that don't need artifacts on disk.
-    #[test]
-    fn tensor_literal_roundtrip() {
-        let t = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
-        let l = tensor_to_literal(&t).unwrap();
-        let back = literal_to_tensor(&l).unwrap();
-        assert_eq!(t, back);
-    }
-
-    // Full artifact tests live in rust/tests/xla_crosscheck.rs (they need
-    // `make artifacts` to have run).
-}
+pub use engine::{EngineError, PackedLayer, PackedMlp};
+#[cfg(feature = "xla-runtime")]
+pub use pjrt::{literal_to_tensor, tensor_to_literal, PjrtError, PjrtExecutor};
+pub use serve::{NativeServer, Pending, Response, ServeConfig, ServeError, ServerStats};

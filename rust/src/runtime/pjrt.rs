@@ -1,0 +1,158 @@
+//! PJRT runtime (feature `xla-runtime`): load the AOT-compiled L2 graphs
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and execute
+//! them from the Rust hot path. Python never runs at request time — the
+//! HLO text is compiled to a PJRT CPU executable here and called like a
+//! function.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax ≥0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids. See /opt/xla-example/README.md and DESIGN.md
+//! §Runtime.
+//!
+//! The default build links the in-tree `vendor/xla-stub` crate so this
+//! module always compiles; executing real HLO requires repointing the
+//! `xla` path dependency (vendor/xla-stub/README.md).
+
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// PJRT-path error (artifact IO, HLO parsing, compilation, execution).
+#[derive(Debug)]
+pub struct PjrtError {
+    pub msg: String,
+}
+
+impl PjrtError {
+    fn new(msg: impl Into<String>) -> Self {
+        PjrtError { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for PjrtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "pjrt error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for PjrtError {}
+
+impl From<std::io::Error> for PjrtError {
+    fn from(e: std::io::Error) -> Self {
+        PjrtError::new(e.to_string())
+    }
+}
+
+impl From<xla::Error> for PjrtError {
+    fn from(e: xla::Error) -> Self {
+        PjrtError::new(e.to_string())
+    }
+}
+
+/// A compiled artifact registry: one PJRT executable per L2 entry point.
+pub struct PjrtExecutor {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl PjrtExecutor {
+    /// Compile every `*.hlo.txt` in `dir` (skipping the Makefile sentinel
+    /// `model.hlo.txt`, a duplicate of the train step).
+    pub fn load_dir(dir: &str) -> Result<Self, PjrtError> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| PjrtError::new(format!("create PJRT CPU client: {e}")))?;
+        let mut exes = HashMap::new();
+        let dirp = Path::new(dir);
+        for entry in
+            std::fs::read_dir(dirp).map_err(|e| PjrtError::new(format!("read {dir}: {e}")))?
+        {
+            let path = entry?.path();
+            let fname = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
+            if !fname.ends_with(".hlo.txt") || fname == "model.hlo.txt" {
+                continue;
+            }
+            let name = fname.trim_end_matches(".hlo.txt").to_string();
+            let path_str = path.to_str().ok_or_else(|| PjrtError::new("bad path"))?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)
+                .map_err(|e| PjrtError::new(format!("parse {fname}: {e}")))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| PjrtError::new(format!("compile {fname}: {e}")))?;
+            exes.insert(name, exe);
+        }
+        if exes.is_empty() {
+            return Err(PjrtError::new(format!(
+                "no artifacts in {dir} — run `make artifacts` first"
+            )));
+        }
+        Ok(PjrtExecutor { client, exes, dir: dirp.to_path_buf() })
+    }
+
+    pub fn entries(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.exes.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Execute an entry point. Inputs/outputs are dense f32 [`Tensor`]s;
+    /// jax lowers with `return_tuple=True`, so the single output literal
+    /// is a tuple that we decompose.
+    pub fn execute(&self, entry: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>, PjrtError> {
+        let exe = self.exes.get(entry).ok_or_else(|| {
+            PjrtError::new(format!("unknown entry '{entry}' (have: {:?})", self.entries()))
+        })?;
+        let literals: Result<Vec<xla::Literal>, PjrtError> =
+            inputs.iter().map(tensor_to_literal).collect();
+        let result = exe.execute::<xla::Literal>(&literals?)?;
+        let out = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| PjrtError::new("empty execution result"))?
+            .to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        parts.into_iter().map(|l| literal_to_tensor(&l)).collect()
+    }
+}
+
+/// Tensor (f32, row-major) → xla Literal of the same shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal, PjrtError> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+}
+
+/// xla Literal (f32) → Tensor.
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor, PjrtError> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = l.to_vec::<f32>()?;
+    let dims = if dims.is_empty() { vec![1] } else { dims };
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Round-trip tests that don't need artifacts on disk.
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(t, back);
+    }
+
+    // Full artifact tests live in rust/tests/xla_crosscheck.rs (they need
+    // `make artifacts` to have run and a real xla binding linked).
+}

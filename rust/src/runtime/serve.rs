@@ -1,0 +1,407 @@
+//! Multi-threaded micro-batching server over the native packed engine
+//! (DESIGN.md §Serving-Runtime): the "serve heavy traffic" runtime of the
+//! ROADMAP, with the paper's XOR+POPCNT kernel as the only thing on the
+//! hot path.
+//!
+//! Architecture:
+//!
+//! * clients call [`NativeServer::submit`] — the *client* thread packs the
+//!   f32 features to bits (input bit-packing stays off the worker hot
+//!   path) and enqueues into a **bounded** queue; submission blocks while
+//!   the queue is at capacity, which back-pressures producers instead of
+//!   growing memory;
+//! * each worker pops a request, then gathers more until either
+//!   `max_batch` requests are assembled or the `batch_window` expires —
+//!   micro-batching amortises the packed-weight streaming across the
+//!   batch (the same 2-D reuse argument as the training GEMM);
+//! * the worker runs one [`PackedMlp::forward_bits`] over the assembled
+//!   batch and answers every request through its own channel.
+//!
+//! Shutdown drains: workers only exit once the queue is empty, so every
+//! accepted request is answered.
+
+use super::engine::PackedMlp;
+use crate::tensor::BitMatrix;
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Server tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker threads running batched forwards.
+    pub workers: usize,
+    /// Maximum requests fused into one forward.
+    pub max_batch: usize,
+    /// Bounded queue capacity (back-pressure point).
+    pub queue_cap: usize,
+    /// How long a worker waits for a batch to fill before running it
+    /// anyway — the latency/throughput trade-off.
+    pub batch_window: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 4,
+            max_batch: 64,
+            queue_cap: 1024,
+            batch_window: Duration::from_micros(200),
+        }
+    }
+}
+
+/// Serving error (bad request shape, server shut down, …).
+#[derive(Debug)]
+pub struct ServeError {
+    pub msg: String,
+}
+
+impl ServeError {
+    fn new(msg: impl Into<String>) -> Self {
+        ServeError { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "serve error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// One answered inference request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Raw logits (d_out).
+    pub logits: Vec<f32>,
+    /// Argmax class id.
+    pub class: usize,
+}
+
+/// Handle to an in-flight request.
+pub struct Pending {
+    rx: mpsc::Receiver<Response>,
+}
+
+impl Pending {
+    /// Block until the answer arrives.
+    pub fn wait(self) -> Result<Response, ServeError> {
+        self.rx
+            .recv()
+            .map_err(|_| ServeError::new("server shut down before answering"))
+    }
+
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<Response> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// Monotonic serving counters.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerStats {
+    /// Requests answered.
+    pub requests: usize,
+    /// Batched forwards executed.
+    pub batches: usize,
+}
+
+impl ServerStats {
+    /// Average requests fused per forward.
+    pub fn avg_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+struct Request {
+    words: Vec<u64>,
+    tx: mpsc::Sender<Response>,
+}
+
+struct Shared {
+    model: PackedMlp,
+    cfg: ServeConfig,
+    queue: Mutex<VecDeque<Request>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    shutdown: AtomicBool,
+    served: AtomicUsize,
+    batches: AtomicUsize,
+}
+
+/// The batch server: a frozen [`PackedMlp`] behind a bounded queue and a
+/// worker pool.
+pub struct NativeServer {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl NativeServer {
+    /// Start `cfg.workers` worker threads around a frozen model.
+    pub fn start(model: PackedMlp, cfg: ServeConfig) -> Self {
+        assert!(cfg.workers >= 1, "need at least one worker");
+        assert!(cfg.max_batch >= 1, "need max_batch >= 1");
+        assert!(cfg.queue_cap >= 1, "need queue_cap >= 1");
+        let shared = Arc::new(Shared {
+            model,
+            cfg,
+            queue: Mutex::new(VecDeque::new()),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            served: AtomicUsize::new(0),
+            batches: AtomicUsize::new(0),
+        });
+        let workers = (0..shared.cfg.workers)
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&sh))
+            })
+            .collect();
+        NativeServer { shared, workers }
+    }
+
+    /// Input width the model expects.
+    pub fn d_in(&self) -> usize {
+        self.shared.model.d_in()
+    }
+
+    /// The served model (for spot-checking responses).
+    pub fn model(&self) -> &PackedMlp {
+        &self.shared.model
+    }
+
+    /// Requests currently queued.
+    pub fn queue_len(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Pack real-valued features (`v ≥ 0 ⇒ T`) and enqueue. Blocks while
+    /// the bounded queue is full.
+    pub fn submit(&self, features: &[f32]) -> Result<Pending, ServeError> {
+        let d = self.shared.model.d_in();
+        if features.len() != d {
+            return Err(ServeError::new(format!(
+                "request width {} vs model d_in {d}",
+                features.len()
+            )));
+        }
+        let mut words = vec![0u64; d.div_ceil(64)];
+        for (c, &v) in features.iter().enumerate() {
+            if v >= 0.0 {
+                words[c / 64] |= 1u64 << (c % 64);
+            }
+        }
+        self.submit_packed(words)
+    }
+
+    /// Enqueue an already-packed input row (`ceil(d_in/64)` words).
+    pub fn submit_packed(&self, words: Vec<u64>) -> Result<Pending, ServeError> {
+        let wpr = self.shared.model.d_in().div_ceil(64);
+        if words.len() != wpr {
+            return Err(ServeError::new(format!(
+                "packed width {} words vs expected {wpr}",
+                words.len()
+            )));
+        }
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            loop {
+                if self.shared.shutdown.load(Ordering::SeqCst) {
+                    return Err(ServeError::new("server is shutting down"));
+                }
+                if q.len() < self.shared.cfg.queue_cap {
+                    break;
+                }
+                q = self.shared.not_full.wait(q).unwrap();
+            }
+            q.push_back(Request { words, tx });
+        }
+        self.shared.not_empty.notify_one();
+        Ok(Pending { rx })
+    }
+
+    /// Serving counters so far.
+    pub fn stats(&self) -> ServerStats {
+        ServerStats {
+            requests: self.shared.served.load(Ordering::SeqCst),
+            batches: self.shared.batches.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Stop accepting work, drain the queue, join the workers and return
+    /// the final counters.
+    pub fn shutdown(mut self) -> ServerStats {
+        self.stop_and_join();
+        self.stats()
+    }
+
+    fn stop_and_join(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NativeServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn worker_loop(sh: &Shared) {
+    let max_batch = sh.cfg.max_batch;
+    let window = sh.cfg.batch_window;
+    let d = sh.model.d_in();
+    let wpr = d.div_ceil(64);
+    loop {
+        let mut batch: Vec<Request> = Vec::with_capacity(max_batch);
+        {
+            let mut q = sh.queue.lock().unwrap();
+            while q.is_empty() {
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    return; // drained: empty queue + shutdown
+                }
+                // timeout is a lost-wakeup safety net; shutdown notifies
+                let (guard, _) = sh
+                    .not_empty
+                    .wait_timeout(q, Duration::from_millis(50))
+                    .unwrap();
+                q = guard;
+            }
+            batch.push(q.pop_front().unwrap());
+            // micro-batch window: gather until full, drained past the
+            // window, or shutdown
+            let deadline = Instant::now() + window;
+            while batch.len() < max_batch {
+                if let Some(r) = q.pop_front() {
+                    batch.push(r);
+                    continue;
+                }
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                // the pops above freed queue slots; wake blocked producers
+                // before parking for the window, or (with queue_cap <
+                // max_batch) they would stay blocked on a drained queue
+                // until the gather finishes
+                sh.not_full.notify_all();
+                let (guard, res) = sh.not_empty.wait_timeout(q, deadline - now).unwrap();
+                q = guard;
+                if res.timed_out() && q.is_empty() {
+                    break;
+                }
+            }
+        }
+        sh.not_full.notify_all();
+
+        // one packed forward over the assembled batch
+        let mut words = Vec::with_capacity(batch.len() * wpr);
+        for r in &batch {
+            words.extend_from_slice(&r.words);
+        }
+        let x = BitMatrix::from_words(batch.len(), d, words);
+        let logits = sh.model.forward_bits(&x);
+        let classes = logits.argmax_rows();
+        let n_out = logits.cols();
+        sh.served.fetch_add(batch.len(), Ordering::SeqCst);
+        sh.batches.fetch_add(1, Ordering::SeqCst);
+        for (i, req) in batch.into_iter().enumerate() {
+            let row = logits.data[i * n_out..(i + 1) * n_out].to_vec();
+            // a client that dropped its Pending is not an error
+            let _ = req.tx.send(Response { logits: row, class: classes[i] });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{boolean_mlp, MlpConfig};
+    use crate::util::Rng;
+
+    fn engine(seed: u64) -> PackedMlp {
+        let cfg = MlpConfig { d_in: 100, hidden: vec![48, 24], d_out: 6, tanh_scale: true };
+        let mut model = boolean_mlp(&cfg, &mut Rng::new(seed));
+        PackedMlp::from_layer(&mut model).expect("engine")
+    }
+
+    #[test]
+    fn answers_match_direct_forward() {
+        let reference = engine(21);
+        let server = NativeServer::start(
+            engine(21),
+            ServeConfig {
+                workers: 3,
+                max_batch: 8,
+                queue_cap: 16, // smaller than the request count: exercises back-pressure
+                batch_window: Duration::from_micros(100),
+            },
+        );
+        let mut rng = Rng::new(77);
+        let mut pendings = Vec::new();
+        let mut expected = Vec::new();
+        for _ in 0..100 {
+            let x = crate::tensor::Tensor::rand_pm1(&[1, 100], &mut rng);
+            expected.push(reference.forward_f32(&x));
+            pendings.push(server.submit(&x.data).expect("submit"));
+        }
+        for (p, want) in pendings.into_iter().zip(expected) {
+            let resp = p.wait().expect("response");
+            assert_eq!(resp.logits, want.data);
+            assert_eq!(resp.class, want.argmax_rows()[0]);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 100);
+        assert!(stats.batches >= 13, "batch cap 8 ⇒ at least ceil(100/8) forwards");
+    }
+
+    #[test]
+    fn shutdown_drains_queued_requests() {
+        let server = NativeServer::start(
+            engine(4),
+            ServeConfig {
+                workers: 1,
+                max_batch: 4,
+                queue_cap: 64,
+                batch_window: Duration::from_micros(10),
+            },
+        );
+        let mut rng = Rng::new(5);
+        let pendings: Vec<Pending> = (0..20)
+            .map(|_| {
+                let x = crate::tensor::Tensor::rand_pm1(&[1, 100], &mut rng);
+                server.submit(&x.data).expect("submit")
+            })
+            .collect();
+        let stats = server.shutdown(); // drains before joining
+        assert_eq!(stats.requests, 20);
+        for p in pendings {
+            p.wait().expect("drained request must still be answered");
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_width() {
+        let server = NativeServer::start(engine(9), ServeConfig::default());
+        assert!(server.submit(&[1.0; 5]).is_err());
+        assert!(server.submit_packed(vec![0u64; 1]).is_err());
+    }
+}

@@ -103,6 +103,25 @@ fn axpy_pm1_masked_row(out: &mut [f32], words: &[u64], mask: &[u64], zv: f32) {
 }
 
 /// Bit-packed Boolean matrix (rows × cols), row-major, 64 cols per word.
+///
+/// ```
+/// use bold::tensor::BitMatrix;
+/// use bold::util::Rng;
+///
+/// let mut rng = Rng::new(0);
+/// let x = BitMatrix::random(2, 100, &mut rng); // 2 inputs, 100 bits each
+/// let w = BitMatrix::random(4, 100, &mut rng); // 4 Boolean neurons
+///
+/// // Eq. (3) forward: one XOR + POPCNT per 64 weights.
+/// let s = x.xnor_gemm(&w);
+/// assert_eq!(s.shape, vec![2, 4]);
+/// // Pre-activations count (#agree − #disagree) over the 100-bit fan-in.
+/// assert!(s.data.iter().all(|&v| v.abs() <= 100.0));
+///
+/// // The same result through the ±1 embedding of Prop. A.2, exactly.
+/// let dense = x.to_pm1().matmul_bt(&w.to_pm1());
+/// assert_eq!(s.max_abs_diff(&dense), 0.0);
+/// ```
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BitMatrix {
     pub rows: usize,
@@ -116,6 +135,17 @@ impl BitMatrix {
     pub fn zeros(rows: usize, cols: usize) -> Self {
         let wpr = cols.div_ceil(64);
         BitMatrix { rows, cols, wpr, words: vec![0u64; rows * wpr] }
+    }
+
+    /// Rebuild from raw packed words (e.g. checkpoint records). Tail bits
+    /// beyond `cols` are cleared so the whole-word popcount invariant holds
+    /// even for words from an untrusted source.
+    pub fn from_words(rows: usize, cols: usize, words: Vec<u64>) -> Self {
+        let wpr = cols.div_ceil(64);
+        assert_eq!(words.len(), rows * wpr, "word count {} vs {rows}x{cols}", words.len());
+        let mut m = BitMatrix { rows, cols, wpr, words };
+        m.mask_tail();
+        m
     }
 
     /// Random ±1 content (each bit Bernoulli(1/2)).
@@ -344,6 +374,223 @@ impl BitMatrix {
         Tensor::from_vec(&[b, n], out)
     }
 
+    /// Fused Boolean linear + threshold activation for the forward-only
+    /// inference engine (DESIGN.md §Serving-Runtime): computes the Eq. (3)
+    /// pre-activation `s = m − 2·popcount(x ⊕ w)` per output unit with
+    /// integer arithmetic and packs `s ≥ thr` straight back into bits —
+    /// the hot path never materialises an f32 activation tensor.
+    ///
+    /// `bias`, when present, is a 1 × n_out Boolean bias in the ±1
+    /// embedding (added to `s` before thresholding), matching
+    /// `nn::BoolLinear::with_bias`. The comparison is done in f32 so the
+    /// result is bit-identical to the reference
+    /// `nn::BoolLinear` → `nn::ThresholdAct` path for any threshold.
+    ///
+    /// Same 2×2 register blocking as [`Self::xnor_gemm`]: each x/w word
+    /// load is reused twice and four popcount chains run independently
+    /// (§Perf iteration log).
+    pub fn xnor_threshold(&self, w: &BitMatrix, bias: Option<&BitMatrix>, thr: f32) -> BitMatrix {
+        assert_eq!(self.cols, w.cols, "fan-in mismatch {} vs {}", self.cols, w.cols);
+        if let Some(b) = bias {
+            assert_eq!((b.rows, b.cols), (1, w.rows), "bias shape {}x{}", b.rows, b.cols);
+        }
+        let (bsz, n, m) = (self.rows, w.rows, self.cols);
+        let mut out = BitMatrix::zeros(bsz, n);
+        let bval = |j: usize| -> i64 {
+            match bias {
+                Some(b) => {
+                    if b.get(0, j) {
+                        1
+                    } else {
+                        -1
+                    }
+                }
+                None => 0,
+            }
+        };
+        let fire = |d: u32, b: i64| (((m as i64 - 2 * d as i64) + b) as f32) >= thr;
+        let mut i = 0;
+        while i + 2 <= bsz {
+            let x0 = self.row(i);
+            let x1 = self.row(i + 1);
+            let base0 = i * out.wpr;
+            let base1 = (i + 1) * out.wpr;
+            let (mut word0, mut word1) = (0u64, 0u64);
+            let mut j = 0;
+            while j + 2 <= n {
+                let w0 = w.row(j);
+                let w1 = w.row(j + 1);
+                let (mut d00, mut d01, mut d10, mut d11) = (0u32, 0u32, 0u32, 0u32);
+                for k in 0..x0.len() {
+                    let (a0, a1) = (x0[k], x1[k]);
+                    let (c0, c1) = (w0[k], w1[k]);
+                    d00 += (a0 ^ c0).count_ones();
+                    d01 += (a0 ^ c1).count_ones();
+                    d10 += (a1 ^ c0).count_ones();
+                    d11 += (a1 ^ c1).count_ones();
+                }
+                let (b0, b1) = (bval(j), bval(j + 1));
+                if fire(d00, b0) {
+                    word0 |= 1u64 << (j % 64);
+                }
+                if fire(d01, b1) {
+                    word0 |= 1u64 << ((j + 1) % 64);
+                }
+                if fire(d10, b0) {
+                    word1 |= 1u64 << (j % 64);
+                }
+                if fire(d11, b1) {
+                    word1 |= 1u64 << ((j + 1) % 64);
+                }
+                if (j + 1) % 64 == 63 {
+                    out.words[base0 + j / 64] = word0;
+                    out.words[base1 + j / 64] = word1;
+                    word0 = 0;
+                    word1 = 0;
+                }
+                j += 2;
+            }
+            // tail output column
+            while j < n {
+                let wr = w.row(j);
+                let (mut d0, mut d1) = (0u32, 0u32);
+                for k in 0..x0.len() {
+                    d0 += (x0[k] ^ wr[k]).count_ones();
+                    d1 += (x1[k] ^ wr[k]).count_ones();
+                }
+                let b = bval(j);
+                if fire(d0, b) {
+                    word0 |= 1u64 << (j % 64);
+                }
+                if fire(d1, b) {
+                    word1 |= 1u64 << (j % 64);
+                }
+                if j % 64 == 63 {
+                    out.words[base0 + j / 64] = word0;
+                    out.words[base1 + j / 64] = word1;
+                    word0 = 0;
+                    word1 = 0;
+                }
+                j += 1;
+            }
+            if n % 64 != 0 {
+                out.words[base0 + (n - 1) / 64] = word0;
+                out.words[base1 + (n - 1) / 64] = word1;
+            }
+            i += 2;
+        }
+        // tail input row
+        while i < bsz {
+            let xr = self.row(i);
+            let base = i * out.wpr;
+            let mut word = 0u64;
+            for j in 0..n {
+                let wr = w.row(j);
+                let mut d = 0u32;
+                for (&xw, &ww) in xr.iter().zip(wr) {
+                    d += (xw ^ ww).count_ones();
+                }
+                if fire(d, bval(j)) {
+                    word |= 1u64 << (j % 64);
+                }
+                if j % 64 == 63 {
+                    out.words[base + j / 64] = word;
+                    word = 0;
+                }
+            }
+            if n % 64 != 0 {
+                out.words[base + (n - 1) / 64] = word;
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Masked variant of [`Self::xnor_threshold`] for three-valued inputs:
+    /// `lane_mask` (one packed row of `wpr` words, shared by every batch
+    /// row) marks valid input lanes; masked-off lanes are the adjoined 𝕄
+    /// zero and contribute nothing, so
+    /// `s = popc(mask) − 2·popc((x ⊕ w) & mask)`.
+    pub fn xnor_threshold_masked(
+        &self,
+        w: &BitMatrix,
+        lane_mask: &[u64],
+        bias: Option<&BitMatrix>,
+        thr: f32,
+    ) -> BitMatrix {
+        assert_eq!(self.cols, w.cols, "fan-in mismatch {} vs {}", self.cols, w.cols);
+        assert_eq!(lane_mask.len(), self.wpr, "lane mask word count");
+        if let Some(b) = bias {
+            assert_eq!((b.rows, b.cols), (1, w.rows), "bias shape {}x{}", b.rows, b.cols);
+        }
+        let (bsz, n) = (self.rows, w.rows);
+        // tolerate garbage mask bits beyond `cols` in the last word (the
+        // data words already hold the tail invariant)
+        let rem = self.cols % 64;
+        let tail = if rem == 0 { u64::MAX } else { (1u64 << rem) - 1 };
+        let valid: i64 = lane_mask
+            .iter()
+            .enumerate()
+            .map(|(k, &mw)| {
+                let mw = if k + 1 == lane_mask.len() { mw & tail } else { mw };
+                mw.count_ones() as i64
+            })
+            .sum();
+        let mut out = BitMatrix::zeros(bsz, n);
+        for i in 0..bsz {
+            let xr = self.row(i);
+            let base = i * out.wpr;
+            let mut word = 0u64;
+            for j in 0..n {
+                let wr = w.row(j);
+                let mut d = 0i64;
+                for ((&xw, &ww), &mw) in xr.iter().zip(wr).zip(lane_mask) {
+                    d += ((xw ^ ww) & mw).count_ones() as i64;
+                }
+                let mut s = valid - 2 * d;
+                if let Some(b) = bias {
+                    s += if b.get(0, j) { 1 } else { -1 };
+                }
+                if (s as f32) >= thr {
+                    word |= 1u64 << (j % 64);
+                }
+                if j % 64 == 63 {
+                    out.words[base + j / 64] = word;
+                    word = 0;
+                }
+            }
+            if n % 64 != 0 {
+                out.words[base + (n - 1) / 64] = word;
+            }
+        }
+        out
+    }
+
+    /// Decode one packed row into a caller-provided ±1 buffer (`out.len()`
+    /// must equal `cols`) via the byte LUT — the engine's FP head uses this
+    /// to stream one cache-resident scratch row instead of unpacking whole
+    /// tensors.
+    pub fn decode_pm1_row(&self, r: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.cols, "decode buffer len");
+        let words = self.row(r);
+        let len = out.len();
+        let mut lane = 0usize;
+        'words: for &word in words {
+            for &byte in &word.to_le_bytes() {
+                let pat = &PM1_LUT[byte as usize];
+                if lane + 8 <= len {
+                    out[lane..lane + 8].copy_from_slice(pat);
+                } else {
+                    for k in 0..len - lane {
+                        out[lane + k] = pat[k];
+                    }
+                    break 'words;
+                }
+                lane += 8;
+            }
+        }
+    }
+
     /// z @ e(W): real backward signal times embedded Boolean weights
     /// (Algorithm 7, `G_X`). z is (B × N), self is W (N × M) → (B × M).
     ///
@@ -551,6 +798,85 @@ mod tests {
         }
         let dense = z.transpose2().matmul(&xd);
         assert!(fast.max_abs_diff(&dense) < 1e-4);
+    }
+
+    #[test]
+    fn xnor_threshold_matches_gemm_then_sign() {
+        let mut rng = Rng::new(21);
+        for (b, n, m) in [(3, 4, 5), (7, 65, 64), (5, 6, 130), (4, 64, 200)] {
+            let x = BitMatrix::random(b, m, &mut rng);
+            let w = BitMatrix::random(n, m, &mut rng);
+            for thr in [0.0f32, 2.5, -3.0] {
+                let fused = x.xnor_threshold(&w, None, thr);
+                let s = x.xnor_gemm(&w);
+                let want = BitMatrix::from_pm1(&s.map(|v| if v >= thr { 1.0 } else { -1.0 }));
+                assert_eq!(fused, want, "b={b} n={n} m={m} thr={thr}");
+            }
+        }
+    }
+
+    #[test]
+    fn xnor_threshold_bias_shifts_counts() {
+        let mut rng = Rng::new(22);
+        let x = BitMatrix::random(4, 70, &mut rng);
+        let w = BitMatrix::random(9, 70, &mut rng);
+        let bias = BitMatrix::random(1, 9, &mut rng);
+        let fused = x.xnor_threshold(&w, Some(&bias), 0.0);
+        let mut s = x.xnor_gemm(&w);
+        for i in 0..4 {
+            for j in 0..9 {
+                *s.at2_mut(i, j) += bias.pm1(0, j);
+            }
+        }
+        let want = BitMatrix::from_pm1(&s.sign_pm1());
+        assert_eq!(fused, want);
+    }
+
+    #[test]
+    fn xnor_threshold_masked_matches_per_row_masked_gemm() {
+        let mut rng = Rng::new(23);
+        let (b, n, m) = (5, 7, 100);
+        let x = BitMatrix::random(b, m, &mut rng);
+        let w = BitMatrix::random(n, m, &mut rng);
+        // one lane mask shared by all rows
+        let mut lane = BitMatrix::zeros(1, m);
+        for j in 0..m {
+            lane.set(0, j, rng.bernoulli(0.7));
+        }
+        let fused = x.xnor_threshold_masked(&w, lane.row(0), None, 0.0);
+        // reference: replicate the lane mask per batch row
+        let mut mask = BitMatrix::zeros(b, m);
+        for i in 0..b {
+            for j in 0..m {
+                mask.set(i, j, lane.get(0, j));
+            }
+        }
+        let want = BitMatrix::from_pm1(&x.xnor_gemm_masked(&w, &mask).sign_pm1());
+        assert_eq!(fused, want);
+    }
+
+    #[test]
+    fn decode_pm1_row_matches_to_pm1() {
+        let mut rng = Rng::new(24);
+        for cols in [1, 8, 63, 64, 65, 96, 100] {
+            let m = BitMatrix::random(3, cols, &mut rng);
+            let dense = m.to_pm1();
+            let mut buf = vec![0.0f32; cols];
+            for r in 0..3 {
+                m.decode_pm1_row(r, &mut buf);
+                for c in 0..cols {
+                    assert_eq!(buf[c], dense.at2(r, c), "cols={cols} r={r} c={c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn from_words_clears_tail_garbage() {
+        let words = vec![u64::MAX, u64::MAX];
+        let m = BitMatrix::from_words(1, 70, words);
+        assert_eq!(m.row(0)[1] >> 6, 0, "tail beyond col 70 must be clear");
+        assert_eq!(m.count_ones(), 70);
     }
 
     #[test]

@@ -1,0 +1,141 @@
+//! Parity and integration tests for the native packed serving stack:
+//! the forward-only engine must reproduce the reference `nn::` forward
+//! (BoolLinear → ThresholdAct → … → Linear) **exactly** — bit-identical
+//! packed activations and bit-identical f32 logits — including odd
+//! (non-multiple-of-64) widths and masked three-valued inputs.
+
+use bold::coordinator::save_model;
+use bold::models::{boolean_mlp, MlpConfig};
+use bold::nn::{Layer, Value};
+use bold::runtime::{NativeServer, PackedMlp, ServeConfig};
+use bold::tensor::{BitMatrix, Tensor};
+use bold::util::Rng;
+use std::time::Duration;
+
+fn mlp_and_engine(cfg: &MlpConfig, seed: u64) -> (bold::nn::Sequential, PackedMlp) {
+    let mut rng = Rng::new(seed);
+    let mut model = boolean_mlp(cfg, &mut rng);
+    let engine = PackedMlp::from_layer(&mut model).expect("engine build");
+    (model, engine)
+}
+
+#[test]
+fn packed_engine_matches_reference_forward_exactly() {
+    let configs = [
+        (1u64, MlpConfig { d_in: 64, hidden: vec![32], d_out: 4, tanh_scale: true }),
+        // odd widths at every layer: tail-word masking on the hot path
+        (2, MlpConfig { d_in: 70, hidden: vec![33, 17], d_out: 5, tanh_scale: true }),
+        (3, MlpConfig { d_in: 100, hidden: vec![65, 64, 63], d_out: 10, tanh_scale: false }),
+    ];
+    for (seed, cfg) in configs {
+        let (mut model, engine) = mlp_and_engine(&cfg, seed);
+        let mut rng = Rng::new(seed + 100);
+        let x = Tensor::rand_pm1(&[9, cfg.d_in], &mut rng);
+        let reference = model.forward(Value::bit_from_pm1(&x), false).expect_f32("ref");
+        let native = engine.forward_f32(&x);
+        assert_eq!(native.shape, reference.shape);
+        assert_eq!(
+            native.max_abs_diff(&reference),
+            0.0,
+            "logits must match exactly (d_in={})",
+            cfg.d_in
+        );
+        assert_eq!(native.argmax_rows(), reference.argmax_rows());
+    }
+}
+
+#[test]
+fn packed_hidden_layers_are_bit_identical_to_reference() {
+    // Check the packed interior directly, not just the final logits.
+    let cfg = MlpConfig { d_in: 70, hidden: vec![33], d_out: 4, tanh_scale: true };
+    let (mut model, engine) = mlp_and_engine(&cfg, 8);
+    let mut rng = Rng::new(9);
+    let x = Tensor::rand_pm1(&[5, 70], &mut rng);
+    // reference hidden bits: run BoolLinear + ThresholdAct (layers 0 and 1)
+    let v = model.layers[0].forward(Value::bit_from_pm1(&x), false);
+    let v = model.layers[1].forward(v, false);
+    let (ref_bits, _) = v.expect_bit("hidden");
+    let native_bits = engine.layers[0].apply(&BitMatrix::from_pm1(&x));
+    assert_eq!(native_bits, ref_bits);
+}
+
+#[test]
+fn engine_loads_save_model_checkpoints() {
+    let dir = std::env::temp_dir().join("bold_native_engine_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("frozen.ckpt");
+    let path = path.to_str().unwrap();
+
+    let cfg = MlpConfig { d_in: 70, hidden: vec![33, 17], d_out: 5, tanh_scale: true };
+    let (mut model, _) = mlp_and_engine(&cfg, 4);
+    save_model(&mut model, path).unwrap();
+
+    let engine = PackedMlp::load(path).expect("load frozen model");
+    assert_eq!(engine.d_in(), 70);
+    assert_eq!(engine.d_out(), 5);
+    let mut rng = Rng::new(5);
+    let x = Tensor::rand_pm1(&[7, 70], &mut rng);
+    let reference = model.forward(Value::bit_from_pm1(&x), false).expect_f32("ref");
+    let native = engine.forward_f32(&x);
+    assert_eq!(native.max_abs_diff(&reference), 0.0);
+}
+
+#[test]
+fn masked_layer_implements_three_valued_zero() {
+    // A lane mask on the first layer must agree with the general
+    // per-row masked GEMM (Definition 3.1's adjoined 0).
+    let cfg = MlpConfig { d_in: 90, hidden: vec![40], d_out: 3, tanh_scale: true };
+    let (_model, mut engine) = mlp_and_engine(&cfg, 11);
+    // lanes 70..90 are padding ⇒ invalid
+    let mut lane = BitMatrix::zeros(1, 90);
+    for j in 0..70 {
+        lane.set(0, j, true);
+    }
+    engine.layers[0].input_mask = Some(lane.row(0).to_vec());
+
+    let mut rng = Rng::new(12);
+    let x = BitMatrix::random(6, 90, &mut rng);
+    let native = engine.layers[0].apply(&x);
+
+    let mut mask = BitMatrix::zeros(6, 90);
+    for i in 0..6 {
+        for j in 0..70 {
+            mask.set(i, j, true);
+        }
+    }
+    let want = BitMatrix::from_pm1(
+        &x.xnor_gemm_masked(&engine.layers[0].weights, &mask).sign_pm1(),
+    );
+    assert_eq!(native, want);
+}
+
+#[test]
+fn server_batches_and_answers_like_the_engine() {
+    let cfg = MlpConfig { d_in: 100, hidden: vec![48, 24], d_out: 6, tanh_scale: true };
+    let (_m, reference) = mlp_and_engine(&cfg, 21);
+    let (_m2, served) = mlp_and_engine(&cfg, 21); // same seed ⇒ same weights
+    let server = NativeServer::start(
+        served,
+        ServeConfig {
+            workers: 2,
+            max_batch: 16,
+            queue_cap: 32,
+            batch_window: Duration::from_micros(100),
+        },
+    );
+    let mut rng = Rng::new(31);
+    let mut pendings = Vec::new();
+    let mut expected = Vec::new();
+    for _ in 0..64 {
+        let x = Tensor::rand_pm1(&[1, 100], &mut rng);
+        expected.push(reference.forward_f32(&x));
+        pendings.push(server.submit(&x.data).expect("submit"));
+    }
+    for (p, want) in pendings.into_iter().zip(expected) {
+        let resp = p.wait().expect("response");
+        assert_eq!(resp.logits, want.data, "served logits must be bit-identical");
+        assert_eq!(resp.class, want.argmax_rows()[0]);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 64);
+}

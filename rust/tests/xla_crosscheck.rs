@@ -3,7 +3,11 @@
 //! Boolean logic and integer arithmetic isomorphic — equality, not
 //! approximation, modulo f32 rounding in the FP head).
 //!
-//! Requires `make artifacts` (skips gracefully if absent).
+//! Requires `make artifacts` (skips gracefully if absent) and the
+//! `xla-runtime` feature with a real xla binding linked — the whole file
+//! is compiled out of default builds.
+
+#![cfg(feature = "xla-runtime")]
 
 use bold::models::{boolean_mlp, MlpConfig};
 use bold::nn::{Layer, Value};

@@ -1,0 +1,187 @@
+//! API-compatible stub for the `xla` (xla_extension) PJRT bindings.
+//!
+//! Pure-data `Literal` operations work; anything that needs a real PJRT
+//! runtime returns an error telling the user how to link the real binding.
+//! See this crate's README.md for the swap-in instructions.
+
+use std::fmt;
+
+/// Error type mirroring the real binding's opaque error.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error::new(format!(
+        "{what} is unavailable: this build links the in-tree xla-stub. \
+         Point the `xla` path dependency in rust/Cargo.toml at a real \
+         xla_extension binding and rebuild with --features xla-runtime."
+    ))
+}
+
+/// Scalar types a [`Literal`] can be read back as.
+pub trait NativeType: Sized + Copy {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+/// Host-side tensor value (functional in the stub, f32 only).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// 1-D literal from a host slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error::new(format!(
+                "reshape: {} elements vs dims {:?}",
+                self.data.len(),
+                dims
+            )));
+        }
+        Ok(Literal { data: self.data, dims: dims.to_vec() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    /// Decompose a tuple literal. Stub literals are never tuples.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("tuple literal decomposition"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+}
+
+/// Array shape (dims only — f32 element type implied in the stub).
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module. Never constructible through the stub.
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HLO text parsing"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle. `cpu()` always errors in the stub.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("the PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("XLA compilation"))
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executable dispatch"))
+    }
+}
+
+/// Device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("device-to-host transfer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_data_ops_work() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn runtime_paths_error_clearly() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("xla-stub"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
