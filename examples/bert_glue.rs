@@ -6,7 +6,7 @@
 
 use bold::data::{BatchSampler, GlueLikeTask, NlpDataset};
 use bold::models::bert::{BertConfig, BertMini};
-use bold::nn::softmax_cross_entropy;
+use bold::nn::{softmax_cross_entropy, ParamStore};
 use bold::optim::{Adam, BooleanOptimizer, CosineSchedule};
 use bold::util::Rng;
 
@@ -26,6 +26,7 @@ fn main() {
         let mut model = BertMini::new(&cfg, &mut rng);
         let sched = CosineSchedule::new(1.0, 0.05, steps);
         let mut adam = Adam::new(2e-3);
+        let mut store = ParamStore::new();
         let mut sampler = BatchSampler::new(train.n, 32, 1);
         let mut flips_total = 0usize;
         for step in 0..steps {
@@ -33,11 +34,12 @@ fn main() {
             let (toks, labels) = train.batch(&idx);
             let logits = model.forward(&toks, idx.len(), len, true);
             let out = softmax_cross_entropy(&logits, &labels);
-            model.zero_grads();
-            model.backward(out.grad);
+            store.zero_grads();
+            model.backward(out.grad, &mut store);
             let mut params = model.params();
-            flips_total += BooleanOptimizer::new(sched.at(step)).step(&mut params).flips;
-            adam.step(&mut params);
+            flips_total +=
+                BooleanOptimizer::new(sched.at(step)).step(&mut params, &mut store).flips;
+            adam.step(&mut params, &mut store);
         }
         // evaluate
         let idx: Vec<usize> = (0..val.n).collect();

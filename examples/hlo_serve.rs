@@ -14,7 +14,7 @@
 #[cfg(feature = "xla-runtime")]
 mod demo {
     use bold::data::{BatchSampler, ImageDataset};
-    use bold::nn::ParamRef;
+    use bold::nn::{ParamRef, ParamStore};
     use bold::optim::{Adam, BooleanOptimizer};
     use bold::runtime::PjrtExecutor;
     use bold::tensor::{BitMatrix, Tensor};
@@ -41,12 +41,11 @@ mod demo {
         // ±1 embedding (Prop. A.2 makes the two exactly equivalent).
         let mut w1 = BitMatrix::random(h1, d_in, &mut rng);
         let mut w2 = BitMatrix::random(h2, h1, &mut rng);
-        let mut m1 = Tensor::zeros(&[h1, d_in]);
-        let mut m2 = Tensor::zeros(&[h2, h1]);
-        let (mut r1, mut r2) = (1.0f32, 1.0f32);
         let mut wfc = Tensor::randn(&[classes, h2], 0.05, &mut rng);
         let mut bfc = Tensor::zeros(&[classes]);
 
+        // Accumulators m, ratios β and Adam moments live in the store.
+        let mut store = ParamStore::new();
         let bool_opt = BooleanOptimizer::new(4.0);
         let mut adam = Adam::new(1e-3);
         let mut sampler = BatchSampler::new(train.n, batch, 1);
@@ -73,20 +72,21 @@ mod demo {
             let loss = out[0].data[0];
             let correct = out[1].data[0];
             // the artifact's q votes are the grads the Boolean optimizer consumes
-            let mut q1m = out[2].clone();
-            let mut q2m = out[3].clone();
+            store.zero_grads();
+            store.accumulate("w1", &out[2]);
+            store.accumulate("w2", &out[3]);
+            store.accumulate("wfc", &out[4]);
+            store.accumulate("bfc", &out[5]);
             let mut params = vec![
-                ParamRef::Bool { name: "w1".into(), bits: &mut w1, grad: &mut q1m, accum: &mut m1, ratio: &mut r1 },
-                ParamRef::Bool { name: "w2".into(), bits: &mut w2, grad: &mut q2m, accum: &mut m2, ratio: &mut r2 },
+                ParamRef::Bool { name: "w1".into(), bits: &mut w1 },
+                ParamRef::Bool { name: "w2".into(), bits: &mut w2 },
             ];
-            let stats = bool_opt.step(&mut params);
-            let mut gfc_w = out[4].clone();
-            let mut gfc_b = out[5].clone();
+            let stats = bool_opt.step(&mut params, &mut store);
             let mut fc_params = vec![
-                ParamRef::Real { name: "wfc".into(), w: &mut wfc, grad: &mut gfc_w },
-                ParamRef::Real { name: "bfc".into(), w: &mut bfc, grad: &mut gfc_b },
+                ParamRef::Real { name: "wfc".into(), w: &mut wfc },
+                ParamRef::Real { name: "bfc".into(), w: &mut bfc },
             ];
-            adam.step(&mut fc_params);
+            adam.step(&mut fc_params, &mut store);
             if step % 10 == 0 {
                 println!(
                     "step {step:>4}: loss {loss:>7.4}  acc {:>5.3}  flips {}",

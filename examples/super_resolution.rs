@@ -7,7 +7,7 @@
 use bold::data::{BatchSampler, SrDataset};
 use bold::models::edsr::psnr;
 use bold::models::{edsr_small, EdsrConfig};
-use bold::nn::{l1_loss, Layer, Value};
+use bold::nn::{l1_loss, Layer, ParamStore, Value};
 use bold::optim::{Adam, BooleanOptimizer};
 use bold::tensor::Tensor;
 use bold::util::Rng;
@@ -19,6 +19,7 @@ fn train(cfg: &EdsrConfig, steps: usize, seed: u64) -> (f32, f64) {
     let mut model = edsr_small(cfg, &mut rng);
     let bool_opt = BooleanOptimizer::new(6.0);
     let mut adam = Adam::new(1e-3);
+    let mut store = ParamStore::new();
     let mut sampler = BatchSampler::new(train.n, 8, seed);
     let t0 = std::time::Instant::now();
     for step in 0..steps {
@@ -26,11 +27,11 @@ fn train(cfg: &EdsrConfig, steps: usize, seed: u64) -> (f32, f64) {
         let (lr, hr) = train.batch(&idx);
         let pred = model.forward(Value::F32(lr), true).expect_f32("sr");
         let out = l1_loss(&pred, &hr);
-        model.zero_grads();
-        let _ = model.backward(out.grad);
+        store.zero_grads();
+        let _ = model.backward(out.grad, &mut store);
         let mut params = model.params();
-        bool_opt.step(&mut params);
-        adam.step(&mut params);
+        bool_opt.step(&mut params, &mut store);
+        adam.step(&mut params, &mut store);
         if step % 50 == 0 {
             println!("  step {step:>4}: L1 {:.4}", out.loss);
         }

@@ -1,31 +1,26 @@
 //! Boolean-optimizer step throughput (weights/second) — the training-side
-//! hot loop after the GEMMs.
+//! hot loop after the GEMMs. Exercises the word-parallel flip-mask kernel
+//! (per-word XOR + multi-threaded row sharding).
 
-use bold::nn::ParamRef;
+use bold::nn::{ParamRef, ParamStore};
 use bold::optim::BooleanOptimizer;
 use bold::tensor::{BitMatrix, Tensor};
 use bold::util::{Rng, Timer};
 
 fn main() {
-    println!("== bench_optimizer: Boolean optimizer step (Algorithm 8)");
+    println!("== bench_optimizer: Boolean optimizer step (Algorithm 8, word-parallel)");
     let mut rng = Rng::new(2);
     for (r, c) in [(512, 1024), (1024, 4096), (4096, 4096)] {
         let mut bits = BitMatrix::random(r, c, &mut rng);
-        let mut grad = Tensor::randn(&[r, c], 0.5, &mut rng);
-        let mut accum = Tensor::zeros(&[r, c]);
-        let mut ratio = 1.0f32;
+        let grad = Tensor::randn(&[r, c], 0.5, &mut rng);
+        let mut store = ParamStore::new();
+        store.accumulate("w", &grad);
         let opt = BooleanOptimizer::new(1.0);
         let weights = (r * c) as f64;
         let mut t = Timer::new(&format!("bool step {r}x{c}"));
         t.bench(2, 9, || {
-            let mut params = vec![ParamRef::Bool {
-                name: "w".into(),
-                bits: &mut bits,
-                grad: &mut grad,
-                accum: &mut accum,
-                ratio: &mut ratio,
-            }];
-            std::hint::black_box(opt.step(&mut params));
+            let mut params = vec![ParamRef::Bool { name: "w".into(), bits: &mut bits }];
+            std::hint::black_box(opt.step(&mut params, &mut store));
         });
         t.report(Some(weights));
     }
@@ -34,12 +29,13 @@ fn main() {
     let mut adam = bold::optim::Adam::new(1e-3);
     for (r, c) in [(1024usize, 4096usize)] {
         let mut w = Tensor::randn(&[r, c], 0.1, &mut rng);
-        let mut g = Tensor::randn(&[r, c], 0.1, &mut rng);
+        let g = Tensor::randn(&[r, c], 0.1, &mut rng);
+        let mut store = ParamStore::new();
+        store.accumulate("w", &g);
         let mut t = Timer::new(&format!("adam step {r}x{c}"));
         t.bench(2, 9, || {
-            let mut params =
-                vec![ParamRef::Real { name: "w".into(), w: &mut w, grad: &mut g }];
-            adam.step(&mut params);
+            let mut params = vec![ParamRef::Real { name: "w".into(), w: &mut w }];
+            adam.step(&mut params, &mut store);
         });
         t.report(Some((r * c) as f64));
     }

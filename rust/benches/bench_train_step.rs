@@ -1,5 +1,6 @@
 //! End-to-end train-step latency per method (the whole-stack hot path):
-//! forward + backward + optimizer on the scaled VGG-SMALL, plus the
+//! forward + backward + optimizer on the scaled VGG-SMALL, the
+//! word-parallel vs per-bit Boolean optimizer-step comparison, plus the
 //! native-vs-XLA MLP step comparison when artifacts are present.
 
 use bold::baselines::{bnn_vgg_small, BnnKind};
@@ -7,8 +8,78 @@ use bold::config::TrainConfig;
 use bold::coordinator::ClassifierTrainer;
 use bold::data::ImageDataset;
 use bold::models::{vgg_small, VggConfig, VggKind};
-use bold::nn::Value;
+use bold::nn::{ParamRef, ParamStore, Value};
+use bold::optim::BooleanOptimizer;
+use bold::tensor::{BitMatrix, Tensor};
 use bold::util::{Rng, Timer};
+
+/// The pre-refactor optimizer inner loop (bit-at-a-time `get`/`flip`),
+/// kept here as the "before" baseline for the word-parallel kernel.
+#[allow(clippy::needless_range_loop)]
+fn step_per_bit_reference(
+    lr: f32,
+    bits: &mut BitMatrix,
+    grad: &Tensor,
+    accum: &mut Tensor,
+    ratio: &mut f32,
+) -> usize {
+    let (rows, cols) = (bits.rows, bits.cols);
+    let beta = *ratio;
+    let mut flips = 0usize;
+    for r in 0..rows {
+        for c in 0..cols {
+            let idx = r * cols + c;
+            let m = beta * accum.data[idx] + lr * grad.data[idx];
+            let w = if bits.get(r, c) { 1.0 } else { -1.0 };
+            if m * w >= 1.0 {
+                bits.flip(r, c);
+                accum.data[idx] = 0.0;
+                flips += 1;
+            } else {
+                accum.data[idx] = m;
+            }
+        }
+    }
+    *ratio = 1.0 - flips as f32 / (rows * cols).max(1) as f32;
+    flips
+}
+
+/// Optimizer-step microbench: per-bit baseline vs the word-parallel
+/// flip-mask kernel, on VGG/MLP-representative tensor shapes.
+fn optimizer_step_comparison() {
+    println!("\n== Boolean optimizer step: per-bit (before) vs word-parallel (after)");
+    let mut rng = Rng::new(9);
+    for (r, c) in [(512usize, 1024usize), (1024, 4096), (4096, 4096)] {
+        let weights = (r * c) as f64;
+        let grad = Tensor::randn(&[r, c], 0.5, &mut rng);
+
+        let mut bits_a = BitMatrix::random(r, c, &mut rng);
+        let mut accum = Tensor::zeros(&[r, c]);
+        let mut ratio = 1.0f32;
+        let mut t = Timer::new(&format!("per-bit step {r}x{c}"));
+        t.bench(2, 9, || {
+            std::hint::black_box(step_per_bit_reference(
+                1.0,
+                &mut bits_a,
+                &grad,
+                &mut accum,
+                &mut ratio,
+            ));
+        });
+        t.report(Some(weights));
+
+        let mut bits_b = BitMatrix::random(r, c, &mut rng);
+        let mut store = ParamStore::new();
+        store.accumulate("w", &grad);
+        let opt = BooleanOptimizer::new(1.0);
+        let mut t = Timer::new(&format!("word-parallel step {r}x{c}"));
+        t.bench(2, 9, || {
+            let mut params = vec![ParamRef::Bool { name: "w".into(), bits: &mut bits_b }];
+            std::hint::black_box(opt.step(&mut params, &mut store));
+        });
+        t.report(Some(weights));
+    }
+}
 
 fn main() {
     println!("== bench_train_step: one fwd+bwd+step, VGG-SMALL 16x16 w=0.125, batch 64");
@@ -35,6 +106,7 @@ fn main() {
         t.report(None);
     }
 
+    optimizer_step_comparison();
     xla_comparison();
 }
 

@@ -6,7 +6,7 @@
 //! passed to the latent tensor, masked by the hard-tanh clip 1{|w| ≤ 1}
 //! (Courbariaux et al.). Latent weights are `ParamRef::Real` → Adam.
 
-use crate::nn::{Layer, ParamRef, Value};
+use crate::nn::{Layer, ParamRef, ParamStore, Value};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 
@@ -83,7 +83,7 @@ impl Layer for SignSTE {
         Value::F32(y)
     }
 
-    fn backward(&mut self, z: Tensor) -> Tensor {
+    fn backward(&mut self, z: Tensor, _store: &mut ParamStore) -> Tensor {
         let x = self.cache_x.as_ref().expect("backward before forward");
         Tensor {
             shape: z.shape.clone(),
@@ -111,7 +111,6 @@ pub struct LatentBinConv2d {
     pub w_fp: Tensor,
     pub scale: bool,
     name: String,
-    gw: Tensor,
     cache_cols: Option<Tensor>,
     cache_dims: Option<(usize, usize, usize, usize, usize)>,
     cache_wbin: Option<Tensor>,
@@ -138,11 +137,15 @@ impl LatentBinConv2d {
             w_fp: Tensor::randn(&[c_out, fanin], 0.3, rng),
             scale,
             name: name.to_string(),
-            gw: Tensor::zeros(&[c_out, fanin]),
             cache_cols: None,
             cache_dims: None,
             cache_wbin: None,
         }
+    }
+
+    /// Store key of the latent weight parameter.
+    fn w_fp_key(&self) -> String {
+        format!("{}.w_fp", self.name)
     }
 }
 
@@ -164,32 +167,26 @@ impl Layer for LatentBinConv2d {
         Value::F32(y)
     }
 
-    fn backward(&mut self, z: Tensor) -> Tensor {
+    fn backward(&mut self, z: Tensor, store: &mut ParamStore) -> Tensor {
         let (n, h, w, oh, ow) = self.cache_dims.expect("backward before forward");
         assert_eq!(z.shape, vec![n, self.c_out, oh, ow]);
         let z_rows = z.nchw_to_rows();
         let cols = self.cache_cols.as_ref().unwrap();
         // STE to the latent weights: dL/dw_fp = dL/dw_bin · 1{|w_fp| ≤ 1}
-        let g_wbin = z_rows.matmul_at(cols);
+        let mut g_wbin = z_rows.matmul_at(cols);
         for i in 0..g_wbin.len() {
-            if self.w_fp.data[i].abs() <= 1.0 {
-                self.gw.data[i] += g_wbin.data[i];
+            if self.w_fp.data[i].abs() > 1.0 {
+                g_wbin.data[i] = 0.0;
             }
         }
+        store.accumulate(&self.w_fp_key(), &g_wbin);
         let w_bin = self.cache_wbin.as_ref().unwrap();
         z_rows.matmul(w_bin).col2im(n, self.c_in, h, w, self.k, self.stride, self.pad)
     }
 
     fn params(&mut self) -> Vec<ParamRef<'_>> {
-        vec![ParamRef::Real {
-            name: format!("{}.w_fp", self.name),
-            w: &mut self.w_fp,
-            grad: &mut self.gw,
-        }]
-    }
-
-    fn zero_grads(&mut self) {
-        self.gw.scale_inplace(0.0);
+        let name = self.w_fp_key();
+        vec![ParamRef::Real { name, w: &mut self.w_fp }]
     }
 
     fn name(&self) -> String {
@@ -204,7 +201,6 @@ pub struct LatentBinLinear {
     pub w_fp: Tensor,
     pub scale: bool,
     name: String,
-    gw: Tensor,
     cache_x: Option<Tensor>,
     cache_wbin: Option<Tensor>,
 }
@@ -217,10 +213,14 @@ impl LatentBinLinear {
             w_fp: Tensor::randn(&[n_out, n_in], 0.3, rng),
             scale,
             name: name.to_string(),
-            gw: Tensor::zeros(&[n_out, n_in]),
             cache_x: None,
             cache_wbin: None,
         }
+    }
+
+    /// Store key of the latent weight parameter.
+    fn w_fp_key(&self) -> String {
+        format!("{}.w_fp", self.name)
     }
 }
 
@@ -237,27 +237,21 @@ impl Layer for LatentBinLinear {
         Value::F32(y)
     }
 
-    fn backward(&mut self, z: Tensor) -> Tensor {
+    fn backward(&mut self, z: Tensor, store: &mut ParamStore) -> Tensor {
         let x = self.cache_x.as_ref().expect("backward before forward");
-        let g_wbin = z.matmul_at(x);
+        let mut g_wbin = z.matmul_at(x);
         for i in 0..g_wbin.len() {
-            if self.w_fp.data[i].abs() <= 1.0 {
-                self.gw.data[i] += g_wbin.data[i];
+            if self.w_fp.data[i].abs() > 1.0 {
+                g_wbin.data[i] = 0.0;
             }
         }
+        store.accumulate(&self.w_fp_key(), &g_wbin);
         z.matmul(self.cache_wbin.as_ref().unwrap())
     }
 
     fn params(&mut self) -> Vec<ParamRef<'_>> {
-        vec![ParamRef::Real {
-            name: format!("{}.w_fp", self.name),
-            w: &mut self.w_fp,
-            grad: &mut self.gw,
-        }]
-    }
-
-    fn zero_grads(&mut self) {
-        self.gw.scale_inplace(0.0);
+        let name = self.w_fp_key();
+        vec![ParamRef::Real { name, w: &mut self.w_fp }]
     }
 
     fn name(&self) -> String {
@@ -342,7 +336,7 @@ mod tests {
         let mut s = SignSTE::new("s");
         let x = Tensor::from_vec(&[1, 3], vec![0.5, -2.0, 0.9]);
         let _ = s.forward(Value::F32(x), true);
-        let g = s.backward(Tensor::full(&[1, 3], 1.0));
+        let g = s.backward(Tensor::full(&[1, 3], 1.0), &mut ParamStore::new());
         assert_eq!(g.data, vec![1.0, 0.0, 1.0]);
     }
 
@@ -353,10 +347,12 @@ mod tests {
         l.w_fp.data[0] = 3.0; // saturated: no gradient
         l.w_fp.data[1] = 0.5;
         let x = Tensor::full(&[1, 4], 1.0);
+        let mut store = ParamStore::new();
         let _ = l.forward(Value::F32(x), true);
-        let _ = l.backward(Tensor::full(&[1, 2], 1.0));
-        assert_eq!(l.gw.data[0], 0.0);
-        assert_eq!(l.gw.data[1], 1.0);
+        let _ = l.backward(Tensor::full(&[1, 2], 1.0), &mut store);
+        let gw = store.grad("l.w_fp").unwrap();
+        assert_eq!(gw.data[0], 0.0);
+        assert_eq!(gw.data[1], 1.0);
     }
 
     #[test]
@@ -368,7 +364,7 @@ mod tests {
             let x = Tensor::randn(&[2, 3, 16, 16], 1.0, &mut rng);
             let y = net.forward(Value::F32(x), true).expect_f32("t");
             assert_eq!(y.shape, vec![2, 10], "{kind:?}");
-            let g = net.backward(Tensor::full(&[2, 10], 0.1));
+            let g = net.backward(Tensor::full(&[2, 10], 0.1), &mut ParamStore::new());
             assert_eq!(g.shape, vec![2, 3, 16, 16]);
         }
     }

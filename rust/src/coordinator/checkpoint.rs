@@ -5,20 +5,30 @@
 //!
 //! Format (little-endian):
 //!   magic "BOLDCKP1" | u32 n_records | n× record
-//!   record: u8 kind (0=bool param, 1=real param, 2=buffer) |
-//!           u32 name_len | name |
-//!           bool:        u32 rows | u32 cols | u64 words…
-//!           real/buffer: u32 len  | f32 data…
+//!   record: u8 kind | u32 name_len | name | payload
+//!     kind 0 (bool param):   u32 rows | u32 cols | u64 words…
+//!     kind 1 (real param):   u32 len  | f32 data…
+//!     kind 2 (buffer):       u32 len  | f32 data…
+//!     kind 3 (bool optim):   u32 len  | f32 accum… | f32 ratio
+//!     kind 4 (adam moments): u32 len  | f32 m… | f32 v…
+//!     kind 5 (meta u64):     u64 value
 //!
 //! Buffers (kind 2) carry non-trainable running statistics (BatchNorm
-//! mean/var, centered-threshold means) — written by [`save_model`] /
-//! restored by [`load_model`].
+//! mean/var, centered-threshold means). Kinds 3–5 carry the
+//! [`ParamStore`] optimizer state (Boolean accumulators m + β ratios,
+//! Adam moments, the shared Adam timestep) written by [`save_training`]
+//! so [`load_training`] resumes a run bit-exactly; [`save_model`] /
+//! [`load_model`] stay weights+buffers-only for serving consumers, and
+//! `load_model` skips optimizer records it encounters.
 
-use crate::nn::{Layer, ParamRef};
+use crate::nn::{Layer, ParamRef, ParamStore};
 use std::fmt;
 use std::io::{Read, Write};
 
 const MAGIC: &[u8; 8] = b"BOLDCKP1";
+
+/// Meta-record name under which the shared Adam timestep is stored.
+const META_ADAM_T: &str = "optim.adam_t";
 
 #[derive(Debug)]
 pub struct CheckpointError {
@@ -55,47 +65,250 @@ fn r_u32(r: &mut impl Read) -> std::io::Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
-/// Save a whole model: parameters + non-trainable buffers (BN running
-/// stats, centered-threshold means). Preferred over [`save_checkpoint`]
-/// whenever you have a `Layer`.
-pub fn save_model(model: &mut dyn Layer, path: &str) -> Result<(), CheckpointError> {
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(MAGIC)?;
-    let n_params = model.params().len();
-    let n_buffers = model.buffers().len();
-    w_u32(&mut f, (n_params + n_buffers) as u32)?;
-    for p in model.params().iter() {
-        write_param(&mut f, p)?;
-    }
-    for (name, buf) in model.buffers() {
-        f.write_all(&[2u8])?;
-        w_u32(&mut f, name.len() as u32)?;
-        f.write_all(name.as_bytes())?;
-        w_u32(&mut f, buf.len() as u32)?;
-        for &v in buf.iter() {
-            f.write_all(&v.to_le_bytes())?;
-        }
+fn w_f32s(w: &mut impl Write, data: &[f32]) -> std::io::Result<()> {
+    for &v in data {
+        w.write_all(&v.to_le_bytes())?;
     }
     Ok(())
 }
 
-/// Load a whole model saved with [`save_model`] (also accepts param-only
-/// checkpoints from [`save_checkpoint`]).
+fn r_f32s(r: &mut impl Read, len: usize) -> std::io::Result<Vec<f32>> {
+    let mut data = vec![0.0f32; len];
+    for v in data.iter_mut() {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b)?;
+        *v = f32::from_le_bytes(b);
+    }
+    Ok(data)
+}
+
+fn w_name(w: &mut impl Write, kind: u8, name: &str) -> std::io::Result<()> {
+    w.write_all(&[kind])?;
+    w_u32(w, name.len() as u32)?;
+    w.write_all(name.as_bytes())
+}
+
+/// One parsed checkpoint record. Public so forward-only consumers (the
+/// native serving engine in `runtime::engine`) can rebuild a frozen model
+/// from a [`save_model`] file without instantiating trainable layers.
+pub enum Record {
+    /// Bit-packed Boolean parameter (kind 0).
+    Bool { name: String, rows: usize, cols: usize, words: Vec<u64> },
+    /// Dense FP parameter, stored flat (kind 1).
+    Real { name: String, data: Vec<f32> },
+    /// Non-trainable buffer, e.g. running statistics (kind 2).
+    Buffer { name: String, data: Vec<f32> },
+    /// Boolean-optimizer state: accumulator m + unchanged-ratio β (kind 3).
+    OptimBool { name: String, accum: Vec<f32>, ratio: f32 },
+    /// Adam moments (kind 4).
+    OptimAdam { name: String, m: Vec<f32>, v: Vec<f32> },
+    /// Scalar metadata, e.g. the shared Adam timestep (kind 5).
+    Meta { name: String, value: u64 },
+}
+
+/// Save a whole model: parameters + non-trainable buffers (BN running
+/// stats, centered-threshold means). Preferred over [`save_checkpoint`]
+/// whenever you have a `Layer`. For a resumable training snapshot that
+/// also carries optimizer state, use [`save_training`].
+pub fn save_model(model: &mut dyn Layer, path: &str) -> Result<(), CheckpointError> {
+    save_impl(model, None, path)
+}
+
+/// Save a resumable training snapshot: everything [`save_model`] writes
+/// PLUS the [`ParamStore`] optimizer state (Boolean accumulators + β,
+/// Adam moments + timestep). [`load_training`] restores it bit-exactly.
+pub fn save_training(
+    model: &mut dyn Layer,
+    store: &ParamStore,
+    path: &str,
+) -> Result<(), CheckpointError> {
+    save_impl(model, Some(store), path)
+}
+
+fn save_impl(
+    model: &mut dyn Layer,
+    store: Option<&ParamStore>,
+    path: &str,
+) -> Result<(), CheckpointError> {
+    // `buffers()` needs `&mut model`, so count them before taking the
+    // (long-lived) params borrow below.
+    let n_buffers = model.buffers().len();
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    {
+        // ONE params() walk: the optimizer-record list is derived from
+        // the same snapshot the writes use, so the count header and the
+        // record bodies can never disagree.
+        let params = model.params();
+        let optim: Vec<(&str, u8, Option<&crate::nn::ParamSlot>)> = match store {
+            None => Vec::new(),
+            Some(s) => {
+                let mut v: Vec<(&str, u8, Option<&crate::nn::ParamSlot>)> = params
+                    .iter()
+                    .filter_map(|p| {
+                        let slot = s.slot(p.name())?;
+                        match p {
+                            ParamRef::Bool { .. } if !slot.accum.is_empty() => {
+                                Some((p.name(), 3, Some(slot)))
+                            }
+                            ParamRef::Real { .. } if !slot.adam_m.is_empty() => {
+                                Some((p.name(), 4, Some(slot)))
+                            }
+                            _ => None,
+                        }
+                    })
+                    .collect();
+                v.push((META_ADAM_T, 5, None));
+                v
+            }
+        };
+        w_u32(&mut f, (params.len() + n_buffers + optim.len()) as u32)?;
+        for p in params.iter() {
+            write_param(&mut f, p)?;
+        }
+        for &(name, kind, slot) in &optim {
+            match (kind, slot) {
+                (3, Some(slot)) => {
+                    w_name(&mut f, 3, name)?;
+                    w_u32(&mut f, slot.accum.len() as u32)?;
+                    w_f32s(&mut f, &slot.accum.data)?;
+                    f.write_all(&slot.ratio.to_le_bytes())?;
+                }
+                (4, Some(slot)) => {
+                    w_name(&mut f, 4, name)?;
+                    w_u32(&mut f, slot.adam_m.len() as u32)?;
+                    w_f32s(&mut f, &slot.adam_m)?;
+                    w_f32s(&mut f, &slot.adam_v)?;
+                }
+                _ => {
+                    w_name(&mut f, 5, name)?;
+                    f.write_all(&store.expect("optim list implies store").adam_t.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    for (name, buf) in model.buffers() {
+        w_name(&mut f, 2, &name)?;
+        w_u32(&mut f, buf.len() as u32)?;
+        w_f32s(&mut f, buf)?;
+    }
+    Ok(())
+}
+
+/// Load a whole model saved with [`save_model`] / [`save_training`] (also
+/// accepts param-only checkpoints from [`save_checkpoint`]). Optimizer
+/// records are skipped — use [`load_training`] to restore those too.
 pub fn load_model(model: &mut dyn Layer, path: &str) -> Result<usize, CheckpointError> {
     let records = read_records(path)?;
+    apply_model_records(model, &records)
+}
+
+/// Restore a training snapshot written by [`save_training`]: model
+/// weights + buffers into `model`, optimizer state into `store`.
+/// Optimizer records are validated against the model (name must exist,
+/// state length must match the parameter) BEFORE anything is written to
+/// `store`, so a wrong-model file fails with a `CheckpointError` instead
+/// of arming a size-assert that would abort the first training step.
+/// Returns the number of records applied.
+pub fn load_training(
+    model: &mut dyn Layer,
+    store: &mut ParamStore,
+    path: &str,
+) -> Result<usize, CheckpointError> {
+    let records = read_records(path)?;
+    // (name → (is_bool, element count)) of every model parameter
+    let meta: Vec<(String, bool, usize)> = model
+        .params()
+        .iter()
+        .map(|p| (p.name().to_string(), matches!(p, ParamRef::Bool { .. }), p.len()))
+        .collect();
+    let lookup = |name: &str| meta.iter().find(|(n, _, _)| n == name);
+    for rec in &records {
+        match rec {
+            Record::OptimBool { name, accum, .. } => match lookup(name) {
+                Some((_, true, len)) if *len == accum.len() => {}
+                Some((_, true, len)) => {
+                    return Err(CheckpointError::new(format!(
+                        "{name}: accumulator len {} vs model {len}",
+                        accum.len()
+                    )))
+                }
+                Some(_) => {
+                    return Err(CheckpointError::new(format!(
+                        "{name}: Boolean optimizer state for a non-Boolean param"
+                    )))
+                }
+                None => {
+                    return Err(CheckpointError::new(format!(
+                        "optimizer state for '{name}' not in model"
+                    )))
+                }
+            },
+            Record::OptimAdam { name, m, v } => match lookup(name) {
+                Some((_, false, len)) if *len == m.len() && *len == v.len() => {}
+                Some((_, false, len)) => {
+                    return Err(CheckpointError::new(format!(
+                        "{name}: Adam moment len {}/{} vs model {len}",
+                        m.len(),
+                        v.len()
+                    )))
+                }
+                Some(_) => {
+                    return Err(CheckpointError::new(format!(
+                        "{name}: Adam state for a Boolean param"
+                    )))
+                }
+                None => {
+                    return Err(CheckpointError::new(format!(
+                        "optimizer state for '{name}' not in model"
+                    )))
+                }
+            },
+            _ => {}
+        }
+    }
+    let mut loaded = apply_model_records(model, &records)?;
+    for rec in &records {
+        match rec {
+            Record::OptimBool { name, accum, ratio } => {
+                let slot = store.slot_mut(name);
+                slot.accum_mut(accum.len()).data.copy_from_slice(accum);
+                slot.ratio = *ratio;
+                loaded += 1;
+            }
+            Record::OptimAdam { name, m, v } => {
+                let slot = store.slot_mut(name);
+                let (sm, sv) = slot.adam_mut(m.len());
+                sm.copy_from_slice(m);
+                sv.copy_from_slice(v);
+                loaded += 1;
+            }
+            Record::Meta { name, value } if name == META_ADAM_T => {
+                store.adam_t = *value;
+                loaded += 1;
+            }
+            _ => {}
+        }
+    }
+    Ok(loaded)
+}
+
+fn apply_model_records(
+    model: &mut dyn Layer,
+    records: &[Record],
+) -> Result<usize, CheckpointError> {
     let mut loaded = 0usize;
     {
         let mut params = model.params();
-        for rec in &records {
-            if let Record::Buffer { .. } = rec {
-                continue;
+        for rec in records {
+            if matches!(rec, Record::Bool { .. } | Record::Real { .. }) {
+                apply_record(rec, &mut params)?;
+                loaded += 1;
             }
-            apply_record(rec, &mut params)?;
-            loaded += 1;
         }
     }
     let mut buffers = model.buffers();
-    for rec in &records {
+    for rec in records {
         if let Record::Buffer { name, data } = rec {
             let target = buffers
                 .iter_mut()
@@ -115,45 +328,28 @@ pub fn load_model(model: &mut dyn Layer, path: &str) -> Result<usize, Checkpoint
     Ok(loaded)
 }
 
-/// One parsed checkpoint record. Public so forward-only consumers (the
-/// native serving engine in `runtime::engine`) can rebuild a frozen model
-/// from a [`save_model`] file without instantiating trainable layers.
-pub enum Record {
-    /// Bit-packed Boolean parameter (kind 0).
-    Bool { name: String, rows: usize, cols: usize, words: Vec<u64> },
-    /// Dense FP parameter, stored flat (kind 1).
-    Real { name: String, data: Vec<f32> },
-    /// Non-trainable buffer, e.g. running statistics (kind 2).
-    Buffer { name: String, data: Vec<f32> },
-}
-
 fn write_param(f: &mut impl Write, p: &ParamRef<'_>) -> Result<(), CheckpointError> {
     match p {
-        ParamRef::Bool { name, bits, .. } => {
-            f.write_all(&[0u8])?;
-            w_u32(f, name.len() as u32)?;
-            f.write_all(name.as_bytes())?;
+        ParamRef::Bool { name, bits } => {
+            w_name(f, 0, name)?;
             w_u32(f, bits.rows as u32)?;
             w_u32(f, bits.cols as u32)?;
             for &word in &bits.words {
                 f.write_all(&word.to_le_bytes())?;
             }
         }
-        ParamRef::Real { name, w, .. } => {
-            f.write_all(&[1u8])?;
-            w_u32(f, name.len() as u32)?;
-            f.write_all(name.as_bytes())?;
+        ParamRef::Real { name, w } => {
+            w_name(f, 1, name)?;
             w_u32(f, w.len() as u32)?;
-            for &v in &w.data {
-                f.write_all(&v.to_le_bytes())?;
-            }
+            w_f32s(f, &w.data)?;
         }
     }
     Ok(())
 }
 
 /// Parse every record of a checkpoint written by [`save_model`] /
-/// [`save_checkpoint`] without needing a live model to load into.
+/// [`save_training`] / [`save_checkpoint`] without needing a live model
+/// to load into.
 pub fn read_records(path: &str) -> Result<Vec<Record>, CheckpointError> {
     let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
     let mut magic = [0u8; 8];
@@ -185,17 +381,30 @@ pub fn read_records(path: &str) -> Result<Vec<Record>, CheckpointError> {
             }
             1 | 2 => {
                 let len = r_u32(&mut f)? as usize;
-                let mut data = vec![0.0f32; len];
-                for v in data.iter_mut() {
-                    let mut b = [0u8; 4];
-                    f.read_exact(&mut b)?;
-                    *v = f32::from_le_bytes(b);
-                }
+                let data = r_f32s(&mut f, len)?;
                 if kind[0] == 1 {
                     out.push(Record::Real { name, data });
                 } else {
                     out.push(Record::Buffer { name, data });
                 }
+            }
+            3 => {
+                let len = r_u32(&mut f)? as usize;
+                let accum = r_f32s(&mut f, len)?;
+                let mut b = [0u8; 4];
+                f.read_exact(&mut b)?;
+                out.push(Record::OptimBool { name, accum, ratio: f32::from_le_bytes(b) });
+            }
+            4 => {
+                let len = r_u32(&mut f)? as usize;
+                let m = r_f32s(&mut f, len)?;
+                let v = r_f32s(&mut f, len)?;
+                out.push(Record::OptimAdam { name, m, v });
+            }
+            5 => {
+                let mut b = [0u8; 8];
+                f.read_exact(&mut b)?;
+                out.push(Record::Meta { name, value: u64::from_le_bytes(b) });
             }
             k => return Err(CheckpointError::new(format!("bad kind {k}"))),
         }
@@ -207,7 +416,7 @@ fn apply_record(rec: &Record, params: &mut [ParamRef<'_>]) -> Result<(), Checkpo
     match rec {
         Record::Bool { name, rows, cols, words } => {
             let target = params.iter_mut().find_map(|p| match p {
-                ParamRef::Bool { name: n2, bits, .. } if n2 == name => Some(bits),
+                ParamRef::Bool { name: n2, bits } if n2 == name => Some(bits),
                 _ => None,
             });
             match target {
@@ -226,7 +435,7 @@ fn apply_record(rec: &Record, params: &mut [ParamRef<'_>]) -> Result<(), Checkpo
         }
         Record::Real { name, data } => {
             let target = params.iter_mut().find_map(|p| match p {
-                ParamRef::Real { name: n2, w, .. } if n2 == name => Some(w),
+                ParamRef::Real { name: n2, w } if n2 == name => Some(w),
                 _ => None,
             });
             match target {
@@ -244,7 +453,7 @@ fn apply_record(rec: &Record, params: &mut [ParamRef<'_>]) -> Result<(), Checkpo
                 None => Err(CheckpointError::new(format!("real param '{name}' not in model"))),
             }
         }
-        Record::Buffer { .. } => Ok(()),
+        _ => Ok(()),
     }
 }
 
@@ -254,114 +463,30 @@ pub fn save_checkpoint(params: &mut [ParamRef<'_>], path: &str) -> Result<(), Ch
     f.write_all(MAGIC)?;
     w_u32(&mut f, params.len() as u32)?;
     for p in params.iter() {
-        match p {
-            ParamRef::Bool { name, bits, .. } => {
-                f.write_all(&[0u8])?;
-                w_u32(&mut f, name.len() as u32)?;
-                f.write_all(name.as_bytes())?;
-                w_u32(&mut f, bits.rows as u32)?;
-                w_u32(&mut f, bits.cols as u32)?;
-                for &word in &bits.words {
-                    f.write_all(&word.to_le_bytes())?;
-                }
-            }
-            ParamRef::Real { name, w, .. } => {
-                f.write_all(&[1u8])?;
-                w_u32(&mut f, name.len() as u32)?;
-                f.write_all(name.as_bytes())?;
-                w_u32(&mut f, w.len() as u32)?;
-                for &v in &w.data {
-                    f.write_all(&v.to_le_bytes())?;
-                }
-            }
-        }
+        write_param(&mut f, p)?;
     }
     Ok(())
 }
 
 /// Load parameters from `path` into `params`, matching by name.
-/// Every parameter in the file must exist in `params` with identical
-/// shape; params missing from the file are left untouched.
+/// Every parameter record in the file must exist in `params` with
+/// identical shape; params missing from the file are left untouched.
+/// Buffer/optimizer records are rejected (use the model-level loaders).
 pub fn load_checkpoint(params: &mut [ParamRef<'_>], path: &str) -> Result<usize, CheckpointError> {
-    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(CheckpointError::new("bad magic"));
-    }
-    let n = r_u32(&mut f)? as usize;
+    let records = read_records(path)?;
     let mut loaded = 0usize;
-    for _ in 0..n {
-        let mut kind = [0u8; 1];
-        f.read_exact(&mut kind)?;
-        let name_len = r_u32(&mut f)? as usize;
-        let mut name_buf = vec![0u8; name_len];
-        f.read_exact(&mut name_buf)?;
-        let name = String::from_utf8(name_buf).map_err(|_| CheckpointError::new("bad name"))?;
-        match kind[0] {
-            0 => {
-                let rows = r_u32(&mut f)? as usize;
-                let cols = r_u32(&mut f)? as usize;
-                let wpr = cols.div_ceil(64);
-                let mut words = vec![0u64; rows * wpr];
-                for w in words.iter_mut() {
-                    let mut b = [0u8; 8];
-                    f.read_exact(&mut b)?;
-                    *w = u64::from_le_bytes(b);
-                }
-                let target = params.iter_mut().find_map(|p| match p {
-                    ParamRef::Bool { name: n2, bits, .. } if *n2 == name => Some(bits),
-                    _ => None,
-                });
-                match target {
-                    Some(bits) => {
-                        if (bits.rows, bits.cols) != (rows, cols) {
-                            return Err(CheckpointError::new(format!(
-                                "{name}: shape {rows}x{cols} vs model {}x{}",
-                                bits.rows, bits.cols
-                            )));
-                        }
-                        bits.words.copy_from_slice(&words);
-                        loaded += 1;
-                    }
-                    None => {
-                        return Err(CheckpointError::new(format!(
-                            "bool param '{name}' not found in model"
-                        )))
-                    }
-                }
+    for rec in &records {
+        match rec {
+            Record::Bool { .. } | Record::Real { .. } => {
+                apply_record(rec, params)?;
+                loaded += 1;
             }
-            1 => {
-                let len = r_u32(&mut f)? as usize;
-                let mut data = vec![0.0f32; len];
-                for v in data.iter_mut() {
-                    let mut b = [0u8; 4];
-                    f.read_exact(&mut b)?;
-                    *v = f32::from_le_bytes(b);
-                }
-                let target = params.iter_mut().find_map(|p| match p {
-                    ParamRef::Real { name: n2, w, .. } if *n2 == name => Some(w),
-                    _ => None,
-                });
-                match target {
-                    Some(w) => {
-                        if w.len() != len {
-                            return Err(CheckpointError::new(format!(
-                                "{name}: len {len} vs model {}",
-                                w.len()
-                            )));
-                        }
-                        w.data.copy_from_slice(&data);
-                        loaded += 1;
-                    }
-                    None => {
-                        return Err(CheckpointError::new(format!(
-                            "real param '{name}' not found in model"
-                        )))
-                    }
-                }
+            Record::Buffer { name, .. } => {
+                return Err(CheckpointError::new(format!(
+                    "buffer '{name}' needs a model-level loader (load_model)"
+                )))
             }
-            k => return Err(CheckpointError::new(format!("bad kind {k}"))),
+            _ => {} // optimizer records: ignored at param level
         }
     }
     Ok(loaded)
@@ -370,17 +495,23 @@ pub fn load_checkpoint(params: &mut [ParamRef<'_>], path: &str) -> Result<usize,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::TrainConfig;
+    use crate::coordinator::ClassifierTrainer;
+    use crate::data::ImageDataset;
     use crate::models::{boolean_mlp, MlpConfig};
-    use crate::nn::{Layer, Value};
+    use crate::nn::{Layer, ParamStore, Value};
     use crate::tensor::Tensor;
     use crate::util::Rng;
 
-    #[test]
-    fn roundtrip_preserves_outputs() {
+    fn tmp(name: &str) -> String {
         let dir = std::env::temp_dir().join("bold_ckpt_test");
         std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("m.ckpt");
-        let path = path.to_str().unwrap();
+        dir.join(name).to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn roundtrip_preserves_outputs() {
+        let path = tmp("m.ckpt");
 
         let cfg = MlpConfig { d_in: 64, hidden: vec![32], d_out: 4, tanh_scale: true };
         let mut rng = Rng::new(1);
@@ -393,8 +524,8 @@ mod tests {
         let y2_before = m2.forward(Value::bit_from_pm1(&x), false).expect_f32("t");
         assert!(y1.max_abs_diff(&y2_before) > 0.0, "different inits differ");
 
-        save_checkpoint(&mut m1.params(), path).unwrap();
-        let loaded = load_checkpoint(&mut m2.params(), path).unwrap();
+        save_checkpoint(&mut m1.params(), &path).unwrap();
+        let loaded = load_checkpoint(&mut m2.params(), &path).unwrap();
         assert_eq!(loaded, 3);
         let y2 = m2.forward(Value::bit_from_pm1(&x), false).expect_f32("t");
         assert_eq!(y1.max_abs_diff(&y2), 0.0, "loaded model must match exactly");
@@ -402,16 +533,158 @@ mod tests {
 
     #[test]
     fn shape_mismatch_rejected() {
-        let dir = std::env::temp_dir().join("bold_ckpt_test2");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("m.ckpt");
-        let path = path.to_str().unwrap();
+        let path = tmp("mismatch.ckpt");
         let mut rng = Rng::new(1);
         let cfg_a = MlpConfig { d_in: 64, hidden: vec![32], d_out: 4, tanh_scale: true };
         let cfg_b = MlpConfig { d_in: 32, hidden: vec![32], d_out: 4, tanh_scale: true };
         let mut a = boolean_mlp(&cfg_a, &mut rng);
         let mut b = boolean_mlp(&cfg_b, &mut rng);
-        save_checkpoint(&mut a.params(), path).unwrap();
-        assert!(load_checkpoint(&mut b.params(), path).is_err());
+        save_checkpoint(&mut a.params(), &path).unwrap();
+        assert!(load_checkpoint(&mut b.params(), &path).is_err());
+    }
+
+    #[test]
+    fn training_snapshot_roundtrips_optimizer_state() {
+        let path = tmp("optim.ckpt");
+        let mcfg = MlpConfig { d_in: 64, hidden: vec![32], d_out: 4, tanh_scale: true };
+        let tcfg = TrainConfig { lr_bool: 1.5, cosine: false, ..Default::default() };
+        let ds = ImageDataset::mnist_like(64, 4, 64, 0.1, 7);
+        let mut rng = Rng::new(3);
+        let mut model = boolean_mlp(&mcfg, &mut rng);
+        let mut trainer = ClassifierTrainer::new(&tcfg);
+        for step in 0..5 {
+            let idx: Vec<usize> = (0..16).collect();
+            let (x, labels) = ds.batch_flat(&idx);
+            let _ = trainer.train_step(&mut model, Value::bit_from_pm1(&x), &labels, step);
+        }
+        save_training(&mut model, &trainer.opt.store, &path).unwrap();
+
+        let mut store2 = ParamStore::new();
+        let mut rng2 = Rng::new(55);
+        let mut model2 = boolean_mlp(&mcfg, &mut rng2);
+        load_training(&mut model2, &mut store2, &path).unwrap();
+
+        assert_eq!(store2.adam_t, trainer.opt.store.adam_t);
+        {
+            let name = "bl0.weight";
+            let a = trainer.opt.store.slot(name).expect("trained slot");
+            let b = store2.slot(name).expect("restored slot");
+            assert_eq!(a.accum.data, b.accum.data, "{name}: accumulator m");
+            assert_eq!(a.ratio, b.ratio, "{name}: β");
+        }
+        {
+            let name = "head.w";
+            let a = trainer.opt.store.slot(name).expect("trained adam slot");
+            let b = store2.slot(name).expect("restored adam slot");
+            assert_eq!(a.adam_m, b.adam_m, "{name}: Adam m");
+            assert_eq!(a.adam_v, b.adam_v, "{name}: Adam v");
+        }
+        // weights restored too
+        let x = Tensor::rand_pm1(&[4, 64], &mut rng);
+        let y1 = model.forward(Value::bit_from_pm1(&x), false).expect_f32("t");
+        let y2 = model2.forward(Value::bit_from_pm1(&x), false).expect_f32("t");
+        assert_eq!(y1.max_abs_diff(&y2), 0.0);
+    }
+
+    #[test]
+    fn load_training_rejects_wrong_model() {
+        // Optimizer records for a different architecture must fail the
+        // load with a CheckpointError, not arm a panic for later.
+        let path = tmp("wrongmodel.ckpt");
+        let mcfg_a = MlpConfig { d_in: 64, hidden: vec![32], d_out: 4, tanh_scale: true };
+        let mcfg_b = MlpConfig { d_in: 48, hidden: vec![32], d_out: 4, tanh_scale: true };
+        let tcfg = TrainConfig { cosine: false, ..Default::default() };
+        let ds = ImageDataset::mnist_like(32, 4, 64, 0.1, 6);
+        let mut rng = Rng::new(2);
+        let mut model = boolean_mlp(&mcfg_a, &mut rng);
+        let mut trainer = ClassifierTrainer::new(&tcfg);
+        let idx: Vec<usize> = (0..16).collect();
+        let (x, labels) = ds.batch_flat(&idx);
+        let _ = trainer.train_step(&mut model, Value::bit_from_pm1(&x), &labels, 0);
+        save_training(&mut model, &trainer.opt.store, &path).unwrap();
+
+        let mut other = boolean_mlp(&mcfg_b, &mut Rng::new(3));
+        let mut store = ParamStore::new();
+        assert!(load_training(&mut other, &mut store, &path).is_err());
+        assert!(store.is_empty(), "failed load must not leave partial state");
+    }
+
+    #[test]
+    fn load_model_skips_optimizer_records() {
+        // A training snapshot must still load as a plain (serving) model.
+        let path = tmp("skip.ckpt");
+        let mcfg = MlpConfig { d_in: 64, hidden: vec![32], d_out: 4, tanh_scale: true };
+        let tcfg = TrainConfig { cosine: false, ..Default::default() };
+        let ds = ImageDataset::mnist_like(32, 4, 64, 0.1, 8);
+        let mut rng = Rng::new(4);
+        let mut model = boolean_mlp(&mcfg, &mut rng);
+        let mut trainer = ClassifierTrainer::new(&tcfg);
+        let idx: Vec<usize> = (0..16).collect();
+        let (x, labels) = ds.batch_flat(&idx);
+        let _ = trainer.train_step(&mut model, Value::bit_from_pm1(&x), &labels, 0);
+        save_training(&mut model, &trainer.opt.store, &path).unwrap();
+
+        let mut rng2 = Rng::new(77);
+        let mut model2 = boolean_mlp(&mcfg, &mut rng2);
+        load_model(&mut model2, &path).unwrap();
+        let probe = Tensor::rand_pm1(&[4, 64], &mut rng);
+        let y1 = model.forward(Value::bit_from_pm1(&probe), false).expect_f32("t");
+        let y2 = model2.forward(Value::bit_from_pm1(&probe), false).expect_f32("t");
+        assert_eq!(y1.max_abs_diff(&y2), 0.0);
+    }
+
+    /// THE resume guarantee: save mid-run, reload into a FRESH model +
+    /// trainer, continue, and end bit-identical to the uninterrupted run.
+    #[test]
+    fn resume_matches_uninterrupted_run_bit_exactly() {
+        let path = tmp("resume.ckpt");
+        let mcfg = MlpConfig { d_in: 64, hidden: vec![32], d_out: 4, tanh_scale: true };
+        let tcfg = TrainConfig { lr_bool: 2.0, batch: 16, cosine: true, steps: 20, ..Default::default() };
+        let ds = ImageDataset::mnist_like(128, 4, 64, 0.1, 11);
+        // fixed batch schedule shared by both runs
+        let mut sampler = crate::data::BatchSampler::new(ds.n, tcfg.batch, 42);
+        let batches: Vec<Vec<usize>> = (0..20).map(|_| sampler.next_batch()).collect();
+
+        // --- uninterrupted: 20 steps ---
+        let mut m_full = boolean_mlp(&mcfg, &mut Rng::new(5));
+        let mut t_full = ClassifierTrainer::new(&tcfg);
+        for (step, idx) in batches.iter().enumerate() {
+            let (x, labels) = ds.batch_flat(idx);
+            let _ = t_full.train_step(&mut m_full, Value::bit_from_pm1(&x), &labels, step);
+        }
+
+        // --- interrupted: 10 steps, save, reload fresh, 10 more ---
+        let mut m_a = boolean_mlp(&mcfg, &mut Rng::new(5));
+        let mut t_a = ClassifierTrainer::new(&tcfg);
+        for (step, idx) in batches.iter().take(10).enumerate() {
+            let (x, labels) = ds.batch_flat(idx);
+            let _ = t_a.train_step(&mut m_a, Value::bit_from_pm1(&x), &labels, step);
+        }
+        save_training(&mut m_a, &t_a.opt.store, &path).unwrap();
+        drop((m_a, t_a));
+
+        let mut m_b = boolean_mlp(&mcfg, &mut Rng::new(999)); // different init…
+        let mut t_b = ClassifierTrainer::new(&tcfg);
+        load_training(&mut m_b, t_b.store_mut(), &path).unwrap(); // …fully overwritten
+        for (step, idx) in batches.iter().enumerate().skip(10) {
+            let (x, labels) = ds.batch_flat(idx);
+            let _ = t_b.train_step(&mut m_b, Value::bit_from_pm1(&x), &labels, step);
+        }
+
+        // bit-exact: packed Boolean words AND FP weights identical
+        let pf = m_full.params();
+        let pb = m_b.params();
+        assert_eq!(pf.len(), pb.len());
+        for (a, b) in pf.iter().zip(pb.iter()) {
+            match (a, b) {
+                (ParamRef::Bool { name, bits: ba }, ParamRef::Bool { bits: bb, .. }) => {
+                    assert_eq!(ba.words, bb.words, "{name}: packed weights diverged");
+                }
+                (ParamRef::Real { name, w: wa }, ParamRef::Real { w: wb, .. }) => {
+                    assert_eq!(wa.data, wb.data, "{name}: FP weights diverged");
+                }
+                _ => panic!("param order mismatch"),
+            }
+        }
     }
 }

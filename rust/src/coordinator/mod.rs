@@ -15,9 +15,11 @@ mod parallel;
 mod trainer;
 
 pub use checkpoint::{
-    load_checkpoint, load_model, read_records, save_checkpoint, save_model, CheckpointError,
-    Record,
+    load_checkpoint, load_model, load_training, read_records, save_checkpoint, save_model,
+    save_training, CheckpointError, Record,
 };
 pub use metrics::MetricLog;
 pub use parallel::ParallelTrainer;
-pub use trainer::{evaluate_classifier, forward_eval, ClassifierTrainer, TrainReport};
+pub use trainer::{
+    evaluate_classifier, forward_eval, ClassifierTrainer, DualOptimizer, TrainReport,
+};

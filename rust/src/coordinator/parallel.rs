@@ -1,26 +1,28 @@
 //! Batch-parallel training: the coordinator's multi-worker mode, mapping
 //! the paper's 8×V100 data-parallel setup (Appendix D.1.1) onto threads.
 //!
-//! Each worker holds a full model replica and processes a shard of the
-//! batch; the leader *sums the Boolean votes* (Eq. 7 aggregation is
-//! additive over samples, so vote summation across workers is exactly
-//! equivalent to a single large batch — tested below), applies the
-//! optimizers once, and broadcasts the updated weights. Note the
-//! communication payload for Boolean weights is 1 bit/weight — the
-//! distributed-training face of the paper's energy argument.
+//! Each worker holds a full model replica plus its own [`ParamStore`] and
+//! processes a shard of the batch; the leader *sums the Boolean votes*
+//! (Eq. 7 aggregation is additive over samples, so store-to-store vote
+//! summation across workers is exactly equivalent to a single large
+//! batch — tested below), applies the optimizers once, and broadcasts the
+//! updated weights. Note the communication payload for Boolean weights is
+//! 1 bit/weight — the distributed-training face of the paper's energy
+//! argument.
 
+use super::DualOptimizer;
 use crate::config::TrainConfig;
 use crate::data::ImageDataset;
-use crate::nn::{softmax_cross_entropy, Layer, ParamRef, Sequential, Value};
-use crate::optim::{Adam, BooleanOptimizer, CosineSchedule, FlipStats};
+use crate::nn::{softmax_cross_entropy, Layer, ParamRef, ParamStore, Sequential, Value};
+use crate::optim::FlipStats;
 
 /// Multi-worker trainer with vote aggregation.
 pub struct ParallelTrainer {
     pub replicas: Vec<Sequential>,
-    pub lr_bool: f32,
-    pub bool_sched: Option<CosineSchedule>,
-    adam: Adam,
-    fp_sched: Option<CosineSchedule>,
+    /// One vote store per non-leader replica (the leader accumulates
+    /// straight into `opt.store`).
+    worker_stores: Vec<ParamStore>,
+    pub opt: DualOptimizer,
 }
 
 impl ParallelTrainer {
@@ -32,20 +34,10 @@ impl ParallelTrainer {
     {
         assert!(workers >= 1);
         let replicas: Vec<Sequential> = (0..workers).map(|_| factory(cfg.seed)).collect();
-        let (bool_sched, fp_sched) = if cfg.cosine {
-            (
-                Some(CosineSchedule::new(cfg.lr_bool, cfg.lr_bool * 0.05, cfg.steps)),
-                Some(CosineSchedule::new(cfg.lr_fp, cfg.lr_fp * 0.05, cfg.steps)),
-            )
-        } else {
-            (None, None)
-        };
         ParallelTrainer {
             replicas,
-            lr_bool: cfg.lr_bool,
-            bool_sched,
-            adam: Adam::new(cfg.lr_fp),
-            fp_sched,
+            worker_stores: (1..workers).map(|_| ParamStore::new()).collect(),
+            opt: DualOptimizer::new(cfg),
         }
     }
 
@@ -53,27 +45,44 @@ impl ParallelTrainer {
         &mut self.replicas[0]
     }
 
-    /// One synchronous data-parallel step over shard inputs.
-    /// `shards[i]` feeds replica i. Returns (mean loss, correct, flips).
+    /// One synchronous data-parallel step over shard inputs: `shards[i]`
+    /// feeds replica i. A batch may split into FEWER shards than workers
+    /// (uneven final chunking) — surplus replicas simply sit the step out;
+    /// their zeroed stores contribute nothing to the vote sum.
+    /// Returns (mean loss, correct, flips).
     pub fn train_step(
         &mut self,
         shards: Vec<(Value, Vec<usize>)>,
         step: usize,
     ) -> (f32, usize, FlipStats) {
-        assert_eq!(shards.len(), self.replicas.len());
+        assert!(
+            !shards.is_empty() && shards.len() <= self.replicas.len(),
+            "got {} shards for {} workers",
+            shards.len(),
+            self.replicas.len()
+        );
         let total: usize = shards.iter().map(|(_, l)| l.len()).sum();
+        // Fresh vote buffers everywhere — including idle workers, so a
+        // stale shard from a previous step can never be double-counted.
+        self.opt.store.zero_grads();
+        for s in self.worker_stores.iter_mut() {
+            s.zero_grads();
+        }
         // --- parallel forward/backward on each replica's shard ---
         let results: Vec<(f32, usize)> = std::thread::scope(|scope| {
+            let stores = std::iter::once(&mut self.opt.store)
+                .chain(self.worker_stores.iter_mut());
             let mut handles = Vec::new();
-            for (model, (x, labels)) in self.replicas.iter_mut().zip(shards) {
+            for ((model, store), (x, labels)) in
+                self.replicas.iter_mut().zip(stores).zip(shards)
+            {
                 handles.push(scope.spawn(move || {
                     let logits = model.forward(x, true).expect_f32("worker");
                     let out = softmax_cross_entropy(&logits, &labels);
-                    model.zero_grads();
                     // scale shard gradient by shard/total so the summed
                     // votes equal the single-large-batch gradient
                     let scale = labels.len() as f32 / total as f32;
-                    let _ = model.backward(out.grad.scale(scale));
+                    let _ = model.backward(out.grad.scale(scale), store);
                     (out.loss * scale, out.correct)
                 }));
             }
@@ -82,38 +91,15 @@ impl ParallelTrainer {
         let loss: f32 = results.iter().map(|(l, _)| l).sum();
         let correct: usize = results.iter().map(|(_, c)| c).sum();
 
-        // --- vote aggregation: sum worker grads into the leader ---
-        {
-            let (leader, rest) = self.replicas.split_at_mut(1);
-            let mut p0 = leader[0].params();
-            for worker in rest.iter_mut() {
-                let pw = worker.params();
-                assert_eq!(p0.len(), pw.len(), "replica param mismatch");
-                for (a, b) in p0.iter_mut().zip(pw) {
-                    match (a, b) {
-                        (ParamRef::Bool { grad: ga, .. }, ParamRef::Bool { grad: gb, .. }) => {
-                            ga.add_inplace(gb);
-                        }
-                        (ParamRef::Real { grad: ga, .. }, ParamRef::Real { grad: gb, .. }) => {
-                            ga.add_inplace(gb);
-                        }
-                        _ => panic!("replica param kind mismatch"),
-                    }
-                }
-            }
+        // --- vote aggregation: store-to-store sums into the leader ---
+        for ws in &self.worker_stores {
+            self.opt.store.add_grads_from(ws);
         }
 
         // --- single optimizer step on the leader ---
-        let lr_b = self.bool_sched.map_or(self.lr_bool, |s| s.at(step));
-        if let Some(s) = self.fp_sched {
-            self.adam.lr = s.at(step);
-        }
-        let bool_opt = BooleanOptimizer::new(lr_b);
         let stats = {
             let mut p0 = self.replicas[0].params();
-            let stats = bool_opt.step(&mut p0);
-            self.adam.step(&mut p0);
-            stats
+            self.opt.apply(&mut p0, step)
         };
 
         // --- broadcast: copy leader weights to all workers ---
@@ -122,6 +108,7 @@ impl ParallelTrainer {
     }
 
     /// Copy the leader's weights (bits + FP) to every other replica.
+    /// Boolean weights travel as packed words (1 bit/weight).
     pub fn broadcast(&mut self) {
         let (leader, rest) = self.replicas.split_at_mut(1);
         let mut p0 = leader[0].params();
@@ -156,6 +143,9 @@ impl ParallelTrainer {
         for step in 0..cfg.steps {
             let idx = sampler.next_batch();
             let shard_size = idx.len().div_ceil(workers);
+            // An uneven split can yield fewer shards than workers; that is
+            // fine — train_step leaves the surplus replicas idle instead
+            // of re-feeding samples (which would double-count their votes).
             let shards: Vec<(Value, Vec<usize>)> = idx
                 .chunks(shard_size)
                 .map(|chunk| {
@@ -165,13 +155,6 @@ impl ParallelTrainer {
                     (v, labels)
                 })
                 .collect();
-            // pad with empty shards if the batch didn't split evenly
-            let mut shards = shards;
-            while shards.len() < workers {
-                let (x, labels) = if flat { train.batch_flat(&idx[..1]) } else { train.batch(&idx[..1]) };
-                let v = if flat { Value::bit_from_pm1(&x) } else { Value::F32(x) };
-                shards.push((v, labels));
-            }
             let (loss, correct, stats) = self.train_step(shards, step);
             report.losses.push(loss);
             report.train_acc.push(correct as f32 / idx.len().max(1) as f32);
@@ -189,6 +172,7 @@ impl ParallelTrainer {
 mod tests {
     use super::*;
     use crate::models::{boolean_mlp, MlpConfig};
+    use crate::optim::{Adam, BooleanOptimizer};
     use crate::tensor::Tensor;
     use crate::util::Rng;
 
@@ -197,6 +181,26 @@ mod tests {
             let mut rng = Rng::new(seed);
             boolean_mlp(&mcfg, &mut rng)
         }
+    }
+
+    /// Reference: single model + single store trained on the full batch.
+    fn single_model_step(
+        mcfg: &MlpConfig,
+        cfg: &TrainConfig,
+        x: &Tensor,
+        labels: &[usize],
+    ) -> Sequential {
+        let mut single = mk_factory(mcfg.clone())(cfg.seed);
+        let mut store = ParamStore::new();
+        let logits = single.forward(Value::bit_from_pm1(x), true).expect_f32("t");
+        let out = softmax_cross_entropy(&logits, labels);
+        let _ = single.backward(out.grad, &mut store);
+        let bool_opt = BooleanOptimizer::new(cfg.lr_bool);
+        let mut adam = Adam::new(cfg.lr_fp);
+        let mut ps = single.params();
+        bool_opt.step(&mut ps, &mut store);
+        adam.step(&mut ps, &mut store);
+        single
     }
 
     #[test]
@@ -244,16 +248,7 @@ mod tests {
         );
 
         // reference: single model, full batch
-        let mut single = mk_factory(mcfg)(cfg.seed);
-        let logits = single.forward(Value::bit_from_pm1(&x), true).expect_f32("t");
-        let out = softmax_cross_entropy(&logits, &labels);
-        single.zero_grads();
-        let _ = single.backward(out.grad);
-        let bool_opt = BooleanOptimizer::new(cfg.lr_bool);
-        let mut adam = Adam::new(cfg.lr_fp);
-        let mut ps = single.params();
-        bool_opt.step(&mut ps);
-        adam.step(&mut ps);
+        let mut single = single_model_step(&mcfg, &cfg, &x, &labels);
 
         // weights must match exactly
         let mut rng = Rng::new(11);
@@ -264,6 +259,73 @@ mod tests {
             y_par.max_abs_diff(&y_single) < 1e-4,
             "parallel vote aggregation must equal big-batch training"
         );
+    }
+
+    /// Regression (shard-padding bug): a batch that splits into FEWER
+    /// shards than workers must still equal the single-model step — the
+    /// old padding path re-fed sample 0 to the surplus worker, double
+    /// counting its votes.
+    #[test]
+    fn uneven_shards_keep_vote_parity() {
+        let cfg = TrainConfig {
+            workers: 3,
+            steps: 1,
+            lr_bool: 2.0,
+            cosine: false,
+            ..Default::default()
+        };
+        let mcfg = MlpConfig { d_in: 64, hidden: vec![32], d_out: 4, tanh_scale: true };
+        let ds = ImageDataset::mnist_like(16, 4, 64, 0.1, 9);
+        // batch of 4 over 3 workers: ceil(4/3) = 2 ⇒ only 2 shards
+        let idx: Vec<usize> = (0..4).collect();
+        let (x, labels) = ds.batch_flat(&idx);
+
+        let mut pt = ParallelTrainer::new(3, &cfg, mk_factory(mcfg.clone()));
+        let (xa, la) = ds.batch_flat(&idx[..2]);
+        let (xb, lb) = ds.batch_flat(&idx[2..]);
+        let (loss, correct, _) = pt.train_step(
+            vec![
+                (Value::bit_from_pm1(&xa), la),
+                (Value::bit_from_pm1(&xb), lb),
+            ],
+            0,
+        );
+        assert!(loss.is_finite());
+        assert!(correct <= 4);
+
+        let mut single = single_model_step(&mcfg, &cfg, &x, &labels);
+
+        let mut rng = Rng::new(13);
+        let probe = Tensor::rand_pm1(&[6, 64], &mut rng);
+        let y_par = pt.leader().forward(Value::bit_from_pm1(&probe), false).expect_f32("t");
+        let y_single = single.forward(Value::bit_from_pm1(&probe), false).expect_f32("t");
+        assert!(
+            y_par.max_abs_diff(&y_single) < 1e-4,
+            "idle workers must not re-feed samples (vote double-count)"
+        );
+
+        // ... and the idle worker still receives the broadcast weights.
+        let y_idle = pt.replicas[2].forward(Value::bit_from_pm1(&probe), false).expect_f32("t");
+        assert_eq!(y_par.max_abs_diff(&y_idle), 0.0, "broadcast reaches idle workers");
+    }
+
+    /// `fit` drives the uneven path end to end (batch not divisible by
+    /// workers) without panicking or losing samples.
+    #[test]
+    fn fit_handles_batches_not_divisible_by_workers() {
+        let cfg = TrainConfig {
+            workers: 3,
+            steps: 6,
+            batch: 4, // ceil(4/3)=2 ⇒ 2 shards for 3 workers every step
+            lr_bool: 4.0,
+            ..Default::default()
+        };
+        let (train, val) = ImageDataset::mnist_like(64, 4, 64, 0.08, 2).split(48);
+        let mcfg = MlpConfig { d_in: 64, hidden: vec![32], d_out: 4, tanh_scale: true };
+        let mut pt = ParallelTrainer::new(3, &cfg, mk_factory(mcfg));
+        let report = pt.fit(&train, &val, &cfg, false);
+        assert_eq!(report.losses.len(), 6);
+        assert!(report.losses.iter().all(|l| l.is_finite()));
     }
 
     #[test]

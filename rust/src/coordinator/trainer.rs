@@ -4,7 +4,7 @@
 
 use crate::config::TrainConfig;
 use crate::data::ImageDataset;
-use crate::nn::{softmax_cross_entropy, Layer, Sequential, Value};
+use crate::nn::{softmax_cross_entropy, Layer, ParamRef, ParamStore, Sequential, Value};
 use crate::optim::{Adam, BooleanOptimizer, CosineSchedule, FlipStats};
 use crate::tensor::Tensor;
 
@@ -30,16 +30,21 @@ impl TrainReport {
     }
 }
 
-/// Classifier trainer: owns both optimizers and their schedules.
-pub struct ClassifierTrainer {
+/// The paper's dual-optimizer setup in one place: Boolean optimizer + Adam
+/// with their cosine schedules, and the [`ParamStore`] both draw state
+/// from. Shared by [`ClassifierTrainer`] and
+/// [`super::ParallelTrainer`] (which used to duplicate this wiring).
+pub struct DualOptimizer {
     pub lr_bool: f32,
-    pub lr_fp: f32,
     pub bool_sched: Option<CosineSchedule>,
     pub fp_sched: Option<CosineSchedule>,
-    adam: Adam,
+    pub adam: Adam,
+    /// Central optimizer state: votes/grads, Boolean accumulators + β,
+    /// Adam moments. Serialized by `save_training` for bit-exact resume.
+    pub store: ParamStore,
 }
 
-impl ClassifierTrainer {
+impl DualOptimizer {
     pub fn new(cfg: &TrainConfig) -> Self {
         let (bool_sched, fp_sched) = if cfg.cosine {
             (
@@ -49,27 +54,62 @@ impl ClassifierTrainer {
         } else {
             (None, None)
         };
-        ClassifierTrainer {
+        DualOptimizer {
             lr_bool: cfg.lr_bool,
-            lr_fp: cfg.lr_fp,
             bool_sched,
             fp_sched,
             adam: Adam::new(cfg.lr_fp),
+            store: ParamStore::new(),
         }
     }
 
-    /// One optimizer step on an already-accumulated model (grads filled by
-    /// the caller's backward pass).
-    pub fn apply(&mut self, model: &mut Sequential, step: usize) -> FlipStats {
+    /// One optimizer step over already-accumulated votes/gradients.
+    pub fn apply(&mut self, params: &mut [ParamRef<'_>], step: usize) -> FlipStats {
+        // Store state is keyed by name: two layers sharing a name would
+        // silently merge their votes/accumulators. Catch it in debug.
+        #[cfg(debug_assertions)]
+        {
+            let mut seen = std::collections::HashSet::new();
+            for p in params.iter() {
+                assert!(
+                    seen.insert(p.name().to_string()),
+                    "duplicate parameter name '{}' — layer names must be unique \
+                     or their ParamStore state merges",
+                    p.name()
+                );
+            }
+        }
         let lr_b = self.bool_sched.map_or(self.lr_bool, |s| s.at(step));
         if let Some(s) = self.fp_sched {
             self.adam.lr = s.at(step);
         }
-        let bool_opt = BooleanOptimizer::new(lr_b);
-        let mut params = model.params();
-        let stats = bool_opt.step(&mut params);
-        self.adam.step(&mut params);
+        let stats = BooleanOptimizer::new(lr_b).step(params, &mut self.store);
+        self.adam.step(params, &mut self.store);
         stats
+    }
+}
+
+/// Classifier trainer: owns the dual-optimizer setup (and through it the
+/// parameter store).
+pub struct ClassifierTrainer {
+    pub opt: DualOptimizer,
+}
+
+impl ClassifierTrainer {
+    pub fn new(cfg: &TrainConfig) -> Self {
+        ClassifierTrainer { opt: DualOptimizer::new(cfg) }
+    }
+
+    /// The central parameter store (for checkpointing / inspection).
+    pub fn store_mut(&mut self) -> &mut ParamStore {
+        &mut self.opt.store
+    }
+
+    /// One optimizer step on an already-accumulated model (votes filled by
+    /// the caller's backward pass into this trainer's store).
+    pub fn apply(&mut self, model: &mut Sequential, step: usize) -> FlipStats {
+        let mut params = model.params();
+        self.opt.apply(&mut params, step)
     }
 
     /// Full forward + loss + backward + step on one batch.
@@ -83,8 +123,8 @@ impl ClassifierTrainer {
     ) -> (f32, usize, FlipStats) {
         let logits = model.forward(x, true).expect_f32("trainer");
         let out = softmax_cross_entropy(&logits, labels);
-        model.zero_grads();
-        let _ = model.backward(out.grad);
+        self.opt.store.zero_grads();
+        let _ = model.backward(out.grad, &mut self.opt.store);
         let stats = self.apply(model, step);
         (out.loss, out.correct, stats)
     }

@@ -26,6 +26,21 @@
 //! ([`tensor::BitMatrix::xnor_threshold`]).
 
 #![deny(rustdoc::broken_intra_doc_links)]
+// Clippy runs in CI with `-D warnings` (see .github/workflows/ci.yml).
+// Three style lints are allowed crate-wide, with cause:
+// - `should_implement_trait`: `Tensor::add`/`sub` are borrowing value
+//   helpers (`&self, &T -> T`), deliberately NOT `std::ops` overloads —
+//   operator sugar on a heap tensor type invites accidental clones.
+// - `needless_range_loop`: the numeric kernels index several buffers per
+//   iteration with one computed index; rewriting as iterator chains
+//   obscures the (bounds-check-free) hot loops.
+// - `too_many_arguments`: conv/geometry constructors mirror the paper's
+//   explicit parameter lists (c_in, c_out, k, stride, pad, …).
+#![allow(
+    clippy::should_implement_trait,
+    clippy::needless_range_loop,
+    clippy::too_many_arguments
+)]
 
 pub mod baselines;
 pub mod config;

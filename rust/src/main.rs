@@ -10,7 +10,7 @@
 //!   info                               (build + feature + artifact status)
 
 use bold::config::TrainConfig;
-use bold::coordinator::{save_model, ClassifierTrainer, MetricLog, ParallelTrainer};
+use bold::coordinator::{save_training, ClassifierTrainer, MetricLog, ParallelTrainer};
 use bold::data::ImageDataset;
 use bold::energy::{network_energy, resnet18_shapes, vgg_small_shapes, Method};
 use bold::models::{boolean_mlp, resnet_boolean, vgg_small, MlpConfig, ResNetConfig, VggConfig, VggKind};
@@ -117,7 +117,10 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
                 });
                 let r = pt.fit(&train, &val, &cfg, true);
                 if let Some(p) = &ckpt {
-                    save_model(pt.leader(), p).map_err(|e| e.to_string())?;
+                    // training snapshot: weights + optimizer state (the
+                    // serving engine skips the optimizer records)
+                    save_training(&mut pt.replicas[0], &pt.opt.store, p)
+                        .map_err(|e| e.to_string())?;
                 }
                 r
             } else {
@@ -125,7 +128,7 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
                 let mut tr = ClassifierTrainer::new(&cfg);
                 let r = tr.fit(&mut model, &train, &val, &cfg, true);
                 if let Some(p) = &ckpt {
-                    save_model(&mut model, p).map_err(|e| e.to_string())?;
+                    save_training(&mut model, &tr.opt.store, p).map_err(|e| e.to_string())?;
                 }
                 r
             }
@@ -155,7 +158,7 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
             let mut tr = ClassifierTrainer::new(&cfg);
             let r = tr.fit(&mut model, &train, &val, &cfg, true);
             if let Some(p) = &ckpt {
-                save_model(&mut model, p).map_err(|e| e.to_string())?;
+                save_training(&mut model, &tr.opt.store, p).map_err(|e| e.to_string())?;
             }
             r
         }
@@ -174,7 +177,7 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
             let mut tr = ClassifierTrainer::new(&cfg);
             let r = tr.fit(&mut model, &train, &val, &cfg, true);
             if let Some(p) = &ckpt {
-                save_model(&mut model, p).map_err(|e| e.to_string())?;
+                save_training(&mut model, &tr.opt.store, p).map_err(|e| e.to_string())?;
             }
             r
         }

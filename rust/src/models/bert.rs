@@ -14,7 +14,7 @@
 
 use crate::nn::{
     softmax_cross_entropy, BackwardScale, BoolLinear, Layer, LayerNorm, Linear, LossOut,
-    ParamRef, ThresholdAct, Value,
+    ParamRef, ParamStore, ThresholdAct, Value,
 };
 use crate::tensor::Tensor;
 use crate::util::Rng;
@@ -140,21 +140,21 @@ impl EncoderLayer {
     }
 
     /// z: (N·L × d) downstream signal; returns signal w.r.t. the input h.
-    fn bwd(&mut self, z: &Tensor) -> Tensor {
+    fn bwd(&mut self, z: &Tensor, store: &mut ParamStore) -> Tensor {
         let cache = self.cache.take().expect("backward before forward");
         let (n, l, d) = (cache.n, cache.l, self.d);
         let scale = 1.0 / (d as f32).sqrt();
 
         // --- FFN sublayer backward (residual splits the signal) ---
-        let g_ff2 = self.ff2.backward(z.clone());
-        let g_mid = self.act_mid.backward(g_ff2);
-        let g_ff1 = self.ff1.backward(g_mid);
-        let g_a2 = self.act_ff.backward(g_ff1);
-        let g_h1 = z.add(&self.ln2.bwd(&g_a2));
+        let g_ff2 = self.ff2.backward(z.clone(), store);
+        let g_mid = self.act_mid.backward(g_ff2, store);
+        let g_ff1 = self.ff1.backward(g_mid, store);
+        let g_a2 = self.act_ff.backward(g_ff1, store);
+        let g_h1 = z.add(&self.ln2.bwd(&g_a2, store));
 
         // --- attention sublayer backward ---
-        let g_o = self.o.backward(g_h1.clone());
-        let g_ctx = self.act_o.backward(g_o);
+        let g_o = self.o.backward(g_h1.clone(), store);
+        let g_ctx = self.act_o.backward(g_o, store);
         let mut g_q = Tensor::zeros(&[n * l, d]);
         let mut g_k = Tensor::zeros(&[n * l, d]);
         let mut g_v = Tensor::zeros(&[n * l, d]);
@@ -185,11 +185,11 @@ impl EncoderLayer {
             g_k.data[span.clone()].copy_from_slice(&dk.data);
             g_v.data[span].copy_from_slice(&dv.data);
         }
-        let gq_in = self.q.backward(g_q);
-        let gk_in = self.k.backward(g_k);
-        let gv_in = self.v.backward(g_v);
-        let g_a = self.act_attn.backward(gq_in.add(&gk_in).add(&gv_in));
-        g_h1.add(&self.ln1.bwd(&g_a))
+        let gq_in = self.q.backward(g_q, store);
+        let gk_in = self.k.backward(g_k, store);
+        let gv_in = self.v.backward(g_v, store);
+        let g_a = self.act_attn.backward(gq_in.add(&gk_in).add(&gv_in), store);
+        g_h1.add(&self.ln1.bwd(&g_a, store))
     }
 
     fn params(&mut self) -> Vec<ParamRef<'_>> {
@@ -203,17 +203,6 @@ impl EncoderLayer {
         p.extend(self.ff2.params());
         p
     }
-
-    fn zero_grads(&mut self) {
-        self.ln1.zero_grads();
-        self.q.zero_grads();
-        self.k.zero_grads();
-        self.v.zero_grads();
-        self.o.zero_grads();
-        self.ln2.zero_grads();
-        self.ff1.zero_grads();
-        self.ff2.zero_grads();
-    }
 }
 
 /// Boolean BERT-mini for sequence classification.
@@ -221,8 +210,6 @@ pub struct BertMini {
     pub cfg: BertConfig,
     tok_emb: Tensor,
     pos_emb: Tensor,
-    g_tok: Tensor,
-    g_pos: Tensor,
     encoder: Vec<EncoderLayer>,
     ln_f: LayerNorm,
     head: Linear,
@@ -237,8 +224,6 @@ impl BertMini {
             cfg: cfg.clone(),
             tok_emb: Tensor::randn(&[cfg.vocab, d], 0.5, rng),
             pos_emb: Tensor::randn(&[cfg.max_len, d], 0.1, rng),
-            g_tok: Tensor::zeros(&[cfg.vocab, d]),
-            g_pos: Tensor::zeros(&[cfg.max_len, d]),
             encoder: (0..cfg.layers)
                 .map(|i| EncoderLayer::new(&format!("enc{i}"), cfg, rng))
                 .collect(),
@@ -279,29 +264,39 @@ impl BertMini {
         self.head.forward(Value::F32(pooled), train).expect_f32("head")
     }
 
-    /// Backward from logits gradient; accumulates all parameter signals.
-    pub fn backward(&mut self, g_logits: Tensor) {
+    /// Backward from logits gradient; accumulates all parameter signals
+    /// into `store`.
+    pub fn backward(&mut self, g_logits: Tensor, store: &mut ParamStore) {
         let (n, l) = self.cache_nl.expect("backward before forward");
         let d = self.cfg.d;
-        let g_pooled = self.head.backward(g_logits);
-        // un-pool: signal lands on token 0 of each sequence
+        let g_pooled = self.head.backward(g_logits, store);
+        // un-pool: signal lands on token 0 of every sequence
         let mut g_hn = Tensor::zeros(&[n * l, d]);
         for ni in 0..n {
             g_hn.data[ni * l * d..ni * l * d + d]
                 .copy_from_slice(&g_pooled.data[ni * d..(ni + 1) * d]);
         }
-        let mut g_h = self.ln_f.bwd(&g_hn);
+        let mut g_h = self.ln_f.bwd(&g_hn, store);
         for layer in self.encoder.iter_mut().rev() {
-            g_h = layer.bwd(&g_h);
+            g_h = layer.bwd(&g_h, store);
         }
-        // embedding scatter
+        // embedding scatter (in-place into the store's grad buffers)
         let tokens = self.cache_tokens.take().unwrap();
-        for (i, &t) in tokens.iter().enumerate() {
-            let pos = i % l;
-            for j in 0..d {
-                let g = g_h.data[i * d + j];
-                *self.g_tok.at2_mut(t, j) += g;
-                *self.g_pos.at2_mut(pos, j) += g;
+        {
+            let g_tok = store.slot_mut("tok_emb").grad_mut(&[self.cfg.vocab, d]);
+            for (i, &t) in tokens.iter().enumerate() {
+                for j in 0..d {
+                    *g_tok.at2_mut(t, j) += g_h.data[i * d + j];
+                }
+            }
+        }
+        {
+            let g_pos = store.slot_mut("pos_emb").grad_mut(&[self.cfg.max_len, d]);
+            for i in 0..tokens.len() {
+                let pos = i % l;
+                for j in 0..d {
+                    *g_pos.at2_mut(pos, j) += g_h.data[i * d + j];
+                }
             }
         }
     }
@@ -314,8 +309,8 @@ impl BertMini {
 
     pub fn params(&mut self) -> Vec<ParamRef<'_>> {
         let mut p = vec![
-            ParamRef::Real { name: "tok_emb".into(), w: &mut self.tok_emb, grad: &mut self.g_tok },
-            ParamRef::Real { name: "pos_emb".into(), w: &mut self.pos_emb, grad: &mut self.g_pos },
+            ParamRef::Real { name: "tok_emb".into(), w: &mut self.tok_emb },
+            ParamRef::Real { name: "pos_emb".into(), w: &mut self.pos_emb },
         ];
         for layer in self.encoder.iter_mut() {
             p.extend(layer.params());
@@ -323,16 +318,6 @@ impl BertMini {
         p.extend(self.ln_f.params());
         p.extend(self.head.params());
         p
-    }
-
-    pub fn zero_grads(&mut self) {
-        self.g_tok.scale_inplace(0.0);
-        self.g_pos.scale_inplace(0.0);
-        for layer in self.encoder.iter_mut() {
-            layer.zero_grads();
-        }
-        self.ln_f.zero_grads();
-        self.head.zero_grads();
     }
 }
 
@@ -349,7 +334,7 @@ mod tests {
         let tokens: Vec<usize> = (0..4 * 8).map(|i| i % 16).collect();
         let logits = bert.forward(&tokens, 4, 8, true);
         assert_eq!(logits.shape, vec![4, 3]);
-        bert.backward(Tensor::full(&[4, 3], 0.1));
+        bert.backward(Tensor::full(&[4, 3], 0.1), &mut ParamStore::new());
     }
 
     #[test]
@@ -360,6 +345,7 @@ mod tests {
         let mut bert = BertMini::new(&cfg, &mut rng);
         let boolopt = BooleanOptimizer::new(20.0);
         let mut adam = Adam::new(2e-3);
+        let mut store = ParamStore::new();
         let (n, l) = (16, 8);
         let mut make_batch = |rng: &mut Rng| {
             let mut toks = Vec::with_capacity(n * l);
@@ -381,11 +367,11 @@ mod tests {
             let (toks, labels) = make_batch(&mut rng);
             let logits = bert.forward(&toks, n, l, true);
             let out = softmax_cross_entropy(&logits, &labels);
-            bert.zero_grads();
-            bert.backward(out.grad.clone());
+            store.zero_grads();
+            bert.backward(out.grad.clone(), &mut store);
             let mut params = bert.params();
-            boolopt.step(&mut params);
-            adam.step(&mut params);
+            boolopt.step(&mut params, &mut store);
+            adam.step(&mut params, &mut store);
             if step == 0 {
                 first_loss = out.loss;
             }

@@ -140,7 +140,7 @@ mod tests {
             let x = Tensor::randn(&[1, 3, 8, 8], 0.3, &mut rng);
             let y = net.forward(Value::F32(x), true).expect_f32("t");
             assert_eq!(y.shape, vec![1, 3, 8 * scale, 8 * scale], "scale {scale}");
-            let g = net.backward(Tensor::full(&y.shape.clone(), 0.01));
+            let g = net.backward(Tensor::full(&y.shape.clone(), 0.01), &mut crate::nn::ParamStore::new());
             assert_eq!(g.shape, vec![1, 3, 8, 8]);
         }
     }

@@ -2,7 +2,7 @@
 //! upsampling (segmentation decoder). Both are pure permutations /
 //! replications with exact adjoint backwards.
 
-use crate::nn::{Layer, Value};
+use crate::nn::{Layer, ParamStore, Value};
 use crate::tensor::Tensor;
 
 /// Depth-to-space: (N, C·r², H, W) → (N, C, H·r, W·r) (EDSR upsampler).
@@ -78,7 +78,7 @@ impl Layer for PixelShuffle {
         Value::F32(self.shuffle(&t))
     }
 
-    fn backward(&mut self, z: Tensor) -> Tensor {
+    fn backward(&mut self, z: Tensor, _store: &mut ParamStore) -> Tensor {
         let dims = self.cache_dims.expect("backward before forward");
         self.unshuffle(&z, dims)
     }
@@ -124,7 +124,7 @@ impl Layer for UpsampleNearest {
         Value::F32(out)
     }
 
-    fn backward(&mut self, z: Tensor) -> Tensor {
+    fn backward(&mut self, z: Tensor, _store: &mut ParamStore) -> Tensor {
         let (n, c, h, w) = self.cache_dims.expect("backward before forward");
         let k = self.k;
         let mut g = Tensor::zeros(&[n, c, h, w]);
@@ -167,7 +167,7 @@ impl Layer for ScaleLayer {
         Value::F32(x.to_f32().scale(self.s))
     }
 
-    fn backward(&mut self, z: Tensor) -> Tensor {
+    fn backward(&mut self, z: Tensor, _store: &mut ParamStore) -> Tensor {
         z.scale(self.s)
     }
 
@@ -187,7 +187,7 @@ mod tests {
         let x = Tensor::from_vec(&[1, 2], vec![4.0, -8.0]);
         let y = s.forward(Value::F32(x), true).expect_f32("t");
         assert_eq!(y.data, vec![1.0, -2.0]);
-        let g = s.backward(Tensor::from_vec(&[1, 2], vec![1.0, 1.0]));
+        let g = s.backward(Tensor::from_vec(&[1, 2], vec![1.0, 1.0]), &mut ParamStore::new());
         assert_eq!(g.data, vec![0.25, 0.25]);
     }
 
@@ -199,7 +199,7 @@ mod tests {
         let y = ps.forward(Value::F32(x.clone()), true).expect_f32("t");
         assert_eq!(y.shape, vec![2, 2, 6, 6]);
         // backward is the exact inverse permutation
-        let g = ps.backward(y);
+        let g = ps.backward(y, &mut ParamStore::new());
         assert!(g.max_abs_diff(&x) < 1e-6);
     }
 
@@ -210,7 +210,7 @@ mod tests {
         let x = Tensor::randn(&[1, 9, 2, 2], 1.0, &mut rng);
         let y = ps.forward(Value::F32(x.clone()), true).expect_f32("t");
         let z = Tensor::randn(&y.shape, 1.0, &mut rng);
-        let g = ps.backward(z.clone());
+        let g = ps.backward(z.clone(), &mut ParamStore::new());
         let lhs: f32 = y.data.iter().zip(&z.data).map(|(a, b)| a * b).sum();
         let rhs: f32 = x.data.iter().zip(&g.data).map(|(a, b)| a * b).sum();
         assert!((lhs - rhs).abs() < 1e-3);
@@ -223,7 +223,7 @@ mod tests {
         let y = up.forward(Value::F32(x), true).expect_f32("t");
         assert_eq!(y.shape, vec![1, 1, 2, 4]);
         assert_eq!(y.data, vec![3.0, 3.0, 5.0, 5.0, 3.0, 3.0, 5.0, 5.0]);
-        let g = up.backward(Tensor::full(&[1, 1, 2, 4], 1.0));
+        let g = up.backward(Tensor::full(&[1, 1, 2, 4], 1.0), &mut ParamStore::new());
         assert_eq!(g.data, vec![4.0, 4.0]);
     }
 }

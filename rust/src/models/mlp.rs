@@ -67,7 +67,7 @@ mod tests {
         let x = Tensor::rand_pm1(&[8, 64], &mut rng);
         let y = net.forward(Value::bit_from_pm1(&x), true).expect_f32("t");
         assert_eq!(y.shape, vec![8, 4]);
-        let g = net.backward(Tensor::full(&[8, 4], 0.1));
+        let g = net.backward(Tensor::full(&[8, 4], 0.1), &mut crate::nn::ParamStore::new());
         assert_eq!(g.shape, vec![8, 64]);
     }
 

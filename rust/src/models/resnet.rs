@@ -144,7 +144,7 @@ mod tests {
         let x = Tensor::randn(&[2, 3, 16, 16], 1.0, &mut rng);
         let y = net.forward(Value::F32(x), true).expect_f32("t");
         assert_eq!(y.shape, vec![2, 10]);
-        let g = net.backward(Tensor::full(&[2, 10], 0.1));
+        let g = net.backward(Tensor::full(&[2, 10], 0.1), &mut crate::nn::ParamStore::new());
         assert_eq!(g.shape, vec![2, 3, 16, 16]);
     }
 

@@ -14,8 +14,8 @@
 
 use super::layers_extra::UpsampleNearest;
 use crate::nn::{
-    BackwardScale, BatchNorm2d, BoolConv2d, Conv2d, Layer, ParamRef, Residual, Sequential,
-    ThresholdAct, Value,
+    BackwardScale, BatchNorm2d, BoolConv2d, Conv2d, Layer, ParamRef, ParamStore, Residual,
+    Sequential, ThresholdAct, Value,
 };
 use crate::tensor::Tensor;
 use crate::util::Rng;
@@ -116,10 +116,10 @@ impl Layer for BoolAspp {
         Value::F32(out)
     }
 
-    fn backward(&mut self, z: Tensor) -> Tensor {
+    fn backward(&mut self, z: Tensor, store: &mut ParamStore) -> Tensor {
         let (n, c, h, w) = self.cache_dims.expect("backward before forward");
-        let g1 = self.branch1.backward(z.clone());
-        let g2 = self.branch2.backward(z.clone());
+        let g1 = self.branch1.backward(z.clone(), store);
+        let g2 = self.branch2.backward(z.clone(), store);
         // GAP branch backward: sum z over space → conv → bn → spread mean.
         let mut z_pooled = Tensor::zeros(&[n, c, 1, 1]);
         for ni in 0..n {
@@ -128,8 +128,8 @@ impl Layer for BoolAspp {
                 z_pooled.data[ni * c + ci] = z.data[plane..plane + h * w].iter().sum();
             }
         }
-        let g_conv = self.gap_conv.backward(z_pooled);
-        let g_bn = self.gap_bn.backward(g_conv);
+        let g_conv = self.gap_conv.backward(z_pooled, store);
+        let g_bn = self.gap_bn.backward(g_conv, store);
         let inv = 1.0 / (h * w) as f32;
         let mut g = g1.add(&g2);
         if !self.naive {
@@ -155,13 +155,6 @@ impl Layer for BoolAspp {
         v.extend(self.gap_bn.params());
         v.extend(self.gap_conv.params());
         v
-    }
-
-    fn zero_grads(&mut self) {
-        self.branch1.zero_grads();
-        self.branch2.zero_grads();
-        self.gap_bn.zero_grads();
-        self.gap_conv.zero_grads();
     }
 
     fn name(&self) -> String {
@@ -272,7 +265,7 @@ mod tests {
             let x = Tensor::randn(&[2, 3, 16, 16], 1.0, &mut rng);
             let y = net.forward(Value::F32(x), true).expect_f32("t");
             assert_eq!(y.shape, vec![2, 6, 16, 16], "naive={naive}");
-            let g = net.backward(Tensor::full(&y.shape.clone(), 0.01));
+            let g = net.backward(Tensor::full(&y.shape.clone(), 0.01), &mut ParamStore::new());
             assert_eq!(g.shape, vec![2, 3, 16, 16]);
         }
     }

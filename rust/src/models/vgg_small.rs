@@ -176,7 +176,7 @@ mod tests {
         let x = Tensor::randn(&[2, cfg.in_channels, cfg.hw, cfg.hw], 1.0, &mut rng);
         let y = net.forward(Value::F32(x), true).expect_f32("t");
         assert_eq!(y.shape, vec![2, cfg.classes]);
-        let g = net.backward(Tensor::full(&[2, cfg.classes], 0.1));
+        let g = net.backward(Tensor::full(&[2, cfg.classes], 0.1), &mut crate::nn::ParamStore::new());
         assert_eq!(g.shape, vec![2, cfg.in_channels, cfg.hw, cfg.hw]);
     }
 

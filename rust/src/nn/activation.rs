@@ -2,7 +2,7 @@
 //! Appendix C backprop re-weighting, input binarization, and plain ReLU
 //! for FP baselines.
 
-use super::{Layer, Value};
+use super::{Layer, ParamStore, Value};
 use crate::tensor::Tensor;
 
 /// Backward re-weighting through the step activation (Appendix C.1).
@@ -108,7 +108,7 @@ impl Layer for ThresholdAct {
         Value::bit_from_pm1(&y)
     }
 
-    fn backward(&mut self, z: Tensor) -> Tensor {
+    fn backward(&mut self, z: Tensor, _store: &mut ParamStore) -> Tensor {
         let s = self.cache_s.as_ref().expect("backward before forward");
         assert_eq!(z.shape, s.shape, "{}: z shape", self.name);
         let thr = self.tau + self.cache_shift;
@@ -156,7 +156,7 @@ impl Layer for Binarize {
         Value::bit_from_pm1(&t.sign_pm1())
     }
 
-    fn backward(&mut self, z: Tensor) -> Tensor {
+    fn backward(&mut self, z: Tensor, _store: &mut ParamStore) -> Tensor {
         z
     }
 
@@ -186,7 +186,7 @@ impl Layer for ReLU {
         Value::F32(t.map(|v| v.max(0.0)))
     }
 
-    fn backward(&mut self, z: Tensor) -> Tensor {
+    fn backward(&mut self, z: Tensor, _store: &mut ParamStore) -> Tensor {
         let mask = self.cache_mask.as_ref().expect("backward before forward");
         assert_eq!(mask.len(), z.len());
         Tensor {
@@ -219,7 +219,7 @@ mod tests {
         let mut a = ThresholdAct::new("act", 0.0, BackwardScale::TanhPrime { fanin });
         let s = Tensor::from_vec(&[1, 3], vec![0.0, 20.0, 200.0]);
         let _ = a.forward(Value::F32(s), true);
-        let g = a.backward(Tensor::full(&[1, 3], 1.0));
+        let g = a.backward(Tensor::full(&[1, 3], 1.0), &mut ParamStore::new());
         assert!((g.data[0] - 1.0).abs() < 1e-6, "at threshold, full signal");
         assert!(g.data[1] < g.data[0] && g.data[2] < g.data[1], "{:?}", g.data);
     }
@@ -252,7 +252,7 @@ mod tests {
         let x = Tensor::from_vec(&[1, 4], vec![-1.0, 2.0, -3.0, 4.0]);
         let y = r.forward(Value::F32(x), true).expect_f32("t");
         assert_eq!(y.data, vec![0.0, 2.0, 0.0, 4.0]);
-        let g = r.backward(Tensor::full(&[1, 4], 1.0));
+        let g = r.backward(Tensor::full(&[1, 4], 1.0), &mut ParamStore::new());
         assert_eq!(g.data, vec![0.0, 1.0, 0.0, 1.0]);
     }
 

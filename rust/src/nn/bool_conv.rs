@@ -7,11 +7,12 @@
 //! [`BitMatrix::xnor_gemm_masked`], the weight vote uses
 //! [`BitMatrix::backward_weight_masked`].
 
-use super::{Layer, ParamRef, Value};
+use super::{Layer, ParamRef, ParamStore, Value};
 use crate::tensor::{BitMatrix, Tensor};
 use crate::util::Rng;
 
-/// Boolean Conv2d (NCHW, square kernel).
+/// Boolean Conv2d (NCHW, square kernel). Weight votes are accumulated in
+/// the [`ParamStore`] under `<name>.weight`.
 pub struct BoolConv2d {
     pub c_in: usize,
     pub c_out: usize,
@@ -22,9 +23,6 @@ pub struct BoolConv2d {
     pub weights: BitMatrix,
     pub bool_bprop: bool,
     name: String,
-    grad: Tensor,
-    accum: Tensor,
-    ratio: f32,
     // caches
     cache_patches: Option<BitMatrix>,
     cache_mask: Option<BitMatrix>,
@@ -53,9 +51,6 @@ impl BoolConv2d {
             weights: BitMatrix::random(c_out, fanin, rng),
             bool_bprop: false,
             name: name.to_string(),
-            grad: Tensor::zeros(&[c_out, fanin]),
-            accum: Tensor::zeros(&[c_out, fanin]),
-            ratio: 1.0,
             cache_patches: None,
             cache_mask: None,
             cache_dims: None,
@@ -70,6 +65,11 @@ impl BoolConv2d {
 
     pub fn fanin(&self) -> usize {
         self.c_in * self.k * self.k
+    }
+
+    /// Store key of the weight parameter.
+    pub fn weight_key(&self) -> String {
+        format!("{}.weight", self.name)
     }
 
     /// Output spatial size for an input of size (h, w).
@@ -163,7 +163,7 @@ impl Layer for BoolConv2d {
         Value::F32(s)
     }
 
-    fn backward(&mut self, z: Tensor) -> Tensor {
+    fn backward(&mut self, z: Tensor, store: &mut ParamStore) -> Tensor {
         let (n, h, w, oh, ow) = self.cache_dims.expect("backward before forward");
         assert_eq!(z.shape, vec![n, self.c_out, oh, ow], "{}: bad z", self.name);
         let z_rows = z.nchw_to_rows(); // (N·OH·OW × Cout)
@@ -172,7 +172,7 @@ impl Layer for BoolConv2d {
 
         // Weight vote (Eq. 7): padded taps vote 0.
         let q_w = patches.backward_weight_masked(&z_rows, mask);
-        self.grad.add_inplace(&q_w);
+        store.accumulate(&self.weight_key(), &q_w);
 
         // Upstream signal (Eq. 8): scatter the patch-level signal back to
         // input positions. Padded lanes are dropped by col2im geometry —
@@ -186,17 +186,8 @@ impl Layer for BoolConv2d {
     }
 
     fn params(&mut self) -> Vec<ParamRef<'_>> {
-        vec![ParamRef::Bool {
-            name: format!("{}.weight", self.name),
-            bits: &mut self.weights,
-            grad: &mut self.grad,
-            accum: &mut self.accum,
-            ratio: &mut self.ratio,
-        }]
-    }
-
-    fn zero_grads(&mut self) {
-        self.grad.scale_inplace(0.0);
+        let name = self.weight_key();
+        vec![ParamRef::Bool { name, bits: &mut self.weights }]
     }
 
     fn name(&self) -> String {
@@ -234,24 +225,26 @@ mod tests {
     fn backward_weight_vote_matches_dense() {
         let mut rng = Rng::new(2);
         let mut conv = BoolConv2d::new("bc", 2, 4, 3, 1, 1, &mut rng);
+        let mut store = ParamStore::new();
         let x = Tensor::rand_pm1(&[2, 2, 6, 6], &mut rng);
         let _ = conv.forward(Value::bit_from_pm1(&x), true);
         let z = Tensor::randn(&[2, 4, 6, 6], 1.0, &mut rng);
-        let _ = conv.backward(z.clone());
+        let _ = conv.backward(z.clone(), &mut store);
         // dense: q_w = z_rowsᵀ @ cols (cols with 0 at padded taps)
         let cols = x.im2col(3, 1, 1);
         let q_ref = z.nchw_to_rows().matmul_at(&cols);
-        assert!(conv.grad.max_abs_diff(&q_ref) < 1e-3);
+        assert!(store.grad("bc.weight").unwrap().max_abs_diff(&q_ref) < 1e-3);
     }
 
     #[test]
     fn backward_input_matches_dense() {
         let mut rng = Rng::new(3);
         let mut conv = BoolConv2d::new("bc", 2, 3, 3, 1, 1, &mut rng);
+        let mut store = ParamStore::new();
         let x = Tensor::rand_pm1(&[1, 2, 5, 5], &mut rng);
         let _ = conv.forward(Value::bit_from_pm1(&x), true);
         let z = Tensor::randn(&[1, 3, 5, 5], 1.0, &mut rng);
-        let g = conv.backward(z.clone());
+        let g = conv.backward(z.clone(), &mut store);
         let g_cols = z.nchw_to_rows().matmul(&conv.weights.to_pm1());
         let g_ref = g_cols.col2im(1, 2, 5, 5, 3, 1, 1);
         assert!(g.max_abs_diff(&g_ref) < 1e-3);

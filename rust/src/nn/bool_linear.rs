@@ -1,7 +1,7 @@
 //! The paper's Boolean linear layer (Eq. 1/3) with xnor logic, native
 //! Boolean weights and the Boolean backward of §3.3 / Appendix B.
 
-use super::{Layer, ParamRef, Value};
+use super::{Layer, ParamRef, ParamStore, Value};
 use crate::tensor::{BitMatrix, Tensor};
 use crate::util::Rng;
 
@@ -14,7 +14,9 @@ use crate::util::Rng;
 /// Backward (Eqs. 4–8, Algorithms 6/7): with downstream signal `z`,
 /// `q_W = zᵀ e(X)` (vote over the batch) and `g_X = z e(W)` (vote over the
 /// outputs). With `bool_bprop`, `g_X` is sign-quantized before being passed
-/// upstream (the Boolean-signal case of Fig. 2).
+/// upstream (the Boolean-signal case of Fig. 2). Votes go to the
+/// [`ParamStore`] under `<name>.weight` / `<name>.bias`; the layer itself
+/// owns nothing but its packed weights.
 pub struct BoolLinear {
     pub n_in: usize,
     pub n_out: usize,
@@ -25,18 +27,7 @@ pub struct BoolLinear {
     /// Quantize the upstream signal to ±1 (Algorithm 6) instead of passing
     /// the real-valued vote (Algorithm 7).
     pub bool_bprop: bool,
-    /// Centre pre-activations at 0 (subtract fan-in/2 of the counting
-    /// form): with the ±1 embedding the sum is already 0-centred, so this
-    /// is an optional extra shift used with BN, kept for parity with the
-    /// paper's code sample (Algorithm 4).
     name: String,
-    // --- optimizer state (Boolean optimizer, Algorithm 8) ---
-    grad: Tensor,
-    accum: Tensor,
-    ratio: f32,
-    bias_grad: Tensor,
-    bias_accum: Tensor,
-    bias_ratio: f32,
     // --- cached forward inputs ---
     cache_bits: Option<BitMatrix>,
     cache_f32: Option<Tensor>,
@@ -51,12 +42,6 @@ impl BoolLinear {
             bias: None,
             bool_bprop: false,
             name: name.to_string(),
-            grad: Tensor::zeros(&[n_out, n_in]),
-            accum: Tensor::zeros(&[n_out, n_in]),
-            ratio: 1.0,
-            bias_grad: Tensor::zeros(&[1, n_out]),
-            bias_accum: Tensor::zeros(&[1, n_out]),
-            bias_ratio: 1.0,
             cache_bits: None,
             cache_f32: None,
         }
@@ -70,6 +55,16 @@ impl BoolLinear {
     pub fn with_bool_bprop(mut self) -> Self {
         self.bool_bprop = true;
         self
+    }
+
+    /// Store key of the weight parameter.
+    pub fn weight_key(&self) -> String {
+        format!("{}.weight", self.name)
+    }
+
+    /// Store key of the bias parameter.
+    pub fn bias_key(&self) -> String {
+        format!("{}.bias", self.name)
     }
 
     fn add_bias(&self, s: &mut Tensor) {
@@ -115,7 +110,7 @@ impl Layer for BoolLinear {
         Value::F32(s)
     }
 
-    fn backward(&mut self, z: Tensor) -> Tensor {
+    fn backward(&mut self, z: Tensor, store: &mut ParamStore) -> Tensor {
         assert_eq!(z.cols(), self.n_out, "{}: bad z", self.name);
         // Weight vote, Eq. (7): q_W += zᵀ · e(X).
         let q_w = if let Some(bits) = &self.cache_bits {
@@ -125,11 +120,11 @@ impl Layer for BoolLinear {
         } else {
             panic!("{}: backward before forward", self.name)
         };
-        self.grad.add_inplace(&q_w);
+        store.accumulate(&self.weight_key(), &q_w);
         // Bias vote: pairs with constant TRUE input ⇒ q_b = Σ_k z.
         if self.bias.is_some() {
             let qb = z.sum_rows().reshape(&[1, self.n_out]);
-            self.bias_grad.add_inplace(&qb);
+            store.accumulate(&self.bias_key(), &qb);
         }
         // Upstream signal, Eq. (8): g_X = z · e(W).
         let mut g_x = self.weights.backward_input(&z);
@@ -142,28 +137,12 @@ impl Layer for BoolLinear {
     }
 
     fn params(&mut self) -> Vec<ParamRef<'_>> {
-        let mut v = vec![ParamRef::Bool {
-            name: format!("{}.weight", self.name),
-            bits: &mut self.weights,
-            grad: &mut self.grad,
-            accum: &mut self.accum,
-            ratio: &mut self.ratio,
-        }];
+        let (weight_name, bias_name) = (self.weight_key(), self.bias_key());
+        let mut v = vec![ParamRef::Bool { name: weight_name, bits: &mut self.weights }];
         if let Some(b) = &mut self.bias {
-            v.push(ParamRef::Bool {
-                name: format!("{}.bias", self.name),
-                bits: b,
-                grad: &mut self.bias_grad,
-                accum: &mut self.bias_accum,
-                ratio: &mut self.bias_ratio,
-            });
+            v.push(ParamRef::Bool { name: bias_name, bits: b });
         }
         v
-    }
-
-    fn zero_grads(&mut self) {
-        self.grad.scale_inplace(0.0);
-        self.bias_grad.scale_inplace(0.0);
     }
 
     fn name(&self) -> String {
@@ -200,24 +179,26 @@ mod tests {
     fn backward_votes_match_reference() {
         let mut rng = Rng::new(3);
         let mut l = BoolLinear::new("bl", 48, 9, &mut rng);
+        let mut store = ParamStore::new();
         let x = Tensor::rand_pm1(&[6, 48], &mut rng);
         let _ = l.forward(Value::bit_from_pm1(&x), true);
         let z = Tensor::randn(&[6, 9], 1.0, &mut rng);
-        let g_x = l.backward(z.clone());
+        let g_x = l.backward(z.clone(), &mut store);
         // reference: g_X = z·e(W), q_W = zᵀ·e(X)
         let wd = l.weights.to_pm1();
         assert!(g_x.max_abs_diff(&z.matmul(&wd)) < 1e-4);
         let q_ref = z.matmul_at(&x);
-        assert!(l.grad.max_abs_diff(&q_ref) < 1e-4);
+        assert!(store.grad("bl.weight").unwrap().max_abs_diff(&q_ref) < 1e-4);
     }
 
     #[test]
     fn bool_bprop_signs_the_signal() {
         let mut rng = Rng::new(4);
         let mut l = BoolLinear::new("bl", 32, 8, &mut rng).with_bool_bprop();
+        let mut store = ParamStore::new();
         let x = Tensor::rand_pm1(&[3, 32], &mut rng);
         let _ = l.forward(Value::bit_from_pm1(&x), true);
-        let g = l.backward(Tensor::randn(&[3, 8], 1.0, &mut rng));
+        let g = l.backward(Tensor::randn(&[3, 8], 1.0, &mut rng), &mut store);
         assert!(g.data.iter().all(|&v| v == 1.0 || v == -1.0));
     }
 
@@ -237,18 +218,19 @@ mod tests {
     }
 
     #[test]
-    fn grads_accumulate_and_zero() {
+    fn grads_accumulate_in_store_and_zero() {
         let mut rng = Rng::new(6);
         let mut l = BoolLinear::new("bl", 16, 4, &mut rng);
+        let mut store = ParamStore::new();
         let x = Tensor::rand_pm1(&[2, 16], &mut rng);
         let _ = l.forward(Value::bit_from_pm1(&x), true);
         let z = Tensor::full(&[2, 4], 1.0);
-        l.backward(z.clone());
-        let g1 = l.grad.clone();
+        l.backward(z.clone(), &mut store);
+        let g1 = store.grad("bl.weight").unwrap().clone();
         let _ = l.forward(Value::bit_from_pm1(&x), true);
-        l.backward(z);
-        assert!(l.grad.max_abs_diff(&g1.scale(2.0)) < 1e-5);
-        l.zero_grads();
-        assert_eq!(l.grad.sum(), 0.0);
+        l.backward(z, &mut store);
+        assert!(store.grad("bl.weight").unwrap().max_abs_diff(&g1.scale(2.0)) < 1e-5);
+        store.zero_grads();
+        assert_eq!(store.grad("bl.weight").unwrap().sum(), 0.0);
     }
 }

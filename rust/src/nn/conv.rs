@@ -1,11 +1,12 @@
 //! Dense FP 2-D convolution (im2col + GEMM) with full backward — the
 //! substrate for FP baselines and the BNN baselines' latent-weight path.
 
-use super::{Layer, ParamRef, Value};
+use super::{Layer, ParamRef, ParamStore, Value};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 
-/// FP Conv2d (NCHW, square kernel). Weights stored (c_out × c_in·k·k).
+/// FP Conv2d (NCHW, square kernel). Weights stored (c_out × c_in·k·k);
+/// gradients accumulate in the [`ParamStore`] under `<name>.w`/`<name>.b`.
 pub struct Conv2d {
     pub c_in: usize,
     pub c_out: usize,
@@ -15,8 +16,6 @@ pub struct Conv2d {
     pub w: Tensor,
     pub b: Tensor,
     name: String,
-    gw: Tensor,
-    gb: Tensor,
     cache_cols: Option<Tensor>,
     cache_dims: Option<(usize, usize, usize, usize, usize)>,
 }
@@ -42,8 +41,6 @@ impl Conv2d {
             w: Tensor::randn(&[c_out, fanin], std, rng),
             b: Tensor::zeros(&[c_out]),
             name: name.to_string(),
-            gw: Tensor::zeros(&[c_out, fanin]),
-            gb: Tensor::zeros(&[c_out]),
             cache_cols: None,
             cache_dims: None,
         }
@@ -54,6 +51,16 @@ impl Conv2d {
             (h + 2 * self.pad - self.k) / self.stride + 1,
             (w + 2 * self.pad - self.k) / self.stride + 1,
         )
+    }
+
+    /// Store key of the weight parameter.
+    pub fn w_key(&self) -> String {
+        format!("{}.w", self.name)
+    }
+
+    /// Store key of the bias parameter.
+    pub fn b_key(&self) -> String {
+        format!("{}.b", self.name)
     }
 }
 
@@ -78,27 +85,23 @@ impl Layer for Conv2d {
         Value::F32(y)
     }
 
-    fn backward(&mut self, z: Tensor) -> Tensor {
+    fn backward(&mut self, z: Tensor, store: &mut ParamStore) -> Tensor {
         let (n, h, w, oh, ow) = self.cache_dims.expect("backward before forward");
         assert_eq!(z.shape, vec![n, self.c_out, oh, ow]);
         let z_rows = z.nchw_to_rows();
         let cols = self.cache_cols.as_ref().unwrap();
-        self.gw.add_inplace(&z_rows.matmul_at(cols));
-        self.gb.add_inplace(&z_rows.sum_rows());
+        store.accumulate(&self.w_key(), &z_rows.matmul_at(cols));
+        store.accumulate(&self.b_key(), &z_rows.sum_rows());
         let g_cols = z_rows.matmul(&self.w);
         g_cols.col2im(n, self.c_in, h, w, self.k, self.stride, self.pad)
     }
 
     fn params(&mut self) -> Vec<ParamRef<'_>> {
+        let (wk, bk) = (self.w_key(), self.b_key());
         vec![
-            ParamRef::Real { name: format!("{}.w", self.name), w: &mut self.w, grad: &mut self.gw },
-            ParamRef::Real { name: format!("{}.b", self.name), w: &mut self.b, grad: &mut self.gb },
+            ParamRef::Real { name: wk, w: &mut self.w },
+            ParamRef::Real { name: bk, w: &mut self.b },
         ]
-    }
-
-    fn zero_grads(&mut self) {
-        self.gw.scale_inplace(0.0);
-        self.gb.scale_inplace(0.0);
     }
 
     fn name(&self) -> String {
@@ -126,9 +129,11 @@ mod tests {
     fn gradient_matches_finite_difference() {
         let mut rng = Rng::new(2);
         let mut conv = Conv2d::new("c", 2, 3, 3, 1, 1, &mut rng);
+        let mut store = ParamStore::new();
         let x = Tensor::randn(&[2, 2, 4, 4], 1.0, &mut rng);
         let y = conv.forward(Value::F32(x.clone()), true).expect_f32("t");
-        let gx = conv.backward(y.clone()); // L = ||y||²/2
+        let gx = conv.backward(y.clone(), &mut store); // L = ||y||²/2
+        let gw = store.grad("c.w").unwrap().clone();
         let eps = 1e-3;
         let loss = |c: &mut Conv2d, x: &Tensor| -> f32 {
             let y = c.forward(Value::F32(x.clone()), false).expect_f32("t");
@@ -143,9 +148,9 @@ mod tests {
             *conv.w.at2_mut(i, j) = orig;
             let num = (lp - lm) / (2.0 * eps);
             assert!(
-                (num - conv.gw.at2(i, j)).abs() < 0.05 * num.abs().max(1.0),
+                (num - gw.at2(i, j)).abs() < 0.05 * num.abs().max(1.0),
                 "w[{i},{j}]: fd {num} vs analytic {}",
-                conv.gw.at2(i, j)
+                gw.at2(i, j)
             );
         }
         // input gradient spot check

@@ -1,19 +1,18 @@
 //! Dense FP linear layer (the paper keeps the first/last layers in FP and
 //! optimizes them with Adam — §4 Experimental Setup).
 
-use super::{Layer, ParamRef, Value};
+use super::{Layer, ParamRef, ParamStore, Value};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 
-/// y = x·Wᵀ + b with W (n_out × n_in) FP.
+/// y = x·Wᵀ + b with W (n_out × n_in) FP. Gradients accumulate in the
+/// [`ParamStore`] under `<name>.w` / `<name>.b`.
 pub struct Linear {
     pub n_in: usize,
     pub n_out: usize,
     pub w: Tensor,
     pub b: Tensor,
     name: String,
-    gw: Tensor,
-    gb: Tensor,
     cache_x: Option<Tensor>,
 }
 
@@ -26,10 +25,18 @@ impl Linear {
             w: Tensor::randn(&[n_out, n_in], std, rng),
             b: Tensor::zeros(&[n_out]),
             name: name.to_string(),
-            gw: Tensor::zeros(&[n_out, n_in]),
-            gb: Tensor::zeros(&[n_out]),
             cache_x: None,
         }
+    }
+
+    /// Store key of the weight parameter.
+    pub fn w_key(&self) -> String {
+        format!("{}.w", self.name)
+    }
+
+    /// Store key of the bias parameter.
+    pub fn b_key(&self) -> String {
+        format!("{}.b", self.name)
     }
 }
 
@@ -51,23 +58,19 @@ impl Layer for Linear {
         Value::F32(y)
     }
 
-    fn backward(&mut self, z: Tensor) -> Tensor {
+    fn backward(&mut self, z: Tensor, store: &mut ParamStore) -> Tensor {
         let x = self.cache_x.as_ref().expect("backward before forward");
-        self.gw.add_inplace(&z.matmul_at(x));
-        self.gb.add_inplace(&z.sum_rows());
+        store.accumulate(&self.w_key(), &z.matmul_at(x));
+        store.accumulate(&self.b_key(), &z.sum_rows());
         z.matmul(&self.w)
     }
 
     fn params(&mut self) -> Vec<ParamRef<'_>> {
+        let (wk, bk) = (self.w_key(), self.b_key());
         vec![
-            ParamRef::Real { name: format!("{}.w", self.name), w: &mut self.w, grad: &mut self.gw },
-            ParamRef::Real { name: format!("{}.b", self.name), w: &mut self.b, grad: &mut self.gb },
+            ParamRef::Real { name: wk, w: &mut self.w },
+            ParamRef::Real { name: bk, w: &mut self.b },
         ]
-    }
-
-    fn zero_grads(&mut self) {
-        self.gw.scale_inplace(0.0);
-        self.gb.scale_inplace(0.0);
     }
 
     fn name(&self) -> String {
@@ -84,11 +87,13 @@ mod tests {
     fn gradients_match_finite_difference() {
         let mut rng = Rng::new(1);
         let mut l = Linear::new("fc", 6, 3, &mut rng);
+        let mut store = ParamStore::new();
         let x = Tensor::randn(&[4, 6], 1.0, &mut rng);
         // scalar objective: sum of outputs squared / 2
         let y = l.forward(Value::F32(x.clone()), true).expect_f32("t");
         let z = y.clone(); // dL/dy = y for L = ||y||²/2
-        let gx = l.backward(z);
+        let gx = l.backward(z, &mut store);
+        let gw = store.grad("fc.w").unwrap().clone();
         let eps = 1e-3;
         let loss = |l: &mut Linear, x: &Tensor| -> f32 {
             let y = l.forward(Value::F32(x.clone()), false).expect_f32("t");
@@ -103,7 +108,7 @@ mod tests {
             let lm = loss(&mut l, &x);
             *l.w.at2_mut(i, j) = orig;
             let num = (lp - lm) / (2.0 * eps);
-            assert!((num - l.gw.at2(i, j)).abs() < 2e-2, "w[{i}{j}]: {num} vs {}", l.gw.at2(i, j));
+            assert!((num - gw.at2(i, j)).abs() < 2e-2, "w[{i}{j}]: {num} vs {}", gw.at2(i, j));
         }
         // dL/dx numeric spot check
         let mut x2 = x.clone();

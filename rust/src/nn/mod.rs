@@ -27,6 +27,7 @@ mod conv;
 mod linear;
 mod loss;
 mod norm;
+mod params;
 mod pool;
 mod sequential;
 mod value;
@@ -38,52 +39,12 @@ pub use conv::Conv2d;
 pub use linear::Linear;
 pub use loss::{l1_loss, mse_loss, softmax_cross_entropy, softmax_cross_entropy_nchw, LossOut};
 pub use norm::{BatchNorm1d, BatchNorm2d, LayerNorm};
+pub use params::{ParamId, ParamRef, ParamSlot, ParamStore};
 pub use pool::{AvgPool2dGlobal, MaxPool2d};
 pub use sequential::{Flatten, Residual, Sequential};
 pub use value::Value;
 
-use crate::tensor::{BitMatrix, Tensor};
-
-/// Mutable references to a layer's parameters, grouped by kind so the
-/// coordinator can route them to the right optimizer (Boolean optimizer
-/// for `Bool`, Adam for `Real` — the paper's §4 setup).
-pub enum ParamRef<'a> {
-    /// Native Boolean parameter: packed bits + vote buffer + accumulator
-    /// m_t (Eq. 10) + per-tensor unchanged-ratio β_t (Eq. 11).
-    Bool {
-        name: String,
-        bits: &'a mut BitMatrix,
-        grad: &'a mut Tensor,
-        accum: &'a mut Tensor,
-        ratio: &'a mut f32,
-    },
-    /// FP parameter with its gradient buffer.
-    Real {
-        name: String,
-        w: &'a mut Tensor,
-        grad: &'a mut Tensor,
-    },
-}
-
-impl ParamRef<'_> {
-    pub fn name(&self) -> &str {
-        match self {
-            ParamRef::Bool { name, .. } => name,
-            ParamRef::Real { name, .. } => name,
-        }
-    }
-
-    pub fn len(&self) -> usize {
-        match self {
-            ParamRef::Bool { bits, .. } => bits.rows * bits.cols,
-            ParamRef::Real { w, .. } => w.len(),
-        }
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-}
+use crate::tensor::Tensor;
 
 /// A trainable layer. `forward` caches whatever `backward` needs; the
 /// trainer guarantees the backward call matches the latest forward.
@@ -93,17 +54,16 @@ pub trait Layer: Send {
     fn forward(&mut self, x: Value, train: bool) -> Value;
 
     /// Backward pass: takes the downstream signal w.r.t. this layer's
-    /// output, accumulates parameter votes/gradients, returns the signal
-    /// w.r.t. this layer's input.
-    fn backward(&mut self, z: Tensor) -> Tensor;
+    /// output, accumulates parameter votes/gradients into `store` (under
+    /// the same names that [`Layer::params`] reports), returns the signal
+    /// w.r.t. this layer's input. The trainer zeroes the store's grads
+    /// once per step ([`ParamStore::zero_grads`]) before calling this.
+    fn backward(&mut self, z: Tensor, store: &mut ParamStore) -> Tensor;
 
     /// Parameter references for the optimizers (stable order).
     fn params(&mut self) -> Vec<ParamRef<'_>> {
         Vec::new()
     }
-
-    /// Reset accumulated votes/gradients (before each step).
-    fn zero_grads(&mut self) {}
 
     /// Human-readable name for logs and checkpoints.
     fn name(&self) -> String;

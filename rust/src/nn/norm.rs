@@ -2,17 +2,17 @@
 //! optionally integrates into Boolean models ("B⊕LD with BN", Table 2).
 //! Full training backward; running stats for eval.
 
-use super::{Layer, ParamRef, Value};
+use super::{Layer, ParamRef, ParamStore, Value};
 use crate::tensor::Tensor;
 
 /// Shared BN core operating on a (rows × features) view, where `rows`
-/// aggregates every dimension that is normalized over.
+/// aggregates every dimension that is normalized over. Parameter
+/// gradients go to the [`ParamStore`] under `<name>.gamma`/`<name>.beta`.
 struct BnCore {
+    name: String,
     features: usize,
     gamma: Tensor,
     beta: Tensor,
-    g_gamma: Tensor,
-    g_beta: Tensor,
     running_mean: Vec<f32>,
     running_var: Vec<f32>,
     momentum: f32,
@@ -23,13 +23,18 @@ struct BnCore {
 }
 
 impl BnCore {
-    fn new(features: usize) -> Self {
+    /// Store/buffer key: `<layer name>.<suffix>` — the one place the key
+    /// is built (backward, params and buffers all go through it).
+    fn key(&self, suffix: &str) -> String {
+        format!("{}.{}", self.name, suffix)
+    }
+
+    fn new(name: &str, features: usize) -> Self {
         BnCore {
+            name: name.to_string(),
             features,
             gamma: Tensor::full(&[features], 1.0),
             beta: Tensor::zeros(&[features]),
-            g_gamma: Tensor::zeros(&[features]),
-            g_beta: Tensor::zeros(&[features]),
             running_mean: vec![0.0; features],
             running_var: vec![1.0; features],
             momentum: 0.1,
@@ -94,7 +99,7 @@ impl BnCore {
     }
 
     /// Standard BN backward over the (rows × features) view.
-    fn backward(&mut self, z: &Tensor) -> Tensor {
+    fn backward(&mut self, z: &Tensor, store: &mut ParamStore) -> Tensor {
         let xhat = self.xhat.as_ref().expect("backward before forward");
         let inv_std = self.inv_std.as_ref().unwrap();
         let (r, f) = (z.rows(), z.cols());
@@ -107,10 +112,8 @@ impl BnCore {
                 sum_zh[j] += z.at2(i, j) * xhat.at2(i, j);
             }
         }
-        for j in 0..f {
-            self.g_beta.data[j] += sum_z[j];
-            self.g_gamma.data[j] += sum_zh[j];
-        }
+        store.accumulate(&self.key("beta"), &Tensor::from_vec(&[f], sum_z.clone()));
+        store.accumulate(&self.key("gamma"), &Tensor::from_vec(&[f], sum_zh.clone()));
         let mut gx = Tensor::zeros(&[r, f]);
         for i in 0..r {
             for j in 0..f {
@@ -122,6 +125,19 @@ impl BnCore {
         }
         gx
     }
+
+    fn params(&mut self) -> Vec<ParamRef<'_>> {
+        let (gk, bk) = (self.key("gamma"), self.key("beta"));
+        vec![
+            ParamRef::Real { name: gk, w: &mut self.gamma },
+            ParamRef::Real { name: bk, w: &mut self.beta },
+        ]
+    }
+
+    fn buffers(&mut self) -> Vec<(String, &mut Vec<f32>)> {
+        let (mk, vk) = (self.key("running_mean"), self.key("running_var"));
+        vec![(mk, &mut self.running_mean), (vk, &mut self.running_var)]
+    }
 }
 
 /// BatchNorm over the feature dimension of a (batch × features) tensor.
@@ -132,16 +148,7 @@ pub struct BatchNorm1d {
 
 impl BatchNorm1d {
     pub fn new(name: &str, features: usize) -> Self {
-        BatchNorm1d { core: BnCore::new(features), name: name.to_string() }
-    }
-}
-
-impl BatchNorm1d {
-    fn core_buffers(&mut self) -> Vec<(String, &mut Vec<f32>)> {
-        vec![
-            (format!("{}.running_mean", self.name), &mut self.core.running_mean),
-            (format!("{}.running_var", self.name), &mut self.core.running_var),
-        ]
+        BatchNorm1d { core: BnCore::new(name, features), name: name.to_string() }
     }
 }
 
@@ -151,32 +158,16 @@ impl Layer for BatchNorm1d {
         Value::F32(self.core.forward(&t, train))
     }
 
-    fn backward(&mut self, z: Tensor) -> Tensor {
-        self.core.backward(&z)
+    fn backward(&mut self, z: Tensor, store: &mut ParamStore) -> Tensor {
+        self.core.backward(&z, store)
     }
 
     fn params(&mut self) -> Vec<ParamRef<'_>> {
-        vec![
-            ParamRef::Real {
-                name: format!("{}.gamma", self.name),
-                w: &mut self.core.gamma,
-                grad: &mut self.core.g_gamma,
-            },
-            ParamRef::Real {
-                name: format!("{}.beta", self.name),
-                w: &mut self.core.beta,
-                grad: &mut self.core.g_beta,
-            },
-        ]
-    }
-
-    fn zero_grads(&mut self) {
-        self.core.g_gamma.scale_inplace(0.0);
-        self.core.g_beta.scale_inplace(0.0);
+        self.core.params()
     }
 
     fn buffers(&mut self) -> Vec<(String, &mut Vec<f32>)> {
-        self.core_buffers()
+        self.core.buffers()
     }
 
     fn name(&self) -> String {
@@ -193,16 +184,7 @@ pub struct BatchNorm2d {
 
 impl BatchNorm2d {
     pub fn new(name: &str, channels: usize) -> Self {
-        BatchNorm2d { core: BnCore::new(channels), name: name.to_string(), cache_dims: None }
-    }
-}
-
-impl BatchNorm2d {
-    fn core_buffers(&mut self) -> Vec<(String, &mut Vec<f32>)> {
-        vec![
-            (format!("{}.running_mean", self.name), &mut self.core.running_mean),
-            (format!("{}.running_var", self.name), &mut self.core.running_var),
-        ]
+        BatchNorm2d { core: BnCore::new(name, channels), name: name.to_string(), cache_dims: None }
     }
 }
 
@@ -216,34 +198,18 @@ impl Layer for BatchNorm2d {
         Value::F32(out.rows_to_nchw(n, c, h, w))
     }
 
-    fn backward(&mut self, z: Tensor) -> Tensor {
+    fn backward(&mut self, z: Tensor, store: &mut ParamStore) -> Tensor {
         let (n, c, h, w) = self.cache_dims.expect("backward before forward");
-        let gz = self.core.backward(&z.nchw_to_rows());
+        let gz = self.core.backward(&z.nchw_to_rows(), store);
         gz.rows_to_nchw(n, c, h, w)
     }
 
     fn params(&mut self) -> Vec<ParamRef<'_>> {
-        vec![
-            ParamRef::Real {
-                name: format!("{}.gamma", self.name),
-                w: &mut self.core.gamma,
-                grad: &mut self.core.g_gamma,
-            },
-            ParamRef::Real {
-                name: format!("{}.beta", self.name),
-                w: &mut self.core.beta,
-                grad: &mut self.core.g_beta,
-            },
-        ]
-    }
-
-    fn zero_grads(&mut self) {
-        self.core.g_gamma.scale_inplace(0.0);
-        self.core.g_beta.scale_inplace(0.0);
+        self.core.params()
     }
 
     fn buffers(&mut self) -> Vec<(String, &mut Vec<f32>)> {
-        self.core_buffers()
+        self.core.buffers()
     }
 
     fn name(&self) -> String {
@@ -257,8 +223,6 @@ pub struct LayerNorm {
     pub features: usize,
     pub gamma: Tensor,
     pub beta: Tensor,
-    g_gamma: Tensor,
-    g_beta: Tensor,
     eps: f32,
     name: String,
     cache: Option<(Tensor, Vec<f32>)>, // (xhat, inv_std per row)
@@ -270,12 +234,15 @@ impl LayerNorm {
             features,
             gamma: Tensor::full(&[features], 1.0),
             beta: Tensor::zeros(&[features]),
-            g_gamma: Tensor::zeros(&[features]),
-            g_beta: Tensor::zeros(&[features]),
             eps: 1e-5,
             name: name.to_string(),
             cache: None,
         }
+    }
+
+    /// Store key: `<layer name>.<suffix>` (single source of truth).
+    fn key(&self, suffix: &str) -> String {
+        format!("{}.{}", self.name, suffix)
     }
 
     /// Forward on a (rows × features) tensor.
@@ -304,11 +271,13 @@ impl LayerNorm {
     }
 
     /// Backward on a (rows × features) signal.
-    pub fn bwd(&mut self, z: &Tensor) -> Tensor {
+    pub fn bwd(&mut self, z: &Tensor, store: &mut ParamStore) -> Tensor {
         let (xhat, inv_stds) = self.cache.as_ref().expect("backward before forward");
         let (r, f) = (z.rows(), z.cols());
         let fn_ = f as f32;
         let mut gx = Tensor::zeros(&[r, f]);
+        let mut g_beta = vec![0.0f32; f];
+        let mut g_gamma = vec![0.0f32; f];
         for i in 0..r {
             let mut sum_z = 0.0f32;
             let mut sum_zh = 0.0f32;
@@ -316,8 +285,8 @@ impl LayerNorm {
                 let zg = z.at2(i, j) * self.gamma.data[j];
                 sum_z += zg;
                 sum_zh += zg * xhat.at2(i, j);
-                self.g_beta.data[j] += z.at2(i, j);
-                self.g_gamma.data[j] += z.at2(i, j) * xhat.at2(i, j);
+                g_beta[j] += z.at2(i, j);
+                g_gamma[j] += z.at2(i, j) * xhat.at2(i, j);
             }
             for j in 0..f {
                 let zg = z.at2(i, j) * self.gamma.data[j];
@@ -325,27 +294,17 @@ impl LayerNorm {
                     inv_stds[i] * (zg - sum_z / fn_ - xhat.at2(i, j) * sum_zh / fn_);
             }
         }
+        store.accumulate(&self.key("beta"), &Tensor::from_vec(&[f], g_beta));
+        store.accumulate(&self.key("gamma"), &Tensor::from_vec(&[f], g_gamma));
         gx
     }
 
     pub fn params(&mut self) -> Vec<ParamRef<'_>> {
+        let (gk, bk) = (self.key("gamma"), self.key("beta"));
         vec![
-            ParamRef::Real {
-                name: format!("{}.gamma", self.name),
-                w: &mut self.gamma,
-                grad: &mut self.g_gamma,
-            },
-            ParamRef::Real {
-                name: format!("{}.beta", self.name),
-                w: &mut self.beta,
-                grad: &mut self.g_beta,
-            },
+            ParamRef::Real { name: gk, w: &mut self.gamma },
+            ParamRef::Real { name: bk, w: &mut self.beta },
         ]
-    }
-
-    pub fn zero_grads(&mut self) {
-        self.g_gamma.scale_inplace(0.0);
-        self.g_beta.scale_inplace(0.0);
     }
 }
 
@@ -373,9 +332,10 @@ mod tests {
     fn layernorm_backward_fd() {
         let mut rng = Rng::new(10);
         let mut ln = LayerNorm::new("ln", 5);
+        let mut store = ParamStore::new();
         let x = Tensor::randn(&[3, 5], 1.0, &mut rng);
         let y = ln.fwd(&x, true);
-        let gx = ln.bwd(&y); // L = ||y||²/2
+        let gx = ln.bwd(&y, &mut store); // L = ||y||²/2
         let eps = 1e-3;
         let loss = |ln: &mut LayerNorm, x: &Tensor| -> f32 {
             let y = ln.fwd(x, true);
@@ -412,9 +372,10 @@ mod tests {
     fn backward_matches_finite_difference() {
         let mut rng = Rng::new(2);
         let mut bn = BatchNorm1d::new("bn", 3);
+        let mut store = ParamStore::new();
         let x = Tensor::randn(&[8, 3], 1.0, &mut rng);
         let y = bn.forward(Value::F32(x.clone()), true).expect_f32("t");
-        let gx = bn.backward(y.clone()); // L = ||y||²/2
+        let gx = bn.backward(y.clone(), &mut store); // L = ||y||²/2
         let eps = 1e-3;
         let loss = |bn: &mut BatchNorm1d, x: &Tensor| -> f32 {
             let y = bn.forward(Value::F32(x.clone()), true).expect_f32("t");

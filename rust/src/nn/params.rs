@@ -1,0 +1,277 @@
+//! Central parameter store: ONE owner for every piece of trainable state
+//! that is not the weight itself.
+//!
+//! Layers own their weights (packed [`BitMatrix`] bits or FP [`Tensor`]s)
+//! and nothing else; everything the optimizers need across steps lives
+//! here, keyed by the stable parameter name that [`super::Layer::params`]
+//! reports:
+//!
+//! - the per-step vote/gradient buffer (Eq. 7 aggregation target),
+//! - the Boolean accumulator m (Eq. 10) and per-tensor unchanged-ratio
+//!   β (Eq. 11) consumed by [`crate::optim::BooleanOptimizer`],
+//! - the Adam moments (and shared timestep) for FP parameters.
+//!
+//! Centralizing state buys three things the per-layer fields could not
+//! (DESIGN.md §Parameter-Store): worker vote aggregation is a plain
+//! store-to-store add, checkpointing optimizer state for bit-exact resume
+//! is one serialization site, and the optimizer step can walk flat slices
+//! instead of chasing per-layer references.
+
+use crate::tensor::{BitMatrix, Tensor};
+use std::collections::HashMap;
+
+/// Mutable references to a layer's parameters, grouped by kind so the
+/// coordinator can route them to the right optimizer (Boolean optimizer
+/// for `Bool`, Adam for `Real` — the paper's §4 setup). Weights only:
+/// optimizer state lives in the [`ParamStore`] under the same name.
+pub enum ParamRef<'a> {
+    /// Native Boolean parameter: packed ±1 bits.
+    Bool { name: String, bits: &'a mut BitMatrix },
+    /// FP parameter.
+    Real { name: String, w: &'a mut Tensor },
+}
+
+impl ParamRef<'_> {
+    pub fn name(&self) -> &str {
+        match self {
+            ParamRef::Bool { name, .. } => name,
+            ParamRef::Real { name, .. } => name,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            ParamRef::Bool { bits, .. } => bits.rows * bits.cols,
+            ParamRef::Real { w, .. } => w.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Stable handle for a registered parameter (index into the store's slot
+/// table; never invalidated while the store lives).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ParamId(pub usize);
+
+/// Per-parameter optimizer state. Buffers start empty and are sized on
+/// first use, so a store never allocates for parameters that are not
+/// trained (e.g. frozen Boolean projections in the ablation runs).
+#[derive(Debug, Clone)]
+pub struct ParamSlot {
+    /// Vote buffer (Boolean params, Eq. 7) / gradient (FP params).
+    pub grad: Tensor,
+    /// Boolean accumulator m_t (Eq. 10).
+    pub accum: Tensor,
+    /// Per-tensor unchanged-ratio β_t (Eq. 11); starts at 1.
+    pub ratio: f32,
+    /// Adam first moment (FP params).
+    pub adam_m: Vec<f32>,
+    /// Adam second moment (FP params).
+    pub adam_v: Vec<f32>,
+}
+
+impl ParamSlot {
+    fn new() -> Self {
+        ParamSlot {
+            grad: Tensor::zeros(&[0]),
+            accum: Tensor::zeros(&[0]),
+            ratio: 1.0,
+            adam_m: Vec::new(),
+            adam_v: Vec::new(),
+        }
+    }
+
+    /// Grad buffer shaped like `shape`, allocating zeros on first touch.
+    pub fn grad_mut(&mut self, shape: &[usize]) -> &mut Tensor {
+        if self.grad.is_empty() {
+            self.grad = Tensor::zeros(shape);
+        }
+        debug_assert_eq!(self.grad.len(), shape.iter().product::<usize>());
+        &mut self.grad
+    }
+
+    /// Accumulator sized to `len` elements (flat), allocating on first use.
+    pub fn accum_mut(&mut self, len: usize) -> &mut Tensor {
+        if self.accum.is_empty() && len > 0 {
+            self.accum = Tensor::zeros(&[len]);
+        }
+        assert_eq!(self.accum.len(), len, "accumulator changed size");
+        &mut self.accum
+    }
+
+    /// Adam moment vectors sized to `len` (allocated zeroed on first use).
+    pub fn adam_mut(&mut self, len: usize) -> (&mut Vec<f32>, &mut Vec<f32>) {
+        if self.adam_m.is_empty() && len > 0 {
+            self.adam_m = vec![0.0; len];
+            self.adam_v = vec![0.0; len];
+        }
+        assert_eq!(self.adam_m.len(), len, "adam state changed size");
+        (&mut self.adam_m, &mut self.adam_v)
+    }
+}
+
+/// The central parameter-state store (see module docs).
+///
+/// ```
+/// use bold::nn::ParamStore;
+/// use bold::tensor::Tensor;
+///
+/// let mut store = ParamStore::new();
+/// store.accumulate("fc.w", &Tensor::from_vec(&[1, 2], vec![1.0, 2.0]));
+/// store.accumulate("fc.w", &Tensor::from_vec(&[1, 2], vec![1.0, 2.0]));
+/// assert_eq!(store.grad("fc.w").unwrap().data, vec![2.0, 4.0]);
+/// store.zero_grads();
+/// assert_eq!(store.grad("fc.w").unwrap().data, vec![0.0, 0.0]);
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct ParamStore {
+    names: Vec<String>,
+    index: HashMap<String, usize>,
+    slots: Vec<ParamSlot>,
+    /// Shared Adam timestep (bias-correction t); serialized for resume.
+    pub adam_t: u64,
+}
+
+impl ParamStore {
+    pub fn new() -> Self {
+        ParamStore { names: Vec::new(), index: HashMap::new(), slots: Vec::new(), adam_t: 0 }
+    }
+
+    /// Number of registered parameters.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Register `name` (idempotent) and return its stable id.
+    pub fn register(&mut self, name: &str) -> ParamId {
+        if let Some(&i) = self.index.get(name) {
+            return ParamId(i);
+        }
+        let i = self.slots.len();
+        self.names.push(name.to_string());
+        self.index.insert(name.to_string(), i);
+        self.slots.push(ParamSlot::new());
+        ParamId(i)
+    }
+
+    /// Name of a registered parameter.
+    pub fn name(&self, id: ParamId) -> &str {
+        &self.names[id.0]
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.names.iter().map(|s| s.as_str())
+    }
+
+    /// Slot by name, if registered.
+    pub fn slot(&self, name: &str) -> Option<&ParamSlot> {
+        self.index.get(name).map(|&i| &self.slots[i])
+    }
+
+    /// Slot by name, registering on first touch.
+    pub fn slot_mut(&mut self, name: &str) -> &mut ParamSlot {
+        let id = self.register(name);
+        &mut self.slots[id.0]
+    }
+
+    /// Slot by id.
+    pub fn slot_by_id_mut(&mut self, id: ParamId) -> &mut ParamSlot {
+        &mut self.slots[id.0]
+    }
+
+    /// grad[name] += delta (registering and zero-initializing on first
+    /// touch). This is the one call every layer backward makes.
+    pub fn accumulate(&mut self, name: &str, delta: &Tensor) {
+        let slot = self.slot_mut(name);
+        if slot.grad.is_empty() {
+            slot.grad = delta.clone();
+        } else {
+            slot.grad.add_inplace(delta);
+        }
+    }
+
+    /// The accumulated vote/gradient for `name`, if any.
+    pub fn grad(&self, name: &str) -> Option<&Tensor> {
+        self.slot(name).filter(|s| !s.grad.is_empty()).map(|s| &s.grad)
+    }
+
+    /// Zero every grad buffer (start of a step). Allocations are kept.
+    pub fn zero_grads(&mut self) {
+        for s in self.slots.iter_mut() {
+            s.grad.scale_inplace(0.0);
+        }
+    }
+
+    /// Vote aggregation (Appendix D.1.1): add every grad buffer of
+    /// `other` into this store. Because Eq. 7 votes are additive over
+    /// samples, summing worker stores is exactly the big-batch step.
+    pub fn add_grads_from(&mut self, other: &ParamStore) {
+        for (name, slot) in other.names.iter().zip(&other.slots) {
+            if !slot.grad.is_empty() {
+                self.accumulate(name, &slot.grad);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_is_idempotent_and_stable() {
+        let mut s = ParamStore::new();
+        let a = s.register("a");
+        let b = s.register("b");
+        assert_eq!(s.register("a"), a);
+        assert_ne!(a, b);
+        assert_eq!(s.name(a), "a");
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn accumulate_sums_and_zero_keeps_allocation() {
+        let mut s = ParamStore::new();
+        let d = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        s.accumulate("w", &d);
+        s.accumulate("w", &d);
+        assert_eq!(s.grad("w").unwrap().data, vec![2.0, 4.0, 6.0, 8.0]);
+        s.zero_grads();
+        // zeroed but still shaped (and `grad()` hides nothing: len > 0)
+        assert_eq!(s.grad("w").unwrap().len(), 4);
+        assert_eq!(s.grad("w").unwrap().sum(), 0.0);
+    }
+
+    #[test]
+    fn add_grads_from_is_vote_addition() {
+        let mut a = ParamStore::new();
+        let mut b = ParamStore::new();
+        a.accumulate("w", &Tensor::from_vec(&[2], vec![1.0, -1.0]));
+        b.accumulate("w", &Tensor::from_vec(&[2], vec![0.5, 2.0]));
+        b.accumulate("only_b", &Tensor::from_vec(&[1], vec![7.0]));
+        a.add_grads_from(&b);
+        assert_eq!(a.grad("w").unwrap().data, vec![1.5, 1.0]);
+        assert_eq!(a.grad("only_b").unwrap().data, vec![7.0]);
+    }
+
+    #[test]
+    fn slots_lazily_size_their_buffers() {
+        let mut s = ParamStore::new();
+        let slot = s.slot_mut("w");
+        assert!(slot.grad.is_empty());
+        slot.accum_mut(8);
+        assert_eq!(slot.accum.len(), 8);
+        let (m, v) = slot.adam_mut(4);
+        assert_eq!(m.len(), 4);
+        assert_eq!(v.len(), 4);
+        assert_eq!(slot.ratio, 1.0);
+    }
+}

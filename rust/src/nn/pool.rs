@@ -2,7 +2,7 @@
 //! the threshold activation, matching the paper's Appendix C Eq. (44)
 //! pipeline (Conv → MP → tanh'-scaled activation).
 
-use super::{Layer, Value};
+use super::{Layer, ParamStore, Value};
 use crate::tensor::Tensor;
 
 /// 2×2 (or k×k) max pooling with stride = k on NCHW f32 tensors.
@@ -58,7 +58,7 @@ impl Layer for MaxPool2d {
         Value::F32(out)
     }
 
-    fn backward(&mut self, z: Tensor) -> Tensor {
+    fn backward(&mut self, z: Tensor, _store: &mut ParamStore) -> Tensor {
         let argmax = self.cache_argmax.as_ref().expect("backward before forward");
         let (n, c, h, w) = self.cache_dims.unwrap();
         let mut g = Tensor::zeros(&[n, c, h, w]);
@@ -104,7 +104,7 @@ impl Layer for AvgPool2dGlobal {
         Value::F32(out)
     }
 
-    fn backward(&mut self, z: Tensor) -> Tensor {
+    fn backward(&mut self, z: Tensor, _store: &mut ParamStore) -> Tensor {
         let (n, c, h, w) = self.cache_dims.expect("backward before forward");
         let inv = 1.0 / (h * w) as f32;
         let mut g = Tensor::zeros(&[n, c, h, w]);
@@ -150,7 +150,7 @@ mod tests {
             vec![1.0, 9.0, 3.0, 4.0],
         );
         let _ = p.forward(Value::F32(x), true);
-        let g = p.backward(Tensor::from_vec(&[1, 1, 1, 1], vec![5.0]));
+        let g = p.backward(Tensor::from_vec(&[1, 1, 1, 1], vec![5.0]), &mut ParamStore::new());
         assert_eq!(g.data, vec![0.0, 5.0, 0.0, 0.0]);
     }
 
@@ -160,7 +160,7 @@ mod tests {
         let mut p = MaxPool2d::new("mp", 2);
         let x = Tensor::full(&[1, 1, 2, 2], 1.0);
         let _ = p.forward(Value::F32(x), true);
-        let g = p.backward(Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]));
+        let g = p.backward(Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]), &mut ParamStore::new());
         assert_eq!(g.sum(), 1.0);
     }
 
@@ -175,7 +175,7 @@ mod tests {
         let plane = &x.data[16..32];
         let m = plane.iter().sum::<f32>() / 16.0;
         assert!((y.at2(0, 1) - m).abs() < 1e-5);
-        let g = p.backward(Tensor::full(&[2, 3], 16.0));
+        let g = p.backward(Tensor::full(&[2, 3], 16.0), &mut ParamStore::new());
         assert!(g.data.iter().all(|&v| (v - 1.0).abs() < 1e-6));
     }
 }

@@ -2,7 +2,7 @@
 //! the Boolean ResNet/EDSR architectures (paper Appendix D.1.3 "Block I":
 //! both paths end on integer pre-activations, summed before activation).
 
-use super::{Layer, ParamRef, Value};
+use super::{Layer, ParamRef, ParamStore, Value};
 use crate::tensor::Tensor;
 
 /// A stack of layers applied in order.
@@ -43,21 +43,15 @@ impl Layer for Sequential {
         x
     }
 
-    fn backward(&mut self, mut z: Tensor) -> Tensor {
+    fn backward(&mut self, mut z: Tensor, store: &mut ParamStore) -> Tensor {
         for l in self.layers.iter_mut().rev() {
-            z = l.backward(z);
+            z = l.backward(z, store);
         }
         z
     }
 
     fn params(&mut self) -> Vec<ParamRef<'_>> {
         self.layers.iter_mut().flat_map(|l| l.params()).collect()
-    }
-
-    fn zero_grads(&mut self) {
-        for l in self.layers.iter_mut() {
-            l.zero_grads();
-        }
     }
 
     fn buffers(&mut self) -> Vec<(String, &mut Vec<f32>)> {
@@ -95,7 +89,7 @@ impl Layer for Flatten {
         }
     }
 
-    fn backward(&mut self, z: Tensor) -> Tensor {
+    fn backward(&mut self, z: Tensor, _store: &mut ParamStore) -> Tensor {
         let shape = self.cache_shape.as_ref().expect("backward before forward");
         z.reshape(shape)
     }
@@ -134,12 +128,12 @@ impl Layer for Residual {
         Value::F32(a.add(&b))
     }
 
-    fn backward(&mut self, z: Tensor) -> Tensor {
-        let g_main = self.main.backward(z.clone());
+    fn backward(&mut self, z: Tensor, store: &mut ParamStore) -> Tensor {
+        let g_main = self.main.backward(z.clone(), store);
         let g_short = if self.shortcut.is_empty() {
             z
         } else {
-            self.shortcut.backward(z)
+            self.shortcut.backward(z, store)
         };
         assert_eq!(g_main.shape, g_short.shape, "{}: backward shapes", self.name);
         g_main.add(&g_short)
@@ -149,11 +143,6 @@ impl Layer for Residual {
         let mut v = self.main.params();
         v.extend(self.shortcut.params());
         v
-    }
-
-    fn zero_grads(&mut self) {
-        self.main.zero_grads();
-        self.shortcut.zero_grads();
     }
 
     fn buffers(&mut self) -> Vec<(String, &mut Vec<f32>)> {
@@ -183,7 +172,7 @@ mod tests {
         let x = Tensor::rand_pm1(&[8, 64], &mut rng);
         let y = net.forward(Value::bit_from_pm1(&x), true).expect_f32("t");
         assert_eq!(y.shape, vec![8, 4]);
-        let g = net.backward(Tensor::full(&[8, 4], 1.0));
+        let g = net.backward(Tensor::full(&[8, 4], 1.0), &mut ParamStore::new());
         assert_eq!(g.shape, vec![8, 64]);
         assert_eq!(net.params().len(), 3); // bool w, fc w, fc b
     }
@@ -195,7 +184,7 @@ mod tests {
         let x = Tensor::rand_pm1(&[2, 3, 4, 4], &mut rng);
         let y = f.forward(Value::bit_from_pm1(&x), true);
         assert_eq!(y.shape(), &[2, 48]);
-        let g = f.backward(Tensor::zeros(&[2, 48]));
+        let g = f.backward(Tensor::zeros(&[2, 48]), &mut ParamStore::new());
         assert_eq!(g.shape, vec![2, 3, 4, 4]);
     }
 
@@ -212,7 +201,7 @@ mod tests {
         let y = res.forward(Value::F32(x.clone()), true).expect_f32("t");
         assert!(y.max_abs_diff(&x) < 1e-6);
         // backward: identity shortcut passes z, main contributes W᷀z = 0
-        let g = res.backward(Tensor::full(&[2, 8], 1.0));
+        let g = res.backward(Tensor::full(&[2, 8], 1.0), &mut ParamStore::new());
         assert!(g.max_abs_diff(&Tensor::full(&[2, 8], 1.0)) < 1e-6);
     }
 
@@ -234,7 +223,7 @@ mod tests {
         let x = Tensor::randn(&[1, 4], 1.0, &mut rng);
         let y = res.forward(Value::F32(x.clone()), true).expect_f32("t");
         assert!(y.max_abs_diff(&x.scale(2.0)) < 1e-6);
-        let g = res.backward(Tensor::full(&[1, 4], 1.0));
+        let g = res.backward(Tensor::full(&[1, 4], 1.0), &mut ParamStore::new());
         assert!(g.max_abs_diff(&Tensor::full(&[1, 4], 2.0)) < 1e-6);
     }
 }

@@ -1,32 +1,22 @@
 //! Adam (Kingma & Ba) for the FP parameters — the paper trains first/last
 //! FP layers and BN with Adam at lr 1e-3 (§4 / Appendix D.1.1).
 
-use crate::nn::ParamRef;
+use crate::nn::{ParamRef, ParamStore};
 
-/// Adam with per-parameter state kept by parameter *name* (layer names are
-/// stable across steps, so the state follows the parameter even if the
-/// collection order changes).
+/// Adam hyper-parameters. The per-parameter moments and the shared
+/// timestep live in the [`ParamStore`] (keyed by parameter name), so a
+/// checkpointed store resumes training bit-exactly with a fresh `Adam`.
 pub struct Adam {
     pub lr: f32,
     pub beta1: f32,
     pub beta2: f32,
     pub eps: f32,
     pub weight_decay: f32,
-    t: u64,
-    state: std::collections::HashMap<String, (Vec<f32>, Vec<f32>)>,
 }
 
 impl Adam {
     pub fn new(lr: f32) -> Self {
-        Adam {
-            lr,
-            beta1: 0.9,
-            beta2: 0.999,
-            eps: 1e-8,
-            weight_decay: 0.0,
-            t: 0,
-            state: std::collections::HashMap::new(),
-        }
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0 }
     }
 
     pub fn with_weight_decay(mut self, wd: f32) -> Self {
@@ -35,22 +25,28 @@ impl Adam {
     }
 
     /// Apply one step to every `ParamRef::Real` (Bool params are ignored —
-    /// they belong to the Boolean optimizer).
-    pub fn step(&mut self, params: &mut [ParamRef<'_>]) {
-        self.t += 1;
-        let t = self.t as f32;
+    /// they belong to the Boolean optimizer), reading gradients from and
+    /// keeping moments in `store`.
+    pub fn step(&mut self, params: &mut [ParamRef<'_>], store: &mut ParamStore) {
+        store.adam_t += 1;
+        let t = store.adam_t as f32;
         let bc1 = 1.0 - self.beta1.powf(t);
         let bc2 = 1.0 - self.beta2.powf(t);
         for p in params.iter_mut() {
-            if let ParamRef::Real { name, w, grad } = p {
+            if let ParamRef::Real { name, w } = p {
                 let n = w.len();
-                let (m, v) = self
-                    .state
-                    .entry(name.clone())
-                    .or_insert_with(|| (vec![0.0; n], vec![0.0; n]));
-                assert_eq!(m.len(), n, "param {name} changed size");
+                if n == 0 {
+                    continue;
+                }
+                let slot = store.slot_mut(name);
+                slot.grad_mut(&w.shape); // zeros if this param got no gradient
+                slot.adam_mut(n);
+                debug_assert_eq!(slot.grad.len(), n, "{name}: grad/weight size");
+                let grad = &slot.grad.data;
+                let m = &mut slot.adam_m;
+                let v = &mut slot.adam_v;
                 for i in 0..n {
-                    let mut g = grad.data[i];
+                    let mut g = grad[i];
                     if self.weight_decay != 0.0 {
                         g += self.weight_decay * w.data[i];
                     }
@@ -75,14 +71,17 @@ mod tests {
         // minimize ||w − target||² with analytic gradient
         let mut w = Tensor::from_vec(&[4], vec![5.0, -3.0, 2.0, 0.0]);
         let target = [1.0f32, 1.0, 1.0, 1.0];
-        let mut grad = Tensor::zeros(&[4]);
+        let mut store = ParamStore::new();
         let mut opt = Adam::new(0.1);
         for _ in 0..300 {
+            let mut grad = Tensor::zeros(&[4]);
             for i in 0..4 {
                 grad.data[i] = 2.0 * (w.data[i] - target[i]);
             }
-            let mut params = vec![ParamRef::Real { name: "w".into(), w: &mut w, grad: &mut grad }];
-            opt.step(&mut params);
+            store.zero_grads();
+            store.accumulate("w", &grad);
+            let mut params = vec![ParamRef::Real { name: "w".into(), w: &mut w }];
+            opt.step(&mut params, &mut store);
         }
         for i in 0..4 {
             assert!((w.data[i] - target[i]).abs() < 1e-2, "w[{i}] = {}", w.data[i]);
@@ -93,24 +92,37 @@ mod tests {
     fn first_step_is_lr_sized() {
         // Adam's first update has magnitude ≈ lr regardless of grad scale.
         let mut w = Tensor::from_vec(&[1], vec![0.0]);
-        let mut grad = Tensor::from_vec(&[1], vec![1234.0]);
+        let mut store = ParamStore::new();
+        store.accumulate("w", &Tensor::from_vec(&[1], vec![1234.0]));
         let mut opt = Adam::new(0.01);
-        let mut params = vec![ParamRef::Real { name: "w".into(), w: &mut w, grad: &mut grad }];
-        opt.step(&mut params);
+        let mut params = vec![ParamRef::Real { name: "w".into(), w: &mut w }];
+        opt.step(&mut params, &mut store);
         assert!((w.data[0] + 0.01).abs() < 1e-4, "{}", w.data[0]);
     }
 
     #[test]
-    fn state_follows_name() {
+    fn moments_and_timestep_live_in_store() {
         let mut w = Tensor::from_vec(&[1], vec![0.0]);
-        let mut grad = Tensor::from_vec(&[1], vec![1.0]);
+        let mut store = ParamStore::new();
         let mut opt = Adam::new(0.1);
         for _ in 0..3 {
-            let mut params =
-                vec![ParamRef::Real { name: "same".into(), w: &mut w, grad: &mut grad }];
-            opt.step(&mut params);
+            store.zero_grads();
+            store.accumulate("same", &Tensor::from_vec(&[1], vec![1.0]));
+            let mut params = vec![ParamRef::Real { name: "same".into(), w: &mut w }];
+            opt.step(&mut params, &mut store);
         }
-        assert_eq!(opt.state.len(), 1);
-        assert_eq!(opt.t, 3);
+        assert_eq!(store.adam_t, 3);
+        let slot = store.slot("same").unwrap();
+        assert_eq!(slot.adam_m.len(), 1);
+        assert!(slot.adam_m[0] > 0.0 && slot.adam_v[0] > 0.0);
+        // a fresh Adam over the same store continues the trajectory
+        let w_before = w.data[0];
+        let mut opt2 = Adam::new(0.1);
+        store.zero_grads();
+        store.accumulate("same", &Tensor::from_vec(&[1], vec![1.0]));
+        let mut params = vec![ParamRef::Real { name: "same".into(), w: &mut w }];
+        opt2.step(&mut params, &mut store);
+        assert_eq!(store.adam_t, 4);
+        assert!(w.data[0] < w_before, "step continued from stored moments");
     }
 }

@@ -1,8 +1,9 @@
 //! The Boolean optimizer of §3.3 (Eq. 9–11, Algorithms 1/2/8).
 //!
-//! Per Boolean parameter tensor it keeps an accumulator m (Eq. 10) and the
-//! auto-regularizing factor β = fraction of unchanged weights (Eq. 11,
-//! per-layer basis as in the paper's experiments). One step:
+//! Per Boolean parameter tensor it keeps (in the [`ParamStore`]) an
+//! accumulator m (Eq. 10) and the auto-regularizing factor β = fraction of
+//! unchanged weights (Eq. 11, per-layer basis as in the paper's
+//! experiments). One step:
 //!
 //!   m ← β·m + η·q              (q = aggregated vote, Eq. 7)
 //!   flip w where  m·e(w) ≥ 1   (xnor(m, w) = T with |m| ≥ 1 — Eq. 9)
@@ -12,8 +13,38 @@
 //! The flip rule reads: if the accumulated loss-variation w.r.t. w has the
 //! same sign as w itself, then flipping w decreases the loss — the purely
 //! logical counterpart of "step against the gradient".
+//!
+//! # Word-parallel kernel
+//!
+//! Flips are applied on the *packed* representation: the accumulator scan
+//! of one 64-lane word builds a 64-bit flip mask, then a single
+//! `words[i] ^= mask` commits all of that word's flips at once — the
+//! dataflow the paper's energy analysis (§5) assumes, instead of per-bit
+//! `get`/`flip` calls. Rows are sharded across `std::thread::scope`
+//! workers for large tensors. The per-element arithmetic (and therefore
+//! the result) is bit-identical to the scalar rule; only the write path
+//! is word-granular.
 
-use crate::nn::ParamRef;
+use crate::nn::{ParamRef, ParamStore};
+
+/// Minimum weights per spawned thread (~256 Ki lanes ≈ 100s of µs of
+/// scan): thread count scales with the WORK, so tensors that would give
+/// each thread less work than its own spawn/join cost stay on the
+/// single-threaded path.
+const PAR_QUANTUM: usize = 1 << 18;
+
+/// Shard count for a (rows × cols) tensor: work-proportional, capped by
+/// row count (the shard unit), core count, and a sanity limit.
+fn thread_count(total: usize, rows: usize) -> usize {
+    let by_work = total / PAR_QUANTUM;
+    if by_work <= 1 {
+        return 1;
+    }
+    by_work
+        .min(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+        .min(rows)
+        .min(16)
+}
 
 /// Flip statistics for one step (for logging / Fig. 4-style diagnostics).
 #[derive(Debug, Clone, Copy, Default)]
@@ -28,29 +59,23 @@ impl FlipStats {
     }
 }
 
-/// Boolean optimizer with a tunable accumulation rate η.
+/// Boolean optimizer with a tunable accumulation rate η. Stateless: the
+/// accumulator m and ratio β live in the [`ParamStore`].
 ///
 /// ```
-/// use bold::nn::ParamRef;
+/// use bold::nn::{ParamRef, ParamStore};
 /// use bold::optim::BooleanOptimizer;
 /// use bold::tensor::{BitMatrix, Tensor};
 ///
 /// // One 1×2 Boolean weight tensor: w = [T, F] in the ±1 embedding.
 /// let mut bits = BitMatrix::zeros(1, 2);
 /// bits.set(0, 0, true);
-/// let mut grad = Tensor::from_vec(&[1, 2], vec![1.0, 1.0]); // votes q
-/// let mut accum = Tensor::zeros(&[1, 2]);
-/// let mut ratio = 1.0;
+/// let mut store = ParamStore::new();
+/// store.accumulate("w", &Tensor::from_vec(&[1, 2], vec![1.0, 1.0])); // votes q
 ///
 /// let opt = BooleanOptimizer::new(1.0); // η = 1
-/// let mut params = vec![ParamRef::Bool {
-///     name: "w".into(),
-///     bits: &mut bits,
-///     grad: &mut grad,
-///     accum: &mut accum,
-///     ratio: &mut ratio,
-/// }];
-/// let stats = opt.step(&mut params);
+/// let mut params = vec![ParamRef::Bool { name: "w".into(), bits: &mut bits }];
+/// let stats = opt.step(&mut params, &mut store);
 ///
 /// // Eq. (9): w₀ = T agrees with its vote ⇒ flipped; w₁ = F does not.
 /// assert_eq!(stats.flips, 1);
@@ -73,37 +98,34 @@ impl BooleanOptimizer {
     }
 
     /// Apply one step to every `ParamRef::Bool` in `params` (others are
-    /// ignored — they belong to the FP optimizer).
-    pub fn step(&self, params: &mut [ParamRef<'_>]) -> FlipStats {
+    /// ignored — they belong to the FP optimizer), reading votes from and
+    /// updating accumulator state in `store`.
+    pub fn step(&self, params: &mut [ParamRef<'_>], store: &mut ParamStore) -> FlipStats {
         let mut stats = FlipStats::default();
         for p in params.iter_mut() {
-            if let ParamRef::Bool { bits, grad, accum, ratio, .. } = p {
+            if let ParamRef::Bool { name, bits } = p {
                 let rows = bits.rows;
                 let cols = bits.cols;
-                debug_assert_eq!(grad.len(), rows * cols);
-                let beta: f32 = **ratio;
-                let mut flips = 0usize;
-                for r in 0..rows {
-                    for c in 0..cols {
-                        let idx = r * cols + c;
-                        // m ← β·m + η·q  (Eq. 10)
-                        let mut m = beta * accum.data[idx] + self.lr * grad.data[idx];
-                        if let Some(k) = self.clip {
-                            m = m.clamp(-k, k);
-                        }
-                        // Eq. (9): flip when xnor(m, w) = T with |m| ≥ 1.
-                        let w = if bits.get(r, c) { 1.0 } else { -1.0 };
-                        if m * w >= 1.0 {
-                            bits.flip(r, c);
-                            accum.data[idx] = 0.0; // reset (Algorithm 1 l.12)
-                            flips += 1;
-                        } else {
-                            accum.data[idx] = m;
-                        }
-                    }
-                }
                 let total = rows * cols;
-                **ratio = 1.0 - flips as f32 / total.max(1) as f32; // Eq. (11)
+                if total == 0 {
+                    continue;
+                }
+                let slot = store.slot_mut(name);
+                // A param that never received votes still decays its
+                // accumulator (grad ≡ 0), matching the scalar rule.
+                slot.grad_mut(&[rows, cols]);
+                slot.accum_mut(total);
+                debug_assert_eq!(slot.grad.len(), total, "{name}: vote/weight size");
+                let beta = slot.ratio;
+                let flips = step_one(
+                    self.lr,
+                    self.clip,
+                    &mut **bits,
+                    &slot.grad.data,
+                    &mut slot.accum.data,
+                    beta,
+                );
+                slot.ratio = 1.0 - flips as f32 / total.max(1) as f32; // Eq. (11)
                 stats.flips += flips;
                 stats.total += total;
             }
@@ -112,62 +134,139 @@ impl BooleanOptimizer {
     }
 }
 
+/// One tensor's flip pass: returns the number of flips. Shards rows
+/// across scoped threads when the tensor is large enough.
+fn step_one(
+    lr: f32,
+    clip: Option<f32>,
+    bits: &mut crate::tensor::BitMatrix,
+    grad: &[f32],
+    accum: &mut [f32],
+    beta: f32,
+) -> usize {
+    let rows = bits.rows;
+    let cols = bits.cols;
+    let wpr = bits.wpr;
+    let threads = thread_count(rows * cols, rows);
+    if threads <= 1 {
+        return step_rows(lr, clip, &mut bits.words, grad, accum, beta, cols, wpr);
+    }
+    let rows_per = rows.div_ceil(threads);
+    let mut flips = 0usize;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        let mut words_rest: &mut [u64] = &mut bits.words;
+        let mut grad_rest: &[f32] = grad;
+        let mut accum_rest: &mut [f32] = accum;
+        let mut row = 0usize;
+        while row < rows {
+            let take = rows_per.min(rows - row);
+            let (w_chunk, w_rem) = words_rest.split_at_mut(take * wpr);
+            let (g_chunk, g_rem) = grad_rest.split_at(take * cols);
+            let (a_chunk, a_rem) = accum_rest.split_at_mut(take * cols);
+            words_rest = w_rem;
+            grad_rest = g_rem;
+            accum_rest = a_rem;
+            handles.push(scope.spawn(move || {
+                step_rows(lr, clip, w_chunk, g_chunk, a_chunk, beta, cols, wpr)
+            }));
+            row += take;
+        }
+        for h in handles {
+            flips += h.join().expect("optimizer shard panicked");
+        }
+    });
+    flips
+}
+
+/// Scalar-exact scan over a contiguous block of rows, committing flips
+/// with one XOR mask per packed word.
+#[allow(clippy::too_many_arguments)]
+fn step_rows(
+    lr: f32,
+    clip: Option<f32>,
+    words: &mut [u64],
+    grad: &[f32],
+    accum: &mut [f32],
+    beta: f32,
+    cols: usize,
+    wpr: usize,
+) -> usize {
+    let rows = if wpr == 0 { 0 } else { words.len() / wpr };
+    let mut flips = 0usize;
+    for r in 0..rows {
+        for wi in 0..wpr {
+            let lanes = 64.min(cols - wi * 64);
+            let word = &mut words[r * wpr + wi];
+            let base = r * cols + wi * 64;
+            let mut mask = 0u64;
+            for lane in 0..lanes {
+                let idx = base + lane;
+                // m ← β·m + η·q  (Eq. 10)
+                let mut m = beta * accum[idx] + lr * grad[idx];
+                if let Some(k) = clip {
+                    m = m.clamp(-k, k);
+                }
+                // Eq. (9): flip when xnor(m, w) = T with |m| ≥ 1 —
+                // i.e. m ≥ 1 on set bits (w=+1), m ≤ −1 on clear bits.
+                let set = (*word >> lane) & 1 == 1;
+                if (set && m >= 1.0) || (!set && m <= -1.0) {
+                    mask |= 1u64 << lane;
+                    accum[idx] = 0.0; // reset (Algorithm 1 l.12)
+                } else {
+                    accum[idx] = m;
+                }
+            }
+            *word ^= mask; // commit all of this word's flips at once
+            flips += mask.count_ones() as usize;
+        }
+    }
+    flips
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::ParamStore;
     use crate::tensor::{BitMatrix, Tensor};
     use crate::util::Rng;
 
-    fn mk(rows: usize, cols: usize, seed: u64) -> (BitMatrix, Tensor, Tensor, f32) {
-        let mut rng = Rng::new(seed);
-        (
-            BitMatrix::random(rows, cols, &mut rng),
-            Tensor::zeros(&[rows, cols]),
-            Tensor::zeros(&[rows, cols]),
-            1.0,
-        )
+    fn store_with(name: &str, grad: &Tensor) -> ParamStore {
+        let mut s = ParamStore::new();
+        s.accumulate(name, grad);
+        s
     }
 
     #[test]
     fn flip_rule_eq9_semantics() {
         // q aligned with w and |η·q| ≥ 1 ⇒ flip; opposite sign ⇒ no flip.
-        let (mut bits, mut grad, mut accum, mut ratio) = mk(1, 2, 1);
+        let mut bits = BitMatrix::zeros(1, 2);
         bits.set(0, 0, true); // w0 = +1
         bits.set(0, 1, false); // w1 = −1
-        grad.data[0] = 1.0; // same sign as w0 ⇒ flip
-        grad.data[1] = 1.0; // opposite sign to w1 ⇒ accumulate
+        let grad = Tensor::from_vec(&[1, 2], vec![1.0, 1.0]);
+        let mut store = store_with("w", &grad);
         let opt = BooleanOptimizer::new(1.0);
-        let mut params = vec![ParamRef::Bool {
-            name: "w".into(),
-            bits: &mut bits,
-            grad: &mut grad,
-            accum: &mut accum,
-            ratio: &mut ratio,
-        }];
-        let stats = opt.step(&mut params);
+        let mut params = vec![ParamRef::Bool { name: "w".into(), bits: &mut bits }];
+        let stats = opt.step(&mut params, &mut store);
         assert_eq!(stats.flips, 1);
         assert!(!bits.get(0, 0), "w0 flipped to F");
         assert!(!bits.get(0, 1), "w1 unchanged");
-        assert_eq!(accum.data[0], 0.0, "flipped accumulator reset");
-        assert_eq!(accum.data[1], 1.0, "unflipped accumulates η·q");
-        assert!((ratio - 0.5).abs() < 1e-6, "β = 1 − 1/2");
+        let slot = store.slot("w").unwrap();
+        assert_eq!(slot.accum.data[0], 0.0, "flipped accumulator reset");
+        assert_eq!(slot.accum.data[1], 1.0, "unflipped accumulates η·q");
+        assert!((slot.ratio - 0.5).abs() < 1e-6, "β = 1 − 1/2");
     }
 
     #[test]
     fn small_votes_accumulate_until_threshold() {
-        let (mut bits, mut grad, mut accum, mut ratio) = mk(1, 1, 2);
+        let mut bits = BitMatrix::zeros(1, 1);
         bits.set(0, 0, true);
-        grad.data[0] = 0.4; // η·q = 0.4 per step, same sign as w
+        let grad = Tensor::from_vec(&[1, 1], vec![0.4]); // η·q = 0.4, same sign as w
+        let mut store = store_with("w", &grad);
         let opt = BooleanOptimizer::new(1.0);
         for step in 0..3 {
-            let mut params = vec![ParamRef::Bool {
-                name: "w".into(),
-                bits: &mut bits,
-                grad: &mut grad,
-                accum: &mut accum,
-                ratio: &mut ratio,
-            }];
-            let stats = opt.step(&mut params);
+            let mut params = vec![ParamRef::Bool { name: "w".into(), bits: &mut bits }];
+            let stats = opt.step(&mut params, &mut store);
             if step < 2 {
                 assert_eq!(stats.flips, 0, "no flip until |m| ≥ 1 (step {step})");
             } else {
@@ -191,56 +290,113 @@ mod tests {
                 grad.data[r * 8 + c] = if before.get(r, c) { 2.0 } else { -2.0 };
             }
         }
-        let mut accum = Tensor::zeros(&[8, 8]);
-        let mut ratio = 1.0;
+        let mut store = store_with("w", &grad);
         let opt = BooleanOptimizer::new(1.0);
-        let mut params = vec![ParamRef::Bool {
-            name: "w".into(),
-            bits: &mut bits,
-            grad: &mut grad,
-            accum: &mut accum,
-            ratio: &mut ratio,
-        }];
-        let stats = opt.step(&mut params);
+        let mut params = vec![ParamRef::Bool { name: "w".into(), bits: &mut bits }];
+        let stats = opt.step(&mut params, &mut store);
         assert_eq!(stats.flips, 64);
-        assert_eq!(ratio, 0.0, "β = 0 after everything flipped");
+        assert_eq!(store.slot("w").unwrap().ratio, 0.0, "β = 0 after everything flipped");
         assert_eq!(bits.hamming(&before), 64);
     }
 
     #[test]
     fn clip_bounds_accumulator() {
-        let (mut bits, mut grad, mut accum, mut ratio) = mk(1, 1, 4);
-        bits.set(0, 0, false); // w = −1; positive votes will never flip it
-        grad.data[0] = 10.0;
+        let mut bits = BitMatrix::zeros(1, 1); // w = −1; positive votes never flip it
+        let grad = Tensor::from_vec(&[1, 1], vec![10.0]);
+        let mut store = store_with("w", &grad);
         let opt = BooleanOptimizer::new(1.0).with_clip(2.5);
         for _ in 0..5 {
-            let mut params = vec![ParamRef::Bool {
-                name: "w".into(),
-                bits: &mut bits,
-                grad: &mut grad,
-                accum: &mut accum,
-                ratio: &mut ratio,
-            }];
-            opt.step(&mut params);
+            let mut params = vec![ParamRef::Bool { name: "w".into(), bits: &mut bits }];
+            opt.step(&mut params, &mut store);
         }
-        assert!(accum.data[0] <= 2.5, "A.5 bound respected: {}", accum.data[0]);
+        let m = store.slot("w").unwrap().accum.data[0];
+        assert!(m <= 2.5, "A.5 bound respected: {m}");
     }
 
     #[test]
     fn zero_grad_never_flips() {
-        let (mut bits, mut grad, mut accum, mut ratio) = mk(16, 16, 5);
+        let mut rng = Rng::new(5);
+        let mut bits = BitMatrix::random(16, 16, &mut rng);
         let before = bits.clone();
-        grad.scale_inplace(0.0);
+        let mut store = store_with("w", &Tensor::zeros(&[16, 16]));
         let opt = BooleanOptimizer::new(100.0);
-        let mut params = vec![ParamRef::Bool {
-            name: "w".into(),
-            bits: &mut bits,
-            grad: &mut grad,
-            accum: &mut accum,
-            ratio: &mut ratio,
-        }];
-        let stats = opt.step(&mut params);
+        let mut params = vec![ParamRef::Bool { name: "w".into(), bits: &mut bits }];
+        let stats = opt.step(&mut params, &mut store);
         assert_eq!(stats.flips, 0);
         assert_eq!(bits, before);
+    }
+
+    #[test]
+    fn unvoted_param_decays_but_does_not_flip() {
+        // A Bool param with no accumulate() call at all still steps (grad
+        // treated as zeros): accumulator decays by β, nothing flips.
+        let mut rng = Rng::new(6);
+        let mut bits = BitMatrix::random(4, 4, &mut rng);
+        let before = bits.clone();
+        let mut store = ParamStore::new();
+        store.slot_mut("w").accum_mut(16).data[0] = 0.5;
+        store.slot_mut("w").ratio = 0.5;
+        let opt = BooleanOptimizer::new(1.0);
+        let mut params = vec![ParamRef::Bool { name: "w".into(), bits: &mut bits }];
+        let stats = opt.step(&mut params, &mut store);
+        assert_eq!(stats.flips, 0);
+        assert_eq!(bits, before);
+        assert!((store.slot("w").unwrap().accum.data[0] - 0.25).abs() < 1e-6, "m ← β·m");
+    }
+
+    /// The word-parallel path (threads + XOR masks) must agree bit-exactly
+    /// with a scalar per-bit reference on tail words (cols % 64 ≠ 0) and
+    /// on sizes large enough to take the multi-threaded shard path
+    /// (1024×520 ≥ 2·PAR_QUANTUM).
+    #[test]
+    fn word_parallel_matches_scalar_reference() {
+        let mut rng = Rng::new(7);
+        for (rows, cols) in [(3usize, 70usize), (64, 100), (256, 257), (1024, 520)] {
+            let bits0 = BitMatrix::random(rows, cols, &mut rng);
+            let grad = Tensor::randn(&[rows, cols], 1.2, &mut rng);
+            let accum0 = Tensor::randn(&[rows, cols], 0.8, &mut rng);
+            let beta = 0.75f32;
+            let lr = 1.0f32;
+
+            // scalar reference (the pre-refactor per-bit rule)
+            let mut ref_bits = bits0.clone();
+            let mut ref_accum = accum0.clone();
+            let mut ref_flips = 0usize;
+            for r in 0..rows {
+                for c in 0..cols {
+                    let idx = r * cols + c;
+                    let m = beta * ref_accum.data[idx] + lr * grad.data[idx];
+                    let w = if ref_bits.get(r, c) { 1.0 } else { -1.0 };
+                    if m * w >= 1.0 {
+                        ref_bits.flip(r, c);
+                        ref_accum.data[idx] = 0.0;
+                        ref_flips += 1;
+                    } else {
+                        ref_accum.data[idx] = m;
+                    }
+                }
+            }
+
+            // word-parallel path through the public API
+            let mut bits = bits0.clone();
+            let mut store = ParamStore::new();
+            store.accumulate("w", &grad);
+            {
+                let slot = store.slot_mut("w");
+                let a = slot.accum_mut(rows * cols);
+                a.data.copy_from_slice(&accum0.data);
+                slot.ratio = beta;
+            }
+            let opt = BooleanOptimizer::new(lr);
+            let mut params = vec![ParamRef::Bool { name: "w".into(), bits: &mut bits }];
+            let stats = opt.step(&mut params, &mut store);
+
+            assert_eq!(bits, ref_bits, "{rows}x{cols}: packed weights diverge");
+            assert_eq!(stats.flips, ref_flips, "{rows}x{cols}: flip count");
+            let slot = store.slot("w").unwrap();
+            assert_eq!(slot.accum.data, ref_accum.data, "{rows}x{cols}: accumulators");
+            let want_beta = 1.0 - ref_flips as f32 / (rows * cols) as f32;
+            assert!((slot.ratio - want_beta).abs() < 1e-6);
+        }
     }
 }

@@ -1,7 +1,10 @@
 //! Plain SGD with momentum — used by some BNN baseline recipes.
 
-use crate::nn::ParamRef;
+use crate::nn::{ParamRef, ParamStore};
 
+/// SGD hyper-parameters; the velocity buffer is kept per-parameter in the
+/// optimizer (baselines don't checkpoint mid-run), gradients are read
+/// from the [`ParamStore`].
 pub struct Sgd {
     pub lr: f32,
     pub momentum: f32,
@@ -13,10 +16,12 @@ impl Sgd {
         Sgd { lr, momentum, state: std::collections::HashMap::new() }
     }
 
-    pub fn step(&mut self, params: &mut [ParamRef<'_>]) {
+    pub fn step(&mut self, params: &mut [ParamRef<'_>], store: &ParamStore) {
         for p in params.iter_mut() {
-            if let ParamRef::Real { name, w, grad } = p {
+            if let ParamRef::Real { name, w } = p {
+                let Some(grad) = store.grad(name) else { continue };
                 let n = w.len();
+                debug_assert_eq!(grad.len(), n, "{name}: grad/weight size");
                 let v = self.state.entry(name.clone()).or_insert_with(|| vec![0.0; n]);
                 for i in 0..n {
                     v[i] = self.momentum * v[i] + grad.data[i];
@@ -35,12 +40,13 @@ mod tests {
     #[test]
     fn sgd_descends() {
         let mut w = Tensor::from_vec(&[1], vec![10.0]);
-        let mut grad = Tensor::zeros(&[1]);
+        let mut store = ParamStore::new();
         let mut opt = Sgd::new(0.1, 0.9);
         for _ in 0..100 {
-            grad.data[0] = 2.0 * w.data[0];
-            let mut params = vec![ParamRef::Real { name: "w".into(), w: &mut w, grad: &mut grad }];
-            opt.step(&mut params);
+            store.zero_grads();
+            store.accumulate("w", &Tensor::from_vec(&[1], vec![2.0 * w.data[0]]));
+            let mut params = vec![ParamRef::Real { name: "w".into(), w: &mut w }];
+            opt.step(&mut params, &store);
         }
         assert!(w.data[0].abs() < 0.1);
     }

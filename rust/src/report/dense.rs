@@ -6,7 +6,7 @@ use crate::data::{SegDataset, SrDataset};
 use crate::models::edsr::psnr;
 use crate::models::segnet::{class_iou, mean_iou};
 use crate::models::{edsr_small, segnet_boolean, EdsrConfig, SegNetConfig};
-use crate::nn::{l1_loss, softmax_cross_entropy_nchw, Layer, Value};
+use crate::nn::{l1_loss, softmax_cross_entropy_nchw, Layer, ParamStore, Value};
 use crate::optim::{Adam, BooleanOptimizer};
 use crate::util::Rng;
 
@@ -19,17 +19,18 @@ fn train_sr(cfg: &EdsrConfig, steps: usize, seed: u64) -> f32 {
     let mut model = edsr_small(cfg, &mut rng);
     let bool_opt = BooleanOptimizer::new(6.0);
     let mut adam = Adam::new(1e-3);
+    let mut store = ParamStore::new();
     let mut sampler = crate::data::BatchSampler::new(train.n, 8, seed);
     for _ in 0..steps {
         let idx = sampler.next_batch();
         let (lr, hr) = train.batch(&idx);
         let pred = model.forward(Value::F32(lr), true).expect_f32("sr");
         let out = l1_loss(&pred, &hr);
-        model.zero_grads();
-        let _ = model.backward(out.grad);
+        store.zero_grads();
+        let _ = model.backward(out.grad, &mut store);
         let mut params = model.params();
-        bool_opt.step(&mut params);
-        adam.step(&mut params);
+        bool_opt.step(&mut params, &mut store);
+        adam.step(&mut params, &mut store);
     }
     // validation PSNR
     let idx: Vec<usize> = (0..val.n).collect();
@@ -73,6 +74,7 @@ fn train_seg(
     let mut model = segnet_boolean(scfg, &mut rng);
     let bool_opt = BooleanOptimizer::new(6.0);
     let mut adam = Adam::new(1e-3);
+    let mut store = ParamStore::new();
     let mut sampler = crate::data::BatchSampler::new(data.n, 8, seed);
     if rcs {
         sampler = crate::data::BatchSampler::new(data.n, 8, seed).with_rcs(
@@ -86,11 +88,11 @@ fn train_seg(
         let (x, labels) = data.batch(&idx);
         let logits = model.forward(Value::F32(x), true).expect_f32("seg");
         let out = softmax_cross_entropy_nchw(&logits, &labels, None);
-        model.zero_grads();
-        let _ = model.backward(out.grad);
+        store.zero_grads();
+        let _ = model.backward(out.grad, &mut store);
         let mut params = model.params();
-        bool_opt.step(&mut params);
-        adam.step(&mut params);
+        bool_opt.step(&mut params, &mut store);
+        adam.step(&mut params, &mut store);
     }
     // evaluate
     let idx: Vec<usize> = (0..val.n).collect();

@@ -3,7 +3,7 @@
 //! tables (14/15) and the Theorem 3.16 convergence experiment.
 
 use crate::logic::{variation, BoolFn, B3, F, T};
-use crate::nn::ParamRef;
+use crate::nn::{ParamRef, ParamStore};
 use crate::optim::BooleanOptimizer;
 use crate::tensor::{BitMatrix, Tensor};
 use crate::util::Rng;
@@ -99,6 +99,7 @@ pub fn fig4(quick: bool) -> Result<(), String> {
         &mut rng,
     );
     let _trainer = ClassifierTrainer::new(&cfg);
+    let mut store = crate::nn::ParamStore::new();
     let mut sampler = crate::data::BatchSampler::new(train.n, cfg.batch, 1);
     let mut ratios = Vec::new();
     for step in 0..cfg.steps {
@@ -106,8 +107,8 @@ pub fn fig4(quick: bool) -> Result<(), String> {
         let (x, labels) = train.batch(&idx);
         let logits = model.forward(Value::F32(x), true).expect_f32("fig4");
         let out = crate::nn::softmax_cross_entropy(&logits, &labels);
-        model.zero_grads();
-        let g_in = model.backward(out.grad);
+        store.zero_grads();
+        let g_in = model.backward(out.grad, &mut store);
         // statistics of the upstream-most signal
         let mean = g_in.mean();
         let var = g_in.data.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>()
@@ -116,7 +117,7 @@ pub fn fig4(quick: bool) -> Result<(), String> {
         ratios.push(ratio);
         let mut params = model.params();
         let bool_opt = BooleanOptimizer::new(cfg.lr_bool);
-        bool_opt.step(&mut params);
+        bool_opt.step(&mut params, &mut store);
         if step % 10 == 0 {
             println!("step {step:>4}: |mean|/sigma = {ratio:.4}");
         }
@@ -160,8 +161,7 @@ pub fn convergence(quick: bool) -> Result<(), String> {
     let p: Vec<f32> = (0..d).map(|_| rng.sign()).collect();
     let mut bits = BitMatrix::random(1, d, &mut rng);
     let mut grad = Tensor::zeros(&[1, d]);
-    let mut accum = Tensor::zeros(&[1, d]);
-    let mut ratio = 1.0f32;
+    let mut store = ParamStore::new();
     let opt = BooleanOptimizer::new(0.3).with_clip(2.0);
     let grad_f = |w: &[f32], g: &mut [f32], rng: &mut Rng| -> f32 {
         // stochastic gradient: planted quadratic + noise (A.3's σ²)
@@ -182,14 +182,10 @@ pub fn convergence(quick: bool) -> Result<(), String> {
         for v in grad.data.iter_mut() {
             *v = -*v * d as f32; // scale to vote magnitude
         }
-        let mut params = vec![ParamRef::Bool {
-            name: "w".into(),
-            bits: &mut bits,
-            grad: &mut grad,
-            accum: &mut accum,
-            ratio: &mut ratio,
-        }];
-        opt.step(&mut params);
+        store.zero_grads();
+        store.accumulate("w", &grad);
+        let mut params = vec![ParamRef::Bool { name: "w".into(), bits: &mut bits }];
+        opt.step(&mut params, &mut store);
         running.push(gnorm);
         if t % (t_max / 10).max(1) == 0 {
             let avg: f32 = running.iter().sum::<f32>() / running.len() as f32;

@@ -25,6 +25,7 @@ fn train_task(task: GlueLikeTask, boolean: bool, quick: bool, seed: u64) -> f32 
     let mut model = BertMini::new(&cfg, &mut rng);
     let sched = CosineSchedule::new(if boolean { 1.0 } else { 0.0 }, 0.0, steps);
     let mut adam = Adam::new(2e-3);
+    let mut store = crate::nn::ParamStore::new();
     let batch = 32;
     let mut sampler = crate::data::BatchSampler::new(train.n, batch, seed);
     for step in 0..steps {
@@ -32,13 +33,13 @@ fn train_task(task: GlueLikeTask, boolean: bool, quick: bool, seed: u64) -> f32 
         let (toks, labels) = train.batch(&idx);
         let logits = model.forward(&toks, idx.len(), len, true);
         let out = softmax_cross_entropy(&logits, &labels);
-        model.zero_grads();
-        model.backward(out.grad);
+        store.zero_grads();
+        model.backward(out.grad, &mut store);
         let mut params = model.params();
         if boolean {
-            BooleanOptimizer::new(sched.at(step)).step(&mut params);
+            BooleanOptimizer::new(sched.at(step)).step(&mut params, &mut store);
         }
-        adam.step(&mut params);
+        adam.step(&mut params, &mut store);
     }
     // evaluate
     let idx: Vec<usize> = (0..val.n).collect();

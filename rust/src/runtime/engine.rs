@@ -228,6 +228,9 @@ impl PackedMlp {
                         )));
                     }
                 }
+                // Optimizer-state records (training snapshots from
+                // `save_training`): irrelevant to a frozen server.
+                Record::OptimBool { .. } | Record::OptimAdam { .. } | Record::Meta { .. } => {}
             }
         }
         if layers.is_empty() {

@@ -2,7 +2,7 @@
 //! `bold::testing` harness (seed-swept deterministic cases).
 
 use bold::logic::{embed, project, B3, F, T};
-use bold::nn::{BackwardScale, BoolLinear, Layer, ParamRef, ThresholdAct, Value};
+use bold::nn::{BackwardScale, BoolLinear, Layer, ParamRef, ParamStore, ThresholdAct, Value};
 use bold::optim::BooleanOptimizer;
 use bold::tensor::{BitMatrix, Tensor};
 use bold::testing::{assert_close, forall, PropConfig};
@@ -63,7 +63,7 @@ fn prop_bool_linear_backward_is_adjoint() {
         let x = Tensor::rand_pm1(&[b, n_in], c.rng);
         let y = layer.forward(Value::bit_from_pm1(&x), true).expect_f32("f");
         let z = Tensor::from_vec(&[b, n_out], c.normal_vec(b * n_out));
-        let gx = layer.backward(z.clone());
+        let gx = layer.backward(z.clone(), &mut ParamStore::new());
         let lhs: f64 = y.data.iter().zip(&z.data).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
         let rhs: f64 = x.data.iter().zip(&gx.data).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
         if (lhs - rhs).abs() > 1e-2 * lhs.abs().max(1.0) {
@@ -83,7 +83,7 @@ fn prop_threshold_backward_bounded_by_input_signal() {
         let s = Tensor::from_vec(&[1, n], c.normal_vec(n)).scale(n as f32);
         let _ = act.forward(Value::F32(s), true);
         let z = Tensor::from_vec(&[1, n], c.normal_vec(n));
-        let g = act.backward(z.clone());
+        let g = act.backward(z.clone(), &mut ParamStore::new());
         for i in 0..n {
             if g.data[i].abs() > z.data[i].abs() + 1e-6 {
                 return Err(format!("window > 1 at {i}"));
@@ -103,21 +103,21 @@ fn prop_optimizer_flip_iff_aligned_and_saturated() {
         let n = c.dim();
         let mut bits = BitMatrix::random(1, n, c.rng);
         let before = bits.clone();
-        let mut grad = Tensor::from_vec(&[1, n], c.normal_vec(n)).scale(2.0);
-        let mut accum = Tensor::from_vec(&[1, n], c.normal_vec(n));
-        let accum0 = accum.clone();
-        let mut ratio = c.rng.uniform();
-        let beta = ratio;
+        let grad = Tensor::from_vec(&[1, n], c.normal_vec(n)).scale(2.0);
+        let accum0 = Tensor::from_vec(&[1, n], c.normal_vec(n));
+        let beta = c.rng.uniform();
         let lr = 0.5 + c.rng.uniform();
         let opt = BooleanOptimizer::new(lr);
-        let mut params = vec![ParamRef::Bool {
-            name: "w".into(),
-            bits: &mut bits,
-            grad: &mut grad,
-            accum: &mut accum,
-            ratio: &mut ratio,
-        }];
-        opt.step(&mut params);
+        let mut store = ParamStore::new();
+        store.accumulate("w", &grad);
+        {
+            let slot = store.slot_mut("w");
+            slot.accum_mut(n).data.copy_from_slice(&accum0.data);
+            slot.ratio = beta;
+        }
+        let mut params = vec![ParamRef::Bool { name: "w".into(), bits: &mut bits }];
+        opt.step(&mut params, &mut store);
+        let accum = &store.slot("w").unwrap().accum;
         for i in 0..n {
             let m = beta * accum0.data[i] + lr * grad.data[i];
             let w = before.pm1(0, i);

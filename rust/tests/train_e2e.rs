@@ -10,7 +10,7 @@ use bold::models::edsr::psnr;
 use bold::models::{
     edsr_small, segnet_boolean, vgg_small, EdsrConfig, SegNetConfig, VggConfig, VggKind,
 };
-use bold::nn::{l1_loss, softmax_cross_entropy_nchw, Layer, Value};
+use bold::nn::{l1_loss, softmax_cross_entropy_nchw, Layer, ParamStore, Value};
 use bold::optim::{Adam, BooleanOptimizer};
 use bold::util::Rng;
 
@@ -57,17 +57,18 @@ fn boolean_edsr_beats_naive_upsampling() {
     let mut model = edsr_small(&cfg, &mut Rng::new(1));
     let bool_opt = BooleanOptimizer::new(6.0);
     let mut adam = Adam::new(1e-3);
+    let mut store = ParamStore::new();
     let mut sampler = bold::data::BatchSampler::new(train.n, 8, 1);
     for _ in 0..120 {
         let idx = sampler.next_batch();
         let (lr, hr) = train.batch(&idx);
         let pred = model.forward(Value::F32(lr), true).expect_f32("sr");
         let out = l1_loss(&pred, &hr);
-        model.zero_grads();
-        let _ = model.backward(out.grad);
+        store.zero_grads();
+        let _ = model.backward(out.grad, &mut store);
         let mut params = model.params();
-        bool_opt.step(&mut params);
-        adam.step(&mut params);
+        bool_opt.step(&mut params, &mut store);
+        adam.step(&mut params, &mut store);
     }
     let idx: Vec<usize> = (0..val.n).collect();
     let (lr, hr) = val.batch(&idx);
@@ -99,17 +100,18 @@ fn boolean_segnet_beats_majority_class() {
     let mut model = segnet_boolean(&scfg, &mut Rng::new(4));
     let bool_opt = BooleanOptimizer::new(6.0);
     let mut adam = Adam::new(1e-3);
+    let mut store = ParamStore::new();
     let mut sampler = bold::data::BatchSampler::new(train.n, 8, 1);
     for _ in 0..100 {
         let idx = sampler.next_batch();
         let (x, labels) = train.batch(&idx);
         let logits = model.forward(Value::F32(x), true).expect_f32("seg");
         let out = softmax_cross_entropy_nchw(&logits, &labels, None);
-        model.zero_grads();
-        let _ = model.backward(out.grad);
+        store.zero_grads();
+        let _ = model.backward(out.grad, &mut store);
         let mut params = model.params();
-        bool_opt.step(&mut params);
-        adam.step(&mut params);
+        bool_opt.step(&mut params, &mut store);
+        adam.step(&mut params, &mut store);
     }
     let idx: Vec<usize> = (0..val.n).collect();
     let (x, labels) = val.batch(&idx);

@@ -80,19 +80,20 @@ fn native_and_xla_weight_votes_agree() {
         *y.at2_mut(i, l) = 1.0;
     }
 
-    // native: forward + CE + backward
+    // native: forward + CE + backward (votes land in the ParamStore)
     let logits = model.forward(Value::bit_from_pm1(&x), true).expect_f32("native");
     let out = bold::nn::softmax_cross_entropy(&logits, &labels);
-    model.zero_grads();
-    let _ = model.backward(out.grad);
+    let mut store = bold::nn::ParamStore::new();
+    let _ = model.backward(out.grad, &mut store);
     let mut q1_native = None;
     let mut q2_native = None;
     for p in model.params() {
-        if let bold::nn::ParamRef::Bool { name, grad, .. } = p {
+        if let bold::nn::ParamRef::Bool { name, .. } = p {
+            let grad = store.grad(&name).expect("vote buffer").clone();
             if name.starts_with("bl0") {
-                q1_native = Some(grad.clone());
+                q1_native = Some(grad);
             } else {
-                q2_native = Some(grad.clone());
+                q2_native = Some(grad);
             }
         }
     }
