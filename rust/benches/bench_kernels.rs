@@ -1,0 +1,153 @@
+//! Kernel sweep with a threads = {1, N} column: every packed and dense
+//! hot-path kernel, sequential vs sharded across the persistent pool
+//! (DESIGN.md §Parallelism). Template rows for EXPERIMENTS.md §Perf.
+//!
+//! The thread column is driven by `pool::with_thread_budget`, so a single
+//! run measures both paths on identical inputs; the determinism suite
+//! (`tests/parallel_determinism.rs`) separately asserts the two paths are
+//! bit-exact. (Custom harness: no criterion in the offline registry.)
+
+use bold::nn::{ParamRef, ParamStore};
+use bold::optim::BooleanOptimizer;
+use bold::tensor::{BitMatrix, Tensor};
+use bold::util::{pool, Rng, Timer};
+
+/// Median seconds for `f` under a fixed intra-op thread budget.
+fn timed<F: FnMut()>(name: &str, budget: usize, mut f: F) -> f64 {
+    pool::with_thread_budget(budget, || {
+        let mut t = Timer::new(name);
+        t.bench(2, 7, &mut f);
+        t.median()
+    })
+}
+
+/// One table row: kernel × shape, threads=1 vs threads=N, speedup.
+fn row(label: &str, work: f64, mut f: impl FnMut()) {
+    let n = pool::num_threads();
+    let t1 = timed(label, 1, &mut f);
+    let tn = timed(label, n, &mut f);
+    println!(
+        "{label:<44} t1 {:>9.3} ms  t{n} {:>9.3} ms  speedup {:>5.2}x  {:>8.2} Gop/s",
+        t1 * 1e3,
+        tn * 1e3,
+        t1 / tn,
+        work / tn / 1e9
+    );
+}
+
+fn main() {
+    println!(
+        "== bench_kernels: packed + dense kernels, threads = 1 vs {} (BOLD_NUM_THREADS)\n",
+        pool::num_threads()
+    );
+    let mut rng = Rng::new(7);
+
+    println!("-- packed forward (xnor-popcount)");
+    for (b, n, m) in [(64, 256, 1024), (128, 512, 4096), (256, 512, 8192)] {
+        let x = BitMatrix::random(b, m, &mut rng);
+        let w = BitMatrix::random(n, m, &mut rng);
+        let mut mask = BitMatrix::zeros(b, m);
+        for i in 0..b {
+            for j in 0..m {
+                mask.set(i, j, rng.bernoulli(0.9));
+            }
+        }
+        let macs = (b * n * m) as f64;
+        let mut out = Tensor::zeros(&[0]);
+        row(&format!("xnor_gemm {b}x{n}x{m}"), macs, || {
+            x.xnor_gemm_into(&w, &mut out);
+            std::hint::black_box(&out);
+        });
+        row(&format!("xnor_gemm_masked {b}x{n}x{m}"), macs, || {
+            x.xnor_gemm_masked_into(&w, &mask, &mut out);
+            std::hint::black_box(&out);
+        });
+        let mut bits_out = BitMatrix::zeros(0, 0);
+        row(&format!("xnor_threshold {b}x{n}x{m}"), macs, || {
+            x.xnor_threshold_into(&w, None, 0.0, &mut bits_out);
+            std::hint::black_box(&bits_out);
+        });
+        let lane: Vec<u64> = mask.row(0).to_vec();
+        row(&format!("xnor_threshold_masked {b}x{n}x{m}"), macs, || {
+            x.xnor_threshold_masked_into(&w, &lane, None, 0.0, &mut bits_out);
+            std::hint::black_box(&bits_out);
+        });
+    }
+
+    println!("\n-- packed backward (dense z against packed operands)");
+    for (b, n, m) in [(128, 512, 4096), (256, 512, 8192)] {
+        let x = BitMatrix::random(b, m, &mut rng);
+        let w = BitMatrix::random(n, m, &mut rng);
+        let mut mask = BitMatrix::zeros(b, m);
+        for i in 0..b {
+            for j in 0..m {
+                mask.set(i, j, rng.bernoulli(0.9));
+            }
+        }
+        let z = Tensor::randn(&[b, n], 1.0, &mut rng);
+        let macs = (b * n * m) as f64;
+        let mut out = Tensor::zeros(&[0]);
+        row(&format!("backward_input {b}x{n}x{m}"), macs, || {
+            w.backward_input_into(&z, &mut out);
+            std::hint::black_box(&out);
+        });
+        row(&format!("backward_weight {b}x{n}x{m}"), macs, || {
+            x.backward_weight_into(&z, &mut out);
+            std::hint::black_box(&out);
+        });
+        row(&format!("backward_weight_masked {b}x{n}x{m}"), macs, || {
+            x.backward_weight_masked_into(&z, &mask, &mut out);
+            std::hint::black_box(&out);
+        });
+    }
+
+    println!("\n-- dense f32 GEMM");
+    for (m, k, n) in [(128, 1024, 256), (256, 4096, 512)] {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b_ = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let bt = b_.transpose2();
+        let at = a.transpose2();
+        let macs = (m * k * n) as f64;
+        row(&format!("matmul {m}x{k}x{n}"), macs, || {
+            std::hint::black_box(a.matmul(&b_));
+        });
+        row(&format!("matmul_bt {m}x{k}x{n}"), macs, || {
+            std::hint::black_box(a.matmul_bt(&bt));
+        });
+        row(&format!("matmul_at {m}x{k}x{n}"), macs, || {
+            std::hint::black_box(at.matmul_at(&b_));
+        });
+    }
+
+    println!("\n-- conv data movement (im2col / col2im)");
+    for (n, c, h, k) in [(32, 16, 32, 3), (16, 64, 16, 3)] {
+        let x = Tensor::randn(&[n, c, h, h], 1.0, &mut rng);
+        let cols = x.im2col(k, 1, 1);
+        let moved = (cols.rows() * cols.cols()) as f64;
+        row(&format!("im2col n{n} c{c} {h}x{h} k{k}"), moved, || {
+            std::hint::black_box(x.im2col(k, 1, 1));
+        });
+        row(&format!("col2im n{n} c{c} {h}x{h} k{k}"), moved, || {
+            std::hint::black_box(cols.col2im(n, c, h, h, k, 1, 1));
+        });
+    }
+
+    println!("\n-- Boolean optimizer step (word-parallel flip kernel)");
+    for (rows, cols) in [(512, 4096), (2048, 8192)] {
+        let bits0 = BitMatrix::random(rows, cols, &mut rng);
+        let grad = Tensor::randn(&[rows, cols], 1.1, &mut rng);
+        let opt = BooleanOptimizer::new(1.0);
+        let lanes = (rows * cols) as f64;
+        let mut bits = bits0.clone();
+        let mut store = ParamStore::new();
+        row(&format!("optimizer_step {rows}x{cols}"), lanes, || {
+            // re-seed votes each rep so the scan has work to do
+            store.zero_grads();
+            store.accumulate("w", &grad);
+            let mut params = vec![ParamRef::Bool { name: "w".into(), bits: &mut bits }];
+            std::hint::black_box(opt.step(&mut params, &mut store));
+        });
+    }
+
+    println!("\n(bit-exactness of every t1-vs-tN pair: tests/parallel_determinism.rs)");
+}

@@ -15,6 +15,7 @@ use crate::config::TrainConfig;
 use crate::data::ImageDataset;
 use crate::nn::{softmax_cross_entropy, Layer, ParamRef, ParamStore, Sequential, Value};
 use crate::optim::FlipStats;
+use crate::util::pool;
 
 /// Multi-worker trainer with vote aggregation.
 pub struct ParallelTrainer {
@@ -69,6 +70,11 @@ impl ParallelTrainer {
             s.zero_grads();
         }
         // --- parallel forward/backward on each replica's shard ---
+        // Thread-budget handoff (DESIGN.md §Parallelism): each worker's
+        // intra-op kernels shard over at most its fair share of the pool,
+        // so data-parallel × intra-op never oversubscribes the machine.
+        let n_active = shards.len();
+        let intra_budget = (pool::num_threads() / n_active.max(1)).max(1);
         let results: Vec<(f32, usize)> = std::thread::scope(|scope| {
             let stores = std::iter::once(&mut self.opt.store)
                 .chain(self.worker_stores.iter_mut());
@@ -77,6 +83,7 @@ impl ParallelTrainer {
                 self.replicas.iter_mut().zip(stores).zip(shards)
             {
                 handles.push(scope.spawn(move || {
+                    let _budget = pool::BudgetGuard::new(intra_budget);
                     let logits = model.forward(x, true).expect_f32("worker");
                     let out = softmax_cross_entropy(&logits, &labels);
                     // scale shard gradient by shard/total so the summed

@@ -23,12 +23,23 @@ pub struct BoolConv2d {
     pub weights: BitMatrix,
     pub bool_bprop: bool,
     name: String,
-    // caches
-    cache_patches: Option<BitMatrix>,
-    cache_mask: Option<BitMatrix>,
+    // --- caches and reusable scratch (steady-state training and
+    // inference allocate nothing below; buffers are reshaped in place) ---
+    /// Bit-im2col patches of the latest forward (backward reads them).
+    patches: BitMatrix,
+    /// Set by a train-mode forward; `None` blocks backward after eval.
     cache_dims: Option<(usize, usize, usize, usize, usize)>, // n, h, w, oh, ow
-    /// Geometry-keyed validity-mask cache: (n, h, w, mask).
-    cache_mask_geom: Option<(usize, usize, usize, BitMatrix)>,
+    /// Geometry key (n, h, w) for which `mask` is valid.
+    mask_geom: Option<(usize, usize, usize)>,
+    /// Validity mask (𝕄 zeros at padded taps); depends only on geometry,
+    /// so it is rebuilt only when the input geometry changes.
+    mask: BitMatrix,
+    /// GEMM pre-activation rows (N·OH·OW × Cout).
+    scratch_s: Tensor,
+    /// Weight-vote buffer for Eq. (7).
+    scratch_qw: Tensor,
+    /// Patch-level upstream signal (N·OH·OW × C·k·k).
+    scratch_gcols: Tensor,
 }
 
 impl BoolConv2d {
@@ -51,10 +62,13 @@ impl BoolConv2d {
             weights: BitMatrix::random(c_out, fanin, rng),
             bool_bprop: false,
             name: name.to_string(),
-            cache_patches: None,
-            cache_mask: None,
+            patches: BitMatrix::zeros(0, 0),
             cache_dims: None,
-            cache_mask_geom: None,
+            mask_geom: None,
+            mask: BitMatrix::zeros(0, 0),
+            scratch_s: Tensor::zeros(&[0]),
+            scratch_qw: Tensor::zeros(&[0]),
+            scratch_gcols: Tensor::zeros(&[0]),
         }
     }
 
@@ -80,34 +94,27 @@ impl BoolConv2d {
         )
     }
 
-    /// Bit-level im2col: patches (N·OH·OW × C·k·k) + validity mask.
+    /// Bit-level im2col into the layer's reusable `patches` buffer, plus
+    /// the geometry-cached validity mask.
     ///
     /// The k taps along x map to *consecutive* source columns, so each
     /// (output-row, channel, ky) copies one ≤k-bit run with a single
     /// word-level `get_bits`/`set_bits` pair — ~k× fewer bit ops than the
     /// naive per-tap loop (§Perf iteration log). The mask depends only on
-    /// the geometry, so it is built once and cached by the layer.
-    fn bit_im2col(
-        &mut self,
-        bits: &BitMatrix,
-        n: usize,
-        h: usize,
-        w: usize,
-    ) -> (BitMatrix, BitMatrix, usize, usize) {
+    /// the geometry, so it is rebuilt only when (n, h, w) changes and is
+    /// borrowed (never cloned) by forward/backward.
+    fn bit_im2col(&mut self, bits: &BitMatrix, n: usize, h: usize, w: usize) -> (usize, usize) {
         let (oh, ow) = self.out_hw(h, w);
         let (c, k, s, p) = (self.c_in, self.k, self.stride, self.pad);
         assert!(k <= 56, "kernel too large for word-level im2col");
         let cols = c * k * k;
-        let mut patches = BitMatrix::zeros(n * oh * ow, cols);
-        let build_mask = match &self.cache_mask_geom {
-            Some((gn, gh, gw, _)) if (*gn, *gh, *gw) == (n, h, w) => false,
-            _ => true,
-        };
-        let mut mask = if build_mask {
-            BitMatrix::zeros(n * oh * ow, cols)
-        } else {
-            BitMatrix::zeros(0, 0) // placeholder, replaced below
-        };
+        let build_mask = self.mask_geom != Some((n, h, w));
+        let mut patches = std::mem::replace(&mut self.patches, BitMatrix::zeros(0, 0));
+        patches.zero_resize(n * oh * ow, cols);
+        let mut mask = std::mem::replace(&mut self.mask, BitMatrix::zeros(0, 0));
+        if build_mask {
+            mask.zero_resize(n * oh * ow, cols);
+        }
         for ni in 0..n {
             for oy in 0..oh {
                 for ox in 0..ow {
@@ -138,11 +145,12 @@ impl BoolConv2d {
                 }
             }
         }
+        self.patches = patches;
+        self.mask = mask;
         if build_mask {
-            self.cache_mask_geom = Some((n, h, w, mask));
+            self.mask_geom = Some((n, h, w));
         }
-        let mask = self.cache_mask_geom.as_ref().unwrap().3.clone();
-        (patches, mask, oh, ow)
+        (oh, ow)
     }
 }
 
@@ -152,33 +160,38 @@ impl Layer for BoolConv2d {
         assert_eq!(shape.len(), 4, "{}: need NCHW", self.name);
         let (n, c, h, w) = (shape[0], shape[1], shape[2], shape[3]);
         assert_eq!(c, self.c_in, "{}: channel mismatch", self.name);
-        let (patches, mask, oh, ow) = self.bit_im2col(&bits, n, h, w);
-        let s_rows = patches.xnor_gemm_masked(&self.weights, &mask); // (N·OH·OW × Cout)
+        let (oh, ow) = self.bit_im2col(&bits, n, h, w);
+        // (N·OH·OW × Cout), computed into the reused scratch buffer
+        let mut s_rows = std::mem::replace(&mut self.scratch_s, Tensor::zeros(&[0]));
+        self.patches.xnor_gemm_masked_into(&self.weights, &self.mask, &mut s_rows);
         let s = s_rows.rows_to_nchw(n, self.c_out, oh, ow);
-        if train {
-            self.cache_patches = Some(patches);
-            self.cache_mask = Some(mask);
-            self.cache_dims = Some((n, h, w, oh, ow));
-        }
+        self.scratch_s = s_rows;
+        // The patches buffer doubles as the backward cache; an eval-mode
+        // forward overwrites it, so it also invalidates `cache_dims`.
+        self.cache_dims = if train { Some((n, h, w, oh, ow)) } else { None };
         Value::F32(s)
     }
 
     fn backward(&mut self, z: Tensor, store: &mut ParamStore) -> Tensor {
-        let (n, h, w, oh, ow) = self.cache_dims.expect("backward before forward");
+        let (n, h, w, oh, ow) = self.cache_dims.expect("backward before (train-mode) forward");
         assert_eq!(z.shape, vec![n, self.c_out, oh, ow], "{}: bad z", self.name);
+        let weight_key = self.weight_key();
         let z_rows = z.nchw_to_rows(); // (N·OH·OW × Cout)
-        let patches = self.cache_patches.as_ref().unwrap();
-        let mask = self.cache_mask.as_ref().unwrap();
 
-        // Weight vote (Eq. 7): padded taps vote 0.
-        let q_w = patches.backward_weight_masked(&z_rows, mask);
-        store.accumulate(&self.weight_key(), &q_w);
+        // Weight vote (Eq. 7): padded taps vote 0. Computed into the
+        // layer's reusable scratch, then added to the store.
+        let mut q_w = std::mem::replace(&mut self.scratch_qw, Tensor::zeros(&[0]));
+        self.patches.backward_weight_masked_into(&z_rows, &self.mask, &mut q_w);
+        store.accumulate(&weight_key, &q_w);
+        self.scratch_qw = q_w;
 
         // Upstream signal (Eq. 8): scatter the patch-level signal back to
         // input positions. Padded lanes are dropped by col2im geometry —
         // the same masking, expressed spatially.
-        let g_cols = self.weights.backward_input(&z_rows); // (N·OH·OW × C·k·k)
+        let mut g_cols = std::mem::replace(&mut self.scratch_gcols, Tensor::zeros(&[0]));
+        self.weights.backward_input_into(&z_rows, &mut g_cols); // (N·OH·OW × C·k·k)
         let mut g_x = g_cols.col2im(n, self.c_in, h, w, self.k, self.stride, self.pad);
+        self.scratch_gcols = g_cols;
         if self.bool_bprop {
             g_x = g_x.sign_pm1();
         }
@@ -248,6 +261,37 @@ mod tests {
         let g_cols = z.nchw_to_rows().matmul(&conv.weights.to_pm1());
         let g_ref = g_cols.col2im(1, 2, 5, 5, 3, 1, 1);
         assert!(g.max_abs_diff(&g_ref) < 1e-3);
+    }
+
+    /// Buffer-reuse regression: alternating input geometries must keep
+    /// rebuilding/borrowing the right validity mask and reshaped scratch
+    /// buffers — every forward equals a fresh layer's forward exactly.
+    #[test]
+    fn geometry_switches_keep_reused_buffers_correct() {
+        let mut rng = Rng::new(7);
+        let mut conv = BoolConv2d::new("bc", 2, 3, 3, 1, 1, &mut rng);
+        let weights = conv.weights.clone();
+        let shapes: [[usize; 4]; 4] = [[2, 2, 8, 8], [1, 2, 5, 5], [2, 2, 8, 8], [3, 2, 6, 6]];
+        for (step, shp) in shapes.iter().enumerate() {
+            let x = Tensor::rand_pm1(&[shp[0], shp[1], shp[2], shp[3]], &mut rng);
+            let out = conv.forward(Value::bit_from_pm1(&x), true).expect_f32("t");
+            let want = ref_conv(&x, &weights, 3, 3, 1, 1);
+            assert_eq!(out.max_abs_diff(&want), 0.0, "step {step} shape {shp:?}");
+        }
+    }
+
+    /// Backward after an eval-mode forward must panic (the eval forward
+    /// overwrote the shared patches buffer), not silently mis-vote.
+    #[test]
+    #[should_panic(expected = "backward before")]
+    fn backward_after_eval_forward_panics() {
+        let mut rng = Rng::new(8);
+        let mut conv = BoolConv2d::new("bc", 1, 2, 3, 1, 1, &mut rng);
+        let mut store = ParamStore::new();
+        let x = Tensor::rand_pm1(&[1, 1, 5, 5], &mut rng);
+        let _ = conv.forward(Value::bit_from_pm1(&x), false);
+        let z = Tensor::randn(&[1, 2, 5, 5], 1.0, &mut rng);
+        let _ = conv.backward(z, &mut store);
     }
 
     #[test]

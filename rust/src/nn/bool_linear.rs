@@ -28,9 +28,14 @@ pub struct BoolLinear {
     /// the real-valued vote (Algorithm 7).
     pub bool_bprop: bool,
     name: String,
-    // --- cached forward inputs ---
+    // --- cached forward inputs (allocations reused across steps) ---
     cache_bits: Option<BitMatrix>,
     cache_f32: Option<Tensor>,
+    // --- reusable scratch (steady-state training allocates nothing here) ---
+    /// Weight-vote buffer for Eq. (7), handed to `store.accumulate`.
+    scratch_qw: Tensor,
+    /// Decoded ±1 bias row (`n_out` lanes), refreshed per forward.
+    bias_row: Vec<f32>,
 }
 
 impl BoolLinear {
@@ -44,6 +49,8 @@ impl BoolLinear {
             name: name.to_string(),
             cache_bits: None,
             cache_f32: None,
+            scratch_qw: Tensor::zeros(&[0]),
+            bias_row: Vec::new(),
         }
     }
 
@@ -67,12 +74,20 @@ impl BoolLinear {
         format!("{}.bias", self.name)
     }
 
-    fn add_bias(&self, s: &mut Tensor) {
+    /// Add the Boolean bias: the ±1 row is decoded ONCE per call via the
+    /// byte LUT ([`BitMatrix::decode_pm1_row`]) into a reused scratch row,
+    /// then streamed over the batch — not one `BitMatrix::pm1` bit probe
+    /// per output element per batch row.
+    fn add_bias(&mut self, s: &mut Tensor) {
         if let Some(b) = &self.bias {
             let n = self.n_out;
-            for i in 0..s.rows() {
-                for j in 0..n {
-                    *s.at2_mut(i, j) += b.pm1(0, j);
+            self.bias_row.resize(n, 0.0);
+            b.decode_pm1_row(0, &mut self.bias_row);
+            let rows = s.rows();
+            for i in 0..rows {
+                let srow = &mut s.data[i * n..(i + 1) * n];
+                for (sv, &bv) in srow.iter_mut().zip(&self.bias_row) {
+                    *sv += bv;
                 }
             }
         }
@@ -87,7 +102,11 @@ impl Layer for BoolLinear {
                     "{}: fan-in mismatch {:?}", self.name, shape);
                 let s = bits.xnor_gemm(&self.weights);
                 if train {
-                    self.cache_bits = Some(bits.clone());
+                    // clone_from reuses the cached allocation across steps
+                    match &mut self.cache_bits {
+                        Some(c) => c.clone_from(bits),
+                        slot => *slot = Some(bits.clone()),
+                    }
                     self.cache_f32 = None;
                 }
                 s
@@ -112,15 +131,17 @@ impl Layer for BoolLinear {
 
     fn backward(&mut self, z: Tensor, store: &mut ParamStore) -> Tensor {
         assert_eq!(z.cols(), self.n_out, "{}: bad z", self.name);
-        // Weight vote, Eq. (7): q_W += zᵀ · e(X).
-        let q_w = if let Some(bits) = &self.cache_bits {
-            bits.backward_weight(&z)
+        let weight_key = self.weight_key();
+        // Weight vote, Eq. (7): q_W += zᵀ · e(X) — computed into the
+        // layer's reusable scratch, then added to the store.
+        if let Some(bits) = &self.cache_bits {
+            bits.backward_weight_into(&z, &mut self.scratch_qw);
         } else if let Some(xf) = &self.cache_f32 {
-            z.matmul_at(xf) // zᵀ (n_out×B) · x (B×n_in)
+            self.scratch_qw = z.matmul_at(xf); // zᵀ (n_out×B) · x (B×n_in)
         } else {
             panic!("{}: backward before forward", self.name)
-        };
-        store.accumulate(&self.weight_key(), &q_w);
+        }
+        store.accumulate(&weight_key, &self.scratch_qw);
         // Bias vote: pairs with constant TRUE input ⇒ q_b = Σ_k z.
         if self.bias.is_some() {
             let qb = z.sum_rows().reshape(&[1, self.n_out]);

@@ -20,31 +20,21 @@
 //! of one 64-lane word builds a 64-bit flip mask, then a single
 //! `words[i] ^= mask` commits all of that word's flips at once — the
 //! dataflow the paper's energy analysis (§5) assumes, instead of per-bit
-//! `get`/`flip` calls. Rows are sharded across `std::thread::scope`
-//! workers for large tensors. The per-element arithmetic (and therefore
+//! `get`/`flip` calls. For large tensors, disjoint row ranges shard across
+//! the persistent [`crate::util::pool`] (DESIGN.md §Parallelism) — no
+//! per-call thread spawning. The per-element arithmetic (and therefore
 //! the result) is bit-identical to the scalar rule; only the write path
 //! is word-granular.
 
 use crate::nn::{ParamRef, ParamStore};
+use crate::util::pool;
 
-/// Minimum weights per spawned thread (~256 Ki lanes ≈ 100s of µs of
-/// scan): thread count scales with the WORK, so tensors that would give
-/// each thread less work than its own spawn/join cost stay on the
-/// single-threaded path.
+/// Minimum weights per pool shard (~256 Ki lanes ≈ 100s of µs of scan):
+/// shard count scales with the WORK, so tensors that would give a shard
+/// less work than the enqueue/wakeup overhead stay on the sequential
+/// path. The shard cap itself (thread budget, row count) lives in
+/// [`pool::shards_for`].
 const PAR_QUANTUM: usize = 1 << 18;
-
-/// Shard count for a (rows × cols) tensor: work-proportional, capped by
-/// row count (the shard unit), core count, and a sanity limit.
-fn thread_count(total: usize, rows: usize) -> usize {
-    let by_work = total / PAR_QUANTUM;
-    if by_work <= 1 {
-        return 1;
-    }
-    by_work
-        .min(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
-        .min(rows)
-        .min(16)
-}
 
 /// Flip statistics for one step (for logging / Fig. 4-style diagnostics).
 #[derive(Debug, Clone, Copy, Default)]
@@ -134,8 +124,9 @@ impl BooleanOptimizer {
     }
 }
 
-/// One tensor's flip pass: returns the number of flips. Shards rows
-/// across scoped threads when the tensor is large enough.
+/// One tensor's flip pass: returns the number of flips. Shards disjoint
+/// row ranges across the persistent pool when the tensor is large enough
+/// (no per-call thread spawning).
 fn step_one(
     lr: f32,
     clip: Option<f32>,
@@ -147,14 +138,15 @@ fn step_one(
     let rows = bits.rows;
     let cols = bits.cols;
     let wpr = bits.wpr;
-    let threads = thread_count(rows * cols, rows);
-    if threads <= 1 {
+    let shards = pool::shards_for(rows * cols, rows, PAR_QUANTUM);
+    if shards <= 1 {
         return step_rows(lr, clip, &mut bits.words, grad, accum, beta, cols, wpr);
     }
-    let rows_per = rows.div_ceil(threads);
-    let mut flips = 0usize;
-    std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(threads);
+    let rows_per = rows.div_ceil(shards);
+    let mut counts = vec![0usize; rows.div_ceil(rows_per)];
+    {
+        let mut tasks = Vec::with_capacity(counts.len());
+        let mut counts_rest: &mut [usize] = &mut counts;
         let mut words_rest: &mut [u64] = &mut bits.words;
         let mut grad_rest: &[f32] = grad;
         let mut accum_rest: &mut [f32] = accum;
@@ -164,19 +156,19 @@ fn step_one(
             let (w_chunk, w_rem) = words_rest.split_at_mut(take * wpr);
             let (g_chunk, g_rem) = grad_rest.split_at(take * cols);
             let (a_chunk, a_rem) = accum_rest.split_at_mut(take * cols);
+            let (c_slot, c_rem) = counts_rest.split_at_mut(1);
             words_rest = w_rem;
             grad_rest = g_rem;
             accum_rest = a_rem;
-            handles.push(scope.spawn(move || {
-                step_rows(lr, clip, w_chunk, g_chunk, a_chunk, beta, cols, wpr)
-            }));
+            counts_rest = c_rem;
+            tasks.push(move || {
+                c_slot[0] = step_rows(lr, clip, w_chunk, g_chunk, a_chunk, beta, cols, wpr);
+            });
             row += take;
         }
-        for h in handles {
-            flips += h.join().expect("optimizer shard panicked");
-        }
-    });
-    flips
+        pool::run_scoped(tasks);
+    }
+    counts.iter().sum()
 }
 
 /// Scalar-exact scan over a contiguous block of rows, committing flips

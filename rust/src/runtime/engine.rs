@@ -76,12 +76,55 @@ pub struct PackedLayer {
 impl PackedLayer {
     /// Fused forward: packed bits in, packed bits out.
     pub fn apply(&self, x: &BitMatrix) -> BitMatrix {
+        let mut out = BitMatrix::zeros(0, 0);
+        self.apply_into(x, &mut out);
+        out
+    }
+
+    /// [`Self::apply`] into a reusable output matrix (the engine's
+    /// ping-pong activation buffers — no allocation on the serving path).
+    pub fn apply_into(&self, x: &BitMatrix, out: &mut BitMatrix) {
         match &self.input_mask {
-            Some(m) => {
-                x.xnor_threshold_masked(&self.weights, m, self.bias.as_ref(), self.threshold)
-            }
-            None => x.xnor_threshold(&self.weights, self.bias.as_ref(), self.threshold),
+            Some(m) => x.xnor_threshold_masked_into(
+                &self.weights,
+                m,
+                self.bias.as_ref(),
+                self.threshold,
+                out,
+            ),
+            None => x.xnor_threshold_into(&self.weights, self.bias.as_ref(), self.threshold, out),
         }
+    }
+}
+
+/// Reusable per-caller buffers for [`PackedMlp::forward_bits_into`]: two
+/// ping-pong packed activation matrices, the FP head's decoded ±1 scratch
+/// row and the logits tensor. One instance per serving worker makes the
+/// steady-state batch path allocation-free; the engine itself stays
+/// stateless (`&self` forwards), so sharing one `PackedMlp` across
+/// workers is still safe.
+pub struct EngineScratch {
+    ping: BitMatrix,
+    pong: BitMatrix,
+    row: Vec<f32>,
+    /// Logits of the last forward (B × d_out).
+    pub logits: Tensor,
+}
+
+impl EngineScratch {
+    pub fn new() -> Self {
+        EngineScratch {
+            ping: BitMatrix::zeros(0, 0),
+            pong: BitMatrix::zeros(0, 0),
+            row: Vec::new(),
+            logits: Tensor::zeros(&[0]),
+        }
+    }
+}
+
+impl Default for EngineScratch {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -285,15 +328,31 @@ impl PackedMlp {
     /// Boolean layers stay packed end to end; only the FP head produces
     /// f32, via a single reused scratch row.
     pub fn forward_bits(&self, x: &BitMatrix) -> Tensor {
+        let mut scratch = EngineScratch::new();
+        self.forward_bits_into(x, &mut scratch);
+        scratch.logits
+    }
+
+    /// [`Self::forward_bits`] against caller-owned [`EngineScratch`]
+    /// buffers; the logits land in `scratch.logits`. Steady-state serving
+    /// (one scratch per worker) performs zero allocations per batch.
+    pub fn forward_bits_into(&self, x: &BitMatrix, scratch: &mut EngineScratch) {
         assert_eq!(x.cols, self.d_in(), "input width {} vs model d_in {}", x.cols, self.d_in());
         match self.layers.split_first() {
-            None => self.head_forward(x),
+            None => self.head_forward_into(x, &mut scratch.row, &mut scratch.logits),
             Some((first, rest)) => {
-                let mut cur = first.apply(x);
+                first.apply_into(x, &mut scratch.ping);
+                let mut cur_is_ping = true;
                 for l in rest {
-                    cur = l.apply(&cur);
+                    if cur_is_ping {
+                        l.apply_into(&scratch.ping, &mut scratch.pong);
+                    } else {
+                        l.apply_into(&scratch.pong, &mut scratch.ping);
+                    }
+                    cur_is_ping = !cur_is_ping;
                 }
-                self.head_forward(&cur)
+                let cur = if cur_is_ping { &scratch.ping } else { &scratch.pong };
+                self.head_forward_into(cur, &mut scratch.row, &mut scratch.logits);
             }
         }
     }
@@ -317,35 +376,34 @@ impl PackedMlp {
     /// + tail) over one decoded ±1 scratch row, then adds the bias — so
     /// the result is bit-identical to `nn::Linear::forward` on the
     /// unpacked activations.
-    fn head_forward(&self, bits: &BitMatrix) -> Tensor {
+    fn head_forward_into(&self, bits: &BitMatrix, row: &mut Vec<f32>, out: &mut Tensor) {
         let b = bits.rows;
         let (n_out, n_in) = (self.head_w.rows(), self.head_w.cols());
         assert_eq!(bits.cols, n_in, "head fan-in {} vs {}", bits.cols, n_in);
-        let mut out = vec![0.0f32; b * n_out];
-        let mut scratch = vec![0.0f32; n_in];
+        out.resize_to(&[b, n_out]);
+        row.resize(n_in, 0.0);
         let k4 = n_in - n_in % 4;
         for i in 0..b {
-            bits.decode_pm1_row(i, &mut scratch);
-            let orow = &mut out[i * n_out..(i + 1) * n_out];
+            bits.decode_pm1_row(i, row);
+            let orow = &mut out.data[i * n_out..(i + 1) * n_out];
             for (j, o) in orow.iter_mut().enumerate() {
                 let wrow = &self.head_w.data[j * n_in..(j + 1) * n_in];
                 let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
                 let mut p = 0;
                 while p < k4 {
-                    s0 += scratch[p] * wrow[p];
-                    s1 += scratch[p + 1] * wrow[p + 1];
-                    s2 += scratch[p + 2] * wrow[p + 2];
-                    s3 += scratch[p + 3] * wrow[p + 3];
+                    s0 += row[p] * wrow[p];
+                    s1 += row[p + 1] * wrow[p + 1];
+                    s2 += row[p + 2] * wrow[p + 2];
+                    s3 += row[p + 3] * wrow[p + 3];
                     p += 4;
                 }
                 let mut acc = (s0 + s1) + (s2 + s3);
                 for q in k4..n_in {
-                    acc += scratch[q] * wrow[q];
+                    acc += row[q] * wrow[q];
                 }
                 *o = acc + self.head_b.data[j];
             }
         }
-        Tensor::from_vec(&[b, n_out], out)
     }
 }
 
@@ -383,6 +441,24 @@ mod tests {
         let want = model.forward(Value::bit_from_pm1(&x), false).expect_f32("ref");
         let got = engine.forward_f32(&x);
         assert_eq!(got.max_abs_diff(&want), 0.0, "exact parity required");
+    }
+
+    #[test]
+    fn scratch_reuse_across_batches_matches_fresh_forward() {
+        // One EngineScratch reused for shrinking/growing batches must give
+        // exactly the allocating path's logits (the serve-worker pattern).
+        let cfg = MlpConfig { d_in: 70, hidden: vec![33, 17], d_out: 5, tanh_scale: true };
+        let mut rng = Rng::new(9);
+        let mut model = boolean_mlp(&cfg, &mut rng);
+        let engine = PackedMlp::from_layer(&mut model).expect("engine");
+        let mut scratch = EngineScratch::new();
+        for b in [8usize, 3, 12, 1] {
+            let x = Tensor::rand_pm1(&[b, 70], &mut rng);
+            let packed = crate::tensor::BitMatrix::from_pm1(&x);
+            engine.forward_bits_into(&packed, &mut scratch);
+            let want = engine.forward_bits(&packed);
+            assert_eq!(scratch.logits.max_abs_diff(&want), 0.0, "batch {b}");
+        }
     }
 
     #[test]

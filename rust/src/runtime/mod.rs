@@ -18,7 +18,7 @@ pub mod engine;
 pub mod pjrt;
 pub mod serve;
 
-pub use engine::{EngineError, PackedLayer, PackedMlp};
+pub use engine::{EngineError, EngineScratch, PackedLayer, PackedMlp};
 #[cfg(feature = "xla-runtime")]
 pub use pjrt::{literal_to_tensor, tensor_to_literal, PjrtError, PjrtExecutor};
 pub use serve::{NativeServer, Pending, Response, ServeConfig, ServeError, ServerStats};

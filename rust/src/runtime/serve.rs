@@ -20,8 +20,9 @@
 //! Shutdown drains: workers only exit once the queue is empty, so every
 //! accepted request is answered.
 
-use super::engine::PackedMlp;
+use super::engine::{EngineScratch, PackedMlp};
 use crate::tensor::BitMatrix;
+use crate::util::pool;
 use std::collections::VecDeque;
 use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -266,7 +267,14 @@ fn worker_loop(sh: &Shared) {
     let max_batch = sh.cfg.max_batch;
     let window = sh.cfg.batch_window;
     let d = sh.model.d_in();
-    let wpr = d.div_ceil(64);
+    // Thread-budget handoff (DESIGN.md §Parallelism): the workers are
+    // already batch-parallel, so each one limits its kernels' intra-op
+    // sharding to its fair share of the pool.
+    let _budget = pool::BudgetGuard::new((pool::num_threads() / sh.cfg.workers).max(1));
+    // Per-worker reusable buffers: the steady-state batch path does no
+    // allocation beyond the per-request response rows.
+    let mut scratch = EngineScratch::new();
+    let mut x = BitMatrix::zeros(0, 0);
     loop {
         let mut batch: Vec<Request> = Vec::with_capacity(max_batch);
         {
@@ -312,13 +320,12 @@ fn worker_loop(sh: &Shared) {
         }
         sh.not_full.notify_all();
 
-        // one packed forward over the assembled batch
-        let mut words = Vec::with_capacity(batch.len() * wpr);
-        for r in &batch {
-            words.extend_from_slice(&r.words);
-        }
-        let x = BitMatrix::from_words(batch.len(), d, words);
-        let logits = sh.model.forward_bits(&x);
+        // one packed forward over the assembled batch: gather request rows
+        // straight into the reused input matrix (single copy, no staging)
+        x.assign_packed_rows(d, batch.iter().map(|r| r.words.as_slice()));
+        debug_assert_eq!(x.rows, batch.len());
+        sh.model.forward_bits_into(&x, &mut scratch);
+        let logits = &scratch.logits;
         let classes = logits.argmax_rows();
         let n_out = logits.cols();
         sh.served.fetch_add(batch.len(), Ordering::SeqCst);

@@ -14,9 +14,26 @@
 //! paper made concrete. Optional validity masks implement the three-valued
 //! 0 of Definition 3.1 (zero-padding in convolutions): masked-off lanes
 //! contribute nothing to the count.
+//!
+//! # Parallelism and determinism
+//!
+//! Every kernel here shards **disjoint output-row ranges** across the
+//! persistent [`crate::util::pool`] (DESIGN.md §Parallelism): each shard
+//! runs the identical per-element arithmetic in the identical order as the
+//! sequential form, so results are bit-exact for any thread count / any
+//! `BOLD_NUM_THREADS` setting. The `_into` variants additionally reuse a
+//! caller-owned output buffer so steady-state training and serving stop
+//! allocating per batch.
 
 use super::Tensor;
+use crate::util::pool::{self, MAC_QUANTUM};
 use crate::util::Rng;
+
+/// Minimum packed word-ops per pool shard for the XOR+POPCNT kernels
+/// (~65 Ki word ops ≈ tens of µs): tensors that would give a shard less
+/// work than the enqueue/wakeup overhead stay sequential. The LUT
+/// backward kernels use the shared [`pool::MAC_QUANTUM`].
+const WORD_QUANTUM: usize = 1 << 16;
 
 /// Byte → 8-lane ±1 pattern lookup (bit=1 ↦ +1, bit=0 ↦ −1). 8 KiB,
 /// cache-resident; turns the per-bit branchy backward loops into straight
@@ -122,13 +139,28 @@ fn axpy_pm1_masked_row(out: &mut [f32], words: &[u64], mask: &[u64], zv: f32) {
 /// let dense = x.to_pm1().matmul_bt(&w.to_pm1());
 /// assert_eq!(s.max_abs_diff(&dense), 0.0);
 /// ```
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub struct BitMatrix {
     pub rows: usize,
     pub cols: usize,
     /// words per row = ceil(cols / 64)
     pub wpr: usize,
     pub words: Vec<u64>,
+}
+
+impl Clone for BitMatrix {
+    fn clone(&self) -> Self {
+        BitMatrix { rows: self.rows, cols: self.cols, wpr: self.wpr, words: self.words.clone() }
+    }
+
+    /// Reuses the existing word allocation (the layer forward caches rely
+    /// on this to stop allocating per batch).
+    fn clone_from(&mut self, src: &Self) {
+        self.rows = src.rows;
+        self.cols = src.cols;
+        self.wpr = src.wpr;
+        self.words.clone_from(&src.words);
+    }
 }
 
 impl BitMatrix {
@@ -146,6 +178,46 @@ impl BitMatrix {
         let mut m = BitMatrix { rows, cols, wpr, words };
         m.mask_tail();
         m
+    }
+
+    /// Assemble a matrix from per-row packed slices (each `ceil(cols/64)`
+    /// words), reshaping and reusing the existing allocation — the batch
+    /// server gathers request rows with ONE copy and no staging buffer.
+    /// Tail bits beyond `cols` are cleared, as in [`Self::from_words`].
+    pub fn assign_packed_rows<'a, I>(&mut self, cols: usize, rows: I)
+    where
+        I: IntoIterator<Item = &'a [u64]>,
+    {
+        let wpr = cols.div_ceil(64);
+        self.cols = cols;
+        self.wpr = wpr;
+        self.words.clear();
+        let mut count = 0usize;
+        for row in rows {
+            assert_eq!(row.len(), wpr, "packed row width {} vs wpr {wpr}", row.len());
+            self.words.extend_from_slice(row);
+            count += 1;
+        }
+        self.rows = count;
+        self.mask_tail();
+    }
+
+    /// Resize to (rows × cols) reusing the word allocation, leaving the
+    /// contents **unspecified** — for `_into` kernels that fully overwrite
+    /// every word. Not public: callers outside this module go through the
+    /// overwriting kernels or [`Self::zero_resize`].
+    fn reset_dims(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.wpr = cols.div_ceil(64);
+        self.words.resize(rows * self.wpr, 0);
+    }
+
+    /// Resize to (rows × cols) reusing the word allocation, zeroing all
+    /// content (for scratch buffers that are filled with `set_bits` runs).
+    pub fn zero_resize(&mut self, rows: usize, cols: usize) {
+        self.reset_dims(rows, cols);
+        self.words.fill(0);
     }
 
     /// Random ±1 content (each bit Bernoulli(1/2)).
@@ -285,64 +357,30 @@ impl BitMatrix {
     /// `w` the weights (N × M bits); result (B × N) integer pre-activations
     /// as f32. One XOR+POPCNT per word pair.
     pub fn xnor_gemm(&self, w: &BitMatrix) -> Tensor {
+        let mut out = Tensor::zeros(&[0]);
+        self.xnor_gemm_into(w, &mut out);
+        out
+    }
+
+    /// [`Self::xnor_gemm`] into a reusable output tensor (reshaped and
+    /// fully overwritten): batch rows shard across the pool.
+    pub fn xnor_gemm_into(&self, w: &BitMatrix, out: &mut Tensor) {
         assert_eq!(self.cols, w.cols, "fan-in mismatch {} vs {}", self.cols, w.cols);
         let (b, n, m) = (self.rows, w.rows, self.cols);
-        let mut out = vec![0.0f32; b * n];
-        // 2×2 register blocking: each x/w word load is reused twice and
-        // four popcount chains run independently (§Perf iteration log).
-        let mut i = 0;
-        while i + 2 <= b {
-            let x0 = self.row(i);
-            let x1 = self.row(i + 1);
-            let (o_lo, o_hi) = out[i * n..(i + 2) * n].split_at_mut(n);
-            let mut j = 0;
-            while j + 2 <= n {
-                let w0 = w.row(j);
-                let w1 = w.row(j + 1);
-                let (mut d00, mut d01, mut d10, mut d11) = (0u32, 0u32, 0u32, 0u32);
-                for k in 0..x0.len() {
-                    let (a0, a1) = (x0[k], x1[k]);
-                    let (c0, c1) = (w0[k], w1[k]);
-                    d00 += (a0 ^ c0).count_ones();
-                    d01 += (a0 ^ c1).count_ones();
-                    d10 += (a1 ^ c0).count_ones();
-                    d11 += (a1 ^ c1).count_ones();
-                }
-                o_lo[j] = (m as i64 - 2 * d00 as i64) as f32;
-                o_lo[j + 1] = (m as i64 - 2 * d01 as i64) as f32;
-                o_hi[j] = (m as i64 - 2 * d10 as i64) as f32;
-                o_hi[j + 1] = (m as i64 - 2 * d11 as i64) as f32;
-                j += 2;
-            }
-            // tail output column
-            while j < n {
-                let wr = w.row(j);
-                let (mut d0, mut d1) = (0u32, 0u32);
-                for k in 0..x0.len() {
-                    d0 += (x0[k] ^ wr[k]).count_ones();
-                    d1 += (x1[k] ^ wr[k]).count_ones();
-                }
-                o_lo[j] = (m as i64 - 2 * d0 as i64) as f32;
-                o_hi[j] = (m as i64 - 2 * d1 as i64) as f32;
-                j += 1;
-            }
-            i += 2;
+        out.resize_to(&[b, n]);
+        let shards = pool::shards_for(b * n * self.wpr, b, WORD_QUANTUM);
+        if shards <= 1 {
+            gemm_rows(&self.words, self.wpr, w, m, &mut out.data, n);
+            return;
         }
-        // tail input row
-        while i < b {
-            let xr = self.row(i);
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (j, o) in orow.iter_mut().enumerate() {
-                let wr = w.row(j);
-                let mut disagree = 0u32;
-                for (&xw, &ww) in xr.iter().zip(wr) {
-                    disagree += (xw ^ ww).count_ones();
-                }
-                *o = (m as i64 - 2 * disagree as i64) as f32;
-            }
-            i += 1;
-        }
-        Tensor::from_vec(&[b, n], out)
+        let rows_per = b.div_ceil(shards);
+        let tasks: Vec<_> = self
+            .words
+            .chunks(rows_per * self.wpr)
+            .zip(out.data.chunks_mut(rows_per * n))
+            .map(|(xc, oc)| move || gemm_rows(xc, self.wpr, w, m, oc, n))
+            .collect();
+        pool::run_scoped(tasks);
     }
 
     /// Masked Boolean forward for three-valued inputs (Definition 3.1 /
@@ -353,25 +391,34 @@ impl BitMatrix {
     /// s_ij = popc(mask_i) − 2·popc((x_i ⊕ w_j) & mask_i)
     /// ```
     pub fn xnor_gemm_masked(&self, w: &BitMatrix, mask: &BitMatrix) -> Tensor {
+        let mut out = Tensor::zeros(&[0]);
+        self.xnor_gemm_masked_into(w, mask, &mut out);
+        out
+    }
+
+    /// [`Self::xnor_gemm_masked`] into a reusable output tensor. Same 2×2
+    /// register blocking as the unmasked GEMM (each x/mask/w word load is
+    /// reused twice, four popcount chains run independently) — this is the
+    /// `BoolConv2d` forward hot path.
+    pub fn xnor_gemm_masked_into(&self, w: &BitMatrix, mask: &BitMatrix, out: &mut Tensor) {
         assert_eq!(self.cols, w.cols);
         assert_eq!((self.rows, self.cols), (mask.rows, mask.cols));
         let (b, n) = (self.rows, w.rows);
-        let mut out = vec![0.0f32; b * n];
-        for i in 0..b {
-            let xr = self.row(i);
-            let mr = mask.row(i);
-            let valid: i64 = mr.iter().map(|w| w.count_ones() as i64).sum();
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (j, o) in orow.iter_mut().enumerate() {
-                let wr = w.row(j);
-                let mut disagree = 0i64;
-                for ((&xw, &ww), &mw) in xr.iter().zip(wr).zip(mr) {
-                    disagree += ((xw ^ ww) & mw).count_ones() as i64;
-                }
-                *o = (valid - 2 * disagree) as f32;
-            }
+        out.resize_to(&[b, n]);
+        let shards = pool::shards_for(b * n * self.wpr, b, WORD_QUANTUM);
+        if shards <= 1 {
+            gemm_masked_rows(&self.words, &mask.words, self.wpr, w, &mut out.data, n);
+            return;
         }
-        Tensor::from_vec(&[b, n], out)
+        let rows_per = b.div_ceil(shards);
+        let tasks: Vec<_> = self
+            .words
+            .chunks(rows_per * self.wpr)
+            .zip(mask.words.chunks(rows_per * self.wpr))
+            .zip(out.data.chunks_mut(rows_per * n))
+            .map(|((xc, mc), oc)| move || gemm_masked_rows(xc, mc, self.wpr, w, oc, n))
+            .collect();
+        pool::run_scoped(tasks);
     }
 
     /// Fused Boolean linear + threshold activation for the forward-only
@@ -390,120 +437,46 @@ impl BitMatrix {
     /// load is reused twice and four popcount chains run independently
     /// (§Perf iteration log).
     pub fn xnor_threshold(&self, w: &BitMatrix, bias: Option<&BitMatrix>, thr: f32) -> BitMatrix {
+        let mut out = BitMatrix::zeros(0, 0);
+        self.xnor_threshold_into(w, bias, thr, &mut out);
+        out
+    }
+
+    /// [`Self::xnor_threshold`] into a reusable output matrix (reshaped
+    /// and fully overwritten): the serving engine's ping-pong activation
+    /// buffers make the whole Boolean interior allocation-free.
+    pub fn xnor_threshold_into(
+        &self,
+        w: &BitMatrix,
+        bias: Option<&BitMatrix>,
+        thr: f32,
+        out: &mut BitMatrix,
+    ) {
         assert_eq!(self.cols, w.cols, "fan-in mismatch {} vs {}", self.cols, w.cols);
         if let Some(b) = bias {
             assert_eq!((b.rows, b.cols), (1, w.rows), "bias shape {}x{}", b.rows, b.cols);
         }
         let (bsz, n, m) = (self.rows, w.rows, self.cols);
-        let mut out = BitMatrix::zeros(bsz, n);
-        let bval = |j: usize| -> i64 {
-            match bias {
-                Some(b) => {
-                    if b.get(0, j) {
-                        1
-                    } else {
-                        -1
-                    }
-                }
-                None => 0,
-            }
-        };
-        let fire = |d: u32, b: i64| (((m as i64 - 2 * d as i64) + b) as f32) >= thr;
-        let mut i = 0;
-        while i + 2 <= bsz {
-            let x0 = self.row(i);
-            let x1 = self.row(i + 1);
-            let base0 = i * out.wpr;
-            let base1 = (i + 1) * out.wpr;
-            let (mut word0, mut word1) = (0u64, 0u64);
-            let mut j = 0;
-            while j + 2 <= n {
-                let w0 = w.row(j);
-                let w1 = w.row(j + 1);
-                let (mut d00, mut d01, mut d10, mut d11) = (0u32, 0u32, 0u32, 0u32);
-                for k in 0..x0.len() {
-                    let (a0, a1) = (x0[k], x1[k]);
-                    let (c0, c1) = (w0[k], w1[k]);
-                    d00 += (a0 ^ c0).count_ones();
-                    d01 += (a0 ^ c1).count_ones();
-                    d10 += (a1 ^ c0).count_ones();
-                    d11 += (a1 ^ c1).count_ones();
-                }
-                let (b0, b1) = (bval(j), bval(j + 1));
-                if fire(d00, b0) {
-                    word0 |= 1u64 << (j % 64);
-                }
-                if fire(d01, b1) {
-                    word0 |= 1u64 << ((j + 1) % 64);
-                }
-                if fire(d10, b0) {
-                    word1 |= 1u64 << (j % 64);
-                }
-                if fire(d11, b1) {
-                    word1 |= 1u64 << ((j + 1) % 64);
-                }
-                if (j + 1) % 64 == 63 {
-                    out.words[base0 + j / 64] = word0;
-                    out.words[base1 + j / 64] = word1;
-                    word0 = 0;
-                    word1 = 0;
-                }
-                j += 2;
-            }
-            // tail output column
-            while j < n {
-                let wr = w.row(j);
-                let (mut d0, mut d1) = (0u32, 0u32);
-                for k in 0..x0.len() {
-                    d0 += (x0[k] ^ wr[k]).count_ones();
-                    d1 += (x1[k] ^ wr[k]).count_ones();
-                }
-                let b = bval(j);
-                if fire(d0, b) {
-                    word0 |= 1u64 << (j % 64);
-                }
-                if fire(d1, b) {
-                    word1 |= 1u64 << (j % 64);
-                }
-                if j % 64 == 63 {
-                    out.words[base0 + j / 64] = word0;
-                    out.words[base1 + j / 64] = word1;
-                    word0 = 0;
-                    word1 = 0;
-                }
-                j += 1;
-            }
-            if n % 64 != 0 {
-                out.words[base0 + (n - 1) / 64] = word0;
-                out.words[base1 + (n - 1) / 64] = word1;
-            }
-            i += 2;
+        out.reset_dims(bsz, n);
+        if bsz == 0 || n == 0 {
+            return;
         }
-        // tail input row
-        while i < bsz {
-            let xr = self.row(i);
-            let base = i * out.wpr;
-            let mut word = 0u64;
-            for j in 0..n {
-                let wr = w.row(j);
-                let mut d = 0u32;
-                for (&xw, &ww) in xr.iter().zip(wr) {
-                    d += (xw ^ ww).count_ones();
-                }
-                if fire(d, bval(j)) {
-                    word |= 1u64 << (j % 64);
-                }
-                if j % 64 == 63 {
-                    out.words[base + j / 64] = word;
-                    word = 0;
-                }
-            }
-            if n % 64 != 0 {
-                out.words[base + (n - 1) / 64] = word;
-            }
-            i += 1;
+        let wpr_out = out.wpr;
+        let shards = pool::shards_for(bsz * n * self.wpr, bsz, WORD_QUANTUM);
+        if shards <= 1 || self.wpr == 0 {
+            threshold_rows(&self.words, self.wpr, w, m, bias, thr, &mut out.words, wpr_out, n);
+            return;
         }
-        out
+        let rows_per = bsz.div_ceil(shards);
+        let tasks: Vec<_> = self
+            .words
+            .chunks(rows_per * self.wpr)
+            .zip(out.words.chunks_mut(rows_per * wpr_out))
+            .map(|(xc, oc)| {
+                move || threshold_rows(xc, self.wpr, w, m, bias, thr, oc, wpr_out, n)
+            })
+            .collect();
+        pool::run_scoped(tasks);
     }
 
     /// Masked variant of [`Self::xnor_threshold`] for three-valued inputs:
@@ -518,6 +491,20 @@ impl BitMatrix {
         bias: Option<&BitMatrix>,
         thr: f32,
     ) -> BitMatrix {
+        let mut out = BitMatrix::zeros(0, 0);
+        self.xnor_threshold_masked_into(w, lane_mask, bias, thr, &mut out);
+        out
+    }
+
+    /// [`Self::xnor_threshold_masked`] into a reusable output matrix.
+    pub fn xnor_threshold_masked_into(
+        &self,
+        w: &BitMatrix,
+        lane_mask: &[u64],
+        bias: Option<&BitMatrix>,
+        thr: f32,
+        out: &mut BitMatrix,
+    ) {
         assert_eq!(self.cols, w.cols, "fan-in mismatch {} vs {}", self.cols, w.cols);
         assert_eq!(lane_mask.len(), self.wpr, "lane mask word count");
         if let Some(b) = bias {
@@ -536,34 +523,32 @@ impl BitMatrix {
                 mw.count_ones() as i64
             })
             .sum();
-        let mut out = BitMatrix::zeros(bsz, n);
-        for i in 0..bsz {
-            let xr = self.row(i);
-            let base = i * out.wpr;
-            let mut word = 0u64;
-            for j in 0..n {
-                let wr = w.row(j);
-                let mut d = 0i64;
-                for ((&xw, &ww), &mw) in xr.iter().zip(wr).zip(lane_mask) {
-                    d += ((xw ^ ww) & mw).count_ones() as i64;
-                }
-                let mut s = valid - 2 * d;
-                if let Some(b) = bias {
-                    s += if b.get(0, j) { 1 } else { -1 };
-                }
-                if (s as f32) >= thr {
-                    word |= 1u64 << (j % 64);
-                }
-                if j % 64 == 63 {
-                    out.words[base + j / 64] = word;
-                    word = 0;
-                }
-            }
-            if n % 64 != 0 {
-                out.words[base + (n - 1) / 64] = word;
-            }
+        out.reset_dims(bsz, n);
+        if bsz == 0 || n == 0 {
+            return;
         }
-        out
+        let wpr_out = out.wpr;
+        let shards = pool::shards_for(bsz * n * self.wpr, bsz, WORD_QUANTUM);
+        if shards <= 1 || self.wpr == 0 {
+            threshold_masked_rows(
+                &self.words, self.wpr, w, lane_mask, valid, bias, thr, &mut out.words, wpr_out, n,
+            );
+            return;
+        }
+        let rows_per = bsz.div_ceil(shards);
+        let tasks: Vec<_> = self
+            .words
+            .chunks(rows_per * self.wpr)
+            .zip(out.words.chunks_mut(rows_per * wpr_out))
+            .map(|(xc, oc)| {
+                move || {
+                    threshold_masked_rows(
+                        xc, self.wpr, w, lane_mask, valid, bias, thr, oc, wpr_out, n,
+                    )
+                }
+            })
+            .collect();
+        pool::run_scoped(tasks);
     }
 
     /// Decode one packed row into a caller-provided ±1 buffer (`out.len()`
@@ -598,66 +583,424 @@ impl BitMatrix {
     ///            = 2·Σ_{j: w_jk=T} z_ij − Σ_j z_ij,
     /// walking each weight row once and adding ±z — no unpacking to f32.
     pub fn backward_input(&self, z: &Tensor) -> Tensor {
+        let mut out = Tensor::zeros(&[0]);
+        self.backward_input_into(z, &mut out);
+        out
+    }
+
+    /// [`Self::backward_input`] into a reusable output tensor (reshaped,
+    /// zeroed, then accumulated): batch rows shard across the pool.
+    pub fn backward_input_into(&self, z: &Tensor, out: &mut Tensor) {
         let (n, m) = (self.rows, self.cols);
         assert_eq!(z.cols(), n, "z cols {} vs N {}", z.cols(), n);
         let b = z.rows();
-        let mut out = vec![0.0f32; b * m];
-        for i in 0..b {
-            let zr = &z.data[i * n..(i + 1) * n];
-            let orow = &mut out[i * m..(i + 1) * m];
-            for (j, &zv) in zr.iter().enumerate() {
-                if zv == 0.0 {
-                    continue;
-                }
-                axpy_pm1_row(orow, self.row(j), zv);
-            }
+        out.resize_to(&[b, m]);
+        out.data.fill(0.0);
+        let shards = pool::shards_for(b * n * m, b, MAC_QUANTUM);
+        if shards <= 1 || n == 0 || m == 0 {
+            bwd_input_rows(self, &z.data, n, &mut out.data, m);
+            return;
         }
-        Tensor::from_vec(&[b, m], out)
+        let rows_per = b.div_ceil(shards);
+        let tasks: Vec<_> = z
+            .data
+            .chunks(rows_per * n)
+            .zip(out.data.chunks_mut(rows_per * m))
+            .map(|(zc, oc)| move || bwd_input_rows(self, zc, n, oc, m))
+            .collect();
+        pool::run_scoped(tasks);
+    }
+
+    /// zᵀ @ e(X): the weight vote of Eq. (7) (Algorithm 7, `G_W`).
+    /// z is (B × N), self is X (B × M bits) → (N × M).
+    pub fn backward_weight(&self, z: &Tensor) -> Tensor {
+        let mut out = Tensor::zeros(&[0]);
+        self.backward_weight_into(z, &mut out);
+        out
+    }
+
+    /// [`Self::backward_weight`] into a reusable output tensor (reshaped,
+    /// zeroed, then accumulated): output-unit rows shard across the pool.
+    pub fn backward_weight_into(&self, z: &Tensor, out: &mut Tensor) {
+        let (b, m) = (self.rows, self.cols);
+        assert_eq!(z.rows(), b, "z rows {} vs B {}", z.rows(), b);
+        let n = z.cols();
+        out.resize_to(&[n, m]);
+        out.data.fill(0.0);
+        let shards = pool::shards_for(b * n * m, n, MAC_QUANTUM);
+        pool::for_each_row_chunk(&mut out.data, m, shards, |j0, oc| {
+            bwd_weight_rows(self, &z.data, n, j0, oc, m, None)
+        });
     }
 
     /// Masked variant of [`Self::backward_weight`]: lanes with mask bit 0
     /// are the three-valued 0 (e.g. conv zero-padding) and contribute no
     /// vote — e(0) = 0 in Definition A.1.
     pub fn backward_weight_masked(&self, z: &Tensor, mask: &BitMatrix) -> Tensor {
+        let mut out = Tensor::zeros(&[0]);
+        self.backward_weight_masked_into(z, mask, &mut out);
+        out
+    }
+
+    /// [`Self::backward_weight_masked`] into a reusable output tensor.
+    pub fn backward_weight_masked_into(&self, z: &Tensor, mask: &BitMatrix, out: &mut Tensor) {
         let (b, m) = (self.rows, self.cols);
         assert_eq!(z.rows(), b);
         assert_eq!((mask.rows, mask.cols), (b, m));
         let n = z.cols();
-        let mut out = vec![0.0f32; n * m];
-        // j-outer / k-inner (see backward_weight): accumulator row stays hot.
-        for j in 0..n {
-            let orow = &mut out[j * m..(j + 1) * m];
-            for k in 0..b {
-                let zv = z.data[k * n + j];
-                if zv == 0.0 {
-                    continue;
-                }
-                axpy_pm1_masked_row(orow, self.row(k), mask.row(k), zv);
-            }
-        }
-        Tensor::from_vec(&[n, m], out)
+        out.resize_to(&[n, m]);
+        out.data.fill(0.0);
+        let shards = pool::shards_for(b * n * m, n, MAC_QUANTUM);
+        pool::for_each_row_chunk(&mut out.data, m, shards, |j0, oc| {
+            bwd_weight_rows(self, &z.data, n, j0, oc, m, Some(mask))
+        });
     }
+}
 
-    /// zᵀ @ e(X): the weight vote of Eq. (7) (Algorithm 7, `G_W`).
-    /// z is (B × N), self is X (B × M bits) → (N × M).
-    pub fn backward_weight(&self, z: &Tensor) -> Tensor {
-        let (b, m) = (self.rows, self.cols);
-        assert_eq!(z.rows(), b, "z rows {} vs B {}", z.rows(), b);
-        let n = z.cols();
-        let mut out = vec![0.0f32; n * m];
-        // j-outer / k-inner: the accumulator row stays L1-resident while
-        // the (much smaller) packed input rows stream through (§Perf).
-        for j in 0..n {
-            let orow = &mut out[j * m..(j + 1) * m];
-            for k in 0..b {
-                let zv = z.data[k * n + j];
-                if zv == 0.0 {
-                    continue;
+// ---------------------------------------------------------------------------
+// row-range kernel cores (sequential bodies; the parallel wrappers above
+// hand each core a disjoint output-row range, so any shard split computes
+// bit-identical results to the single-shard call)
+// ---------------------------------------------------------------------------
+
+/// Eq. (3) forward over a contiguous row block. `x` holds `out.len()/n`
+/// packed input rows of `wpr` words; `out` is the matching (rows × n)
+/// output block. 2×2 register blocking: each x/w word load is reused twice
+/// and four popcount chains run independently (§Perf iteration log).
+fn gemm_rows(x: &[u64], wpr: usize, w: &BitMatrix, m: usize, out: &mut [f32], n: usize) {
+    let rows = if n == 0 { 0 } else { out.len() / n };
+    let xr = |i: usize| &x[i * wpr..(i + 1) * wpr];
+    let mut i = 0;
+    while i + 2 <= rows {
+        let x0 = xr(i);
+        let x1 = xr(i + 1);
+        let (o_lo, o_hi) = out[i * n..(i + 2) * n].split_at_mut(n);
+        let mut j = 0;
+        while j + 2 <= n {
+            let w0 = w.row(j);
+            let w1 = w.row(j + 1);
+            let (mut d00, mut d01, mut d10, mut d11) = (0u32, 0u32, 0u32, 0u32);
+            for k in 0..x0.len() {
+                let (a0, a1) = (x0[k], x1[k]);
+                let (c0, c1) = (w0[k], w1[k]);
+                d00 += (a0 ^ c0).count_ones();
+                d01 += (a0 ^ c1).count_ones();
+                d10 += (a1 ^ c0).count_ones();
+                d11 += (a1 ^ c1).count_ones();
+            }
+            o_lo[j] = (m as i64 - 2 * d00 as i64) as f32;
+            o_lo[j + 1] = (m as i64 - 2 * d01 as i64) as f32;
+            o_hi[j] = (m as i64 - 2 * d10 as i64) as f32;
+            o_hi[j + 1] = (m as i64 - 2 * d11 as i64) as f32;
+            j += 2;
+        }
+        // tail output column
+        while j < n {
+            let wr = w.row(j);
+            let (mut d0, mut d1) = (0u32, 0u32);
+            for k in 0..x0.len() {
+                d0 += (x0[k] ^ wr[k]).count_ones();
+                d1 += (x1[k] ^ wr[k]).count_ones();
+            }
+            o_lo[j] = (m as i64 - 2 * d0 as i64) as f32;
+            o_hi[j] = (m as i64 - 2 * d1 as i64) as f32;
+            j += 1;
+        }
+        i += 2;
+    }
+    // tail input row
+    while i < rows {
+        let x0 = xr(i);
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let wr = w.row(j);
+            let mut disagree = 0u32;
+            for (&xw, &ww) in x0.iter().zip(wr) {
+                disagree += (xw ^ ww).count_ones();
+            }
+            *o = (m as i64 - 2 * disagree as i64) as f32;
+        }
+        i += 1;
+    }
+}
+
+/// Masked Eq. (3) forward over a contiguous row block, 2×2 blocked like
+/// [`gemm_rows`] with a per-input-row valid count (`mk` mirrors `x`).
+fn gemm_masked_rows(x: &[u64], mk: &[u64], wpr: usize, w: &BitMatrix, out: &mut [f32], n: usize) {
+    let rows = if n == 0 { 0 } else { out.len() / n };
+    let xr = |i: usize| &x[i * wpr..(i + 1) * wpr];
+    let mr = |i: usize| &mk[i * wpr..(i + 1) * wpr];
+    let valid = |mrow: &[u64]| -> i64 { mrow.iter().map(|w| w.count_ones() as i64).sum() };
+    let mut i = 0;
+    while i + 2 <= rows {
+        let x0 = xr(i);
+        let x1 = xr(i + 1);
+        let m0 = mr(i);
+        let m1 = mr(i + 1);
+        let v0 = valid(m0);
+        let v1 = valid(m1);
+        let (o_lo, o_hi) = out[i * n..(i + 2) * n].split_at_mut(n);
+        let mut j = 0;
+        while j + 2 <= n {
+            let w0 = w.row(j);
+            let w1 = w.row(j + 1);
+            let (mut d00, mut d01, mut d10, mut d11) = (0u32, 0u32, 0u32, 0u32);
+            for k in 0..x0.len() {
+                let (a0, a1) = (x0[k], x1[k]);
+                let (c0, c1) = (w0[k], w1[k]);
+                let (v0k, v1k) = (m0[k], m1[k]);
+                d00 += ((a0 ^ c0) & v0k).count_ones();
+                d01 += ((a0 ^ c1) & v0k).count_ones();
+                d10 += ((a1 ^ c0) & v1k).count_ones();
+                d11 += ((a1 ^ c1) & v1k).count_ones();
+            }
+            o_lo[j] = (v0 - 2 * d00 as i64) as f32;
+            o_lo[j + 1] = (v0 - 2 * d01 as i64) as f32;
+            o_hi[j] = (v1 - 2 * d10 as i64) as f32;
+            o_hi[j + 1] = (v1 - 2 * d11 as i64) as f32;
+            j += 2;
+        }
+        while j < n {
+            let wr = w.row(j);
+            let (mut d0, mut d1) = (0u32, 0u32);
+            for k in 0..x0.len() {
+                d0 += ((x0[k] ^ wr[k]) & m0[k]).count_ones();
+                d1 += ((x1[k] ^ wr[k]) & m1[k]).count_ones();
+            }
+            o_lo[j] = (v0 - 2 * d0 as i64) as f32;
+            o_hi[j] = (v1 - 2 * d1 as i64) as f32;
+            j += 1;
+        }
+        i += 2;
+    }
+    while i < rows {
+        let x0 = xr(i);
+        let m0 = mr(i);
+        let v0 = valid(m0);
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let wr = w.row(j);
+            let mut d = 0u32;
+            for k in 0..x0.len() {
+                d += ((x0[k] ^ wr[k]) & m0[k]).count_ones();
+            }
+            *o = (v0 - 2 * d as i64) as f32;
+        }
+        i += 1;
+    }
+}
+
+/// Fused linear+threshold over a contiguous row block (`out` is the
+/// matching packed (rows × n) block with `wpr_out` words per row).
+fn threshold_rows(
+    x: &[u64],
+    wpr: usize,
+    w: &BitMatrix,
+    m: usize,
+    bias: Option<&BitMatrix>,
+    thr: f32,
+    out: &mut [u64],
+    wpr_out: usize,
+    n: usize,
+) {
+    let rows = out.len() / wpr_out;
+    let xr = |i: usize| &x[i * wpr..(i + 1) * wpr];
+    let bval = |j: usize| -> i64 {
+        match bias {
+            Some(b) => {
+                if b.get(0, j) {
+                    1
+                } else {
+                    -1
                 }
-                axpy_pm1_row(orow, self.row(k), zv);
+            }
+            None => 0,
+        }
+    };
+    let fire = |d: u32, b: i64| (((m as i64 - 2 * d as i64) + b) as f32) >= thr;
+    let mut i = 0;
+    while i + 2 <= rows {
+        let x0 = xr(i);
+        let x1 = xr(i + 1);
+        let base0 = i * wpr_out;
+        let base1 = (i + 1) * wpr_out;
+        let (mut word0, mut word1) = (0u64, 0u64);
+        let mut j = 0;
+        while j + 2 <= n {
+            let w0 = w.row(j);
+            let w1 = w.row(j + 1);
+            let (mut d00, mut d01, mut d10, mut d11) = (0u32, 0u32, 0u32, 0u32);
+            for k in 0..x0.len() {
+                let (a0, a1) = (x0[k], x1[k]);
+                let (c0, c1) = (w0[k], w1[k]);
+                d00 += (a0 ^ c0).count_ones();
+                d01 += (a0 ^ c1).count_ones();
+                d10 += (a1 ^ c0).count_ones();
+                d11 += (a1 ^ c1).count_ones();
+            }
+            let (b0, b1) = (bval(j), bval(j + 1));
+            if fire(d00, b0) {
+                word0 |= 1u64 << (j % 64);
+            }
+            if fire(d01, b1) {
+                word0 |= 1u64 << ((j + 1) % 64);
+            }
+            if fire(d10, b0) {
+                word1 |= 1u64 << (j % 64);
+            }
+            if fire(d11, b1) {
+                word1 |= 1u64 << ((j + 1) % 64);
+            }
+            if (j + 1) % 64 == 63 {
+                out[base0 + j / 64] = word0;
+                out[base1 + j / 64] = word1;
+                word0 = 0;
+                word1 = 0;
+            }
+            j += 2;
+        }
+        // tail output column
+        while j < n {
+            let wr = w.row(j);
+            let (mut d0, mut d1) = (0u32, 0u32);
+            for k in 0..x0.len() {
+                d0 += (x0[k] ^ wr[k]).count_ones();
+                d1 += (x1[k] ^ wr[k]).count_ones();
+            }
+            let b = bval(j);
+            if fire(d0, b) {
+                word0 |= 1u64 << (j % 64);
+            }
+            if fire(d1, b) {
+                word1 |= 1u64 << (j % 64);
+            }
+            if j % 64 == 63 {
+                out[base0 + j / 64] = word0;
+                out[base1 + j / 64] = word1;
+                word0 = 0;
+                word1 = 0;
+            }
+            j += 1;
+        }
+        if n % 64 != 0 {
+            out[base0 + (n - 1) / 64] = word0;
+            out[base1 + (n - 1) / 64] = word1;
+        }
+        i += 2;
+    }
+    // tail input row
+    while i < rows {
+        let x0 = xr(i);
+        let base = i * wpr_out;
+        let mut word = 0u64;
+        for j in 0..n {
+            let wr = w.row(j);
+            let mut d = 0u32;
+            for (&xw, &ww) in x0.iter().zip(wr) {
+                d += (xw ^ ww).count_ones();
+            }
+            if fire(d, bval(j)) {
+                word |= 1u64 << (j % 64);
+            }
+            if j % 64 == 63 {
+                out[base + j / 64] = word;
+                word = 0;
             }
         }
-        Tensor::from_vec(&[n, m], out)
+        if n % 64 != 0 {
+            out[base + (n - 1) / 64] = word;
+        }
+        i += 1;
+    }
+}
+
+/// Masked fused linear+threshold over a contiguous row block (`valid` is
+/// the precomputed popcount of the shared lane mask).
+fn threshold_masked_rows(
+    x: &[u64],
+    wpr: usize,
+    w: &BitMatrix,
+    lane_mask: &[u64],
+    valid: i64,
+    bias: Option<&BitMatrix>,
+    thr: f32,
+    out: &mut [u64],
+    wpr_out: usize,
+    n: usize,
+) {
+    let rows = out.len() / wpr_out;
+    for i in 0..rows {
+        let x0 = &x[i * wpr..(i + 1) * wpr];
+        let base = i * wpr_out;
+        let mut word = 0u64;
+        for j in 0..n {
+            let wr = w.row(j);
+            let mut d = 0i64;
+            for ((&xw, &ww), &mw) in x0.iter().zip(wr).zip(lane_mask) {
+                d += ((xw ^ ww) & mw).count_ones() as i64;
+            }
+            let mut s = valid - 2 * d;
+            if let Some(b) = bias {
+                s += if b.get(0, j) { 1 } else { -1 };
+            }
+            if (s as f32) >= thr {
+                word |= 1u64 << (j % 64);
+            }
+            if j % 64 == 63 {
+                out[base + j / 64] = word;
+                word = 0;
+            }
+        }
+        if n % 64 != 0 {
+            out[base + (n - 1) / 64] = word;
+        }
+    }
+}
+
+/// G_X rows: `z` holds `out.len()/m` signal rows of width `n`; `w` is the
+/// full weight matrix. Accumulates into a pre-zeroed output block.
+fn bwd_input_rows(w: &BitMatrix, z: &[f32], n: usize, out: &mut [f32], m: usize) {
+    let rows = if n == 0 { 0 } else { z.len() / n };
+    for i in 0..rows {
+        let zr = &z[i * n..(i + 1) * n];
+        let orow = &mut out[i * m..(i + 1) * m];
+        for (j, &zv) in zr.iter().enumerate() {
+            if zv == 0.0 {
+                continue;
+            }
+            axpy_pm1_row(orow, w.row(j), zv);
+        }
+    }
+}
+
+/// G_W rows: output units [j0, j0 + out.len()/m) of the (N × M) weight
+/// vote. j-outer / k-inner: the accumulator row stays L1-resident while
+/// the (much smaller) packed input rows stream through (§Perf). With
+/// `mask`, lanes with mask bit 0 vote 0 (the 𝕄 zero).
+fn bwd_weight_rows(
+    x: &BitMatrix,
+    z: &[f32],
+    n: usize,
+    j0: usize,
+    out: &mut [f32],
+    m: usize,
+    mask: Option<&BitMatrix>,
+) {
+    let rows = if m == 0 { 0 } else { out.len() / m };
+    let b = x.rows;
+    for jj in 0..rows {
+        let j = j0 + jj;
+        let orow = &mut out[jj * m..(jj + 1) * m];
+        for k in 0..b {
+            let zv = z[k * n + j];
+            if zv == 0.0 {
+                continue;
+            }
+            match mask {
+                None => axpy_pm1_row(orow, x.row(k), zv),
+                Some(mk) => axpy_pm1_masked_row(orow, x.row(k), mk.row(k), zv),
+            }
+        }
     }
 }
 
@@ -673,6 +1016,23 @@ mod tests {
                 for k in 0..x.cols {
                     // xnor in the embedding: product of ±1
                     s += (x.pm1(i, k) * w.pm1(j, k)) as i64;
+                }
+                *out.at2_mut(i, j) = s as f32;
+            }
+        }
+        out
+    }
+
+    /// Naive masked reference: the pre-blocking triple loop.
+    fn naive_xnor_gemm_masked(x: &BitMatrix, w: &BitMatrix, mask: &BitMatrix) -> Tensor {
+        let mut out = Tensor::zeros(&[x.rows, w.rows]);
+        for i in 0..x.rows {
+            for j in 0..w.rows {
+                let mut s = 0i64;
+                for k in 0..x.cols {
+                    if mask.get(i, k) {
+                        s += (x.pm1(i, k) * w.pm1(j, k)) as i64;
+                    }
                 }
                 *out.at2_mut(i, j) = s as f32;
             }
@@ -735,6 +1095,27 @@ mod tests {
             }
         }
         assert_eq!(x.xnor_gemm_masked(&w, &mask), x.xnor_gemm(&w));
+    }
+
+    /// The 2×2-blocked masked GEMM against the naive per-bit reference:
+    /// odd row counts (tail input row), odd output counts (tail column),
+    /// odd fan-in (tail word), and random masks.
+    #[test]
+    fn blocked_masked_gemm_matches_naive_reference() {
+        let mut rng = Rng::new(31);
+        for (b, n, m) in [(1, 1, 1), (3, 5, 70), (4, 4, 64), (7, 6, 130), (5, 9, 200)] {
+            let x = BitMatrix::random(b, m, &mut rng);
+            let w = BitMatrix::random(n, m, &mut rng);
+            let mut mask = BitMatrix::zeros(b, m);
+            for i in 0..b {
+                for k in 0..m {
+                    mask.set(i, k, rng.bernoulli(0.7));
+                }
+            }
+            let fast = x.xnor_gemm_masked(&w, &mask);
+            let slow = naive_xnor_gemm_masked(&x, &w, &mask);
+            assert_eq!(fast, slow, "b={b} n={n} m={m}");
+        }
     }
 
     #[test]
@@ -855,6 +1236,41 @@ mod tests {
         assert_eq!(fused, want);
     }
 
+    /// The `_into` variants must reshape + fully overwrite a dirty reused
+    /// buffer, leaving no stale content (the allocation-reuse contract the
+    /// serving engine relies on).
+    #[test]
+    fn into_variants_overwrite_reused_buffers() {
+        let mut rng = Rng::new(41);
+        let x1 = BitMatrix::random(6, 100, &mut rng);
+        let w1 = BitMatrix::random(9, 100, &mut rng);
+        let x2 = BitMatrix::random(3, 70, &mut rng);
+        let w2 = BitMatrix::random(5, 70, &mut rng);
+
+        let mut t = Tensor::zeros(&[0]);
+        x1.xnor_gemm_into(&w1, &mut t);
+        assert_eq!(t, x1.xnor_gemm(&w1));
+        x2.xnor_gemm_into(&w2, &mut t); // shrink, reuse
+        assert_eq!(t, x2.xnor_gemm(&w2));
+
+        let mut bm = BitMatrix::zeros(0, 0);
+        x1.xnor_threshold_into(&w1, None, 0.0, &mut bm);
+        assert_eq!(bm, x1.xnor_threshold(&w1, None, 0.0));
+        x2.xnor_threshold_into(&w2, None, 0.0, &mut bm);
+        assert_eq!(bm, x2.xnor_threshold(&w2, None, 0.0));
+
+        let z1 = Tensor::randn(&[6, 9], 1.0, &mut rng);
+        let z2 = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        let mut g = Tensor::zeros(&[0]);
+        x1.backward_weight_into(&z1, &mut g);
+        assert_eq!(g, x1.backward_weight(&z1));
+        x2.backward_weight_into(&z2, &mut g);
+        assert_eq!(g, x2.backward_weight(&z2));
+
+        w1.backward_input_into(&z1, &mut g);
+        assert_eq!(g, w1.backward_input(&z1));
+    }
+
     #[test]
     fn decode_pm1_row_matches_to_pm1() {
         let mut rng = Rng::new(24);
@@ -869,6 +1285,29 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn assign_packed_rows_gathers_and_masks_tail() {
+        let mut rng = Rng::new(43);
+        let src = BitMatrix::random(5, 70, &mut rng);
+        let mut m = BitMatrix::zeros(0, 0);
+        // gather rows 4, 0, 2 — with tail garbage injected into one row
+        let dirty: Vec<u64> = vec![u64::MAX, u64::MAX];
+        m.assign_packed_rows(70, [src.row(4), dirty.as_slice(), src.row(2)]);
+        assert_eq!((m.rows, m.cols, m.wpr), (3, 70, 2));
+        assert_eq!(m.row(0), src.row(4));
+        assert_eq!(m.row(2), src.row(2));
+        assert_eq!(m.row(1)[1] >> 6, 0, "tail beyond col 70 must be cleared");
+    }
+
+    #[test]
+    fn clone_from_reuses_and_matches() {
+        let mut rng = Rng::new(42);
+        let src = BitMatrix::random(7, 130, &mut rng);
+        let mut dst = BitMatrix::zeros(2, 5);
+        dst.clone_from(&src);
+        assert_eq!(dst, src);
     }
 
     #[test]

@@ -4,14 +4,38 @@
 //! own closed-form backward (the paper's Boolean layers do not have true
 //! gradients anyway — they have *variations*), so all we need here is
 //! shaped storage plus GEMM, elementwise ops and im2col/col2im.
+//!
+//! The GEMM variants and the conv im2col/col2im helpers shard disjoint
+//! output-row ranges across the persistent [`crate::util::pool`]; each
+//! shard preserves the per-element f32 accumulation order of the
+//! sequential loop, so results are bit-exact for any thread count
+//! (DESIGN.md §Parallelism, asserted in `tests/parallel_determinism.rs`).
 
+use crate::util::pool::{self, MAC_QUANTUM};
 use crate::util::Rng;
 
+/// Minimum elements moved per pool shard for the copy/scatter conv
+/// helpers (im2col / col2im).
+const COPY_QUANTUM: usize = 1 << 16;
+
 /// Row-major dense f32 tensor.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub struct Tensor {
     pub shape: Vec<usize>,
     pub data: Vec<f32>,
+}
+
+impl Clone for Tensor {
+    fn clone(&self) -> Self {
+        Tensor { shape: self.shape.clone(), data: self.data.clone() }
+    }
+
+    /// Reuses the existing data allocation (scratch/cache buffers rely on
+    /// this to stop allocating per batch).
+    fn clone_from(&mut self, src: &Self) {
+        self.shape.clone_from(&src.shape);
+        self.data.clone_from(&src.data);
+    }
 }
 
 impl Tensor {
@@ -74,6 +98,19 @@ impl Tensor {
     #[inline]
     pub fn at2_mut(&mut self, i: usize, j: usize) -> &mut f32 {
         &mut self.data[i * self.shape[1] + j]
+    }
+
+    /// Reshape in place to `shape`, reusing the data allocation. Existing
+    /// content is preserved up to the new length (newly grown elements are
+    /// zero) — for `_into` kernels that fully overwrite or zero-then-
+    /// accumulate their output.
+    pub fn resize_to(&mut self, shape: &[usize]) {
+        let n: usize = shape.iter().product();
+        if self.shape != shape {
+            self.shape.clear();
+            self.shape.extend_from_slice(shape);
+        }
+        self.data.resize(n, 0.0);
     }
 
     pub fn reshape(mut self, shape: &[usize]) -> Self {
@@ -196,24 +233,26 @@ impl Tensor {
 
     // ----- GEMM ----------------------------------------------------------
 
-    /// C = A·B with A (m×k), B (k×n). ikj loop order, slice inner loop.
+    /// C = A·B with A (m×k), B (k×n). ikj loop order, slice inner loop;
+    /// output rows shard across the pool (bit-exact vs sequential: each
+    /// element keeps its ascending-p accumulation order).
     pub fn matmul(&self, b: &Tensor) -> Tensor {
         let (m, k) = (self.rows(), self.cols());
         let (k2, n) = (b.rows(), b.cols());
         assert_eq!(k, k2, "matmul {:?}x{:?}", self.shape, b.shape);
         let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (p, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &b.data[p * n..(p + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += a * bv;
-                }
-            }
+        let shards = pool::shards_for(m * k * n, m, MAC_QUANTUM);
+        if shards <= 1 {
+            matmul_rows(&self.data, m, k, &b.data, n, &mut out);
+        } else {
+            let rows_per = m.div_ceil(shards);
+            let tasks: Vec<_> = self
+                .data
+                .chunks(rows_per * k)
+                .zip(out.chunks_mut(rows_per * n))
+                .map(|(ac, oc)| move || matmul_rows(ac, ac.len() / k, k, &b.data, n, oc))
+                .collect();
+            pool::run_scoped(tasks);
         }
         Tensor::from_vec(&[m, n], out)
     }
@@ -221,55 +260,41 @@ impl Tensor {
     /// C = A·Bᵀ with A (m×k), B (n×k) — the natural layout for row-major
     /// weights (one row per output unit). Four independent accumulators
     /// break the serial FP dependency chain so the k-loop vectorizes
-    /// (§Perf iteration log).
+    /// (§Perf iteration log); output rows shard across the pool.
     pub fn matmul_bt(&self, b: &Tensor) -> Tensor {
         let (m, k) = (self.rows(), self.cols());
         let (n, k2) = (b.rows(), b.cols());
         assert_eq!(k, k2, "matmul_bt {:?}x{:?}", self.shape, b.shape);
         let mut out = vec![0.0f32; m * n];
-        let k4 = k - k % 4;
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            for j in 0..n {
-                let brow = &b.data[j * k..(j + 1) * k];
-                let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-                let mut p = 0;
-                while p < k4 {
-                    s0 += arow[p] * brow[p];
-                    s1 += arow[p + 1] * brow[p + 1];
-                    s2 += arow[p + 2] * brow[p + 2];
-                    s3 += arow[p + 3] * brow[p + 3];
-                    p += 4;
-                }
-                let mut acc = (s0 + s1) + (s2 + s3);
-                for q in k4..k {
-                    acc += arow[q] * brow[q];
-                }
-                out[i * n + j] = acc;
-            }
+        let shards = pool::shards_for(m * k * n, m, MAC_QUANTUM);
+        if shards <= 1 || k == 0 {
+            matmul_bt_rows(&self.data, m, k, &b.data, n, &mut out);
+        } else {
+            let rows_per = m.div_ceil(shards);
+            let tasks: Vec<_> = self
+                .data
+                .chunks(rows_per * k)
+                .zip(out.chunks_mut(rows_per * n))
+                .map(|(ac, oc)| move || matmul_bt_rows(ac, ac.len() / k, k, &b.data, n, oc))
+                .collect();
+            pool::run_scoped(tasks);
         }
         Tensor::from_vec(&[m, n], out)
     }
 
     /// C = Aᵀ·B with A (k×m), B (k×n) — gradient accumulation layout.
+    /// Output rows (columns of A) shard across the pool; every shard keeps
+    /// the original p-outer walk over its column range, so per-element
+    /// accumulation order — and the result — is identical to sequential.
     pub fn matmul_at(&self, b: &Tensor) -> Tensor {
         let (k, m) = (self.rows(), self.cols());
         let (k2, n) = (b.rows(), b.cols());
         assert_eq!(k, k2, "matmul_at {:?}x{:?}", self.shape, b.shape);
         let mut out = vec![0.0f32; m * n];
-        for p in 0..k {
-            let arow = &self.data[p * m..(p + 1) * m];
-            let brow = &b.data[p * n..(p + 1) * n];
-            for (i, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &mut out[i * n..(i + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += a * bv;
-                }
-            }
-        }
+        let shards = pool::shards_for(m * k * n, m, MAC_QUANTUM);
+        pool::for_each_row_chunk(&mut out, n, shards, |i0, oc| {
+            matmul_at_cols(&self.data, k, m, i0, &b.data, n, oc)
+        });
         Tensor::from_vec(&[m, n], out)
     }
 
@@ -296,36 +321,19 @@ impl Tensor {
         let oh = (h + 2 * pad - k) / stride + 1;
         let ow = (w + 2 * pad - k) / stride + 1;
         let cols = c * k * k;
-        let mut out = vec![0.0f32; n * oh * ow * cols];
-        for ni in 0..n {
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let row = ((ni * oh + oy) * ow + ox) * cols;
-                    for ci in 0..c {
-                        for ky in 0..k {
-                            let iy = (oy * stride + ky) as isize - pad as isize;
-                            if iy < 0 || iy >= h as isize {
-                                continue;
-                            }
-                            let src = ((ni * c + ci) * h + iy as usize) * w;
-                            let dst = row + (ci * k + ky) * k;
-                            for kx in 0..k {
-                                let ix = (ox * stride + kx) as isize - pad as isize;
-                                if ix < 0 || ix >= w as isize {
-                                    continue;
-                                }
-                                out[dst + kx] = self.data[src + ix as usize];
-                            }
-                        }
-                    }
-                }
-            }
-        }
-        Tensor::from_vec(&[n * oh * ow, cols], out)
+        let rows = n * oh * ow;
+        let mut out = vec![0.0f32; rows * cols];
+        let shards = pool::shards_for(rows * cols, rows, COPY_QUANTUM);
+        pool::for_each_row_chunk(&mut out, cols, shards, |r0, oc| {
+            im2col_rows(&self.data, c, h, w, k, stride, pad, oh, ow, r0, oc, cols)
+        });
+        Tensor::from_vec(&[rows, cols], out)
     }
 
     /// col2im: scatter-add the patch gradient back to NCHW (adjoint of
-    /// `im2col` with identical geometry).
+    /// `im2col` with identical geometry). Images are the shard unit: each
+    /// image's scatter-adds stay on one thread in the sequential order, so
+    /// the result is bit-exact vs single-threaded for any thread count.
     pub fn col2im(
         &self,
         n: usize,
@@ -340,31 +348,13 @@ impl Tensor {
         let ow = (w + 2 * pad - k) / stride + 1;
         let cols = c * k * k;
         assert_eq!(self.shape, vec![n * oh * ow, cols]);
-        let mut out = vec![0.0f32; n * c * h * w];
-        for ni in 0..n {
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let row = ((ni * oh + oy) * ow + ox) * cols;
-                    for ci in 0..c {
-                        for ky in 0..k {
-                            let iy = (oy * stride + ky) as isize - pad as isize;
-                            if iy < 0 || iy >= h as isize {
-                                continue;
-                            }
-                            let dst = ((ni * c + ci) * h + iy as usize) * w;
-                            let src = row + (ci * k + ky) * k;
-                            for kx in 0..k {
-                                let ix = (ox * stride + kx) as isize - pad as isize;
-                                if ix < 0 || ix >= w as isize {
-                                    continue;
-                                }
-                                out[dst + ix as usize] += self.data[src + kx];
-                            }
-                        }
-                    }
-                }
-            }
-        }
+        let img = c * h * w;
+        let mut out = vec![0.0f32; n * img];
+        let shards = pool::shards_for(n * oh * ow * cols, n, COPY_QUANTUM);
+        pool::for_each_row_chunk(&mut out, img, shards, |n0, oc| {
+            let imgs = if img == 0 { 0 } else { oc.len() / img };
+            col2im_imgs(&self.data, n0, imgs, c, h, w, k, stride, pad, oh, ow, cols, oc)
+        });
         Tensor::from_vec(&[n, c, h, w], out)
     }
 
@@ -413,6 +403,164 @@ impl Tensor {
             .zip(&other.data)
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// row-range kernel cores (sequential bodies; the parallel wrappers hand
+// each core a disjoint output-row range with unchanged per-element
+// accumulation order, so any shard split is bit-exact vs one shard)
+// ---------------------------------------------------------------------------
+
+/// ikj GEMM over a contiguous block of `rows` A-rows / output rows.
+fn matmul_rows(a: &[f32], rows: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    for i in 0..rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// A·Bᵀ over a contiguous block of `rows` A-rows / output rows, with the
+/// 4-accumulator k-loop.
+fn matmul_bt_rows(a: &[f32], rows: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    let k4 = k - k % 4;
+    for i in 0..rows {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            let mut p = 0;
+            while p < k4 {
+                s0 += arow[p] * brow[p];
+                s1 += arow[p + 1] * brow[p + 1];
+                s2 += arow[p + 2] * brow[p + 2];
+                s3 += arow[p + 3] * brow[p + 3];
+                p += 4;
+            }
+            let mut acc = (s0 + s1) + (s2 + s3);
+            for q in k4..k {
+                acc += arow[q] * brow[q];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+}
+
+/// Aᵀ·B restricted to A-columns [i0, i0 + out.len()/n): p-outer walk
+/// identical to the sequential kernel, touching only this column range.
+fn matmul_at_cols(a: &[f32], k: usize, m: usize, i0: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    let rows = if n == 0 { 0 } else { out.len() / n };
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for i in 0..rows {
+            let av = arow[i0 + i];
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// im2col over a contiguous block of flat output rows starting at `r0`
+/// (flat row = (ni·OH + oy)·OW + ox). Pure copies into a pre-zeroed
+/// block; padded taps stay zero.
+fn im2col_rows(
+    src: &[f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    oh: usize,
+    ow: usize,
+    r0: usize,
+    out: &mut [f32],
+    cols: usize,
+) {
+    let rows = if cols == 0 { 0 } else { out.len() / cols };
+    for rr in 0..rows {
+        let flat = r0 + rr;
+        let ni = flat / (oh * ow);
+        let rem = flat % (oh * ow);
+        let oy = rem / ow;
+        let ox = rem % ow;
+        let row = rr * cols;
+        for ci in 0..c {
+            for ky in 0..k {
+                let iy = (oy * stride + ky) as isize - pad as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                let s = ((ni * c + ci) * h + iy as usize) * w;
+                let dst = row + (ci * k + ky) * k;
+                for kx in 0..k {
+                    let ix = (ox * stride + kx) as isize - pad as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    out[dst + kx] = src[s + ix as usize];
+                }
+            }
+        }
+    }
+}
+
+/// col2im scatter-add for `imgs` images starting at image `n0`: reads the
+/// full patch matrix, writes only this image block.
+fn col2im_imgs(
+    cols_dat: &[f32],
+    n0: usize,
+    imgs: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    oh: usize,
+    ow: usize,
+    cols: usize,
+    out: &mut [f32],
+) {
+    for nl in 0..imgs {
+        let ni = n0 + nl;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((ni * oh + oy) * ow + ox) * cols;
+                for ci in 0..c {
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        let dst = ((nl * c + ci) * h + iy as usize) * w;
+                        let src = row + (ci * k + ky) * k;
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            out[dst + ix as usize] += cols_dat[src + kx];
+                        }
+                    }
+                }
+            }
+        }
     }
 }
 

@@ -1,9 +1,13 @@
-//! Small self-contained utilities: deterministic PRNG and a wall-clock timer.
+//! Small self-contained utilities: deterministic PRNG, a wall-clock timer
+//! and the persistent intra-op worker pool.
 //!
 //! The offline crate registry has no `rand`, so we ship a SplitMix64-seeded
 //! xoshiro256** generator — more than enough statistical quality for data
 //! synthesis, init and property tests, and fully reproducible across runs.
+//! Likewise no `rayon`: [`pool`] is a std-only persistent thread pool that
+//! every hot kernel shards over (DESIGN.md §Parallelism).
 
+pub mod pool;
 pub mod rng;
 pub mod timer;
 

@@ -1,0 +1,432 @@
+//! Persistent intra-op worker pool (DESIGN.md §Parallelism).
+//!
+//! Every hot kernel in the crate — the packed [`crate::tensor::BitMatrix`]
+//! kernels, the dense [`crate::tensor::Tensor`] GEMMs, `im2col`/`col2im`
+//! and the word-parallel [`crate::optim::BooleanOptimizer`] step — shards
+//! its *output rows* across this pool instead of spawning OS threads per
+//! call. The pool is:
+//!
+//! * **zero-dependency**: `std` threads, a `Mutex<VecDeque>` injector and
+//!   two condvars — no rayon/crossbeam (the offline registry has neither);
+//! * **lazy and global**: the first parallel kernel call spawns
+//!   `num_threads() − 1` workers (the submitting thread is the last
+//!   "worker": it helps drain the queue, so a pool of size 1 degenerates
+//!   to plain sequential execution and tiny kernels never pay a handoff);
+//! * **persistent**: workers park on a condvar between jobs and are
+//!   reused for the life of the process — the per-call cost is one
+//!   enqueue + wakeup (~µs), not a `thread::spawn`/join pair (~100 µs);
+//! * **deterministic by construction**: the scoped helpers only hand out
+//!   *disjoint output-row ranges*, and every kernel runs the same
+//!   per-element arithmetic in the same order within a row as its
+//!   sequential form — so results are bit-exact for any thread count
+//!   (asserted in `rust/tests/parallel_determinism.rs`).
+//!
+//! # Sizing and composition
+//!
+//! `BOLD_NUM_THREADS` caps the global pool (default:
+//! `available_parallelism`). Outer coarse-grained parallelism — the
+//! data-parallel replicas of `coordinator::ParallelTrainer`, the batch
+//! workers of `runtime::serve` — *composes* with intra-op sharding through
+//! a thread-local **budget**: the outer layer wraps each of its workers in
+//! a [`BudgetGuard`] carving out `num_threads() / n_workers` lanes, and
+//! every kernel consults [`thread_budget`] when deciding its shard count.
+//! The pool itself stays fixed-size, so even a mis-set budget can only
+//! queue more tasks, never oversubscribe the machine with OS threads.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// A lifetime-erased scoped task (see safety argument in [`run_scoped`]).
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    jobs: Mutex<VecDeque<Task>>,
+    /// Signalled when a job is pushed; workers park here when idle.
+    available: Condvar,
+}
+
+struct Pool {
+    queue: &'static Queue,
+    /// Spawned worker threads (`num_threads() − 1`; 0 on a 1-core budget).
+    workers: usize,
+}
+
+/// Global pool handle, spawned on first parallel kernel call.
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+/// Pool size: `BOLD_NUM_THREADS` if set (≥ 1), else the machine's
+/// available parallelism. Read once; changing the env var mid-process has
+/// no effect.
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("BOLD_NUM_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let queue: &'static Queue = Box::leak(Box::new(Queue {
+            jobs: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+        }));
+        let workers = num_threads().saturating_sub(1);
+        for i in 0..workers {
+            std::thread::Builder::new()
+                .name(format!("bold-pool-{i}"))
+                .spawn(move || worker_loop(queue))
+                .expect("spawn pool worker");
+        }
+        Pool { queue, workers }
+    })
+}
+
+fn worker_loop(queue: &'static Queue) {
+    loop {
+        let job = {
+            let mut q = queue.jobs.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                q = queue.available.wait(q).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+fn try_pop(queue: &Queue) -> Option<Task> {
+    queue.jobs.lock().unwrap().pop_front()
+}
+
+// ---------------------------------------------------------------------------
+// thread budget (outer-parallelism handoff)
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static BUDGET: std::cell::Cell<Option<usize>> = const { std::cell::Cell::new(None) };
+}
+
+/// Intra-op threads the *current thread's* kernels may shard across:
+/// the innermost active [`BudgetGuard`], else the full pool size.
+pub fn thread_budget() -> usize {
+    BUDGET.with(|b| b.get()).unwrap_or_else(num_threads)
+}
+
+/// RAII handoff of intra-op parallelism to an outer parallel layer: while
+/// the guard lives, kernels called **on this thread** shard across at most
+/// `n` lanes. `ParallelTrainer` gives each data-parallel replica
+/// `num_threads() / workers`; the serve workers do the same — so
+/// outer × inner never exceeds the pool size by design.
+pub struct BudgetGuard {
+    prev: Option<usize>,
+}
+
+impl BudgetGuard {
+    pub fn new(n: usize) -> Self {
+        let prev = BUDGET.with(|b| b.replace(Some(n.max(1))));
+        BudgetGuard { prev }
+    }
+}
+
+impl Drop for BudgetGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        BUDGET.with(|b| b.set(prev));
+    }
+}
+
+/// Run `f` under a temporary thread budget (test/bench helper: the
+/// determinism suite runs every kernel with budget 1 vs N and asserts
+/// bit-exact equality).
+pub fn with_thread_budget<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    let _guard = BudgetGuard::new(n);
+    f()
+}
+
+/// Minimum f32 multiply-adds per pool shard — the shared work quantum for
+/// the dense GEMMs and the LUT-based packed backward kernels (~130 Ki
+/// MACs ≈ tens of µs, comfortably above the enqueue/wakeup overhead).
+/// Kernel families with different per-element costs (packed word-ops,
+/// copy/scatter moves) define their own quanta next to their kernels.
+pub const MAC_QUANTUM: usize = 1 << 17;
+
+/// Shard count for a kernel producing `rows` independent output rows with
+/// `total_work` scalar operations overall: work-proportional (one shard
+/// per `quantum` of work, so tiny kernels stay sequential), capped by the
+/// current [`thread_budget`] and by `rows` (the shard unit).
+pub fn shards_for(total_work: usize, rows: usize, quantum: usize) -> usize {
+    let by_work = total_work / quantum.max(1);
+    if by_work <= 1 {
+        return 1;
+    }
+    by_work.min(thread_budget()).min(rows).max(1)
+}
+
+// ---------------------------------------------------------------------------
+// scoped execution
+// ---------------------------------------------------------------------------
+
+/// Completion latch: counts outstanding tasks, carries the first panic.
+struct LatchState {
+    remaining: usize,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+struct Latch {
+    state: Mutex<LatchState>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch {
+            state: Mutex::new(LatchState { remaining: n, panic: None }),
+            done: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, panic: Option<Box<dyn std::any::Any + Send>>) {
+        let mut s = self.state.lock().unwrap();
+        s.remaining -= 1;
+        if s.panic.is_none() {
+            s.panic = panic;
+        }
+        if s.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.state.lock().unwrap().remaining == 0
+    }
+
+    fn wait(&self) {
+        let mut s = self.state.lock().unwrap();
+        while s.remaining > 0 {
+            s = self.done.wait(s).unwrap();
+        }
+        if let Some(payload) = s.panic.take() {
+            drop(s);
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Execute `tasks` to completion across the pool, the calling thread
+/// included. Blocks until every task has finished; a panicking task is
+/// re-raised on the caller after all siblings complete.
+///
+/// Tasks may borrow from the caller's stack (the closures are **not**
+/// `'static`): this is sound because `run_scoped` does not return until
+/// every task has run, so no borrow outlives its owner — the same
+/// contract as `std::thread::scope`, on persistent threads. The one
+/// `unsafe` block below erases the closure lifetime to hand the task to a
+/// `'static` worker; the latch wait is what discharges it.
+///
+/// Deadlock-freedom under nesting (a pool task calling `run_scoped`
+/// again): the caller *helps* — it drains the shared queue until its own
+/// latch clears or the queue is empty before parking, so every one of its
+/// tasks is either executed by the caller itself or already claimed by a
+/// running worker (which always makes progress).
+pub fn run_scoped<F: FnOnce() + Send>(mut tasks: Vec<F>) {
+    match tasks.len() {
+        0 => return,
+        1 => return (tasks.pop().unwrap())(),
+        _ => {}
+    }
+    let pool = pool();
+    if pool.workers == 0 {
+        for t in tasks {
+            t();
+        }
+        return;
+    }
+    let latch = Latch::new(tasks.len());
+    {
+        let mut q = pool.queue.jobs.lock().unwrap();
+        for t in tasks {
+            let l: &Latch = &latch;
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(t));
+                l.complete(r.err());
+            });
+            // SAFETY: `job` borrows `latch` and whatever the caller's
+            // tasks capture. `run_scoped` blocks on `latch.wait()` until
+            // every job has completed, so all borrows outlive every use;
+            // the 'static bound is a queue-plumbing fiction never relied
+            // on for actual lifetime.
+            let job: Task = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Task>(job)
+            };
+            q.push_back(job);
+        }
+    }
+    pool.queue.available.notify_all();
+    // Help: run queued tasks (ours or a sibling scope's — either way the
+    // owning scope is still waiting, so its borrows are alive) until our
+    // own latch clears or the queue drains, then wait for stragglers
+    // claimed by other workers.
+    while !latch.is_done() {
+        match try_pop(pool.queue) {
+            Some(job) => job(),
+            None => break,
+        }
+    }
+    latch.wait();
+}
+
+/// Split `data` into `shards` near-equal contiguous row chunks and run
+/// `f(start_row, chunk)` for each on the pool; `shards <= 1` (or a
+/// degenerate stride) runs `f(0, data)` inline. The chunks are disjoint
+/// `&mut` ranges — the sharding primitive for kernels that chunk a single
+/// output buffer (`backward_weight[_masked]`, `matmul_at`,
+/// `im2col`/`col2im`); kernels that must co-chunk several buffers
+/// (input rows zipped with output rows) hand-roll the same split over
+/// [`run_scoped`] directly. `stride` is the number of elements per
+/// logical row; chunk boundaries always fall on row boundaries.
+pub fn for_each_row_chunk<T: Send, F>(data: &mut [T], stride: usize, shards: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let rows = if stride == 0 { 0 } else { data.len() / stride };
+    if shards <= 1 || rows <= 1 || data.is_empty() {
+        f(0, data);
+        return;
+    }
+    let rows_per = rows.div_ceil(shards.min(rows));
+    let chunk_len = rows_per * stride;
+    let fr = &f;
+    let tasks: Vec<_> = data
+        .chunks_mut(chunk_len)
+        .enumerate()
+        .map(|(ci, chunk)| move || fr(ci * rows_per, chunk))
+        .collect();
+    run_scoped(tasks);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_scoped_executes_every_task_with_borrows() {
+        let mut out = vec![0usize; 64];
+        {
+            let tasks: Vec<_> = out
+                .chunks_mut(4)
+                .enumerate()
+                .map(|(i, chunk)| {
+                    move || {
+                        for (k, v) in chunk.iter_mut().enumerate() {
+                            *v = i * 4 + k;
+                        }
+                    }
+                })
+                .collect();
+            run_scoped(tasks);
+        }
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_run_scoped_does_not_deadlock() {
+        let mut sums = vec![0u64; 8];
+        let tasks: Vec<_> = sums
+            .iter_mut()
+            .enumerate()
+            .map(|(i, s)| {
+                move || {
+                    let mut inner = vec![0u64; 4];
+                    let sub: Vec<_> = inner
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(j, v)| move || *v = (i * 4 + j) as u64)
+                        .collect();
+                    run_scoped(sub);
+                    *s = inner.iter().sum();
+                }
+            })
+            .collect();
+        run_scoped(tasks);
+        let total: u64 = sums.iter().sum();
+        assert_eq!(total, (0..32).sum::<u64>());
+    }
+
+    #[test]
+    fn panic_in_task_propagates_after_siblings_finish() {
+        let hits = std::sync::atomic::AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let tasks: Vec<_> = (0..6)
+                .map(|i| {
+                    let hits = &hits;
+                    move || {
+                        if i == 3 {
+                            panic!("shard boom");
+                        }
+                        hits.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                    }
+                })
+                .collect();
+            run_scoped(tasks);
+        }));
+        assert!(result.is_err(), "panic must propagate to the caller");
+        assert_eq!(hits.load(std::sync::atomic::Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn budget_guard_nests_and_restores() {
+        let base = thread_budget();
+        {
+            let _a = BudgetGuard::new(3);
+            assert_eq!(thread_budget(), 3);
+            {
+                let _b = BudgetGuard::new(1);
+                assert_eq!(thread_budget(), 1);
+            }
+            assert_eq!(thread_budget(), 3);
+        }
+        assert_eq!(thread_budget(), base);
+    }
+
+    #[test]
+    fn shards_scale_with_work_and_caps() {
+        with_thread_budget(8, || {
+            assert_eq!(shards_for(10, 100, 1 << 16), 1, "tiny work stays sequential");
+            assert_eq!(shards_for(4 << 16, 100, 1 << 16), 4, "work-proportional");
+            assert_eq!(shards_for(usize::MAX / 2, 3, 1 << 16), 3, "row-capped");
+            assert_eq!(shards_for(usize::MAX / 2, 100, 1 << 16), 8, "budget-capped");
+        });
+        with_thread_budget(1, || {
+            assert_eq!(shards_for(usize::MAX / 2, 100, 1 << 16), 1);
+        });
+    }
+
+    #[test]
+    fn for_each_row_chunk_covers_all_rows() {
+        with_thread_budget(4, || {
+            for rows in [0usize, 1, 2, 3, 7, 8, 9] {
+                let stride = 5;
+                let mut data = vec![0u32; rows * stride];
+                for_each_row_chunk(&mut data, stride, 4, |row0, chunk| {
+                    for (r, row) in chunk.chunks_mut(stride).enumerate() {
+                        for v in row.iter_mut() {
+                            *v = (row0 + r + 1) as u32;
+                        }
+                    }
+                });
+                for r in 0..rows {
+                    assert!(data[r * stride..(r + 1) * stride].iter().all(|&v| v == (r + 1) as u32),
+                        "rows={rows} r={r}");
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,227 @@
+//! Determinism suite (DESIGN.md §Parallelism): every kernel that shards
+//! across the persistent pool must be **bit-exact** against its
+//! single-thread form — same bits, same f32 words, no tolerance.
+//!
+//! The thread count is forced via `pool::with_thread_budget`, so the suite
+//! is meaningful on any machine (on a 1-core runner the parallel path
+//! degenerates to inline execution and equality is trivial, which is the
+//! correct behaviour, not a skip). Shapes are chosen to actually cross the
+//! kernels' work quanta so the multi-shard path engages, and to cover the
+//! awkward cases: non-multiple-of-64 fan-in (tail words), batches smaller
+//! than the thread count (row-capped sharding), empty (0-sized) operands
+//! and all-masked (𝕄-zero) rows.
+//!
+//! CI runs this file in `--release` as well, where the parallel paths see
+//! realistic shard sizes (.github/workflows/ci.yml).
+
+use bold::nn::{ParamRef, ParamStore};
+use bold::optim::BooleanOptimizer;
+use bold::tensor::{BitMatrix, Tensor};
+use bold::util::{pool, Rng};
+
+/// Run `f` at thread budget 1 and 8 and return both results.
+fn both<R>(mut f: impl FnMut() -> R) -> (R, R) {
+    let seq = pool::with_thread_budget(1, &mut f);
+    let par = pool::with_thread_budget(8, &mut f);
+    (seq, par)
+}
+
+/// Shapes that cross the packed kernels' work quantum (so the pool path
+/// actually engages at budget 8) plus edge shapes that must stay exact on
+/// the sequential fallback: odd fan-in, tiny batch, empty operands.
+const PACKED_SHAPES: &[(usize, usize, usize)] = &[
+    (66, 70, 2050),  // odd everything, multi-shard
+    (128, 129, 4096), // word-aligned fan-in, odd n
+    (2, 1024, 4097), // batch smaller than thread count: row-capped shards
+    (7, 5, 63),      // small: sequential fallback
+    (1, 33, 130),    // single row
+    (0, 8, 64),      // empty batch
+    (4, 0, 64),      // no output units
+    (4, 8, 0),       // zero fan-in
+];
+
+fn random_mask(rows: usize, cols: usize, rng: &mut Rng) -> BitMatrix {
+    let mut mask = BitMatrix::zeros(rows, cols);
+    for i in 0..rows {
+        for j in 0..cols {
+            mask.set(i, j, rng.bernoulli(0.8));
+        }
+    }
+    // one fully-masked ("empty") row: every lane is the 𝕄 zero
+    if rows > 0 {
+        for j in 0..cols {
+            mask.set(rows - 1, j, false);
+        }
+    }
+    mask
+}
+
+#[test]
+fn xnor_gemm_bit_exact_across_thread_counts() {
+    let mut rng = Rng::new(101);
+    for &(b, n, m) in PACKED_SHAPES {
+        let x = BitMatrix::random(b, m, &mut rng);
+        let w = BitMatrix::random(n, m, &mut rng);
+        let (seq, par) = both(|| x.xnor_gemm(&w));
+        assert_eq!(seq, par, "xnor_gemm {b}x{n}x{m}");
+    }
+}
+
+#[test]
+fn xnor_gemm_masked_bit_exact_across_thread_counts() {
+    let mut rng = Rng::new(102);
+    for &(b, n, m) in PACKED_SHAPES {
+        let x = BitMatrix::random(b, m, &mut rng);
+        let w = BitMatrix::random(n, m, &mut rng);
+        let mask = random_mask(b, m, &mut rng);
+        let (seq, par) = both(|| x.xnor_gemm_masked(&w, &mask));
+        assert_eq!(seq, par, "xnor_gemm_masked {b}x{n}x{m}");
+    }
+}
+
+#[test]
+fn xnor_threshold_bit_exact_across_thread_counts() {
+    let mut rng = Rng::new(103);
+    for &(b, n, m) in PACKED_SHAPES {
+        let x = BitMatrix::random(b, m, &mut rng);
+        let w = BitMatrix::random(n, m, &mut rng);
+        let bias = if n > 0 { Some(BitMatrix::random(1, n, &mut rng)) } else { None };
+        for thr in [0.0f32, -2.0] {
+            let (seq, par) = both(|| x.xnor_threshold(&w, bias.as_ref(), thr));
+            assert_eq!(seq, par, "xnor_threshold {b}x{n}x{m} thr={thr}");
+        }
+    }
+}
+
+#[test]
+fn xnor_threshold_masked_bit_exact_across_thread_counts() {
+    let mut rng = Rng::new(104);
+    for &(b, n, m) in PACKED_SHAPES {
+        let x = BitMatrix::random(b, m, &mut rng);
+        let w = BitMatrix::random(n, m, &mut rng);
+        let lane = random_mask(1, m, &mut rng);
+        let (seq, par) = both(|| x.xnor_threshold_masked(&w, lane.row(0), None, 0.0));
+        assert_eq!(seq, par, "xnor_threshold_masked {b}x{n}x{m}");
+    }
+}
+
+#[test]
+fn backward_input_bit_exact_across_thread_counts() {
+    let mut rng = Rng::new(105);
+    for &(b, n, m) in PACKED_SHAPES {
+        let w = BitMatrix::random(n, m, &mut rng);
+        let z = Tensor::randn(&[b, n], 1.0, &mut rng);
+        let (seq, par) = both(|| w.backward_input(&z));
+        assert_eq!(seq, par, "backward_input {b}x{n}x{m}");
+    }
+}
+
+#[test]
+fn backward_weight_bit_exact_across_thread_counts() {
+    let mut rng = Rng::new(106);
+    for &(b, n, m) in PACKED_SHAPES {
+        let x = BitMatrix::random(b, m, &mut rng);
+        let z = Tensor::randn(&[b, n], 1.0, &mut rng);
+        let (seq, par) = both(|| x.backward_weight(&z));
+        assert_eq!(seq, par, "backward_weight {b}x{n}x{m}");
+    }
+}
+
+#[test]
+fn backward_weight_masked_bit_exact_across_thread_counts() {
+    let mut rng = Rng::new(107);
+    for &(b, n, m) in PACKED_SHAPES {
+        let x = BitMatrix::random(b, m, &mut rng);
+        let mask = random_mask(b, m, &mut rng);
+        let z = Tensor::randn(&[b, n], 1.0, &mut rng);
+        let (seq, par) = both(|| x.backward_weight_masked(&z, &mask));
+        assert_eq!(seq, par, "backward_weight_masked {b}x{n}x{m}");
+    }
+}
+
+/// Dense GEMMs: sharded rows preserve each element's f32 accumulation
+/// order, so even floating point must match to the last bit.
+#[test]
+fn dense_matmuls_bit_exact_across_thread_counts() {
+    let mut rng = Rng::new(108);
+    for &(m, k, n) in
+        &[(80usize, 100usize, 90usize), (130, 515, 64), (2, 2048, 70), (1, 5, 3), (0, 4, 4)]
+    {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let bt = b.transpose2();
+        let at = a.transpose2();
+        let (s1, p1) = both(|| a.matmul(&b));
+        assert_eq!(s1, p1, "matmul {m}x{k}x{n}");
+        let (s2, p2) = both(|| a.matmul_bt(&bt));
+        assert_eq!(s2, p2, "matmul_bt {m}x{k}x{n}");
+        let (s3, p3) = both(|| at.matmul_at(&b));
+        assert_eq!(s3, p3, "matmul_at {m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn im2col_col2im_bit_exact_across_thread_counts() {
+    let mut rng = Rng::new(109);
+    // 3 images < thread count: the col2im shard count is image-capped.
+    for &(n, c, h, k, s, p) in
+        &[(3usize, 8usize, 33usize, 3usize, 1usize, 1usize), (5, 4, 19, 3, 2, 1), (1, 2, 7, 3, 1, 0)]
+    {
+        let x = Tensor::randn(&[n, c, h, h], 1.0, &mut rng);
+        let (seq, par) = both(|| x.im2col(k, s, p));
+        assert_eq!(seq, par, "im2col n{n} c{c} h{h}");
+        let grad = Tensor::randn(&seq.shape, 1.0, &mut rng);
+        let (gs, gp) = both(|| grad.col2im(n, c, h, h, k, s, p));
+        assert_eq!(gs, gp, "col2im n{n} c{c} h{h}");
+    }
+}
+
+/// The optimizer's whole observable state transition — packed weights,
+/// accumulator, flip count, β — must be identical at any thread budget.
+#[test]
+fn optimizer_step_bit_exact_across_thread_counts() {
+    for (rows, cols) in [(1024usize, 520usize), (3, 70), (256, 4097)] {
+        let run = |budget: usize| {
+            pool::with_thread_budget(budget, || {
+                let mut rng = Rng::new(110);
+                let mut bits = BitMatrix::random(rows, cols, &mut rng);
+                let grad = Tensor::randn(&[rows, cols], 1.2, &mut rng);
+                let mut store = ParamStore::new();
+                store.accumulate("w", &grad);
+                let opt = BooleanOptimizer::new(1.0);
+                let mut params = vec![ParamRef::Bool { name: "w".into(), bits: &mut bits }];
+                let stats = opt.step(&mut params, &mut store);
+                let slot = store.slot("w").unwrap();
+                (bits.clone(), stats.flips, slot.accum.data.clone(), slot.ratio)
+            })
+        };
+        let seq = run(1);
+        let par = run(8);
+        assert_eq!(seq.0, par.0, "{rows}x{cols}: packed weights");
+        assert_eq!(seq.1, par.1, "{rows}x{cols}: flip count");
+        assert_eq!(seq.2, par.2, "{rows}x{cols}: accumulator");
+        assert_eq!(seq.3, par.3, "{rows}x{cols}: beta");
+    }
+}
+
+/// End to end: a full layer forward/backward through BoolLinear-style
+/// kernels gives identical results at any budget (the composition the
+/// trainer relies on).
+#[test]
+fn packed_forward_backward_chain_bit_exact() {
+    let mut rng = Rng::new(111);
+    let (b, n, m) = (66, 70, 2050);
+    let x = BitMatrix::random(b, m, &mut rng);
+    let w = BitMatrix::random(n, m, &mut rng);
+    let z = Tensor::randn(&[b, n], 0.7, &mut rng);
+    let chain = || {
+        let s = x.xnor_gemm(&w);
+        let q = x.backward_weight(&z);
+        let g = w.backward_input(&z);
+        (s, q, g)
+    };
+    let (seq, par) = both(chain);
+    assert_eq!(seq.0, par.0, "forward");
+    assert_eq!(seq.1, par.1, "weight vote");
+    assert_eq!(seq.2, par.2, "input signal");
+}
