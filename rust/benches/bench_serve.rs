@@ -1,19 +1,34 @@
 //! Serving benchmark (EXPERIMENTS.md §Perf): single-stream latency vs
 //! micro-batched multi-worker throughput of the native packed engine on
-//! the artifact-shaped MLP (784-512-256-10).
+//! the artifact-shaped MLP (784-512-256-10), plus a conv-model section
+//! (VGG-SMALL through the packed graph executor) for the ISSUE-4
+//! serve-throughput row.
 //!
 //! Acceptance target: batch 64 with 4 workers delivers ≥4× the
 //! single-example (batch 1, 1 worker) throughput on the same model.
 
-use bold::models::{boolean_mlp, MlpConfig};
-use bold::runtime::{NativeServer, PackedMlp, ServeConfig};
-use bold::tensor::BitMatrix;
+use bold::models::{boolean_mlp, vgg_small, MlpConfig, VggConfig};
+use bold::nn::{Layer, Value};
+use bold::runtime::{NativeServer, PackedGraph, ServeConfig};
+use bold::tensor::{BitMatrix, Tensor};
 use bold::util::{Rng, Timer};
 use std::time::{Duration, Instant};
 
-fn engine() -> PackedMlp {
+fn mlp_engine() -> PackedGraph {
     let mut model = boolean_mlp(&MlpConfig::default(), &mut Rng::new(7));
-    PackedMlp::from_layer(&mut model).expect("engine")
+    PackedGraph::from_layer(&mut model).expect("mlp engine")
+}
+
+fn vgg_engine() -> PackedGraph {
+    // CPU-scale VGG-SMALL (width 0.25 ⇒ 32/64/128 channels) with BN so the
+    // bench exercises the folded per-channel thresholds.
+    let cfg = VggConfig { hw: 32, width_mult: 0.25, with_bn: true, ..Default::default() };
+    let mut rng = Rng::new(11);
+    let mut model = vgg_small(&cfg, &mut rng);
+    // one eval forward records the input shape for Record::Arch
+    let probe = Tensor::rand_pm1(&[1, 3, 32, 32], &mut rng);
+    let _ = model.forward(Value::F32(probe), false);
+    PackedGraph::from_layer(&mut model).expect("vgg engine")
 }
 
 /// Drive `n` requests through the server from `clients` pipelined client
@@ -45,21 +60,56 @@ fn drive(server: &NativeServer, n: usize, clients: usize, depth: usize) -> f64 {
     n as f64 / t0.elapsed().as_secs_f64()
 }
 
+/// The three-config sweep (single-example / micro-batched / batched +
+/// parallel) over one engine builder; returns the req/s per config.
+fn sweep(label: &str, n_requests: usize, mk: impl Fn() -> PackedGraph) -> Vec<f64> {
+    println!("-- {label}");
+    let configs = [
+        (1usize, 1usize, 1usize, "1 worker, batch 1 (single-example)"),
+        (1, 64, 128, "1 worker, batch 64"),
+        (4, 64, 128, "4 workers, batch 64"),
+    ];
+    let mut rates = Vec::new();
+    for &(workers, batch, clients, cfg_label) in &configs {
+        let server = NativeServer::start(
+            mk(),
+            ServeConfig {
+                workers,
+                max_batch: batch,
+                queue_cap: 4096,
+                batch_window: Duration::from_micros(200),
+            },
+        );
+        let rate = drive(&server, n_requests, clients, 32);
+        let stats = server.shutdown();
+        println!(
+            "{cfg_label:<38} {rate:>10.0} req/s   (avg batch fill {:.1})",
+            stats.avg_batch()
+        );
+        rates.push(rate);
+    }
+    println!(
+        "batch 64 + 4 workers vs single-example: {:.1}x  (target >= 4x)\n",
+        rates[2] / rates[0]
+    );
+    rates
+}
+
 fn main() {
-    println!("== bench_serve: native packed engine, MLP 784-512-256-10");
+    println!("== bench_serve: native packed engine");
 
     // --- raw engine: per-example cost, batch 1 vs batch 64 --------------
-    let eng = engine();
+    let eng = mlp_engine();
     let mut rng = Rng::new(9);
     let x1 = BitMatrix::random(1, 784, &mut rng);
     let x64 = BitMatrix::random(64, 784, &mut rng);
-    let mut t = Timer::new("engine forward batch 1 (single-stream)");
+    let mut t = Timer::new("MLP engine forward batch 1 (single-stream)");
     t.bench(3, 15, || {
         std::hint::black_box(eng.forward_bits(&x1));
     });
     t.report(None);
     let lat1 = t.median();
-    let mut t = Timer::new("engine forward batch 64");
+    let mut t = Timer::new("MLP engine forward batch 64");
     t.bench(2, 9, || {
         std::hint::black_box(eng.forward_bits(&x64));
     });
@@ -71,38 +121,22 @@ fn main() {
         lat1 / (lat64 / 64.0)
     );
 
+    let vgg = vgg_engine();
+    let v1 = BitMatrix::random(1, vgg.d_in(), &mut rng);
+    let v16 = BitMatrix::random(16, vgg.d_in(), &mut rng);
+    let mut t = Timer::new("VGG graph forward batch 1 (conv, BN folded)");
+    t.bench(2, 7, || {
+        std::hint::black_box(vgg.forward_bits(&v1));
+    });
+    t.report(None);
+    let mut t = Timer::new("VGG graph forward batch 16");
+    t.bench(1, 5, || {
+        std::hint::black_box(vgg.forward_bits(&v16));
+    });
+    t.report(None);
+    println!();
+
     // --- full server: queue + micro-batching + worker pool --------------
-    let n_requests = 8192;
-    let configs = [
-        (1usize, 1usize, 1usize, "1 worker, batch 1 (single-example)"),
-        (1, 64, 128, "1 worker, batch 64"),
-        (4, 64, 128, "4 workers, batch 64"),
-    ];
-    let mut rates = Vec::new();
-    for &(workers, batch, clients, label) in &configs {
-        let server = NativeServer::start(
-            engine(),
-            ServeConfig {
-                workers,
-                max_batch: batch,
-                queue_cap: 4096,
-                batch_window: Duration::from_micros(200),
-            },
-        );
-        let rate = drive(&server, n_requests, clients, 32);
-        let stats = server.shutdown();
-        println!(
-            "{label:<38} {rate:>10.0} req/s   (avg batch fill {:.1})",
-            stats.avg_batch()
-        );
-        rates.push(rate);
-    }
-    println!(
-        "\nbatch 64 + 4 workers vs single-example: {:.1}x  (target >= 4x)",
-        rates[2] / rates[0]
-    );
-    println!(
-        "batch 64, same worker count:            {:.1}x  (micro-batching alone)",
-        rates[1] / rates[0]
-    );
+    sweep("MLP 784-512-256-10", 8192, mlp_engine);
+    sweep("VGG-SMALL w0.25 (packed conv graph)", 512, vgg_engine);
 }

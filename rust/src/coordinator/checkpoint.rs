@@ -12,6 +12,8 @@
 //!     kind 3 (bool optim):   u32 len  | f32 accum… | f32 ratio
 //!     kind 4 (adam moments): u32 len  | f32 m… | f32 v…
 //!     kind 5 (meta u64):     u64 value
+//!     kind 6 (architecture): u32 n_dims | u32 dim… | LayerDesc list
+//!                            (see `nn::LayerDesc::write_list`)
 //!
 //! Buffers (kind 2) carry non-trainable running statistics (BatchNorm
 //! mean/var, centered-threshold means). Kinds 3–5 carry the
@@ -19,9 +21,13 @@
 //! Adam moments, the shared Adam timestep) written by [`save_training`]
 //! so [`load_training`] resumes a run bit-exactly; [`save_model`] /
 //! [`load_model`] stay weights+buffers-only for serving consumers, and
-//! `load_model` skips optimizer records it encounters.
+//! `load_model` skips optimizer records it encounters. Kind 6 is the
+//! architecture self-description ([`crate::nn::Layer::describe`]) plus
+//! the recorded non-batch input shape: `runtime::PackedGraph::load`
+//! compiles it into a servable op graph with no model-specific code.
+//! Models that are not describable simply omit the record.
 
-use crate::nn::{Layer, ParamRef, ParamStore};
+use crate::nn::{Layer, LayerDesc, ParamRef, ParamStore};
 use std::fmt;
 use std::io::{Read, Write};
 
@@ -104,6 +110,24 @@ pub enum Record {
     OptimAdam { name: String, m: Vec<f32>, v: Vec<f32> },
     /// Scalar metadata, e.g. the shared Adam timestep (kind 5).
     Meta { name: String, value: u64 },
+    /// Architecture self-description (kind 6): the layer op list from
+    /// [`crate::nn::Layer::describe`] plus the non-batch input shape
+    /// (empty when the model was never forwarded before saving).
+    Arch { name: String, input_shape: Vec<usize>, layers: Vec<LayerDesc> },
+}
+
+/// The `Record::Arch` for a model, when it is describable — THE single
+/// construction site of the architecture record, shared by
+/// [`save_model`]/[`save_training`] and the serving engines' in-memory
+/// freeze paths (`PackedMlp::from_layer` / `PackedGraph::from_layer`),
+/// so a live-frozen model and its saved checkpoint can never disagree
+/// about the record's shape.
+pub fn arch_record(model: &dyn Layer) -> Option<Record> {
+    model.describe().map(|layers| Record::Arch {
+        name: model.name(),
+        input_shape: model.input_shape().unwrap_or_default(),
+        layers,
+    })
 }
 
 /// Save a whole model: parameters + non-trainable buffers (BN running
@@ -133,6 +157,9 @@ fn save_impl(
     // `buffers()` needs `&mut model`, so count them before taking the
     // (long-lived) params borrow below.
     let n_buffers = model.buffers().len();
+    // Architecture record (kind 6), when the model supports
+    // self-description.
+    let arch = arch_record(model);
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
     f.write_all(MAGIC)?;
     {
@@ -162,7 +189,20 @@ fn save_impl(
                 v
             }
         };
-        w_u32(&mut f, (params.len() + n_buffers + optim.len()) as u32)?;
+        w_u32(
+            &mut f,
+            (params.len() + n_buffers + optim.len() + usize::from(arch.is_some())) as u32,
+        )?;
+        // architecture first, so readers see it before the tensors it
+        // references
+        if let Some(Record::Arch { name, input_shape, layers }) = &arch {
+            w_name(&mut f, 6, name)?;
+            w_u32(&mut f, input_shape.len() as u32)?;
+            for &d in input_shape {
+                w_u32(&mut f, d as u32)?;
+            }
+            LayerDesc::write_list(&mut f, layers)?;
+        }
         for p in params.iter() {
             write_param(&mut f, p)?;
         }
@@ -405,6 +445,16 @@ pub fn read_records(path: &str) -> Result<Vec<Record>, CheckpointError> {
                 let mut b = [0u8; 8];
                 f.read_exact(&mut b)?;
                 out.push(Record::Meta { name, value: u64::from_le_bytes(b) });
+            }
+            6 => {
+                let n_dims = r_u32(&mut f)? as usize;
+                let mut input_shape = Vec::with_capacity(n_dims);
+                for _ in 0..n_dims {
+                    input_shape.push(r_u32(&mut f)? as usize);
+                }
+                let layers = LayerDesc::read_list(&mut f)
+                    .map_err(|e| CheckpointError::new(format!("bad arch record: {e}")))?;
+                out.push(Record::Arch { name, input_shape, layers });
             }
             k => return Err(CheckpointError::new(format!("bad kind {k}"))),
         }

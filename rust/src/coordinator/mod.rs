@@ -15,8 +15,8 @@ mod parallel;
 mod trainer;
 
 pub use checkpoint::{
-    load_checkpoint, load_model, load_training, read_records, save_checkpoint, save_model,
-    save_training, CheckpointError, Record,
+    arch_record, load_checkpoint, load_model, load_training, read_records, save_checkpoint,
+    save_model, save_training, CheckpointError, Record,
 };
 pub use metrics::MetricLog;
 pub use parallel::ParallelTrainer;

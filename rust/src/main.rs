@@ -262,11 +262,12 @@ fn cmd_energy(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-/// Native packed-bit batch serving: load (or build) a frozen Boolean MLP,
-/// start the worker pool, drive synthetic client traffic through it and
-/// report throughput + latency percentiles.
+/// Native packed-bit batch serving: load (or build) a frozen Boolean
+/// model — any describable architecture (MLP, VGG, ResNet) via the
+/// packed graph executor — start the worker pool, drive synthetic client
+/// traffic through it and report throughput + latency percentiles.
 fn cmd_serve_native(args: &[String]) -> Result<(), String> {
-    use bold::runtime::{NativeServer, PackedMlp, ServeConfig};
+    use bold::runtime::{NativeServer, PackedGraph, ServeConfig};
     use std::time::{Duration, Instant};
 
     let (kv, _) = parse_kv(args)?;
@@ -294,21 +295,23 @@ fn cmd_serve_native(args: &[String]) -> Result<(), String> {
     }
     let engine = match &model_path {
         Some(p) => {
-            let e = PackedMlp::load(p).map_err(|e| e.to_string())?;
+            let e = PackedGraph::load(p).map_err(|e| e.to_string())?;
             println!("loaded frozen model from {p}");
             e
         }
         None => {
             println!("no --model given — serving a randomly initialised 784-512-256-10 MLP");
             let mut model = boolean_mlp(&MlpConfig::default(), &mut Rng::new(7));
-            PackedMlp::from_layer(&mut model).map_err(|e| e.to_string())?
+            PackedGraph::from_layer(&mut model).map_err(|e| e.to_string())?
         }
     };
     let (d_in, d_out) = (engine.d_in(), engine.d_out());
     println!(
-        "native engine: {} Boolean layers, d_in {d_in}, d_out {d_out}, {} packed weight bits \
-         ({} KiB)",
-        engine.layers.len(),
+        "native engine: {} ops [{}], input {:?} ({d_in} bits), d_out {d_out}, {} packed weight \
+         bits ({} KiB)",
+        engine.num_ops(),
+        engine.summary(),
+        engine.input_shape,
         engine.param_bits(),
         engine.param_bits() / 8 / 1024
     );

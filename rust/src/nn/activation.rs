@@ -2,7 +2,7 @@
 //! Appendix C backprop re-weighting, input binarization, and plain ReLU
 //! for FP baselines.
 
-use super::{Layer, ParamStore, Value};
+use super::{Layer, LayerDesc, ParamStore, Value};
 use crate::tensor::Tensor;
 
 /// Backward re-weighting through the step activation (Appendix C.1).
@@ -135,6 +135,14 @@ impl Layer for ThresholdAct {
             Vec::new()
         }
     }
+
+    fn describe(&self) -> Option<Vec<LayerDesc>> {
+        Some(vec![LayerDesc::ThresholdAct {
+            name: self.name.clone(),
+            tau: self.tau,
+            centered: self.center,
+        }])
+    }
 }
 
 /// Input binarization: real input → ±1 bits (sign). Used at the front of
@@ -162,6 +170,10 @@ impl Layer for Binarize {
 
     fn name(&self) -> String {
         self.name.clone()
+    }
+
+    fn describe(&self) -> Option<Vec<LayerDesc>> {
+        Some(vec![LayerDesc::Binarize { name: self.name.clone() }])
     }
 }
 
@@ -197,6 +209,10 @@ impl Layer for ReLU {
 
     fn name(&self) -> String {
         self.name.clone()
+    }
+
+    fn describe(&self) -> Option<Vec<LayerDesc>> {
+        Some(vec![LayerDesc::ReLU { name: self.name.clone() }])
     }
 }
 

@@ -7,7 +7,7 @@
 //! [`BitMatrix::xnor_gemm_masked`], the weight vote uses
 //! [`BitMatrix::backward_weight_masked`].
 
-use super::{Layer, ParamRef, ParamStore, Value};
+use super::{Layer, LayerDesc, ParamRef, ParamStore, Value};
 use crate::tensor::{BitMatrix, Tensor};
 use crate::util::Rng;
 
@@ -95,63 +95,93 @@ impl BoolConv2d {
     }
 
     /// Bit-level im2col into the layer's reusable `patches` buffer, plus
-    /// the geometry-cached validity mask.
-    ///
-    /// The k taps along x map to *consecutive* source columns, so each
-    /// (output-row, channel, ky) copies one ≤k-bit run with a single
-    /// word-level `get_bits`/`set_bits` pair — ~k× fewer bit ops than the
-    /// naive per-tap loop (§Perf iteration log). The mask depends only on
-    /// the geometry, so it is rebuilt only when (n, h, w) changes and is
-    /// borrowed (never cloned) by forward/backward.
+    /// the geometry-cached validity mask (see [`packed_im2col`]). The mask
+    /// depends only on the geometry, so it is rebuilt only when (n, h, w)
+    /// changes and is borrowed (never cloned) by forward/backward.
     fn bit_im2col(&mut self, bits: &BitMatrix, n: usize, h: usize, w: usize) -> (usize, usize) {
-        let (oh, ow) = self.out_hw(h, w);
-        let (c, k, s, p) = (self.c_in, self.k, self.stride, self.pad);
-        assert!(k <= 56, "kernel too large for word-level im2col");
-        let cols = c * k * k;
         let build_mask = self.mask_geom != Some((n, h, w));
-        let mut patches = std::mem::replace(&mut self.patches, BitMatrix::zeros(0, 0));
-        patches.zero_resize(n * oh * ow, cols);
-        let mut mask = std::mem::replace(&mut self.mask, BitMatrix::zeros(0, 0));
-        if build_mask {
-            mask.zero_resize(n * oh * ow, cols);
-        }
-        for ni in 0..n {
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let row = (ni * oh + oy) * ow + ox;
-                    // valid kx range is contiguous: ix = ox·s + kx − p ∈ [0, w)
-                    let kx_lo = p.saturating_sub(ox * s).min(k);
-                    let kx_hi = k.min((w + p).saturating_sub(ox * s));
-                    if kx_lo >= kx_hi {
-                        continue;
-                    }
-                    let run = kx_hi - kx_lo;
-                    let ix0 = ox * s + kx_lo - p;
-                    for ky in 0..k {
-                        let iy = (oy * s + ky) as isize - p as isize;
-                        if iy < 0 || iy >= h as isize {
-                            continue;
-                        }
-                        for ci in 0..c {
-                            let src_col = (ci * h + iy as usize) * w + ix0;
-                            let dst_col = (ci * k + ky) * k + kx_lo;
-                            let chunk = bits.get_bits(ni, src_col, run);
-                            patches.set_bits(row, dst_col, run, chunk);
-                            if build_mask {
-                                mask.set_bits(row, dst_col, run, u64::MAX);
-                            }
-                        }
-                    }
-                }
-            }
-        }
-        self.patches = patches;
-        self.mask = mask;
+        let (oh, ow) = packed_im2col(
+            bits,
+            n,
+            self.c_in,
+            h,
+            w,
+            self.k,
+            self.stride,
+            self.pad,
+            &mut self.patches,
+            &mut self.mask,
+            build_mask,
+        );
         if build_mask {
             self.mask_geom = Some((n, h, w));
         }
         (oh, ow)
     }
+}
+
+/// Bit-level im2col core, shared by the training layer above and the
+/// serving graph executor (`runtime::graph`) so the parity-critical
+/// geometry logic exists exactly once.
+///
+/// The k taps along x map to *consecutive* source columns, so each
+/// (output-row, channel, ky) copies one ≤k-bit run with a single
+/// word-level `get_bits`/`set_bits` pair — ~k× fewer bit ops than the
+/// naive per-tap loop (§Perf iteration log). `patches` is reshaped and
+/// rebuilt every call; `mask` only when `build_mask` (its content depends
+/// solely on the (n, h, w) geometry, which the caller caches).
+pub(crate) fn packed_im2col(
+    bits: &BitMatrix,
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+    patches: &mut BitMatrix,
+    mask: &mut BitMatrix,
+    build_mask: bool,
+) -> (usize, usize) {
+    assert!(k <= 56, "kernel too large for word-level im2col");
+    let oh = (h + 2 * p - k) / s + 1;
+    let ow = (w + 2 * p - k) / s + 1;
+    let cols = c * k * k;
+    patches.zero_resize(n * oh * ow, cols);
+    if build_mask {
+        mask.zero_resize(n * oh * ow, cols);
+    }
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = (ni * oh + oy) * ow + ox;
+                // valid kx range is contiguous: ix = ox·s + kx − p ∈ [0, w)
+                let kx_lo = p.saturating_sub(ox * s).min(k);
+                let kx_hi = k.min((w + p).saturating_sub(ox * s));
+                if kx_lo >= kx_hi {
+                    continue;
+                }
+                let run = kx_hi - kx_lo;
+                let ix0 = ox * s + kx_lo - p;
+                for ky in 0..k {
+                    let iy = (oy * s + ky) as isize - p as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for ci in 0..c {
+                        let src_col = (ci * h + iy as usize) * w + ix0;
+                        let dst_col = (ci * k + ky) * k + kx_lo;
+                        let chunk = bits.get_bits(ni, src_col, run);
+                        patches.set_bits(row, dst_col, run, chunk);
+                        if build_mask {
+                            mask.set_bits(row, dst_col, run, u64::MAX);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (oh, ow)
 }
 
 impl Layer for BoolConv2d {
@@ -205,6 +235,17 @@ impl Layer for BoolConv2d {
 
     fn name(&self) -> String {
         self.name.clone()
+    }
+
+    fn describe(&self) -> Option<Vec<LayerDesc>> {
+        Some(vec![LayerDesc::BoolConv2d {
+            name: self.name.clone(),
+            c_in: self.c_in,
+            c_out: self.c_out,
+            k: self.k,
+            stride: self.stride,
+            pad: self.pad,
+        }])
     }
 }
 

@@ -1,7 +1,7 @@
 //! The paper's Boolean linear layer (Eq. 1/3) with xnor logic, native
 //! Boolean weights and the Boolean backward of §3.3 / Appendix B.
 
-use super::{Layer, ParamRef, ParamStore, Value};
+use super::{Layer, LayerDesc, ParamRef, ParamStore, Value};
 use crate::tensor::{BitMatrix, Tensor};
 use crate::util::Rng;
 
@@ -168,6 +168,15 @@ impl Layer for BoolLinear {
 
     fn name(&self) -> String {
         self.name.clone()
+    }
+
+    fn describe(&self) -> Option<Vec<LayerDesc>> {
+        Some(vec![LayerDesc::BoolLinear {
+            name: self.name.clone(),
+            n_in: self.n_in,
+            n_out: self.n_out,
+            bias: self.bias.is_some(),
+        }])
     }
 }
 

@@ -1,7 +1,7 @@
 //! Dense FP 2-D convolution (im2col + GEMM) with full backward — the
 //! substrate for FP baselines and the BNN baselines' latent-weight path.
 
-use super::{Layer, ParamRef, ParamStore, Value};
+use super::{Layer, LayerDesc, ParamRef, ParamStore, Value};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 
@@ -106,6 +106,17 @@ impl Layer for Conv2d {
 
     fn name(&self) -> String {
         self.name.clone()
+    }
+
+    fn describe(&self) -> Option<Vec<LayerDesc>> {
+        Some(vec![LayerDesc::Conv2d {
+            name: self.name.clone(),
+            c_in: self.c_in,
+            c_out: self.c_out,
+            k: self.k,
+            stride: self.stride,
+            pad: self.pad,
+        }])
     }
 }
 

@@ -1,0 +1,318 @@
+//! Architecture self-description: the compact op list a [`Layer`] emits so
+//! the forward-only serving stack can rebuild it from a checkpoint without
+//! model-specific code (DESIGN.md §Packed-Graph-Executor).
+//!
+//! Every servable layer answers [`Layer::describe`] with one
+//! [`LayerDesc`] per atomic layer; `Sequential` concatenates its
+//! children, `Residual` nests two branch lists. `save_model` serializes
+//! the list into a `Record::Arch` checkpoint record (kind 6), and
+//! `runtime::PackedGraph::load` compiles it back into packed serving ops.
+//! A layer that cannot be described (BERT attention, pixel-shuffle, …)
+//! returns `None`, which simply omits the record — such checkpoints still
+//! load for training, they are just not graph-servable.
+//!
+//! [`Layer`]: super::Layer
+//! [`Layer::describe`]: super::Layer::describe
+
+use std::io::{self, Read, Write};
+
+/// One atomic layer of a described architecture, with exactly the
+/// hyperparameters needed to re-run it forward-only. Parameter tensors are
+/// NOT here — they live in the ordinary weight/buffer records of the same
+/// checkpoint, keyed by `name`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerDesc {
+    /// Boolean FC: `<name>.weight` (+ `<name>.bias` when `bias`).
+    BoolLinear { name: String, n_in: usize, n_out: usize, bias: bool },
+    /// FP FC: `<name>.w` / `<name>.b`.
+    Linear { name: String, n_in: usize, n_out: usize },
+    /// Boolean conv: `<name>.weight` packed (c_out × c_in·k·k).
+    BoolConv2d { name: String, c_in: usize, c_out: usize, k: usize, stride: usize, pad: usize },
+    /// FP conv: `<name>.w` / `<name>.b`.
+    Conv2d { name: String, c_in: usize, c_out: usize, k: usize, stride: usize, pad: usize },
+    /// BatchNorm over NCHW channels: `<name>.{gamma,beta}` params,
+    /// `<name>.running_{mean,var}` buffers.
+    BatchNorm2d { name: String, features: usize },
+    /// BatchNorm over flat features.
+    BatchNorm1d { name: String, features: usize },
+    /// Threshold activation; `centered` adds the `<name>.running_mean`
+    /// scalar shift at eval time.
+    ThresholdAct { name: String, tau: f32, centered: bool },
+    /// k×k max pooling, stride k.
+    MaxPool2d { name: String, k: usize },
+    /// Global average pooling NCHW → (N, C).
+    GlobalAvgPool { name: String },
+    /// Flatten to (batch, features).
+    Flatten { name: String },
+    /// Sign binarization to ±1 bits.
+    Binarize { name: String },
+    /// FP ReLU (recorded so the graph loader can refuse it by name).
+    ReLU { name: String },
+    /// Two-branch residual merge on pre-activations.
+    Residual { name: String, main: Vec<LayerDesc>, shortcut: Vec<LayerDesc> },
+}
+
+impl LayerDesc {
+    /// The layer name the desc refers to (record-key prefix).
+    pub fn name(&self) -> &str {
+        match self {
+            LayerDesc::BoolLinear { name, .. }
+            | LayerDesc::Linear { name, .. }
+            | LayerDesc::BoolConv2d { name, .. }
+            | LayerDesc::Conv2d { name, .. }
+            | LayerDesc::BatchNorm2d { name, .. }
+            | LayerDesc::BatchNorm1d { name, .. }
+            | LayerDesc::ThresholdAct { name, .. }
+            | LayerDesc::MaxPool2d { name, .. }
+            | LayerDesc::GlobalAvgPool { name }
+            | LayerDesc::Flatten { name }
+            | LayerDesc::Binarize { name }
+            | LayerDesc::ReLU { name }
+            | LayerDesc::Residual { name, .. } => name,
+        }
+    }
+
+    /// Human-readable layer kind (error messages, summaries).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            LayerDesc::BoolLinear { .. } => "BoolLinear",
+            LayerDesc::Linear { .. } => "Linear",
+            LayerDesc::BoolConv2d { .. } => "BoolConv2d",
+            LayerDesc::Conv2d { .. } => "Conv2d",
+            LayerDesc::BatchNorm2d { .. } => "BatchNorm2d",
+            LayerDesc::BatchNorm1d { .. } => "BatchNorm1d",
+            LayerDesc::ThresholdAct { .. } => "ThresholdAct",
+            LayerDesc::MaxPool2d { .. } => "MaxPool2d",
+            LayerDesc::GlobalAvgPool { .. } => "GlobalAvgPool",
+            LayerDesc::Flatten { .. } => "Flatten",
+            LayerDesc::Binarize { .. } => "Binarize",
+            LayerDesc::ReLU { .. } => "ReLU",
+            LayerDesc::Residual { .. } => "Residual",
+        }
+    }
+
+    /// Serialize a desc list (little-endian, recursive for `Residual`):
+    /// `u32 len | len × (u8 tag | u32 name_len | name | fields…)`.
+    pub fn write_list(w: &mut impl Write, list: &[LayerDesc]) -> io::Result<()> {
+        w_u32(w, list.len() as u32)?;
+        for d in list {
+            d.write_one(w)?;
+        }
+        Ok(())
+    }
+
+    /// Inverse of [`Self::write_list`].
+    pub fn read_list(r: &mut impl Read) -> io::Result<Vec<LayerDesc>> {
+        let n = r_u32(r)? as usize;
+        let mut out = Vec::with_capacity(n.min(1024));
+        for _ in 0..n {
+            out.push(Self::read_one(r)?);
+        }
+        Ok(out)
+    }
+
+    fn write_one(&self, w: &mut impl Write) -> io::Result<()> {
+        match self {
+            LayerDesc::BoolLinear { name, n_in, n_out, bias } => {
+                w_head(w, 0, name)?;
+                w_u32(w, *n_in as u32)?;
+                w_u32(w, *n_out as u32)?;
+                w.write_all(&[u8::from(*bias)])
+            }
+            LayerDesc::Linear { name, n_in, n_out } => {
+                w_head(w, 1, name)?;
+                w_u32(w, *n_in as u32)?;
+                w_u32(w, *n_out as u32)
+            }
+            LayerDesc::BoolConv2d { name, c_in, c_out, k, stride, pad } => {
+                w_head(w, 2, name)?;
+                w_conv(w, *c_in, *c_out, *k, *stride, *pad)
+            }
+            LayerDesc::Conv2d { name, c_in, c_out, k, stride, pad } => {
+                w_head(w, 3, name)?;
+                w_conv(w, *c_in, *c_out, *k, *stride, *pad)
+            }
+            LayerDesc::BatchNorm2d { name, features } => {
+                w_head(w, 4, name)?;
+                w_u32(w, *features as u32)
+            }
+            LayerDesc::BatchNorm1d { name, features } => {
+                w_head(w, 5, name)?;
+                w_u32(w, *features as u32)
+            }
+            LayerDesc::ThresholdAct { name, tau, centered } => {
+                w_head(w, 6, name)?;
+                w.write_all(&tau.to_le_bytes())?;
+                w.write_all(&[u8::from(*centered)])
+            }
+            LayerDesc::MaxPool2d { name, k } => {
+                w_head(w, 7, name)?;
+                w_u32(w, *k as u32)
+            }
+            LayerDesc::GlobalAvgPool { name } => w_head(w, 8, name),
+            LayerDesc::Flatten { name } => w_head(w, 9, name),
+            LayerDesc::Binarize { name } => w_head(w, 10, name),
+            LayerDesc::ReLU { name } => w_head(w, 11, name),
+            LayerDesc::Residual { name, main, shortcut } => {
+                w_head(w, 12, name)?;
+                Self::write_list(w, main)?;
+                Self::write_list(w, shortcut)
+            }
+        }
+    }
+
+    fn read_one(r: &mut impl Read) -> io::Result<LayerDesc> {
+        let mut tag = [0u8; 1];
+        r.read_exact(&mut tag)?;
+        let name = r_name(r)?;
+        Ok(match tag[0] {
+            0 => {
+                let n_in = r_u32(r)? as usize;
+                let n_out = r_u32(r)? as usize;
+                let bias = r_u8(r)? != 0;
+                LayerDesc::BoolLinear { name, n_in, n_out, bias }
+            }
+            1 => {
+                let n_in = r_u32(r)? as usize;
+                let n_out = r_u32(r)? as usize;
+                LayerDesc::Linear { name, n_in, n_out }
+            }
+            2 => {
+                let (c_in, c_out, k, stride, pad) = r_conv(r)?;
+                LayerDesc::BoolConv2d { name, c_in, c_out, k, stride, pad }
+            }
+            3 => {
+                let (c_in, c_out, k, stride, pad) = r_conv(r)?;
+                LayerDesc::Conv2d { name, c_in, c_out, k, stride, pad }
+            }
+            4 => LayerDesc::BatchNorm2d { name, features: r_u32(r)? as usize },
+            5 => LayerDesc::BatchNorm1d { name, features: r_u32(r)? as usize },
+            6 => {
+                let mut b = [0u8; 4];
+                r.read_exact(&mut b)?;
+                let tau = f32::from_le_bytes(b);
+                let centered = r_u8(r)? != 0;
+                LayerDesc::ThresholdAct { name, tau, centered }
+            }
+            7 => LayerDesc::MaxPool2d { name, k: r_u32(r)? as usize },
+            8 => LayerDesc::GlobalAvgPool { name },
+            9 => LayerDesc::Flatten { name },
+            10 => LayerDesc::Binarize { name },
+            11 => LayerDesc::ReLU { name },
+            12 => {
+                let main = Self::read_list(r)?;
+                let shortcut = Self::read_list(r)?;
+                LayerDesc::Residual { name, main, shortcut }
+            }
+            t => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("unknown LayerDesc tag {t}"),
+                ))
+            }
+        })
+    }
+}
+
+fn w_u32(w: &mut impl Write, v: u32) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn r_u32(r: &mut impl Read) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn r_u8(r: &mut impl Read) -> io::Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn w_head(w: &mut impl Write, tag: u8, name: &str) -> io::Result<()> {
+    w.write_all(&[tag])?;
+    w_u32(w, name.len() as u32)?;
+    w.write_all(name.as_bytes())
+}
+
+fn r_name(r: &mut impl Read) -> io::Result<String> {
+    let len = r_u32(r)? as usize;
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    String::from_utf8(buf)
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "bad LayerDesc name"))
+}
+
+fn w_conv(
+    w: &mut impl Write,
+    c_in: usize,
+    c_out: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> io::Result<()> {
+    for v in [c_in, c_out, k, stride, pad] {
+        w_u32(w, v as u32)?;
+    }
+    Ok(())
+}
+
+fn r_conv(r: &mut impl Read) -> io::Result<(usize, usize, usize, usize, usize)> {
+    Ok((
+        r_u32(r)? as usize,
+        r_u32(r)? as usize,
+        r_u32(r)? as usize,
+        r_u32(r)? as usize,
+        r_u32(r)? as usize,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(list: Vec<LayerDesc>) {
+        let mut buf = Vec::new();
+        LayerDesc::write_list(&mut buf, &list).unwrap();
+        let back = LayerDesc::read_list(&mut buf.as_slice()).unwrap();
+        assert_eq!(back, list);
+    }
+
+    #[test]
+    fn all_variants_roundtrip() {
+        roundtrip(vec![
+            LayerDesc::Conv2d { name: "stem".into(), c_in: 3, c_out: 16, k: 3, stride: 1, pad: 1 },
+            LayerDesc::BatchNorm2d { name: "bn".into(), features: 16 },
+            LayerDesc::ThresholdAct { name: "act".into(), tau: 0.25, centered: true },
+            LayerDesc::BoolConv2d { name: "bc".into(), c_in: 16, c_out: 32, k: 3, stride: 2, pad: 1 },
+            LayerDesc::MaxPool2d { name: "mp".into(), k: 2 },
+            LayerDesc::Residual {
+                name: "b0".into(),
+                main: vec![LayerDesc::ThresholdAct { name: "a1".into(), tau: 0.0, centered: false }],
+                shortcut: vec![],
+            },
+            LayerDesc::GlobalAvgPool { name: "gap".into() },
+            LayerDesc::Flatten { name: "fl".into() },
+            LayerDesc::Binarize { name: "bin".into() },
+            LayerDesc::ReLU { name: "r".into() },
+            LayerDesc::BatchNorm1d { name: "bn1".into(), features: 8 },
+            LayerDesc::BoolLinear { name: "bl".into(), n_in: 32, n_out: 16, bias: true },
+            LayerDesc::Linear { name: "head".into(), n_in: 16, n_out: 10 },
+        ]);
+    }
+
+    #[test]
+    fn empty_list_roundtrips() {
+        roundtrip(Vec::new());
+    }
+
+    #[test]
+    fn bad_tag_rejected() {
+        let mut buf = Vec::new();
+        w_u32(&mut buf, 1).unwrap();
+        buf.push(200); // bogus tag
+        w_u32(&mut buf, 0).unwrap();
+        assert!(LayerDesc::read_list(&mut buf.as_slice()).is_err());
+    }
+}

@@ -1,7 +1,7 @@
 //! Dense FP linear layer (the paper keeps the first/last layers in FP and
 //! optimizes them with Adam — §4 Experimental Setup).
 
-use super::{Layer, ParamRef, ParamStore, Value};
+use super::{Layer, LayerDesc, ParamRef, ParamStore, Value};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 
@@ -75,6 +75,14 @@ impl Layer for Linear {
 
     fn name(&self) -> String {
         self.name.clone()
+    }
+
+    fn describe(&self) -> Option<Vec<LayerDesc>> {
+        Some(vec![LayerDesc::Linear {
+            name: self.name.clone(),
+            n_in: self.n_in,
+            n_out: self.n_out,
+        }])
     }
 }
 

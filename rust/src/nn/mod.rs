@@ -24,6 +24,7 @@ mod activation;
 mod bool_conv;
 mod bool_linear;
 mod conv;
+mod describe;
 mod linear;
 mod loss;
 mod norm;
@@ -33,12 +34,14 @@ mod sequential;
 mod value;
 
 pub use activation::{BackwardScale, Binarize, ReLU, ThresholdAct};
+pub(crate) use bool_conv::packed_im2col;
 pub use bool_conv::BoolConv2d;
 pub use bool_linear::BoolLinear;
 pub use conv::Conv2d;
+pub use describe::LayerDesc;
 pub use linear::Linear;
 pub use loss::{l1_loss, mse_loss, softmax_cross_entropy, softmax_cross_entropy_nchw, LossOut};
-pub use norm::{BatchNorm1d, BatchNorm2d, LayerNorm};
+pub use norm::{BatchNorm1d, BatchNorm2d, LayerNorm, BN_EPS};
 pub use params::{ParamId, ParamRef, ParamSlot, ParamStore};
 pub use pool::{AvgPool2dGlobal, MaxPool2d};
 pub use sequential::{Flatten, Residual, Sequential};
@@ -77,5 +80,25 @@ pub trait Layer: Send {
     /// statistics: BN running mean/var, centered-threshold running mean).
     fn buffers(&mut self) -> Vec<(String, &mut Vec<f32>)> {
         Vec::new()
+    }
+
+    /// Architecture self-description for the forward-only serving stack:
+    /// one [`LayerDesc`] per atomic layer (`Sequential` concatenates its
+    /// children). `save_model` embeds the description in the checkpoint
+    /// (`Record::Arch`) so `runtime::PackedGraph::load` can rebuild and
+    /// serve the model without model-specific code. The default `None`
+    /// means "not describable" — the checkpoint is still written, it is
+    /// just not graph-servable.
+    fn describe(&self) -> Option<Vec<LayerDesc>> {
+        None
+    }
+
+    /// Non-batch input shape of the most recent forward, if the layer
+    /// records one (the top-level [`Sequential`] does). `save_model`
+    /// embeds it in `Record::Arch` so the serving graph knows how to
+    /// interpret flat packed request rows (e.g. `[C, H, W]` for conv
+    /// models).
+    fn input_shape(&self) -> Option<Vec<usize>> {
+        None
     }
 }

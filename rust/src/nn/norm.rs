@@ -2,8 +2,13 @@
 //! optionally integrates into Boolean models ("B⊕LD with BN", Table 2).
 //! Full training backward; running stats for eval.
 
-use super::{Layer, ParamRef, ParamStore, Value};
+use super::{Layer, LayerDesc, ParamRef, ParamStore, Value};
 use crate::tensor::Tensor;
+
+/// The ε of every BatchNorm in the repo. Public because the serving-side
+/// BN fold (`runtime::graph`) must replay eval-mode BN with the *exact*
+/// same constant to stay bit-identical to the training stack.
+pub const BN_EPS: f32 = 1e-5;
 
 /// Shared BN core operating on a (rows × features) view, where `rows`
 /// aggregates every dimension that is normalized over. Parameter
@@ -38,7 +43,7 @@ impl BnCore {
             running_mean: vec![0.0; features],
             running_var: vec![1.0; features],
             momentum: 0.1,
-            eps: 1e-5,
+            eps: BN_EPS,
             xhat: None,
             inv_std: None,
         }
@@ -173,6 +178,13 @@ impl Layer for BatchNorm1d {
     fn name(&self) -> String {
         self.name.clone()
     }
+
+    fn describe(&self) -> Option<Vec<LayerDesc>> {
+        Some(vec![LayerDesc::BatchNorm1d {
+            name: self.name.clone(),
+            features: self.core.features,
+        }])
+    }
 }
 
 /// BatchNorm over channels of an NCHW tensor (stats over N·H·W).
@@ -214,6 +226,13 @@ impl Layer for BatchNorm2d {
 
     fn name(&self) -> String {
         self.name.clone()
+    }
+
+    fn describe(&self) -> Option<Vec<LayerDesc>> {
+        Some(vec![LayerDesc::BatchNorm2d {
+            name: self.name.clone(),
+            features: self.core.features,
+        }])
     }
 }
 

@@ -2,7 +2,7 @@
 //! the threshold activation, matching the paper's Appendix C Eq. (44)
 //! pipeline (Conv → MP → tanh'-scaled activation).
 
-use super::{Layer, ParamStore, Value};
+use super::{Layer, LayerDesc, ParamStore, Value};
 use crate::tensor::Tensor;
 
 /// 2×2 (or k×k) max pooling with stride = k on NCHW f32 tensors.
@@ -71,6 +71,10 @@ impl Layer for MaxPool2d {
     fn name(&self) -> String {
         self.name.clone()
     }
+
+    fn describe(&self) -> Option<Vec<LayerDesc>> {
+        Some(vec![LayerDesc::MaxPool2d { name: self.name.clone(), k: self.k }])
+    }
 }
 
 /// Global average pooling: NCHW → (N, C). Used by the ResNet/DeepLab heads.
@@ -122,6 +126,10 @@ impl Layer for AvgPool2dGlobal {
 
     fn name(&self) -> String {
         self.name.clone()
+    }
+
+    fn describe(&self) -> Option<Vec<LayerDesc>> {
+        Some(vec![LayerDesc::GlobalAvgPool { name: self.name.clone() }])
     }
 }
 

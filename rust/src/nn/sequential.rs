@@ -2,18 +2,22 @@
 //! the Boolean ResNet/EDSR architectures (paper Appendix D.1.3 "Block I":
 //! both paths end on integer pre-activations, summed before activation).
 
-use super::{Layer, ParamRef, ParamStore, Value};
+use super::{Layer, LayerDesc, ParamRef, ParamStore, Value};
 use crate::tensor::Tensor;
 
 /// A stack of layers applied in order.
 pub struct Sequential {
     pub layers: Vec<Box<dyn Layer>>,
     name: String,
+    /// Non-batch dims of the most recent forward — recorded so
+    /// `save_model` can embed the input geometry in `Record::Arch`
+    /// ([`Layer::input_shape`]).
+    last_input_shape: Option<Vec<usize>>,
 }
 
 impl Sequential {
     pub fn new(name: &str) -> Self {
-        Sequential { layers: Vec::new(), name: name.to_string() }
+        Sequential { layers: Vec::new(), name: name.to_string(), last_input_shape: None }
     }
 
     pub fn push(&mut self, l: Box<dyn Layer>) -> &mut Self {
@@ -37,6 +41,10 @@ impl Sequential {
 
 impl Layer for Sequential {
     fn forward(&mut self, mut x: Value, train: bool) -> Value {
+        let dims = &x.shape()[1..];
+        if self.last_input_shape.as_deref() != Some(dims) {
+            self.last_input_shape = Some(dims.to_vec());
+        }
         for l in self.layers.iter_mut() {
             x = l.forward(x, train);
         }
@@ -60,6 +68,20 @@ impl Layer for Sequential {
 
     fn name(&self) -> String {
         self.name.clone()
+    }
+
+    /// Concatenation of the children's descriptions; `None` as soon as
+    /// any child is not describable.
+    fn describe(&self) -> Option<Vec<LayerDesc>> {
+        let mut out = Vec::with_capacity(self.layers.len());
+        for l in &self.layers {
+            out.extend(l.describe()?);
+        }
+        Some(out)
+    }
+
+    fn input_shape(&self) -> Option<Vec<usize>> {
+        self.last_input_shape.clone()
     }
 }
 
@@ -96,6 +118,10 @@ impl Layer for Flatten {
 
     fn name(&self) -> String {
         self.name.clone()
+    }
+
+    fn describe(&self) -> Option<Vec<LayerDesc>> {
+        Some(vec![LayerDesc::Flatten { name: self.name.clone() }])
     }
 }
 
@@ -153,6 +179,16 @@ impl Layer for Residual {
 
     fn name(&self) -> String {
         self.name.clone()
+    }
+
+    /// One nested desc with both branch op lists (an empty `shortcut`
+    /// list is the identity shortcut).
+    fn describe(&self) -> Option<Vec<LayerDesc>> {
+        Some(vec![LayerDesc::Residual {
+            name: self.name.clone(),
+            main: self.main.describe()?,
+            shortcut: self.shortcut.describe()?,
+        }])
     }
 }
 

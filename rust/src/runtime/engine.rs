@@ -20,6 +20,12 @@
 //! Definition 3.1 for padded/invalid input features (DESIGN.md
 //! §Three-valued logic 𝕄).
 //!
+//! Conv / residual / BN-carrying architectures serve through the
+//! architecture-agnostic graph executor instead
+//! ([`crate::runtime::PackedGraph`], DESIGN.md §Packed-Graph-Executor),
+//! which keeps this loader as its back-compat fallback for checkpoints
+//! that predate the `Record::Arch` architecture record.
+//!
 //! The FP head intentionally replays the reference `nn::Linear`
 //! accumulation order on a single cache-resident ±1 scratch row, so
 //! engine logits are **bit-identical** to the training-stack forward —
@@ -38,7 +44,7 @@ pub struct EngineError {
 }
 
 impl EngineError {
-    fn new(msg: impl Into<String>) -> Self {
+    pub(crate) fn new(msg: impl Into<String>) -> Self {
         EngineError { msg: msg.into() }
     }
 }
@@ -174,25 +180,9 @@ impl PackedMlp {
     /// Freeze a live model (e.g. fresh out of the trainer) without a disk
     /// round-trip. The layer must expose `boolean_mlp`-style parameters:
     /// `*.weight` / `*.bias` Boolean records, one FP `*.w`/`*.b` head.
+    /// For conv/residual models use `runtime::PackedGraph::from_layer`.
     pub fn from_layer(model: &mut dyn Layer) -> Result<Self, EngineError> {
-        let mut records = Vec::new();
-        for p in model.params() {
-            match p {
-                ParamRef::Bool { name, bits, .. } => records.push(Record::Bool {
-                    name,
-                    rows: bits.rows,
-                    cols: bits.cols,
-                    words: bits.words.clone(),
-                }),
-                ParamRef::Real { name, w, .. } => {
-                    records.push(Record::Real { name, data: w.data.clone() })
-                }
-            }
-        }
-        for (name, buf) in model.buffers() {
-            records.push(Record::Buffer { name, data: buf.clone() });
-        }
-        Self::from_records(&records)
+        Self::from_records(&layer_records(model))
     }
 
     /// Build from parsed checkpoint records (the frozen-model format).
@@ -235,7 +225,8 @@ impl PackedMlp {
                         layer.bias = Some(BitMatrix::from_words(1, *cols, words.clone()));
                     } else {
                         return Err(EngineError::new(format!(
-                            "unsupported Boolean record '{name}' (need *.weight / *.bias)"
+                            "unsupported Boolean record '{name}': the linear-stack loader only \
+                             understands BoolLinear parameters (*.weight / *.bias)"
                         )));
                     }
                 }
@@ -254,7 +245,11 @@ impl PackedMlp {
                         }
                         head_b = Some(data.clone());
                     } else {
-                        return Err(EngineError::new(format!("unsupported FP record '{name}'")));
+                        return Err(EngineError::new(format!(
+                            "unsupported FP record '{name}': the linear-stack loader expects \
+                             exactly one *.w / *.b head (FP conv/interior layers need the \
+                             graph executor)"
+                        )));
                     }
                 }
                 Record::Buffer { name, data } => {
@@ -266,14 +261,18 @@ impl PackedMlp {
                     } else {
                         return Err(EngineError::new(format!(
                             "unsupported buffer '{name}' — BN/stat-carrying architectures are \
-                             not servable by the native engine yet (see DESIGN.md \
-                             §Serving-Runtime)"
+                             not servable by the linear-stack loader; load the checkpoint with \
+                             `PackedGraph::load` instead (DESIGN.md §Packed-Graph-Executor)"
                         )));
                     }
                 }
                 // Optimizer-state records (training snapshots from
-                // `save_training`): irrelevant to a frozen server.
-                Record::OptimBool { .. } | Record::OptimAdam { .. } | Record::Meta { .. } => {}
+                // `save_training`): irrelevant to a frozen server. The
+                // architecture record belongs to the graph executor.
+                Record::OptimBool { .. }
+                | Record::OptimAdam { .. }
+                | Record::Meta { .. }
+                | Record::Arch { .. } => {}
             }
         }
         if layers.is_empty() {
@@ -371,40 +370,79 @@ impl PackedMlp {
         self.forward_bits(x).argmax_rows()
     }
 
-    /// FP head on the last packed activation. Replays the exact
-    /// `Tensor::matmul_bt` accumulation order (4 independent partial sums
-    /// + tail) over one decoded ±1 scratch row, then adds the bias — so
-    /// the result is bit-identical to `nn::Linear::forward` on the
-    /// unpacked activations.
+    /// FP head on the last packed activation — see [`fp_head_bits`].
     fn head_forward_into(&self, bits: &BitMatrix, row: &mut Vec<f32>, out: &mut Tensor) {
-        let b = bits.rows;
-        let (n_out, n_in) = (self.head_w.rows(), self.head_w.cols());
-        assert_eq!(bits.cols, n_in, "head fan-in {} vs {}", bits.cols, n_in);
-        out.resize_to(&[b, n_out]);
-        row.resize(n_in, 0.0);
-        let k4 = n_in - n_in % 4;
-        for i in 0..b {
-            bits.decode_pm1_row(i, row);
-            let orow = &mut out.data[i * n_out..(i + 1) * n_out];
-            for (j, o) in orow.iter_mut().enumerate() {
-                let wrow = &self.head_w.data[j * n_in..(j + 1) * n_in];
-                let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-                let mut p = 0;
-                while p < k4 {
-                    s0 += row[p] * wrow[p];
-                    s1 += row[p + 1] * wrow[p + 1];
-                    s2 += row[p + 2] * wrow[p + 2];
-                    s3 += row[p + 3] * wrow[p + 3];
-                    p += 4;
-                }
-                let mut acc = (s0 + s1) + (s2 + s3);
-                for q in k4..n_in {
-                    acc += row[q] * wrow[q];
-                }
-                *o = acc + self.head_b.data[j];
+        fp_head_bits(bits, &self.head_w, &self.head_b, row, out);
+    }
+}
+
+/// FP head over packed activations, shared by [`PackedMlp`] and the graph
+/// executor's `FpHead` op. Replays the exact `Tensor::matmul_bt`
+/// accumulation order (4 independent partial sums + tail) over one
+/// decoded ±1 scratch row, then adds the bias — so the result is
+/// bit-identical to `nn::Linear::forward` on the unpacked activations.
+pub(crate) fn fp_head_bits(
+    bits: &BitMatrix,
+    head_w: &Tensor,
+    head_b: &Tensor,
+    row: &mut Vec<f32>,
+    out: &mut Tensor,
+) {
+    let b = bits.rows;
+    let (n_out, n_in) = (head_w.rows(), head_w.cols());
+    assert_eq!(bits.cols, n_in, "head fan-in {} vs {}", bits.cols, n_in);
+    out.resize_to(&[b, n_out]);
+    row.resize(n_in, 0.0);
+    let k4 = n_in - n_in % 4;
+    for i in 0..b {
+        bits.decode_pm1_row(i, row);
+        let orow = &mut out.data[i * n_out..(i + 1) * n_out];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let wrow = &head_w.data[j * n_in..(j + 1) * n_in];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            let mut p = 0;
+            while p < k4 {
+                s0 += row[p] * wrow[p];
+                s1 += row[p + 1] * wrow[p + 1];
+                s2 += row[p + 2] * wrow[p + 2];
+                s3 += row[p + 3] * wrow[p + 3];
+                p += 4;
+            }
+            let mut acc = (s0 + s1) + (s2 + s3);
+            for q in k4..n_in {
+                acc += row[q] * wrow[q];
+            }
+            *o = acc + head_b.data[j];
+        }
+    }
+}
+
+/// Snapshot a live model's parameters, buffers and (when describable)
+/// architecture into in-memory checkpoint records — the same record set
+/// `save_model` writes (the arch record comes from the shared
+/// [`crate::coordinator::arch_record`] so the freeze and save paths can
+/// never diverge), used by the `from_layer` constructors to freeze
+/// without a disk round-trip.
+pub(crate) fn layer_records(model: &mut dyn Layer) -> Vec<Record> {
+    let mut records = Vec::new();
+    records.extend(crate::coordinator::arch_record(model));
+    for p in model.params() {
+        match p {
+            ParamRef::Bool { name, bits, .. } => records.push(Record::Bool {
+                name,
+                rows: bits.rows,
+                cols: bits.cols,
+                words: bits.words.clone(),
+            }),
+            ParamRef::Real { name, w, .. } => {
+                records.push(Record::Real { name, data: w.data.clone() })
             }
         }
     }
+    for (name, buf) in model.buffers() {
+        records.push(Record::Buffer { name, data: buf.clone() });
+    }
+    records
 }
 
 /// Parse a trailing decimal index from a layer-name prefix ("act3" → 3).

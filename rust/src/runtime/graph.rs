@@ -1,0 +1,1378 @@
+//! Architecture-agnostic packed graph executor (DESIGN.md
+//! §Packed-Graph-Executor): serves ANY describable model — conv stacks,
+//! residual nets, MLPs — from a `save_model` checkpoint with no
+//! model-specific loader code.
+//!
+//! The checkpoint's `Record::Arch` (the [`crate::nn::Layer::describe`] op
+//! list plus the recorded input shape) is compiled into a small op IR,
+//! [`PackedOp`]. The Boolean interior runs entirely on the packed
+//! XNOR/popcount kernels: `Conv2d` is bit-level im2col +
+//! [`BitMatrix::xnor_gemm_masked_into`] + a fused per-channel threshold
+//! that packs the integer counts straight back to bits, and `Residual`
+//! sums branch popcounts so the next threshold re-signs their majority.
+//!
+//! # BatchNorm folding (zero ops at serve time)
+//!
+//! After a Boolean conv (and through `MaxPool`, which preserves
+//! integrality) the pre-activations are *integers* in `[-fanin, fanin]`.
+//! Eval-mode BN followed by a threshold activation is then a monotone
+//! predicate over the integers: `fire(s) = γ·(s−μ)/√(σ²+ε) + β ≥ τ`.
+//! At load time the compiler binary-searches the integer crossover of
+//! that predicate — **replaying the training stack's exact f32
+//! arithmetic** (same [`BN_EPS`], same operation order) — and stores one
+//! integer threshold per channel (plus a flip flag for γ < 0). The serve
+//! path then does a single compare per output unit and is bit-identical
+//! to `BatchNorm2d` → `ThresholdAct` eval, with BN costing zero
+//! operations. When the input is NOT integer (the FP stem), BN stays an
+//! explicit per-channel affine op instead, still replaying the exact
+//! training arithmetic.
+//!
+//! # Back-compat
+//!
+//! Checkpoints without a `Record::Arch` (pre-arch files, or
+//! `save_checkpoint` param-only files) fall back to the [`PackedMlp`]
+//! name-convention loader and are wrapped into a linear-only graph via
+//! `From<PackedMlp>`, so every previously servable checkpoint keeps
+//! loading unchanged.
+
+use super::engine::{fp_head_bits, layer_records, EngineError, PackedLayer, PackedMlp};
+use crate::coordinator::{read_records, Record};
+use crate::nn::{packed_im2col, Layer, LayerDesc, BN_EPS};
+use crate::tensor::{BitMatrix, Tensor};
+use std::collections::{HashMap, HashSet};
+
+/// Per-output-channel threshold on integer pre-activation counts, with
+/// BN already folded in (see the module docs). `flip[c]` marks channels
+/// whose folded BN slope is negative: the bit fires when `s ≤ thr[c]`
+/// instead of `s ≥ thr[c]`.
+#[derive(Debug, Clone)]
+pub struct FusedThreshold {
+    pub thr: Vec<f32>,
+    pub flip: Vec<bool>,
+}
+
+/// Boolean conv op: bit-im2col + masked XNOR GEMM (+ optional fused
+/// per-channel threshold that re-packs straight to bits).
+pub struct PackedConv {
+    pub name: String,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Packed weights, `c_out` rows × `c_in·k·k` bits.
+    pub weights: BitMatrix,
+    /// When present the op emits packed bits; when absent it emits the
+    /// f32 integer counts (NCHW) for a downstream pool/residual/threshold.
+    pub fused: Option<FusedThreshold>,
+    /// Index into the per-graph conv scratch pool (im2col patches + the
+    /// geometry-cached validity mask).
+    scratch_id: usize,
+}
+
+/// FP conv (the paper keeps the stem in FP): exact replay of
+/// `nn::Conv2d` eval — im2col + `matmul_bt` + bias.
+pub struct FpConv {
+    pub name: String,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// (c_out × c_in·k·k).
+    pub w: Tensor,
+    pub b: Tensor,
+}
+
+/// Eval-mode BatchNorm affine, kept explicit only when the input is not
+/// integer-valued (otherwise it folds into a [`FusedThreshold`]).
+pub struct BnEval {
+    pub name: String,
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+}
+
+/// Standalone f32 → bits threshold.
+pub enum ThresholdSpec {
+    /// Uniform scalar over every element (τ plus the centered shift).
+    Scalar(f32),
+    /// Per-channel integer thresholds on NCHW counts (BN folded).
+    PerChannel(FusedThreshold),
+}
+
+/// One executor op. The value flowing between ops is either packed bits
+/// (`BitMatrix`, one row per batch element, `C·H·W` flattened columns)
+/// or a dense f32 tensor (integer pre-activation counts, or real values
+/// around the FP stem/head).
+pub enum PackedOp {
+    /// Boolean FC fused with its scalar threshold: bits → bits.
+    Linear(PackedLayer),
+    /// Boolean conv: bits → bits (fused) or bits → f32 counts.
+    Conv2d(PackedConv),
+    /// FP stem conv: bits (decoded ±1) or f32 → f32.
+    FpConv2d(FpConv),
+    /// Explicit eval-mode BN (non-integer input only): f32 → f32.
+    BatchNorm(BnEval),
+    /// Threshold activation: f32 → bits.
+    Threshold(ThresholdSpec),
+    /// k×k max pooling, stride k, on f32 counts (exact training replay).
+    MaxPool { k: usize },
+    /// Global average pooling NCHW → (N, C), f32.
+    GlobalAvgPool,
+    /// Flatten to (batch, features). The compiler elides it (both value
+    /// representations are already flat row-major and consumers derive
+    /// `(batch, ∏ rest)` themselves); the op evaluates as a plain copy
+    /// when present in a hand-built graph.
+    Flatten,
+    /// Two-branch merge: both branches end on f32 pre-activations which
+    /// are summed; the next `Threshold` re-signs the majority of the
+    /// combined branch popcounts. Empty `shortcut` = identity.
+    Residual { main: Vec<Node>, shortcut: Vec<Node>, main_out: usize, short_out: usize },
+    /// FP classifier head: bits (single decoded scratch row, exact
+    /// `matmul_bt` replay) or f32 (direct `matmul_bt`) → logits.
+    FpHead { w: Tensor, b: Tensor },
+}
+
+impl PackedOp {
+    /// Short op name for summaries and errors.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            PackedOp::Linear(_) => "Linear",
+            PackedOp::Conv2d(c) => {
+                if c.fused.is_some() {
+                    "Conv2d+thr"
+                } else {
+                    "Conv2d"
+                }
+            }
+            PackedOp::FpConv2d(_) => "FpConv2d",
+            PackedOp::BatchNorm(_) => "BatchNorm",
+            PackedOp::Threshold(_) => "Threshold",
+            PackedOp::MaxPool { .. } => "MaxPool",
+            PackedOp::GlobalAvgPool => "GlobalAvgPool",
+            PackedOp::Flatten => "Flatten",
+            PackedOp::Residual { .. } => "Residual",
+            PackedOp::FpHead { .. } => "FpHead",
+        }
+    }
+}
+
+/// One dataflow node: `op` reads activation slot `src` and writes slot
+/// `dst`. Slot indices are assigned at compile time in topological order
+/// (`src < dst` always), which is what lets the executor split the slot
+/// pool into disjoint borrows.
+pub struct Node {
+    pub op: PackedOp,
+    pub src: usize,
+    pub dst: usize,
+}
+
+/// A frozen model compiled to packed serving ops. Thread-safe by
+/// construction: `forward_*` take `&self` and all mutable state lives in
+/// the caller's [`GraphScratch`], so one instance is shared across the
+/// whole worker pool (`runtime::serve`).
+pub struct PackedGraph {
+    pub nodes: Vec<Node>,
+    /// Non-batch input dims: `[C, H, W]` for conv models, `[D]` flat.
+    pub input_shape: Vec<usize>,
+    n_slots: usize,
+    n_convs: usize,
+    d_out: usize,
+}
+
+// ---------------------------------------------------------------------------
+// scratch
+// ---------------------------------------------------------------------------
+
+/// One activation slot: both representations are kept allocated so a
+/// shrinking/growing batch reuses the buffers; `is_bits` says which one
+/// the producing op filled.
+struct Slot {
+    bits: BitMatrix,
+    f: Tensor,
+    shape: Vec<usize>,
+    is_bits: bool,
+}
+
+impl Slot {
+    fn new() -> Self {
+        Slot {
+            bits: BitMatrix::zeros(0, 0),
+            f: Tensor::zeros(&[0]),
+            shape: Vec::new(),
+            is_bits: false,
+        }
+    }
+
+    fn set_shape(&mut self, dims: &[usize]) {
+        self.shape.clear();
+        self.shape.extend_from_slice(dims);
+    }
+
+    fn dims4(&self) -> (usize, usize, usize, usize) {
+        assert_eq!(self.shape.len(), 4, "op needs NCHW input, got {:?}", self.shape);
+        (self.shape[0], self.shape[1], self.shape[2], self.shape[3])
+    }
+
+    fn cols(&self) -> usize {
+        self.shape[1..].iter().product()
+    }
+}
+
+/// Per-conv-op reusable buffers: bit-im2col patches and the validity
+/// mask, which depends only on geometry and is rebuilt only when the
+/// input geometry changes (same caching as the training `BoolConv2d`).
+struct ConvScratch {
+    patches: BitMatrix,
+    mask: BitMatrix,
+    geom: Option<(usize, usize, usize)>,
+}
+
+impl ConvScratch {
+    fn new() -> Self {
+        ConvScratch { patches: BitMatrix::zeros(0, 0), mask: BitMatrix::zeros(0, 0), geom: None }
+    }
+}
+
+/// Reusable per-caller buffers for [`PackedGraph::forward_bits_into`]:
+/// one activation slot per graph node (sized from the graph on first
+/// use), per-conv im2col scratch, the GEMM count buffer, the FP head's
+/// decoded ±1 row and the logits. One instance per serving worker makes
+/// the steady-state batch path allocation-free outside the FP stem/head.
+pub struct GraphScratch {
+    slots: Vec<Slot>,
+    convs: Vec<ConvScratch>,
+    /// (N·OH·OW × Cout) GEMM output shared by all conv ops.
+    counts: Tensor,
+    /// Decoded ±1 input for the FP stem.
+    fp_in: Tensor,
+    /// FP head scratch row.
+    row: Vec<f32>,
+    /// Logits of the last forward (B × d_out).
+    pub logits: Tensor,
+}
+
+impl GraphScratch {
+    pub fn new() -> Self {
+        GraphScratch {
+            slots: Vec::new(),
+            convs: Vec::new(),
+            counts: Tensor::zeros(&[0]),
+            fp_in: Tensor::zeros(&[0]),
+            row: Vec::new(),
+            logits: Tensor::zeros(&[0]),
+        }
+    }
+
+    fn ensure(&mut self, n_slots: usize, n_convs: usize) {
+        while self.slots.len() < n_slots {
+            self.slots.push(Slot::new());
+        }
+        while self.convs.len() < n_convs {
+            self.convs.push(ConvScratch::new());
+        }
+    }
+}
+
+impl Default for GraphScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// public API
+// ---------------------------------------------------------------------------
+
+impl PackedGraph {
+    /// Input width in bits (∏ input dims).
+    pub fn d_in(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Number of output logits.
+    pub fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    /// Total Boolean weight bits across the graph (the 1-bit-per-weight
+    /// model size of the energy story).
+    pub fn param_bits(&self) -> usize {
+        fn bits(nodes: &[Node]) -> usize {
+            nodes
+                .iter()
+                .map(|n| match &n.op {
+                    PackedOp::Linear(l) => {
+                        l.weights.rows * l.weights.cols
+                            + l.bias.as_ref().map(|b| b.cols).unwrap_or(0)
+                    }
+                    PackedOp::Conv2d(c) => c.weights.rows * c.weights.cols,
+                    PackedOp::Residual { main, shortcut, .. } => bits(main) + bits(shortcut),
+                    _ => 0,
+                })
+                .sum()
+        }
+        bits(&self.nodes)
+    }
+
+    /// Total op count, including nested residual branches.
+    pub fn num_ops(&self) -> usize {
+        fn count(nodes: &[Node]) -> usize {
+            nodes
+                .iter()
+                .map(|n| match &n.op {
+                    PackedOp::Residual { main, shortcut, .. } => 1 + count(main) + count(shortcut),
+                    _ => 1,
+                })
+                .sum()
+        }
+        count(&self.nodes)
+    }
+
+    /// One-line op chain, e.g. `FpConv2d → Threshold → Conv2d+thr → …`.
+    pub fn summary(&self) -> String {
+        fn fmt(nodes: &[Node]) -> String {
+            nodes
+                .iter()
+                .map(|n| match &n.op {
+                    PackedOp::Residual { main, shortcut, .. } => {
+                        format!("Residual[{} | {}]", fmt(main), fmt(shortcut))
+                    }
+                    op => op.kind().to_string(),
+                })
+                .collect::<Vec<_>>()
+                .join(" → ")
+        }
+        fmt(&self.nodes)
+    }
+
+    /// Load a frozen model from a [`crate::coordinator::save_model`]
+    /// checkpoint: compiles the embedded `Record::Arch` when present,
+    /// otherwise falls back to the [`PackedMlp`] linear-stack loader.
+    pub fn load(path: &str) -> Result<Self, EngineError> {
+        let records = read_records(path)?;
+        Self::from_records(&records)
+    }
+
+    /// Freeze a live model without a disk round-trip. The model should
+    /// have been forwarded at least once so its input shape is recorded
+    /// (conv graphs need it; plain linear stacks infer `d_in`).
+    pub fn from_layer(model: &mut dyn Layer) -> Result<Self, EngineError> {
+        let records = layer_records(model);
+        Self::from_records(&records)
+    }
+
+    /// Build from parsed checkpoint records.
+    pub fn from_records(records: &[Record]) -> Result<Self, EngineError> {
+        let arch = records.iter().find_map(|r| match r {
+            Record::Arch { input_shape, layers, .. } => Some((input_shape, layers)),
+            _ => None,
+        });
+        match arch {
+            Some((input_shape, layers)) => compile(input_shape, layers, records),
+            None => PackedMlp::from_records(records).map(PackedGraph::from).map_err(|e| {
+                EngineError::new(format!(
+                    "{} (checkpoint has no architecture record; without `Record::Arch` only \
+                     plain BoolLinear-stack checkpoints are servable — re-save with \
+                     `save_model` after a forward pass to embed the architecture)",
+                    e.msg
+                ))
+            }),
+        }
+    }
+
+    /// Forward on packed inputs (B × d_in bits) → logits (B × d_out).
+    pub fn forward_bits(&self, x: &BitMatrix) -> Tensor {
+        let mut scratch = GraphScratch::new();
+        self.forward_bits_into(x, &mut scratch);
+        scratch.logits
+    }
+
+    /// [`Self::forward_bits`] against caller-owned [`GraphScratch`]
+    /// buffers; the logits land in `scratch.logits`.
+    pub fn forward_bits_into(&self, x: &BitMatrix, scratch: &mut GraphScratch) {
+        assert_eq!(x.cols, self.d_in(), "input width {} vs graph d_in {}", x.cols, self.d_in());
+        scratch.ensure(self.n_slots, self.n_convs);
+        {
+            let s0 = &mut scratch.slots[0];
+            s0.bits.clone_from(x);
+            s0.is_bits = true;
+            s0.shape.clear();
+            s0.shape.push(x.rows);
+            s0.shape.extend_from_slice(&self.input_shape);
+        }
+        let GraphScratch { slots, convs, counts, fp_in, row, logits } = scratch;
+        run_nodes(&self.nodes, slots, convs, counts, fp_in, row, logits);
+    }
+
+    /// Convenience: pack real-valued features (`v ≥ 0 ⇒ T`, the
+    /// [`BitMatrix::from_pm1`] convention) and run [`Self::forward_bits`].
+    /// The tensor may be NCHW or already flat — only ∏ non-batch dims
+    /// must equal `d_in`.
+    pub fn forward_f32(&self, x: &Tensor) -> Tensor {
+        let b = x.shape[0];
+        let cols: usize = x.shape[1..].iter().product();
+        let flat = x.view(&[b, cols]);
+        self.forward_bits(&BitMatrix::from_pm1(&flat))
+    }
+
+    /// Per-row argmax class ids for a packed batch.
+    pub fn predict(&self, x: &BitMatrix) -> Vec<usize> {
+        self.forward_bits(x).argmax_rows()
+    }
+}
+
+/// A [`PackedMlp`] is exactly a linear-only graph: one fused
+/// `Linear` op per Boolean layer plus the FP head. This is the
+/// back-compat bridge for arch-less checkpoints.
+impl From<PackedMlp> for PackedGraph {
+    fn from(m: PackedMlp) -> Self {
+        let d_in = m.d_in();
+        let d_out = m.d_out();
+        let mut nodes = Vec::new();
+        let mut slot = 0usize;
+        for l in m.layers {
+            nodes.push(Node { op: PackedOp::Linear(l), src: slot, dst: slot + 1 });
+            slot += 1;
+        }
+        nodes.push(Node {
+            op: PackedOp::FpHead { w: m.head_w, b: m.head_b },
+            src: slot,
+            dst: slot + 1,
+        });
+        PackedGraph { nodes, input_shape: vec![d_in], n_slots: slot + 2, n_convs: 0, d_out }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// executor
+// ---------------------------------------------------------------------------
+
+fn run_nodes(
+    nodes: &[Node],
+    slots: &mut [Slot],
+    convs: &mut [ConvScratch],
+    counts: &mut Tensor,
+    fp_in: &mut Tensor,
+    row: &mut Vec<f32>,
+    logits: &mut Tensor,
+) {
+    for node in nodes {
+        match &node.op {
+            PackedOp::Residual { main, shortcut, main_out, short_out } => {
+                run_nodes(main, slots, convs, counts, fp_in, row, logits);
+                run_nodes(shortcut, slots, convs, counts, fp_in, row, logits);
+                let (lo, hi) = slots.split_at_mut(node.dst);
+                let a = &lo[*main_out];
+                let b = &lo[*short_out];
+                let out = &mut hi[0];
+                assert!(!a.is_bits && !b.is_bits, "residual branches must end on f32 counts");
+                assert_eq!(a.shape, b.shape, "residual branch shapes {:?} vs {:?}", a.shape, b.shape);
+                out.f.resize_to(&a.shape);
+                for (o, (&x, &y)) in out.f.data.iter_mut().zip(a.f.data.iter().zip(&b.f.data)) {
+                    *o = x + y;
+                }
+                out.is_bits = false;
+                let shape = &a.shape;
+                out.set_shape(shape);
+            }
+            PackedOp::FpHead { w, b } => {
+                let src = &slots[node.src];
+                if src.is_bits {
+                    fp_head_bits(&src.bits, w, b, row, logits);
+                } else {
+                    // exact replay of nn::Linear eval: view → matmul_bt →
+                    // per-element bias add in the same loop order
+                    let n = src.shape[0];
+                    let d = src.cols();
+                    let flat = src.f.view(&[n, d]);
+                    *logits = flat.matmul_bt(w);
+                    let n_out = w.rows();
+                    for i in 0..n {
+                        for j in 0..n_out {
+                            *logits.at2_mut(i, j) += b.data[j];
+                        }
+                    }
+                }
+            }
+            op => {
+                let (lo, hi) = slots.split_at_mut(node.dst);
+                eval_op(op, &lo[node.src], &mut hi[0], convs, counts, fp_in);
+            }
+        }
+    }
+}
+
+/// Pack one output row of predicate results word-wise into a pre-zeroed
+/// `out` row — one `u64` store per 64 bits instead of a bounds-checked
+/// read-modify-write per bit (the same accumulation the fused
+/// `xnor_threshold` kernel uses). The tail-word invariant holds because
+/// only in-range columns ever set a bit.
+#[inline]
+fn pack_row_bits(out: &mut BitMatrix, r: usize, fires: impl Iterator<Item = bool>) {
+    let base = r * out.wpr;
+    let mut word = 0u64;
+    let mut col = 0usize;
+    for fire in fires {
+        if fire {
+            word |= 1u64 << (col % 64);
+        }
+        if col % 64 == 63 {
+            out.words[base + col / 64] = word;
+            word = 0;
+        }
+        col += 1;
+    }
+    if col % 64 != 0 {
+        out.words[base + col / 64] = word;
+    }
+}
+
+fn eval_op(
+    op: &PackedOp,
+    src: &Slot,
+    out: &mut Slot,
+    convs: &mut [ConvScratch],
+    counts: &mut Tensor,
+    fp_in: &mut Tensor,
+) {
+    match op {
+        PackedOp::Linear(l) => {
+            assert!(src.is_bits, "Linear op needs packed input");
+            l.apply_into(&src.bits, &mut out.bits);
+            out.is_bits = true;
+            out.set_shape(&[src.shape[0], l.weights.rows]);
+        }
+        PackedOp::Conv2d(c) => {
+            assert!(src.is_bits, "Boolean conv needs packed input");
+            let (n, ch, h, w) = src.dims4();
+            assert_eq!(ch, c.c_in, "conv '{}': {ch} channels vs c_in {}", c.name, c.c_in);
+            let cs = &mut convs[c.scratch_id];
+            let (oh, ow) = bit_im2col(&src.bits, n, ch, h, w, c.k, c.stride, c.pad, cs);
+            cs.patches.xnor_gemm_masked_into(&c.weights, &cs.mask, counts);
+            let hw = oh * ow;
+            match &c.fused {
+                Some(ft) => {
+                    // per-channel threshold + re-pack: bit (n, c·oh·ow),
+                    // accumulated word-wise in output-column order
+                    // (channel-major: col = j·hw + p is sequential)
+                    out.bits.zero_resize(n, c.c_out * hw);
+                    let (bits, cd) = (&mut out.bits, &counts.data);
+                    for ni in 0..n {
+                        let fires = (0..c.c_out).flat_map(|j| {
+                            let (thr, flip) = (ft.thr[j], ft.flip[j]);
+                            (0..hw).map(move |p| {
+                                let s = cd[(ni * hw + p) * c.c_out + j];
+                                if flip {
+                                    s <= thr
+                                } else {
+                                    s >= thr
+                                }
+                            })
+                        });
+                        pack_row_bits(bits, ni, fires);
+                    }
+                    out.is_bits = true;
+                }
+                None => {
+                    // emit f32 counts in NCHW (the rows_to_nchw mapping)
+                    out.f.resize_to(&[n, c.c_out, oh, ow]);
+                    for ni in 0..n {
+                        for p in 0..hw {
+                            let r = ni * hw + p;
+                            for j in 0..c.c_out {
+                                out.f.data[(ni * c.c_out + j) * hw + p] =
+                                    counts.data[r * c.c_out + j];
+                            }
+                        }
+                    }
+                    out.is_bits = false;
+                }
+            }
+            out.set_shape(&[n, c.c_out, oh, ow]);
+        }
+        PackedOp::FpConv2d(fc) => {
+            let (n, ch, h, w) = src.dims4();
+            assert_eq!(ch, fc.c_in, "conv '{}': {ch} channels vs c_in {}", fc.name, fc.c_in);
+            let xf: &Tensor = if src.is_bits {
+                // decode ±1 exactly as Value::to_f32 would
+                fp_in.resize_to(&[n, ch, h, w]);
+                let cols = ch * h * w;
+                for i in 0..n {
+                    src.bits.decode_pm1_row(i, &mut fp_in.data[i * cols..(i + 1) * cols]);
+                }
+                fp_in
+            } else {
+                &src.f
+            };
+            let oh = (h + 2 * fc.pad - fc.k) / fc.stride + 1;
+            let ow = (w + 2 * fc.pad - fc.k) / fc.stride + 1;
+            // exact replay of nn::Conv2d eval (this path allocates per
+            // call like the training layer does — stem only)
+            let cols = xf.im2col(fc.k, fc.stride, fc.pad);
+            let mut y = cols.matmul_bt(&fc.w);
+            for i in 0..y.rows() {
+                for j in 0..fc.c_out {
+                    *y.at2_mut(i, j) += fc.b.data[j];
+                }
+            }
+            out.f = y.rows_to_nchw(n, fc.c_out, oh, ow);
+            out.is_bits = false;
+            out.set_shape(&[n, fc.c_out, oh, ow]);
+        }
+        PackedOp::BatchNorm(bn) => {
+            let (n, c, h, w) = src.dims4();
+            assert_eq!(c, bn.gamma.len(), "BN '{}': {c} channels vs {}", bn.name, bn.gamma.len());
+            out.f.resize_to(&src.shape);
+            let hw = h * w;
+            for ni in 0..n {
+                for ci in 0..c {
+                    // identical arithmetic to BnCore eval: (x−μ)/√(σ²+ε),
+                    // then γ·h + β
+                    let denom = (bn.var[ci] + BN_EPS).sqrt();
+                    let plane = (ni * c + ci) * hw;
+                    for p in 0..hw {
+                        let hh = (src.f.data[plane + p] - bn.mean[ci]) / denom;
+                        out.f.data[plane + p] = bn.gamma[ci] * hh + bn.beta[ci];
+                    }
+                }
+            }
+            out.is_bits = false;
+            out.set_shape(&src.shape);
+        }
+        PackedOp::Threshold(spec) => {
+            assert!(!src.is_bits, "threshold needs f32 input");
+            let n = src.shape[0];
+            match spec {
+                ThresholdSpec::Scalar(thr) => {
+                    let cols = src.cols();
+                    out.bits.zero_resize(n, cols);
+                    for i in 0..n {
+                        let r = &src.f.data[i * cols..(i + 1) * cols];
+                        pack_row_bits(&mut out.bits, i, r.iter().map(|&v| v >= *thr));
+                    }
+                }
+                ThresholdSpec::PerChannel(ft) => {
+                    let (n, c, h, w) = src.dims4();
+                    let hw = h * w;
+                    out.bits.zero_resize(n, c * hw);
+                    let data = &src.f.data;
+                    for ni in 0..n {
+                        let fires = (0..c).flat_map(|ci| {
+                            let (thr, flip) = (ft.thr[ci], ft.flip[ci]);
+                            let plane = (ni * c + ci) * hw;
+                            data[plane..plane + hw].iter().map(move |&s| {
+                                if flip {
+                                    s <= thr
+                                } else {
+                                    s >= thr
+                                }
+                            })
+                        });
+                        pack_row_bits(&mut out.bits, ni, fires);
+                    }
+                }
+            }
+            out.is_bits = true;
+            out.set_shape(&src.shape);
+        }
+        PackedOp::MaxPool { k } => {
+            // exact replay of nn::MaxPool2d forward
+            let (n, c, h, w) = src.dims4();
+            let k = *k;
+            assert!(h % k == 0 && w % k == 0, "maxpool: {h}x{w} not divisible by {k}");
+            let (oh, ow) = (h / k, w / k);
+            out.f.resize_to(&[n, c, oh, ow]);
+            for ni in 0..n {
+                for ci in 0..c {
+                    let plane = (ni * c + ci) * h * w;
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let mut best = f32::NEG_INFINITY;
+                            for dy in 0..k {
+                                for dx in 0..k {
+                                    let v = src.f.data[plane + (oy * k + dy) * w + (ox * k + dx)];
+                                    if v > best {
+                                        best = v;
+                                    }
+                                }
+                            }
+                            out.f.data[((ni * c + ci) * oh + oy) * ow + ox] = best;
+                        }
+                    }
+                }
+            }
+            out.is_bits = false;
+            out.set_shape(&[n, c, oh, ow]);
+        }
+        PackedOp::GlobalAvgPool => {
+            // exact replay of nn::AvgPool2dGlobal forward
+            let (n, c, h, w) = src.dims4();
+            out.f.resize_to(&[n, c]);
+            let inv = 1.0 / (h * w) as f32;
+            for ni in 0..n {
+                for ci in 0..c {
+                    let plane = (ni * c + ci) * h * w;
+                    let s: f32 = src.f.data[plane..plane + h * w].iter().sum();
+                    out.f.data[ni * c + ci] = s * inv;
+                }
+            }
+            out.is_bits = false;
+            out.set_shape(&[n, c]);
+        }
+        PackedOp::Flatten => {
+            let n = src.shape[0];
+            let cols = src.cols();
+            if src.is_bits {
+                out.bits.clone_from(&src.bits);
+                out.is_bits = true;
+            } else {
+                out.f.resize_to(&[n, cols]);
+                out.f.data.copy_from_slice(&src.f.data);
+                out.is_bits = false;
+            }
+            out.set_shape(&[n, cols]);
+        }
+        PackedOp::Residual { .. } | PackedOp::FpHead { .. } => {
+            unreachable!("handled in run_nodes")
+        }
+    }
+}
+
+/// Bit-level im2col with the geometry-cached validity mask: delegates to
+/// the training stack's [`packed_im2col`] core (ONE implementation of
+/// the parity-critical padding/run geometry), keyed on this op's scratch.
+fn bit_im2col(
+    bits: &BitMatrix,
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    cs: &mut ConvScratch,
+) -> (usize, usize) {
+    let build_mask = cs.geom != Some((n, h, w));
+    let (oh, ow) =
+        packed_im2col(bits, n, c, h, w, k, stride, pad, &mut cs.patches, &mut cs.mask, build_mask);
+    if build_mask {
+        cs.geom = Some((n, h, w));
+    }
+    (oh, ow)
+}
+
+// ---------------------------------------------------------------------------
+// compiler: LayerDesc list + checkpoint records → op graph
+// ---------------------------------------------------------------------------
+
+/// Checkpoint record lookup with consumption tracking, so the compiler
+/// can report both *missing* records (by name and expected kind) and
+/// *leftover* records the architecture never referenced.
+struct RecordIndex<'r> {
+    map: HashMap<&'r str, &'r Record>,
+    used: HashSet<String>,
+}
+
+impl<'r> RecordIndex<'r> {
+    fn new(records: &'r [Record]) -> Self {
+        let mut map = HashMap::new();
+        for r in records {
+            match r {
+                Record::Bool { name, .. } | Record::Real { name, .. }
+                | Record::Buffer { name, .. } => {
+                    map.insert(name.as_str(), r);
+                }
+                _ => {}
+            }
+        }
+        RecordIndex { map, used: HashSet::new() }
+    }
+
+    fn get(&mut self, name: &str) -> Option<&'r Record> {
+        let r = self.map.get(name).copied();
+        if r.is_some() {
+            self.used.insert(name.to_string());
+        }
+        r
+    }
+
+    fn bool_mat(&mut self, name: &str, what: &str) -> Result<BitMatrix, EngineError> {
+        match self.get(name) {
+            Some(Record::Bool { rows, cols, words, .. }) => {
+                Ok(BitMatrix::from_words(*rows, *cols, words.clone()))
+            }
+            Some(_) => Err(EngineError::new(format!(
+                "record '{name}' ({what}) is not a Boolean tensor"
+            ))),
+            None => Err(EngineError::new(format!("missing Boolean record '{name}' ({what})"))),
+        }
+    }
+
+    fn real_vec(&mut self, name: &str, what: &str) -> Result<Vec<f32>, EngineError> {
+        match self.get(name) {
+            Some(Record::Real { data, .. }) => Ok(data.clone()),
+            Some(_) => {
+                Err(EngineError::new(format!("record '{name}' ({what}) is not an FP tensor")))
+            }
+            None => Err(EngineError::new(format!("missing FP record '{name}' ({what})"))),
+        }
+    }
+
+    fn buffer_vec(&mut self, name: &str, what: &str) -> Result<Vec<f32>, EngineError> {
+        match self.get(name) {
+            Some(Record::Buffer { data, .. }) => Ok(data.clone()),
+            Some(_) => Err(EngineError::new(format!("record '{name}' ({what}) is not a buffer"))),
+            None => Err(EngineError::new(format!("missing buffer record '{name}' ({what})"))),
+        }
+    }
+
+    /// First weight/buffer record the compiled architecture never
+    /// consumed (indicates arch ↔ tensor desync in the checkpoint).
+    fn leftover(&self) -> Option<&str> {
+        self.map.keys().find(|n| !self.used.contains(**n)).copied()
+    }
+}
+
+/// Compile-time dataflow state.
+#[derive(Clone)]
+struct St {
+    /// Current value is packed bits (else f32).
+    bits: bool,
+    /// f32 value is integer-valued pre-activation counts.
+    integer: bool,
+    /// Channel (or feature) count of the current value.
+    chans: usize,
+    /// Max |count| when `integer` (the BN-fold search range).
+    range: i64,
+}
+
+struct SeqCtx {
+    nodes: Vec<Node>,
+    cur: usize,
+    pending_conv: Option<PackedConv>,
+    pending_lin: Option<(String, PackedLayer)>,
+    pending_bn: Option<BnEval>,
+    st: St,
+}
+
+struct Compiler<'r> {
+    recs: RecordIndex<'r>,
+    next_slot: usize,
+    next_conv: usize,
+}
+
+impl Compiler<'_> {
+    fn alloc_slot(&mut self) -> usize {
+        let s = self.next_slot;
+        self.next_slot += 1;
+        s
+    }
+
+    fn emit(&mut self, ctx: &mut SeqCtx, op: PackedOp) {
+        let dst = self.alloc_slot();
+        ctx.nodes.push(Node { op, src: ctx.cur, dst });
+        ctx.cur = dst;
+    }
+
+    /// Emit any pending (unfused) ops: a conv whose threshold did not
+    /// directly follow, then a BN that could not fold.
+    fn flush(&mut self, ctx: &mut SeqCtx) -> Result<(), EngineError> {
+        if let Some((name, _)) = &ctx.pending_lin {
+            return Err(EngineError::new(format!(
+                "BoolLinear '{name}' must be followed by a threshold activation to be servable"
+            )));
+        }
+        if let Some(c) = ctx.pending_conv.take() {
+            ctx.st = St {
+                bits: false,
+                integer: true,
+                chans: c.c_out,
+                range: (c.c_in * c.k * c.k) as i64,
+            };
+            self.emit(ctx, PackedOp::Conv2d(c));
+        }
+        if let Some(bn) = ctx.pending_bn.take() {
+            self.emit(ctx, PackedOp::BatchNorm(bn));
+            ctx.st.integer = false;
+            ctx.st.range = 0;
+        }
+        Ok(())
+    }
+
+    fn load_bn(&mut self, name: &str, features: usize) -> Result<BnEval, EngineError> {
+        let gamma = self.recs.real_vec(&format!("{name}.gamma"), "BN scale")?;
+        let beta = self.recs.real_vec(&format!("{name}.beta"), "BN shift")?;
+        let mean = self.recs.buffer_vec(&format!("{name}.running_mean"), "BN running mean")?;
+        let var = self.recs.buffer_vec(&format!("{name}.running_var"), "BN running var")?;
+        for (v, what) in
+            [(&gamma, "gamma"), (&beta, "beta"), (&mean, "running_mean"), (&var, "running_var")]
+        {
+            if v.len() != features {
+                return Err(EngineError::new(format!(
+                    "BN '{name}': {what} len {} vs {features} features",
+                    v.len()
+                )));
+            }
+        }
+        Ok(BnEval { name: name.to_string(), gamma, beta, mean, var })
+    }
+
+    fn act_threshold(&mut self, name: &str, tau: f32, centered: bool) -> Result<f32, EngineError> {
+        if !centered {
+            return Ok(tau);
+        }
+        let m = self.recs.buffer_vec(
+            &format!("{name}.running_mean"),
+            "centered-threshold running mean",
+        )?;
+        if m.is_empty() {
+            return Err(EngineError::new(format!("activation '{name}': empty running_mean")));
+        }
+        Ok(tau + m[0])
+    }
+
+    fn compile_seq(
+        &mut self,
+        descs: &[LayerDesc],
+        st: St,
+        src: usize,
+        top: bool,
+    ) -> Result<(Vec<Node>, usize, St), EngineError> {
+        let mut ctx = SeqCtx {
+            nodes: Vec::new(),
+            cur: src,
+            pending_conv: None,
+            pending_lin: None,
+            pending_bn: None,
+            st,
+        };
+        let last = descs.len().saturating_sub(1);
+        for (i, desc) in descs.iter().enumerate() {
+            self.compile_one(desc, &mut ctx, top && i == last)?;
+        }
+        if !top {
+            self.flush(&mut ctx)?;
+        }
+        Ok((ctx.nodes, ctx.cur, ctx.st))
+    }
+
+    fn compile_one(
+        &mut self,
+        desc: &LayerDesc,
+        ctx: &mut SeqCtx,
+        is_final: bool,
+    ) -> Result<(), EngineError> {
+        match desc {
+            LayerDesc::ThresholdAct { name, tau, centered } => {
+                let thr = self.act_threshold(name, *tau, *centered)?;
+                if let Some((_, mut pl)) = ctx.pending_lin.take() {
+                    if ctx.pending_bn.is_some() {
+                        return Err(EngineError::new(format!(
+                            "BatchNorm between BoolLinear and activation '{name}' is not servable"
+                        )));
+                    }
+                    pl.threshold = thr;
+                    let n_out = pl.weights.rows;
+                    self.emit(ctx, PackedOp::Linear(pl));
+                    ctx.st = St { bits: true, integer: false, chans: n_out, range: 0 };
+                } else if let Some(mut c) = ctx.pending_conv.take() {
+                    let fanin = (c.c_in * c.k * c.k) as i64;
+                    let ft = match ctx.pending_bn.take() {
+                        Some(bn) => fold_bn_threshold(&bn, thr, fanin),
+                        None => FusedThreshold {
+                            thr: vec![thr; c.c_out],
+                            flip: vec![false; c.c_out],
+                        },
+                    };
+                    c.fused = Some(ft);
+                    let c_out = c.c_out;
+                    self.emit(ctx, PackedOp::Conv2d(c));
+                    ctx.st = St { bits: true, integer: false, chans: c_out, range: 0 };
+                } else {
+                    if ctx.st.bits {
+                        return Err(EngineError::new(format!(
+                            "activation '{name}' applied to already-packed bits"
+                        )));
+                    }
+                    match ctx.pending_bn.take() {
+                        Some(bn) if ctx.st.integer => {
+                            // BN + act over integer counts: fold to a
+                            // per-channel integer threshold — zero BN ops
+                            let ft = fold_bn_threshold(&bn, thr, ctx.st.range);
+                            self.emit(ctx, PackedOp::Threshold(ThresholdSpec::PerChannel(ft)));
+                        }
+                        Some(bn) => {
+                            self.emit(ctx, PackedOp::BatchNorm(bn));
+                            self.emit(ctx, PackedOp::Threshold(ThresholdSpec::Scalar(thr)));
+                        }
+                        None => {
+                            self.emit(ctx, PackedOp::Threshold(ThresholdSpec::Scalar(thr)));
+                        }
+                    }
+                    ctx.st.bits = true;
+                    ctx.st.integer = false;
+                    ctx.st.range = 0;
+                }
+            }
+            LayerDesc::BoolConv2d { name, c_in, c_out, k, stride, pad } => {
+                self.flush(ctx)?;
+                if !ctx.st.bits {
+                    return Err(EngineError::new(format!(
+                        "Boolean conv '{name}' receives real-valued input — a threshold \
+                         activation must precede it"
+                    )));
+                }
+                let weights = self.recs.bool_mat(&format!("{name}.weight"), "conv weights")?;
+                let fanin = c_in * k * k;
+                if (weights.rows, weights.cols) != (*c_out, fanin) {
+                    return Err(EngineError::new(format!(
+                        "conv '{name}': weight shape {}x{} vs arch {c_out}x{fanin}",
+                        weights.rows, weights.cols
+                    )));
+                }
+                ctx.pending_conv = Some(PackedConv {
+                    name: name.clone(),
+                    c_in: *c_in,
+                    c_out: *c_out,
+                    k: *k,
+                    stride: *stride,
+                    pad: *pad,
+                    weights,
+                    fused: None,
+                    scratch_id: {
+                        let id = self.next_conv;
+                        self.next_conv += 1;
+                        id
+                    },
+                });
+            }
+            LayerDesc::Conv2d { name, c_in, c_out, k, stride, pad } => {
+                self.flush(ctx)?;
+                let w = self.recs.real_vec(&format!("{name}.w"), "conv weights")?;
+                let b = self.recs.real_vec(&format!("{name}.b"), "conv bias")?;
+                let fanin = c_in * k * k;
+                if w.len() != c_out * fanin || b.len() != *c_out {
+                    return Err(EngineError::new(format!(
+                        "conv '{name}': weight/bias lens {}/{} vs arch {c_out}x{fanin}",
+                        w.len(),
+                        b.len()
+                    )));
+                }
+                self.emit(
+                    ctx,
+                    PackedOp::FpConv2d(FpConv {
+                        name: name.clone(),
+                        c_in: *c_in,
+                        c_out: *c_out,
+                        k: *k,
+                        stride: *stride,
+                        pad: *pad,
+                        w: Tensor::from_vec(&[*c_out, fanin], w),
+                        b: Tensor::from_vec(&[*c_out], b),
+                    }),
+                );
+                ctx.st = St { bits: false, integer: false, chans: *c_out, range: 0 };
+            }
+            LayerDesc::BatchNorm2d { name, features } => {
+                if ctx.pending_lin.is_some() || ctx.pending_bn.is_some() {
+                    return Err(EngineError::new(format!(
+                        "BatchNorm '{name}' in an unsupported position"
+                    )));
+                }
+                let chans = ctx.pending_conv.as_ref().map(|c| c.c_out).unwrap_or(ctx.st.chans);
+                if *features != chans {
+                    return Err(EngineError::new(format!(
+                        "BN '{name}': {features} features vs {chans} channels"
+                    )));
+                }
+                ctx.pending_bn = Some(self.load_bn(name, *features)?);
+            }
+            LayerDesc::MaxPool2d { name, k } => {
+                self.flush(ctx)?;
+                if ctx.st.bits {
+                    return Err(EngineError::new(format!(
+                        "MaxPool '{name}' after a threshold activation is not servable"
+                    )));
+                }
+                self.emit(ctx, PackedOp::MaxPool { k: *k });
+                // max of integers is an integer: integer/range unchanged
+            }
+            LayerDesc::GlobalAvgPool { name } => {
+                self.flush(ctx)?;
+                if ctx.st.bits {
+                    return Err(EngineError::new(format!(
+                        "GlobalAvgPool '{name}' on packed bits is not servable"
+                    )));
+                }
+                self.emit(ctx, PackedOp::GlobalAvgPool);
+                ctx.st.integer = false; // mean divides: no longer integer
+                ctx.st.range = 0;
+            }
+            LayerDesc::Flatten { .. } => {
+                // pure metadata: packed bits are already row-flattened and
+                // f32 data is contiguous row-major, and every downstream
+                // consumer derives (batch, ∏ rest) itself — elide the op
+                // so no copy is paid (the IR variant stays available for
+                // hand-built graphs)
+                self.flush(ctx)?;
+            }
+            LayerDesc::Binarize { .. } => {
+                self.flush(ctx)?;
+                if !ctx.st.bits {
+                    // sign(v) ⇔ v ≥ 0 under the from_pm1 convention
+                    self.emit(ctx, PackedOp::Threshold(ThresholdSpec::Scalar(0.0)));
+                    ctx.st.bits = true;
+                    ctx.st.integer = false;
+                    ctx.st.range = 0;
+                }
+                // on already-packed bits binarize is the identity: no op
+            }
+            LayerDesc::BoolLinear { name, n_in, n_out, bias } => {
+                self.flush(ctx)?;
+                if !ctx.st.bits {
+                    return Err(EngineError::new(format!(
+                        "BoolLinear '{name}' on real-valued input is not servable — a \
+                         Binarize/ThresholdAct must precede it"
+                    )));
+                }
+                let weights = self.recs.bool_mat(&format!("{name}.weight"), "linear weights")?;
+                if (weights.rows, weights.cols) != (*n_out, *n_in) {
+                    return Err(EngineError::new(format!(
+                        "linear '{name}': weight shape {}x{} vs arch {n_out}x{n_in}",
+                        weights.rows, weights.cols
+                    )));
+                }
+                let bias = if *bias {
+                    Some(self.recs.bool_mat(&format!("{name}.bias"), "linear bias")?)
+                } else {
+                    None
+                };
+                ctx.pending_lin = Some((
+                    name.clone(),
+                    PackedLayer { weights, bias, threshold: 0.0, input_mask: None },
+                ));
+            }
+            LayerDesc::Linear { name, n_in, n_out } => {
+                if !is_final {
+                    return Err(EngineError::new(format!(
+                        "FP Linear '{name}' in the network interior is not servable by the \
+                         packed graph executor (only a final FP head)"
+                    )));
+                }
+                self.flush(ctx)?;
+                let w = self.recs.real_vec(&format!("{name}.w"), "head weights")?;
+                let b = self.recs.real_vec(&format!("{name}.b"), "head bias")?;
+                if w.len() != n_in * n_out || b.len() != *n_out {
+                    return Err(EngineError::new(format!(
+                        "head '{name}': weight/bias lens {}/{} vs arch {n_out}x{n_in}",
+                        w.len(),
+                        b.len()
+                    )));
+                }
+                self.emit(
+                    ctx,
+                    PackedOp::FpHead {
+                        w: Tensor::from_vec(&[*n_out, *n_in], w),
+                        b: Tensor::from_vec(&[*n_out], b),
+                    },
+                );
+            }
+            LayerDesc::Residual { name, main, shortcut } => {
+                self.flush(ctx)?;
+                if ctx.st.bits {
+                    return Err(EngineError::new(format!(
+                        "residual '{name}' merges pre-activations — packed-bit input is not \
+                         servable"
+                    )));
+                }
+                let (mnodes, mout, mst) =
+                    self.compile_seq(main, ctx.st.clone(), ctx.cur, false)?;
+                if mst.bits {
+                    return Err(EngineError::new(format!(
+                        "residual '{name}': main branch must end on pre-activations"
+                    )));
+                }
+                let (snodes, sout, sst) = if shortcut.is_empty() {
+                    (Vec::new(), ctx.cur, ctx.st.clone())
+                } else {
+                    let (n, o, s) = self.compile_seq(shortcut, ctx.st.clone(), ctx.cur, false)?;
+                    if s.bits {
+                        return Err(EngineError::new(format!(
+                            "residual '{name}': shortcut branch must end on pre-activations"
+                        )));
+                    }
+                    (n, o, s)
+                };
+                if mst.chans != sst.chans {
+                    return Err(EngineError::new(format!(
+                        "residual '{name}': branch channels {} vs {}",
+                        mst.chans, sst.chans
+                    )));
+                }
+                let merged = St {
+                    bits: false,
+                    integer: mst.integer && sst.integer,
+                    chans: mst.chans,
+                    range: mst.range + sst.range,
+                };
+                self.emit(
+                    ctx,
+                    PackedOp::Residual {
+                        main: mnodes,
+                        shortcut: snodes,
+                        main_out: mout,
+                        short_out: sout,
+                    },
+                );
+                ctx.st = merged;
+            }
+            other => {
+                return Err(EngineError::new(format!(
+                    "layer '{}' ({}) is not supported by the packed graph executor",
+                    other.name(),
+                    other.kind()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Fold eval-mode BN + threshold over *integer* pre-activations into one
+/// integer threshold per channel: binary-search the crossover of the
+/// monotone predicate `γ·(s−μ)/√(σ²+ε) + β ≥ τ`, replaying the exact
+/// f32 arithmetic of `BnCore` eval + `ThresholdAct` so the folded
+/// compare is bit-identical for every integer in `[-range, range]`.
+fn fold_bn_threshold(bn: &BnEval, thr_act: f32, range: i64) -> FusedThreshold {
+    let c = bn.gamma.len();
+    let mut thr = vec![0.0f32; c];
+    let mut flip = vec![false; c];
+    let (lo, hi) = (-range, range);
+    for j in 0..c {
+        let denom = (bn.var[j] + BN_EPS).sqrt();
+        let fire =
+            |s: f32| bn.gamma[j] * ((s - bn.mean[j]) / denom) + bn.beta[j] >= thr_act;
+        if bn.gamma[j] > 0.0 {
+            // predicate is monotone non-decreasing in s: find the
+            // smallest integer that fires
+            if !fire(hi as f32) {
+                thr[j] = (hi + 1) as f32; // never fires in range
+            } else {
+                let (mut a, mut b) = (lo, hi); // invariant: fire(b)
+                while a < b {
+                    let m = a + (b - a) / 2;
+                    if fire(m as f32) {
+                        b = m;
+                    } else {
+                        a = m + 1;
+                    }
+                }
+                thr[j] = b as f32;
+            }
+        } else if bn.gamma[j] < 0.0 {
+            // monotone non-increasing: find the largest integer that
+            // fires; the packed compare flips to s ≤ thr
+            flip[j] = true;
+            if !fire(lo as f32) {
+                thr[j] = (lo - 1) as f32; // never fires in range
+            } else {
+                let (mut a, mut b) = (lo, hi); // invariant: fire(a)
+                while a < b {
+                    let m = a + (b - a + 1) / 2;
+                    if fire(m as f32) {
+                        a = m;
+                    } else {
+                        b = m - 1;
+                    }
+                }
+                thr[j] = a as f32;
+            }
+        } else {
+            // γ = ±0 (or NaN): the BN output is the constant β for every
+            // finite s, so the predicate is constant too
+            thr[j] = if fire(0.0) { (lo - 1) as f32 } else { (hi + 1) as f32 };
+        }
+    }
+    FusedThreshold { thr, flip }
+}
+
+fn compile(
+    input_shape: &[usize],
+    descs: &[LayerDesc],
+    records: &[Record],
+) -> Result<PackedGraph, EngineError> {
+    if descs.is_empty() {
+        return Err(EngineError::new("architecture record is empty"));
+    }
+    // input shape: spatial (conv/pool/BN2d/residual-bearing) models need
+    // the recorded [C, H, W] — checked recursively so a conv anywhere in
+    // the arch fails at LOAD with a clear error instead of panicking in a
+    // serve worker; flat models can fall back to the first layer's fan-in
+    fn has_spatial(descs: &[LayerDesc]) -> bool {
+        descs.iter().any(|d| match d {
+            LayerDesc::Conv2d { .. }
+            | LayerDesc::BoolConv2d { .. }
+            | LayerDesc::BatchNorm2d { .. }
+            | LayerDesc::MaxPool2d { .. }
+            | LayerDesc::GlobalAvgPool { .. } => true,
+            LayerDesc::Residual { main, shortcut, .. } => {
+                has_spatial(main) || has_spatial(shortcut)
+            }
+            _ => false,
+        })
+    }
+    let needs_spatial = has_spatial(descs);
+    let input_shape: Vec<usize> = if !input_shape.is_empty() {
+        input_shape.to_vec()
+    } else if needs_spatial {
+        return Err(EngineError::new(
+            "checkpoint has no recorded input shape — forward the model once before \
+             save_model so the `Record::Arch` carries it",
+        ));
+    } else {
+        match descs.first() {
+            Some(LayerDesc::BoolLinear { n_in, .. }) | Some(LayerDesc::Linear { n_in, .. }) => {
+                vec![*n_in]
+            }
+            _ => {
+                return Err(EngineError::new(
+                    "checkpoint has no recorded input shape — forward the model once before \
+                     save_model so the `Record::Arch` carries it",
+                ))
+            }
+        }
+    };
+    if needs_spatial && input_shape.len() != 3 {
+        return Err(EngineError::new(format!(
+            "conv architecture needs a [C, H, W] input shape, checkpoint records {input_shape:?}"
+        )));
+    }
+    let mut compiler =
+        Compiler { recs: RecordIndex::new(records), next_slot: 1, next_conv: 0 };
+    let st = St { bits: true, integer: false, chans: input_shape[0], range: 0 };
+    let (nodes, _out, _st) = compiler.compile_seq(descs, st, 0, true)?;
+    let d_out = match nodes.last().map(|n| &n.op) {
+        Some(PackedOp::FpHead { w, .. }) => w.rows(),
+        _ => {
+            return Err(EngineError::new(
+                "architecture does not end in an FP head (final Linear layer)",
+            ))
+        }
+    };
+    if let Some(name) = compiler.recs.leftover() {
+        return Err(EngineError::new(format!(
+            "record '{name}' is not referenced by the architecture description — checkpoint \
+             and arch record are out of sync"
+        )));
+    }
+    Ok(PackedGraph {
+        nodes,
+        input_shape,
+        n_slots: compiler.next_slot,
+        n_convs: compiler.next_conv,
+        d_out,
+    })
+}

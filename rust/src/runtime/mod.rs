@@ -2,11 +2,14 @@
 //!
 //! Two serving paths share this module:
 //!
-//! * **Native path** (default, zero dependencies): [`engine`] freezes a
-//!   trained Boolean model into packed weight bits and runs forward-only
-//!   inference as pure XNOR+POPCNT — the paper's one-XOR-per-64-weights
-//!   energy story executed literally — and [`serve`] wraps it in a
-//!   multi-threaded micro-batching server (`bold serve-native`).
+//! * **Native path** (default, zero dependencies): [`graph`] compiles a
+//!   `save_model` checkpoint's architecture record into a packed op
+//!   graph ([`PackedGraph`]) — conv, residual and MLP models all run
+//!   forward-only as pure XNOR+POPCNT with BN folded into per-channel
+//!   integer thresholds — and [`serve`] wraps it in a multi-threaded
+//!   micro-batching server (`bold serve-native`). [`engine`] keeps the
+//!   original linear-stack [`PackedMlp`] as the back-compat loader for
+//!   arch-less checkpoints.
 //! * **XLA path** (feature `xla-runtime`): `PjrtExecutor` compiles the
 //!   AOT-lowered L2 jax graphs (`artifacts/*.hlo.txt`) with PJRT and
 //!   executes them from Rust (`bold serve`). Off by default so the
@@ -14,11 +17,15 @@
 //!   degrades with a clear message instead of failing to compile.
 
 pub mod engine;
+pub mod graph;
 #[cfg(feature = "xla-runtime")]
 pub mod pjrt;
 pub mod serve;
 
 pub use engine::{EngineError, EngineScratch, PackedLayer, PackedMlp};
+pub use graph::{
+    FusedThreshold, GraphScratch, Node, PackedConv, PackedGraph, PackedOp, ThresholdSpec,
+};
 #[cfg(feature = "xla-runtime")]
 pub use pjrt::{literal_to_tensor, tensor_to_literal, PjrtError, PjrtExecutor};
 pub use serve::{NativeServer, Pending, Response, ServeConfig, ServeError, ServerStats};

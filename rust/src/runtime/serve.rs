@@ -14,13 +14,18 @@
 //!   `max_batch` requests are assembled or the `batch_window` expires —
 //!   micro-batching amortises the packed-weight streaming across the
 //!   batch (the same 2-D reuse argument as the training GEMM);
-//! * the worker runs one [`PackedMlp::forward_bits`] over the assembled
-//!   batch and answers every request through its own channel.
+//! * the worker runs one [`PackedGraph::forward_bits_into`] over the
+//!   assembled batch and answers every request through its own channel.
+//!
+//! Batch assembly is shape-aware: a request row is the flattened packed
+//! input (`C·H·W` bits for conv models, `D` for flat ones), and the
+//! graph reinterprets the gathered `rows × C·H·W` matrix against its
+//! recorded input shape — the server itself stays architecture-agnostic.
 //!
 //! Shutdown drains: workers only exit once the queue is empty, so every
 //! accepted request is answered.
 
-use super::engine::{EngineScratch, PackedMlp};
+use super::graph::{GraphScratch, PackedGraph};
 use crate::tensor::BitMatrix;
 use crate::util::pool;
 use std::collections::VecDeque;
@@ -129,7 +134,7 @@ struct Request {
 }
 
 struct Shared {
-    model: PackedMlp,
+    model: PackedGraph,
     cfg: ServeConfig,
     queue: Mutex<VecDeque<Request>>,
     not_empty: Condvar,
@@ -139,16 +144,20 @@ struct Shared {
     batches: AtomicUsize,
 }
 
-/// The batch server: a frozen [`PackedMlp`] behind a bounded queue and a
-/// worker pool.
+/// The batch server: a frozen [`PackedGraph`] behind a bounded queue and
+/// a worker pool.
 pub struct NativeServer {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl NativeServer {
-    /// Start `cfg.workers` worker threads around a frozen model.
-    pub fn start(model: PackedMlp, cfg: ServeConfig) -> Self {
+    /// Start `cfg.workers` worker threads around a frozen model. Accepts
+    /// anything convertible into a [`PackedGraph`] — in particular a
+    /// legacy [`crate::runtime::PackedMlp`], which wraps into a
+    /// linear-only graph.
+    pub fn start(model: impl Into<PackedGraph>, cfg: ServeConfig) -> Self {
+        let model: PackedGraph = model.into();
         assert!(cfg.workers >= 1, "need at least one worker");
         assert!(cfg.max_batch >= 1, "need max_batch >= 1");
         assert!(cfg.queue_cap >= 1, "need queue_cap >= 1");
@@ -177,7 +186,7 @@ impl NativeServer {
     }
 
     /// The served model (for spot-checking responses).
-    pub fn model(&self) -> &PackedMlp {
+    pub fn model(&self) -> &PackedGraph {
         &self.shared.model
     }
 
@@ -272,8 +281,9 @@ fn worker_loop(sh: &Shared) {
     // sharding to its fair share of the pool.
     let _budget = pool::BudgetGuard::new((pool::num_threads() / sh.cfg.workers).max(1));
     // Per-worker reusable buffers: the steady-state batch path does no
-    // allocation beyond the per-request response rows.
-    let mut scratch = EngineScratch::new();
+    // allocation beyond the per-request response rows (and the FP
+    // stem/head temporaries on conv graphs).
+    let mut scratch = GraphScratch::new();
     let mut x = BitMatrix::zeros(0, 0);
     loop {
         let mut batch: Vec<Request> = Vec::with_capacity(max_batch);
@@ -342,6 +352,7 @@ fn worker_loop(sh: &Shared) {
 mod tests {
     use super::*;
     use crate::models::{boolean_mlp, MlpConfig};
+    use crate::runtime::PackedMlp;
     use crate::util::Rng;
 
     fn engine(seed: u64) -> PackedMlp {

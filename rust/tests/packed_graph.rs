@@ -1,0 +1,320 @@
+//! Bit-exact parity suite for the packed graph executor (ISSUE 4):
+//! `PackedGraph::forward` vs the training-path eval forward for VGG-SMALL
+//! and Boolean-ResNet configs — including odd channel counts, batches
+//! smaller than the thread pool, and BN folded into per-channel integer
+//! thresholds — plus checkpoint round-trips, the legacy no-arch
+//! fallback, a conv-checkpoint server round-trip, and the precise loader
+//! errors.
+
+use bold::coordinator::{read_records, save_checkpoint, save_model, Record};
+use bold::models::{
+    boolean_mlp, resnet_boolean, vgg_small, MlpConfig, ResNetConfig, VggConfig, VggKind,
+};
+use bold::nn::{
+    BackwardScale, BatchNorm2d, Binarize, BoolConv2d, Flatten, Layer, LayerDesc, Linear,
+    ParamRef, Sequential, ThresholdAct, Value,
+};
+use bold::runtime::{GraphScratch, NativeServer, PackedGraph, ServeConfig};
+use bold::tensor::Tensor;
+use bold::util::Rng;
+use std::time::Duration;
+
+fn tmp(name: &str) -> String {
+    let dir = std::env::temp_dir().join("bold_packed_graph_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name).to_str().unwrap().to_string()
+}
+
+/// Move BN running stats and centered-act means off their init values so
+/// the BN fold is exercised on non-trivial statistics.
+fn warm_up(model: &mut Sequential, shape: &[usize], seed: u64) {
+    let mut rng = Rng::new(seed);
+    for _ in 0..3 {
+        let x = Tensor::randn(shape, 1.0, &mut rng);
+        let _ = model.forward(Value::F32(x), true);
+    }
+}
+
+/// The acceptance check: graph forward on packed ±1 inputs vs the
+/// training model's eval forward on the same values. Bit-exact class
+/// predictions, logits within 1e-5 (in practice they are identical — the
+/// executor replays the training arithmetic exactly).
+fn assert_parity(model: &mut Sequential, graph: &PackedGraph, x: &Tensor, what: &str) {
+    let reference = model.forward(Value::bit_from_pm1(x), false).expect_f32("ref");
+    let native = graph.forward_f32(x);
+    assert_eq!(native.shape, reference.shape, "{what}: logit shape");
+    assert!(
+        native.max_abs_diff(&reference) <= 1e-5,
+        "{what}: logits diverged by {}",
+        native.max_abs_diff(&reference)
+    );
+    assert_eq!(native.argmax_rows(), reference.argmax_rows(), "{what}: predictions");
+}
+
+#[test]
+fn vgg_graph_matches_training_eval() {
+    // width 0.125 ⇒ 16/32/64 channels; fc_layers 2 adds a Boolean FC +
+    // centered activation to the classifier
+    for (with_bn, fc_layers, seed) in [(false, 1usize, 1u64), (true, 1, 2), (true, 2, 3)] {
+        let cfg = VggConfig {
+            hw: 16,
+            width_mult: 0.125,
+            with_bn,
+            fc_layers,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(seed);
+        let mut model = vgg_small(&cfg, &mut rng);
+        warm_up(&mut model, &[4, 3, 16, 16], seed + 50);
+
+        let path = tmp(&format!("vgg_{with_bn}_{fc_layers}.ckpt"));
+        save_model(&mut model, &path).unwrap();
+        let graph = PackedGraph::load(&path).expect("graph load");
+        assert_eq!(graph.input_shape, vec![3, 16, 16]);
+        assert_eq!(graph.d_out(), 10);
+
+        // batch 3 < any realistic thread-pool size
+        let x = Tensor::rand_pm1(&[3, 3, 16, 16], &mut rng);
+        assert_parity(&mut model, &graph, &x, &format!("vgg bn={with_bn} fc={fc_layers}"));
+    }
+}
+
+#[test]
+fn vgg_bn_folds_to_zero_op_thresholds() {
+    // With BN enabled, the only explicit BatchNorm op left in the graph
+    // is the stem's (real-valued input); every post-Boolean-conv BN must
+    // have folded into a fused or per-channel integer threshold.
+    let cfg = VggConfig { hw: 16, width_mult: 0.125, with_bn: true, ..Default::default() };
+    let mut rng = Rng::new(9);
+    let mut model = vgg_small(&cfg, &mut rng);
+    warm_up(&mut model, &[4, 3, 16, 16], 99);
+    let graph = PackedGraph::from_layer(&mut model).expect("graph");
+    let summary = graph.summary();
+    assert_eq!(
+        summary.matches("BatchNorm").count(),
+        1,
+        "only the FP-stem BN may stay an explicit op: {summary}"
+    );
+    assert!(summary.contains("Conv2d+thr"), "conv+threshold fusion missing: {summary}");
+}
+
+#[test]
+fn resnet_graph_matches_training_eval() {
+    // base 9 ⇒ odd channel counts (9, 18) through every conv and the
+    // residual merges; base 8 covers the even/strided layout
+    for (base, hw, seed) in [(8usize, 16usize, 4u64), (9, 8, 5)] {
+        let cfg = ResNetConfig { base, blocks: vec![1, 1], hw, ..Default::default() };
+        let mut rng = Rng::new(seed);
+        let mut model = resnet_boolean(&cfg, &mut rng);
+        warm_up(&mut model, &[4, 3, hw, hw], seed + 60);
+
+        let path = tmp(&format!("resnet_{base}.ckpt"));
+        save_model(&mut model, &path).unwrap();
+        let graph = PackedGraph::load(&path).expect("graph load");
+        assert_eq!(graph.input_shape, vec![3, hw, hw]);
+        assert!(graph.summary().contains("Residual"), "{}", graph.summary());
+
+        let x = Tensor::rand_pm1(&[3, 3, hw, hw], &mut rng);
+        assert_parity(&mut model, &graph, &x, &format!("resnet base={base}"));
+    }
+}
+
+#[test]
+fn negative_and_zero_gamma_bn_channels_fold_correctly() {
+    // A hand-built conv→BN→act net where one BN channel has γ < 0 (the
+    // folded compare flips to s ≤ thr) and one has γ = 0 (constant).
+    let mut rng = Rng::new(7);
+    let mut model = Sequential::new("tiny");
+    model.push(Box::new(Binarize::new("bin")));
+    model.push(Box::new(BoolConv2d::new("c", 1, 3, 3, 1, 1, &mut rng)));
+    model.push(Box::new(BatchNorm2d::new("bn", 3)));
+    model.push(Box::new(
+        ThresholdAct::new("a", 0.0, BackwardScale::TanhPrime { fanin: 9 }).centered(),
+    ));
+    model.push(Box::new(Flatten::new("fl")));
+    model.push(Box::new(Linear::new("head", 3 * 6 * 6, 4, &mut rng)));
+    warm_up(&mut model, &[4, 1, 6, 6], 70);
+    for p in model.params() {
+        if let ParamRef::Real { name, w } = p {
+            if name == "bn.gamma" {
+                w.data[0] = -0.7;
+                w.data[1] = 0.0;
+            }
+        }
+    }
+    let graph = PackedGraph::from_layer(&mut model).expect("graph");
+    let x = Tensor::rand_pm1(&[5, 1, 6, 6], &mut rng);
+    assert_parity(&mut model, &graph, &x, "tiny conv, γ<0 / γ=0 channels");
+}
+
+#[test]
+fn mlp_save_model_checkpoint_compiles_through_arch() {
+    let cfg = MlpConfig { d_in: 70, hidden: vec![33, 17], d_out: 5, tanh_scale: true };
+    let mut rng = Rng::new(12);
+    let mut model = boolean_mlp(&cfg, &mut rng);
+    // forward once so the input shape is recorded
+    let probe = Tensor::rand_pm1(&[2, 70], &mut rng);
+    let _ = model.forward(Value::bit_from_pm1(&probe), false);
+
+    let path = tmp("mlp_arch.ckpt");
+    save_model(&mut model, &path).unwrap();
+    // the checkpoint carries an Arch record with the recorded shape
+    let records = read_records(&path).unwrap();
+    let arch = records
+        .iter()
+        .find_map(|r| match r {
+            Record::Arch { input_shape, layers, .. } => Some((input_shape.clone(), layers.len())),
+            _ => None,
+        })
+        .expect("save_model must embed Record::Arch for describable models");
+    assert_eq!(arch, (vec![70], 5)); // 2×(BoolLinear+act) + head
+
+    let graph = PackedGraph::load(&path).expect("graph load");
+    assert_eq!((graph.d_in(), graph.d_out()), (70, 5));
+    let x = Tensor::rand_pm1(&[9, 70], &mut rng);
+    let reference = model.forward(Value::bit_from_pm1(&x), false).expect_f32("ref");
+    let native = graph.forward_f32(&x);
+    assert_eq!(native.max_abs_diff(&reference), 0.0, "MLP through graph must stay exact");
+}
+
+#[test]
+fn legacy_param_only_checkpoint_falls_back_to_linear_loader() {
+    // save_checkpoint writes params only — no Arch record. The graph
+    // loader must route through the PackedMlp compatibility wrapper.
+    let cfg = MlpConfig { d_in: 64, hidden: vec![32], d_out: 4, tanh_scale: true };
+    let mut rng = Rng::new(13);
+    let mut model = boolean_mlp(&cfg, &mut rng);
+    let path = tmp("legacy_mlp.ckpt");
+    save_checkpoint(&mut model.params(), &path).unwrap();
+
+    let graph = PackedGraph::load(&path).expect("fallback load");
+    assert_eq!(graph.input_shape, vec![64]);
+    let x = Tensor::rand_pm1(&[6, 64], &mut rng);
+    let reference = model.forward(Value::bit_from_pm1(&x), false).expect_f32("ref");
+    assert_eq!(graph.forward_f32(&x).max_abs_diff(&reference), 0.0);
+}
+
+#[test]
+fn graph_scratch_reuse_across_batch_sizes_matches_fresh_forward() {
+    // The serve-worker pattern: one GraphScratch reused for shrinking and
+    // growing batches (conv geometry cache keyed on batch size included).
+    let cfg = VggConfig { hw: 16, width_mult: 0.125, with_bn: true, ..Default::default() };
+    let mut rng = Rng::new(21);
+    let mut model = vgg_small(&cfg, &mut rng);
+    warm_up(&mut model, &[4, 3, 16, 16], 22);
+    let graph = PackedGraph::from_layer(&mut model).expect("graph");
+    let mut scratch = GraphScratch::new();
+    for b in [4usize, 1, 6, 2] {
+        let x = Tensor::rand_pm1(&[b, 3, 16, 16], &mut rng);
+        let flat = x.view(&[b, 3 * 16 * 16]);
+        let packed = bold::tensor::BitMatrix::from_pm1(&flat);
+        graph.forward_bits_into(&packed, &mut scratch);
+        let fresh = graph.forward_bits(&packed);
+        assert_eq!(scratch.logits.max_abs_diff(&fresh), 0.0, "batch {b}");
+    }
+}
+
+#[test]
+fn conv_checkpoint_server_round_trip() {
+    let cfg = VggConfig { hw: 16, width_mult: 0.125, with_bn: true, ..Default::default() };
+    let mut rng = Rng::new(31);
+    let mut model = vgg_small(&cfg, &mut rng);
+    warm_up(&mut model, &[4, 3, 16, 16], 32);
+    let path = tmp("vgg_serve.ckpt");
+    save_model(&mut model, &path).unwrap();
+
+    let reference = PackedGraph::load(&path).expect("reference graph");
+    let server = NativeServer::start(
+        PackedGraph::load(&path).expect("served graph"),
+        ServeConfig {
+            workers: 2,
+            max_batch: 8,
+            queue_cap: 16,
+            batch_window: Duration::from_micros(100),
+        },
+    );
+    assert_eq!(server.d_in(), 3 * 16 * 16);
+    let mut pendings = Vec::new();
+    let mut expected = Vec::new();
+    for _ in 0..24 {
+        let x = Tensor::rand_pm1(&[1, 3, 16, 16], &mut rng);
+        expected.push(reference.forward_f32(&x));
+        let flat = x.view(&[1, 3 * 16 * 16]);
+        pendings.push(server.submit(&flat.data).expect("submit"));
+    }
+    for (p, want) in pendings.into_iter().zip(expected) {
+        let resp = p.wait().expect("response");
+        assert_eq!(resp.logits, want.data, "served conv logits must be bit-identical");
+        assert_eq!(resp.class, want.argmax_rows()[0]);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 24);
+}
+
+#[test]
+fn unsupported_layer_error_names_layer_and_kind() {
+    // The FP VGG contains ReLU — refusing it must name the layer.
+    let cfg = VggConfig {
+        kind: VggKind::Fp,
+        hw: 16,
+        width_mult: 0.125,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(41);
+    let mut model = vgg_small(&cfg, &mut rng);
+    warm_up(&mut model, &[2, 3, 16, 16], 42);
+    let err = PackedGraph::from_layer(&mut model).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("relu1a") && msg.contains("ReLU"), "{msg}");
+}
+
+#[test]
+fn missing_weight_record_error_names_the_record() {
+    let records = vec![
+        Record::Arch {
+            name: "m".into(),
+            input_shape: vec![8],
+            layers: vec![
+                LayerDesc::BoolLinear { name: "bl0".into(), n_in: 8, n_out: 4, bias: false },
+                LayerDesc::ThresholdAct { name: "act0".into(), tau: 0.0, centered: false },
+                LayerDesc::Linear { name: "head".into(), n_in: 4, n_out: 2 },
+            ],
+        },
+        Record::Real { name: "head.w".into(), data: vec![0.0; 8] },
+        Record::Real { name: "head.b".into(), data: vec![0.0; 2] },
+        // bl0.weight deliberately missing
+    ];
+    let err = PackedGraph::from_records(&records).unwrap_err();
+    assert!(err.to_string().contains("bl0.weight"), "{err}");
+}
+
+#[test]
+fn stray_record_error_names_the_record() {
+    let mut rng = Rng::new(51);
+    let cfg = MlpConfig { d_in: 16, hidden: vec![8], d_out: 2, tanh_scale: true };
+    let mut model = boolean_mlp(&cfg, &mut rng);
+    let probe = Tensor::rand_pm1(&[1, 16], &mut rng);
+    let _ = model.forward(Value::bit_from_pm1(&probe), false);
+    let path = tmp("stray.ckpt");
+    save_model(&mut model, &path).unwrap();
+    let mut records = read_records(&path).unwrap();
+    records.push(Record::Buffer { name: "ghost.running_var".into(), data: vec![1.0] });
+    let err = PackedGraph::from_records(&records).unwrap_err();
+    assert!(err.to_string().contains("ghost.running_var"), "{err}");
+}
+
+#[test]
+fn archless_conv_checkpoint_error_explains_the_fallback() {
+    // Conv-shaped records without an Arch record: the fallback loader
+    // must name the offending record AND point at the missing arch.
+    let records = vec![
+        Record::Bool { name: "bl0.weight".into(), rows: 4, cols: 8, words: vec![0; 4] },
+        Record::Real { name: "head.w".into(), data: vec![0.0; 8] },
+        Record::Real { name: "head.b".into(), data: vec![0.0; 2] },
+        Record::Buffer { name: "bn2.running_var".into(), data: vec![1.0; 4] },
+    ];
+    let err = PackedGraph::from_records(&records).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("bn2.running_var"), "{msg}");
+    assert!(msg.contains("architecture record"), "{msg}");
+}
