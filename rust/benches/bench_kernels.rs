@@ -1,16 +1,61 @@
-//! Kernel sweep with a threads = {1, N} column: every packed and dense
-//! hot-path kernel, sequential vs sharded across the persistent pool
-//! (DESIGN.md §Parallelism). Template rows for EXPERIMENTS.md §Perf.
+//! Kernel sweep with a threads = {1, N} column and a SIMD backend A/B
+//! section: every packed and dense hot-path kernel, sequential vs
+//! sharded across the persistent pool (DESIGN.md §Parallelism), and the
+//! popcount kernels under forced-scalar vs the auto-detected SIMD
+//! backend (DESIGN.md §SIMD-Backend). Template rows for EXPERIMENTS.md
+//! §Perf.
 //!
-//! The thread column is driven by `pool::with_thread_budget`, so a single
-//! run measures both paths on identical inputs; the determinism suite
-//! (`tests/parallel_determinism.rs`) separately asserts the two paths are
-//! bit-exact. (Custom harness: no criterion in the offline registry.)
+//! Besides the stdout table, the run emits machine-readable
+//! `BENCH_kernels.json` (one record per measured cell: kernel, dims,
+//! threads, simd backend, ns/iter, Gop/s) into `BOLD_BENCH_JSON_DIR`
+//! (default: current directory) so the perf trajectory is tracked
+//! across PRs instead of living only in prose.
+//!
+//! The thread column is driven by `pool::with_thread_budget` and the
+//! backend column by `simd::with_backend`, so a single run measures all
+//! paths on identical inputs; `tests/parallel_determinism.rs` and
+//! `tests/simd_parity.rs` separately assert the paths are bit-exact.
+//! (Custom harness: no criterion in the offline registry.)
 
 use bold::nn::{ParamRef, ParamStore};
 use bold::optim::BooleanOptimizer;
+use bold::tensor::simd::{self, Backend};
 use bold::tensor::{BitMatrix, Tensor};
 use bold::util::{pool, Rng, Timer};
+
+/// One measured cell, serialised into BENCH_kernels.json.
+struct Rec {
+    kernel: String,
+    dims: String,
+    threads: usize,
+    simd: &'static str,
+    ns_per_iter: f64,
+    gops: f64,
+}
+
+fn write_json(file: &str, recs: &[Rec]) {
+    let dir = std::env::var("BOLD_BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+    let path = format!("{dir}/{file}");
+    let mut s = String::from("[\n");
+    for (i, r) in recs.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"kernel\":\"{}\",\"dims\":\"{}\",\"threads\":{},\"simd\":\"{}\",\
+             \"ns_per_iter\":{:.1},\"gops\":{:.3}}}{}\n",
+            r.kernel,
+            r.dims,
+            r.threads,
+            r.simd,
+            r.ns_per_iter,
+            r.gops,
+            if i + 1 < recs.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    match std::fs::write(&path, s) {
+        Ok(()) => println!("\nwrote {path} ({} records)", recs.len()),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}
 
 /// Median seconds for `f` under a fixed intra-op thread budget.
 fn timed<F: FnMut()>(name: &str, budget: usize, mut f: F) -> f64 {
@@ -22,10 +67,12 @@ fn timed<F: FnMut()>(name: &str, budget: usize, mut f: F) -> f64 {
 }
 
 /// One table row: kernel × shape, threads=1 vs threads=N, speedup.
-fn row(label: &str, work: f64, mut f: impl FnMut()) {
+/// Records both cells under the process-wide SIMD backend.
+fn row(recs: &mut Vec<Rec>, kernel: &str, dims: String, work: f64, mut f: impl FnMut()) {
     let n = pool::num_threads();
-    let t1 = timed(label, 1, &mut f);
-    let tn = timed(label, n, &mut f);
+    let t1 = timed(kernel, 1, &mut f);
+    let tn = timed(kernel, n, &mut f);
+    let label = format!("{kernel} {dims}");
     println!(
         "{label:<44} t1 {:>9.3} ms  t{n} {:>9.3} ms  speedup {:>5.2}x  {:>8.2} Gop/s",
         t1 * 1e3,
@@ -33,12 +80,52 @@ fn row(label: &str, work: f64, mut f: impl FnMut()) {
         t1 / tn,
         work / tn / 1e9
     );
+    for (threads, t) in [(1usize, t1), (n, tn)] {
+        recs.push(Rec {
+            kernel: kernel.to_string(),
+            dims: dims.clone(),
+            threads,
+            simd: simd::backend_name(),
+            ns_per_iter: t * 1e9,
+            gops: work / t / 1e9,
+        });
+    }
+}
+
+/// Single-thread scalar-vs-SIMD A/B for one kernel (the ISSUE-5
+/// acceptance cell: speedup at K ≥ 4096).
+fn ab_row(recs: &mut Vec<Rec>, kernel: &str, dims: String, work: f64, mut f: impl FnMut()) {
+    let auto = simd::auto_backend();
+    let t_scalar = simd::with_backend(Backend::Scalar, || timed(kernel, 1, &mut f));
+    let t_simd = simd::with_backend(auto, || timed(kernel, 1, &mut f));
+    let label = format!("{kernel} {dims}");
+    println!(
+        "{label:<44} scalar {:>9.3} ms  {} {:>9.3} ms  speedup {:>5.2}x  {:>8.2} Gop/s",
+        t_scalar * 1e3,
+        auto.name(),
+        t_simd * 1e3,
+        t_scalar / t_simd,
+        work / t_simd / 1e9
+    );
+    for (simd_name, t) in [("scalar", t_scalar), (auto.name(), t_simd)] {
+        recs.push(Rec {
+            kernel: kernel.to_string(),
+            dims: dims.clone(),
+            threads: 1,
+            simd: simd_name,
+            ns_per_iter: t * 1e9,
+            gops: work / t / 1e9,
+        });
+    }
 }
 
 fn main() {
+    let mut recs: Vec<Rec> = Vec::new();
     println!(
-        "== bench_kernels: packed + dense kernels, threads = 1 vs {} (BOLD_NUM_THREADS)\n",
-        pool::num_threads()
+        "== bench_kernels: packed + dense kernels, threads = 1 vs {} (BOLD_NUM_THREADS), \
+         simd backend = {} (BOLD_SIMD)\n",
+        pool::num_threads(),
+        simd::backend_name()
     );
     let mut rng = Rng::new(7);
 
@@ -53,23 +140,45 @@ fn main() {
             }
         }
         let macs = (b * n * m) as f64;
+        let dims = format!("{b}x{n}x{m}");
         let mut out = Tensor::zeros(&[0]);
-        row(&format!("xnor_gemm {b}x{n}x{m}"), macs, || {
+        row(&mut recs, "xnor_gemm", dims.clone(), macs, || {
             x.xnor_gemm_into(&w, &mut out);
             std::hint::black_box(&out);
         });
-        row(&format!("xnor_gemm_masked {b}x{n}x{m}"), macs, || {
+        row(&mut recs, "xnor_gemm_masked", dims.clone(), macs, || {
             x.xnor_gemm_masked_into(&w, &mask, &mut out);
             std::hint::black_box(&out);
         });
         let mut bits_out = BitMatrix::zeros(0, 0);
-        row(&format!("xnor_threshold {b}x{n}x{m}"), macs, || {
+        row(&mut recs, "xnor_threshold", dims.clone(), macs, || {
             x.xnor_threshold_into(&w, None, 0.0, &mut bits_out);
             std::hint::black_box(&bits_out);
         });
         let lane: Vec<u64> = mask.row(0).to_vec();
-        row(&format!("xnor_threshold_masked {b}x{n}x{m}"), macs, || {
+        row(&mut recs, "xnor_threshold_masked", dims, macs, || {
             x.xnor_threshold_masked_into(&w, &lane, None, 0.0, &mut bits_out);
+            std::hint::black_box(&bits_out);
+        });
+    }
+
+    println!(
+        "\n-- simd backend A/B: scalar vs {} (single thread; parity: tests/simd_parity.rs)",
+        simd::auto_backend().name()
+    );
+    for (b, n, m) in [(64, 256, 1024), (128, 512, 4096), (64, 256, 16384), (32, 128, 65536)] {
+        let x = BitMatrix::random(b, m, &mut rng);
+        let w = BitMatrix::random(n, m, &mut rng);
+        let macs = (b * n * m) as f64;
+        let dims = format!("{b}x{n}x{m}");
+        let mut out = Tensor::zeros(&[0]);
+        ab_row(&mut recs, "xnor_gemm", dims.clone(), macs, || {
+            x.xnor_gemm_into(&w, &mut out);
+            std::hint::black_box(&out);
+        });
+        let mut bits_out = BitMatrix::zeros(0, 0);
+        ab_row(&mut recs, "xnor_threshold", dims, macs, || {
+            x.xnor_threshold_into(&w, None, 0.0, &mut bits_out);
             std::hint::black_box(&bits_out);
         });
     }
@@ -86,16 +195,17 @@ fn main() {
         }
         let z = Tensor::randn(&[b, n], 1.0, &mut rng);
         let macs = (b * n * m) as f64;
+        let dims = format!("{b}x{n}x{m}");
         let mut out = Tensor::zeros(&[0]);
-        row(&format!("backward_input {b}x{n}x{m}"), macs, || {
+        row(&mut recs, "backward_input", dims.clone(), macs, || {
             w.backward_input_into(&z, &mut out);
             std::hint::black_box(&out);
         });
-        row(&format!("backward_weight {b}x{n}x{m}"), macs, || {
+        row(&mut recs, "backward_weight", dims.clone(), macs, || {
             x.backward_weight_into(&z, &mut out);
             std::hint::black_box(&out);
         });
-        row(&format!("backward_weight_masked {b}x{n}x{m}"), macs, || {
+        row(&mut recs, "backward_weight_masked", dims, macs, || {
             x.backward_weight_masked_into(&z, &mask, &mut out);
             std::hint::black_box(&out);
         });
@@ -108,13 +218,14 @@ fn main() {
         let bt = b_.transpose2();
         let at = a.transpose2();
         let macs = (m * k * n) as f64;
-        row(&format!("matmul {m}x{k}x{n}"), macs, || {
+        let dims = format!("{m}x{k}x{n}");
+        row(&mut recs, "matmul", dims.clone(), macs, || {
             std::hint::black_box(a.matmul(&b_));
         });
-        row(&format!("matmul_bt {m}x{k}x{n}"), macs, || {
+        row(&mut recs, "matmul_bt", dims.clone(), macs, || {
             std::hint::black_box(a.matmul_bt(&bt));
         });
-        row(&format!("matmul_at {m}x{k}x{n}"), macs, || {
+        row(&mut recs, "matmul_at", dims, macs, || {
             std::hint::black_box(at.matmul_at(&b_));
         });
     }
@@ -124,10 +235,11 @@ fn main() {
         let x = Tensor::randn(&[n, c, h, h], 1.0, &mut rng);
         let cols = x.im2col(k, 1, 1);
         let moved = (cols.rows() * cols.cols()) as f64;
-        row(&format!("im2col n{n} c{c} {h}x{h} k{k}"), moved, || {
+        let dims = format!("n{n}c{c}h{h}k{k}");
+        row(&mut recs, "im2col", dims.clone(), moved, || {
             std::hint::black_box(x.im2col(k, 1, 1));
         });
-        row(&format!("col2im n{n} c{c} {h}x{h} k{k}"), moved, || {
+        row(&mut recs, "col2im", dims, moved, || {
             std::hint::black_box(cols.col2im(n, c, h, h, k, 1, 1));
         });
     }
@@ -140,7 +252,8 @@ fn main() {
         let lanes = (rows * cols) as f64;
         let mut bits = bits0.clone();
         let mut store = ParamStore::new();
-        row(&format!("optimizer_step {rows}x{cols}"), lanes, || {
+        let dims = format!("{rows}x{cols}");
+        row(&mut recs, "optimizer_step", dims, lanes, || {
             // re-seed votes each rep so the scan has work to do
             store.zero_grads();
             store.accumulate("w", &grad);
@@ -149,5 +262,6 @@ fn main() {
         });
     }
 
-    println!("\n(bit-exactness of every t1-vs-tN pair: tests/parallel_determinism.rs)");
+    println!("\n(bit-exactness: tests/parallel_determinism.rs + tests/simd_parity.rs)");
+    write_json("BENCH_kernels.json", &recs);
 }

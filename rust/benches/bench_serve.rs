@@ -6,13 +6,56 @@
 //!
 //! Acceptance target: batch 64 with 4 workers delivers ≥4× the
 //! single-example (batch 1, 1 worker) throughput on the same model.
+//!
+//! Besides the stdout report, the run emits machine-readable
+//! `BENCH_serve.json` (model, config, workers, batch, req/s or µs/iter,
+//! simd backend, threads) into `BOLD_BENCH_JSON_DIR` (default: current
+//! directory) — the cross-PR perf trajectory record.
 
 use bold::models::{boolean_mlp, vgg_small, MlpConfig, VggConfig};
 use bold::nn::{Layer, Value};
 use bold::runtime::{NativeServer, PackedGraph, ServeConfig};
-use bold::tensor::{BitMatrix, Tensor};
-use bold::util::{Rng, Timer};
+use bold::tensor::{simd, BitMatrix, Tensor};
+use bold::util::{pool, Rng, Timer};
 use std::time::{Duration, Instant};
+
+/// One measured cell of BENCH_serve.json. `req_per_s` is 0 for raw
+/// engine-latency rows (which carry `us_per_iter` instead, and vice
+/// versa).
+struct Rec {
+    bench: String,
+    config: String,
+    workers: usize,
+    batch: usize,
+    req_per_s: f64,
+    us_per_iter: f64,
+}
+
+fn write_json(recs: &[Rec]) {
+    let dir = std::env::var("BOLD_BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+    let path = format!("{dir}/BENCH_serve.json");
+    let mut s = String::from("[\n");
+    for (i, r) in recs.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"bench\":\"{}\",\"config\":\"{}\",\"workers\":{},\"batch\":{},\
+             \"req_per_s\":{:.0},\"us_per_iter\":{:.2},\"simd\":\"{}\",\"threads\":{}}}{}\n",
+            r.bench,
+            r.config,
+            r.workers,
+            r.batch,
+            r.req_per_s,
+            r.us_per_iter,
+            simd::backend_name(),
+            pool::num_threads(),
+            if i + 1 < recs.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    match std::fs::write(&path, s) {
+        Ok(()) => println!("wrote {path} ({} records)", recs.len()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
 
 fn mlp_engine() -> PackedGraph {
     let mut model = boolean_mlp(&MlpConfig::default(), &mut Rng::new(7));
@@ -62,7 +105,12 @@ fn drive(server: &NativeServer, n: usize, clients: usize, depth: usize) -> f64 {
 
 /// The three-config sweep (single-example / micro-batched / batched +
 /// parallel) over one engine builder; returns the req/s per config.
-fn sweep(label: &str, n_requests: usize, mk: impl Fn() -> PackedGraph) -> Vec<f64> {
+fn sweep(
+    recs: &mut Vec<Rec>,
+    label: &str,
+    n_requests: usize,
+    mk: impl Fn() -> PackedGraph,
+) -> Vec<f64> {
     println!("-- {label}");
     let configs = [
         (1usize, 1usize, 1usize, "1 worker, batch 1 (single-example)"),
@@ -86,6 +134,14 @@ fn sweep(label: &str, n_requests: usize, mk: impl Fn() -> PackedGraph) -> Vec<f6
             "{cfg_label:<38} {rate:>10.0} req/s   (avg batch fill {:.1})",
             stats.avg_batch()
         );
+        recs.push(Rec {
+            bench: label.to_string(),
+            config: cfg_label.to_string(),
+            workers,
+            batch,
+            req_per_s: rate,
+            us_per_iter: 0.0,
+        });
         rates.push(rate);
     }
     println!(
@@ -96,7 +152,11 @@ fn sweep(label: &str, n_requests: usize, mk: impl Fn() -> PackedGraph) -> Vec<f6
 }
 
 fn main() {
-    println!("== bench_serve: native packed engine");
+    println!(
+        "== bench_serve: native packed engine (simd backend = {})",
+        simd::backend_name()
+    );
+    let mut recs: Vec<Rec> = Vec::new();
 
     // --- raw engine: per-example cost, batch 1 vs batch 64 --------------
     let eng = mlp_engine();
@@ -120,6 +180,22 @@ fn main() {
         lat1 * 1e6,
         lat1 / (lat64 / 64.0)
     );
+    recs.push(Rec {
+        bench: "mlp_engine_forward".into(),
+        config: "batch 1".into(),
+        workers: 1,
+        batch: 1,
+        req_per_s: 0.0,
+        us_per_iter: lat1 * 1e6,
+    });
+    recs.push(Rec {
+        bench: "mlp_engine_forward".into(),
+        config: "batch 64".into(),
+        workers: 1,
+        batch: 64,
+        req_per_s: 0.0,
+        us_per_iter: lat64 * 1e6,
+    });
 
     let vgg = vgg_engine();
     let v1 = BitMatrix::random(1, vgg.d_in(), &mut rng);
@@ -129,14 +205,31 @@ fn main() {
         std::hint::black_box(vgg.forward_bits(&v1));
     });
     t.report(None);
+    recs.push(Rec {
+        bench: "vgg_graph_forward".into(),
+        config: "batch 1".into(),
+        workers: 1,
+        batch: 1,
+        req_per_s: 0.0,
+        us_per_iter: t.median() * 1e6,
+    });
     let mut t = Timer::new("VGG graph forward batch 16");
     t.bench(1, 5, || {
         std::hint::black_box(vgg.forward_bits(&v16));
     });
     t.report(None);
+    recs.push(Rec {
+        bench: "vgg_graph_forward".into(),
+        config: "batch 16".into(),
+        workers: 1,
+        batch: 16,
+        req_per_s: 0.0,
+        us_per_iter: t.median() * 1e6,
+    });
     println!();
 
     // --- full server: queue + micro-batching + worker pool --------------
-    sweep("MLP 784-512-256-10", 8192, mlp_engine);
-    sweep("VGG-SMALL w0.25 (packed conv graph)", 512, vgg_engine);
+    sweep(&mut recs, "MLP 784-512-256-10", 8192, mlp_engine);
+    sweep(&mut recs, "VGG-SMALL w0.25 (packed conv graph)", 512, vgg_engine);
+    write_json(&recs);
 }

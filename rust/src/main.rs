@@ -444,6 +444,12 @@ fn cmd_info() -> Result<(), String> {
     } else {
         println!("features: xla-runtime off — native packed-bit engine only (`serve-native`)");
     }
+    println!(
+        "kernels: simd backend = {} (BOLD_SIMD={{auto,scalar}}), pool threads = {} \
+         (BOLD_NUM_THREADS)",
+        bold::tensor::simd::backend_name(),
+        bold::util::pool::num_threads()
+    );
     let artifacts = std::path::Path::new("artifacts");
     if artifacts.exists() {
         let entries: Vec<String> = std::fs::read_dir(artifacts)

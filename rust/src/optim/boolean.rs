@@ -20,7 +20,9 @@
 //! of one 64-lane word builds a 64-bit flip mask, then a single
 //! `words[i] ^= mask` commits all of that word's flips at once — the
 //! dataflow the paper's energy analysis (§5) assumes, instead of per-bit
-//! `get`/`flip` calls. For large tensors, disjoint row ranges shard across
+//! `get`/`flip` calls. The 64-lane scan itself runs on the
+//! runtime-dispatched SIMD backend (`crate::tensor::simd`, DESIGN.md
+//! §SIMD-Backend). For large tensors, disjoint row ranges shard across
 //! the persistent [`crate::util::pool`] (DESIGN.md §Parallelism) — no
 //! per-call thread spawning. The per-element arithmetic (and therefore
 //! the result) is bit-identical to the scalar rule; only the write path
@@ -172,7 +174,12 @@ fn step_one(
 }
 
 /// Scalar-exact scan over a contiguous block of rows, committing flips
-/// with one XOR mask per packed word.
+/// with one XOR mask per packed word. The per-word 64-lane scan (Eq.
+/// 9–10: `m ← β·m + η·q`, clamp, compare against the packed sign) runs
+/// on the dispatched SIMD backend's `flip_scan_word`
+/// ([`crate::tensor::simd`]) — 8 f32 lanes per AVX2 vector with the
+/// scalar rule's exact IEEE operation order, so the result is
+/// bit-identical on every backend.
 #[allow(clippy::too_many_arguments)]
 fn step_rows(
     lr: f32,
@@ -185,30 +192,21 @@ fn step_rows(
     wpr: usize,
 ) -> usize {
     let rows = if wpr == 0 { 0 } else { words.len() / wpr };
+    let scan = crate::tensor::simd::kernels().flip_scan_word;
     let mut flips = 0usize;
     for r in 0..rows {
         for wi in 0..wpr {
             let lanes = 64.min(cols - wi * 64);
             let word = &mut words[r * wpr + wi];
             let base = r * cols + wi * 64;
-            let mut mask = 0u64;
-            for lane in 0..lanes {
-                let idx = base + lane;
-                // m ← β·m + η·q  (Eq. 10)
-                let mut m = beta * accum[idx] + lr * grad[idx];
-                if let Some(k) = clip {
-                    m = m.clamp(-k, k);
-                }
-                // Eq. (9): flip when xnor(m, w) = T with |m| ≥ 1 —
-                // i.e. m ≥ 1 on set bits (w=+1), m ≤ −1 on clear bits.
-                let set = (*word >> lane) & 1 == 1;
-                if (set && m >= 1.0) || (!set && m <= -1.0) {
-                    mask |= 1u64 << lane;
-                    accum[idx] = 0.0; // reset (Algorithm 1 l.12)
-                } else {
-                    accum[idx] = m;
-                }
-            }
+            let mask = scan(
+                *word,
+                &grad[base..base + lanes],
+                &mut accum[base..base + lanes],
+                beta,
+                lr,
+                clip,
+            );
             *word ^= mask; // commit all of this word's flips at once
             flips += mask.count_ones() as usize;
         }

@@ -432,7 +432,7 @@ pub(crate) fn layer_records(model: &mut dyn Layer) -> Vec<Record> {
                 name,
                 rows: bits.rows,
                 cols: bits.cols,
-                words: bits.words.clone(),
+                words: bits.words.to_vec(),
             }),
             ParamRef::Real { name, w, .. } => {
                 records.push(Record::Real { name, data: w.data.clone() })

@@ -10,6 +10,10 @@
 //! [`BitMatrix::xnor_gemm_masked_into`] + a fused per-channel threshold
 //! that packs the integer counts straight back to bits, and `Residual`
 //! sums branch popcounts so the next threshold re-signs their majority.
+//! Every threshold re-pack (fused conv, per-channel, scalar) compares and
+//! packs through the runtime-dispatched SIMD backend
+//! ([`simd::pack_cmp_into`], DESIGN.md §SIMD-Backend) — 8 f32 compares
+//! per AVX2 vector, one movemask per 8 bits, bit-exact vs scalar.
 //!
 //! # BatchNorm folding (zero ops at serve time)
 //!
@@ -38,7 +42,7 @@
 use super::engine::{fp_head_bits, layer_records, EngineError, PackedLayer, PackedMlp};
 use crate::coordinator::{read_records, Record};
 use crate::nn::{packed_im2col, Layer, LayerDesc, BN_EPS};
-use crate::tensor::{BitMatrix, Tensor};
+use crate::tensor::{simd, BitMatrix, Tensor};
 use std::collections::{HashMap, HashSet};
 
 /// Per-output-channel threshold on integer pre-activation counts, with
@@ -246,6 +250,10 @@ pub struct GraphScratch {
     convs: Vec<ConvScratch>,
     /// (N·OH·OW × Cout) GEMM output shared by all conv ops.
     counts: Tensor,
+    /// One gathered channel column of `counts` (length OH·OW), staged
+    /// contiguously so the fused threshold re-pack runs through the
+    /// SIMD compare kernel ([`simd::pack_cmp_into`]).
+    col: Vec<f32>,
     /// Decoded ±1 input for the FP stem.
     fp_in: Tensor,
     /// FP head scratch row.
@@ -260,6 +268,7 @@ impl GraphScratch {
             slots: Vec::new(),
             convs: Vec::new(),
             counts: Tensor::zeros(&[0]),
+            col: Vec::new(),
             fp_in: Tensor::zeros(&[0]),
             row: Vec::new(),
             logits: Tensor::zeros(&[0]),
@@ -403,8 +412,8 @@ impl PackedGraph {
             s0.shape.push(x.rows);
             s0.shape.extend_from_slice(&self.input_shape);
         }
-        let GraphScratch { slots, convs, counts, fp_in, row, logits } = scratch;
-        run_nodes(&self.nodes, slots, convs, counts, fp_in, row, logits);
+        let GraphScratch { slots, convs, counts, col, fp_in, row, logits } = scratch;
+        run_nodes(&self.nodes, slots, convs, counts, col, fp_in, row, logits);
     }
 
     /// Convenience: pack real-valued features (`v ≥ 0 ⇒ T`, the
@@ -450,11 +459,13 @@ impl From<PackedMlp> for PackedGraph {
 // executor
 // ---------------------------------------------------------------------------
 
+#[allow(clippy::too_many_arguments)]
 fn run_nodes(
     nodes: &[Node],
     slots: &mut [Slot],
     convs: &mut [ConvScratch],
     counts: &mut Tensor,
+    col: &mut Vec<f32>,
     fp_in: &mut Tensor,
     row: &mut Vec<f32>,
     logits: &mut Tensor,
@@ -462,8 +473,8 @@ fn run_nodes(
     for node in nodes {
         match &node.op {
             PackedOp::Residual { main, shortcut, main_out, short_out } => {
-                run_nodes(main, slots, convs, counts, fp_in, row, logits);
-                run_nodes(shortcut, slots, convs, counts, fp_in, row, logits);
+                run_nodes(main, slots, convs, counts, col, fp_in, row, logits);
+                run_nodes(shortcut, slots, convs, counts, col, fp_in, row, logits);
                 let (lo, hi) = slots.split_at_mut(node.dst);
                 let a = &lo[*main_out];
                 let b = &lo[*short_out];
@@ -499,43 +510,20 @@ fn run_nodes(
             }
             op => {
                 let (lo, hi) = slots.split_at_mut(node.dst);
-                eval_op(op, &lo[node.src], &mut hi[0], convs, counts, fp_in);
+                eval_op(op, &lo[node.src], &mut hi[0], convs, counts, col, fp_in);
             }
         }
     }
 }
 
-/// Pack one output row of predicate results word-wise into a pre-zeroed
-/// `out` row — one `u64` store per 64 bits instead of a bounds-checked
-/// read-modify-write per bit (the same accumulation the fused
-/// `xnor_threshold` kernel uses). The tail-word invariant holds because
-/// only in-range columns ever set a bit.
-#[inline]
-fn pack_row_bits(out: &mut BitMatrix, r: usize, fires: impl Iterator<Item = bool>) {
-    let base = r * out.wpr;
-    let mut word = 0u64;
-    let mut col = 0usize;
-    for fire in fires {
-        if fire {
-            word |= 1u64 << (col % 64);
-        }
-        if col % 64 == 63 {
-            out.words[base + col / 64] = word;
-            word = 0;
-        }
-        col += 1;
-    }
-    if col % 64 != 0 {
-        out.words[base + col / 64] = word;
-    }
-}
-
+#[allow(clippy::too_many_arguments)]
 fn eval_op(
     op: &PackedOp,
     src: &Slot,
     out: &mut Slot,
     convs: &mut [ConvScratch],
     counts: &mut Tensor,
+    col: &mut Vec<f32>,
     fp_in: &mut Tensor,
 ) {
     match op {
@@ -555,24 +543,21 @@ fn eval_op(
             let hw = oh * ow;
             match &c.fused {
                 Some(ft) => {
-                    // per-channel threshold + re-pack: bit (n, c·oh·ow),
-                    // accumulated word-wise in output-column order
-                    // (channel-major: col = j·hw + p is sequential)
+                    // per-channel threshold + re-pack (bit col = j·hw + p,
+                    // channel-major): each channel's strided GEMM column
+                    // is staged contiguously, then compared and packed by
+                    // the SIMD backend's compare kernel
                     out.bits.zero_resize(n, c.c_out * hw);
-                    let (bits, cd) = (&mut out.bits, &counts.data);
+                    col.resize(hw, 0.0);
+                    let cd = &counts.data;
                     for ni in 0..n {
-                        let fires = (0..c.c_out).flat_map(|j| {
-                            let (thr, flip) = (ft.thr[j], ft.flip[j]);
-                            (0..hw).map(move |p| {
-                                let s = cd[(ni * hw + p) * c.c_out + j];
-                                if flip {
-                                    s <= thr
-                                } else {
-                                    s >= thr
-                                }
-                            })
-                        });
-                        pack_row_bits(bits, ni, fires);
+                        let row = out.bits.row_mut(ni);
+                        for j in 0..c.c_out {
+                            for (p, cv) in col.iter_mut().enumerate() {
+                                *cv = cd[(ni * hw + p) * c.c_out + j];
+                            }
+                            simd::pack_cmp_into(row, j * hw, col, ft.thr[j], ft.flip[j]);
+                        }
                     }
                     out.is_bits = true;
                 }
@@ -651,7 +636,7 @@ fn eval_op(
                     out.bits.zero_resize(n, cols);
                     for i in 0..n {
                         let r = &src.f.data[i * cols..(i + 1) * cols];
-                        pack_row_bits(&mut out.bits, i, r.iter().map(|&v| v >= *thr));
+                        simd::pack_cmp_into(out.bits.row_mut(i), 0, r, *thr, false);
                     }
                 }
                 ThresholdSpec::PerChannel(ft) => {
@@ -660,18 +645,17 @@ fn eval_op(
                     out.bits.zero_resize(n, c * hw);
                     let data = &src.f.data;
                     for ni in 0..n {
-                        let fires = (0..c).flat_map(|ci| {
-                            let (thr, flip) = (ft.thr[ci], ft.flip[ci]);
+                        let row = out.bits.row_mut(ni);
+                        for ci in 0..c {
                             let plane = (ni * c + ci) * hw;
-                            data[plane..plane + hw].iter().map(move |&s| {
-                                if flip {
-                                    s <= thr
-                                } else {
-                                    s >= thr
-                                }
-                            })
-                        });
-                        pack_row_bits(&mut out.bits, ni, fires);
+                            simd::pack_cmp_into(
+                                row,
+                                ci * hw,
+                                &data[plane..plane + hw],
+                                ft.thr[ci],
+                                ft.flip[ci],
+                            );
+                        }
                     }
                 }
             }

@@ -282,11 +282,14 @@ fn worker_loop(sh: &Shared) {
     let _budget = pool::BudgetGuard::new((pool::num_threads() / sh.cfg.workers).max(1));
     // Per-worker reusable buffers: the steady-state batch path does no
     // allocation beyond the per-request response rows (and the FP
-    // stem/head temporaries on conv graphs).
+    // stem/head temporaries on conv graphs) — the batch gather list and
+    // the argmax output are reused across drained batches, not rebuilt.
     let mut scratch = GraphScratch::new();
     let mut x = BitMatrix::zeros(0, 0);
+    let mut batch: Vec<Request> = Vec::with_capacity(max_batch);
+    let mut classes: Vec<usize> = Vec::with_capacity(max_batch);
     loop {
-        let mut batch: Vec<Request> = Vec::with_capacity(max_batch);
+        batch.clear();
         {
             let mut q = sh.queue.lock().unwrap();
             while q.is_empty() {
@@ -336,11 +339,13 @@ fn worker_loop(sh: &Shared) {
         debug_assert_eq!(x.rows, batch.len());
         sh.model.forward_bits_into(&x, &mut scratch);
         let logits = &scratch.logits;
-        let classes = logits.argmax_rows();
+        logits.argmax_rows_into(&mut classes);
         let n_out = logits.cols();
         sh.served.fetch_add(batch.len(), Ordering::SeqCst);
         sh.batches.fetch_add(1, Ordering::SeqCst);
-        for (i, req) in batch.into_iter().enumerate() {
+        for (i, req) in batch.drain(..).enumerate() {
+            // the response row is the one allocation left on this path:
+            // it is owned by the client and crosses the channel
             let row = logits.data[i * n_out..(i + 1) * n_out].to_vec();
             // a client that dropped its Pending is not an error
             let _ = req.tx.send(Response { logits: row, class: classes[i] });

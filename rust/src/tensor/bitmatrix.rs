@@ -24,7 +24,21 @@
 //! `BOLD_NUM_THREADS` setting. The `_into` variants additionally reuse a
 //! caller-owned output buffer so steady-state training and serving stop
 //! allocating per batch.
+//!
+//! # SIMD backend and K-tiling
+//!
+//! Within a shard, the forward kernels run a cache-blocked loop —
+//! `ROW_BLOCK` input rows share every streamed weight K-tile of
+//! `K_TILE_WORDS` words — whose inner XOR+POPCNT reduction dispatches
+//! through [`crate::tensor::simd`] (AVX2 Harley–Seal / NEON `vcntq_u8` /
+//! scalar, `BOLD_SIMD` override); the backward kernels dispatch their
+//! per-row `axpy_pm1[_masked]` updates the same way. Popcount sums are
+//! integers and the f32 kernels replay the scalar reference's exact IEEE
+//! ops, so every backend/tiling combination is bit-exact
+//! (`tests/simd_parity.rs`). Word storage is 64-byte-aligned
+//! [`AlignedWords`].
 
+use super::simd::{self, scalar, AlignedWords, Backend, Kernels};
 use super::Tensor;
 use crate::util::pool::{self, MAC_QUANTUM};
 use crate::util::Rng;
@@ -35,87 +49,113 @@ use crate::util::Rng;
 /// backward kernels use the shared [`pool::MAC_QUANTUM`].
 const WORD_QUANTUM: usize = 1 << 16;
 
-/// Byte → 8-lane ±1 pattern lookup (bit=1 ↦ +1, bit=0 ↦ −1). 8 KiB,
-/// cache-resident; turns the per-bit branchy backward loops into straight
-/// fused multiply-adds (see §Perf in EXPERIMENTS.md: ~8× on backward).
-static PM1_LUT: [[f32; 8]; 256] = {
-    let mut lut = [[0.0f32; 8]; 256];
-    let mut b = 0usize;
-    while b < 256 {
-        let mut k = 0usize;
-        while k < 8 {
-            lut[b][k] = if (b >> k) & 1 == 1 { 1.0 } else { -1.0 };
-            k += 1;
-        }
-        b += 1;
-    }
-    lut
-};
+/// K-tile width in packed words (4 KiB per row-tile): within one tile
+/// the row block's input panels stay L1-resident while every weight row
+/// streams through once, so wide fan-ins (im2col'd conv rows, BERT FFN)
+/// never thrash L2 re-reading inputs. Integer popcount sums are
+/// order-independent, so tiling cannot change any result bit. Multiple
+/// of the AVX2 Harley–Seal block (64 words) so full tiles vectorise
+/// without per-tile scalar tails.
+const K_TILE_WORDS: usize = 512;
 
-/// Byte → 8-lane 0/1 mask pattern (for the 𝕄-zero masked variants).
-static BIT_LUT: [[f32; 8]; 256] = {
-    let mut lut = [[0.0f32; 8]; 256];
-    let mut b = 0usize;
-    while b < 256 {
-        let mut k = 0usize;
-        while k < 8 {
-            lut[b][k] = ((b >> k) & 1) as f32;
-            k += 1;
-        }
-        b += 1;
-    }
-    lut
-};
+/// Input rows processed per weight-matrix pass: each streamed weight
+/// K-tile is reused this many times from L1, quartering weight traffic
+/// vs a row-at-a-time loop (the replacement for the old 2×2 blocking).
+const ROW_BLOCK: usize = 4;
 
-/// out[0..len] += zv · e(bits) for one packed row, via the byte LUT.
-#[inline]
-fn axpy_pm1_row(out: &mut [f32], words: &[u64], zv: f32) {
-    let len = out.len();
-    let mut lane = 0usize;
-    'words: for &word in words {
-        let bytes = word.to_le_bytes();
-        for &byte in &bytes {
-            let pat = &PM1_LUT[byte as usize];
-            if lane + 8 <= len {
-                let o = &mut out[lane..lane + 8];
-                for k in 0..8 {
-                    o[k] += zv * pat[k];
-                }
-            } else {
-                for k in 0..len - lane {
-                    out[lane + k] += zv * pat[k];
-                }
-                break 'words;
-            }
-            lane += 8;
-        }
-    }
+/// Below this many words per row, the `fn`-pointer dispatch costs more
+/// than the reduction itself (tiny conv fan-ins): the cores inline the
+/// [`scalar`] reference directly instead. Bit-exact either way.
+const SIMD_MIN_WORDS: usize = 8;
+
+thread_local! {
+    /// Per-thread u32 count accumulator for the tiled forward cores
+    /// (`ROW_BLOCK × n_out` entries). Thread-local so pool shards reuse
+    /// it across calls — the kernels stay allocation-free at steady
+    /// state. The cores are leaf code (they never re-enter the pool), so
+    /// the RefCell can never observe a nested borrow.
+    static ACC_TL: std::cell::RefCell<Vec<u32>> = const { std::cell::RefCell::new(Vec::new()) };
 }
 
-/// out[0..len] += zv · e(bits)·mask for one packed row (masked lanes add 0).
-#[inline]
-fn axpy_pm1_masked_row(out: &mut [f32], words: &[u64], mask: &[u64], zv: f32) {
-    let len = out.len();
-    let mut lane = 0usize;
-    'words: for (&word, &mword) in words.iter().zip(mask) {
-        let wb = word.to_le_bytes();
-        let mb = mword.to_le_bytes();
-        for (&byte, &mbyte) in wb.iter().zip(&mb) {
-            let pat = &PM1_LUT[byte as usize];
-            let mpat = &BIT_LUT[mbyte as usize];
-            if lane + 8 <= len {
-                let o = &mut out[lane..lane + 8];
-                for k in 0..8 {
-                    o[k] += zv * pat[k] * mpat[k];
-                }
-            } else {
-                for k in 0..len - lane {
-                    out[lane + k] += zv * pat[k] * mpat[k];
-                }
-                break 'words;
-            }
-            lane += 8;
+/// Run `f` on the thread-local count accumulator, zeroed to `len`.
+fn with_acc<R>(len: usize, f: impl FnOnce(&mut [u32]) -> R) -> R {
+    ACC_TL.with(|c| {
+        let mut v = c.borrow_mut();
+        if v.len() < len {
+            v.resize(len, 0);
         }
+        let acc = &mut v[..len];
+        acc.fill(0);
+        f(acc)
+    })
+}
+
+/// How the validity mask enters the tiled accumulation.
+#[derive(Clone, Copy)]
+enum MaskK<'a> {
+    /// No mask: plain XOR+POPCNT.
+    None,
+    /// Per-input-row mask words, laid out like the input block.
+    PerRow(&'a [u64]),
+    /// One packed lane-mask row shared by every input row.
+    Shared(&'a [u64]),
+}
+
+/// The tiled core shared by all four forward kernels:
+/// `acc[i·n + j] += popc((x_i ⊕ w_j) [& m_i])` for `rows ≤ ROW_BLOCK`
+/// input rows against all `n` weight rows, K-tiled ([`K_TILE_WORDS`])
+/// with the inner reduction on the dispatched SIMD backend
+/// ([`simd::kernels`], hoisted to `kk` by the caller). Small fan-ins
+/// bypass the `fn`-pointer indirection (see [`SIMD_MIN_WORDS`]).
+fn accum_counts(
+    kk: &Kernels,
+    x: &[u64],
+    mk: MaskK<'_>,
+    wpr: usize,
+    rows: usize,
+    w: &BitMatrix,
+    n: usize,
+    acc: &mut [u32],
+) {
+    debug_assert_eq!(acc.len(), rows * n);
+    debug_assert_eq!(x.len(), rows * wpr);
+    let inline_scalar = kk.backend == Backend::Scalar || wpr < SIMD_MIN_WORDS;
+    let mut k0 = 0usize;
+    while k0 < wpr {
+        let kt = K_TILE_WORDS.min(wpr - k0);
+        for j in 0..n {
+            let wt = &w.row(j)[k0..k0 + kt];
+            for i in 0..rows {
+                let xt = &x[i * wpr + k0..i * wpr + k0 + kt];
+                let d = match mk {
+                    MaskK::None => {
+                        if inline_scalar {
+                            scalar::xor_popcnt(xt, wt)
+                        } else {
+                            (kk.xor_popcnt)(xt, wt)
+                        }
+                    }
+                    MaskK::PerRow(m) => {
+                        let mt = &m[i * wpr + k0..i * wpr + k0 + kt];
+                        if inline_scalar {
+                            scalar::xor_and_popcnt(xt, wt, mt)
+                        } else {
+                            (kk.xor_and_popcnt)(xt, wt, mt)
+                        }
+                    }
+                    MaskK::Shared(m) => {
+                        let mt = &m[k0..k0 + kt];
+                        if inline_scalar {
+                            scalar::xor_and_popcnt(xt, wt, mt)
+                        } else {
+                            (kk.xor_and_popcnt)(xt, wt, mt)
+                        }
+                    }
+                };
+                acc[i * n + j] += d as u32;
+            }
+        }
+        k0 += kt;
     }
 }
 
@@ -145,7 +185,9 @@ pub struct BitMatrix {
     pub cols: usize,
     /// words per row = ceil(cols / 64)
     pub wpr: usize,
-    pub words: Vec<u64>,
+    /// 64-byte-aligned packed words ([`AlignedWords`] derefs to `[u64]`,
+    /// so slice-style access works unchanged).
+    pub words: AlignedWords,
 }
 
 impl Clone for BitMatrix {
@@ -166,7 +208,7 @@ impl Clone for BitMatrix {
 impl BitMatrix {
     pub fn zeros(rows: usize, cols: usize) -> Self {
         let wpr = cols.div_ceil(64);
-        BitMatrix { rows, cols, wpr, words: vec![0u64; rows * wpr] }
+        BitMatrix { rows, cols, wpr, words: AlignedWords::zeroed(rows * wpr) }
     }
 
     /// Rebuild from raw packed words (e.g. checkpoint records). Tail bits
@@ -175,7 +217,7 @@ impl BitMatrix {
     pub fn from_words(rows: usize, cols: usize, words: Vec<u64>) -> Self {
         let wpr = cols.div_ceil(64);
         assert_eq!(words.len(), rows * wpr, "word count {} vs {rows}x{cols}", words.len());
-        let mut m = BitMatrix { rows, cols, wpr, words };
+        let mut m = BitMatrix { rows, cols, wpr, words: AlignedWords::from(words) };
         m.mask_tail();
         m
     }
@@ -269,6 +311,14 @@ impl BitMatrix {
     #[inline]
     pub fn row(&self, r: usize) -> &[u64] {
         &self.words[r * self.wpr..(r + 1) * self.wpr]
+    }
+
+    /// Mutable packed words of row `r` (for word-wise writers like the
+    /// graph executor's [`simd::pack_cmp_into`] threshold re-pack).
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [u64] {
+        let wpr = self.wpr;
+        &mut self.words[r * wpr..(r + 1) * wpr]
     }
 
     /// Read `len ≤ 56` bits starting at (r, c) as the low bits of a u64
@@ -396,10 +446,9 @@ impl BitMatrix {
         out
     }
 
-    /// [`Self::xnor_gemm_masked`] into a reusable output tensor. Same 2×2
-    /// register blocking as the unmasked GEMM (each x/mask/w word load is
-    /// reused twice, four popcount chains run independently) — this is the
-    /// `BoolConv2d` forward hot path.
+    /// [`Self::xnor_gemm_masked`] into a reusable output tensor. Same
+    /// tiled SIMD core as the unmasked GEMM (mask ANDed into the
+    /// reduction) — this is the `BoolConv2d` forward hot path.
     pub fn xnor_gemm_masked_into(&self, w: &BitMatrix, mask: &BitMatrix, out: &mut Tensor) {
         assert_eq!(self.cols, w.cols);
         assert_eq!((self.rows, self.cols), (mask.rows, mask.cols));
@@ -433,8 +482,8 @@ impl BitMatrix {
     /// result is bit-identical to the reference
     /// `nn::BoolLinear` → `nn::ThresholdAct` path for any threshold.
     ///
-    /// Same 2×2 register blocking as [`Self::xnor_gemm`]: each x/w word
-    /// load is reused twice and four popcount chains run independently
+    /// Same tiled SIMD reduction as [`Self::xnor_gemm`], with the
+    /// integer counts compared and packed straight back to bits
     /// (§Perf iteration log).
     pub fn xnor_threshold(&self, w: &BitMatrix, bias: Option<&BitMatrix>, thr: f32) -> BitMatrix {
         let mut out = BitMatrix::zeros(0, 0);
@@ -557,23 +606,7 @@ impl BitMatrix {
     /// tensors.
     pub fn decode_pm1_row(&self, r: usize, out: &mut [f32]) {
         assert_eq!(out.len(), self.cols, "decode buffer len");
-        let words = self.row(r);
-        let len = out.len();
-        let mut lane = 0usize;
-        'words: for &word in words {
-            for &byte in &word.to_le_bytes() {
-                let pat = &PM1_LUT[byte as usize];
-                if lane + 8 <= len {
-                    out[lane..lane + 8].copy_from_slice(pat);
-                } else {
-                    for k in 0..len - lane {
-                        out[lane + k] = pat[k];
-                    }
-                    break 'words;
-                }
-                lane += 8;
-            }
-        }
+        scalar::decode_pm1(out, self.row(r));
     }
 
     /// z @ e(W): real backward signal times embedded Boolean weights
@@ -665,146 +698,81 @@ impl BitMatrix {
 
 /// Eq. (3) forward over a contiguous row block. `x` holds `out.len()/n`
 /// packed input rows of `wpr` words; `out` is the matching (rows × n)
-/// output block. 2×2 register blocking: each x/w word load is reused twice
-/// and four popcount chains run independently (§Perf iteration log).
+/// output block. [`ROW_BLOCK`] input rows share each streamed weight
+/// K-tile and the reduction runs on the dispatched SIMD backend (see
+/// [`accum_counts`]).
 fn gemm_rows(x: &[u64], wpr: usize, w: &BitMatrix, m: usize, out: &mut [f32], n: usize) {
     let rows = if n == 0 { 0 } else { out.len() / n };
-    let xr = |i: usize| &x[i * wpr..(i + 1) * wpr];
-    let mut i = 0;
-    while i + 2 <= rows {
-        let x0 = xr(i);
-        let x1 = xr(i + 1);
-        let (o_lo, o_hi) = out[i * n..(i + 2) * n].split_at_mut(n);
-        let mut j = 0;
-        while j + 2 <= n {
-            let w0 = w.row(j);
-            let w1 = w.row(j + 1);
-            let (mut d00, mut d01, mut d10, mut d11) = (0u32, 0u32, 0u32, 0u32);
-            for k in 0..x0.len() {
-                let (a0, a1) = (x0[k], x1[k]);
-                let (c0, c1) = (w0[k], w1[k]);
-                d00 += (a0 ^ c0).count_ones();
-                d01 += (a0 ^ c1).count_ones();
-                d10 += (a1 ^ c0).count_ones();
-                d11 += (a1 ^ c1).count_ones();
-            }
-            o_lo[j] = (m as i64 - 2 * d00 as i64) as f32;
-            o_lo[j + 1] = (m as i64 - 2 * d01 as i64) as f32;
-            o_hi[j] = (m as i64 - 2 * d10 as i64) as f32;
-            o_hi[j + 1] = (m as i64 - 2 * d11 as i64) as f32;
-            j += 2;
-        }
-        // tail output column
-        while j < n {
-            let wr = w.row(j);
-            let (mut d0, mut d1) = (0u32, 0u32);
-            for k in 0..x0.len() {
-                d0 += (x0[k] ^ wr[k]).count_ones();
-                d1 += (x1[k] ^ wr[k]).count_ones();
-            }
-            o_lo[j] = (m as i64 - 2 * d0 as i64) as f32;
-            o_hi[j] = (m as i64 - 2 * d1 as i64) as f32;
-            j += 1;
-        }
-        i += 2;
+    if rows == 0 {
+        return;
     }
-    // tail input row
-    while i < rows {
-        let x0 = xr(i);
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let wr = w.row(j);
-            let mut disagree = 0u32;
-            for (&xw, &ww) in x0.iter().zip(wr) {
-                disagree += (xw ^ ww).count_ones();
+    let kk = simd::kernels();
+    with_acc(ROW_BLOCK.min(rows) * n, |acc| {
+        let mut i0 = 0usize;
+        while i0 < rows {
+            let bl = ROW_BLOCK.min(rows - i0);
+            let a = &mut acc[..bl * n];
+            if i0 > 0 {
+                a.fill(0);
             }
-            *o = (m as i64 - 2 * disagree as i64) as f32;
+            accum_counts(kk, &x[i0 * wpr..(i0 + bl) * wpr], MaskK::None, wpr, bl, w, n, a);
+            for i in 0..bl {
+                let orow = &mut out[(i0 + i) * n..(i0 + i + 1) * n];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o = (m as i64 - 2 * a[i * n + j] as i64) as f32;
+                }
+            }
+            i0 += bl;
         }
-        i += 1;
-    }
+    });
 }
 
-/// Masked Eq. (3) forward over a contiguous row block, 2×2 blocked like
-/// [`gemm_rows`] with a per-input-row valid count (`mk` mirrors `x`).
+/// Masked Eq. (3) forward over a contiguous row block: the same tiled
+/// SIMD core as [`gemm_rows`] with the per-input-row mask ANDed into the
+/// reduction and a per-row valid count (`mk` mirrors `x`). This is the
+/// `BoolConv2d` forward hot path.
 fn gemm_masked_rows(x: &[u64], mk: &[u64], wpr: usize, w: &BitMatrix, out: &mut [f32], n: usize) {
     let rows = if n == 0 { 0 } else { out.len() / n };
-    let xr = |i: usize| &x[i * wpr..(i + 1) * wpr];
-    let mr = |i: usize| &mk[i * wpr..(i + 1) * wpr];
-    let valid = |mrow: &[u64]| -> i64 { mrow.iter().map(|w| w.count_ones() as i64).sum() };
-    let mut i = 0;
-    while i + 2 <= rows {
-        let x0 = xr(i);
-        let x1 = xr(i + 1);
-        let m0 = mr(i);
-        let m1 = mr(i + 1);
-        let v0 = valid(m0);
-        let v1 = valid(m1);
-        let (o_lo, o_hi) = out[i * n..(i + 2) * n].split_at_mut(n);
-        let mut j = 0;
-        while j + 2 <= n {
-            let w0 = w.row(j);
-            let w1 = w.row(j + 1);
-            let (mut d00, mut d01, mut d10, mut d11) = (0u32, 0u32, 0u32, 0u32);
-            for k in 0..x0.len() {
-                let (a0, a1) = (x0[k], x1[k]);
-                let (c0, c1) = (w0[k], w1[k]);
-                let (v0k, v1k) = (m0[k], m1[k]);
-                d00 += ((a0 ^ c0) & v0k).count_ones();
-                d01 += ((a0 ^ c1) & v0k).count_ones();
-                d10 += ((a1 ^ c0) & v1k).count_ones();
-                d11 += ((a1 ^ c1) & v1k).count_ones();
-            }
-            o_lo[j] = (v0 - 2 * d00 as i64) as f32;
-            o_lo[j + 1] = (v0 - 2 * d01 as i64) as f32;
-            o_hi[j] = (v1 - 2 * d10 as i64) as f32;
-            o_hi[j + 1] = (v1 - 2 * d11 as i64) as f32;
-            j += 2;
-        }
-        while j < n {
-            let wr = w.row(j);
-            let (mut d0, mut d1) = (0u32, 0u32);
-            for k in 0..x0.len() {
-                d0 += ((x0[k] ^ wr[k]) & m0[k]).count_ones();
-                d1 += ((x1[k] ^ wr[k]) & m1[k]).count_ones();
-            }
-            o_lo[j] = (v0 - 2 * d0 as i64) as f32;
-            o_hi[j] = (v1 - 2 * d1 as i64) as f32;
-            j += 1;
-        }
-        i += 2;
+    if rows == 0 {
+        return;
     }
-    while i < rows {
-        let x0 = xr(i);
-        let m0 = mr(i);
-        let v0 = valid(m0);
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let wr = w.row(j);
-            let mut d = 0u32;
-            for k in 0..x0.len() {
-                d += ((x0[k] ^ wr[k]) & m0[k]).count_ones();
+    let kk = simd::kernels();
+    with_acc(ROW_BLOCK.min(rows) * n, |acc| {
+        let mut i0 = 0usize;
+        while i0 < rows {
+            let bl = ROW_BLOCK.min(rows - i0);
+            let a = &mut acc[..bl * n];
+            if i0 > 0 {
+                a.fill(0);
             }
-            *o = (v0 - 2 * d as i64) as f32;
+            let xb = &x[i0 * wpr..(i0 + bl) * wpr];
+            let mb = &mk[i0 * wpr..(i0 + bl) * wpr];
+            accum_counts(kk, xb, MaskK::PerRow(mb), wpr, bl, w, n, a);
+            for i in 0..bl {
+                let v = (kk.popcnt)(&mb[i * wpr..(i + 1) * wpr]) as i64;
+                let orow = &mut out[(i0 + i) * n..(i0 + i + 1) * n];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o = (v - 2 * a[i * n + j] as i64) as f32;
+                }
+            }
+            i0 += bl;
         }
-        i += 1;
-    }
+    });
 }
 
-/// Fused linear+threshold over a contiguous row block (`out` is the
-/// matching packed (rows × n) block with `wpr_out` words per row).
-fn threshold_rows(
-    x: &[u64],
-    wpr: usize,
-    w: &BitMatrix,
-    m: usize,
+/// Compare-and-pack one output row of the fused threshold kernels:
+/// bit j = `(base − 2·acc[j] + bias_j) as f32 >= thr`, written word-wise
+/// into `out` (every word of the row is overwritten — the `_into` reuse
+/// contract tolerates dirty output buffers).
+#[inline]
+fn pack_threshold_row(
+    acc: &[u32],
+    base: i64,
     bias: Option<&BitMatrix>,
     thr: f32,
     out: &mut [u64],
-    wpr_out: usize,
     n: usize,
 ) {
-    let rows = out.len() / wpr_out;
-    let xr = |i: usize| &x[i * wpr..(i + 1) * wpr];
     let bval = |j: usize| -> i64 {
         match bias {
             Some(b) => {
@@ -817,105 +785,63 @@ fn threshold_rows(
             None => 0,
         }
     };
-    let fire = |d: u32, b: i64| (((m as i64 - 2 * d as i64) + b) as f32) >= thr;
-    let mut i = 0;
-    while i + 2 <= rows {
-        let x0 = xr(i);
-        let x1 = xr(i + 1);
-        let base0 = i * wpr_out;
-        let base1 = (i + 1) * wpr_out;
-        let (mut word0, mut word1) = (0u64, 0u64);
-        let mut j = 0;
-        while j + 2 <= n {
-            let w0 = w.row(j);
-            let w1 = w.row(j + 1);
-            let (mut d00, mut d01, mut d10, mut d11) = (0u32, 0u32, 0u32, 0u32);
-            for k in 0..x0.len() {
-                let (a0, a1) = (x0[k], x1[k]);
-                let (c0, c1) = (w0[k], w1[k]);
-                d00 += (a0 ^ c0).count_ones();
-                d01 += (a0 ^ c1).count_ones();
-                d10 += (a1 ^ c0).count_ones();
-                d11 += (a1 ^ c1).count_ones();
-            }
-            let (b0, b1) = (bval(j), bval(j + 1));
-            if fire(d00, b0) {
-                word0 |= 1u64 << (j % 64);
-            }
-            if fire(d01, b1) {
-                word0 |= 1u64 << ((j + 1) % 64);
-            }
-            if fire(d10, b0) {
-                word1 |= 1u64 << (j % 64);
-            }
-            if fire(d11, b1) {
-                word1 |= 1u64 << ((j + 1) % 64);
-            }
-            if (j + 1) % 64 == 63 {
-                out[base0 + j / 64] = word0;
-                out[base1 + j / 64] = word1;
-                word0 = 0;
-                word1 = 0;
-            }
-            j += 2;
+    let mut word = 0u64;
+    for j in 0..n {
+        let s = (base - 2 * acc[j] as i64) + bval(j);
+        if (s as f32) >= thr {
+            word |= 1u64 << (j % 64);
         }
-        // tail output column
-        while j < n {
-            let wr = w.row(j);
-            let (mut d0, mut d1) = (0u32, 0u32);
-            for k in 0..x0.len() {
-                d0 += (x0[k] ^ wr[k]).count_ones();
-                d1 += (x1[k] ^ wr[k]).count_ones();
-            }
-            let b = bval(j);
-            if fire(d0, b) {
-                word0 |= 1u64 << (j % 64);
-            }
-            if fire(d1, b) {
-                word1 |= 1u64 << (j % 64);
-            }
-            if j % 64 == 63 {
-                out[base0 + j / 64] = word0;
-                out[base1 + j / 64] = word1;
-                word0 = 0;
-                word1 = 0;
-            }
-            j += 1;
+        if j % 64 == 63 {
+            out[j / 64] = word;
+            word = 0;
         }
-        if n % 64 != 0 {
-            out[base0 + (n - 1) / 64] = word0;
-            out[base1 + (n - 1) / 64] = word1;
-        }
-        i += 2;
     }
-    // tail input row
-    while i < rows {
-        let x0 = xr(i);
-        let base = i * wpr_out;
-        let mut word = 0u64;
-        for j in 0..n {
-            let wr = w.row(j);
-            let mut d = 0u32;
-            for (&xw, &ww) in x0.iter().zip(wr) {
-                d += (xw ^ ww).count_ones();
-            }
-            if fire(d, bval(j)) {
-                word |= 1u64 << (j % 64);
-            }
-            if j % 64 == 63 {
-                out[base + j / 64] = word;
-                word = 0;
-            }
-        }
-        if n % 64 != 0 {
-            out[base + (n - 1) / 64] = word;
-        }
-        i += 1;
+    if n % 64 != 0 {
+        out[(n - 1) / 64] = word;
     }
 }
 
+/// Fused linear+threshold over a contiguous row block (`out` is the
+/// matching packed (rows × n) block with `wpr_out` words per row): the
+/// tiled SIMD reduction of [`accum_counts`], then a compare-and-pack
+/// pass over the integer counts.
+fn threshold_rows(
+    x: &[u64],
+    wpr: usize,
+    w: &BitMatrix,
+    m: usize,
+    bias: Option<&BitMatrix>,
+    thr: f32,
+    out: &mut [u64],
+    wpr_out: usize,
+    n: usize,
+) {
+    let rows = out.len() / wpr_out;
+    if rows == 0 {
+        return;
+    }
+    let kk = simd::kernels();
+    with_acc(ROW_BLOCK.min(rows) * n, |acc| {
+        let mut i0 = 0usize;
+        while i0 < rows {
+            let bl = ROW_BLOCK.min(rows - i0);
+            let a = &mut acc[..bl * n];
+            if i0 > 0 {
+                a.fill(0);
+            }
+            accum_counts(kk, &x[i0 * wpr..(i0 + bl) * wpr], MaskK::None, wpr, bl, w, n, a);
+            for i in 0..bl {
+                let orow = &mut out[(i0 + i) * wpr_out..(i0 + i + 1) * wpr_out];
+                pack_threshold_row(&a[i * n..(i + 1) * n], m as i64, bias, thr, orow, n);
+            }
+            i0 += bl;
+        }
+    });
+}
+
 /// Masked fused linear+threshold over a contiguous row block (`valid` is
-/// the precomputed popcount of the shared lane mask).
+/// the precomputed popcount of the shared lane mask): same structure as
+/// [`threshold_rows`] with the lane mask ANDed into the reduction.
 fn threshold_masked_rows(
     x: &[u64],
     wpr: usize,
@@ -929,38 +855,42 @@ fn threshold_masked_rows(
     n: usize,
 ) {
     let rows = out.len() / wpr_out;
-    for i in 0..rows {
-        let x0 = &x[i * wpr..(i + 1) * wpr];
-        let base = i * wpr_out;
-        let mut word = 0u64;
-        for j in 0..n {
-            let wr = w.row(j);
-            let mut d = 0i64;
-            for ((&xw, &ww), &mw) in x0.iter().zip(wr).zip(lane_mask) {
-                d += ((xw ^ ww) & mw).count_ones() as i64;
-            }
-            let mut s = valid - 2 * d;
-            if let Some(b) = bias {
-                s += if b.get(0, j) { 1 } else { -1 };
-            }
-            if (s as f32) >= thr {
-                word |= 1u64 << (j % 64);
-            }
-            if j % 64 == 63 {
-                out[base + j / 64] = word;
-                word = 0;
-            }
-        }
-        if n % 64 != 0 {
-            out[base + (n - 1) / 64] = word;
-        }
+    if rows == 0 {
+        return;
     }
+    let kk = simd::kernels();
+    with_acc(ROW_BLOCK.min(rows) * n, |acc| {
+        let mut i0 = 0usize;
+        while i0 < rows {
+            let bl = ROW_BLOCK.min(rows - i0);
+            let a = &mut acc[..bl * n];
+            if i0 > 0 {
+                a.fill(0);
+            }
+            let xb = &x[i0 * wpr..(i0 + bl) * wpr];
+            accum_counts(kk, xb, MaskK::Shared(lane_mask), wpr, bl, w, n, a);
+            for i in 0..bl {
+                let orow = &mut out[(i0 + i) * wpr_out..(i0 + i + 1) * wpr_out];
+                pack_threshold_row(&a[i * n..(i + 1) * n], valid, bias, thr, orow, n);
+            }
+            i0 += bl;
+        }
+    });
 }
 
 /// G_X rows: `z` holds `out.len()/m` signal rows of width `n`; `w` is the
-/// full weight matrix. Accumulates into a pre-zeroed output block.
+/// full weight matrix. Accumulates into a pre-zeroed output block via the
+/// dispatched `axpy_pm1` (LUT scalar / 8-lane AVX2 — identical per-lane
+/// IEEE ops, see [`simd`]); rows narrower than a vector's worth of words
+/// inline the scalar path directly.
 fn bwd_input_rows(w: &BitMatrix, z: &[f32], n: usize, out: &mut [f32], m: usize) {
     let rows = if n == 0 { 0 } else { z.len() / n };
+    let kk = simd::kernels();
+    let axpy = if kk.backend == Backend::Scalar || m < 64 {
+        scalar::axpy_pm1
+    } else {
+        kk.axpy_pm1
+    };
     for i in 0..rows {
         let zr = &z[i * n..(i + 1) * n];
         let orow = &mut out[i * m..(i + 1) * m];
@@ -968,7 +898,7 @@ fn bwd_input_rows(w: &BitMatrix, z: &[f32], n: usize, out: &mut [f32], m: usize)
             if zv == 0.0 {
                 continue;
             }
-            axpy_pm1_row(orow, w.row(j), zv);
+            axpy(orow, w.row(j), zv);
         }
     }
 }
@@ -976,7 +906,8 @@ fn bwd_input_rows(w: &BitMatrix, z: &[f32], n: usize, out: &mut [f32], m: usize)
 /// G_W rows: output units [j0, j0 + out.len()/m) of the (N × M) weight
 /// vote. j-outer / k-inner: the accumulator row stays L1-resident while
 /// the (much smaller) packed input rows stream through (§Perf). With
-/// `mask`, lanes with mask bit 0 vote 0 (the 𝕄 zero).
+/// `mask`, lanes with mask bit 0 vote 0 (the 𝕄 zero). The per-row
+/// update runs on the dispatched `axpy_pm1[_masked]`.
 fn bwd_weight_rows(
     x: &BitMatrix,
     z: &[f32],
@@ -988,6 +919,10 @@ fn bwd_weight_rows(
 ) {
     let rows = if m == 0 { 0 } else { out.len() / m };
     let b = x.rows;
+    let kk = simd::kernels();
+    let small = kk.backend == Backend::Scalar || m < 64;
+    let axpy = if small { scalar::axpy_pm1 } else { kk.axpy_pm1 };
+    let axpy_masked = if small { scalar::axpy_pm1_masked } else { kk.axpy_pm1_masked };
     for jj in 0..rows {
         let j = j0 + jj;
         let orow = &mut out[jj * m..(jj + 1) * m];
@@ -997,8 +932,8 @@ fn bwd_weight_rows(
                 continue;
             }
             match mask {
-                None => axpy_pm1_row(orow, x.row(k), zv),
-                Some(mk) => axpy_pm1_masked_row(orow, x.row(k), mk.row(k), zv),
+                None => axpy(orow, x.row(k), zv),
+                Some(mk) => axpy_masked(orow, x.row(k), mk.row(k), zv),
             }
         }
     }
@@ -1097,9 +1032,9 @@ mod tests {
         assert_eq!(x.xnor_gemm_masked(&w, &mask), x.xnor_gemm(&w));
     }
 
-    /// The 2×2-blocked masked GEMM against the naive per-bit reference:
-    /// odd row counts (tail input row), odd output counts (tail column),
-    /// odd fan-in (tail word), and random masks.
+    /// The tiled masked GEMM against the naive per-bit reference:
+    /// odd row counts (row-block tail), odd output counts, odd fan-in
+    /// (tail word), and random masks.
     #[test]
     fn blocked_masked_gemm_matches_naive_reference() {
         let mut rng = Rng::new(31);

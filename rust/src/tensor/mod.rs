@@ -11,10 +11,18 @@
 //!
 //! The two are exactly interconvertible through the ±1 embedding
 //! (Proposition A.2), which the property tests exercise.
+//!
+//! The packed kernels' inner loops run on the runtime-dispatched
+//! [`simd`] backend (AVX2 Harley–Seal popcount / NEON `vcntq_u8` /
+//! portable scalar, selected once at startup, `BOLD_SIMD` override),
+//! over 64-byte-aligned [`AlignedWords`] storage — bit-exact across
+//! backends (DESIGN.md §SIMD-Backend).
 
 mod bitmatrix;
+pub mod simd;
 #[allow(clippy::module_inception)]
 mod tensor;
 
 pub use bitmatrix::BitMatrix;
+pub use simd::AlignedWords;
 pub use tensor::Tensor;

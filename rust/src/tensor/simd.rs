@@ -1,0 +1,1222 @@
+//! Runtime-dispatched SIMD kernel backend + aligned packed storage
+//! (DESIGN.md §SIMD-Backend).
+//!
+//! Every hot bit-kernel in the crate — the six packed [`BitMatrix`]
+//! kernels, the graph executor's threshold re-pack and the
+//! [`crate::optim::BooleanOptimizer`] flip-mask scan — routes its inner
+//! loop through the [`Kernels`] dispatch table returned by [`kernels`].
+//! The table is selected **once** per process:
+//!
+//! * `x86_64` with AVX2 detected → vpshufb-LUT popcount with a
+//!   Harley–Seal carry-save reduction over 256-bit lanes (4 words per
+//!   vector, 64 words per CSA block);
+//! * `aarch64` → NEON `vcntq_u8` byte-popcount for the popcount family
+//!   (the f32 kernels stay scalar there);
+//! * anywhere else, or `BOLD_SIMD=scalar` → the portable [`scalar`]
+//!   reference backend.
+//!
+//! `BOLD_SIMD={auto,scalar}` is the supported contract (`avx2`/`neon`
+//! force a specific backend when the CPU has it, else fall back to
+//! scalar). Results are **bit-exact across backends**: the popcount
+//! kernels sum integers (order-independent), and the f32 kernels
+//! (`axpy_pm1*`, `cmp_mask64`, `flip_scan_word`) perform the identical
+//! IEEE operations in the identical per-lane order as the scalar
+//! reference — no FMA contraction, no reassociation — so
+//! `tests/simd_parity.rs` can assert equality to the last bit for every
+//! routed kernel. (The masked axpy matches scalar for all finite
+//! signals; like the scalar LUT path it multiplies by a 0.0/1.0 mask.)
+//!
+//! [`AlignedWords`] is the storage side of the contract: `BitMatrix`
+//! word buffers are 64-byte aligned (cache line / full vector width), so
+//! streaming loads never straddle a line at the buffer base. Kernels
+//! still use unaligned loads — a row starts at `r·wpr` words, which is
+//! not a vector boundary for odd `wpr` — but the aligned, block-sized
+//! allocation keeps split-line accesses rare and leaves the door open
+//! for aligned-load fast paths.
+//!
+//! [`BitMatrix`]: crate::tensor::BitMatrix
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+// ---------------------------------------------------------------------------
+// aligned storage
+// ---------------------------------------------------------------------------
+
+/// Words per 64-byte alignment block.
+const BLOCK_WORDS: usize = 8;
+
+/// One cache-line-sized, cache-line-aligned chunk of packed words. The
+/// field is only ever read through the `Deref` pointer cast, which the
+/// dead-code analysis cannot see.
+#[derive(Clone, Copy)]
+#[repr(C, align(64))]
+struct Block(#[allow(dead_code)] [u64; BLOCK_WORDS]);
+
+/// A `Vec<u64>`-like buffer whose base address is 64-byte aligned: the
+/// backing store of [`crate::tensor::BitMatrix`]. Dereferences to
+/// `[u64]`, so slice reads/writes, `iter()`, `copy_from_slice` and
+/// indexing all work as before; the handful of growth methods mirror
+/// their `Vec` counterparts. Equality and `Debug` see exactly the
+/// `len()` live words (capacity padding is ignored).
+pub struct AlignedWords {
+    blocks: Vec<Block>,
+    len: usize,
+}
+
+impl AlignedWords {
+    pub fn new() -> Self {
+        AlignedWords { blocks: Vec::new(), len: 0 }
+    }
+
+    /// `n` words, all zero.
+    pub fn zeroed(n: usize) -> Self {
+        AlignedWords { blocks: vec![Block([0; BLOCK_WORDS]); n.div_ceil(BLOCK_WORDS)], len: n }
+    }
+
+    /// Grow the block store so at least `n` words are addressable.
+    fn reserve_words(&mut self, n: usize) {
+        let blocks = n.div_ceil(BLOCK_WORDS);
+        if blocks > self.blocks.len() {
+            self.blocks.resize(blocks, Block([0; BLOCK_WORDS]));
+        }
+    }
+
+    /// `Vec::resize` semantics: existing words keep their values, new
+    /// words (including stale capacity words) are set to `v`.
+    pub fn resize(&mut self, n: usize, v: u64) {
+        let old = self.len;
+        if n > old {
+            self.reserve_words(n);
+            self.len = n;
+            self[old..n].fill(v);
+        } else {
+            self.len = n;
+        }
+    }
+
+    /// Drop all words, keeping the allocation.
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// Append a slice of words (`Vec::extend_from_slice`).
+    pub fn extend_from_slice(&mut self, s: &[u64]) {
+        let old = self.len;
+        let n = old + s.len();
+        self.reserve_words(n);
+        self.len = n;
+        self[old..n].copy_from_slice(s);
+    }
+}
+
+impl Default for AlignedWords {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::ops::Deref for AlignedWords {
+    type Target = [u64];
+    fn deref(&self) -> &[u64] {
+        // SAFETY: `blocks` owns `blocks.len()·BLOCK_WORDS ≥ len`
+        // contiguous, initialised u64s ([u64; 8] in a repr(C) wrapper has
+        // plain array layout); an empty Vec's dangling pointer is valid
+        // for a zero-length slice.
+        unsafe { std::slice::from_raw_parts(self.blocks.as_ptr() as *const u64, self.len) }
+    }
+}
+
+impl std::ops::DerefMut for AlignedWords {
+    fn deref_mut(&mut self) -> &mut [u64] {
+        // SAFETY: as in `deref`, plus `&mut self` gives unique access.
+        unsafe { std::slice::from_raw_parts_mut(self.blocks.as_mut_ptr() as *mut u64, self.len) }
+    }
+}
+
+impl Clone for AlignedWords {
+    fn clone(&self) -> Self {
+        AlignedWords { blocks: self.blocks.clone(), len: self.len }
+    }
+
+    /// Reuses the existing block allocation (the layer caches rely on
+    /// `BitMatrix::clone_from` staying allocation-free at steady state).
+    fn clone_from(&mut self, src: &Self) {
+        self.blocks.clone_from(&src.blocks);
+        self.len = src.len;
+    }
+}
+
+impl PartialEq for AlignedWords {
+    fn eq(&self, other: &Self) -> bool {
+        **self == **other
+    }
+}
+
+impl Eq for AlignedWords {}
+
+impl std::fmt::Debug for AlignedWords {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(&**self, f)
+    }
+}
+
+impl From<Vec<u64>> for AlignedWords {
+    fn from(v: Vec<u64>) -> Self {
+        let mut a = AlignedWords::new();
+        a.extend_from_slice(&v);
+        a
+    }
+}
+
+impl<'a> IntoIterator for &'a AlignedWords {
+    type Item = &'a u64;
+    type IntoIter = std::slice::Iter<'a, u64>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dispatch
+// ---------------------------------------------------------------------------
+
+/// Kernel backend identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Portable reference implementation (always available).
+    Scalar,
+    /// x86_64 AVX2: vpshufb-LUT + Harley–Seal popcount, 8-lane f32 ops.
+    Avx2,
+    /// aarch64 NEON `vcntq_u8` popcount family (f32 kernels stay scalar).
+    Neon,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+}
+
+/// The dispatch table: one entry per primitive the routed kernels need.
+/// Entries are plain `fn` pointers selected once (see [`kernels`]); the
+/// kernel cores hoist the table lookup out of their inner loops.
+pub struct Kernels {
+    pub backend: Backend,
+    /// Σ popcount(a\[i\] ^ b\[i\]) over equal-length slices.
+    pub xor_popcnt: fn(&[u64], &[u64]) -> u64,
+    /// Σ popcount((a\[i\] ^ b\[i\]) & m\[i\]).
+    pub xor_and_popcnt: fn(&[u64], &[u64], &[u64]) -> u64,
+    /// Σ popcount(a\[i\]).
+    pub popcnt: fn(&[u64]) -> u64,
+    /// out\[k\] += zv · e(bit k) for one packed row (e = ±1 embedding).
+    pub axpy_pm1: fn(&mut [f32], &[u64], f32),
+    /// out\[k\] += zv · e(bit k) · mask_k (mask bit 0 ⇒ lane adds ±0).
+    pub axpy_pm1_masked: fn(&mut [f32], &[u64], &[u64], f32),
+    /// Bit i of the result = `data[i] >= thr` (or `<=` when flipped),
+    /// for up to 64 contiguous f32 values; unused high bits are 0.
+    pub cmp_mask64: fn(&[f32], f32, bool) -> u64,
+    /// One 64-lane Boolean-optimizer word scan (Eq. 9–10): per lane
+    /// `m = β·accum + η·grad` (then optional ±κ clamp), flip when
+    /// xnor(m, w) holds with |m| ≥ 1; writes the updated accumulator
+    /// (0.0 at flipped lanes) and returns the flip mask. `grad.len()`
+    /// (= `accum.len()` ≤ 64) selects the live lanes of `word`.
+    pub flip_scan_word: fn(u64, &[f32], &mut [f32], f32, f32, Option<f32>) -> u64,
+}
+
+static SCALAR: Kernels = Kernels {
+    backend: Backend::Scalar,
+    xor_popcnt: scalar::xor_popcnt,
+    xor_and_popcnt: scalar::xor_and_popcnt,
+    popcnt: scalar::popcnt,
+    axpy_pm1: scalar::axpy_pm1,
+    axpy_pm1_masked: scalar::axpy_pm1_masked,
+    cmp_mask64: scalar::cmp_mask64,
+    flip_scan_word: scalar::flip_scan_word,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: Kernels = Kernels {
+    backend: Backend::Avx2,
+    xor_popcnt: avx2::xor_popcnt,
+    xor_and_popcnt: avx2::xor_and_popcnt,
+    popcnt: avx2::popcnt,
+    axpy_pm1: avx2::axpy_pm1,
+    axpy_pm1_masked: avx2::axpy_pm1_masked,
+    cmp_mask64: avx2::cmp_mask64,
+    flip_scan_word: avx2::flip_scan_word,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: Kernels = Kernels {
+    backend: Backend::Neon,
+    xor_popcnt: neon::xor_popcnt,
+    xor_and_popcnt: neon::xor_and_popcnt,
+    popcnt: neon::popcnt,
+    // The popcount family dominates the routed kernels; the f32
+    // primitives use the portable path on aarch64 (still bit-exact).
+    axpy_pm1: scalar::axpy_pm1,
+    axpy_pm1_masked: scalar::axpy_pm1_masked,
+    cmp_mask64: scalar::cmp_mask64,
+    flip_scan_word: scalar::flip_scan_word,
+};
+
+/// Table for an explicitly requested backend, if this CPU supports it.
+fn table_for(b: Backend) -> Option<&'static Kernels> {
+    match b {
+        Backend::Scalar => Some(&SCALAR),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => {
+            if std::is_x86_feature_detected!("avx2") {
+                Some(&AVX2)
+            } else {
+                None
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => Some(&NEON),
+        #[allow(unreachable_patterns)] // foreign-arch variants remain
+        _ => None,
+    }
+}
+
+/// Best backend this CPU supports (ignores the env override).
+fn best() -> &'static Kernels {
+    #[cfg(target_arch = "x86_64")]
+    if let Some(t) = table_for(Backend::Avx2) {
+        return t;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if let Some(t) = table_for(Backend::Neon) {
+        return t;
+    }
+    &SCALAR
+}
+
+/// Process-wide table: `BOLD_SIMD` read once (`scalar` forces the
+/// portable path for A/B and determinism runs; `auto`/unset picks the
+/// best detected backend; an explicit `avx2`/`neon` the CPU lacks falls
+/// back to scalar).
+fn global() -> &'static Kernels {
+    static ACTIVE: OnceLock<&'static Kernels> = OnceLock::new();
+    *ACTIVE.get_or_init(|| match std::env::var("BOLD_SIMD").ok().as_deref().map(str::trim) {
+        Some("scalar") => &SCALAR,
+        Some("avx2") => table_for(Backend::Avx2).unwrap_or(&SCALAR),
+        Some("neon") => table_for(Backend::Neon).unwrap_or(&SCALAR),
+        _ => best(),
+    })
+}
+
+thread_local! {
+    static OVERRIDE: Cell<Option<&'static Kernels>> = const { Cell::new(None) };
+}
+
+/// The active dispatch table: the innermost [`with_backend`] override on
+/// this thread, else the process-wide selection. Kernel cores call this
+/// once per invocation and use the returned table in their loops.
+pub fn kernels() -> &'static Kernels {
+    OVERRIDE.with(|o| o.get()).unwrap_or_else(global)
+}
+
+/// The active backend (what [`kernels`] dispatches to).
+pub fn active() -> Backend {
+    kernels().backend
+}
+
+/// Name of the active backend (for bench JSON / logs).
+pub fn backend_name() -> &'static str {
+    active().name()
+}
+
+/// Best backend the CPU supports, independent of `BOLD_SIMD` — what
+/// `auto` would pick (the A/B partner of [`Backend::Scalar`] in the
+/// parity suite and benches).
+pub fn auto_backend() -> Backend {
+    best().backend
+}
+
+/// Whether `b` can run on this CPU.
+pub fn supported(b: Backend) -> bool {
+    table_for(b).is_some()
+}
+
+/// Run `f` with kernels dispatched to `b` **on this thread** (panics if
+/// the CPU lacks `b`). Test/bench hook, mirroring
+/// [`crate::util::pool::with_thread_budget`]: pool shards run on worker
+/// threads that keep the process-wide backend, so force
+/// `with_thread_budget(1, ..)` when a single backend must cover the
+/// whole computation. (Mixing backends across shards is still bit-exact
+/// — that is the point of the parity suite — but A/B timing wants one.)
+pub fn with_backend<R>(b: Backend, f: impl FnOnce() -> R) -> R {
+    let table = table_for(b)
+        .unwrap_or_else(|| panic!("SIMD backend {:?} is not supported on this CPU", b));
+    struct Restore(Option<&'static Kernels>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            OVERRIDE.with(|o| o.set(self.0));
+        }
+    }
+    let _restore = Restore(OVERRIDE.with(|o| o.replace(Some(table))));
+    f()
+}
+
+// ---------------------------------------------------------------------------
+// shared helpers
+// ---------------------------------------------------------------------------
+
+/// OR `len ≤ 64` result bits (`w`, low bits) into `out` at row-local bit
+/// offset `pos`. `out` must be pre-zeroed over the target range.
+#[inline]
+fn deposit(out: &mut [u64], pos: usize, w: u64, len: usize) {
+    if len == 0 {
+        return;
+    }
+    let wi = pos / 64;
+    let off = pos % 64;
+    out[wi] |= w << off;
+    if off != 0 && off + len > 64 {
+        out[wi + 1] |= w >> (64 - off);
+    }
+}
+
+/// Pack `data[i] >= thr` (or `<=` when `flip`) into `out` starting at
+/// bit offset `bit0`, via the active backend's [`Kernels::cmp_mask64`].
+/// `out` must be pre-zeroed over `[bit0, bit0 + data.len())` — the
+/// executor's `zero_resize`d activation rows satisfy this. This is the
+/// graph executor's threshold re-pack primitive (f32 counts → bits).
+pub fn pack_cmp_into(out: &mut [u64], bit0: usize, data: &[f32], thr: f32, flip: bool) {
+    let cmp = kernels().cmp_mask64;
+    let mut pos = bit0;
+    for chunk in data.chunks(64) {
+        deposit(out, pos, cmp(chunk, thr, flip), chunk.len());
+        pos += chunk.len();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scalar backend (the portable reference all others must match)
+// ---------------------------------------------------------------------------
+
+/// Portable reference backend. `pub` so kernel cores can inline these
+/// directly on their small-operand fast paths (a `fn`-pointer call per
+/// handful of words would cost more than the work) — the dispatch table
+/// is the route for everything large enough to vectorise.
+pub mod scalar {
+    /// Byte → 8-lane ±1 pattern (bit=1 ↦ +1). 8 KiB, cache-resident.
+    static PM1_LUT: [[f32; 8]; 256] = {
+        let mut lut = [[0.0f32; 8]; 256];
+        let mut b = 0usize;
+        while b < 256 {
+            let mut k = 0usize;
+            while k < 8 {
+                lut[b][k] = if (b >> k) & 1 == 1 { 1.0 } else { -1.0 };
+                k += 1;
+            }
+            b += 1;
+        }
+        lut
+    };
+
+    /// Byte → 8-lane 0/1 mask pattern (for the 𝕄-zero masked variants).
+    static BIT_LUT: [[f32; 8]; 256] = {
+        let mut lut = [[0.0f32; 8]; 256];
+        let mut b = 0usize;
+        while b < 256 {
+            let mut k = 0usize;
+            while k < 8 {
+                lut[b][k] = ((b >> k) & 1) as f32;
+                k += 1;
+            }
+            b += 1;
+        }
+        lut
+    };
+
+    /// 4-way unrolled XOR+popcount reduction: four independent counter
+    /// chains keep the popcount ALU busy (the ILP the old hand-blocked
+    /// GEMM got from interleaving four output cells).
+    #[inline]
+    pub fn xor_popcnt(a: &[u64], b: &[u64]) -> u64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let (mut c0, mut c1, mut c2, mut c3) = (0u64, 0u64, 0u64, 0u64);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            c0 += (a[i] ^ b[i]).count_ones() as u64;
+            c1 += (a[i + 1] ^ b[i + 1]).count_ones() as u64;
+            c2 += (a[i + 2] ^ b[i + 2]).count_ones() as u64;
+            c3 += (a[i + 3] ^ b[i + 3]).count_ones() as u64;
+            i += 4;
+        }
+        while i < n {
+            c0 += (a[i] ^ b[i]).count_ones() as u64;
+            i += 1;
+        }
+        c0 + c1 + c2 + c3
+    }
+
+    /// Masked XOR+popcount: Σ popcount((a ^ b) & m).
+    #[inline]
+    pub fn xor_and_popcnt(a: &[u64], b: &[u64], m: &[u64]) -> u64 {
+        debug_assert!(a.len() == b.len() && a.len() == m.len());
+        let n = a.len();
+        let (mut c0, mut c1) = (0u64, 0u64);
+        let mut i = 0usize;
+        while i + 2 <= n {
+            c0 += ((a[i] ^ b[i]) & m[i]).count_ones() as u64;
+            c1 += ((a[i + 1] ^ b[i + 1]) & m[i + 1]).count_ones() as u64;
+            i += 2;
+        }
+        if i < n {
+            c0 += ((a[i] ^ b[i]) & m[i]).count_ones() as u64;
+        }
+        c0 + c1
+    }
+
+    /// Plain popcount reduction.
+    #[inline]
+    pub fn popcnt(a: &[u64]) -> u64 {
+        a.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// out\[k\] += zv · e(bits) for one packed row, via the byte LUT.
+    pub fn axpy_pm1(out: &mut [f32], words: &[u64], zv: f32) {
+        let len = out.len();
+        let mut lane = 0usize;
+        'words: for &word in words {
+            let bytes = word.to_le_bytes();
+            for &byte in &bytes {
+                let pat = &PM1_LUT[byte as usize];
+                if lane + 8 <= len {
+                    let o = &mut out[lane..lane + 8];
+                    for k in 0..8 {
+                        o[k] += zv * pat[k];
+                    }
+                } else {
+                    for k in 0..len - lane {
+                        out[lane + k] += zv * pat[k];
+                    }
+                    break 'words;
+                }
+                lane += 8;
+            }
+        }
+    }
+
+    /// out\[k\] += zv · e(bits)·mask for one packed row (masked lanes
+    /// add ±0, exactly like multiplying by the 0.0 LUT entry).
+    pub fn axpy_pm1_masked(out: &mut [f32], words: &[u64], mask: &[u64], zv: f32) {
+        let len = out.len();
+        let mut lane = 0usize;
+        'words: for (&word, &mword) in words.iter().zip(mask) {
+            let wb = word.to_le_bytes();
+            let mb = mword.to_le_bytes();
+            for (&byte, &mbyte) in wb.iter().zip(&mb) {
+                let pat = &PM1_LUT[byte as usize];
+                let mpat = &BIT_LUT[mbyte as usize];
+                if lane + 8 <= len {
+                    let o = &mut out[lane..lane + 8];
+                    for k in 0..8 {
+                        o[k] += zv * pat[k] * mpat[k];
+                    }
+                } else {
+                    for k in 0..len - lane {
+                        out[lane + k] += zv * pat[k] * mpat[k];
+                    }
+                    break 'words;
+                }
+                lane += 8;
+            }
+        }
+    }
+
+    /// out\[k\] = e(bit k): decode one packed row into a ±1 buffer via
+    /// the byte LUT (the FP head's streaming decode).
+    pub fn decode_pm1(out: &mut [f32], words: &[u64]) {
+        let len = out.len();
+        let mut lane = 0usize;
+        'words: for &word in words {
+            for &byte in &word.to_le_bytes() {
+                let pat = &PM1_LUT[byte as usize];
+                if lane + 8 <= len {
+                    out[lane..lane + 8].copy_from_slice(pat);
+                } else {
+                    for k in 0..len - lane {
+                        out[lane + k] = pat[k];
+                    }
+                    break 'words;
+                }
+                lane += 8;
+            }
+        }
+    }
+
+    /// Bit i = `data[i] >= thr` (`<=` when `flip`); i < 64.
+    #[inline]
+    pub fn cmp_mask64(data: &[f32], thr: f32, flip: bool) -> u64 {
+        debug_assert!(data.len() <= 64);
+        let mut w = 0u64;
+        if flip {
+            for (i, &v) in data.iter().enumerate() {
+                if v <= thr {
+                    w |= 1u64 << i;
+                }
+            }
+        } else {
+            for (i, &v) in data.iter().enumerate() {
+                if v >= thr {
+                    w |= 1u64 << i;
+                }
+            }
+        }
+        w
+    }
+
+    /// The Eq. 9–10 word scan (see [`super::Kernels::flip_scan_word`]).
+    pub fn flip_scan_word(
+        word: u64,
+        grad: &[f32],
+        accum: &mut [f32],
+        beta: f32,
+        lr: f32,
+        clip: Option<f32>,
+    ) -> u64 {
+        debug_assert!(grad.len() <= 64 && grad.len() == accum.len());
+        let mut mask = 0u64;
+        for lane in 0..grad.len() {
+            // m ← β·m + η·q  (Eq. 10)
+            let mut m = beta * accum[lane] + lr * grad[lane];
+            if let Some(k) = clip {
+                m = m.clamp(-k, k);
+            }
+            // Eq. (9): flip when xnor(m, w) = T with |m| ≥ 1 —
+            // i.e. m ≥ 1 on set bits (w=+1), m ≤ −1 on clear bits.
+            let set = (word >> lane) & 1 == 1;
+            if (set && m >= 1.0) || (!set && m <= -1.0) {
+                mask |= 1u64 << lane;
+                accum[lane] = 0.0; // reset (Algorithm 1 l.12)
+            } else {
+                accum[lane] = m;
+            }
+        }
+        mask
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 backend (x86_64, runtime-detected)
+// ---------------------------------------------------------------------------
+
+/// AVX2 implementations. Every `pub fn` here is a safe wrapper whose
+/// inner `#[target_feature(enable = "avx2")]` body is only reachable
+/// when this table was installed, i.e. after `is_x86_feature_detected!`
+/// succeeded — that detection is the safety argument for each wrapper.
+///
+/// The popcount family uses the vpshufb nibble-LUT byte popcount
+/// (`popcnt256`) with a Harley–Seal carry-save adder cascade over blocks
+/// of 16 × 256-bit vectors (64 words): the CSA defers the byte-popcount
+/// to one in sixteen vectors, counting ~4 words per cycle. All integer,
+/// so any split (block / vector / scalar tail) is bit-exact.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::scalar;
+    use core::arch::x86_64::*;
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn loadu(p: &[u64], i: usize) -> __m256i {
+        debug_assert!(i + 4 <= p.len());
+        _mm256_loadu_si256(p.as_ptr().add(i) as *const __m256i)
+    }
+
+    /// Per-64-bit-lane byte popcount of `v` (Mula's vpshufb algorithm):
+    /// nibble LUT lookups summed with `vpsadbw` into 4 u64 lanes.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcnt256(v: __m256i) -> __m256i {
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low_mask = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(v, low_mask);
+        let hi = _mm256_and_si256(_mm256_srli_epi32::<4>(v), low_mask);
+        let cnt =
+            _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+        _mm256_sad_epu8(cnt, _mm256_setzero_si256())
+    }
+
+    /// Carry-save adder: bitwise full add of (a, b, c) → (carry, sum).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn csa(a: __m256i, b: __m256i, c: __m256i) -> (__m256i, __m256i) {
+        let u = _mm256_xor_si256(a, b);
+        (_mm256_or_si256(_mm256_and_si256(a, b), _mm256_and_si256(u, c)), _mm256_xor_si256(u, c))
+    }
+
+    /// Sum of the 4 u64 lanes.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum64(v: __m256i) -> u64 {
+        let s = _mm_add_epi64(_mm256_castsi256_si128(v), _mm256_extracti128_si256::<1>(v));
+        let s = _mm_add_epi64(s, _mm_unpackhi_epi64(s, s));
+        _mm_cvtsi128_si64(s) as u64
+    }
+
+    /// Harley–Seal accumulator state across 16-vector blocks.
+    struct Hs {
+        ones: __m256i,
+        twos: __m256i,
+        fours: __m256i,
+        eights: __m256i,
+        /// Σ popcnt256(sixteens) so far (units of 16 bits each).
+        total: __m256i,
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hs_new() -> Hs {
+        let z = _mm256_setzero_si256();
+        Hs { ones: z, twos: z, fours: z, eights: z, total: z }
+    }
+
+    /// Fold one block of 16 combined vectors into the CSA cascade.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hs_block(st: &mut Hs, v: &[__m256i; 16]) {
+        let (ta, o) = csa(st.ones, v[0], v[1]);
+        st.ones = o;
+        let (tb, o) = csa(st.ones, v[2], v[3]);
+        st.ones = o;
+        let (fa, t) = csa(st.twos, ta, tb);
+        st.twos = t;
+        let (ta, o) = csa(st.ones, v[4], v[5]);
+        st.ones = o;
+        let (tb, o) = csa(st.ones, v[6], v[7]);
+        st.ones = o;
+        let (fb, t) = csa(st.twos, ta, tb);
+        st.twos = t;
+        let (ea, f) = csa(st.fours, fa, fb);
+        st.fours = f;
+        let (ta, o) = csa(st.ones, v[8], v[9]);
+        st.ones = o;
+        let (tb, o) = csa(st.ones, v[10], v[11]);
+        st.ones = o;
+        let (fa, t) = csa(st.twos, ta, tb);
+        st.twos = t;
+        let (ta, o) = csa(st.ones, v[12], v[13]);
+        st.ones = o;
+        let (tb, o) = csa(st.ones, v[14], v[15]);
+        st.ones = o;
+        let (fb, t) = csa(st.twos, ta, tb);
+        st.twos = t;
+        let (eb, f) = csa(st.fours, fa, fb);
+        st.fours = f;
+        let (sixteens, e) = csa(st.eights, ea, eb);
+        st.eights = e;
+        st.total = _mm256_add_epi64(st.total, popcnt256(sixteens));
+    }
+
+    /// Weighted drain of the CSA counters: 16·total + 8·eights + … .
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hs_finish(st: &Hs) -> u64 {
+        let mut t = _mm256_slli_epi64::<4>(st.total);
+        t = _mm256_add_epi64(t, _mm256_slli_epi64::<3>(popcnt256(st.eights)));
+        t = _mm256_add_epi64(t, _mm256_slli_epi64::<2>(popcnt256(st.fours)));
+        t = _mm256_add_epi64(t, _mm256_slli_epi64::<1>(popcnt256(st.twos)));
+        t = _mm256_add_epi64(t, popcnt256(st.ones));
+        hsum64(t)
+    }
+
+    /// The three popcount reductions share this skeleton; `combine`
+    /// differs only in how a 4-word vector is formed from the operands.
+    macro_rules! hs_reduce {
+        ($name:ident, ($($arg:ident),+), $lead:ident, |$i:ident| $combine:expr, |$j:ident| $tail:expr) => {
+            #[target_feature(enable = "avx2")]
+            unsafe fn $name($($arg: &[u64]),+) -> u64 {
+                let n = $lead.len();
+                let mut st = hs_new();
+                let mut buf = [_mm256_setzero_si256(); 16];
+                let mut i = 0usize;
+                while i + 64 <= n {
+                    for k in 0..16 {
+                        let $i = i + 4 * k;
+                        buf[k] = $combine;
+                    }
+                    hs_block(&mut st, &buf);
+                    i += 64;
+                }
+                let mut extra = _mm256_setzero_si256();
+                while i + 4 <= n {
+                    let $i = i;
+                    extra = _mm256_add_epi64(extra, popcnt256($combine));
+                    i += 4;
+                }
+                let mut total = hs_finish(&st) + hsum64(extra);
+                while i < n {
+                    let $j = i;
+                    total += ($tail).count_ones() as u64;
+                    i += 1;
+                }
+                total
+            }
+        };
+    }
+
+    hs_reduce!(xor_popcnt_imp, (a, b), a,
+        |i| _mm256_xor_si256(loadu(a, i), loadu(b, i)),
+        |j| (a[j] ^ b[j]));
+    hs_reduce!(xor_and_popcnt_imp, (a, b, m), a,
+        |i| _mm256_and_si256(_mm256_xor_si256(loadu(a, i), loadu(b, i)), loadu(m, i)),
+        |j| ((a[j] ^ b[j]) & m[j]));
+    hs_reduce!(popcnt_imp, (a), a, |i| loadu(a, i), |j| a[j]);
+
+    pub fn xor_popcnt(a: &[u64], b: &[u64]) -> u64 {
+        debug_assert_eq!(a.len(), b.len());
+        // SAFETY: table installed only after AVX2 detection (module docs).
+        unsafe { xor_popcnt_imp(a, b) }
+    }
+
+    pub fn xor_and_popcnt(a: &[u64], b: &[u64], m: &[u64]) -> u64 {
+        debug_assert!(a.len() == b.len() && a.len() == m.len());
+        // SAFETY: table installed only after AVX2 detection.
+        unsafe { xor_and_popcnt_imp(a, b, m) }
+    }
+
+    pub fn popcnt(a: &[u64]) -> u64 {
+        // SAFETY: table installed only after AVX2 detection.
+        unsafe { popcnt_imp(a) }
+    }
+
+    /// 8 sign lanes from one bit byte: all-ones where the bit is SET.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn expand_byte(byte: u8) -> __m256i {
+        let pos = _mm256_setr_epi32(1, 2, 4, 8, 16, 32, 64, 128);
+        let b = _mm256_set1_epi32(byte as i32);
+        _mm256_cmpeq_epi32(_mm256_and_si256(b, pos), pos)
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy_pm1_imp(out: &mut [f32], words: &[u64], zv: f32) {
+        let len = out.len();
+        let zv_v = _mm256_set1_ps(zv);
+        let one = _mm256_set1_ps(1.0);
+        let sign = _mm256_set1_epi32(i32::MIN);
+        let mut lane = 0usize;
+        while lane + 8 <= len {
+            let byte = ((words[lane / 64] >> (lane % 64)) & 0xff) as u8;
+            let setm = expand_byte(byte);
+            // pat = ±1.0: flip the sign bit of 1.0 where the bit is clear
+            let pat = _mm256_xor_ps(one, _mm256_castsi256_ps(_mm256_andnot_si256(setm, sign)));
+            let o = out.as_mut_ptr().add(lane);
+            // identical arithmetic to the scalar LUT path: o += zv·(±1)
+            _mm256_storeu_ps(o, _mm256_add_ps(_mm256_loadu_ps(o), _mm256_mul_ps(zv_v, pat)));
+            lane += 8;
+        }
+        if lane < len {
+            axpy_tail(&mut out[lane..], words, lane, zv, None);
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy_pm1_masked_imp(out: &mut [f32], words: &[u64], mask: &[u64], zv: f32) {
+        let len = out.len();
+        let zv_v = _mm256_set1_ps(zv);
+        let one = _mm256_set1_ps(1.0);
+        let sign = _mm256_set1_epi32(i32::MIN);
+        let mut lane = 0usize;
+        while lane + 8 <= len {
+            let wbyte = ((words[lane / 64] >> (lane % 64)) & 0xff) as u8;
+            let mbyte = ((mask[lane / 64] >> (lane % 64)) & 0xff) as u8;
+            let pat = _mm256_xor_ps(
+                one,
+                _mm256_castsi256_ps(_mm256_andnot_si256(expand_byte(wbyte), sign)),
+            );
+            // mpat = 1.0 / +0.0, multiplied exactly like the scalar LUT:
+            // (zv·pat)·mpat
+            let mpat = _mm256_and_ps(one, _mm256_castsi256_ps(expand_byte(mbyte)));
+            let o = out.as_mut_ptr().add(lane);
+            let addend = _mm256_mul_ps(_mm256_mul_ps(zv_v, pat), mpat);
+            _mm256_storeu_ps(o, _mm256_add_ps(_mm256_loadu_ps(o), addend));
+            lane += 8;
+        }
+        if lane < len {
+            axpy_tail(&mut out[lane..], words, lane, zv, Some(mask));
+        }
+    }
+
+    /// Scalar tail (< 8 lanes), identical per-lane ops as the main loop.
+    fn axpy_tail(out: &mut [f32], words: &[u64], lane0: usize, zv: f32, mask: Option<&[u64]>) {
+        for (k, o) in out.iter_mut().enumerate() {
+            let lane = lane0 + k;
+            let pat = if (words[lane / 64] >> (lane % 64)) & 1 == 1 { 1.0f32 } else { -1.0 };
+            match mask {
+                None => *o += zv * pat,
+                Some(m) => {
+                    let mpat = ((m[lane / 64] >> (lane % 64)) & 1) as f32;
+                    *o += zv * pat * mpat;
+                }
+            }
+        }
+    }
+
+    pub fn axpy_pm1(out: &mut [f32], words: &[u64], zv: f32) {
+        debug_assert!(words.len() * 64 >= out.len());
+        // SAFETY: table installed only after AVX2 detection.
+        unsafe { axpy_pm1_imp(out, words, zv) }
+    }
+
+    pub fn axpy_pm1_masked(out: &mut [f32], words: &[u64], mask: &[u64], zv: f32) {
+        debug_assert!(words.len() * 64 >= out.len() && mask.len() >= words.len());
+        // SAFETY: table installed only after AVX2 detection.
+        unsafe { axpy_pm1_masked_imp(out, words, mask, zv) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn cmp_mask64_imp(data: &[f32], thr: f32, flip: bool) -> u64 {
+        let t = _mm256_set1_ps(thr);
+        let mut w = 0u64;
+        let mut i = 0usize;
+        while i + 8 <= data.len() {
+            let v = _mm256_loadu_ps(data.as_ptr().add(i));
+            // ordered-quiet compares: NaN ⇒ false, matching `>=` / `<=`
+            let c = if flip {
+                _mm256_cmp_ps::<_CMP_LE_OQ>(v, t)
+            } else {
+                _mm256_cmp_ps::<_CMP_GE_OQ>(v, t)
+            };
+            w |= ((_mm256_movemask_ps(c) as u32) as u64) << i;
+            i += 8;
+        }
+        if i < data.len() {
+            w |= scalar::cmp_mask64(&data[i..], thr, flip) << i;
+        }
+        w
+    }
+
+    pub fn cmp_mask64(data: &[f32], thr: f32, flip: bool) -> u64 {
+        debug_assert!(data.len() <= 64);
+        // SAFETY: table installed only after AVX2 detection.
+        unsafe { cmp_mask64_imp(data, thr, flip) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn flip_scan_word_imp(
+        word: u64,
+        grad: &[f32],
+        accum: &mut [f32],
+        beta: f32,
+        lr: f32,
+        clip: Option<f32>,
+    ) -> u64 {
+        let lanes = grad.len();
+        let beta_v = _mm256_set1_ps(beta);
+        let lr_v = _mm256_set1_ps(lr);
+        let one = _mm256_set1_ps(1.0);
+        let neg_one = _mm256_set1_ps(-1.0);
+        let mut mask = 0u64;
+        let mut lane = 0usize;
+        while lane + 8 <= lanes {
+            let g = _mm256_loadu_ps(grad.as_ptr().add(lane));
+            let a = _mm256_loadu_ps(accum.as_ptr().add(lane));
+            // β·m + η·q with scalar rounding: add(mul, mul), no FMA
+            let mut m = _mm256_add_ps(_mm256_mul_ps(beta_v, a), _mm256_mul_ps(lr_v, g));
+            if let Some(k) = clip {
+                // f32::clamp(-k, k): branch-equivalent blends (NaN keeps m)
+                let lo = _mm256_set1_ps(-k);
+                let hi = _mm256_set1_ps(k);
+                m = _mm256_blendv_ps(m, lo, _mm256_cmp_ps::<_CMP_LT_OQ>(m, lo));
+                m = _mm256_blendv_ps(m, hi, _mm256_cmp_ps::<_CMP_GT_OQ>(m, hi));
+            }
+            let set = _mm256_castsi256_ps(expand_byte(((word >> lane) & 0xff) as u8));
+            let ge = _mm256_cmp_ps::<_CMP_GE_OQ>(m, one);
+            let le = _mm256_cmp_ps::<_CMP_LE_OQ>(m, neg_one);
+            let flip = _mm256_or_ps(_mm256_and_ps(set, ge), _mm256_andnot_ps(set, le));
+            // flipped lanes reset to +0.0 (andnot with the all-ones lanes)
+            let new_a = _mm256_andnot_ps(flip, m);
+            _mm256_storeu_ps(accum.as_mut_ptr().add(lane), new_a);
+            mask |= ((_mm256_movemask_ps(flip) as u32) as u64) << lane;
+            lane += 8;
+        }
+        if lane < lanes {
+            mask |= scalar::flip_scan_word(
+                word >> lane,
+                &grad[lane..],
+                &mut accum[lane..],
+                beta,
+                lr,
+                clip,
+            ) << lane;
+        }
+        mask
+    }
+
+    pub fn flip_scan_word(
+        word: u64,
+        grad: &[f32],
+        accum: &mut [f32],
+        beta: f32,
+        lr: f32,
+        clip: Option<f32>,
+    ) -> u64 {
+        debug_assert!(grad.len() <= 64 && grad.len() == accum.len());
+        // SAFETY: table installed only after AVX2 detection.
+        unsafe { flip_scan_word_imp(word, grad, accum, beta, lr, clip) }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON backend (aarch64; NEON is baseline there, no detection needed)
+// ---------------------------------------------------------------------------
+
+/// NEON popcount family via `vcntq_u8` (per-byte popcount) and the
+/// pairwise-add widening chain; the f32 primitives stay scalar on
+/// aarch64 (see the dispatch table).
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn ld(p: &[u64], i: usize) -> uint64x2_t {
+        debug_assert!(i + 2 <= p.len());
+        vld1q_u64(p.as_ptr().add(i))
+    }
+
+    /// Popcount one 128-bit vector into a u64x2 accumulator.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn acc_popcnt(acc: uint64x2_t, x: uint64x2_t) -> uint64x2_t {
+        let c = vcntq_u8(vreinterpretq_u8_u64(x));
+        vaddq_u64(acc, vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(c))))
+    }
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn drain(acc: uint64x2_t) -> u64 {
+        vgetq_lane_u64::<0>(acc) + vgetq_lane_u64::<1>(acc)
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn xor_popcnt_imp(a: &[u64], b: &[u64]) -> u64 {
+        let n = a.len();
+        let mut acc = vdupq_n_u64(0);
+        let mut i = 0usize;
+        while i + 2 <= n {
+            acc = acc_popcnt(acc, veorq_u64(ld(a, i), ld(b, i)));
+            i += 2;
+        }
+        let mut total = drain(acc);
+        while i < n {
+            total += (a[i] ^ b[i]).count_ones() as u64;
+            i += 1;
+        }
+        total
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn xor_and_popcnt_imp(a: &[u64], b: &[u64], m: &[u64]) -> u64 {
+        let n = a.len();
+        let mut acc = vdupq_n_u64(0);
+        let mut i = 0usize;
+        while i + 2 <= n {
+            acc = acc_popcnt(acc, vandq_u64(veorq_u64(ld(a, i), ld(b, i)), ld(m, i)));
+            i += 2;
+        }
+        let mut total = drain(acc);
+        while i < n {
+            total += ((a[i] ^ b[i]) & m[i]).count_ones() as u64;
+            i += 1;
+        }
+        total
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn popcnt_imp(a: &[u64]) -> u64 {
+        let n = a.len();
+        let mut acc = vdupq_n_u64(0);
+        let mut i = 0usize;
+        while i + 2 <= n {
+            acc = acc_popcnt(acc, ld(a, i));
+            i += 2;
+        }
+        let mut total = drain(acc);
+        while i < n {
+            total += a[i].count_ones() as u64;
+            i += 1;
+        }
+        total
+    }
+
+    pub fn xor_popcnt(a: &[u64], b: &[u64]) -> u64 {
+        debug_assert_eq!(a.len(), b.len());
+        // SAFETY: NEON is a baseline aarch64 target feature.
+        unsafe { xor_popcnt_imp(a, b) }
+    }
+
+    pub fn xor_and_popcnt(a: &[u64], b: &[u64], m: &[u64]) -> u64 {
+        debug_assert!(a.len() == b.len() && a.len() == m.len());
+        // SAFETY: NEON is a baseline aarch64 target feature.
+        unsafe { xor_and_popcnt_imp(a, b, m) }
+    }
+
+    pub fn popcnt(a: &[u64]) -> u64 {
+        // SAFETY: NEON is a baseline aarch64 target feature.
+        unsafe { popcnt_imp(a) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Primitive-level A/B: the auto-detected backend against the scalar
+    /// reference, across lengths that cover the Harley–Seal block path
+    /// (≥ 64 words), the plain-vector path, and the scalar tails. On a
+    /// machine without SIMD support both sides are scalar and the test
+    /// degenerates to self-consistency — the correct behaviour, not a
+    /// skip (same convention as tests/parallel_determinism.rs).
+    #[test]
+    fn popcount_family_matches_scalar_reference() {
+        let mut rng = Rng::new(90);
+        let kk = best();
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 15, 16, 63, 64, 65, 127, 128, 200, 300] {
+            let a: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let m: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            assert_eq!((kk.xor_popcnt)(&a, &b), scalar::xor_popcnt(&a, &b), "xor n={n}");
+            assert_eq!(
+                (kk.xor_and_popcnt)(&a, &b, &m),
+                scalar::xor_and_popcnt(&a, &b, &m),
+                "xor_and n={n}"
+            );
+            assert_eq!((kk.popcnt)(&a), scalar::popcnt(&a), "popcnt n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_family_matches_scalar_reference() {
+        let mut rng = Rng::new(91);
+        let kk = best();
+        for len in [1usize, 7, 8, 9, 15, 16, 63, 64, 65, 100, 193] {
+            let words: Vec<u64> = (0..len.div_ceil(64)).map(|_| rng.next_u64()).collect();
+            let mask: Vec<u64> = (0..len.div_ceil(64)).map(|_| rng.next_u64()).collect();
+            let init: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            let zv = rng.normal();
+
+            let mut want = init.clone();
+            scalar::axpy_pm1(&mut want, &words, zv);
+            let mut got = init.clone();
+            (kk.axpy_pm1)(&mut got, &words, zv);
+            assert_eq!(want, got, "axpy len={len}");
+
+            let mut want = init.clone();
+            scalar::axpy_pm1_masked(&mut want, &words, &mask, zv);
+            let mut got = init.clone();
+            (kk.axpy_pm1_masked)(&mut got, &words, &mask, zv);
+            assert_eq!(want, got, "axpy_masked len={len}");
+        }
+    }
+
+    #[test]
+    fn cmp_mask_matches_scalar_reference() {
+        let mut rng = Rng::new(92);
+        let kk = best();
+        for len in [0usize, 1, 7, 8, 9, 31, 32, 63, 64] {
+            let data: Vec<f32> = (0..len).map(|_| rng.normal() * 3.0).collect();
+            for thr in [0.0f32, 1.5, -2.0] {
+                for flip in [false, true] {
+                    assert_eq!(
+                        (kk.cmp_mask64)(&data, thr, flip),
+                        scalar::cmp_mask64(&data, thr, flip),
+                        "len={len} thr={thr} flip={flip}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flip_scan_matches_scalar_reference() {
+        let mut rng = Rng::new(93);
+        let kk = best();
+        for lanes in [1usize, 8, 9, 17, 56, 63, 64] {
+            for clip in [None, Some(2.5f32)] {
+                let word = rng.next_u64();
+                let grad: Vec<f32> = (0..lanes).map(|_| rng.normal() * 1.3).collect();
+                let accum0: Vec<f32> = (0..lanes).map(|_| rng.normal()).collect();
+                let mut a_ref = accum0.clone();
+                let m_ref = scalar::flip_scan_word(word, &grad, &mut a_ref, 0.8, 1.0, clip);
+                let mut a_got = accum0.clone();
+                let m_got = (kk.flip_scan_word)(word, &grad, &mut a_got, 0.8, 1.0, clip);
+                assert_eq!(m_ref, m_got, "mask lanes={lanes} clip={clip:?}");
+                assert_eq!(a_ref, a_got, "accum lanes={lanes} clip={clip:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_cmp_into_matches_per_bit_packing() {
+        let mut rng = Rng::new(94);
+        for (bit0, len) in [(0usize, 1usize), (0, 64), (0, 65), (5, 60), (60, 10), (63, 129)] {
+            let data: Vec<f32> = (0..len).map(|_| rng.normal() * 2.0).collect();
+            let words = (bit0 + len).div_ceil(64);
+            for flip in [false, true] {
+                let mut out = vec![0u64; words];
+                pack_cmp_into(&mut out, bit0, &data, 0.5, flip);
+                let mut want = vec![0u64; words];
+                for (i, &v) in data.iter().enumerate() {
+                    let fire = if flip { v <= 0.5 } else { v >= 0.5 };
+                    if fire {
+                        want[(bit0 + i) / 64] |= 1u64 << ((bit0 + i) % 64);
+                    }
+                }
+                assert_eq!(out, want, "bit0={bit0} len={len} flip={flip}");
+            }
+        }
+    }
+
+    #[test]
+    fn with_backend_overrides_and_restores() {
+        let before = active();
+        with_backend(Backend::Scalar, || {
+            assert_eq!(active(), Backend::Scalar);
+        });
+        assert_eq!(active(), before);
+        assert!(supported(Backend::Scalar));
+        assert!(supported(auto_backend()));
+    }
+
+    #[test]
+    fn aligned_words_is_64_byte_aligned_and_vec_like() {
+        let mut w = AlignedWords::zeroed(11);
+        assert_eq!(w.len(), 11);
+        assert_eq!(w.as_ptr() as usize % 64, 0, "base must be cache-line aligned");
+        w[10] = 7;
+        w.resize(30, 3);
+        assert_eq!(w[10], 7, "resize preserves content");
+        assert!(w[11..30].iter().all(|&v| v == 3), "resize fills new words");
+        w.resize(4, 0);
+        assert_eq!(w.len(), 4);
+        // stale capacity words must not resurface on regrow
+        w.resize(30, 1);
+        assert!(w[4..30].iter().all(|&v| v == 1), "regrow refills stale words");
+        w.clear();
+        w.extend_from_slice(&[1, 2, 3]);
+        assert_eq!(&w[..], &[1, 2, 3]);
+        assert_eq!(w.as_ptr() as usize % 64, 0);
+
+        let v: AlignedWords = vec![5u64; 100].into();
+        let mut c = AlignedWords::new();
+        c.clone_from(&v);
+        assert_eq!(c, v);
+        assert_eq!(c.to_vec(), vec![5u64; 100]);
+    }
+}

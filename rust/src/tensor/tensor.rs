@@ -216,19 +216,27 @@ impl Tensor {
 
     /// Per-row argmax of a 2-D tensor.
     pub fn argmax_rows(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.argmax_rows_into(&mut out);
+        out
+    }
+
+    /// [`Self::argmax_rows`] into a reusable buffer (cleared and
+    /// refilled) — the serve workers call this per drained batch without
+    /// allocating.
+    pub fn argmax_rows_into(&self, out: &mut Vec<usize>) {
         let (r, c) = (self.rows(), self.cols());
-        (0..r)
-            .map(|i| {
-                let row = &self.data[i * c..(i + 1) * c];
-                let mut best = 0;
-                for j in 1..c {
-                    if row[j] > row[best] {
-                        best = j;
-                    }
+        out.clear();
+        out.extend((0..r).map(|i| {
+            let row = &self.data[i * c..(i + 1) * c];
+            let mut best = 0;
+            for j in 1..c {
+                if row[j] > row[best] {
+                    best = j;
                 }
-                best
-            })
-            .collect()
+            }
+            best
+        }));
     }
 
     // ----- GEMM ----------------------------------------------------------

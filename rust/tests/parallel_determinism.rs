@@ -14,8 +14,13 @@
 //! CI runs this file in `--release` as well, where the parallel paths see
 //! realistic shard sizes (.github/workflows/ci.yml).
 
+//! The whole file is additionally run under `BOLD_SIMD=scalar` AND the
+//! default (auto) backend by CI, so every assertion here holds on both
+//! the scalar and the SIMD kernel backends (DESIGN.md §SIMD-Backend).
+
 use bold::nn::{ParamRef, ParamStore};
 use bold::optim::BooleanOptimizer;
+use bold::tensor::simd::{self, Backend};
 use bold::tensor::{BitMatrix, Tensor};
 use bold::util::{pool, Rng};
 
@@ -224,4 +229,37 @@ fn packed_forward_backward_chain_bit_exact() {
     assert_eq!(seq.0, par.0, "forward");
     assert_eq!(seq.1, par.1, "weight vote");
     assert_eq!(seq.2, par.2, "input signal");
+}
+
+/// Backends × threads: a single-threaded forced-scalar run against a
+/// sharded run on the process-wide backend. At budget 8 the thread-local
+/// scalar override does NOT reach the pool workers — deliberately: the
+/// caller's shard runs scalar while workers run the global (possibly
+/// SIMD) backend, so this asserts that even a *mixed-backend* sharded
+/// execution is bit-exact against the pure scalar reference, the
+/// strongest form of the §SIMD-Backend exactness claim.
+#[test]
+fn kernels_bit_exact_across_backends_and_thread_counts() {
+    let mut rng = Rng::new(112);
+    let (b, n, m) = (66, 70, 4099);
+    let x = BitMatrix::random(b, m, &mut rng);
+    let w = BitMatrix::random(n, m, &mut rng);
+    let z = Tensor::randn(&[b, n], 1.0, &mut rng);
+    let mut compute = || {
+        (
+            x.xnor_gemm(&w),
+            x.xnor_threshold(&w, None, 0.0),
+            x.backward_weight(&z),
+            w.backward_input(&z),
+        )
+    };
+    let seq_scalar = pool::with_thread_budget(1, || {
+        simd::with_backend(Backend::Scalar, &mut compute)
+    });
+    let par_mixed = pool::with_thread_budget(8, || {
+        simd::with_backend(Backend::Scalar, &mut compute)
+    });
+    let par_global = pool::with_thread_budget(8, &mut compute);
+    assert_eq!(seq_scalar, par_mixed, "mixed scalar/global shards diverge from scalar");
+    assert_eq!(seq_scalar, par_global, "global backend diverges from scalar reference");
 }

@@ -1,0 +1,188 @@
+//! SIMD backend parity suite (DESIGN.md §SIMD-Backend): every kernel
+//! routed through the `tensor::simd` dispatch table must be **bit-exact**
+//! between the forced-scalar backend and the auto-detected SIMD backend
+//! (AVX2 / NEON), across a randomized width sweep of 1..=193 — every
+//! tail-word shape, byte-boundary and vector-boundary case — plus
+//! wide fan-ins that engage the Harley–Seal block loop (≥ 64 words) and
+//! the K-tiling (> 512 words), masked 𝕄-inputs including fully-masked
+//! rows, and empty operands.
+//!
+//! On a machine without a SIMD backend both sides run scalar and the
+//! suite degenerates to self-consistency — the correct behaviour, not a
+//! skip (same convention as `parallel_determinism.rs`). Everything runs
+//! at thread budget 1 so the thread-local backend override covers the
+//! whole computation (pool workers keep the process-wide backend);
+//! cross-thread mixing is exercised in `parallel_determinism.rs`.
+
+use bold::nn::{ParamRef, ParamStore};
+use bold::optim::BooleanOptimizer;
+use bold::tensor::simd::{self, Backend};
+use bold::tensor::{BitMatrix, Tensor};
+use bold::util::{pool, Rng};
+
+/// Run `f` under forced-scalar and under the auto-detected backend,
+/// single-threaded, returning both results.
+fn ab<R>(mut f: impl FnMut() -> R) -> (R, R) {
+    pool::with_thread_budget(1, || {
+        let s = simd::with_backend(Backend::Scalar, &mut f);
+        let v = simd::with_backend(simd::auto_backend(), &mut f);
+        (s, v)
+    })
+}
+
+/// Random mask with ~80% valid lanes; the last row (when present) is
+/// fully masked — every lane the adjoined 𝕄 zero.
+fn random_mask(rows: usize, cols: usize, rng: &mut Rng) -> BitMatrix {
+    let mut mask = BitMatrix::zeros(rows, cols);
+    for i in 0..rows {
+        for j in 0..cols {
+            mask.set(i, j, rng.bernoulli(0.8));
+        }
+    }
+    if rows > 0 {
+        for j in 0..cols {
+            mask.set(rows - 1, j, false);
+        }
+    }
+    mask
+}
+
+#[test]
+fn forward_kernels_parity_across_width_sweep() {
+    let mut rng = Rng::new(501);
+    for m in 1..=193usize {
+        let (b, n) = (5, 9);
+        let x = BitMatrix::random(b, m, &mut rng);
+        let w = BitMatrix::random(n, m, &mut rng);
+        let mask = random_mask(b, m, &mut rng);
+        let lane = random_mask(1, m, &mut rng);
+        let bias = BitMatrix::random(1, n, &mut rng);
+
+        let (s, v) = ab(|| x.xnor_gemm(&w));
+        assert_eq!(s, v, "xnor_gemm m={m}");
+        let (s, v) = ab(|| x.xnor_gemm_masked(&w, &mask));
+        assert_eq!(s, v, "xnor_gemm_masked m={m}");
+        let (s, v) = ab(|| x.xnor_threshold(&w, Some(&bias), -1.0));
+        assert_eq!(s, v, "xnor_threshold m={m}");
+        let (s, v) = ab(|| x.xnor_threshold_masked(&w, lane.row(0), None, 0.0));
+        assert_eq!(s, v, "xnor_threshold_masked m={m}");
+    }
+}
+
+#[test]
+fn backward_kernels_parity_across_width_sweep() {
+    let mut rng = Rng::new(502);
+    for m in 1..=193usize {
+        let (b, n) = (4, 7);
+        let x = BitMatrix::random(b, m, &mut rng);
+        let w = BitMatrix::random(n, m, &mut rng);
+        let mask = random_mask(b, m, &mut rng);
+        let z = Tensor::randn(&[b, n], 1.0, &mut rng);
+
+        let (s, v) = ab(|| w.backward_input(&z));
+        assert_eq!(s, v, "backward_input m={m}");
+        let (s, v) = ab(|| x.backward_weight(&z));
+        assert_eq!(s, v, "backward_weight m={m}");
+        let (s, v) = ab(|| x.backward_weight_masked(&z, &mask));
+        assert_eq!(s, v, "backward_weight_masked m={m}");
+    }
+}
+
+/// Wide fan-ins: ≥ 64 words/row engages the AVX2 Harley–Seal block
+/// loop; > 512 words/row crosses a K-tile boundary; odd word counts
+/// leave vector and scalar tails. Row counts cross the 4-row block.
+#[test]
+fn forward_kernels_parity_at_wide_fanin() {
+    let mut rng = Rng::new(503);
+    for &m in &[4096usize, 4200, 8192 + 67, 33_000] {
+        for &(b, n) in &[(1usize, 3usize), (5, 9), (6, 2)] {
+            let x = BitMatrix::random(b, m, &mut rng);
+            let w = BitMatrix::random(n, m, &mut rng);
+            let mask = random_mask(b, m, &mut rng);
+            let (s, v) = ab(|| x.xnor_gemm(&w));
+            assert_eq!(s, v, "xnor_gemm b={b} n={n} m={m}");
+            let (s, v) = ab(|| x.xnor_gemm_masked(&w, &mask));
+            assert_eq!(s, v, "xnor_gemm_masked b={b} n={n} m={m}");
+            let (s, v) = ab(|| x.xnor_threshold(&w, None, 2.0));
+            assert_eq!(s, v, "xnor_threshold b={b} n={n} m={m}");
+        }
+    }
+}
+
+#[test]
+fn empty_operands_parity() {
+    let mut rng = Rng::new(504);
+    for &(b, n, m) in &[(0usize, 8usize, 64usize), (4, 0, 64), (4, 8, 0)] {
+        let x = BitMatrix::random(b, m, &mut rng);
+        let w = BitMatrix::random(n, m, &mut rng);
+        let mask = BitMatrix::zeros(b, m);
+        let z = Tensor::randn(&[b, n], 1.0, &mut rng);
+        let (s, v) = ab(|| x.xnor_gemm(&w));
+        assert_eq!(s, v, "xnor_gemm {b}x{n}x{m}");
+        let (s, v) = ab(|| x.xnor_gemm_masked(&w, &mask));
+        assert_eq!(s, v, "xnor_gemm_masked {b}x{n}x{m}");
+        let (s, v) = ab(|| x.xnor_threshold(&w, None, 0.0));
+        assert_eq!(s, v, "xnor_threshold {b}x{n}x{m}");
+        let (s, v) = ab(|| x.backward_weight(&z));
+        assert_eq!(s, v, "backward_weight {b}x{n}x{m}");
+    }
+}
+
+/// The optimizer's full observable state transition — packed weights,
+/// flip count, accumulator, β — under both backends, with and without
+/// the |m| ≤ κ clip, across tail-word shapes.
+#[test]
+fn optimizer_step_parity() {
+    for clip in [None, Some(2.0f32)] {
+        for &(rows, cols) in &[(3usize, 70usize), (16, 64), (9, 193), (64, 127)] {
+            let run = |backend: Backend| {
+                pool::with_thread_budget(1, || {
+                    simd::with_backend(backend, || {
+                        let mut rng = Rng::new(505);
+                        let mut bits = BitMatrix::random(rows, cols, &mut rng);
+                        let grad = Tensor::randn(&[rows, cols], 1.2, &mut rng);
+                        let mut store = ParamStore::new();
+                        store.accumulate("w", &grad);
+                        let mut opt = BooleanOptimizer::new(1.0);
+                        if let Some(k) = clip {
+                            opt = opt.with_clip(k);
+                        }
+                        let mut params =
+                            vec![ParamRef::Bool { name: "w".into(), bits: &mut bits }];
+                        let stats = opt.step(&mut params, &mut store);
+                        let slot = store.slot("w").unwrap();
+                        (bits.clone(), stats.flips, slot.accum.data.clone(), slot.ratio)
+                    })
+                })
+            };
+            let s = run(Backend::Scalar);
+            let v = run(simd::auto_backend());
+            assert_eq!(s.0, v.0, "{rows}x{cols} clip={clip:?}: packed weights");
+            assert_eq!(s.1, v.1, "{rows}x{cols} clip={clip:?}: flip count");
+            assert_eq!(s.2, v.2, "{rows}x{cols} clip={clip:?}: accumulator");
+            assert_eq!(s.3, v.3, "{rows}x{cols} clip={clip:?}: beta");
+        }
+    }
+}
+
+/// End-to-end composition: a BoolLinear-style forward/backward chain and
+/// the fused serving kernels agree across backends on one wide shape.
+#[test]
+fn packed_chain_parity() {
+    let mut rng = Rng::new(506);
+    let (b, n, m) = (6, 33, 4097);
+    let x = BitMatrix::random(b, m, &mut rng);
+    let w = BitMatrix::random(n, m, &mut rng);
+    let z = Tensor::randn(&[b, n], 0.7, &mut rng);
+    let (s, v) = ab(|| {
+        let fwd = x.xnor_gemm(&w);
+        let q = x.backward_weight(&z);
+        let g = w.backward_input(&z);
+        let bits = x.xnor_threshold(&w, None, 0.0);
+        (fwd, q, g, bits)
+    });
+    assert_eq!(s.0, v.0, "forward");
+    assert_eq!(s.1, v.1, "weight vote");
+    assert_eq!(s.2, v.2, "input signal");
+    assert_eq!(s.3, v.3, "fused threshold");
+}
