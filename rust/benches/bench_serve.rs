@@ -14,14 +14,18 @@
 
 use bold::models::{boolean_mlp, vgg_small, MlpConfig, VggConfig};
 use bold::nn::{Layer, Value};
-use bold::runtime::{NativeServer, PackedGraph, ServeConfig};
+use bold::runtime::{
+    loadgen, HttpConfig, HttpServer, ModelRegistry, NativeServer, PackedGraph, ServeConfig,
+};
 use bold::tensor::{simd, BitMatrix, Tensor};
 use bold::util::{pool, Rng, Timer};
 use std::time::{Duration, Instant};
 
 /// One measured cell of BENCH_serve.json. `req_per_s` is 0 for raw
 /// engine-latency rows (which carry `us_per_iter` instead, and vice
-/// versa).
+/// versa). `extra` is an optional pre-rendered JSON fragment
+/// (`,"k":v,...`) for rows with bench-specific fields (the open-loop
+/// rows carry offered rate, latency percentiles and shed counts).
 struct Rec {
     bench: String,
     config: String,
@@ -29,6 +33,7 @@ struct Rec {
     batch: usize,
     req_per_s: f64,
     us_per_iter: f64,
+    extra: String,
 }
 
 fn write_json(recs: &[Rec]) {
@@ -38,13 +43,14 @@ fn write_json(recs: &[Rec]) {
     for (i, r) in recs.iter().enumerate() {
         s.push_str(&format!(
             "  {{\"bench\":\"{}\",\"config\":\"{}\",\"workers\":{},\"batch\":{},\
-             \"req_per_s\":{:.0},\"us_per_iter\":{:.2},\"simd\":\"{}\",\"threads\":{}}}{}\n",
+             \"req_per_s\":{:.0},\"us_per_iter\":{:.2}{},\"simd\":\"{}\",\"threads\":{}}}{}\n",
             r.bench,
             r.config,
             r.workers,
             r.batch,
             r.req_per_s,
             r.us_per_iter,
+            r.extra,
             simd::backend_name(),
             pool::num_threads(),
             if i + 1 < recs.len() { "," } else { "" }
@@ -141,6 +147,7 @@ fn sweep(
             batch,
             req_per_s: rate,
             us_per_iter: 0.0,
+            extra: String::new(),
         });
         rates.push(rate);
     }
@@ -187,6 +194,7 @@ fn main() {
         batch: 1,
         req_per_s: 0.0,
         us_per_iter: lat1 * 1e6,
+        extra: String::new(),
     });
     recs.push(Rec {
         bench: "mlp_engine_forward".into(),
@@ -195,6 +203,7 @@ fn main() {
         batch: 64,
         req_per_s: 0.0,
         us_per_iter: lat64 * 1e6,
+        extra: String::new(),
     });
 
     let vgg = vgg_engine();
@@ -212,6 +221,7 @@ fn main() {
         batch: 1,
         req_per_s: 0.0,
         us_per_iter: t.median() * 1e6,
+        extra: String::new(),
     });
     let mut t = Timer::new("VGG graph forward batch 16");
     t.bench(1, 5, || {
@@ -225,11 +235,92 @@ fn main() {
         batch: 16,
         req_per_s: 0.0,
         us_per_iter: t.median() * 1e6,
+        extra: String::new(),
     });
     println!();
 
     // --- full server: queue + micro-batching + worker pool --------------
     sweep(&mut recs, "MLP 784-512-256-10", 8192, mlp_engine);
     sweep(&mut recs, "VGG-SMALL w0.25 (packed conv graph)", 512, vgg_engine);
+
+    // --- open-loop load over the TCP/HTTP front-end ----------------------
+    open_loop_http(&mut recs);
     write_json(&recs);
+}
+
+/// Open-loop load section (ISSUE-6): real TCP + HTTP parsing in the
+/// path, fixed arrival rates at 0.5×/1×/2× of a measured closed-loop
+/// saturation estimate. The 2× row is the overload case: the interesting
+/// numbers are goodput (should hold near saturation) and shed count
+/// (503s, never hangs), with coordinated-omission-corrected latency
+/// percentiles for the rows below saturation.
+fn open_loop_http(recs: &mut Vec<Rec>) {
+    let quick = std::env::var("BOLD_BENCH_QUICK").is_ok();
+    let (probe_s, run_s) = if quick { (1.0, 2.0) } else { (3.0, 8.0) };
+    let conns = 32usize;
+
+    let mut registry = ModelRegistry::new();
+    registry
+        .add(
+            "mlp",
+            mlp_engine(),
+            ServeConfig {
+                workers: 4,
+                max_batch: 64,
+                queue_cap: 1024,
+                batch_window: Duration::from_micros(200),
+            },
+        )
+        .expect("register mlp");
+    let cfg = HttpConfig { threads: conns.min(16), ..HttpConfig::default() };
+    let http_threads = cfg.threads;
+    let server = HttpServer::start(registry, "127.0.0.1:0", cfg).expect("bind http");
+    let addr = server.local_addr().to_string();
+
+    // body: 784 ±1 features, binary encoding (cheap to parse, realistic)
+    let mut rng = Rng::new(21);
+    let feats: Vec<f32> = (0..784).map(|_| rng.sign()).collect();
+    let mut body = Vec::with_capacity(784 * 4);
+    for f in &feats {
+        body.extend_from_slice(&f.to_le_bytes());
+    }
+    let request = loadgen::render_predict("mlp", &body, "application/octet-stream");
+
+    println!("-- open-loop HTTP load (MLP over TCP, {conns} connections)");
+    let sat = loadgen::closed_loop_rate(&addr, &request, conns, Duration::from_secs_f64(probe_s));
+    println!("closed-loop saturation estimate: {sat:.0} req/s");
+    for (mult, label) in [(0.5, "0.5x"), (1.0, "1.0x"), (2.0, "2.0x")] {
+        let rate = (sat * mult).max(conns as f64);
+        let rep = loadgen::open_loop(&addr, &request, rate, Duration::from_secs_f64(run_s), conns);
+        println!("{label:<6} {}", rep.summary());
+        assert_eq!(
+            rep.other_5xx, 0,
+            "front-end must answer overload with 503/504, never other 5xx"
+        );
+        recs.push(Rec {
+            bench: "http_open_loop MLP".into(),
+            config: format!("{label} saturation"),
+            workers: http_threads,
+            batch: 64,
+            req_per_s: rep.goodput_per_s,
+            us_per_iter: 0.0,
+            extra: format!(
+                ",\"offered_per_s\":{:.0},\"p50_us\":{:.1},\"p99_us\":{:.1},\"p999_us\":{:.1},\
+                 \"sent\":{},\"shed\":{},\"expired\":{},\"io_errors\":{}",
+                rep.offered_per_s,
+                rep.p50_us,
+                rep.p99_us,
+                rep.p999_us,
+                rep.sent,
+                rep.shed,
+                rep.expired,
+                rep.io_errors
+            ),
+        });
+    }
+    let stats = server.shutdown();
+    println!(
+        "front-end: {} conns, {} requests ({} ok, {} shed, {} expired)\n",
+        stats.connections, stats.requests, stats.ok, stats.shed, stats.expired
+    );
 }

@@ -1,0 +1,337 @@
+//! `bench_check` — benchmark-regression gate for the committed
+//! `benchmarks/BENCH_*.json` baselines (DESIGN.md §Bench-Harness).
+//!
+//! The bench binaries (`bench_serve`, `bench_kernels`) emit
+//! line-oriented JSON: one record per line, flat string/number fields.
+//! This tool compares a fresh emission against a committed baseline and
+//! fails (exit 1) when a shared metric regresses beyond the tolerance:
+//!
+//! ```text
+//! bench_check --baseline benchmarks/BENCH_serve.json \
+//!             --current  BENCH_serve.json [--tolerance 0.20]
+//! bench_check --validate benchmarks/BENCH_serve.json ...   # shape check
+//! ```
+//!
+//! Conventions:
+//! * rows are matched by their identity fields — (`bench`,`config`) for
+//!   serve records, (`kernel`,`dims`,`threads`,`simd`) for kernel
+//!   records (auto-detected per row);
+//! * `req_per_s`/`gops` are higher-is-better, `us_per_iter`/
+//!   `ns_per_iter`/`p99_us` lower-is-better;
+//! * a **zero-valued baseline metric is an unfilled sentinel** and is
+//!   skipped: freshly added rows are committed with zeros and become
+//!   binding once a measured run lands (EXPERIMENTS.md `_fill_`
+//!   convention);
+//! * rows present on only one side are reported but never fail the
+//!   check (benches gain/drop rows across PRs).
+//!
+//! Zero dependencies: the "parser" is a field extractor good for exactly
+//! the flat records our emitters write, with unit tests pinning that
+//! contract.
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+/// Extract `"key":value` from a flat one-line JSON record. Returns the
+/// raw value text (quotes stripped for strings). Good enough for the
+/// bench emitters' output; not a general JSON parser.
+fn field(line: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    if let Some(stripped) = rest.strip_prefix('"') {
+        // string value: scan to the closing quote (emitters never escape)
+        Some(stripped[..stripped.find('"')?].to_string())
+    } else {
+        let end = rest
+            .find(|c: char| c == ',' || c == '}')
+            .unwrap_or(rest.len());
+        Some(rest[..end].trim().to_string())
+    }
+}
+
+fn num_field(line: &str, key: &str) -> Option<f64> {
+    field(line, key)?.parse().ok()
+}
+
+/// Identity key for a record line: serve rows use (bench, config),
+/// kernel rows (kernel, dims, threads, simd).
+fn identity(line: &str) -> Option<String> {
+    if let Some(kernel) = field(line, "kernel") {
+        Some(format!(
+            "{kernel} | {} | t{} | {}",
+            field(line, "dims")?,
+            field(line, "threads")?,
+            field(line, "simd")?
+        ))
+    } else {
+        let bench = field(line, "bench")?;
+        Some(format!("{bench} | {}", field(line, "config")?))
+    }
+}
+
+/// (metric name, higher_is_better) pairs checked when present.
+const METRICS: &[(&str, bool)] = &[
+    ("req_per_s", true),
+    ("gops", true),
+    ("us_per_iter", false),
+    ("ns_per_iter", false),
+    ("p99_us", false),
+];
+
+fn parse_records(text: &str) -> BTreeMap<String, String> {
+    let mut map = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim().trim_end_matches(',');
+        if !line.starts_with('{') {
+            continue;
+        }
+        if let Some(id) = identity(line) {
+            map.insert(id, line.to_string());
+        }
+    }
+    map
+}
+
+struct Regression {
+    id: String,
+    metric: &'static str,
+    base: f64,
+    cur: f64,
+    ratio: f64,
+}
+
+/// Compare and collect regressions beyond `tol` (0.20 = 20%).
+fn compare(baseline: &str, current: &str, tol: f64) -> (Vec<Regression>, usize, usize) {
+    let base = parse_records(baseline);
+    let cur = parse_records(current);
+    let mut regressions = Vec::new();
+    let mut checked = 0usize;
+    let mut skipped = 0usize;
+    for (id, bline) in &base {
+        let Some(cline) = cur.get(id) else {
+            println!("note: row only in baseline (skipped): {id}");
+            continue;
+        };
+        for &(metric, higher_better) in METRICS {
+            let (Some(b), Some(c)) = (num_field(bline, metric), num_field(cline, metric)) else {
+                continue;
+            };
+            if b == 0.0 {
+                // unfilled sentinel: baseline committed before any
+                // measured run — becomes binding once filled
+                skipped += 1;
+                continue;
+            }
+            checked += 1;
+            let ratio = if higher_better { c / b } else { b / c.max(1e-12) };
+            if ratio < 1.0 - tol {
+                regressions.push(Regression { id: id.clone(), metric, base: b, cur: c, ratio });
+            }
+        }
+    }
+    for id in cur.keys() {
+        if !base.contains_key(id) {
+            println!("note: new row not in baseline (unchecked): {id}");
+        }
+    }
+    (regressions, checked, skipped)
+}
+
+/// Structural validation of a committed baseline: parseable rows, each
+/// with an identity and at least one known metric.
+fn validate(path: &str, text: &str) -> Result<usize, String> {
+    let recs = parse_records(text);
+    if recs.is_empty() {
+        return Err(format!("{path}: no parseable records"));
+    }
+    for (id, line) in &recs {
+        if !METRICS.iter().any(|(m, _)| num_field(line, m).is_some()) {
+            return Err(format!("{path}: row '{id}' has no known metric field"));
+        }
+    }
+    Ok(recs.len())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut baseline: Option<String> = None;
+    let mut current: Option<String> = None;
+    let mut tolerance = 0.20f64;
+    let mut validate_paths: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--baseline" => {
+                baseline = args.get(i + 1).cloned();
+                i += 2;
+            }
+            "--current" => {
+                current = args.get(i + 1).cloned();
+                i += 2;
+            }
+            "--tolerance" => {
+                tolerance = args
+                    .get(i + 1)
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(tolerance);
+                i += 2;
+            }
+            "--validate" => {
+                // every following argument is a baseline file to validate
+                validate_paths.extend(args[i + 1..].iter().cloned());
+                i = args.len();
+            }
+            other => {
+                eprintln!("unknown argument '{other}'");
+                eprintln!(
+                    "usage: bench_check --baseline FILE --current FILE [--tolerance 0.20]\n\
+                     \x20      bench_check --validate FILE..."
+                );
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    if !validate_paths.is_empty() {
+        let mut ok = true;
+        for p in &validate_paths {
+            match std::fs::read_to_string(p) {
+                Ok(text) => match validate(p, &text) {
+                    Ok(n) => println!("{p}: ok ({n} rows)"),
+                    Err(e) => {
+                        eprintln!("FAIL {e}");
+                        ok = false;
+                    }
+                },
+                Err(e) => {
+                    eprintln!("FAIL {p}: {e}");
+                    ok = false;
+                }
+            }
+        }
+        return if ok { ExitCode::SUCCESS } else { ExitCode::FAILURE };
+    }
+
+    let (Some(bpath), Some(cpath)) = (baseline, current) else {
+        eprintln!("need --baseline and --current (or --validate); see --help text above");
+        return ExitCode::from(2);
+    };
+    let btext = match std::fs::read_to_string(&bpath) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read baseline {bpath}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let ctext = match std::fs::read_to_string(&cpath) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read current {cpath}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let (regressions, checked, skipped) = compare(&btext, &ctext, tolerance);
+    println!(
+        "bench_check: {checked} metric(s) compared, {skipped} unfilled baseline metric(s) \
+         skipped, tolerance {:.0}%",
+        tolerance * 100.0
+    );
+    if regressions.is_empty() {
+        println!("OK: no regression beyond tolerance");
+        return ExitCode::SUCCESS;
+    }
+    for r in &regressions {
+        eprintln!(
+            "REGRESSION {}: {} {} -> {} ({:.1}% of baseline, floor {:.1}%)",
+            r.id,
+            r.metric,
+            r.base,
+            r.cur,
+            r.ratio * 100.0,
+            (1.0 - tolerance) * 100.0
+        );
+    }
+    ExitCode::FAILURE
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SERVE: &str = r#"[
+  {"bench":"MLP 784-512-256-10","config":"4 workers, batch 64","workers":4,"batch":64,"req_per_s":100000,"us_per_iter":0.00,"simd":"avx2","threads":8},
+  {"bench":"http_open_loop MLP","config":"1.0x saturation","workers":8,"batch":64,"req_per_s":90000,"us_per_iter":0.00,"offered_per_s":95000,"p99_us":850.0,"simd":"avx2","threads":8}
+]"#;
+
+    const KERNELS: &str = r#"[
+  {"kernel":"xnor_threshold","dims":"512x784x64","threads":1,"simd":"avx2","ns_per_iter":1200.0,"gops":3.100}
+]"#;
+
+    #[test]
+    fn field_extraction() {
+        let line = r#"{"bench":"a b","config":"c, d","req_per_s":123,"p99_us":4.5}"#;
+        assert_eq!(field(line, "bench").as_deref(), Some("a b"));
+        // string values may contain commas; the scan stops at the quote
+        assert_eq!(field(line, "config").as_deref(), Some("c, d"));
+        assert_eq!(num_field(line, "req_per_s"), Some(123.0));
+        assert_eq!(num_field(line, "p99_us"), Some(4.5));
+        assert_eq!(field(line, "missing"), None);
+    }
+
+    #[test]
+    fn identity_keys() {
+        let serve = parse_records(SERVE);
+        assert_eq!(serve.len(), 2);
+        assert!(serve.contains_key("MLP 784-512-256-10 | 4 workers, batch 64"));
+        let kern = parse_records(KERNELS);
+        assert!(kern.contains_key("xnor_threshold | 512x784x64 | t1 | avx2"));
+    }
+
+    #[test]
+    fn passes_within_tolerance() {
+        let cur = SERVE.replace("\"req_per_s\":100000", "\"req_per_s\":85000");
+        let (regs, checked, _) = compare(SERVE, &cur, 0.20);
+        assert!(regs.is_empty(), "15% drop is within 20% tolerance");
+        assert!(checked >= 3);
+    }
+
+    #[test]
+    fn fails_beyond_tolerance_throughput() {
+        let cur = SERVE.replace("\"req_per_s\":100000", "\"req_per_s\":70000");
+        let (regs, _, _) = compare(SERVE, &cur, 0.20);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].metric, "req_per_s");
+    }
+
+    #[test]
+    fn fails_on_latency_increase() {
+        let cur = KERNELS.replace("\"ns_per_iter\":1200.0", "\"ns_per_iter\":2000.0");
+        let (regs, _, _) = compare(KERNELS, &cur, 0.20);
+        // ns_per_iter 1200 -> 2000 is a 40% slowdown; gops unchanged
+        assert!(regs.iter().any(|r| r.metric == "ns_per_iter"));
+    }
+
+    #[test]
+    fn zero_baseline_is_unfilled_sentinel() {
+        let base = SERVE.replace("\"req_per_s\":100000", "\"req_per_s\":0");
+        let cur = SERVE.replace("\"req_per_s\":100000", "\"req_per_s\":1");
+        let (regs, _, skipped) = compare(&base, &cur, 0.20);
+        assert!(regs.is_empty(), "zero baseline must be skipped, not compared");
+        assert!(skipped >= 1);
+    }
+
+    #[test]
+    fn missing_rows_never_fail() {
+        let (regs, _, _) = compare(SERVE, KERNELS, 0.20);
+        assert!(regs.is_empty());
+    }
+
+    #[test]
+    fn validate_accepts_emitter_output_and_rejects_junk() {
+        assert!(validate("s", SERVE).is_ok());
+        assert!(validate("k", KERNELS).is_ok());
+        assert!(validate("e", "[]\n").is_err());
+        assert!(validate("j", "{\"bench\":\"x\",\"config\":\"y\"}").is_err());
+    }
+}

@@ -6,6 +6,8 @@
 //!   energy       [--arch vgg|resnet] [--base N] [--batch N]
 //!   serve-native [--model CKPT] [--workers N] [--batch N] …
 //!                                      (native packed-bit batch server)
+//!   serve-http   [--listen ADDR] [--model NAME=CKPT]… [--threads N] …
+//!                                      (zero-dependency TCP/HTTP front-end)
 //!   serve        [--artifacts DIR]     (PJRT demo, feature xla-runtime)
 //!   info                               (build + feature + artifact status)
 
@@ -28,6 +30,10 @@ USAGE:
   bold energy [--arch vgg|resnet] [--base N] [--batch N] [--inference]
   bold serve-native [--model CKPT] [--workers N] [--batch N] [--requests N]
               [--clients N] [--window-us U] [--queue N]
+  bold serve-http [--listen HOST:PORT] [--model NAME=CKPT]... [--threads N]
+              [--workers N] [--batch N] [--queue N] [--window-us U]
+              [--deadline-ms D] [--for-secs S]
+              (POST /v1/models/NAME/predict; GET /healthz /v1/models /stats)
   bold serve  [--artifacts DIR]                 (needs --features xla-runtime)
   bold info
 "#,
@@ -45,6 +51,7 @@ fn main() {
         "report" => cmd_report(rest),
         "energy" => cmd_energy(rest),
         "serve-native" => cmd_serve_native(rest),
+        "serve-http" => cmd_serve_http(rest),
         "serve" => cmd_serve(rest),
         "info" => cmd_info(),
         "-h" | "--help" | "help" => usage(),
@@ -391,6 +398,101 @@ fn cmd_serve_native(args: &[String]) -> Result<(), String> {
         pct(0.50),
         pct(0.95),
         pct(0.99)
+    );
+    Ok(())
+}
+
+/// TCP/HTTP-1.1 front-end over the native packed-bit server: register
+/// one or more checkpoints under names, bind a listener and serve until
+/// `POST /admin/shutdown`, Ctrl-C, or `--for-secs` elapses. Knobs not
+/// given as flags fall back to the `BOLD_HTTP_*` environment variables
+/// (see README §Serving knobs).
+fn cmd_serve_http(args: &[String]) -> Result<(), String> {
+    use bold::runtime::{HttpConfig, HttpServer, ModelRegistry, PackedGraph, ServeConfig};
+    use std::time::Duration;
+
+    let (kv, _) = parse_kv(args)?;
+    let mut listen = "127.0.0.1:7878".to_string();
+    let mut models: Vec<(String, String)> = Vec::new(); // (name, ckpt path)
+    let mut workers = 4usize;
+    let mut batch = 64usize;
+    let mut queue_cap = 1024usize;
+    let mut window_us = 200u64;
+    let mut for_secs: Option<u64> = None;
+    let mut cfg = HttpConfig::default();
+    for (k, v) in &kv {
+        match k.as_str() {
+            "listen" => listen = v.clone(),
+            "model" => {
+                let (name, path) = v
+                    .split_once('=')
+                    .ok_or_else(|| format!("--model wants NAME=CKPT, got '{v}'"))?;
+                models.push((name.to_string(), path.to_string()));
+            }
+            "threads" => cfg.threads = v.parse().map_err(|_| "bad --threads")?,
+            "workers" => workers = v.parse().map_err(|_| "bad --workers")?,
+            "batch" => batch = v.parse().map_err(|_| "bad --batch")?,
+            "queue" => queue_cap = v.parse().map_err(|_| "bad --queue")?,
+            "window-us" => window_us = v.parse().map_err(|_| "bad --window-us")?,
+            "deadline-ms" => {
+                cfg.request_deadline =
+                    Duration::from_millis(v.parse().map_err(|_| "bad --deadline-ms")?)
+            }
+            "for-secs" => for_secs = Some(v.parse().map_err(|_| "bad --for-secs")?),
+            _ => return Err(format!("unknown option --{k}")),
+        }
+    }
+    if workers == 0 || batch == 0 || queue_cap == 0 || cfg.threads == 0 {
+        return Err("--threads/--workers/--batch/--queue must be >= 1".into());
+    }
+    let serve_cfg = ServeConfig {
+        workers,
+        max_batch: batch,
+        queue_cap,
+        batch_window: Duration::from_micros(window_us),
+    };
+    let mut registry = ModelRegistry::default();
+    if models.is_empty() {
+        println!("no --model given — serving a randomly initialised MLP as 'mlp'");
+        let mut model = boolean_mlp(&MlpConfig::default(), &mut Rng::new(7));
+        let graph = bold::runtime::PackedGraph::from_layer(&mut model).map_err(|e| e.to_string())?;
+        registry.add("mlp", graph, serve_cfg.clone()).map_err(|e| e.to_string())?;
+    }
+    for (name, path) in &models {
+        let graph = PackedGraph::load(path).map_err(|e| format!("{name}: {e}"))?;
+        println!(
+            "model '{name}' from {path}: {} ops [{}], d_in {}, d_out {}",
+            graph.num_ops(),
+            graph.summary(),
+            graph.d_in(),
+            graph.d_out()
+        );
+        registry.add(name, graph, serve_cfg.clone()).map_err(|e| e.to_string())?;
+    }
+    let server = HttpServer::start(registry, &listen, cfg).map_err(|e| e.to_string())?;
+    println!(
+        "listening on http://{} — {} http thread(s), {workers} worker(s)/model, micro-batch \
+         {batch} (window {window_us} µs), queue cap {queue_cap}",
+        server.local_addr(),
+        server.config().threads
+    );
+    println!("endpoints: POST /v1/models/<name>/predict · GET /healthz /v1/models /stats · POST /admin/shutdown");
+    match for_secs {
+        Some(secs) => std::thread::sleep(Duration::from_secs(secs)),
+        None => server.wait_for_shutdown(),
+    }
+    let stats = server.shutdown();
+    println!(
+        "drained: {} conns ({} rejected), {} requests — {} ok, {} shed, {} expired, {} client \
+         errors, {} aborted",
+        stats.connections,
+        stats.conns_rejected,
+        stats.requests,
+        stats.ok,
+        stats.shed,
+        stats.expired,
+        stats.client_err,
+        stats.aborted
     );
     Ok(())
 }

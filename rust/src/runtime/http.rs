@@ -1,0 +1,648 @@
+//! Incremental, zero-dependency HTTP/1.1 request parser and response
+//! writer (DESIGN.md §Network-Front-End).
+//!
+//! The parser is built for a serving hot loop, not a general web stack:
+//!
+//! * **incremental** — [`HttpParser::feed`] accepts bytes in arbitrary
+//!   chunks (one syscall's worth, or one byte at a time from a
+//!   slow-loris client) and is split-point invariant: any partition of
+//!   the byte stream produces the identical parse
+//!   (`tests/http_parser.rs` proves this for every boundary);
+//! * **bounded** — head bytes, header count and declared body length are
+//!   all capped by [`HttpLimits`]; violations surface as typed
+//!   [`HttpError`]s carrying the status code to send back (431/413/…),
+//!   so a hostile peer can never make the connection buffer grow without
+//!   bound;
+//! * **allocation-free in steady state** — one reusable byte buffer and
+//!   one reusable header-range table per connection; parsed fields are
+//!   index ranges into the buffer, and [`HttpParser::consume`] recycles
+//!   both for the next keep-alive request without shrinking capacity;
+//! * **panic-free on arbitrary input** — every malformed byte pattern
+//!   maps to a clean `HttpError` (the property suite feeds random
+//!   mutations and asserts no panic ever escapes).
+//!
+//! Deliberate non-goals, rejected with precise statuses rather than
+//! misparsed: chunked transfer encoding (501), HTTP/2+ (505), multiline
+//! header folding (400).
+
+use std::fmt;
+
+/// Hard caps on what one request may buffer.
+#[derive(Debug, Clone)]
+pub struct HttpLimits {
+    /// Request line + headers + blank line, in bytes (431 when exceeded).
+    pub max_head_bytes: usize,
+    /// Declared `Content-Length` cap in bytes (413 when exceeded).
+    pub max_body_bytes: usize,
+    /// Header count cap (431 when exceeded).
+    pub max_headers: usize,
+}
+
+impl Default for HttpLimits {
+    fn default() -> Self {
+        HttpLimits {
+            max_head_bytes: 16 * 1024,
+            max_body_bytes: 1 << 20,
+            max_headers: 64,
+        }
+    }
+}
+
+/// A parse failure, carrying the HTTP status the connection should
+/// answer with before closing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpError {
+    pub status: u16,
+    pub msg: String,
+}
+
+impl HttpError {
+    pub fn new(status: u16, msg: impl Into<String>) -> Self {
+        HttpError { status, msg: msg.into() }
+    }
+}
+
+impl fmt::Display for HttpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} {}: {}", self.status, reason(self.status), self.msg)
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+/// Result of feeding bytes: either a full request is buffered and
+/// every accessor is valid, or more bytes are needed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Parse {
+    /// The request (head + declared body) is complete.
+    Ready,
+    /// Valid so far; keep reading.
+    NeedMore,
+}
+
+type Range = (usize, usize);
+
+/// Incremental parser for one connection. Reuse across keep-alive
+/// requests via [`HttpParser::consume`]; a returned [`HttpError`] is
+/// sticky — the connection is expected to answer it and close.
+pub struct HttpParser {
+    limits: HttpLimits,
+    buf: Vec<u8>,
+    /// Newline scan cursor (avoids rescanning on byte-at-a-time feeds).
+    scan: usize,
+    /// Byte offset where the current line started.
+    line_start: usize,
+    head_done: bool,
+    /// Head length including the blank line, once `head_done`.
+    head_len: usize,
+    /// Declared body length (0 when absent).
+    body_len: usize,
+    method: Range,
+    path: Range,
+    http11: bool,
+    keep_alive: bool,
+    expect_continue: bool,
+    headers: Vec<(Range, Range)>,
+    err: Option<HttpError>,
+}
+
+impl HttpParser {
+    pub fn new(limits: HttpLimits) -> Self {
+        HttpParser {
+            limits,
+            buf: Vec::with_capacity(1024),
+            scan: 0,
+            line_start: 0,
+            head_done: false,
+            head_len: 0,
+            body_len: 0,
+            method: (0, 0),
+            path: (0, 0),
+            http11: true,
+            keep_alive: true,
+            expect_continue: false,
+            headers: Vec::with_capacity(16),
+            err: None,
+        }
+    }
+
+    /// Bytes currently buffered (bounded-memory assertion hook).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Append `bytes` and advance the parse.
+    pub fn feed(&mut self, bytes: &[u8]) -> Result<Parse, HttpError> {
+        if let Some(e) = &self.err {
+            return Err(e.clone());
+        }
+        self.buf.extend_from_slice(bytes);
+        match self.advance() {
+            Ok(p) => Ok(p),
+            Err(e) => {
+                self.err = Some(e.clone());
+                Err(e)
+            }
+        }
+    }
+
+    fn advance(&mut self) -> Result<Parse, HttpError> {
+        if !self.head_done {
+            // scan for the blank line ending the head, one line at a time
+            while !self.head_done {
+                let Some(nl) = self.buf[self.scan..].iter().position(|&b| b == b'\n') else {
+                    self.scan = self.buf.len();
+                    if self.buf.len() > self.limits.max_head_bytes {
+                        return Err(HttpError::new(
+                            431,
+                            format!("request head exceeds {} bytes", self.limits.max_head_bytes),
+                        ));
+                    }
+                    return Ok(Parse::NeedMore);
+                };
+                let nl = self.scan + nl;
+                let mut line_end = nl;
+                if line_end > self.line_start && self.buf[line_end - 1] == b'\r' {
+                    line_end -= 1;
+                }
+                let line = (self.line_start, line_end);
+                let at_request_line = self.line_start == 0;
+                self.scan = nl + 1;
+                self.line_start = nl + 1;
+                if nl + 1 > self.limits.max_head_bytes {
+                    return Err(HttpError::new(
+                        431,
+                        format!("request head exceeds {} bytes", self.limits.max_head_bytes),
+                    ));
+                }
+                if line.0 == line.1 {
+                    if at_request_line {
+                        // tolerate leading blank line(s)? No: strict 400,
+                        // an empty request line is malformed.
+                        return Err(HttpError::new(400, "empty request line"));
+                    }
+                    self.head_len = nl + 1;
+                    self.head_done = true;
+                    self.finish_head()?;
+                    break;
+                }
+                if at_request_line {
+                    self.parse_request_line(line)?;
+                } else {
+                    self.parse_header_line(line)?;
+                }
+            }
+        }
+        if self.buf.len() >= self.head_len + self.body_len {
+            Ok(Parse::Ready)
+        } else {
+            Ok(Parse::NeedMore)
+        }
+    }
+
+    fn parse_request_line(&mut self, (s, e): Range) -> Result<(), HttpError> {
+        // METHOD SP PATH SP VERSION — exactly three tokens
+        let line = &self.buf[s..e];
+        if line.iter().any(|&b| b < 0x20 || b == 0x7f) {
+            return Err(HttpError::new(400, "control byte in request line"));
+        }
+        let mut parts = [(0usize, 0usize); 3];
+        let mut n = 0;
+        let mut i = 0;
+        while i < line.len() {
+            if line[i] == b' ' {
+                i += 1;
+                continue;
+            }
+            let start = i;
+            while i < line.len() && line[i] != b' ' {
+                i += 1;
+            }
+            if n == 3 {
+                return Err(HttpError::new(400, "malformed request line"));
+            }
+            parts[n] = (s + start, s + i);
+            n += 1;
+        }
+        if n != 3 {
+            return Err(HttpError::new(400, "malformed request line"));
+        }
+        let method = &self.buf[parts[0].0..parts[0].1];
+        if method.is_empty() || method.len() > 16 || !method.iter().all(u8::is_ascii_uppercase) {
+            return Err(HttpError::new(400, "malformed method"));
+        }
+        let path = &self.buf[parts[1].0..parts[1].1];
+        if path.first() != Some(&b'/') {
+            return Err(HttpError::new(400, "request target must be origin-form (/path)"));
+        }
+        let version = &self.buf[parts[2].0..parts[2].1];
+        self.http11 = match version {
+            b"HTTP/1.1" => true,
+            b"HTTP/1.0" => false,
+            _ => return Err(HttpError::new(505, "only HTTP/1.0 and HTTP/1.1 are supported")),
+        };
+        self.keep_alive = self.http11;
+        self.method = parts[0];
+        self.path = parts[1];
+        Ok(())
+    }
+
+    fn parse_header_line(&mut self, (s, e): Range) -> Result<(), HttpError> {
+        let line = &self.buf[s..e];
+        if line.iter().any(|&b| b < 0x20 && b != b'\t' || b == 0x7f) {
+            return Err(HttpError::new(400, "control byte in header"));
+        }
+        if line[0] == b' ' || line[0] == b'\t' {
+            return Err(HttpError::new(400, "obsolete header folding is not supported"));
+        }
+        let Some(colon) = line.iter().position(|&b| b == b':') else {
+            return Err(HttpError::new(400, "header line without ':'"));
+        };
+        let name = &line[..colon];
+        if name.is_empty()
+            || !name
+                .iter()
+                .all(|&b| b.is_ascii_alphanumeric() || matches!(b, b'-' | b'_' | b'.'))
+        {
+            return Err(HttpError::new(400, "malformed header name"));
+        }
+        // trim optional whitespace around the value
+        let mut vs = colon + 1;
+        let mut ve = line.len();
+        while vs < ve && (line[vs] == b' ' || line[vs] == b'\t') {
+            vs += 1;
+        }
+        while ve > vs && (line[ve - 1] == b' ' || line[ve - 1] == b'\t') {
+            ve -= 1;
+        }
+        if self.headers.len() == self.limits.max_headers {
+            return Err(HttpError::new(
+                431,
+                format!("more than {} headers", self.limits.max_headers),
+            ));
+        }
+        self.headers.push(((s, s + colon), (s + vs, s + ve)));
+        Ok(())
+    }
+
+    /// Head fully buffered: resolve framing + connection semantics.
+    fn finish_head(&mut self) -> Result<(), HttpError> {
+        if self.header("transfer-encoding").is_some() {
+            return Err(HttpError::new(
+                501,
+                "transfer-encoding is not supported; send Content-Length",
+            ));
+        }
+        let mut body_len = 0usize;
+        match self.header("content-length") {
+            Some(v) => {
+                let v = v.trim();
+                body_len = v
+                    .parse::<u64>()
+                    .ok()
+                    .and_then(|n| usize::try_from(n).ok())
+                    .ok_or_else(|| HttpError::new(400, "malformed Content-Length"))?;
+            }
+            None => {
+                if self.method() == "POST" || self.method() == "PUT" {
+                    return Err(HttpError::new(411, "POST requires Content-Length"));
+                }
+            }
+        }
+        if body_len > self.limits.max_body_bytes {
+            return Err(HttpError::new(
+                413,
+                format!("body of {body_len} bytes exceeds cap {}", self.limits.max_body_bytes),
+            ));
+        }
+        self.body_len = body_len;
+        let conn = self.header("connection").map(|c| {
+            if c.eq_ignore_ascii_case("close") {
+                Some(false)
+            } else if c.eq_ignore_ascii_case("keep-alive") {
+                Some(true)
+            } else {
+                None
+            }
+        });
+        if let Some(Some(ka)) = conn {
+            self.keep_alive = ka;
+        }
+        let expect = self.header("expect").map(|ex| ex.eq_ignore_ascii_case("100-continue"));
+        match expect {
+            Some(true) => self.expect_continue = true,
+            Some(false) => return Err(HttpError::new(417, "unsupported Expect")),
+            None => {}
+        }
+        Ok(())
+    }
+
+    // -- accessors (valid once the head has parsed; empty/default before) --
+
+    fn str_at(&self, (s, e): Range) -> &str {
+        // head bytes were verified ASCII-printable during the line parses
+        std::str::from_utf8(&self.buf[s..e]).unwrap_or("")
+    }
+
+    /// True once the request line + headers are fully parsed (the body
+    /// may still be streaming in) — the point to answer `Expect:
+    /// 100-continue`.
+    pub fn head_complete(&self) -> bool {
+        self.head_done
+    }
+
+    pub fn method(&self) -> &str {
+        self.str_at(self.method)
+    }
+
+    pub fn path(&self) -> &str {
+        self.str_at(self.path)
+    }
+
+    /// Case-insensitive single-header lookup (first match).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| self.str_at(*n).eq_ignore_ascii_case(name))
+            .map(|(_, v)| self.str_at(*v))
+    }
+
+    pub fn num_headers(&self) -> usize {
+        self.headers.len()
+    }
+
+    /// Declared body length.
+    pub fn content_length(&self) -> usize {
+        self.body_len
+    }
+
+    /// The request body (complete only in the `Ready` state).
+    pub fn body(&self) -> &[u8] {
+        let s = self.head_len.min(self.buf.len());
+        let e = (self.head_len + self.body_len).min(self.buf.len());
+        &self.buf[s..e]
+    }
+
+    /// Connection persistence after this request (version default +
+    /// `Connection:` override).
+    pub fn keep_alive(&self) -> bool {
+        self.keep_alive
+    }
+
+    pub fn is_http11(&self) -> bool {
+        self.http11
+    }
+
+    pub fn expects_continue(&self) -> bool {
+        self.expect_continue
+    }
+
+    /// Full reset for reuse on a *new connection*: drops all buffered
+    /// bytes (keeping capacity) and clears any sticky error.
+    pub fn reset(&mut self) {
+        self.buf.clear();
+        self.scan = 0;
+        self.line_start = 0;
+        self.head_done = false;
+        self.head_len = 0;
+        self.body_len = 0;
+        self.method = (0, 0);
+        self.path = (0, 0);
+        self.http11 = true;
+        self.keep_alive = true;
+        self.expect_continue = false;
+        self.headers.clear();
+        self.err = None;
+    }
+
+    /// Drop the parsed request's bytes (keeping any pipelined tail) and
+    /// reset for the next request on this connection. Capacity is kept —
+    /// the steady-state keep-alive loop does not allocate.
+    pub fn consume(&mut self) -> Result<Parse, HttpError> {
+        debug_assert!(self.head_done, "consume before a complete head");
+        let total = (self.head_len + self.body_len).min(self.buf.len());
+        self.buf.drain(..total);
+        self.scan = 0;
+        self.line_start = 0;
+        self.head_done = false;
+        self.head_len = 0;
+        self.body_len = 0;
+        self.method = (0, 0);
+        self.path = (0, 0);
+        self.http11 = true;
+        self.keep_alive = true;
+        self.expect_continue = false;
+        self.headers.clear();
+        self.err = None;
+        self.advance().inspect_err(|e| self.err = Some(e.clone()))
+    }
+}
+
+/// Canonical reason phrase for the statuses this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        100 => "Continue",
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        417 => "Expectation Failed",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// Reusable response serializer: renders one flat buffer per response so
+/// the socket write is a single `write_all` (no interleaving, no partial
+/// heads on a killed connection).
+pub struct ResponseWriter {
+    buf: Vec<u8>,
+}
+
+impl ResponseWriter {
+    pub fn new() -> Self {
+        ResponseWriter { buf: Vec::with_capacity(512) }
+    }
+
+    /// Render `status` + headers + body. `extra` headers are emitted
+    /// verbatim; `Content-Length` and `Connection` are always set here.
+    pub fn render(
+        &mut self,
+        status: u16,
+        extra: &[(&str, &str)],
+        body: &[u8],
+        keep_alive: bool,
+    ) -> &[u8] {
+        use std::io::Write;
+        self.buf.clear();
+        let _ = write!(self.buf, "HTTP/1.1 {status} {}\r\n", reason(status));
+        let _ = write!(self.buf, "Content-Length: {}\r\n", body.len());
+        let _ = write!(
+            self.buf,
+            "Connection: {}\r\n",
+            if keep_alive { "keep-alive" } else { "close" }
+        );
+        for (k, v) in extra {
+            let _ = write!(self.buf, "{k}: {v}\r\n");
+        }
+        self.buf.extend_from_slice(b"\r\n");
+        self.buf.extend_from_slice(body);
+        &self.buf
+    }
+}
+
+impl Default for ResponseWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_all(bytes: &[u8]) -> (HttpParser, Result<Parse, HttpError>) {
+        let mut p = HttpParser::new(HttpLimits::default());
+        let r = p.feed(bytes);
+        (p, r)
+    }
+
+    #[test]
+    fn parses_simple_get() {
+        let (p, r) = parse_all(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert_eq!(r, Ok(Parse::Ready));
+        assert_eq!(p.method(), "GET");
+        assert_eq!(p.path(), "/healthz");
+        assert_eq!(p.header("host"), Some("x"));
+        assert_eq!(p.header("HOST"), Some("x"));
+        assert!(p.keep_alive());
+        assert_eq!(p.body(), b"");
+    }
+
+    #[test]
+    fn parses_post_with_body_incrementally() {
+        let raw = b"POST /v1/models/m/predict HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello";
+        let mut p = HttpParser::new(HttpLimits::default());
+        for b in &raw[..raw.len() - 1] {
+            assert_eq!(p.feed(std::slice::from_ref(b)), Ok(Parse::NeedMore));
+        }
+        assert_eq!(p.feed(&raw[raw.len() - 1..]), Ok(Parse::Ready));
+        assert_eq!(p.method(), "POST");
+        assert_eq!(p.body(), b"hello");
+    }
+
+    #[test]
+    fn lf_only_line_endings_accepted() {
+        let (p, r) = parse_all(b"GET / HTTP/1.1\nHost: y\n\n");
+        assert_eq!(r, Ok(Parse::Ready));
+        assert_eq!(p.header("host"), Some("y"));
+    }
+
+    #[test]
+    fn http10_defaults_to_close() {
+        let (p, r) = parse_all(b"GET / HTTP/1.0\r\n\r\n");
+        assert_eq!(r, Ok(Parse::Ready));
+        assert!(!p.keep_alive());
+    }
+
+    #[test]
+    fn connection_close_honoured() {
+        let (p, _) = parse_all(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(!p.keep_alive());
+    }
+
+    #[test]
+    fn rejects_malformed_inputs_with_statuses() {
+        for (raw, status) in [
+            (&b"BADLY FORMED\r\n\r\n"[..], 400),
+            (b"GET /x HTTP/2.0\r\n\r\n", 505),
+            (b"get / HTTP/1.1\r\n\r\n", 400),
+            (b"GET x HTTP/1.1\r\n\r\n", 400),
+            (b"GET / HTTP/1.1\r\nNoColon\r\n\r\n", 400),
+            (b"GET / HTTP/1.1\r\n: novalue\r\n\r\n", 400),
+            (b"POST / HTTP/1.1\r\n\r\n", 411),
+            (b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n", 400),
+            (b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n", 501),
+            (b"GET / HTTP/1.1\r\nExpect: voodoo\r\n\r\n", 417),
+            (b"\r\n\r\n", 400),
+        ] {
+            let (_, r) = parse_all(raw);
+            assert_eq!(
+                r.err().map(|e| e.status),
+                Some(status),
+                "input {:?}",
+                String::from_utf8_lossy(raw)
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_head_and_body_capped() {
+        let limits = HttpLimits { max_head_bytes: 64, max_body_bytes: 16, max_headers: 4 };
+        let mut p = HttpParser::new(limits.clone());
+        // no newline at all: cap still fires
+        let r = p.feed(&[b'A'; 65]);
+        assert_eq!(r.err().map(|e| e.status), Some(431));
+
+        let mut p = HttpParser::new(limits.clone());
+        let r = p.feed(b"POST / HTTP/1.1\r\nContent-Length: 17\r\n\r\n");
+        assert_eq!(r.err().map(|e| e.status), Some(413));
+
+        let mut p = HttpParser::new(limits);
+        let r = p.feed(b"GET / HTTP/1.1\r\na: 1\r\nb: 2\r\nc: 3\r\nd: 4\r\ne: 5\r\n\r\n");
+        assert_eq!(r.err().map(|e| e.status), Some(431));
+    }
+
+    #[test]
+    fn errors_are_sticky() {
+        let mut p = HttpParser::new(HttpLimits::default());
+        assert!(p.feed(b"BAD\r\n\r\n").is_err());
+        assert_eq!(p.feed(b"GET / HTTP/1.1\r\n\r\n").err().map(|e| e.status), Some(400));
+    }
+
+    #[test]
+    fn keep_alive_consume_recycles_and_pipelines() {
+        let mut p = HttpParser::new(HttpLimits::default());
+        let two = b"POST /a HTTP/1.1\r\nContent-Length: 2\r\n\r\nhiGET /b HTTP/1.1\r\n\r\n";
+        assert_eq!(p.feed(two), Ok(Parse::Ready));
+        assert_eq!(p.path(), "/a");
+        assert_eq!(p.body(), b"hi");
+        // second pipelined request becomes ready straight from consume
+        assert_eq!(p.consume(), Ok(Parse::Ready));
+        assert_eq!(p.method(), "GET");
+        assert_eq!(p.path(), "/b");
+        assert_eq!(p.body(), b"");
+        assert_eq!(p.consume(), Ok(Parse::NeedMore));
+        assert_eq!(p.buffered(), 0);
+    }
+
+    #[test]
+    fn expect_continue_detected_at_head() {
+        let mut p = HttpParser::new(HttpLimits::default());
+        let r = p.feed(b"POST / HTTP/1.1\r\nContent-Length: 3\r\nExpect: 100-continue\r\n\r\n");
+        assert_eq!(r, Ok(Parse::NeedMore));
+        assert!(p.head_complete());
+        assert!(p.expects_continue());
+        assert_eq!(p.feed(b"abc"), Ok(Parse::Ready));
+    }
+
+    #[test]
+    fn response_writer_renders_exact_bytes() {
+        let mut w = ResponseWriter::new();
+        let out = w.render(503, &[("Retry-After", "1")], b"busy", false);
+        let s = std::str::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        assert!(s.contains("Content-Length: 4\r\n"));
+        assert!(s.contains("Connection: close\r\n"));
+        assert!(s.contains("Retry-After: 1\r\n"));
+        assert!(s.ends_with("\r\n\r\nbusy"));
+    }
+}

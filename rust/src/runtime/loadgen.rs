@@ -1,0 +1,320 @@
+//! Open-loop HTTP load harness for the network front-end
+//! (DESIGN.md §Network-Front-End, EXPERIMENTS.md §Perf).
+//!
+//! The point of *open-loop* generation: requests are fired on a fixed
+//! arrival schedule (`t_i = t_0 + i/λ`) regardless of whether earlier
+//! requests have completed. A closed-loop driver (send → wait → send)
+//! self-throttles when the server slows down, which silently hides
+//! overload — exactly the regime the BOLD serving claim is about.
+//! Latency here is measured **from the scheduled arrival time**, not
+//! from the actual send, so queueing delay caused by a saturated server
+//! (or a busy sender thread) is charged to the server — the
+//! coordinated-omission-corrected number.
+//!
+//! Zero-dependency client: hand-rolled HTTP/1.1 over `TcpStream` with
+//! keep-alive, one outstanding request per connection, reconnect on
+//! error. Used by `benches/bench_serve.rs` (0.5×/1×/2× saturation
+//! sweep) and by the CI fixed-rate smoke test in `tests/net_parity.rs`.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Outcome of one load run.
+#[derive(Debug, Clone, Default)]
+pub struct LoadReport {
+    /// Target arrival rate (requests/second).
+    pub offered_per_s: f64,
+    /// Wall-clock duration of the measured window.
+    pub duration_s: f64,
+    /// Requests actually sent (≈ offered × duration; lateness never
+    /// drops arrivals, they fire back-to-back when behind schedule).
+    pub sent: usize,
+    /// `200` responses.
+    pub ok: usize,
+    /// `503` shed responses (the deliberate overload answer).
+    pub shed: usize,
+    /// `504` deadline expiries.
+    pub expired: usize,
+    /// Other `4xx` responses.
+    pub other_4xx: usize,
+    /// `5xx` other than 503/504 — should be **zero** in any healthy run.
+    pub other_5xx: usize,
+    /// Transport failures (connect/read/write errors).
+    pub io_errors: usize,
+    /// Latency percentiles over successful (`200`) requests, µs,
+    /// measured from the scheduled arrival time.
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    /// Successful responses per second of the measured window.
+    pub goodput_per_s: f64,
+}
+
+impl LoadReport {
+    /// Merge percentile inputs happens in [`open_loop`]; this is the
+    /// one-line human summary used by the bench and the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "offered {:>8.0}/s  goodput {:>8.0}/s  shed {:>5}  504 {:>3}  err {:>3}  \
+             p50 {:>8.1}µs  p99 {:>9.1}µs  p999 {:>9.1}µs",
+            self.offered_per_s,
+            self.goodput_per_s,
+            self.shed,
+            self.expired,
+            self.other_4xx + self.other_5xx + self.io_errors,
+            self.p50_us,
+            self.p99_us,
+            self.p999_us
+        )
+    }
+}
+
+/// One keep-alive client connection with reusable buffers.
+struct Client {
+    addr: String,
+    stream: Option<TcpStream>,
+    buf: Vec<u8>,
+}
+
+impl Client {
+    fn new(addr: &str) -> Self {
+        Client { addr: addr.to_string(), stream: None, buf: Vec::with_capacity(4096) }
+    }
+
+    fn ensure_connected(&mut self) -> std::io::Result<()> {
+        if self.stream.is_none() {
+            let s = TcpStream::connect(&self.addr)?;
+            s.set_nodelay(true)?;
+            s.set_read_timeout(Some(Duration::from_secs(10)))?;
+            s.set_write_timeout(Some(Duration::from_secs(10)))?;
+            self.stream = Some(s);
+        }
+        Ok(())
+    }
+
+    /// Send `request` (a fully rendered HTTP/1.1 request) and read one
+    /// response. Returns the status code and whether the server asked to
+    /// close. The response body is read to completion (keep-alive
+    /// framing) but not returned — the load path only needs the status.
+    fn roundtrip(&mut self, request: &[u8]) -> std::io::Result<u16> {
+        let res = self.roundtrip_inner(request);
+        if res.is_err() {
+            self.stream = None; // force reconnect after any transport error
+        }
+        res
+    }
+
+    fn roundtrip_inner(&mut self, request: &[u8]) -> std::io::Result<u16> {
+        self.ensure_connected()?;
+        // disjoint field borrows: `stream` and `buf` come straight off
+        // `self` so both can be held mutably at once
+        let stream = self.stream.as_mut().expect("connected above");
+        let buf = &mut self.buf;
+        stream.write_all(request)?;
+        buf.clear();
+        let mut chunk = [0u8; 4096];
+        // read head
+        let head_len = loop {
+            if let Some(p) = find_head_end(buf) {
+                break p;
+            }
+            let n = stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(std::io::Error::new(
+                    ErrorKind::UnexpectedEof,
+                    "connection closed mid-response",
+                ));
+            }
+            buf.extend_from_slice(&chunk[..n]);
+        };
+        let head = std::str::from_utf8(&buf[..head_len])
+            .map_err(|_| std::io::Error::new(ErrorKind::InvalidData, "non-utf8 head"))?;
+        let status: u16 = head
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| std::io::Error::new(ErrorKind::InvalidData, "bad status line"))?;
+        let content_length: usize = head
+            .lines()
+            .find_map(|l| {
+                let (k, v) = l.split_once(':')?;
+                k.trim().eq_ignore_ascii_case("content-length").then(|| v.trim().parse().ok())?
+            })
+            .unwrap_or(0);
+        let close = head.lines().any(|l| {
+            l.split_once(':').is_some_and(|(k, v)| {
+                k.trim().eq_ignore_ascii_case("connection")
+                    && v.trim().eq_ignore_ascii_case("close")
+            })
+        });
+        // read body to completion so the connection stays framed
+        while buf.len() < head_len + content_length {
+            let n = stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(std::io::Error::new(
+                    ErrorKind::UnexpectedEof,
+                    "connection closed mid-body",
+                ));
+            }
+            buf.extend_from_slice(&chunk[..n]);
+        }
+        if close {
+            self.stream = None;
+        }
+        Ok(status)
+    }
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + 4)
+}
+
+/// Render a `POST /v1/models/<model>/predict` request for `body`.
+pub fn render_predict(model: &str, body: &[u8], content_type: &str) -> Vec<u8> {
+    let mut req = format!(
+        "POST /v1/models/{model}/predict HTTP/1.1\r\nHost: bold\r\nContent-Type: \
+         {content_type}\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    )
+    .into_bytes();
+    req.extend_from_slice(body);
+    req
+}
+
+/// Blocking single request against `addr` (test/CLI convenience):
+/// returns `(status, response_ok_count == 1)` style status only.
+pub fn one_shot(addr: &str, request: &[u8]) -> std::io::Result<u16> {
+    let mut c = Client::new(addr);
+    c.roundtrip(request)
+}
+
+/// Closed-loop saturation probe: `conns` connections each firing
+/// back-to-back predict requests for `duration`. Returns achieved
+/// requests/second — the denominator for the 0.5×/1×/2× open-loop
+/// sweep. Non-200s count toward the rate (the server is answering), io
+/// errors do not.
+pub fn closed_loop_rate(addr: &str, request: &[u8], conns: usize, duration: Duration) -> f64 {
+    let done: Vec<usize> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..conns)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut c = Client::new(addr);
+                    let mut n = 0usize;
+                    let t0 = Instant::now();
+                    while t0.elapsed() < duration {
+                        if c.roundtrip(request).is_ok() {
+                            n += 1;
+                        }
+                    }
+                    n
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("probe thread")).collect()
+    });
+    done.iter().sum::<usize>() as f64 / duration.as_secs_f64()
+}
+
+/// Fixed-rate open-loop run: `rate_per_s` arrivals over `duration`,
+/// spread across `conns` sender connections (arrival `i` belongs to
+/// connection `i % conns`; a sender that falls behind fires immediately,
+/// and the lateness is charged to latency).
+pub fn open_loop(
+    addr: &str,
+    request: &[u8],
+    rate_per_s: f64,
+    duration: Duration,
+    conns: usize,
+) -> LoadReport {
+    assert!(rate_per_s > 0.0 && conns >= 1);
+    let total = (rate_per_s * duration.as_secs_f64()).round() as usize;
+    let interval = Duration::from_secs_f64(1.0 / rate_per_s);
+    let start = Instant::now() + Duration::from_millis(20); // let senders line up
+    struct Shard {
+        lat_us: Vec<f64>,
+        ok: usize,
+        shed: usize,
+        expired: usize,
+        other_4xx: usize,
+        other_5xx: usize,
+        io_errors: usize,
+        sent: usize,
+    }
+    let shards: Vec<Shard> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..conns)
+            .map(|c| {
+                s.spawn(move || {
+                    let mut sh = Shard {
+                        lat_us: Vec::with_capacity(total / conns + 1),
+                        ok: 0,
+                        shed: 0,
+                        expired: 0,
+                        other_4xx: 0,
+                        other_5xx: 0,
+                        io_errors: 0,
+                        sent: 0,
+                    };
+                    let mut client = Client::new(addr);
+                    let mut i = c;
+                    while i < total {
+                        let due = start + interval.mul_f64(i as f64);
+                        let now = Instant::now();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                        sh.sent += 1;
+                        match client.roundtrip(request) {
+                            Ok(status) => {
+                                // scheduled-time latency: queueing from a
+                                // late sender or a saturated server both
+                                // count (coordinated-omission corrected)
+                                let lat = due.elapsed().as_secs_f64() * 1e6;
+                                match status {
+                                    200..=299 => {
+                                        sh.ok += 1;
+                                        sh.lat_us.push(lat);
+                                    }
+                                    503 => sh.shed += 1,
+                                    504 => sh.expired += 1,
+                                    400..=499 => sh.other_4xx += 1,
+                                    _ => sh.other_5xx += 1,
+                                }
+                            }
+                            Err(_) => sh.io_errors += 1,
+                        }
+                        i += conns;
+                    }
+                    sh
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("sender thread")).collect()
+    });
+    let wall = start.elapsed().as_secs_f64();
+    let mut lat: Vec<f64> = Vec::with_capacity(total);
+    let mut rep = LoadReport { offered_per_s: rate_per_s, duration_s: wall, ..Default::default() };
+    for sh in shards {
+        lat.extend(sh.lat_us);
+        rep.ok += sh.ok;
+        rep.shed += sh.shed;
+        rep.expired += sh.expired;
+        rep.other_4xx += sh.other_4xx;
+        rep.other_5xx += sh.other_5xx;
+        rep.io_errors += sh.io_errors;
+        rep.sent += sh.sent;
+    }
+    lat.sort_unstable_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let pct = |p: f64| {
+        if lat.is_empty() {
+            0.0
+        } else {
+            lat[((lat.len() - 1) as f64 * p).round() as usize]
+        }
+    };
+    rep.p50_us = pct(0.50);
+    rep.p99_us = pct(0.99);
+    rep.p999_us = pct(0.999);
+    rep.goodput_per_s = rep.ok as f64 / wall.max(1e-9);
+    rep
+}

@@ -15,9 +15,17 @@
 //!   executes them from Rust (`bold serve`). Off by default so the
 //!   default build stays dependency-light; without the feature the CLI
 //!   degrades with a clear message instead of failing to compile.
+//!
+//! On top of the native path, [`http`] + [`net`] expose the server over
+//! real TCP with a zero-dependency HTTP/1.1 front-end (`bold
+//! serve-http`), and [`loadgen`] is the matching open-loop load harness
+//! (DESIGN.md §Network-Front-End).
 
 pub mod engine;
 pub mod graph;
+pub mod http;
+pub mod loadgen;
+pub mod net;
 #[cfg(feature = "xla-runtime")]
 pub mod pjrt;
 pub mod serve;
@@ -28,4 +36,9 @@ pub use graph::{
 };
 #[cfg(feature = "xla-runtime")]
 pub use pjrt::{literal_to_tensor, tensor_to_literal, PjrtError, PjrtExecutor};
-pub use serve::{NativeServer, Pending, Response, ServeConfig, ServeError, ServerStats};
+pub use http::{HttpError, HttpLimits, HttpParser, Parse, ResponseWriter};
+pub use loadgen::{closed_loop_rate, open_loop, render_predict, LoadReport};
+pub use net::{HttpConfig, HttpServer, HttpStats, ModelRegistry};
+pub use serve::{
+    NativeServer, Pending, Response, ServeConfig, ServeError, ServerStats, TrySubmitError,
+};

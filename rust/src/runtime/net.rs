@@ -1,0 +1,747 @@
+//! Zero-dependency TCP/HTTP-1.1 network front-end over the native batch
+//! server (DESIGN.md §Network-Front-End) — the piece that turns the
+//! in-process [`NativeServer`] into something a fleet of real clients
+//! can hit over a socket, without giving up the bounded-queue overload
+//! semantics the serving stack is built around.
+//!
+//! Architecture (one process, `bold serve-http`):
+//!
+//! * an **accept loop** (one thread, non-blocking listener) hands
+//!   accepted connections to a bounded [`JobQueue`] — when that queue is
+//!   full the connection is answered `503` and closed immediately, so a
+//!   connection flood degrades into fast rejections, never into memory
+//!   growth or accept backlog collapse;
+//! * **HTTP worker threads** (default `BOLD_HTTP_THREADS`) each run one
+//!   connection at a time through an incremental, bounded
+//!   [`HttpParser`]: keep-alive loops reuse the parser buffer and the
+//!   response writer, so the steady state allocates only the packed
+//!   request row and the response logits (both cross thread boundaries
+//!   by design). These threads are deliberately *not* the kernel pool
+//!   workers of [`crate::util::pool`]: they block on sockets for long
+//!   stretches, and sharing threads would starve the latency-critical
+//!   kernel shards — instead they reuse the pool module's bounded
+//!   [`JobQueue`] hand-off primitive and leave the compute pool to the
+//!   [`NativeServer`] batch workers;
+//! * a **multi-model registry** maps `POST /v1/models/<name>/predict`
+//!   to per-model [`NativeServer`]s, so one process serves several
+//!   checkpoints, each with its own bounded queue and micro-batcher.
+//!
+//! Overload + robustness semantics (exercised by `tests/net_faults.rs`):
+//!
+//! * **admission control**: a full model queue answers `503` +
+//!   `Retry-After` via the non-blocking [`NativeServer::try_submit`] —
+//!   an overloaded server sheds load in microseconds instead of
+//!   back-pressuring the socket and silently stalling every client
+//!   behind a TCP buffer;
+//! * **per-request deadline**: once a request is fully read it has
+//!   [`HttpConfig::request_deadline`] to produce logits; expiry answers
+//!   `504` (the enqueued work is still computed and discarded — a
+//!   deadline never wedges a batch worker);
+//! * **slow-loris defence**: per-read socket timeouts plus a total
+//!   [`HttpConfig::head_timeout`] per request; a client dribbling bytes
+//!   gets `408` and the connection back, a silent idle keep-alive
+//!   connection is closed without a response;
+//! * **graceful drain**: shutdown stops the accept loop, lets every
+//!   accepted connection finish its in-flight request (answered with
+//!   `Connection: close`), then drains the model queues — every
+//!   accepted request is answered.
+
+use super::graph::PackedGraph;
+use super::http::{HttpError, HttpLimits, HttpParser, Parse, ResponseWriter};
+use super::serve::{NativeServer, ServeConfig, ServeError, TrySubmitError};
+use crate::util::pool::JobQueue;
+use std::fmt::Write as _;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(default)
+}
+
+fn env_ms(name: &str, default_ms: u64) -> Duration {
+    Duration::from_millis(
+        std::env::var(name)
+            .ok()
+            .and_then(|s| s.trim().parse::<u64>().ok())
+            .unwrap_or(default_ms),
+    )
+}
+
+/// Front-end tuning knobs. [`Default`] reads the `BOLD_HTTP_*`
+/// environment (README §Runtime knobs); every field can also be set
+/// programmatically (the fault-injection tests pin tiny limits).
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// HTTP worker threads (connections served concurrently).
+    /// Env: `BOLD_HTTP_THREADS`.
+    pub threads: usize,
+    /// Parser caps: head bytes / body bytes / header count.
+    /// Env: `BOLD_HTTP_MAX_HEAD`, `BOLD_HTTP_MAX_BODY`.
+    pub limits: HttpLimits,
+    /// Per-`read(2)` timeout; also the idle keep-alive timeout.
+    /// Env: `BOLD_HTTP_READ_TIMEOUT_MS`.
+    pub read_timeout: Duration,
+    /// Per-`write(2)` timeout (slow readers cannot hold a worker).
+    pub write_timeout: Duration,
+    /// Total time one request may take to arrive, first byte to last
+    /// body byte (slow-loris cap ⇒ `408`).
+    /// Env: `BOLD_HTTP_HEAD_TIMEOUT_MS`.
+    pub head_timeout: Duration,
+    /// Deadline from fully-read request to response (`504` on expiry).
+    /// Env: `BOLD_HTTP_DEADLINE_MS`.
+    pub request_deadline: Duration,
+    /// Bounded accepted-connection queue (overflow ⇒ immediate `503`).
+    pub conn_backlog: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            threads: env_usize("BOLD_HTTP_THREADS", crate::util::pool::num_threads().clamp(2, 16)),
+            limits: HttpLimits {
+                max_head_bytes: env_usize("BOLD_HTTP_MAX_HEAD", 16 * 1024),
+                max_body_bytes: env_usize("BOLD_HTTP_MAX_BODY", 1 << 20),
+                max_headers: 64,
+            },
+            read_timeout: env_ms("BOLD_HTTP_READ_TIMEOUT_MS", 5_000),
+            write_timeout: env_ms("BOLD_HTTP_WRITE_TIMEOUT_MS", 5_000),
+            head_timeout: env_ms("BOLD_HTTP_HEAD_TIMEOUT_MS", 10_000),
+            request_deadline: env_ms("BOLD_HTTP_DEADLINE_MS", 2_000),
+            conn_backlog: env_usize("BOLD_HTTP_CONN_BACKLOG", 256),
+        }
+    }
+}
+
+/// Several frozen checkpoints behind one process: each entry owns a
+/// running [`NativeServer`] (bounded queue + batch workers), addressed
+/// by `POST /v1/models/<name>/predict`.
+pub struct ModelRegistry {
+    entries: Vec<(String, NativeServer)>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        ModelRegistry { entries: Vec::new() }
+    }
+
+    /// Start a batch server for `model` under `name`. Names are path
+    /// segments: `[A-Za-z0-9._-]+`, unique within the registry.
+    pub fn add(
+        &mut self,
+        name: &str,
+        model: impl Into<PackedGraph>,
+        cfg: ServeConfig,
+    ) -> Result<(), ServeError> {
+        if name.is_empty()
+            || !name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
+        {
+            return Err(ServeError { msg: format!("invalid model name '{name}'") });
+        }
+        if self.get(name).is_some() {
+            return Err(ServeError { msg: format!("duplicate model name '{name}'") });
+        }
+        self.entries.push((name.to_string(), NativeServer::start(model, cfg)));
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&NativeServer> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, s)| s)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+impl Default for ModelRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    connections: AtomicUsize,
+    conns_rejected: AtomicUsize,
+    requests: AtomicUsize,
+    ok: AtomicUsize,
+    client_err: AtomicUsize,
+    shed: AtomicUsize,
+    expired: AtomicUsize,
+    server_err: AtomicUsize,
+    aborted: AtomicUsize,
+}
+
+/// Monotonic front-end counters (a consistent-enough snapshot; each
+/// field is individually atomic).
+#[derive(Debug, Clone, Copy)]
+pub struct HttpStats {
+    /// Connections accepted.
+    pub connections: usize,
+    /// Connections rejected with `503` at the accept queue.
+    pub conns_rejected: usize,
+    /// Requests fully parsed and dispatched.
+    pub requests: usize,
+    /// `2xx` responses.
+    pub ok: usize,
+    /// `4xx` responses (including `408` slow-loris timeouts).
+    pub client_err: usize,
+    /// `503` shed responses (queue-full admission control).
+    pub shed: usize,
+    /// `504` deadline expiries.
+    pub expired: usize,
+    /// Other `5xx` responses.
+    pub server_err: usize,
+    /// Connections dropped mid-request by the peer (no response possible).
+    pub aborted: usize,
+}
+
+struct NetShared {
+    registry: ModelRegistry,
+    cfg: HttpConfig,
+    conns: JobQueue<TcpStream>,
+    shutdown: AtomicBool,
+    counters: Counters,
+}
+
+impl NetShared {
+    fn stats(&self) -> HttpStats {
+        let c = &self.counters;
+        let o = Ordering::SeqCst;
+        HttpStats {
+            connections: c.connections.load(o),
+            conns_rejected: c.conns_rejected.load(o),
+            requests: c.requests.load(o),
+            ok: c.ok.load(o),
+            client_err: c.client_err.load(o),
+            shed: c.shed.load(o),
+            expired: c.expired.load(o),
+            server_err: c.server_err.load(o),
+            aborted: c.aborted.load(o),
+        }
+    }
+
+    fn count_status(&self, status: u16) {
+        let c = &self.counters;
+        match status {
+            200..=299 => c.ok.fetch_add(1, Ordering::SeqCst),
+            503 => c.shed.fetch_add(1, Ordering::SeqCst),
+            504 => c.expired.fetch_add(1, Ordering::SeqCst),
+            400..=499 => c.client_err.fetch_add(1, Ordering::SeqCst),
+            _ => c.server_err.fetch_add(1, Ordering::SeqCst),
+        };
+    }
+}
+
+/// The running front-end: accept loop + HTTP workers around a
+/// [`ModelRegistry`]. Dropping (or calling [`HttpServer::shutdown`])
+/// drains gracefully.
+pub struct HttpServer {
+    shared: Arc<NetShared>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    addr: SocketAddr,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral test port) and
+    /// start serving.
+    pub fn start(registry: ModelRegistry, addr: &str, cfg: HttpConfig) -> std::io::Result<Self> {
+        assert!(cfg.threads >= 1, "need at least one HTTP thread");
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let conns = JobQueue::bounded(cfg.conn_backlog.max(1));
+        let shared = Arc::new(NetShared {
+            registry,
+            cfg,
+            conns,
+            shutdown: AtomicBool::new(false),
+            counters: Counters::default(),
+        });
+        let accept = {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("bold-http-accept".into())
+                .spawn(move || accept_loop(&sh, listener))
+                .expect("spawn accept thread")
+        };
+        let workers = (0..shared.cfg.threads)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("bold-http-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn http worker")
+            })
+            .collect();
+        Ok(HttpServer { shared, accept: Some(accept), workers, addr: local })
+    }
+
+    /// The bound address (resolves `:0` ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The effective configuration (env defaults already applied).
+    pub fn config(&self) -> &HttpConfig {
+        &self.shared.cfg
+    }
+
+    /// Snapshot of the front-end counters.
+    pub fn stats(&self) -> HttpStats {
+        self.shared.stats()
+    }
+
+    /// Ask the server to drain (same effect as `POST /admin/shutdown`):
+    /// stop accepting, finish in-flight work. Non-blocking; follow with
+    /// [`HttpServer::shutdown`] to join.
+    pub fn request_shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// True once a drain has been requested (admin endpoint or
+    /// [`HttpServer::request_shutdown`]).
+    pub fn is_draining(&self) -> bool {
+        self.shared.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Block until a drain is requested (the `serve-http` CLI parks
+    /// here so `POST /admin/shutdown` can stop the process cleanly).
+    pub fn wait_for_shutdown(&self) {
+        while !self.is_draining() {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    /// Graceful drain: stop accepting, answer every in-flight request,
+    /// join all threads, shut the model servers down, return the final
+    /// counters.
+    pub fn shutdown(mut self) -> HttpStats {
+        self.stop_and_join();
+        let stats = self.shared.stats();
+        // dropping `self` releases the last Arc: the NativeServers drain
+        // their queues and join their batch workers in their own Drop
+        stats
+    }
+
+    fn stop_and_join(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join(); // closes the connection queue on exit
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(sh: &NetShared, listener: TcpListener) {
+    let mut reject_writer = ResponseWriter::new();
+    while !sh.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                sh.counters.connections.fetch_add(1, Ordering::SeqCst);
+                // the listener is non-blocking; the connection must not be
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_nodelay(true);
+                let _ = stream.set_read_timeout(Some(sh.cfg.read_timeout));
+                let _ = stream.set_write_timeout(Some(sh.cfg.write_timeout));
+                if let Err(mut stream) = sh.conns.try_push(stream) {
+                    // connection-level admission control: reject fast,
+                    // never queue unboundedly (best-effort write; the
+                    // peer may already be gone)
+                    sh.counters.conns_rejected.fetch_add(1, Ordering::SeqCst);
+                    let body = b"{\"error\":\"server overloaded, connection rejected\"}\n";
+                    let _ = stream
+                        .write_all(reject_writer.render(503, &[("Retry-After", "1")], body, false));
+                    let _ = stream.shutdown(Shutdown::Both);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    // drain hand-off: workers finish what was accepted, then see None
+    sh.conns.close();
+}
+
+fn worker_loop(sh: &NetShared) {
+    let mut parser = HttpParser::new(sh.cfg.limits.clone());
+    let mut writer = ResponseWriter::new();
+    let mut body = String::with_capacity(512);
+    let mut feats: Vec<f32> = Vec::new();
+    let mut chunk = [0u8; 8 * 1024];
+    while let Some(stream) = sh.conns.pop() {
+        handle_connection(sh, stream, &mut parser, &mut writer, &mut body, &mut feats, &mut chunk);
+    }
+}
+
+/// Serve one connection's keep-alive request loop. Never panics on
+/// malformed input or socket errors — every exit path is a clean close
+/// (with a status line whenever the protocol still allows one).
+fn handle_connection(
+    sh: &NetShared,
+    mut stream: TcpStream,
+    parser: &mut HttpParser,
+    writer: &mut ResponseWriter,
+    body: &mut String,
+    feats: &mut Vec<f32>,
+    chunk: &mut [u8],
+) {
+    parser.reset();
+    let mut state: Result<Parse, HttpError> = Ok(Parse::NeedMore);
+    loop {
+        // ---- read one full request (bounded: bytes, headers, time) ----
+        let mut started: Option<Instant> = None;
+        let mut sent_continue = false;
+        loop {
+            match &state {
+                Ok(Parse::Ready) => break,
+                Ok(Parse::NeedMore) => {}
+                Err(e) => {
+                    // protocol violation: answer with its status, close
+                    // (framing is unreliable past a malformed head)
+                    sh.counters.requests.fetch_add(1, Ordering::SeqCst);
+                    sh.count_status(e.status);
+                    body.clear();
+                    let _ = writeln!(body, "{{\"error\":{:?}}}", e.msg);
+                    let _ = stream.write_all(writer.render(e.status, &[], body.as_bytes(), false));
+                    let _ = stream.shutdown(Shutdown::Both);
+                    return;
+                }
+            }
+            if parser.buffered() > 0 && started.is_none() {
+                // pipelined bytes from the previous read count as a start
+                started = Some(Instant::now());
+            }
+            if parser.head_complete() && parser.expects_continue() && !sent_continue {
+                sent_continue = true;
+                if stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n").is_err() {
+                    sh.counters.aborted.fetch_add(1, Ordering::SeqCst);
+                    return;
+                }
+            }
+            if let Some(t0) = started {
+                if t0.elapsed() > sh.cfg.head_timeout {
+                    // slow-loris: the request did not arrive in time
+                    sh.counters.requests.fetch_add(1, Ordering::SeqCst);
+                    sh.count_status(408);
+                    let _ = stream.write_all(writer.render(
+                        408,
+                        &[],
+                        b"{\"error\":\"request did not arrive within the head timeout\"}\n",
+                        false,
+                    ));
+                    let _ = stream.shutdown(Shutdown::Both);
+                    return;
+                }
+            }
+            match stream.read(chunk) {
+                Ok(0) => {
+                    // peer closed; mid-request close is a counted fault
+                    if parser.buffered() > 0 {
+                        sh.counters.aborted.fetch_add(1, Ordering::SeqCst);
+                    }
+                    return;
+                }
+                Ok(n) => {
+                    if started.is_none() {
+                        started = Some(Instant::now());
+                    }
+                    state = parser.feed(&chunk[..n]);
+                }
+                Err(e)
+                    if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+                {
+                    if parser.buffered() == 0 {
+                        // idle keep-alive connection timed out: close quietly
+                        return;
+                    }
+                    sh.counters.requests.fetch_add(1, Ordering::SeqCst);
+                    sh.count_status(408);
+                    let _ = stream.write_all(writer.render(
+                        408,
+                        &[],
+                        b"{\"error\":\"timed out mid-request\"}\n",
+                        false,
+                    ));
+                    let _ = stream.shutdown(Shutdown::Both);
+                    return;
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    sh.counters.aborted.fetch_add(1, Ordering::SeqCst);
+                    return;
+                }
+            }
+        }
+
+        // ---- dispatch ----
+        sh.counters.requests.fetch_add(1, Ordering::SeqCst);
+        let draining = sh.shutdown.load(Ordering::SeqCst);
+        let keep = parser.keep_alive() && !draining;
+        match respond(sh, parser, writer, body, feats, &mut stream, keep) {
+            Err(_) => {
+                sh.counters.aborted.fetch_add(1, Ordering::SeqCst);
+                return;
+            }
+            Ok(false) => {
+                let _ = stream.shutdown(Shutdown::Both);
+                return;
+            }
+            Ok(true) => {}
+        }
+        state = parser.consume();
+    }
+}
+
+/// Route + answer one parsed request. `Ok(keep)` says whether the
+/// keep-alive loop continues; `Err` means the socket write failed (peer
+/// gone) — the caller closes either way.
+fn respond(
+    sh: &NetShared,
+    parser: &HttpParser,
+    writer: &mut ResponseWriter,
+    body: &mut String,
+    feats: &mut Vec<f32>,
+    stream: &mut TcpStream,
+    keep: bool,
+) -> std::io::Result<bool> {
+    let t_ready = Instant::now();
+    let method = parser.method();
+    let path = parser.path();
+    body.clear();
+
+    // predict is the hot path: match it first
+    if let Some(name) = path
+        .strip_prefix("/v1/models/")
+        .and_then(|p| p.strip_suffix("/predict"))
+    {
+        if method != "POST" {
+            sh.count_status(405);
+            body.push_str("{\"error\":\"predict requires POST\"}\n");
+            stream.write_all(writer.render(405, &[("Allow", "POST")], body.as_bytes(), keep))?;
+            return Ok(keep);
+        }
+        let Some(server) = sh.registry.get(name) else {
+            sh.count_status(404);
+            let msg = format!("unknown model '{name}'");
+            let _ = writeln!(body, "{{\"error\":{msg:?}}}");
+            stream.write_all(writer.render(404, &[], body.as_bytes(), keep))?;
+            return Ok(keep);
+        };
+        match parse_features(parser, server.d_in(), feats) {
+            Ok(()) => {}
+            Err(msg) => {
+                sh.count_status(400);
+                let _ = writeln!(body, "{{\"error\":{msg:?}}}");
+                stream.write_all(writer.render(400, &[], body.as_bytes(), keep))?;
+                return Ok(keep);
+            }
+        }
+        match server.try_submit(feats) {
+            Err(TrySubmitError::Full) => {
+                // admission control: the bounded queue is the overload
+                // contract — shed with Retry-After, never block or hang
+                sh.count_status(503);
+                body.push_str("{\"error\":\"model queue full\"}\n");
+                stream.write_all(writer.render(
+                    503,
+                    &[("Retry-After", "1")],
+                    body.as_bytes(),
+                    keep,
+                ))?;
+                Ok(keep)
+            }
+            Err(TrySubmitError::Rejected(e)) => {
+                sh.count_status(503);
+                let _ = writeln!(body, "{{\"error\":{:?}}}", e.msg);
+                stream.write_all(writer.render(503, &[], body.as_bytes(), false))?;
+                Ok(false)
+            }
+            Ok(pending) => {
+                let remaining = sh.cfg.request_deadline.saturating_sub(t_ready.elapsed());
+                match pending.wait_timeout(remaining) {
+                    Ok(Some(resp)) => {
+                        sh.count_status(200);
+                        let _ = write!(body, "{{\"model\":{name:?},\"class\":{}", resp.class);
+                        body.push_str(",\"logits\":[");
+                        for (i, l) in resp.logits.iter().enumerate() {
+                            if i > 0 {
+                                body.push(',');
+                            }
+                            let _ = write!(body, "{l}");
+                        }
+                        body.push_str("]}\n");
+                        stream.write_all(writer.render(200, &JSON_CT, body.as_bytes(), keep))?;
+                        Ok(keep)
+                    }
+                    Ok(None) => {
+                        sh.count_status(504);
+                        body.push_str("{\"error\":\"deadline exceeded\"}\n");
+                        stream.write_all(writer.render(504, &[], body.as_bytes(), keep))?;
+                        Ok(keep)
+                    }
+                    Err(_) => {
+                        sh.count_status(503);
+                        body.push_str("{\"error\":\"server shutting down\"}\n");
+                        stream.write_all(writer.render(503, &[], body.as_bytes(), false))?;
+                        Ok(false)
+                    }
+                }
+            }
+        }
+    } else {
+        respond_aux(sh, method, path, writer, body, stream, keep)
+    }
+}
+
+/// The non-predict endpoints (health, registry listing, counters,
+/// drain trigger).
+fn respond_aux(
+    sh: &NetShared,
+    method: &str,
+    path: &str,
+    writer: &mut ResponseWriter,
+    body: &mut String,
+    stream: &mut TcpStream,
+    keep: bool,
+) -> std::io::Result<bool> {
+    match (method, path) {
+        ("GET" | "HEAD", "/healthz") => {
+            sh.count_status(200);
+            let payload: &[u8] = if method == "HEAD" { b"" } else { b"ok\n" };
+            stream.write_all(writer.render(200, &[], payload, keep))?;
+            Ok(keep)
+        }
+        ("GET", "/v1/models") => {
+            sh.count_status(200);
+            body.push_str("{\"models\":[");
+            for (i, name) in sh.registry.names().iter().enumerate() {
+                let s = sh.registry.get(name).expect("registered");
+                if i > 0 {
+                    body.push(',');
+                }
+                let _ = write!(
+                    body,
+                    "{{\"name\":{name:?},\"d_in\":{},\"d_out\":{},\"ops\":{},\"queue_cap\":{}}}",
+                    s.d_in(),
+                    s.model().d_out(),
+                    s.model().num_ops(),
+                    s.queue_cap()
+                );
+            }
+            body.push_str("]}\n");
+            stream.write_all(writer.render(200, &JSON_CT, body.as_bytes(), keep))?;
+            Ok(keep)
+        }
+        ("GET", "/stats") => {
+            sh.count_status(200);
+            let st = sh.stats();
+            let _ = writeln!(
+                body,
+                "{{\"connections\":{},\"conns_rejected\":{},\"requests\":{},\"ok\":{},\
+                 \"client_err\":{},\"shed\":{},\"expired\":{},\"server_err\":{},\"aborted\":{}}}",
+                st.connections,
+                st.conns_rejected,
+                st.requests,
+                st.ok,
+                st.client_err,
+                st.shed,
+                st.expired,
+                st.server_err,
+                st.aborted
+            );
+            stream.write_all(writer.render(200, &JSON_CT, body.as_bytes(), keep))?;
+            Ok(keep)
+        }
+        ("POST", "/admin/shutdown") => {
+            sh.count_status(200);
+            sh.shutdown.store(true, Ordering::SeqCst);
+            body.push_str("{\"draining\":true}\n");
+            stream.write_all(writer.render(200, &JSON_CT, body.as_bytes(), false))?;
+            Ok(false)
+        }
+        (_, "/healthz" | "/v1/models" | "/stats" | "/admin/shutdown") => {
+            sh.count_status(405);
+            body.push_str("{\"error\":\"method not allowed\"}\n");
+            stream.write_all(writer.render(405, &[("Allow", "GET")], body.as_bytes(), keep))?;
+            Ok(keep)
+        }
+        _ => {
+            sh.count_status(404);
+            body.push_str("{\"error\":\"no such endpoint\"}\n");
+            stream.write_all(writer.render(404, &[], body.as_bytes(), keep))?;
+            Ok(keep)
+        }
+    }
+}
+
+const JSON_CT: [(&str, &str); 1] = [("Content-Type", "application/json")];
+
+/// Decode the request body into `d_in` f32 features, reusing `feats`.
+/// Two encodings: raw little-endian f32 (`Content-Type:
+/// application/octet-stream`, exactly `4·d_in` bytes) and ASCII decimal
+/// text split on commas/whitespace.
+fn parse_features(parser: &HttpParser, d_in: usize, feats: &mut Vec<f32>) -> Result<(), String> {
+    feats.clear();
+    let raw = parser.body();
+    let binary = parser
+        .header("content-type")
+        .is_some_and(|ct| ct.to_ascii_lowercase().contains("octet-stream"));
+    if binary {
+        if raw.len() != 4 * d_in {
+            return Err(format!(
+                "binary body must be exactly 4*d_in = {} bytes, got {}",
+                4 * d_in,
+                raw.len()
+            ));
+        }
+        feats.extend(
+            raw.chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])),
+        );
+        return Ok(());
+    }
+    let text = std::str::from_utf8(raw).map_err(|_| "body is not UTF-8 text".to_string())?;
+    for tok in text.split(|c: char| c == ',' || c.is_ascii_whitespace()) {
+        if tok.is_empty() {
+            continue;
+        }
+        let v: f32 = tok
+            .parse()
+            .map_err(|_| format!("not a number: {tok:?}"))?;
+        feats.push(v);
+    }
+    if feats.len() != d_in {
+        return Err(format!("expected {d_in} features, got {}", feats.len()));
+    }
+    Ok(())
+}

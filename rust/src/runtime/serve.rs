@@ -80,6 +80,28 @@ impl fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
+/// Why a non-blocking [`NativeServer::try_submit`] did not enqueue.
+#[derive(Debug)]
+pub enum TrySubmitError {
+    /// The bounded queue is at capacity — shed load now (the HTTP
+    /// front-end maps this to `503` + `Retry-After`) instead of blocking
+    /// the caller behind it.
+    Full,
+    /// Malformed request or server shutting down.
+    Rejected(ServeError),
+}
+
+impl fmt::Display for TrySubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TrySubmitError::Full => write!(f, "queue full"),
+            TrySubmitError::Rejected(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for TrySubmitError {}
+
 /// One answered inference request.
 #[derive(Debug, Clone)]
 pub struct Response {
@@ -105,6 +127,20 @@ impl Pending {
     /// Non-blocking poll.
     pub fn try_wait(&self) -> Option<Response> {
         self.rx.try_recv().ok()
+    }
+
+    /// Deadline-bounded wait: `Ok(None)` when `timeout` expires first —
+    /// the request stays queued and is still computed (its result is
+    /// discarded), so an expired deadline never wedges a worker. The
+    /// HTTP front-end maps `None` to `504`.
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Option<Response>, ServeError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Ok(Some(r)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(ServeError::new("server shut down before answering"))
+            }
+        }
     }
 }
 
@@ -195,9 +231,13 @@ impl NativeServer {
         self.shared.queue.lock().unwrap().len()
     }
 
-    /// Pack real-valued features (`v ≥ 0 ⇒ T`) and enqueue. Blocks while
-    /// the bounded queue is full.
-    pub fn submit(&self, features: &[f32]) -> Result<Pending, ServeError> {
+    /// Bounded queue capacity (the admission-control point).
+    pub fn queue_cap(&self) -> usize {
+        self.shared.cfg.queue_cap
+    }
+
+    /// Pack real-valued features (`v ≥ 0 ⇒ T`) into a request row.
+    fn pack_features(&self, features: &[f32]) -> Result<Vec<u64>, ServeError> {
         let d = self.shared.model.d_in();
         if features.len() != d {
             return Err(ServeError::new(format!(
@@ -211,7 +251,49 @@ impl NativeServer {
                 words[c / 64] |= 1u64 << (c % 64);
             }
         }
+        Ok(words)
+    }
+
+    /// Pack real-valued features (`v ≥ 0 ⇒ T`) and enqueue. Blocks while
+    /// the bounded queue is full.
+    pub fn submit(&self, features: &[f32]) -> Result<Pending, ServeError> {
+        let words = self.pack_features(features)?;
         self.submit_packed(words)
+    }
+
+    /// Non-blocking [`Self::submit`]: a full queue returns
+    /// [`TrySubmitError::Full`] immediately instead of back-pressuring
+    /// the caller — the admission-control primitive of the network
+    /// front-end (DESIGN.md §Network-Front-End).
+    pub fn try_submit(&self, features: &[f32]) -> Result<Pending, TrySubmitError> {
+        let words = self.pack_features(features).map_err(TrySubmitError::Rejected)?;
+        self.try_submit_packed(words)
+    }
+
+    /// Non-blocking [`Self::submit_packed`].
+    pub fn try_submit_packed(&self, words: Vec<u64>) -> Result<Pending, TrySubmitError> {
+        let wpr = self.shared.model.d_in().div_ceil(64);
+        if words.len() != wpr {
+            return Err(TrySubmitError::Rejected(ServeError::new(format!(
+                "packed width {} words vs expected {wpr}",
+                words.len()
+            ))));
+        }
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                return Err(TrySubmitError::Rejected(ServeError::new(
+                    "server is shutting down",
+                )));
+            }
+            if q.len() >= self.shared.cfg.queue_cap {
+                return Err(TrySubmitError::Full);
+            }
+            q.push_back(Request { words, tx });
+        }
+        self.shared.not_empty.notify_one();
+        Ok(Pending { rx })
     }
 
     /// Enqueue an already-packed input row (`ceil(d_in/64)` words).

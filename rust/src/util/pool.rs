@@ -312,6 +312,90 @@ where
     run_scoped(tasks);
 }
 
+// ---------------------------------------------------------------------------
+// bounded hand-off queue (coarse-grained worker pools)
+// ---------------------------------------------------------------------------
+
+/// A bounded MPMC hand-off queue for *coarse-grained* worker pools — the
+/// accepted-connection queue of the HTTP front-end
+/// (`runtime::net`), structurally the same bounded-queue/condvar pattern
+/// as the serve request queue. This is deliberately **not** the global
+/// kernel pool above: consumers of a `JobQueue` block on I/O for long
+/// stretches, which would starve the latency-critical kernel shards if
+/// they shared threads; instead the owner spawns its own small set of
+/// threads that pull from here.
+///
+/// Semantics:
+/// * [`JobQueue::try_push`] never blocks — a full (or closed) queue hands
+///   the item back, which is the *admission-control point*: the producer
+///   sheds load explicitly (HTTP 503) instead of queueing unboundedly;
+/// * [`JobQueue::pop`] blocks until an item arrives or the queue is
+///   closed *and* drained — so closing performs a graceful drain: already
+///   accepted items are still handed out, then every consumer wakes up
+///   and sees `None`.
+pub struct JobQueue<T> {
+    state: Mutex<JobQueueState<T>>,
+    available: Condvar,
+    cap: usize,
+}
+
+struct JobQueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> JobQueue<T> {
+    pub fn bounded(cap: usize) -> Self {
+        assert!(cap >= 1, "JobQueue needs capacity >= 1");
+        JobQueue {
+            state: Mutex::new(JobQueueState { items: VecDeque::with_capacity(cap), closed: false }),
+            available: Condvar::new(),
+            cap,
+        }
+    }
+
+    /// Non-blocking enqueue; `Err(item)` when full or closed.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed || s.items.len() >= self.cap {
+            return Err(item);
+        }
+        s.items.push_back(item);
+        drop(s);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Blocking dequeue; `None` once the queue is closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.available.wait(s).unwrap();
+        }
+    }
+
+    /// Stop accepting new items and wake all blocked consumers; items
+    /// already queued are still popped (drain-then-`None`).
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.available.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -407,6 +491,36 @@ mod tests {
         with_thread_budget(1, || {
             assert_eq!(shards_for(usize::MAX / 2, 100, 1 << 16), 1);
         });
+    }
+
+    #[test]
+    fn job_queue_bounds_drains_and_closes() {
+        let q = JobQueue::bounded(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        assert_eq!(q.try_push(3), Err(3), "full queue hands the item back");
+        q.close();
+        assert_eq!(q.try_push(4), Err(4), "closed queue rejects");
+        assert_eq!(q.pop(), Some(1), "close still drains");
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn job_queue_wakes_blocked_consumers_on_close() {
+        let q = std::sync::Arc::new(JobQueue::<usize>::bounded(4));
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let q = std::sync::Arc::clone(&q);
+                std::thread::spawn(move || q.pop())
+            })
+            .collect();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(q.try_push(7).is_ok());
+        q.close();
+        let got: Vec<Option<usize>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(got.iter().filter(|g| g.is_some()).count(), 1);
+        assert_eq!(got.iter().filter(|g| g.is_none()).count(), 2);
     }
 
     #[test]

@@ -1,0 +1,203 @@
+//! Property-style suite for the incremental HTTP parser (ISSUE 6):
+//! split-point invariance (any partition of the byte stream produces the
+//! identical parse), byte-at-a-time equivalence, and random byte
+//! mutations that must never panic — every outcome is Ready, NeedMore,
+//! or a clean 4xx/5xx `HttpError`, and whole-buffer vs split feeding
+//! agree on it. No fuzzing crate: `bold::util::Rng` drives deterministic
+//! mutation streams, so failures replay exactly.
+
+use bold::runtime::{HttpError, HttpLimits, HttpParser, Parse};
+use bold::util::Rng;
+
+/// Valid corpus covering the shapes the front-end actually sees.
+fn corpus() -> Vec<&'static [u8]> {
+    vec![
+        b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n",
+        b"GET /v1/models HTTP/1.0\r\n\r\n",
+        b"POST /v1/models/mlp/predict HTTP/1.1\r\nContent-Type: text/plain\r\nContent-Length: 11\r\n\r\n1 -1 1 -1 1",
+        b"POST /admin/shutdown HTTP/1.1\r\nContent-Length: 0\r\nConnection: close\r\n\r\n",
+        b"POST /v1/models/vgg/predict HTTP/1.1\r\nContent-Length: 8\r\nExpect: 100-continue\r\n\r\nABCDEFGH",
+        b"HEAD /healthz HTTP/1.1\r\nAccept: */*\r\nUser-Agent: loadgen\r\n\r\n",
+        b"GET / HTTP/1.1\nHost: lf-only\n\n",
+    ]
+}
+
+/// Final observable state of a parse, for equality across feed schedules.
+#[derive(Debug, PartialEq)]
+struct Outcome {
+    result: Result<Parse, u16>,
+    method: String,
+    path: String,
+    num_headers: usize,
+    content_length: usize,
+    body: Vec<u8>,
+    keep_alive: bool,
+    expects_continue: bool,
+}
+
+/// Feed `raw` in the given chunk sizes and snapshot the outcome. After
+/// the first error, feeding stops (the server closes the connection
+/// there; stickiness is asserted separately).
+fn run(raw: &[u8], chunks: &[usize]) -> Outcome {
+    let mut p = HttpParser::new(HttpLimits::default());
+    let mut result = Ok(Parse::NeedMore);
+    let mut off = 0;
+    for &c in chunks {
+        let end = (off + c).min(raw.len());
+        if off >= end {
+            break;
+        }
+        result = p.feed(&raw[off..end]).map_err(|e| e.status);
+        if result.is_err() {
+            break;
+        }
+        off = end;
+    }
+    Outcome {
+        result,
+        method: p.method().to_string(),
+        path: p.path().to_string(),
+        num_headers: p.num_headers(),
+        content_length: p.content_length(),
+        body: p.body().to_vec(),
+        keep_alive: p.keep_alive(),
+        expects_continue: p.expects_continue(),
+    }
+}
+
+fn one_shot(raw: &[u8]) -> Outcome {
+    run(raw, &[raw.len()])
+}
+
+#[test]
+fn every_two_chunk_split_matches_one_shot() {
+    for raw in corpus() {
+        let whole = one_shot(raw);
+        assert_eq!(whole.result, Ok(Parse::Ready), "corpus entry must be valid");
+        for split in 1..raw.len() {
+            let parts = run(raw, &[split, raw.len() - split]);
+            assert_eq!(parts, whole, "split at {split} of {:?}", String::from_utf8_lossy(raw));
+        }
+    }
+}
+
+#[test]
+fn byte_at_a_time_matches_one_shot() {
+    for raw in corpus() {
+        let whole = one_shot(raw);
+        let ones = vec![1usize; raw.len()];
+        assert_eq!(run(raw, &ones), whole, "{:?}", String::from_utf8_lossy(raw));
+    }
+}
+
+#[test]
+fn random_chunk_schedules_match_one_shot() {
+    let mut rng = Rng::new(0x6006);
+    for raw in corpus() {
+        let whole = one_shot(raw);
+        for _ in 0..50 {
+            let mut chunks = Vec::new();
+            let mut left = raw.len();
+            while left > 0 {
+                let c = 1 + rng.below(left.min(17));
+                chunks.push(c);
+                left -= c;
+            }
+            assert_eq!(run(raw, &chunks), whole, "chunks {chunks:?}");
+        }
+    }
+}
+
+#[test]
+fn random_mutations_never_panic_and_split_consistently() {
+    let mut rng = Rng::new(0xB01D);
+    for raw in corpus() {
+        for trial in 0..300 {
+            let mut bytes = raw.to_vec();
+            // 1-3 random byte substitutions anywhere in the request
+            for _ in 0..(1 + rng.below(3)) {
+                let pos = rng.below(bytes.len());
+                bytes[pos] = (rng.next_u64() & 0xff) as u8;
+            }
+            let b2 = bytes.clone();
+            let whole = std::panic::catch_unwind(move || one_shot(&b2))
+                .unwrap_or_else(|_| panic!("parser panicked on {bytes:?} (trial {trial})"));
+            // outcome is total: Ready, NeedMore, or a clean 4xx/5xx
+            if let Err(status) = whole.result {
+                assert!(
+                    (400..600).contains(&status),
+                    "non-HTTP error status {status} for {bytes:?}"
+                );
+            }
+            // split-point invariance holds for mutated inputs too
+            let split = 1 + rng.below(bytes.len() - 1);
+            let parts = run(&bytes, &[split, bytes.len() - split]);
+            assert_eq!(
+                parts, whole,
+                "mutated input diverged at split {split}: {:?}",
+                String::from_utf8_lossy(&bytes)
+            );
+        }
+    }
+}
+
+#[test]
+fn truncations_never_claim_ready() {
+    // any strict prefix of a valid request is NeedMore or a clean error
+    for raw in corpus() {
+        for cut in 0..raw.len() {
+            let out = one_shot(&raw[..cut]);
+            assert_ne!(
+                out.result,
+                Ok(Parse::Ready),
+                "prefix of {cut} bytes claimed Ready: {:?}",
+                String::from_utf8_lossy(raw)
+            );
+        }
+    }
+}
+
+#[test]
+fn buffered_bytes_stay_bounded_under_junk_floods() {
+    // a head that never terminates must error at the cap, not buffer on
+    let limits = HttpLimits { max_head_bytes: 256, max_body_bytes: 64, max_headers: 8 };
+    let mut p = HttpParser::new(limits);
+    let mut total_err: Option<HttpError> = None;
+    for _ in 0..64 {
+        match p.feed(&[b'G'; 32]) {
+            Ok(_) => assert!(p.buffered() <= 256 + 32, "buffer grew past the cap"),
+            Err(e) => {
+                total_err = Some(e);
+                break;
+            }
+        }
+    }
+    assert_eq!(total_err.map(|e| e.status), Some(431));
+}
+
+#[test]
+fn pipelined_requests_parse_identically_to_sequential() {
+    // two requests in one stream, with a split at every byte boundary
+    let a: &[u8] = b"POST /v1/models/mlp/predict HTTP/1.1\r\nContent-Length: 4\r\n\r\nwxyz";
+    let b: &[u8] = b"GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n";
+    let mut joined = a.to_vec();
+    joined.extend_from_slice(b);
+    for split in 1..joined.len() {
+        let mut p = HttpParser::new(HttpLimits::default());
+        let mut r = p.feed(&joined[..split]).expect("valid stream");
+        if r == Parse::NeedMore {
+            r = p.feed(&joined[split..]).expect("valid stream");
+        }
+        assert_eq!(r, Parse::Ready, "first request ready (split {split})");
+        assert_eq!(p.path(), "/v1/models/mlp/predict");
+        assert_eq!(p.body(), b"wxyz");
+        let mut r2 = p.consume().expect("second request");
+        if r2 == Parse::NeedMore {
+            // the tail of the stream had not been fed yet
+            r2 = p.feed(&joined[split.max(a.len())..]).expect("valid tail");
+        }
+        assert_eq!(r2, Parse::Ready, "second request ready (split {split})");
+        assert_eq!(p.path(), "/healthz");
+        assert!(!p.keep_alive());
+    }
+}

@@ -1,0 +1,284 @@
+//! TCP parity suite (ISSUE 6): a checkpoint served through the network
+//! front-end must produce **bit-identical** logits to the same
+//! checkpoint driven in-process through [`PackedGraph::forward_f32`] —
+//! for the MLP and for a conv (VGG) checkpoint, across both body
+//! encodings, and across micro-batch coalescing (concurrent clients
+//! whose requests land in shared batches).
+//!
+//! Bitwise comparison over a *text* protocol works because Rust's `{}`
+//! Display for `f32` is shortest-roundtrip: the serialized logit parses
+//! back to exactly the same bits the server computed.
+
+use bold::coordinator::save_model;
+use bold::models::{boolean_mlp, vgg_small, MlpConfig, VggConfig};
+use bold::nn::{Layer, Sequential, Value};
+use bold::runtime::{loadgen, HttpConfig, HttpServer, ModelRegistry, PackedGraph, ServeConfig};
+use bold::tensor::Tensor;
+use bold::util::Rng;
+use std::io::Read;
+use std::net::TcpStream;
+use std::time::Duration;
+
+fn tmp(name: &str) -> String {
+    let dir = std::env::temp_dir().join("bold_net_parity_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name).to_str().unwrap().to_string()
+}
+
+/// Move BN running stats off their init values (same convention as
+/// tests/packed_graph.rs) so the parity covers folded non-trivial BN.
+fn warm_up(model: &mut Sequential, shape: &[usize], seed: u64) {
+    let mut rng = Rng::new(seed);
+    for _ in 0..3 {
+        let x = Tensor::randn(shape, 1.0, &mut rng);
+        let _ = model.forward(Value::F32(x), true);
+    }
+}
+
+/// Save `model`, then load the checkpoint twice: once as the in-process
+/// reference, once for the server (separate instances, so parity is
+/// checkpoint → wire, not shared memory).
+fn checkpoint_pair(model: &mut Sequential, name: &str) -> (PackedGraph, PackedGraph) {
+    let path = tmp(name);
+    save_model(model, &path).unwrap();
+    let reference = PackedGraph::load(&path).expect("reference load");
+    let served = PackedGraph::load(&path).expect("served load");
+    (reference, served)
+}
+
+fn serve(graph: PackedGraph, serve_cfg: ServeConfig) -> (HttpServer, String) {
+    let mut registry = ModelRegistry::new();
+    registry.add("m", graph, serve_cfg).expect("register");
+    let cfg = HttpConfig { threads: 8, ..HttpConfig::default() };
+    let server = HttpServer::start(registry, "127.0.0.1:0", cfg).expect("bind");
+    let addr = server.local_addr().to_string();
+    (server, addr)
+}
+
+fn small_batches() -> ServeConfig {
+    ServeConfig {
+        workers: 2,
+        max_batch: 8,
+        queue_cap: 256,
+        batch_window: Duration::from_millis(2),
+    }
+}
+
+/// Send one rendered request on `stream` and return the response body
+/// (Content-Length framed, so the keep-alive connection stays usable).
+fn roundtrip(stream: &mut TcpStream, request: &[u8]) -> String {
+    use std::io::Write as _;
+    stream.write_all(request).expect("send");
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let head_end = loop {
+        if let Some(p) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break p + 4;
+        }
+        let n = stream.read(&mut chunk).expect("read head");
+        assert!(n > 0, "connection closed before response head");
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).to_string();
+    assert!(head.starts_with("HTTP/1.1 200"), "expected 200, got:\n{head}");
+    let cl: usize = head
+        .lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.trim().eq_ignore_ascii_case("content-length").then(|| v.trim().parse().ok())?
+        })
+        .expect("Content-Length");
+    while buf.len() < head_end + cl {
+        let n = stream.read(&mut chunk).expect("read body");
+        assert!(n > 0, "connection closed mid-body");
+        buf.extend_from_slice(&chunk[..n]);
+    }
+    String::from_utf8_lossy(&buf[head_end..head_end + cl]).to_string()
+}
+
+/// Extract `class` and `logits` from the predict response JSON. The
+/// emitter writes flat single-line JSON; field-level extraction is
+/// exact for it.
+fn parse_prediction(body: &str) -> (usize, Vec<f32>) {
+    let class = body
+        .split("\"class\":")
+        .nth(1)
+        .and_then(|s| s.split([',', '}']).next())
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or_else(|| panic!("no class in {body:?}"));
+    let logits = body
+        .split("\"logits\":[")
+        .nth(1)
+        .and_then(|s| s.split(']').next())
+        .unwrap_or_else(|| panic!("no logits in {body:?}"))
+        .split(',')
+        .map(|t| t.trim().parse().expect("logit parses"))
+        .collect();
+    (class, logits)
+}
+
+fn text_body(feats: &[f32]) -> Vec<u8> {
+    feats.iter().map(|f| f.to_string()).collect::<Vec<_>>().join(",").into_bytes()
+}
+
+fn binary_body(feats: &[f32]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(feats.len() * 4);
+    for f in feats {
+        b.extend_from_slice(&f.to_le_bytes());
+    }
+    b
+}
+
+/// Reference logits for one example, through the same packed path the
+/// server uses.
+fn reference_logits(graph: &PackedGraph, feats: &[f32]) -> (usize, Vec<f32>) {
+    let x = Tensor::from_vec(&[1, feats.len()], feats.to_vec());
+    let out = graph.forward_f32(&x);
+    // same tie-breaking as the server's argmax_rows_into
+    let class = out.argmax_rows()[0];
+    (class, out.data)
+}
+
+fn assert_bitwise_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: logit count");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{what}: logit {i} differs: served {g} vs in-process {w}"
+        );
+    }
+}
+
+#[test]
+fn mlp_checkpoint_tcp_parity_text_and_binary() {
+    let cfg = MlpConfig { d_in: 96, hidden: vec![48, 24], d_out: 10, tanh_scale: true };
+    let mut model = boolean_mlp(&cfg, &mut Rng::new(31));
+    warm_up(&mut model, &[4, 96], 81);
+    let (reference, served) = checkpoint_pair(&mut model, "mlp_parity.ckpt");
+    let (server, addr) = serve(served, small_batches());
+
+    let mut rng = Rng::new(314);
+    let mut stream = TcpStream::connect(&addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    for i in 0..12 {
+        let feats: Vec<f32> = (0..96).map(|_| rng.sign()).collect();
+        let (want_class, want_logits) = reference_logits(&reference, &feats);
+        // text encoding (keep-alive, same connection throughout)
+        let req = loadgen::render_predict("m", &text_body(&feats), "text/plain");
+        let (class, logits) = parse_prediction(&roundtrip(&mut stream, &req));
+        assert_eq!(class, want_class, "text req {i}: class");
+        assert_bitwise_eq(&logits, &want_logits, &format!("text req {i}"));
+        // binary encoding of the same example must agree exactly too
+        let req = loadgen::render_predict("m", &binary_body(&feats), "application/octet-stream");
+        let (class, logits) = parse_prediction(&roundtrip(&mut stream, &req));
+        assert_eq!(class, want_class, "binary req {i}: class");
+        assert_bitwise_eq(&logits, &want_logits, &format!("binary req {i}"));
+    }
+    drop(server);
+}
+
+#[test]
+fn vgg_checkpoint_tcp_parity() {
+    // conv path: BN folded into per-channel thresholds by the packed
+    // graph loader; d_in = 3*16*16 = 768 flat features over the wire
+    let cfg = VggConfig { hw: 16, width_mult: 0.125, with_bn: true, ..Default::default() };
+    let mut model = vgg_small(&cfg, &mut Rng::new(41));
+    warm_up(&mut model, &[4, 3, 16, 16], 91);
+    let (reference, served) = checkpoint_pair(&mut model, "vgg_parity.ckpt");
+    let d_in = reference.d_in();
+    assert_eq!(d_in, 3 * 16 * 16);
+    let (server, addr) = serve(served, small_batches());
+
+    let mut rng = Rng::new(514);
+    let mut stream = TcpStream::connect(&addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    for i in 0..6 {
+        let feats: Vec<f32> = (0..d_in).map(|_| rng.sign()).collect();
+        let (want_class, want_logits) = reference_logits(&reference, &feats);
+        let req = loadgen::render_predict("m", &binary_body(&feats), "application/octet-stream");
+        let (class, logits) = parse_prediction(&roundtrip(&mut stream, &req));
+        assert_eq!(class, want_class, "conv req {i}: class");
+        assert_bitwise_eq(&logits, &want_logits, &format!("conv req {i}"));
+    }
+    drop(server);
+}
+
+#[test]
+fn coalesced_batches_stay_bit_identical() {
+    // concurrent keep-alive clients against max_batch 8 + a 2 ms window:
+    // requests from different connections land in shared micro-batches,
+    // and every response must still match the single-example reference
+    let cfg = MlpConfig { d_in: 64, hidden: vec![32], d_out: 10, tanh_scale: true };
+    let mut model = boolean_mlp(&cfg, &mut Rng::new(51));
+    warm_up(&mut model, &[4, 64], 71);
+    let (reference, served) = checkpoint_pair(&mut model, "mlp_coalesce.ckpt");
+    let (server, addr) = serve(served, small_batches());
+
+    const CLIENTS: usize = 6;
+    const PER_CLIENT: usize = 12;
+    // precompute inputs + references so the client threads only compare
+    let mut inputs: Vec<Vec<Vec<f32>>> = Vec::new();
+    let mut wants: Vec<Vec<(usize, Vec<f32>)>> = Vec::new();
+    for c in 0..CLIENTS {
+        let mut rng = Rng::new(1000 + c as u64);
+        let mut ins = Vec::new();
+        let mut ws = Vec::new();
+        for _ in 0..PER_CLIENT {
+            let feats: Vec<f32> = (0..64).map(|_| rng.sign()).collect();
+            ws.push(reference_logits(&reference, &feats));
+            ins.push(feats);
+        }
+        inputs.push(ins);
+        wants.push(ws);
+    }
+
+    std::thread::scope(|sc| {
+        for c in 0..CLIENTS {
+            let addr = &addr;
+            let ins = &inputs[c];
+            let ws = &wants[c];
+            sc.spawn(move || {
+                let mut stream = TcpStream::connect(addr).expect("connect");
+                stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+                for (i, (feats, (want_class, want_logits))) in ins.iter().zip(ws).enumerate() {
+                    let req = loadgen::render_predict("m", &text_body(feats), "text/plain");
+                    let (class, logits) = parse_prediction(&roundtrip(&mut stream, &req));
+                    assert_eq!(class, *want_class, "client {c} req {i}: class");
+                    assert_bitwise_eq(&logits, want_logits, &format!("client {c} req {i}"));
+                }
+            });
+        }
+    });
+    let stats = server.shutdown();
+    assert_eq!(stats.ok, CLIENTS * PER_CLIENT, "every request answered 200: {stats:?}");
+}
+
+#[test]
+fn fixed_rate_load_smoke_has_no_unexpected_errors() {
+    // the CI load smoke: a modest fixed-rate open-loop run must produce
+    // only 200s (and deliberate 503s under pressure) — any other 5xx,
+    // 4xx, deadline expiry, or transport error fails
+    let mut model = boolean_mlp(
+        &MlpConfig { d_in: 64, hidden: vec![32], d_out: 10, tanh_scale: true },
+        &mut Rng::new(61),
+    );
+    let graph = PackedGraph::from_layer(&mut model).expect("graph");
+    let (server, addr) = serve(graph, small_batches());
+
+    let mut rng = Rng::new(616);
+    let feats: Vec<f32> = (0..64).map(|_| rng.sign()).collect();
+    let request = loadgen::render_predict("m", &binary_body(&feats), "application/octet-stream");
+    let rep = loadgen::open_loop(&addr, &request, 150.0, Duration::from_millis(1500), 8);
+
+    assert_eq!(rep.other_5xx, 0, "unexpected 5xx under fixed-rate load: {rep:?}");
+    assert_eq!(rep.other_4xx, 0, "unexpected 4xx under fixed-rate load: {rep:?}");
+    assert_eq!(rep.io_errors, 0, "transport errors under fixed-rate load: {rep:?}");
+    assert_eq!(rep.expired, 0, "deadline expiries at 150 req/s: {rep:?}");
+    assert!(
+        rep.ok + rep.shed == rep.sent && rep.ok >= rep.sent * 9 / 10,
+        "load smoke lost requests: {rep:?}"
+    );
+    let stats = server.shutdown();
+    assert_eq!(stats.server_err, 0, "front-end recorded server errors: {stats:?}");
+}
