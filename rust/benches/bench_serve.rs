@@ -15,7 +15,8 @@
 use bold::models::{boolean_mlp, vgg_small, MlpConfig, VggConfig};
 use bold::nn::{Layer, Value};
 use bold::runtime::{
-    loadgen, HttpConfig, HttpServer, ModelRegistry, NativeServer, PackedGraph, ServeConfig,
+    loadgen, GraphScratch, HttpConfig, HttpServer, ModelRegistry, NativeServer, PackedGraph,
+    ServeConfig,
 };
 use bold::tensor::{simd, BitMatrix, Tensor};
 use bold::util::{pool, Rng, Timer};
@@ -61,6 +62,17 @@ fn write_json(recs: &[Rec]) {
         Ok(()) => println!("wrote {path} ({} records)", recs.len()),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }
+}
+
+/// Memory fields appended to every row (ISSUE-7): peak `GraphScratch`
+/// bytes plus the graph's slot count before/after the compiler passes,
+/// so `bench_check` gates scratch-footprint regressions like latency.
+fn mem_extra(scratch_bytes: usize, g: &PackedGraph) -> String {
+    let ps = g.pass_stats();
+    format!(
+        ",\"scratch_bytes\":{scratch_bytes},\"slots_raw\":{},\"slots_live\":{}",
+        ps.raw_slots, ps.live_slots
+    )
 }
 
 fn mlp_engine() -> PackedGraph {
@@ -135,10 +147,17 @@ fn sweep(
             },
         );
         let rate = drive(&server, n_requests, clients, 32);
+        let peak_scratch = server
+            .worker_scratch_bytes()
+            .into_iter()
+            .max()
+            .unwrap_or(0);
+        let mem = mem_extra(peak_scratch, server.model());
         let stats = server.shutdown();
         println!(
-            "{cfg_label:<38} {rate:>10.0} req/s   (avg batch fill {:.1})",
-            stats.avg_batch()
+            "{cfg_label:<38} {rate:>10.0} req/s   (avg batch fill {:.1}, peak scratch {} KiB)",
+            stats.avg_batch(),
+            peak_scratch / 1024
         );
         recs.push(Rec {
             bench: label.to_string(),
@@ -147,7 +166,7 @@ fn sweep(
             batch,
             req_per_s: rate,
             us_per_iter: 0.0,
-            extra: String::new(),
+            extra: mem,
         });
         rates.push(rate);
     }
@@ -166,22 +185,29 @@ fn main() {
     let mut recs: Vec<Rec> = Vec::new();
 
     // --- raw engine: per-example cost, batch 1 vs batch 64 --------------
+    // caller-owned scratch (the serve-worker path), so each row can also
+    // record the retained scratch footprint at that batch size
     let eng = mlp_engine();
     let mut rng = Rng::new(9);
     let x1 = BitMatrix::random(1, 784, &mut rng);
     let x64 = BitMatrix::random(64, 784, &mut rng);
+    let mut scratch = GraphScratch::new();
     let mut t = Timer::new("MLP engine forward batch 1 (single-stream)");
     t.bench(3, 15, || {
-        std::hint::black_box(eng.forward_bits(&x1));
+        eng.forward_bits_into(&x1, &mut scratch);
+        std::hint::black_box(&scratch.logits);
     });
     t.report(None);
     let lat1 = t.median();
+    let mem1 = mem_extra(scratch.scratch_bytes(), &eng);
     let mut t = Timer::new("MLP engine forward batch 64");
     t.bench(2, 9, || {
-        std::hint::black_box(eng.forward_bits(&x64));
+        eng.forward_bits_into(&x64, &mut scratch);
+        std::hint::black_box(&scratch.logits);
     });
     t.report(None);
     let lat64 = t.median();
+    let mem64 = mem_extra(scratch.scratch_bytes(), &eng);
     println!(
         "    single-stream latency {:.1} µs/req; per-example batching gain {:.2}x\n",
         lat1 * 1e6,
@@ -194,7 +220,7 @@ fn main() {
         batch: 1,
         req_per_s: 0.0,
         us_per_iter: lat1 * 1e6,
-        extra: String::new(),
+        extra: mem1,
     });
     recs.push(Rec {
         bench: "mlp_engine_forward".into(),
@@ -203,15 +229,17 @@ fn main() {
         batch: 64,
         req_per_s: 0.0,
         us_per_iter: lat64 * 1e6,
-        extra: String::new(),
+        extra: mem64,
     });
 
     let vgg = vgg_engine();
     let v1 = BitMatrix::random(1, vgg.d_in(), &mut rng);
     let v16 = BitMatrix::random(16, vgg.d_in(), &mut rng);
+    let mut scratch = GraphScratch::new();
     let mut t = Timer::new("VGG graph forward batch 1 (conv, BN folded)");
     t.bench(2, 7, || {
-        std::hint::black_box(vgg.forward_bits(&v1));
+        vgg.forward_bits_into(&v1, &mut scratch);
+        std::hint::black_box(&scratch.logits);
     });
     t.report(None);
     recs.push(Rec {
@@ -221,13 +249,21 @@ fn main() {
         batch: 1,
         req_per_s: 0.0,
         us_per_iter: t.median() * 1e6,
-        extra: String::new(),
+        extra: mem_extra(scratch.scratch_bytes(), &vgg),
     });
     let mut t = Timer::new("VGG graph forward batch 16");
     t.bench(1, 5, || {
-        std::hint::black_box(vgg.forward_bits(&v16));
+        vgg.forward_bits_into(&v16, &mut scratch);
+        std::hint::black_box(&scratch.logits);
     });
     t.report(None);
+    let ps = vgg.pass_stats();
+    println!(
+        "    VGG scratch at batch 16: {} KiB, slots {} -> {}",
+        scratch.scratch_bytes() / 1024,
+        ps.raw_slots,
+        ps.live_slots
+    );
     recs.push(Rec {
         bench: "vgg_graph_forward".into(),
         config: "batch 16".into(),
@@ -235,7 +271,7 @@ fn main() {
         batch: 16,
         req_per_s: 0.0,
         us_per_iter: t.median() * 1e6,
-        extra: String::new(),
+        extra: mem_extra(scratch.scratch_bytes(), &vgg),
     });
     println!();
 
@@ -297,6 +333,9 @@ fn open_loop_http(recs: &mut Vec<Rec>) {
             rep.other_5xx, 0,
             "front-end must answer overload with 503/504, never other 5xx"
         );
+        let mlp = server.registry().get("mlp").expect("mlp registered");
+        let peak_scratch = mlp.worker_scratch_bytes().into_iter().max().unwrap_or(0);
+        let mem = mem_extra(peak_scratch, mlp.model());
         recs.push(Rec {
             bench: "http_open_loop MLP".into(),
             config: format!("{label} saturation"),
@@ -306,7 +345,7 @@ fn open_loop_http(recs: &mut Vec<Rec>) {
             us_per_iter: 0.0,
             extra: format!(
                 ",\"offered_per_s\":{:.0},\"p50_us\":{:.1},\"p99_us\":{:.1},\"p999_us\":{:.1},\
-                 \"sent\":{},\"shed\":{},\"expired\":{},\"io_errors\":{}",
+                 \"sent\":{},\"shed\":{},\"expired\":{},\"io_errors\":{}{mem}",
                 rep.offered_per_s,
                 rep.p50_us,
                 rep.p99_us,

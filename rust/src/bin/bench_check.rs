@@ -71,12 +71,17 @@ fn identity(line: &str) -> Option<String> {
 }
 
 /// (metric name, higher_is_better) pairs checked when present.
+/// `scratch_bytes` and `slots_live` are the ISSUE-7 memory metrics:
+/// peak per-worker `GraphScratch` footprint and the post-liveness slot
+/// count — gated exactly like latency (growth beyond tolerance fails).
 const METRICS: &[(&str, bool)] = &[
     ("req_per_s", true),
     ("gops", true),
     ("us_per_iter", false),
     ("ns_per_iter", false),
     ("p99_us", false),
+    ("scratch_bytes", false),
+    ("slots_live", false),
 ];
 
 fn parse_records(text: &str) -> BTreeMap<String, String> {
@@ -260,8 +265,8 @@ mod tests {
     use super::*;
 
     const SERVE: &str = r#"[
-  {"bench":"MLP 784-512-256-10","config":"4 workers, batch 64","workers":4,"batch":64,"req_per_s":100000,"us_per_iter":0.00,"simd":"avx2","threads":8},
-  {"bench":"http_open_loop MLP","config":"1.0x saturation","workers":8,"batch":64,"req_per_s":90000,"us_per_iter":0.00,"offered_per_s":95000,"p99_us":850.0,"simd":"avx2","threads":8}
+  {"bench":"MLP 784-512-256-10","config":"4 workers, batch 64","workers":4,"batch":64,"req_per_s":100000,"us_per_iter":0.00,"scratch_bytes":262144,"slots_raw":8,"slots_live":2,"simd":"avx2","threads":8},
+  {"bench":"http_open_loop MLP","config":"1.0x saturation","workers":8,"batch":64,"req_per_s":90000,"us_per_iter":0.00,"offered_per_s":95000,"p99_us":850.0,"scratch_bytes":0,"slots_raw":0,"slots_live":0,"simd":"avx2","threads":8}
 ]"#;
 
     const KERNELS: &str = r#"[
@@ -319,6 +324,44 @@ mod tests {
         let (regs, _, skipped) = compare(&base, &cur, 0.20);
         assert!(regs.is_empty(), "zero baseline must be skipped, not compared");
         assert!(skipped >= 1);
+    }
+
+    #[test]
+    fn fails_on_scratch_bytes_growth() {
+        // 262144 -> 393216 is +50% peak scratch: a memory regression,
+        // gated exactly like a latency increase
+        let cur = SERVE.replace("\"scratch_bytes\":262144", "\"scratch_bytes\":393216");
+        let (regs, _, _) = compare(SERVE, &cur, 0.20);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].metric, "scratch_bytes");
+    }
+
+    #[test]
+    fn scratch_shrink_is_not_a_regression() {
+        let cur = SERVE.replace("\"scratch_bytes\":262144", "\"scratch_bytes\":131072");
+        let (regs, _, _) = compare(SERVE, &cur, 0.20);
+        assert!(regs.is_empty(), "halving scratch must pass");
+    }
+
+    #[test]
+    fn fails_on_live_slot_growth() {
+        // liveness pass losing coloring quality (2 -> 4 buffers) fails
+        let cur = SERVE.replace("\"slots_live\":2,", "\"slots_live\":4,");
+        let (regs, _, _) = compare(SERVE, &cur, 0.20);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].metric, "slots_live");
+    }
+
+    #[test]
+    fn zero_memory_baseline_is_unfilled_sentinel() {
+        // the http_open_loop row carries scratch_bytes:0 / slots_live:0
+        // (freshly added, unfilled): any current value must be skipped
+        let cur = SERVE
+            .replace("\"scratch_bytes\":0,", "\"scratch_bytes\":999999999,")
+            .replace("\"slots_live\":0,", "\"slots_live\":64,");
+        let (regs, _, skipped) = compare(SERVE, &cur, 0.20);
+        assert!(regs.is_empty(), "unfilled memory baselines must be skipped");
+        assert!(skipped >= 2);
     }
 
     #[test]

@@ -552,6 +552,12 @@ fn cmd_info() -> Result<(), String> {
         bold::tensor::simd::backend_name(),
         bold::util::pool::num_threads()
     );
+    let pc = bold::runtime::PassConfig::from_env();
+    println!(
+        "graph passes: fuse {}, liveness {} (BOLD_GRAPH_PASSES={{all,none,fuse,liveness}})",
+        if pc.fuse { "on" } else { "off" },
+        if pc.liveness { "on" } else { "off" }
+    );
     let artifacts = std::path::Path::new("artifacts");
     if artifacts.exists() {
         let entries: Vec<String> = std::fs::read_dir(artifacts)

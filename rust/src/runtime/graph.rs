@@ -40,6 +40,7 @@
 //! loading unchanged.
 
 use super::engine::{fp_head_bits, layer_records, EngineError, PackedLayer, PackedMlp};
+use super::passes::{self, PassConfig, PassStats};
 use crate::coordinator::{read_records, Record};
 use crate::nn::{packed_im2col, Layer, LayerDesc, BN_EPS};
 use crate::tensor::{simd, BitMatrix, Tensor};
@@ -55,8 +56,22 @@ pub struct FusedThreshold {
     pub flip: Vec<bool>,
 }
 
+/// Pooling folded into a Boolean conv by the fusion pass
+/// ([`passes::PassConfig::fuse`]): the op gathers pooled values straight
+/// out of the GEMM accumulator instead of materializing the
+/// full-resolution count map, replaying the standalone pool op's exact
+/// compare/sum order so the result is bit-identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolSpec {
+    /// k×k max pooling, stride k (exact `MaxPool2d` replay on counts).
+    Max(usize),
+    /// Global average pooling NCHW → (N, C), f32.
+    GlobalAvg,
+}
+
 /// Boolean conv op: bit-im2col + masked XNOR GEMM (+ optional fused
-/// per-channel threshold that re-packs straight to bits).
+/// pooling and/or fused per-channel threshold that re-packs straight to
+/// bits).
 pub struct PackedConv {
     pub name: String,
     pub c_in: usize,
@@ -66,9 +81,13 @@ pub struct PackedConv {
     pub pad: usize,
     /// Packed weights, `c_out` rows × `c_in·k·k` bits.
     pub weights: BitMatrix,
-    /// When present the op emits packed bits; when absent it emits the
-    /// f32 integer counts (NCHW) for a downstream pool/residual/threshold.
+    /// When present the op emits packed bits; when absent it emits f32
+    /// counts (NCHW, pooled if `pool` is set) for a downstream
+    /// pool/residual/threshold.
     pub fused: Option<FusedThreshold>,
+    /// Pooling applied to the counts before the (optional) fused
+    /// threshold. Set only by the fusion pass.
+    pub pool: Option<PoolSpec>,
     /// Index into the per-graph conv scratch pool (im2col patches + the
     /// geometry-cached validity mask).
     scratch_id: usize,
@@ -113,6 +132,11 @@ pub enum ThresholdSpec {
 pub enum PackedOp {
     /// Boolean FC fused with its scalar threshold: bits → bits.
     Linear(PackedLayer),
+    /// Boolean FC *without* a fused threshold: bits → f32 integer counts
+    /// (XNOR GEMM + ±1 bias add). This is the naive decomposition the
+    /// compiler emits; the fusion pass folds a following scalar
+    /// `Threshold` back into a [`PackedOp::Linear`].
+    LinearCounts(PackedLayer),
     /// Boolean conv: bits → bits (fused) or bits → f32 counts.
     Conv2d(PackedConv),
     /// FP stem conv: bits (decoded ±1) or f32 → f32.
@@ -144,13 +168,13 @@ impl PackedOp {
     pub fn kind(&self) -> &'static str {
         match self {
             PackedOp::Linear(_) => "Linear",
-            PackedOp::Conv2d(c) => {
-                if c.fused.is_some() {
-                    "Conv2d+thr"
-                } else {
-                    "Conv2d"
-                }
-            }
+            PackedOp::LinearCounts(_) => "LinearCounts",
+            PackedOp::Conv2d(c) => match (&c.pool, &c.fused) {
+                (None, None) => "Conv2d",
+                (None, Some(_)) => "Conv2d+thr",
+                (Some(_), None) => "Conv2d+pool",
+                (Some(_), Some(_)) => "Conv2d+pool+thr",
+            },
             PackedOp::FpConv2d(_) => "FpConv2d",
             PackedOp::BatchNorm(_) => "BatchNorm",
             PackedOp::Threshold(_) => "Threshold",
@@ -164,9 +188,12 @@ impl PackedOp {
 }
 
 /// One dataflow node: `op` reads activation slot `src` and writes slot
-/// `dst`. Slot indices are assigned at compile time in topological order
-/// (`src < dst` always), which is what lets the executor split the slot
-/// pool into disjoint borrows.
+/// `dst`. The compiler assigns slots in SSA order (`src < dst`, each
+/// slot written once); after the liveness pass recolors them
+/// (`BOLD_GRAPH_PASSES`), slots are reused and only `src ≠ dst` (plus
+/// merge-inputs ≠ merge-output for `Residual`) is guaranteed — which is
+/// exactly what the executor needs to take the destination slot out of
+/// the pool while reading the sources.
 pub struct Node {
     pub op: PackedOp,
     pub src: usize,
@@ -181,9 +208,11 @@ pub struct PackedGraph {
     pub nodes: Vec<Node>,
     /// Non-batch input dims: `[C, H, W]` for conv models, `[D]` flat.
     pub input_shape: Vec<usize>,
-    n_slots: usize,
+    pub(crate) n_slots: usize,
     n_convs: usize,
     d_out: usize,
+    /// What the pass pipeline did (see [`PassStats`]).
+    pub(crate) pass_stats: PassStats,
 }
 
 // ---------------------------------------------------------------------------
@@ -222,6 +251,20 @@ impl Slot {
 
     fn cols(&self) -> usize {
         self.shape[1..].iter().product()
+    }
+
+    /// Bytes currently held by this slot's retained buffers.
+    fn bytes(&self) -> usize {
+        self.bits.words.len() * 8 + self.f.data.len() * 4
+    }
+}
+
+/// The executor takes a node's destination slot out of the pool with
+/// `mem::take` while it reads the sources, so `Slot` needs a cheap
+/// (allocation-free) empty value.
+impl Default for Slot {
+    fn default() -> Self {
+        Slot::new()
     }
 }
 
@@ -283,6 +326,27 @@ impl GraphScratch {
             self.convs.push(ConvScratch::new());
         }
     }
+
+    /// Total bytes currently held by the retained buffers: activation
+    /// slots, conv im2col patches/masks, the shared GEMM accumulator and
+    /// the FP stem/head staging. Buffers only grow across forwards, so
+    /// after a steady-state batch this is the worker's peak scratch
+    /// footprint — surfaced per worker in the HTTP `/stats` endpoint and
+    /// the serve benches.
+    pub fn scratch_bytes(&self) -> usize {
+        let slots: usize = self.slots.iter().map(Slot::bytes).sum();
+        let convs: usize = self
+            .convs
+            .iter()
+            .map(|c| (c.patches.words.len() + c.mask.words.len()) * 8)
+            .sum();
+        let f32s = self.counts.data.len()
+            + self.col.len()
+            + self.fp_in.data.len()
+            + self.row.len()
+            + self.logits.data.len();
+        slots + convs + f32s * 4
+    }
 }
 
 impl Default for GraphScratch {
@@ -306,6 +370,17 @@ impl PackedGraph {
         self.d_out
     }
 
+    /// Number of activation slots a [`GraphScratch`] allocates for this
+    /// graph — the recolored (live) count when the liveness pass ran.
+    pub fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    /// What the pass pipeline did to this graph at load time.
+    pub fn pass_stats(&self) -> &PassStats {
+        &self.pass_stats
+    }
+
     /// Total Boolean weight bits across the graph (the 1-bit-per-weight
     /// model size of the energy story).
     pub fn param_bits(&self) -> usize {
@@ -313,7 +388,7 @@ impl PackedGraph {
             nodes
                 .iter()
                 .map(|n| match &n.op {
-                    PackedOp::Linear(l) => {
+                    PackedOp::Linear(l) | PackedOp::LinearCounts(l) => {
                         l.weights.rows * l.weights.cols
                             + l.bias.as_ref().map(|b| b.cols).unwrap_or(0)
                     }
@@ -340,7 +415,10 @@ impl PackedGraph {
         count(&self.nodes)
     }
 
-    /// One-line op chain, e.g. `FpConv2d → Threshold → Conv2d+thr → …`.
+    /// One-line op chain, e.g. `FpConv2d → Threshold → Conv2d+thr → …`,
+    /// plus a trailing pass report (fused/elided op counts, slot
+    /// compaction) so `serve-native`/`serve-http` startup logs show what
+    /// the compiler did.
     pub fn summary(&self) -> String {
         fn fmt(nodes: &[Node]) -> String {
             nodes
@@ -354,7 +432,23 @@ impl PackedGraph {
                 .collect::<Vec<_>>()
                 .join(" → ")
         }
-        fmt(&self.nodes)
+        let chain = fmt(&self.nodes);
+        let ps = &self.pass_stats;
+        let mut tags = Vec::new();
+        if ps.fuse {
+            tags.push(format!(
+                "fuse(thr {}, pool {}, flat {})",
+                ps.fused_thresholds, ps.fused_pools, ps.elided_flattens
+            ));
+        }
+        if ps.liveness {
+            tags.push(format!("liveness(slots {} -> {})", ps.raw_slots, ps.live_slots));
+        }
+        if tags.is_empty() {
+            format!("{chain} | passes: off ({} slots)", self.n_slots)
+        } else {
+            format!("{chain} | passes: {}", tags.join(", "))
+        }
     }
 
     /// Load a frozen model from a [`crate::coordinator::save_model`]
@@ -369,27 +463,53 @@ impl PackedGraph {
     /// have been forwarded at least once so its input shape is recorded
     /// (conv graphs need it; plain linear stacks infer `d_in`).
     pub fn from_layer(model: &mut dyn Layer) -> Result<Self, EngineError> {
-        let records = layer_records(model);
-        Self::from_records(&records)
+        Self::from_layer_with(model, PassConfig::from_env())
     }
 
-    /// Build from parsed checkpoint records.
+    /// [`Self::from_layer`] with an explicit pass selection instead of
+    /// the `BOLD_GRAPH_PASSES` environment default (tests use this so
+    /// pass coverage never depends on — or mutates — process-global
+    /// environment state).
+    pub fn from_layer_with(
+        model: &mut dyn Layer,
+        cfg: PassConfig,
+    ) -> Result<Self, EngineError> {
+        let records = layer_records(model);
+        Self::from_records_with(&records, cfg)
+    }
+
+    /// Build from parsed checkpoint records, with the pass pipeline
+    /// selected by `BOLD_GRAPH_PASSES`.
     pub fn from_records(records: &[Record]) -> Result<Self, EngineError> {
+        Self::from_records_with(records, PassConfig::from_env())
+    }
+
+    /// [`Self::from_records`] with an explicit pass selection.
+    pub fn from_records_with(records: &[Record], cfg: PassConfig) -> Result<Self, EngineError> {
         let arch = records.iter().find_map(|r| match r {
             Record::Arch { input_shape, layers, .. } => Some((input_shape, layers)),
             _ => None,
         });
         match arch {
-            Some((input_shape, layers)) => compile(input_shape, layers, records),
-            None => PackedMlp::from_records(records).map(PackedGraph::from).map_err(|e| {
-                EngineError::new(format!(
-                    "{} (checkpoint has no architecture record; without `Record::Arch` only \
-                     plain BoolLinear-stack checkpoints are servable — re-save with \
-                     `save_model` after a forward pass to embed the architecture)",
-                    e.msg
-                ))
-            }),
+            Some((input_shape, layers)) => {
+                compile(input_shape, layers, records).map(|g| g.run_passes(cfg))
+            }
+            None => PackedMlp::from_records(records)
+                .map(|m| Self::from_mlp(m, cfg))
+                .map_err(|e| {
+                    EngineError::new(format!(
+                        "{} (checkpoint has no architecture record; without `Record::Arch` only \
+                         plain BoolLinear-stack checkpoints are servable — re-save with \
+                         `save_model` after a forward pass to embed the architecture)",
+                        e.msg
+                    ))
+                }),
         }
+    }
+
+    fn run_passes(mut self, cfg: PassConfig) -> Self {
+        passes::run(&mut self, cfg);
+        self
     }
 
     /// Forward on packed inputs (B × d_in bits) → logits (B × d_out).
@@ -433,11 +553,14 @@ impl PackedGraph {
     }
 }
 
-/// A [`PackedMlp`] is exactly a linear-only graph: one fused
-/// `Linear` op per Boolean layer plus the FP head. This is the
-/// back-compat bridge for arch-less checkpoints.
-impl From<PackedMlp> for PackedGraph {
-    fn from(m: PackedMlp) -> Self {
+impl PackedGraph {
+    /// Wrap a [`PackedMlp`] as a linear-only graph and run the pass
+    /// pipeline on it: one fused `Linear` op per Boolean layer plus the
+    /// FP head (the back-compat bridge for arch-less checkpoints). The
+    /// thresholds are already fused in the [`PackedLayer`]s, so only the
+    /// liveness pass has work to do — it recolors the slot chain down to
+    /// a ping-pong pair.
+    pub fn from_mlp(m: PackedMlp, cfg: PassConfig) -> Self {
         let d_in = m.d_in();
         let d_out = m.d_out();
         let mut nodes = Vec::new();
@@ -451,7 +574,22 @@ impl From<PackedMlp> for PackedGraph {
             src: slot,
             dst: slot + 1,
         });
-        PackedGraph { nodes, input_shape: vec![d_in], n_slots: slot + 2, n_convs: 0, d_out }
+        PackedGraph {
+            nodes,
+            input_shape: vec![d_in],
+            n_slots: slot + 2,
+            n_convs: 0,
+            d_out,
+            pass_stats: PassStats::default(),
+        }
+        .run_passes(cfg)
+    }
+}
+
+/// See [`PackedGraph::from_mlp`]; pass selection from `BOLD_GRAPH_PASSES`.
+impl From<PackedMlp> for PackedGraph {
+    fn from(m: PackedMlp) -> Self {
+        Self::from_mlp(m, PassConfig::from_env())
     }
 }
 
@@ -475,19 +613,33 @@ fn run_nodes(
             PackedOp::Residual { main, shortcut, main_out, short_out } => {
                 run_nodes(main, slots, convs, counts, col, fp_in, row, logits);
                 run_nodes(shortcut, slots, convs, counts, col, fp_in, row, logits);
-                let (lo, hi) = slots.split_at_mut(node.dst);
-                let a = &lo[*main_out];
-                let b = &lo[*short_out];
-                let out = &mut hi[0];
-                assert!(!a.is_bits && !b.is_bits, "residual branches must end on f32 counts");
-                assert_eq!(a.shape, b.shape, "residual branch shapes {:?} vs {:?}", a.shape, b.shape);
-                out.f.resize_to(&a.shape);
-                for (o, (&x, &y)) in out.f.data.iter_mut().zip(a.f.data.iter().zip(&b.f.data)) {
-                    *o = x + y;
+                // the liveness pass never gives the merge output the
+                // color of either branch output (both are read here), so
+                // taking the dst slot out of the pool is alias-free
+                debug_assert!(
+                    node.dst != *main_out && node.dst != *short_out,
+                    "residual dst slot aliases a branch output"
+                );
+                let mut out = std::mem::take(&mut slots[node.dst]);
+                {
+                    let a = &slots[*main_out];
+                    let b = &slots[*short_out];
+                    assert!(!a.is_bits && !b.is_bits, "residual branches must end on f32 counts");
+                    assert_eq!(
+                        a.shape, b.shape,
+                        "residual branch shapes {:?} vs {:?}",
+                        a.shape, b.shape
+                    );
+                    out.f.resize_to(&a.shape);
+                    for (o, (&x, &y)) in out.f.data.iter_mut().zip(a.f.data.iter().zip(&b.f.data))
+                    {
+                        *o = x + y;
+                    }
+                    out.is_bits = false;
+                    let shape = &a.shape;
+                    out.set_shape(shape);
                 }
-                out.is_bits = false;
-                let shape = &a.shape;
-                out.set_shape(shape);
+                slots[node.dst] = out;
             }
             PackedOp::FpHead { w, b } => {
                 let src = &slots[node.src];
@@ -509,8 +661,13 @@ fn run_nodes(
                 }
             }
             op => {
-                let (lo, hi) = slots.split_at_mut(node.dst);
-                eval_op(op, &lo[node.src], &mut hi[0], convs, counts, col, fp_in);
+                // src ≠ dst holds for the compiler's SSA slots and is
+                // preserved by the recoloring (a slot's color frees only
+                // strictly after its last read)
+                debug_assert_ne!(node.src, node.dst, "op dst slot aliases its src");
+                let mut out = std::mem::take(&mut slots[node.dst]);
+                eval_op(op, &slots[node.src], &mut out, convs, counts, col, fp_in);
+                slots[node.dst] = out;
             }
         }
     }
@@ -533,6 +690,28 @@ fn eval_op(
             out.is_bits = true;
             out.set_shape(&[src.shape[0], l.weights.rows]);
         }
+        PackedOp::LinearCounts(l) => {
+            // naive decomposition of the fused Linear: XNOR GEMM to f32
+            // integer counts, then the ±1 Boolean bias add — exactly the
+            // `pack_threshold_row` accumulation without the compare, so
+            // a downstream scalar Threshold reproduces `Linear` bit-
+            // for-bit (counts are integers, exact in f32)
+            assert!(src.is_bits, "LinearCounts op needs packed input");
+            assert!(l.input_mask.is_none(), "masked linears serve through the fused path");
+            src.bits.xnor_gemm_into(&l.weights, &mut out.f);
+            let n_out = l.weights.rows;
+            let n = src.shape[0];
+            if let Some(bias) = &l.bias {
+                for i in 0..n {
+                    let orow = &mut out.f.data[i * n_out..(i + 1) * n_out];
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        *o += if bias.get(0, j) { 1.0 } else { -1.0 };
+                    }
+                }
+            }
+            out.is_bits = false;
+            out.set_shape(&[n, n_out]);
+        }
         PackedOp::Conv2d(c) => {
             assert!(src.is_bits, "Boolean conv needs packed input");
             let (n, ch, h, w) = src.dims4();
@@ -541,15 +720,32 @@ fn eval_op(
             let (oh, ow) = bit_im2col(&src.bits, n, ch, h, w, c.k, c.stride, c.pad, cs);
             cs.patches.xnor_gemm_masked_into(&c.weights, &cs.mask, counts);
             let hw = oh * ow;
-            match &c.fused {
-                Some(ft) => {
+            let cd = &counts.data;
+            // gather the max of one pooling window straight from the
+            // GEMM (row = spatial, col = channel) layout — identical
+            // value-visit order to the standalone MaxPool op, so ties
+            // and the running `>` compare resolve the same way
+            let pool_max = |ni: usize, j: usize, oy: usize, ox: usize, k: usize| -> f32 {
+                let mut best = f32::NEG_INFINITY;
+                for dy in 0..k {
+                    for dx in 0..k {
+                        let p = (oy * k + dy) * ow + (ox * k + dx);
+                        let v = cd[(ni * hw + p) * c.c_out + j];
+                        if v > best {
+                            best = v;
+                        }
+                    }
+                }
+                best
+            };
+            match (&c.pool, &c.fused) {
+                (None, Some(ft)) => {
                     // per-channel threshold + re-pack (bit col = j·hw + p,
                     // channel-major): each channel's strided GEMM column
                     // is staged contiguously, then compared and packed by
                     // the SIMD backend's compare kernel
                     out.bits.zero_resize(n, c.c_out * hw);
                     col.resize(hw, 0.0);
-                    let cd = &counts.data;
                     for ni in 0..n {
                         let row = out.bits.row_mut(ni);
                         for j in 0..c.c_out {
@@ -560,23 +756,90 @@ fn eval_op(
                         }
                     }
                     out.is_bits = true;
+                    out.set_shape(&[n, c.c_out, oh, ow]);
                 }
-                None => {
+                (None, None) => {
                     // emit f32 counts in NCHW (the rows_to_nchw mapping)
                     out.f.resize_to(&[n, c.c_out, oh, ow]);
                     for ni in 0..n {
                         for p in 0..hw {
                             let r = ni * hw + p;
                             for j in 0..c.c_out {
-                                out.f.data[(ni * c.c_out + j) * hw + p] =
-                                    counts.data[r * c.c_out + j];
+                                out.f.data[(ni * c.c_out + j) * hw + p] = cd[r * c.c_out + j];
                             }
                         }
                     }
                     out.is_bits = false;
+                    out.set_shape(&[n, c.c_out, oh, ow]);
+                }
+                (Some(PoolSpec::Max(k)), fused) => {
+                    let k = *k;
+                    assert!(
+                        oh % k == 0 && ow % k == 0,
+                        "conv '{}': pooled {oh}x{ow} not divisible by {k}",
+                        c.name
+                    );
+                    let (ph, pw) = (oh / k, ow / k);
+                    let phw = ph * pw;
+                    match fused {
+                        Some(ft) => {
+                            // pool + threshold in one sweep: the pooled
+                            // channel plane is staged contiguously, then
+                            // compared/packed by the same SIMD kernel as
+                            // the standalone per-channel Threshold
+                            out.bits.zero_resize(n, c.c_out * phw);
+                            col.resize(phw, 0.0);
+                            for ni in 0..n {
+                                let row = out.bits.row_mut(ni);
+                                for j in 0..c.c_out {
+                                    for oy in 0..ph {
+                                        for ox in 0..pw {
+                                            col[oy * pw + ox] = pool_max(ni, j, oy, ox, k);
+                                        }
+                                    }
+                                    simd::pack_cmp_into(row, j * phw, col, ft.thr[j], ft.flip[j]);
+                                }
+                            }
+                            out.is_bits = true;
+                        }
+                        None => {
+                            out.f.resize_to(&[n, c.c_out, ph, pw]);
+                            for ni in 0..n {
+                                for j in 0..c.c_out {
+                                    for oy in 0..ph {
+                                        for ox in 0..pw {
+                                            out.f.data[((ni * c.c_out + j) * ph + oy) * pw + ox] =
+                                                pool_max(ni, j, oy, ox, k);
+                                        }
+                                    }
+                                }
+                            }
+                            out.is_bits = false;
+                        }
+                    }
+                    out.set_shape(&[n, c.c_out, ph, pw]);
+                }
+                (Some(PoolSpec::GlobalAvg), fused) => {
+                    // the fusion pass never puts a threshold after a
+                    // mean (no longer integer-valued counts)
+                    assert!(fused.is_none(), "GlobalAvg pool cannot carry a fused threshold");
+                    out.f.resize_to(&[n, c.c_out]);
+                    let inv = 1.0 / hw as f32;
+                    for ni in 0..n {
+                        for j in 0..c.c_out {
+                            // same ascending-p left-fold as the
+                            // standalone GlobalAvgPool's slice sum
+                            let mut s = 0.0f32;
+                            for p in 0..hw {
+                                s += cd[(ni * hw + p) * c.c_out + j];
+                            }
+                            out.f.data[ni * c.c_out + j] = s * inv;
+                        }
+                    }
+                    out.is_bits = false;
+                    out.set_shape(&[n, c.c_out]);
                 }
             }
-            out.set_shape(&[n, c.c_out, oh, ow]);
         }
         PackedOp::FpConv2d(fc) => {
             let (n, ch, h, w) = src.dims4();
@@ -952,28 +1215,32 @@ impl Compiler<'_> {
         match desc {
             LayerDesc::ThresholdAct { name, tau, centered } => {
                 let thr = self.act_threshold(name, *tau, *centered)?;
-                if let Some((_, mut pl)) = ctx.pending_lin.take() {
+                // the compiler emits the NAIVE decomposition — GEMM op,
+                // then a standalone Threshold; the fusion pass
+                // (`passes::run`) folds the pair back into the fused
+                // kernels, so the unfused graph stays a living reference
+                if let Some((_, pl)) = ctx.pending_lin.take() {
                     if ctx.pending_bn.is_some() {
                         return Err(EngineError::new(format!(
                             "BatchNorm between BoolLinear and activation '{name}' is not servable"
                         )));
                     }
-                    pl.threshold = thr;
                     let n_out = pl.weights.rows;
-                    self.emit(ctx, PackedOp::Linear(pl));
+                    self.emit(ctx, PackedOp::LinearCounts(pl));
+                    self.emit(ctx, PackedOp::Threshold(ThresholdSpec::Scalar(thr)));
                     ctx.st = St { bits: true, integer: false, chans: n_out, range: 0 };
-                } else if let Some(mut c) = ctx.pending_conv.take() {
+                } else if let Some(c) = ctx.pending_conv.take() {
+                    // BN folding stays a load-time weight transform (not
+                    // a pass): the folded per-channel integer threshold
+                    // IS the naive Threshold op here
                     let fanin = (c.c_in * c.k * c.k) as i64;
-                    let ft = match ctx.pending_bn.take() {
-                        Some(bn) => fold_bn_threshold(&bn, thr, fanin),
-                        None => FusedThreshold {
-                            thr: vec![thr; c.c_out],
-                            flip: vec![false; c.c_out],
-                        },
-                    };
-                    c.fused = Some(ft);
                     let c_out = c.c_out;
+                    let spec = match ctx.pending_bn.take() {
+                        Some(bn) => ThresholdSpec::PerChannel(fold_bn_threshold(&bn, thr, fanin)),
+                        None => ThresholdSpec::Scalar(thr),
+                    };
                     self.emit(ctx, PackedOp::Conv2d(c));
+                    self.emit(ctx, PackedOp::Threshold(spec));
                     ctx.st = St { bits: true, integer: false, chans: c_out, range: 0 };
                 } else {
                     if ctx.st.bits {
@@ -1026,6 +1293,7 @@ impl Compiler<'_> {
                     pad: *pad,
                     weights,
                     fused: None,
+                    pool: None,
                     scratch_id: {
                         let id = self.next_conv;
                         self.next_conv += 1;
@@ -1096,12 +1364,13 @@ impl Compiler<'_> {
                 ctx.st.range = 0;
             }
             LayerDesc::Flatten { .. } => {
-                // pure metadata: packed bits are already row-flattened and
-                // f32 data is contiguous row-major, and every downstream
-                // consumer derives (batch, ∏ rest) itself — elide the op
-                // so no copy is paid (the IR variant stays available for
-                // hand-built graphs)
+                // emitted explicitly (a plain copy op); the fusion pass
+                // elides it by rewriting slot indices, since packed bits
+                // are already row-flattened, f32 data is contiguous
+                // row-major, and every downstream consumer derives
+                // (batch, ∏ rest) itself
                 self.flush(ctx)?;
+                self.emit(ctx, PackedOp::Flatten);
             }
             LayerDesc::Binarize { .. } => {
                 self.flush(ctx)?;
@@ -1358,5 +1627,6 @@ fn compile(
         n_slots: compiler.next_slot,
         n_convs: compiler.next_conv,
         d_out,
+        pass_stats: PassStats::default(),
     })
 }

@@ -7,9 +7,11 @@
 //!   graph ([`PackedGraph`]) — conv, residual and MLP models all run
 //!   forward-only as pure XNOR+POPCNT with BN folded into per-channel
 //!   integer thresholds — and [`serve`] wraps it in a multi-threaded
-//!   micro-batching server (`bold serve-native`). [`engine`] keeps the
-//!   original linear-stack [`PackedMlp`] as the back-compat loader for
-//!   arch-less checkpoints.
+//!   micro-batching server (`bold serve-native`). [`passes`] is the
+//!   compile-time pass pipeline between the two (op fusion +
+//!   slot-liveness buffer reuse, `BOLD_GRAPH_PASSES`). [`engine`] keeps
+//!   the original linear-stack [`PackedMlp`] as the back-compat loader
+//!   for arch-less checkpoints.
 //! * **XLA path** (feature `xla-runtime`): `PjrtExecutor` compiles the
 //!   AOT-lowered L2 jax graphs (`artifacts/*.hlo.txt`) with PJRT and
 //!   executes them from Rust (`bold serve`). Off by default so the
@@ -26,14 +28,17 @@ pub mod graph;
 pub mod http;
 pub mod loadgen;
 pub mod net;
+pub mod passes;
 #[cfg(feature = "xla-runtime")]
 pub mod pjrt;
 pub mod serve;
 
 pub use engine::{EngineError, EngineScratch, PackedLayer, PackedMlp};
 pub use graph::{
-    FusedThreshold, GraphScratch, Node, PackedConv, PackedGraph, PackedOp, ThresholdSpec,
+    FusedThreshold, GraphScratch, Node, PackedConv, PackedGraph, PackedOp, PoolSpec,
+    ThresholdSpec,
 };
+pub use passes::{PassConfig, PassStats};
 #[cfg(feature = "xla-runtime")]
 pub use pjrt::{literal_to_tensor, tensor_to_literal, PjrtError, PjrtExecutor};
 pub use http::{HttpError, HttpLimits, HttpParser, Parse, ResponseWriter};

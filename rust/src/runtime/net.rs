@@ -306,6 +306,12 @@ impl HttpServer {
         &self.shared.cfg
     }
 
+    /// The served model registry (e.g. for reading per-worker scratch
+    /// footprints before shutdown — the serve benches do).
+    pub fn registry(&self) -> &ModelRegistry {
+        &self.shared.registry
+    }
+
     /// Snapshot of the front-end counters.
     pub fn stats(&self) -> HttpStats {
         self.shared.stats()
@@ -649,13 +655,17 @@ fn respond_aux(
                 if i > 0 {
                     body.push(',');
                 }
+                let ps = s.model().pass_stats();
                 let _ = write!(
                     body,
-                    "{{\"name\":{name:?},\"d_in\":{},\"d_out\":{},\"ops\":{},\"queue_cap\":{}}}",
+                    "{{\"name\":{name:?},\"d_in\":{},\"d_out\":{},\"ops\":{},\"queue_cap\":{},\
+                     \"slots_raw\":{},\"slots_live\":{}}}",
                     s.d_in(),
                     s.model().d_out(),
                     s.model().num_ops(),
-                    s.queue_cap()
+                    s.queue_cap(),
+                    ps.raw_slots,
+                    ps.live_slots
                 );
             }
             body.push_str("]}\n");
@@ -665,10 +675,10 @@ fn respond_aux(
         ("GET", "/stats") => {
             sh.count_status(200);
             let st = sh.stats();
-            let _ = writeln!(
+            let _ = write!(
                 body,
                 "{{\"connections\":{},\"conns_rejected\":{},\"requests\":{},\"ok\":{},\
-                 \"client_err\":{},\"shed\":{},\"expired\":{},\"server_err\":{},\"aborted\":{}}}",
+                 \"client_err\":{},\"shed\":{},\"expired\":{},\"server_err\":{},\"aborted\":{}",
                 st.connections,
                 st.conns_rejected,
                 st.requests,
@@ -679,6 +689,26 @@ fn respond_aux(
                 st.server_err,
                 st.aborted
             );
+            // per-worker GraphScratch footprints per model (bytes; zero
+            // until a worker has run its first batch)
+            let mut total = 0usize;
+            body.push_str(",\"scratch_per_worker\":{");
+            for (i, name) in sh.registry.names().iter().enumerate() {
+                let s = sh.registry.get(name).expect("registered");
+                if i > 0 {
+                    body.push(',');
+                }
+                let _ = write!(body, "{name:?}:[");
+                for (j, b) in s.worker_scratch_bytes().iter().enumerate() {
+                    if j > 0 {
+                        body.push(',');
+                    }
+                    let _ = write!(body, "{b}");
+                    total += b;
+                }
+                body.push(']');
+            }
+            let _ = writeln!(body, "}},\"scratch_bytes\":{total}}}");
             stream.write_all(writer.render(200, &JSON_CT, body.as_bytes(), keep))?;
             Ok(keep)
         }

@@ -1,0 +1,480 @@
+//! Graph-compiler optimization passes (DESIGN.md
+//! §Graph-Compiler-Passes): rewrites applied to the [`PackedGraph`] op
+//! list between compilation and execution.
+//!
+//! The compiler emits a *naive* graph — one op per architecture layer,
+//! one activation slot per op — and every optimization is a separate,
+//! individually toggleable pass over that IR:
+//!
+//! 1. **Fusion** ([`PassConfig::fuse`]): elides pure-metadata `Flatten`
+//!    ops by rewriting slot indices, folds `Threshold` nodes into their
+//!    producer `Linear`/`Conv2d` GEMMs (the producer packs bits straight
+//!    out of the accumulator), and folds `MaxPool`/`GlobalAvgPool` into
+//!    the producing conv so the full-resolution count map is never
+//!    materialized. Each rewrite replaces a producer/consumer pair with
+//!    one op computing the identical function — the fused kernels replay
+//!    the decomposed ops' exact f32 compare/sum order, so the output is
+//!    bit-exact by construction (asserted archetype-by-archetype in
+//!    `tests/packed_graph.rs`).
+//! 2. **Slot liveness** ([`PassConfig::liveness`]): computes
+//!    first-def/last-use per activation slot on a linearized schedule
+//!    (recursing through both `Residual` branch op lists, whose
+//!    `main_out`/`short_out` values stay live until the merge), then
+//!    recolors `src`/`dst` with a linear scan so [`GraphScratch`]
+//!    allocates only the live-range chromatic number of buffers —
+//!    typically 2–3 slots regardless of depth — instead of one slot per
+//!    node.
+//!
+//! Pass selection comes from `BOLD_GRAPH_PASSES`
+//! (`all`|`none`|`fuse`|`liveness`, default `all`) via
+//! [`PassConfig::from_env`]; the unoptimized executor stays a living
+//! reference that CI runs the full parity suites against.
+//!
+//! Safety model: the passes assume the compiler's SSA discipline (each
+//! slot written exactly once, defs precede uses). The liveness pass
+//! re-verifies that discipline while linearizing and bails to the
+//! identity coloring on any violation, so a hand-built graph can never
+//! be miscolored — it just isn't compacted.
+//!
+//! [`PackedGraph`]: super::graph::PackedGraph
+//! [`GraphScratch`]: super::graph::GraphScratch
+
+use super::graph::{FusedThreshold, Node, PackedGraph, PackedOp, PoolSpec, ThresholdSpec};
+use std::collections::BTreeSet;
+
+/// Which optimization passes to run on a freshly compiled graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PassConfig {
+    /// Op fusion: threshold/pool folding + Flatten elision.
+    pub fuse: bool,
+    /// Slot-liveness recoloring for scratch-buffer reuse.
+    pub liveness: bool,
+}
+
+impl PassConfig {
+    /// Every pass enabled (the default pipeline).
+    pub fn all() -> Self {
+        PassConfig { fuse: true, liveness: true }
+    }
+
+    /// No passes: the naive compiler output runs as-is (the living
+    /// reference executor).
+    pub fn none() -> Self {
+        PassConfig { fuse: false, liveness: false }
+    }
+
+    /// Parse a `BOLD_GRAPH_PASSES` value; `None` (unset) and anything
+    /// unrecognized select the full pipeline.
+    pub fn parse(v: Option<&str>) -> Self {
+        match v.map(str::trim) {
+            Some("none") => Self::none(),
+            Some("fuse") => PassConfig { fuse: true, liveness: false },
+            Some("liveness") => PassConfig { fuse: false, liveness: true },
+            _ => Self::all(),
+        }
+    }
+
+    /// Pass selection from the `BOLD_GRAPH_PASSES` environment variable.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::var("BOLD_GRAPH_PASSES").ok().as_deref())
+    }
+}
+
+impl Default for PassConfig {
+    fn default() -> Self {
+        Self::all()
+    }
+}
+
+/// What the pass pipeline did to a graph — reported by
+/// [`PackedGraph::summary`](super::graph::PackedGraph::summary) and the
+/// serve benches.
+#[derive(Debug, Clone, Default)]
+pub struct PassStats {
+    /// The fusion pass ran.
+    pub fuse: bool,
+    /// The liveness pass ran.
+    pub liveness: bool,
+    /// `Threshold` nodes folded into their producer GEMM.
+    pub fused_thresholds: usize,
+    /// `MaxPool`/`GlobalAvgPool` nodes folded into their producer conv.
+    pub fused_pools: usize,
+    /// `Flatten` nodes elided by slot rewriting.
+    pub elided_flattens: usize,
+    /// Slot count of the naive compiler output.
+    pub raw_slots: usize,
+    /// Slot count after recoloring (== `raw_slots` when liveness is off
+    /// or bailed).
+    pub live_slots: usize,
+}
+
+/// Run the configured passes over `graph` in place and record
+/// [`PassStats`] on it.
+pub(crate) fn run(graph: &mut PackedGraph, cfg: PassConfig) {
+    let raw = graph.n_slots;
+    let mut stats = PassStats {
+        fuse: cfg.fuse,
+        liveness: cfg.liveness,
+        raw_slots: raw,
+        live_slots: raw,
+        ..PassStats::default()
+    };
+    if cfg.fuse {
+        elide_flattens(&mut graph.nodes, &mut stats);
+        let uses = use_counts(&graph.nodes, raw);
+        fuse_pairs(&mut graph.nodes, &uses, &mut stats);
+    }
+    if cfg.liveness {
+        if let Some(n) = recolor(&mut graph.nodes, raw) {
+            graph.n_slots = n;
+            stats.live_slots = n;
+        }
+    }
+    graph.pass_stats = stats;
+}
+
+// ---------------------------------------------------------------------------
+// fusion pass
+// ---------------------------------------------------------------------------
+
+/// Rewrite every read of slot `from` to slot `to` in `nodes` (recursing
+/// into residual branches). Writes are never rewritten: `from` is only
+/// produced by an op the caller just removed.
+fn replace_reads(nodes: &mut [Node], from: usize, to: usize) {
+    for nd in nodes {
+        if nd.src == from {
+            nd.src = to;
+        }
+        if let PackedOp::Residual { main, shortcut, main_out, short_out } = &mut nd.op {
+            replace_reads(main, from, to);
+            replace_reads(shortcut, from, to);
+            if *main_out == from {
+                *main_out = to;
+            }
+            if *short_out == from {
+                *short_out = to;
+            }
+        }
+    }
+}
+
+/// Remove `Flatten` nodes: packed bits and f32 data are already flat
+/// row-major, and every consumer derives `(batch, ∏ rest)` itself, so
+/// the op is pure metadata. Consumers of the flatten's output are
+/// rewired to its input. Returns `(old_dst, new_src)` renames so a
+/// parent `Residual` can fix up a branch-tail reference.
+fn elide_flattens(nodes: &mut Vec<Node>, stats: &mut PassStats) -> Vec<(usize, usize)> {
+    for nd in nodes.iter_mut() {
+        if let PackedOp::Residual { main, shortcut, main_out, short_out } = &mut nd.op {
+            for (from, to) in elide_flattens(main, stats) {
+                if *main_out == from {
+                    *main_out = to;
+                }
+            }
+            for (from, to) in elide_flattens(shortcut, stats) {
+                if *short_out == from {
+                    *short_out = to;
+                }
+            }
+        }
+    }
+    let mut renames = Vec::new();
+    let mut i = 0;
+    while i < nodes.len() {
+        if matches!(nodes[i].op, PackedOp::Flatten) {
+            let (src, dst) = (nodes[i].src, nodes[i].dst);
+            nodes.remove(i);
+            replace_reads(&mut nodes[i..], dst, src);
+            renames.push((dst, src));
+            stats.elided_flattens += 1;
+        } else {
+            i += 1;
+        }
+    }
+    renames
+}
+
+/// Read count per slot across the whole graph (a `Residual` merge reads
+/// both branch outputs).
+fn use_counts(nodes: &[Node], n_slots: usize) -> Vec<usize> {
+    fn walk(nodes: &[Node], uses: &mut [usize]) {
+        for nd in nodes {
+            match &nd.op {
+                PackedOp::Residual { main, shortcut, main_out, short_out } => {
+                    walk(main, uses);
+                    walk(shortcut, uses);
+                    uses[*main_out] += 1;
+                    uses[*short_out] += 1;
+                }
+                _ => uses[nd.src] += 1,
+            }
+        }
+    }
+    let mut uses = vec![0usize; n_slots];
+    walk(nodes, &mut uses);
+    uses
+}
+
+/// Fold producer/consumer pairs in one op list (recursing into residual
+/// branches). A pair fuses only when the consumer directly reads the
+/// producer's output and that output has no other reader, so the
+/// intermediate value can vanish entirely. The merged node keeps the
+/// consumer's `dst`, which means no outer slot reference ever changes.
+fn fuse_pairs(nodes: &mut Vec<Node>, uses: &[usize], stats: &mut PassStats) {
+    for nd in nodes.iter_mut() {
+        if let PackedOp::Residual { main, shortcut, .. } = &mut nd.op {
+            fuse_pairs(main, uses, stats);
+            fuse_pairs(shortcut, uses, stats);
+        }
+    }
+    let mut i = 0;
+    while i < nodes.len() {
+        if i + 1 < nodes.len() && nodes[i + 1].src == nodes[i].dst && uses[nodes[i].dst] == 1 {
+            let fusible = match (&nodes[i].op, &nodes[i + 1].op) {
+                // conv counts → threshold: pack bits straight out of the
+                // (possibly pooled) accumulator. A mean (GlobalAvg) is
+                // not integer-valued, so its threshold stays standalone.
+                (PackedOp::Conv2d(c), PackedOp::Threshold(spec)) => {
+                    c.fused.is_none()
+                        && c.pool != Some(PoolSpec::GlobalAvg)
+                        && match spec {
+                            ThresholdSpec::Scalar(_) => true,
+                            ThresholdSpec::PerChannel(ft) => ft.thr.len() == c.c_out,
+                        }
+                }
+                // conv counts → pool: write pooled counts directly
+                (PackedOp::Conv2d(c), PackedOp::MaxPool { .. })
+                | (PackedOp::Conv2d(c), PackedOp::GlobalAvgPool) => {
+                    c.fused.is_none() && c.pool.is_none()
+                }
+                // linear counts → scalar threshold: the fused Linear op
+                (PackedOp::LinearCounts(_), PackedOp::Threshold(ThresholdSpec::Scalar(_))) => true,
+                _ => false,
+            };
+            if fusible {
+                let consumer = nodes.remove(i + 1);
+                let producer = &mut nodes[i];
+                match (&mut producer.op, consumer.op) {
+                    (PackedOp::Conv2d(c), PackedOp::Threshold(spec)) => {
+                        c.fused = Some(match spec {
+                            ThresholdSpec::Scalar(t) => FusedThreshold {
+                                thr: vec![t; c.c_out],
+                                flip: vec![false; c.c_out],
+                            },
+                            ThresholdSpec::PerChannel(ft) => ft,
+                        });
+                        stats.fused_thresholds += 1;
+                    }
+                    (PackedOp::Conv2d(c), PackedOp::MaxPool { k }) => {
+                        c.pool = Some(PoolSpec::Max(k));
+                        stats.fused_pools += 1;
+                    }
+                    (PackedOp::Conv2d(c), PackedOp::GlobalAvgPool) => {
+                        c.pool = Some(PoolSpec::GlobalAvg);
+                        stats.fused_pools += 1;
+                    }
+                    (op @ PackedOp::LinearCounts(_), PackedOp::Threshold(spec)) => {
+                        let ThresholdSpec::Scalar(t) = spec else { unreachable!() };
+                        let PackedOp::LinearCounts(mut pl) =
+                            std::mem::replace(op, PackedOp::Flatten)
+                        else {
+                            unreachable!()
+                        };
+                        pl.threshold = t;
+                        *op = PackedOp::Linear(pl);
+                        stats.fused_thresholds += 1;
+                    }
+                    _ => unreachable!("guard and rewrite arms agree"),
+                }
+                producer.dst = consumer.dst;
+                // stay at i: a conv that absorbed its pool may now also
+                // absorb the following threshold
+                continue;
+            }
+        }
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// liveness pass
+// ---------------------------------------------------------------------------
+
+/// Per-slot def/use positions on the linearized schedule. Position 0 is
+/// the input seed into slot 0; every executed op gets the next position
+/// in execution order (residual branches first, then the merge).
+struct Liveness {
+    def: Vec<Option<usize>>,
+    last_use: Vec<Option<usize>>,
+    ok: bool,
+}
+
+impl Liveness {
+    fn read(&mut self, slot: usize, pos: usize) {
+        match self.def[slot] {
+            Some(d) if d <= pos => self.last_use[slot] = Some(pos),
+            _ => self.ok = false, // use before def: not the compiler's SSA
+        }
+    }
+
+    fn write(&mut self, slot: usize, pos: usize) {
+        if self.def[slot].is_some() {
+            self.ok = false; // double def: not the compiler's SSA
+        } else {
+            self.def[slot] = Some(pos);
+        }
+    }
+
+    fn walk(&mut self, nodes: &[Node], pos: &mut usize) {
+        for nd in nodes {
+            match &nd.op {
+                PackedOp::Residual { main, shortcut, main_out, short_out } => {
+                    self.walk(main, pos);
+                    self.walk(shortcut, pos);
+                    let t = *pos;
+                    *pos += 1;
+                    // the merge reads both branch outputs (an empty
+                    // branch forwards the residual input slot)
+                    self.read(*main_out, t);
+                    self.read(*short_out, t);
+                    self.write(nd.dst, t);
+                }
+                PackedOp::FpHead { .. } => {
+                    // reads its src, writes the logits buffer — the dst
+                    // slot is vestigial and never materialized
+                    let t = *pos;
+                    *pos += 1;
+                    self.read(nd.src, t);
+                }
+                _ => {
+                    let t = *pos;
+                    *pos += 1;
+                    self.read(nd.src, t);
+                    self.write(nd.dst, t);
+                }
+            }
+        }
+    }
+}
+
+/// Every slot index the rewrite will touch must have a color.
+fn refs_colored(nodes: &[Node], color: &[usize]) -> bool {
+    nodes.iter().all(|nd| {
+        let own = match &nd.op {
+            PackedOp::Residual { main, shortcut, main_out, short_out } => {
+                refs_colored(main, color)
+                    && refs_colored(shortcut, color)
+                    && color[*main_out] != usize::MAX
+                    && color[*short_out] != usize::MAX
+                    && color[nd.dst] != usize::MAX
+            }
+            PackedOp::FpHead { .. } => true,
+            _ => color[nd.dst] != usize::MAX,
+        };
+        own && color[nd.src] != usize::MAX
+    })
+}
+
+fn apply_colors(nodes: &mut [Node], color: &[usize]) {
+    for nd in nodes {
+        nd.src = color[nd.src];
+        match &mut nd.op {
+            PackedOp::Residual { main, shortcut, main_out, short_out } => {
+                apply_colors(main, color);
+                apply_colors(shortcut, color);
+                *main_out = color[*main_out];
+                *short_out = color[*short_out];
+                nd.dst = color[nd.dst];
+            }
+            PackedOp::FpHead { .. } => {
+                // keep the vestigial dst a valid in-range index
+                nd.dst = nd.src;
+            }
+            _ => nd.dst = color[nd.dst],
+        }
+    }
+}
+
+/// Linear-scan slot recoloring. Returns the compacted slot count, or
+/// `None` (leave the graph untouched) when the op list does not follow
+/// the compiler's SSA discipline.
+///
+/// A color frees only when its value's last read is *strictly before*
+/// the defining position of the next value, so an op's `dst` can never
+/// receive the color of any slot it still reads — including both
+/// residual branch outputs, which the merge reads at its own position.
+fn recolor(nodes: &mut [Node], n_slots: usize) -> Option<usize> {
+    let mut lv = Liveness {
+        def: vec![None; n_slots],
+        last_use: vec![None; n_slots],
+        ok: !nodes.is_empty() && n_slots > 0,
+    };
+    if n_slots > 0 {
+        lv.def[0] = Some(0); // the input seed
+    }
+    let mut pos = 1usize;
+    lv.walk(nodes, &mut pos);
+    if !lv.ok {
+        return None;
+    }
+
+    let mut events: Vec<(usize, usize)> =
+        (0..n_slots).filter_map(|s| lv.def[s].map(|p| (p, s))).collect();
+    events.sort_unstable();
+    let mut color = vec![usize::MAX; n_slots];
+    let mut free: BTreeSet<usize> = BTreeSet::new();
+    let mut active: Vec<(usize, usize)> = Vec::new(); // (expiry, color)
+    let mut next_color = 0usize;
+    for (p, s) in events {
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].0 < p {
+                free.insert(active[i].1);
+                active.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        let c = match free.iter().next().copied() {
+            Some(c) => {
+                free.remove(&c);
+                c
+            }
+            None => {
+                next_color += 1;
+                next_color - 1
+            }
+        };
+        color[s] = c;
+        // a value never read still occupies its slot at its own def
+        active.push((lv.last_use[s].unwrap_or(p), c));
+    }
+    if color.first() != Some(&0) || !refs_colored(nodes, &color) {
+        return None; // structurally odd graph: keep identity coloring
+    }
+    apply_colors(nodes, &color);
+    Some(next_color)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pass_config_parsing() {
+        assert_eq!(PassConfig::parse(None), PassConfig::all());
+        assert_eq!(PassConfig::parse(Some("all")), PassConfig::all());
+        assert_eq!(PassConfig::parse(Some("none")), PassConfig::none());
+        assert_eq!(
+            PassConfig::parse(Some("fuse")),
+            PassConfig { fuse: true, liveness: false }
+        );
+        assert_eq!(
+            PassConfig::parse(Some(" liveness ")),
+            PassConfig { fuse: false, liveness: true }
+        );
+        // unrecognized values select the full pipeline rather than
+        // silently serving unoptimized
+        assert_eq!(PassConfig::parse(Some("bogus")), PassConfig::all());
+    }
+}

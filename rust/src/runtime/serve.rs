@@ -178,6 +178,10 @@ struct Shared {
     shutdown: AtomicBool,
     served: AtomicUsize,
     batches: AtomicUsize,
+    /// Per-worker [`GraphScratch::scratch_bytes`], refreshed after every
+    /// batched forward (scratch only grows, so this is the worker's peak
+    /// footprint) — surfaced in HTTP `/stats` and the serve benches.
+    scratch_bytes: Vec<AtomicUsize>,
 }
 
 /// The batch server: a frozen [`PackedGraph`] behind a bounded queue and
@@ -197,6 +201,7 @@ impl NativeServer {
         assert!(cfg.workers >= 1, "need at least one worker");
         assert!(cfg.max_batch >= 1, "need max_batch >= 1");
         assert!(cfg.queue_cap >= 1, "need queue_cap >= 1");
+        let scratch_bytes = (0..cfg.workers).map(|_| AtomicUsize::new(0)).collect();
         let shared = Arc::new(Shared {
             model,
             cfg,
@@ -206,11 +211,12 @@ impl NativeServer {
             shutdown: AtomicBool::new(false),
             served: AtomicUsize::new(0),
             batches: AtomicUsize::new(0),
+            scratch_bytes,
         });
         let workers = (0..shared.cfg.workers)
-            .map(|_| {
+            .map(|idx| {
                 let sh = Arc::clone(&shared);
-                std::thread::spawn(move || worker_loop(&sh))
+                std::thread::spawn(move || worker_loop(&sh, idx))
             })
             .collect();
         NativeServer { shared, workers }
@@ -323,6 +329,17 @@ impl NativeServer {
         Ok(Pending { rx })
     }
 
+    /// Current scratch footprint of each batch worker, in bytes
+    /// ([`GraphScratch::scratch_bytes`], refreshed after every batched
+    /// forward; zero until a worker has run its first batch).
+    pub fn worker_scratch_bytes(&self) -> Vec<usize> {
+        self.shared
+            .scratch_bytes
+            .iter()
+            .map(|a| a.load(Ordering::Relaxed))
+            .collect()
+    }
+
     /// Serving counters so far.
     pub fn stats(&self) -> ServerStats {
         ServerStats {
@@ -354,7 +371,7 @@ impl Drop for NativeServer {
     }
 }
 
-fn worker_loop(sh: &Shared) {
+fn worker_loop(sh: &Shared, idx: usize) {
     let max_batch = sh.cfg.max_batch;
     let window = sh.cfg.batch_window;
     let d = sh.model.d_in();
@@ -420,6 +437,7 @@ fn worker_loop(sh: &Shared) {
         x.assign_packed_rows(d, batch.iter().map(|r| r.words.as_slice()));
         debug_assert_eq!(x.rows, batch.len());
         sh.model.forward_bits_into(&x, &mut scratch);
+        sh.scratch_bytes[idx].store(scratch.scratch_bytes(), Ordering::Relaxed);
         let logits = &scratch.logits;
         logits.argmax_rows_into(&mut classes);
         let n_out = logits.cols();

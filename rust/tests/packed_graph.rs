@@ -14,9 +14,12 @@ use bold::nn::{
     BackwardScale, BatchNorm2d, Binarize, BoolConv2d, Flatten, Layer, LayerDesc, Linear,
     ParamRef, Sequential, ThresholdAct, Value,
 };
-use bold::runtime::{GraphScratch, NativeServer, PackedGraph, ServeConfig};
+use bold::runtime::{
+    GraphScratch, NativeServer, Node, PackedGraph, PackedOp, PassConfig, ServeConfig,
+};
 use bold::tensor::Tensor;
 use bold::util::Rng;
+use std::collections::HashMap;
 use std::time::Duration;
 
 fn tmp(name: &str) -> String {
@@ -88,7 +91,9 @@ fn vgg_bn_folds_to_zero_op_thresholds() {
     let mut rng = Rng::new(9);
     let mut model = vgg_small(&cfg, &mut rng);
     warm_up(&mut model, &[4, 3, 16, 16], 99);
-    let graph = PackedGraph::from_layer(&mut model).expect("graph");
+    // pinned to the full pipeline: this asserts what the fusion pass
+    // produces, independent of the ambient BOLD_GRAPH_PASSES matrix
+    let graph = PackedGraph::from_layer_with(&mut model, PassConfig::all()).expect("graph");
     let summary = graph.summary();
     assert_eq!(
         summary.matches("BatchNorm").count(),
@@ -96,6 +101,264 @@ fn vgg_bn_folds_to_zero_op_thresholds() {
         "only the FP-stem BN may stay an explicit op: {summary}"
     );
     assert!(summary.contains("Conv2d+thr"), "conv+threshold fusion missing: {summary}");
+    // the pool-carrying convs absorb both their MaxPool and the folded BN
+    assert!(summary.contains("Conv2d+pool+thr"), "conv+pool+threshold fusion missing: {summary}");
+    let ps = graph.pass_stats();
+    assert!(ps.fused_thresholds > 0, "no thresholds fused: {ps:?}");
+    assert!(ps.fused_pools >= 1, "no pools fused: {ps:?}");
+}
+
+/// The four `BOLD_GRAPH_PASSES` selections, labeled. Tests always pin
+/// the config through `from_layer_with`/`from_records_with` — never the
+/// environment variable, which other test threads read concurrently.
+fn pass_configs() -> [(&'static str, PassConfig); 4] {
+    [
+        ("none", PassConfig::none()),
+        ("fuse", PassConfig { fuse: true, liveness: false }),
+        ("liveness", PassConfig { fuse: false, liveness: true }),
+        ("all", PassConfig::all()),
+    ]
+}
+
+/// Compile `model` under every pass selection and require logits exactly
+/// equal to the pass-disabled reference executor (and to the training
+/// eval forward): the passes must be bit-exact by construction.
+fn assert_pass_parity(model: &mut Sequential, shape: &[usize], rng: &mut Rng, what: &str) {
+    let x = Tensor::rand_pm1(shape, rng);
+    let reference = PackedGraph::from_layer_with(&mut *model, PassConfig::none())
+        .expect("reference graph")
+        .forward_f32(&x);
+    for (label, cfg) in pass_configs() {
+        let graph = PackedGraph::from_layer_with(&mut *model, cfg).expect("graph");
+        let y = graph.forward_f32(&x);
+        assert_eq!(y.shape, reference.shape, "{what}: passes={label} logit shape");
+        assert_eq!(
+            y.max_abs_diff(&reference),
+            0.0,
+            "{what}: passes={label} diverged from the unoptimized executor"
+        );
+    }
+    let full = PackedGraph::from_layer_with(&mut *model, PassConfig::all()).expect("graph");
+    assert_parity(model, &full, &x, what);
+}
+
+#[test]
+fn passes_are_bit_exact_across_archetypes() {
+    let mut rng = Rng::new(61);
+
+    // MLP through the arch compiler (LinearCounts + Threshold refusion)
+    let cfg = MlpConfig { d_in: 96, hidden: vec![40, 24], d_out: 6, tanh_scale: true };
+    let mut mlp = boolean_mlp(&cfg, &mut rng);
+    let probe = Tensor::rand_pm1(&[2, 96], &mut rng);
+    let _ = mlp.forward(Value::bit_from_pm1(&probe), false);
+    assert_pass_parity(&mut mlp, &[5, 96], &mut rng, "mlp");
+
+    // VGG ± BN (threshold + pool fusion, Flatten elision)
+    for with_bn in [false, true] {
+        let cfg = VggConfig { hw: 16, width_mult: 0.125, with_bn, ..Default::default() };
+        let mut model = vgg_small(&cfg, &mut rng);
+        warm_up(&mut model, &[4, 3, 16, 16], 62);
+        assert_pass_parity(&mut model, &[3, 3, 16, 16], &mut rng, &format!("vgg bn={with_bn}"));
+    }
+
+    // ResNet base 8/9: even and odd channel counts through the residual
+    // merges, which the liveness pass must keep alias-free
+    for (base, hw) in [(8usize, 16usize), (9, 8)] {
+        let cfg = ResNetConfig { base, blocks: vec![1, 1], hw, ..Default::default() };
+        let mut model = resnet_boolean(&cfg, &mut rng);
+        warm_up(&mut model, &[4, 3, hw, hw], 63);
+        assert_pass_parity(&mut model, &[3, 3, hw, hw], &mut rng, &format!("resnet base={base}"));
+    }
+}
+
+/// Lockstep symbolic walk over two structurally identical op lists: each
+/// op must read the same dataflow value in both graphs. If the liveness
+/// recoloring ever reassigned a slot while its value was still live —
+/// including a `Residual` branch output, which stays live until the
+/// merge — some later read would resolve to a different value and the
+/// walk fails. `va`/`vb` map slot index → value id per graph.
+fn assert_dataflow_equivalent(
+    a: &[Node],
+    b: &[Node],
+    va: &mut HashMap<usize, usize>,
+    vb: &mut HashMap<usize, usize>,
+    next: &mut usize,
+    what: &str,
+) {
+    assert_eq!(a.len(), b.len(), "{what}: node count");
+    for (na, nb) in a.iter().zip(b) {
+        assert_eq!(na.op.kind(), nb.op.kind(), "{what}: op order");
+        match (&na.op, &nb.op) {
+            (
+                PackedOp::Residual { main: ma, shortcut: sa, main_out: moa, short_out: soa },
+                PackedOp::Residual { main: mb, shortcut: sb, main_out: mob, short_out: sob },
+            ) => {
+                assert_dataflow_equivalent(ma, mb, va, vb, next, what);
+                assert_dataflow_equivalent(sa, sb, va, vb, next, what);
+                for (x, y, which) in [(moa, mob, "main"), (soa, sob, "shortcut")] {
+                    let (vx, vy) = (va.get(x), vb.get(y));
+                    assert!(
+                        vx.is_some() && vx == vy,
+                        "{what}: {which} branch output was clobbered before the merge"
+                    );
+                }
+            }
+            _ => {
+                let (vx, vy) = (va.get(&na.src), vb.get(&nb.src));
+                assert!(
+                    vx.is_some() && vx == vy,
+                    "{what}: {} reads a clobbered slot",
+                    na.op.kind()
+                );
+            }
+        }
+        // FpHead writes the logits buffer, not a slot; its dst is vestigial
+        if !matches!(na.op, PackedOp::FpHead { .. }) {
+            *next += 1;
+            va.insert(na.dst, *next);
+            vb.insert(nb.dst, *next);
+        }
+    }
+}
+
+#[test]
+fn liveness_recoloring_is_alias_free_and_compacts_slots() {
+    for (base, hw, seed) in [(8usize, 16usize, 71u64), (9, 8, 72)] {
+        let cfg = ResNetConfig { base, blocks: vec![1, 1], hw, ..Default::default() };
+        let mut rng = Rng::new(seed);
+        let mut model = resnet_boolean(&cfg, &mut rng);
+        warm_up(&mut model, &[4, 3, hw, hw], seed + 1);
+        let what = format!("resnet base={base}");
+        let naive =
+            PackedGraph::from_layer_with(&mut model, PassConfig::none()).expect("naive graph");
+        let live = PackedGraph::from_layer_with(
+            &mut model,
+            PassConfig { fuse: false, liveness: true },
+        )
+        .expect("recolored graph");
+
+        let (mut va, mut vb) = (HashMap::new(), HashMap::new());
+        va.insert(0usize, 0usize); // slot 0 seeds the input in both
+        vb.insert(0usize, 0usize);
+        let mut next = 0usize;
+        assert_dataflow_equivalent(&naive.nodes, &live.nodes, &mut va, &mut vb, &mut next, &what);
+
+        // the acceptance bar: strictly fewer buffers than one-per-node,
+        // and the reported stats agree with the graph itself
+        assert!(
+            live.n_slots() < naive.n_slots(),
+            "{what}: liveness must compact slots ({} vs {})",
+            live.n_slots(),
+            naive.n_slots()
+        );
+        let ps = live.pass_stats();
+        assert!(ps.liveness && !ps.fuse, "{what}: {ps:?}");
+        assert_eq!(ps.raw_slots, naive.n_slots(), "{what}: raw slot count");
+        assert_eq!(ps.live_slots, live.n_slots(), "{what}: live slot count");
+    }
+}
+
+#[test]
+fn flatten_is_elided_by_fusion_and_shapes_survive() {
+    // fc_layers 2 puts a Boolean FC behind the Flatten, so the elision
+    // rewires a real consumer chain rather than just the head
+    let cfg = VggConfig {
+        hw: 16,
+        width_mult: 0.125,
+        with_bn: true,
+        fc_layers: 2,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(81);
+    let mut model = vgg_small(&cfg, &mut rng);
+    warm_up(&mut model, &[4, 3, 16, 16], 82);
+    let naive = PackedGraph::from_layer_with(&mut model, PassConfig::none()).expect("naive");
+    assert!(naive.summary().contains("Flatten"), "{}", naive.summary());
+    let fused = PackedGraph::from_layer_with(
+        &mut model,
+        PassConfig { fuse: true, liveness: false },
+    )
+    .expect("fused");
+    assert!(!fused.summary().contains("Flatten"), "{}", fused.summary());
+    assert!(fused.pass_stats().elided_flattens >= 1, "{:?}", fused.pass_stats());
+    assert!(fused.num_ops() < naive.num_ops(), "fusion must shrink the op list");
+
+    let x = Tensor::rand_pm1(&[2, 3, 16, 16], &mut rng);
+    let (a, b) = (naive.forward_f32(&x), fused.forward_f32(&x));
+    assert_eq!(a.shape, b.shape, "elision must not change the logit shape");
+    assert_eq!(b.max_abs_diff(&a), 0.0, "elision must be bit-exact");
+}
+
+#[test]
+fn conv_global_avg_pool_fuses_and_stays_exact() {
+    // Hand-built arch: BoolConv2d 1→4 k3 p1 on [1,6,6] → GlobalAvgPool →
+    // FP head. The GAP folds into the conv (the full-resolution count
+    // map is never materialized) but must never carry a threshold — a
+    // mean is not integer-valued.
+    let words: Vec<u64> = (0..4u64).map(|r| (0x1B6 ^ (r * 0x55)) & 0x1FF).collect();
+    let records = vec![
+        Record::Arch {
+            name: "gapnet".into(),
+            input_shape: vec![1, 6, 6],
+            layers: vec![
+                LayerDesc::BoolConv2d {
+                    name: "c".into(),
+                    c_in: 1,
+                    c_out: 4,
+                    k: 3,
+                    stride: 1,
+                    pad: 1,
+                },
+                LayerDesc::GlobalAvgPool { name: "gap".into() },
+                LayerDesc::Linear { name: "head".into(), n_in: 4, n_out: 3 },
+            ],
+        },
+        Record::Bool { name: "c.weight".into(), rows: 4, cols: 9, words },
+        Record::Real {
+            name: "head.w".into(),
+            data: (0..12).map(|i| (i as f32 * 0.37).sin()).collect(),
+        },
+        Record::Real { name: "head.b".into(), data: vec![0.1, -0.2, 0.05] },
+    ];
+    let naive = PackedGraph::from_records_with(&records, PassConfig::none()).expect("naive");
+    assert!(naive.summary().contains("GlobalAvgPool"), "{}", naive.summary());
+    let fused = PackedGraph::from_records_with(&records, PassConfig::all()).expect("fused");
+    assert!(fused.summary().contains("Conv2d+pool"), "{}", fused.summary());
+    assert_eq!(fused.pass_stats().fused_pools, 1, "{:?}", fused.pass_stats());
+    assert_eq!(fused.pass_stats().fused_thresholds, 0, "{:?}", fused.pass_stats());
+
+    let mut rng = Rng::new(91);
+    let x = Tensor::rand_pm1(&[3, 1, 6, 6], &mut rng);
+    let (a, b) = (naive.forward_f32(&x), fused.forward_f32(&x));
+    assert_eq!(a.shape, vec![3, 3]);
+    assert_eq!(b.max_abs_diff(&a), 0.0, "conv+GAP fusion must be bit-exact");
+}
+
+#[test]
+fn scratch_bytes_reports_retained_footprint() {
+    assert_eq!(GraphScratch::new().scratch_bytes(), 0, "fresh scratch holds nothing");
+    let cfg = VggConfig { hw: 16, width_mult: 0.125, with_bn: true, ..Default::default() };
+    let mut rng = Rng::new(93);
+    let mut model = vgg_small(&cfg, &mut rng);
+    warm_up(&mut model, &[2, 3, 16, 16], 94);
+    let full = PackedGraph::from_layer_with(&mut model, PassConfig::all()).expect("graph");
+    let naive = PackedGraph::from_layer_with(&mut model, PassConfig::none()).expect("graph");
+    assert!(full.n_slots() < naive.n_slots());
+
+    let x = Tensor::rand_pm1(&[2, 3, 16, 16], &mut rng);
+    let packed = bold::tensor::BitMatrix::from_pm1(&x.view(&[2, 3 * 16 * 16]));
+    let (mut s_full, mut s_naive) = (GraphScratch::new(), GraphScratch::new());
+    full.forward_bits_into(&packed, &mut s_full);
+    naive.forward_bits_into(&packed, &mut s_naive);
+    assert!(s_full.scratch_bytes() > 0, "a forward must retain buffers");
+    // the point of the pipeline: fewer live slots and fused pools ⇒ a
+    // strictly smaller retained footprint than the naive executor
+    assert!(
+        s_full.scratch_bytes() < s_naive.scratch_bytes(),
+        "{} vs {}",
+        s_full.scratch_bytes(),
+        s_naive.scratch_bytes()
+    );
 }
 
 #[test]
