@@ -1,0 +1,932 @@
+//! Fault-tolerant multi-process data-parallel training (DESIGN.md
+//! §Distributed-Training).
+//!
+//! A coordinator process owns the model, the [`DualOptimizer`] and the
+//! batch schedule; worker processes hold stateless model replicas. Each
+//! step the coordinator shards the batch's sample indices across live
+//! workers over TCP ([`super::wire`]), workers run forward/backward on
+//! their shard and ship the [`ParamStore`] vote/gradient delta back
+//! ([`ParamStore::grad_blob`]), and the coordinator aggregates
+//! store-to-store and applies ONE optimizer step — exactly the in-process
+//! [`super::ParallelTrainer`] dance, with processes for threads.
+//!
+//! Determinism (the property the fault-injection suite pins down): the
+//! shard count is FIXED at job start (`TrainConfig::workers`), not tied
+//! to the live worker count, and shard deltas are aggregated in shard-id
+//! order after all arrive. BOLD's Boolean votes are integer counts and
+//! the FP grads are added in the same order as `ParallelTrainer`'s
+//! leader loop, so the final weights are bit-identical to the
+//! single-process reference no matter how many workers serve the job,
+//! which workers die mid-epoch, or how often a shard is re-issued.
+//!
+//! Robustness mechanics:
+//! - per-worker liveness deadline (`BOLD_DIST_DEADLINE_MS`) fed by
+//!   heartbeats (`BOLD_DIST_HEARTBEAT_MS`) and any other traffic;
+//! - straggler re-issue: a shard outstanding past the deadline is handed
+//!   to another live worker — safe because results are idempotent per
+//!   (step, shard) and duplicates are dropped;
+//! - worker reconnect with capped exponential backoff + jitter
+//!   (`BOLD_DIST_BACKOFF_{BASE,CAP}_MS`), full weight re-`Sync` on join;
+//! - corrupt frames sever the connection without touching vote state;
+//! - crash-resume from the kind-3/4/5 optimizer checkpoints
+//!   ([`super::save_training_with_meta`] with a `dist.step` cursor),
+//!   written atomically (tmp + rename) every `--ckpt-every` steps.
+
+use super::checkpoint::{
+    apply_params_blob, params_blob, read_records, save_training_with_meta, Record,
+};
+use super::wire::{read_frame, read_frame_idle, write_frame, Msg, WireError};
+use super::{evaluate_classifier, DualOptimizer, TrainReport};
+use crate::config::TrainConfig;
+use crate::data::{BatchSampler, ImageDataset};
+use crate::models::{boolean_mlp, MlpConfig};
+use crate::nn::{softmax_cross_entropy, Layer, ParamStore, Sequential, Value};
+use crate::util::Rng;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Meta-record name of the resume cursor in dist checkpoints.
+pub const META_DIST_STEP: &str = "dist.step";
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Distributed-training knobs. [`DistConfig::from_env`] reads the
+/// `BOLD_DIST_*` environment (README §Training knobs); CLI flags override.
+#[derive(Debug, Clone)]
+pub struct DistConfig {
+    /// Worker idle-heartbeat period, ms (`BOLD_DIST_HEARTBEAT_MS`).
+    pub heartbeat_ms: u64,
+    /// Liveness + straggler deadline, ms (`BOLD_DIST_DEADLINE_MS`): a
+    /// worker silent this long is dead; a shard outstanding this long is
+    /// re-issued.
+    pub deadline_ms: u64,
+    /// Reconnect backoff base, ms (`BOLD_DIST_BACKOFF_BASE_MS`).
+    pub backoff_base_ms: u64,
+    /// Reconnect backoff cap, ms (`BOLD_DIST_BACKOFF_CAP_MS`).
+    pub backoff_cap_ms: u64,
+    /// Worker gives up after this long of consecutive failed connects,
+    /// ms (`BOLD_DIST_GIVEUP_MS`) — bounds orphan workers when the
+    /// coordinator is gone for good.
+    pub giveup_ms: u64,
+    /// Checkpoint every N committed steps (0 = only at job end).
+    pub ckpt_every: usize,
+    /// Checkpoint path (enables checkpointing and resume).
+    pub ckpt_path: Option<String>,
+    /// Resume from `ckpt_path` if it exists.
+    pub resume: bool,
+}
+
+impl DistConfig {
+    pub fn from_env() -> Self {
+        DistConfig {
+            heartbeat_ms: env_u64("BOLD_DIST_HEARTBEAT_MS", 500),
+            deadline_ms: env_u64("BOLD_DIST_DEADLINE_MS", 5000),
+            backoff_base_ms: env_u64("BOLD_DIST_BACKOFF_BASE_MS", 50),
+            backoff_cap_ms: env_u64("BOLD_DIST_BACKOFF_CAP_MS", 2000),
+            giveup_ms: env_u64("BOLD_DIST_GIVEUP_MS", 60_000),
+            ckpt_every: 0,
+            ckpt_path: None,
+            resume: false,
+        }
+    }
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        Self::from_env()
+    }
+}
+
+/// The canonical job description: every process of a job (coordinator,
+/// workers, the test's reference trainer) builds dataset and model from
+/// the same [`TrainConfig`] through this ONE site, so they cannot drift.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub cfg: TrainConfig,
+}
+
+impl JobSpec {
+    /// Validate the config for distributed training (the dist path
+    /// drives the MLP classifier job, like `bold train --model mlp`).
+    pub fn new(cfg: TrainConfig) -> Result<Self, String> {
+        if cfg.model != "mlp" {
+            return Err(format!("train-dist supports --model mlp (got '{}')", cfg.model));
+        }
+        if cfg.workers == 0 {
+            return Err("--workers (the fixed shard count) must be >= 1".into());
+        }
+        Ok(JobSpec { cfg })
+    }
+
+    /// Fixed shard count: determinism is anchored to it, never to the
+    /// number of live workers.
+    pub fn n_shards(&self) -> usize {
+        self.cfg.workers
+    }
+
+    /// The job's (train, val) datasets — same synthesis as `bold train`.
+    pub fn data(&self) -> (ImageDataset, ImageDataset) {
+        ImageDataset::mnist_like(
+            self.cfg.train_size + self.cfg.val_size,
+            self.cfg.classes,
+            256,
+            0.08,
+            self.cfg.seed,
+        )
+        .split(self.cfg.train_size)
+    }
+
+    /// A fresh model replica — same init as `bold train --model mlp`.
+    pub fn model(&self) -> Sequential {
+        let mcfg = MlpConfig {
+            d_in: 256,
+            hidden: vec![128, 64],
+            d_out: self.cfg.classes,
+            tanh_scale: true,
+        };
+        boolean_mlp(&mcfg, &mut Rng::new(self.cfg.seed))
+    }
+
+    /// Fingerprint of everything that must agree between coordinator and
+    /// worker for votes to be meaningful: dataset identity, model init,
+    /// batch schedule, shard count. FNV-1a over a field serialization.
+    pub fn config_hash(&self) -> u64 {
+        let c = &self.cfg;
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+        };
+        eat(c.model.as_bytes());
+        for v in [
+            c.seed,
+            c.batch as u64,
+            c.steps as u64,
+            c.train_size as u64,
+            c.val_size as u64,
+            c.classes as u64,
+            c.workers as u64,
+            c.lr_bool.to_bits() as u64,
+            c.lr_fp.to_bits() as u64,
+            c.cosine as u64,
+        ] {
+            eat(&v.to_le_bytes());
+        }
+        h
+    }
+}
+
+/// Fault/recovery counters of one coordinator run.
+#[derive(Debug, Clone, Default)]
+pub struct DistStats {
+    /// Worker connections accepted and admitted (Hello verified).
+    pub joins: u64,
+    /// Admitted joins from a worker id seen before (reconnects).
+    pub reconnects: u64,
+    /// Workers declared dead (io error, corrupt frame, or deadline).
+    pub removed: u64,
+    /// Shards re-issued past the straggler deadline.
+    pub reissues: u64,
+    /// Duplicate shard results dropped (idempotence at work).
+    pub duplicates: u64,
+    /// Results for a step other than the current one, dropped.
+    pub stale: u64,
+    /// Connections turned away (bad Hello / config-hash mismatch).
+    pub rejected: u64,
+    /// Connections severed on corrupt framing.
+    pub corrupt_frames: u64,
+}
+
+/// What a finished coordinator run hands back: the trained model (for
+/// bit-exactness checks and checkpointing), the usual training report,
+/// and the fault counters.
+pub struct DistOutcome {
+    pub model: Sequential,
+    pub report: TrainReport,
+    pub stats: DistStats,
+    /// First step this run executed (>0 after a resume).
+    pub start_step: usize,
+}
+
+enum Event {
+    Joined { conn: u64, worker_id: u64, stream: TcpStream },
+    Frame { conn: u64, msg: Msg },
+    Gone { conn: u64, corrupt: bool },
+    Rejected,
+}
+
+struct WorkerConn {
+    stream: TcpStream,
+    worker_id: u64,
+    last_seen: Instant,
+}
+
+struct ShardRes {
+    loss: f32,
+    correct: u32,
+    delta: ParamStore,
+}
+
+/// Per-connection reader: verifies the Hello handshake, then pumps
+/// frames into the coordinator's event queue until the peer goes away.
+fn reader_thread(conn: u64, mut stream: TcpStream, tx: mpsc::Sender<Event>, want_hash: u64) {
+    let _ = stream.set_nodelay(true);
+    match read_frame(&mut stream) {
+        Ok(Msg::Hello { worker_id, config_hash }) if config_hash == want_hash => {
+            let Ok(wstream) = stream.try_clone() else {
+                let _ = tx.send(Event::Rejected);
+                return;
+            };
+            if tx.send(Event::Joined { conn, worker_id, stream: wstream }).is_err() {
+                return;
+            }
+        }
+        Ok(_) => {
+            // wrong config or non-Hello opener: turn it away before it
+            // can contribute votes computed against different state
+            let _ = write_frame(&mut stream, &Msg::Bye);
+            let _ = tx.send(Event::Rejected);
+            return;
+        }
+        Err(_) => {
+            let _ = tx.send(Event::Rejected);
+            return;
+        }
+    }
+    loop {
+        match read_frame(&mut stream) {
+            Ok(msg) => {
+                if tx.send(Event::Frame { conn, msg }).is_err() {
+                    return;
+                }
+            }
+            Err(e) => {
+                let corrupt = matches!(e, WireError::Corrupt(_));
+                let _ = tx.send(Event::Gone { conn, corrupt });
+                return;
+            }
+        }
+    }
+}
+
+/// Run the coordinator side of a job on a pre-bound listener (bind to
+/// port 0 and read `listener.local_addr()` to wire up workers/tests).
+/// Blocks until all `cfg.steps` steps have committed, surviving worker
+/// churn; returns the trained model, report and fault counters.
+pub fn run_coordinator(
+    spec: &JobSpec,
+    dcfg: &DistConfig,
+    listener: TcpListener,
+    log: bool,
+) -> Result<DistOutcome, String> {
+    let cfg = &spec.cfg;
+    let n_shards = spec.n_shards();
+    let (train, val) = spec.data();
+    let mut model = spec.model();
+    let mut opt = DualOptimizer::new(cfg);
+
+    // --- resume from checkpoint (bit-exact: weights + optimizer state
+    // + schedule cursor) ---
+    let mut start_step = 0usize;
+    if dcfg.resume {
+        let path = dcfg
+            .ckpt_path
+            .as_deref()
+            .ok_or("--resume needs --ckpt PATH")?;
+        super::load_training(&mut model, &mut opt.store, path).map_err(|e| e.to_string())?;
+        start_step = read_records(path)
+            .map_err(|e| e.to_string())?
+            .iter()
+            .find_map(|r| match r {
+                Record::Meta { name, value } if name == META_DIST_STEP => Some(*value as usize),
+                _ => None,
+            })
+            .ok_or_else(|| format!("{path}: no {META_DIST_STEP} cursor — not a dist snapshot"))?;
+        if log {
+            println!("resumed from {path} at step {start_step}");
+        }
+    }
+
+    // Same schedule as ParallelTrainer::fit, replayed up to the cursor.
+    let mut sampler = BatchSampler::new(train.n, cfg.batch, cfg.seed ^ 0x5A);
+    for _ in 0..start_step {
+        let _ = sampler.next_batch();
+    }
+
+    // --- accept/reader plumbing ---
+    let (tx, rx) = mpsc::channel::<Event>();
+    let stop = Arc::new(AtomicBool::new(false));
+    let all_conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+    let want_hash = spec.config_hash();
+    let accept_handle = {
+        let tx = tx.clone();
+        let stop = Arc::clone(&stop);
+        let all_conns = Arc::clone(&all_conns);
+        listener.set_nonblocking(true).map_err(|e| e.to_string())?;
+        std::thread::spawn(move || {
+            let mut next_conn = 1u64;
+            loop {
+                match listener.accept() {
+                    Ok((stream, _addr)) => {
+                        let conn = next_conn;
+                        next_conn += 1;
+                        if let Ok(c) = stream.try_clone() {
+                            all_conns.lock().expect("conn registry").push(c);
+                        }
+                        let _ = stream.set_nonblocking(false);
+                        let tx = tx.clone();
+                        std::thread::spawn(move || reader_thread(conn, stream, tx, want_hash));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        if stop.load(Ordering::Acquire) {
+                            return;
+                        }
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(_) => {
+                        if stop.load(Ordering::Acquire) {
+                            return;
+                        }
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                }
+            }
+        })
+    };
+    drop(tx); // readers hold clones; rx closes when all are gone
+
+    let deadline = Duration::from_millis(dcfg.deadline_ms.max(1));
+    let tick = Duration::from_millis((dcfg.heartbeat_ms / 2).clamp(10, 250));
+
+    let mut workers: HashMap<u64, WorkerConn> = HashMap::new();
+    let mut seen_ids: HashSet<u64> = HashSet::new();
+    let mut stats = DistStats::default();
+    let mut report = TrainReport { steps: cfg.steps, ..Default::default() };
+
+    let ckpt = |model: &mut Sequential, opt: &DualOptimizer, next_step: usize| -> Result<(), String> {
+        let Some(path) = dcfg.ckpt_path.as_deref() else { return Ok(()) };
+        let tmp = format!("{path}.tmp");
+        save_training_with_meta(
+            model,
+            &opt.store,
+            &[(META_DIST_STEP.to_string(), next_step as u64)],
+            &tmp,
+        )
+        .map_err(|e| e.to_string())?;
+        std::fs::rename(&tmp, path).map_err(|e| e.to_string())
+    };
+
+    for step in start_step..cfg.steps {
+        let idx = sampler.next_batch();
+        let total = idx.len();
+        let shard_size = idx.len().div_ceil(n_shards);
+        let shards: Vec<Vec<u32>> =
+            idx.chunks(shard_size).map(|c| c.iter().map(|&i| i as u32).collect()).collect();
+        let n_live = shards.len();
+        let blob = {
+            let p = model.params();
+            params_blob(&p)
+        };
+
+        let mut pending: VecDeque<usize> = (0..n_live).collect();
+        let mut assignments: HashMap<usize, (u64, Instant)> = HashMap::new();
+        let mut results: Vec<Option<ShardRes>> = (0..n_live).map(|_| None).collect();
+        let mut done = 0usize;
+        let mut warned_idle = false;
+
+        while done < n_live {
+            // --- dispatch pending shards to the least-loaded live workers ---
+            while let Some(&sid) = pending.front() {
+                let mut dispatched = false;
+                while !workers.is_empty() {
+                    // least outstanding assignments first
+                    let (&conn, _) = workers
+                        .iter()
+                        .min_by_key(|(c, _)| {
+                            assignments.values().filter(|(a, _)| a == *c).count()
+                        })
+                        .expect("non-empty");
+                    let msg = Msg::Assign {
+                        step: step as u64,
+                        shard_id: sid as u32,
+                        total: total as u32,
+                        indices: shards[sid].clone(),
+                    };
+                    let ok = write_frame(&mut workers.get_mut(&conn).expect("live").stream, &msg)
+                        .is_ok();
+                    if ok {
+                        assignments.insert(sid, (conn, Instant::now()));
+                        dispatched = true;
+                        break;
+                    }
+                    // write failure: the worker is gone
+                    remove_worker(&mut workers, conn, &mut stats, &mut assignments, &mut pending, &results);
+                }
+                if dispatched {
+                    pending.pop_front();
+                } else {
+                    break; // no live workers; wait for joins
+                }
+            }
+            if workers.is_empty() && log && !warned_idle {
+                println!("step {step}: no live workers — waiting for (re)connects");
+                warned_idle = true;
+            }
+
+            // --- one event or a tick ---
+            let ev = match rx.recv_timeout(tick) {
+                Ok(ev) => Some(ev),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err("coordinator event channel closed".into())
+                }
+            };
+            if let Some(ev) = ev {
+                match ev {
+                    Event::Joined { conn, worker_id, mut stream } => {
+                        if !seen_ids.insert(worker_id) {
+                            stats.reconnects += 1;
+                        }
+                        stats.joins += 1;
+                        // weights first, always: a worker may never act on
+                        // an Assign for a step it was not synced at
+                        if write_frame(&mut stream, &Msg::Sync { step: step as u64, params: blob.clone() })
+                            .is_ok()
+                        {
+                            workers.insert(
+                                conn,
+                                WorkerConn { stream, worker_id, last_seen: Instant::now() },
+                            );
+                            if log {
+                                println!("step {step}: worker {worker_id} joined (conn {conn})");
+                            }
+                        }
+                    }
+                    Event::Frame { conn, msg } => {
+                        if let Some(w) = workers.get_mut(&conn) {
+                            w.last_seen = Instant::now();
+                        }
+                        match msg {
+                            Msg::ShardResult { step: rstep, shard_id, loss, correct, grads } => {
+                                let sid = shard_id as usize;
+                                if rstep as usize != step || sid >= n_live {
+                                    stats.stale += 1;
+                                } else if results[sid].is_some() {
+                                    stats.duplicates += 1;
+                                } else {
+                                    match ParamStore::from_grad_blob(&grads) {
+                                        Ok(delta) => {
+                                            results[sid] =
+                                                Some(ShardRes { loss, correct, delta });
+                                            done += 1;
+                                            assignments.remove(&sid);
+                                        }
+                                        Err(_) => {
+                                            // structurally invalid delta:
+                                            // sever, re-issue the shard
+                                            stats.corrupt_frames += 1;
+                                            remove_worker(
+                                                &mut workers,
+                                                conn,
+                                                &mut stats,
+                                                &mut assignments,
+                                                &mut pending,
+                                                &results,
+                                            );
+                                        }
+                                    }
+                                }
+                            }
+                            Msg::Heartbeat => {}
+                            Msg::Bye => {
+                                remove_worker(
+                                    &mut workers,
+                                    conn,
+                                    &mut stats,
+                                    &mut assignments,
+                                    &mut pending,
+                                    &results,
+                                );
+                            }
+                            _ => {}
+                        }
+                    }
+                    Event::Gone { conn, corrupt } => {
+                        if corrupt {
+                            stats.corrupt_frames += 1;
+                        }
+                        remove_worker(
+                            &mut workers,
+                            conn,
+                            &mut stats,
+                            &mut assignments,
+                            &mut pending,
+                            &results,
+                        );
+                    }
+                    Event::Rejected => stats.rejected += 1,
+                }
+            }
+
+            // --- liveness + straggler sweep ---
+            let now = Instant::now();
+            let dead: Vec<u64> = workers
+                .iter()
+                .filter(|(_, w)| now.duration_since(w.last_seen) > deadline)
+                .map(|(&c, _)| c)
+                .collect();
+            for conn in dead {
+                if log {
+                    let wid = workers[&conn].worker_id;
+                    println!("step {step}: worker {wid} missed deadline — removing");
+                }
+                remove_worker(&mut workers, conn, &mut stats, &mut assignments, &mut pending, &results);
+            }
+            let overdue: Vec<usize> = assignments
+                .iter()
+                .filter(|(sid, (_, t))| {
+                    results[**sid].is_none() && now.duration_since(*t) > deadline
+                })
+                .map(|(&sid, _)| sid)
+                .collect();
+            for sid in overdue {
+                // hand the shard to another worker; the original result,
+                // if it ever lands, is dropped as a duplicate
+                stats.reissues += 1;
+                let holder = assignments.get(&sid).map(|(c, _)| *c);
+                let other = workers
+                    .iter()
+                    .filter(|(c, _)| Some(**c) != holder)
+                    .map(|(&c, _)| c)
+                    .next()
+                    .or(holder);
+                if let Some(conn) = other {
+                    let msg = Msg::Assign {
+                        step: step as u64,
+                        shard_id: sid as u32,
+                        total: total as u32,
+                        indices: shards[sid].clone(),
+                    };
+                    if write_frame(&mut workers.get_mut(&conn).expect("live").stream, &msg).is_ok()
+                    {
+                        assignments.insert(sid, (conn, Instant::now()));
+                    } else {
+                        remove_worker(&mut workers, conn, &mut stats, &mut assignments, &mut pending, &results);
+                    }
+                }
+            }
+        }
+
+        // --- aggregate in shard-id order (the determinism anchor), one
+        // optimizer step, commit broadcast ---
+        opt.store.zero_grads();
+        let mut loss = 0.0f32;
+        let mut correct = 0usize;
+        for r in results.iter().flatten() {
+            opt.store.add_grads_from(&r.delta);
+            loss += r.loss;
+            correct += r.correct as usize;
+        }
+        let flips = {
+            let mut p = model.params();
+            opt.apply(&mut p, step)
+        };
+        report.losses.push(loss);
+        report.train_acc.push(correct as f32 / total.max(1) as f32);
+        report.flip_rates.push(flips.flip_rate());
+        if log && step % cfg.log_every.max(1) == 0 {
+            println!(
+                "step {step:>5}  loss {loss:>8.4}  [{} live worker(s), {} shards]",
+                workers.len(),
+                n_live
+            );
+        }
+
+        let commit_blob = {
+            let p = model.params();
+            params_blob(&p)
+        };
+        let conns: Vec<u64> = workers.keys().copied().collect();
+        for conn in conns {
+            let ok = write_frame(
+                &mut workers.get_mut(&conn).expect("live").stream,
+                &Msg::Sync { step: step as u64 + 1, params: commit_blob.clone() },
+            )
+            .is_ok();
+            if !ok {
+                let mut unused_pending = VecDeque::new();
+                remove_worker(&mut workers, conn, &mut stats, &mut assignments, &mut unused_pending, &results);
+            }
+        }
+
+        if dcfg.ckpt_every > 0 && (step + 1) % dcfg.ckpt_every == 0 && step + 1 < cfg.steps {
+            ckpt(&mut model, &opt, step + 1)?;
+        }
+    }
+
+    // final checkpoint (resume cursor = steps ⇒ a resumed job is a no-op)
+    if dcfg.ckpt_path.is_some() {
+        ckpt(&mut model, &opt, cfg.steps)?;
+    }
+
+    // orderly goodbye, then tear down the accept loop and any parked
+    // reader threads
+    for (_, w) in workers.iter_mut() {
+        let _ = write_frame(&mut w.stream, &Msg::Bye);
+    }
+    stop.store(true, Ordering::Release);
+    for c in all_conns.lock().expect("conn registry").iter() {
+        let _ = c.shutdown(Shutdown::Both);
+    }
+    let _ = accept_handle.join();
+
+    report.val_acc = evaluate_classifier(&mut model, &val, cfg.batch);
+    Ok(DistOutcome { model, report, stats, start_step })
+}
+
+/// Drop a worker connection: sever the socket and put the shards it was
+/// computing (and has not delivered) back on the pending queue.
+fn remove_worker(
+    workers: &mut HashMap<u64, WorkerConn>,
+    conn: u64,
+    stats: &mut DistStats,
+    assignments: &mut HashMap<usize, (u64, Instant)>,
+    pending: &mut VecDeque<usize>,
+    results: &[Option<ShardRes>],
+) {
+    let Some(w) = workers.remove(&conn) else { return };
+    stats.removed += 1;
+    let _ = w.stream.shutdown(Shutdown::Both);
+    let lost: Vec<usize> = assignments
+        .iter()
+        .filter(|(sid, (c, _))| *c == conn && results[**sid].is_none())
+        .map(|(&sid, _)| sid)
+        .collect();
+    for sid in lost {
+        assignments.remove(&sid);
+        if !pending.contains(&sid) {
+            pending.push_back(sid);
+        }
+    }
+}
+
+/// One shard of work, exactly as a `ParallelTrainer` replica would run
+/// it: zero the local vote store, forward/backward over `indices` with
+/// the gradient scaled by `indices.len() / total`, and serialize the
+/// delta. Exported so the fault-injection tests can drive scripted
+/// workers over raw sockets.
+pub fn compute_shard(
+    model: &mut Sequential,
+    store: &mut ParamStore,
+    train: &ImageDataset,
+    indices: &[u32],
+    total: u32,
+) -> (f32, u32, Vec<u8>) {
+    let idx: Vec<usize> = indices.iter().map(|&i| i as usize).collect();
+    let flat = train.h == 1;
+    let (x, labels) = if flat { train.batch_flat(&idx) } else { train.batch(&idx) };
+    let v = if flat { Value::bit_from_pm1(&x) } else { Value::F32(x) };
+    store.zero_grads();
+    let logits = model.forward(v, true).expect_f32("dist worker");
+    let out = softmax_cross_entropy(&logits, &labels);
+    let scale = labels.len() as f32 / total as f32;
+    let _ = model.backward(out.grad.scale(scale), store);
+    (out.loss * scale, out.correct as u32, store.grad_blob())
+}
+
+/// Run the worker side of a job: connect (with capped exponential
+/// backoff + jitter), handshake, then serve Sync/Assign until the
+/// coordinator says `Bye`. Returns the number of shards computed.
+pub fn run_worker(
+    spec: &JobSpec,
+    connect: &str,
+    dcfg: &DistConfig,
+    worker_id: u64,
+    log: bool,
+) -> Result<u64, String> {
+    let (train, _val) = spec.data();
+    let mut model = spec.model();
+    let mut store = ParamStore::new();
+    let mut rng = Rng::new(worker_id ^ 0x9E37_79B9_7F4A_7C15);
+    let hash = spec.config_hash();
+    let heartbeat = Duration::from_millis(dcfg.heartbeat_ms.max(10));
+    let mut computed = 0u64;
+
+    let mut attempt = 0u32;
+    let mut failing_since: Option<Instant> = None;
+    loop {
+        let stream = match TcpStream::connect(connect) {
+            Ok(s) => s,
+            Err(e) => {
+                let since = *failing_since.get_or_insert_with(Instant::now);
+                if since.elapsed() >= Duration::from_millis(dcfg.giveup_ms) {
+                    return Err(format!(
+                        "worker {worker_id}: coordinator unreachable for {}ms: {e}",
+                        dcfg.giveup_ms
+                    ));
+                }
+                // capped exponential backoff with jitter, so a worker
+                // herd does not reconnect in lockstep
+                let exp = dcfg
+                    .backoff_base_ms
+                    .saturating_mul(1u64 << attempt.min(10))
+                    .min(dcfg.backoff_cap_ms);
+                let jitter = if dcfg.backoff_base_ms > 0 {
+                    rng.below(dcfg.backoff_base_ms as usize) as u64
+                } else {
+                    0
+                };
+                attempt = attempt.saturating_add(1);
+                std::thread::sleep(Duration::from_millis(exp + jitter));
+                continue;
+            }
+        };
+        attempt = 0;
+        failing_since = None;
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(heartbeat));
+        match serve_connection(
+            stream, &train, &mut model, &mut store, hash, worker_id, &mut computed, log,
+        ) {
+            ConnEnd::Done => return Ok(computed),
+            ConnEnd::Retry => {
+                if log {
+                    println!("worker {worker_id}: connection lost — reconnecting");
+                }
+            }
+        }
+    }
+}
+
+enum ConnEnd {
+    /// Job complete (`Bye` received) — exit cleanly.
+    Done,
+    /// Connection died — reconnect with backoff.
+    Retry,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve_connection(
+    mut stream: TcpStream,
+    train: &ImageDataset,
+    model: &mut Sequential,
+    store: &mut ParamStore,
+    hash: u64,
+    worker_id: u64,
+    computed: &mut u64,
+    log: bool,
+) -> ConnEnd {
+    if write_frame(&mut stream, &Msg::Hello { worker_id, config_hash: hash }).is_err() {
+        return ConnEnd::Retry;
+    }
+    // step this replica's weights are synced at; Assigns for any other
+    // step are ignored (the coordinator's straggler logic covers them)
+    let mut synced: Option<u64> = None;
+    loop {
+        match read_frame_idle(&mut stream) {
+            Ok(None) => {
+                // idle past the heartbeat period
+                if write_frame(&mut stream, &Msg::Heartbeat).is_err() {
+                    return ConnEnd::Retry;
+                }
+            }
+            Ok(Some(Msg::Sync { step, params })) => {
+                let mut p = model.params();
+                if apply_params_blob(&mut p, &params).is_err() {
+                    // weights we cannot install are a protocol breach:
+                    // resync from scratch over a fresh connection
+                    return ConnEnd::Retry;
+                }
+                synced = Some(step);
+            }
+            Ok(Some(Msg::Assign { step, shard_id, total, indices })) => {
+                if synced != Some(step) {
+                    continue;
+                }
+                let (loss, correct, grads) =
+                    compute_shard(model, store, train, &indices, total);
+                *computed += 1;
+                if log && *computed % 50 == 0 {
+                    println!("worker {worker_id}: {computed} shards computed");
+                }
+                let msg = Msg::ShardResult { step, shard_id, loss, correct, grads };
+                if write_frame(&mut stream, &msg).is_err() {
+                    return ConnEnd::Retry;
+                }
+            }
+            Ok(Some(Msg::Bye)) => return ConnEnd::Done,
+            Ok(Some(_)) => {}
+            Err(_) => return ConnEnd::Retry,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ParallelTrainer;
+    use crate::nn::ParamRef;
+
+    fn small_cfg(workers: usize, steps: usize) -> TrainConfig {
+        TrainConfig {
+            model: "mlp".into(),
+            workers,
+            steps,
+            batch: 12,
+            train_size: 48,
+            val_size: 16,
+            lr_bool: 2.0,
+            cosine: true,
+            ..Default::default()
+        }
+    }
+
+    fn assert_params_bit_equal(a: &mut Sequential, b: &mut Sequential) {
+        let pa = a.params();
+        let pb = b.params();
+        assert_eq!(pa.len(), pb.len());
+        for (x, y) in pa.iter().zip(pb.iter()) {
+            match (x, y) {
+                (ParamRef::Bool { name, bits: ba }, ParamRef::Bool { bits: bb, .. }) => {
+                    assert_eq!(ba.words, bb.words, "{name}: packed weights diverged");
+                }
+                (ParamRef::Real { name, w: wa }, ParamRef::Real { w: wb, .. }) => {
+                    let (da, db): (Vec<u32>, Vec<u32>) = (
+                        wa.data.iter().map(|v| v.to_bits()).collect(),
+                        wb.data.iter().map(|v| v.to_bits()).collect(),
+                    );
+                    assert_eq!(da, db, "{name}: FP weights diverged");
+                }
+                _ => panic!("param kind mismatch"),
+            }
+        }
+    }
+
+    #[test]
+    fn config_hash_separates_jobs() {
+        let a = JobSpec::new(small_cfg(2, 4)).unwrap();
+        let mut cfg_b = small_cfg(2, 4);
+        cfg_b.seed ^= 1;
+        let b = JobSpec::new(cfg_b).unwrap();
+        assert_eq!(a.config_hash(), a.config_hash());
+        assert_ne!(a.config_hash(), b.config_hash());
+    }
+
+    #[test]
+    fn job_spec_rejects_non_mlp_and_zero_shards() {
+        let mut cfg = small_cfg(2, 4);
+        cfg.model = "vgg".into();
+        assert!(JobSpec::new(cfg).is_err());
+        let mut cfg = small_cfg(0, 4);
+        cfg.workers = 0;
+        assert!(JobSpec::new(cfg).is_err());
+    }
+
+    /// Loopback end-to-end: 2 in-process workers, 2 shards — final
+    /// weights bit-identical to the in-process ParallelTrainer(2), and
+    /// the loss curve matches float-for-float.
+    #[test]
+    fn loopback_two_workers_match_parallel_trainer_bit_exactly() {
+        let cfg = small_cfg(2, 4);
+        let spec = JobSpec::new(cfg.clone()).unwrap();
+        let dcfg = DistConfig {
+            heartbeat_ms: 50,
+            deadline_ms: 10_000,
+            giveup_ms: 5_000, // bound the test if a worker outlives the job
+            ..DistConfig::from_env()
+        };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+
+        let outcome = std::thread::scope(|s| {
+            for wid in 0..2u64 {
+                let spec = spec.clone();
+                let dcfg = dcfg.clone();
+                let addr = addr.clone();
+                s.spawn(move || run_worker(&spec, &addr, &dcfg, wid, false));
+            }
+            run_coordinator(&spec, &dcfg, listener, false).unwrap()
+        });
+
+        let (train, val) = spec.data();
+        let spec2 = spec.clone();
+        let mut pt = ParallelTrainer::new(2, &cfg, move |_| spec2.model());
+        let reference = pt.fit(&train, &val, &cfg, false);
+
+        let mut dist_model = outcome.model;
+        assert_params_bit_equal(&mut dist_model, pt.leader());
+        let (dl, rl): (Vec<u32>, Vec<u32>) = (
+            outcome.report.losses.iter().map(|l| l.to_bits()).collect(),
+            reference.losses.iter().map(|l| l.to_bits()).collect(),
+        );
+        assert_eq!(dl, rl, "loss curves must match bit-for-bit");
+        assert_eq!(outcome.report.val_acc, reference.val_acc);
+    }
+}

@@ -10,13 +10,20 @@
 //! Appendix D.1.1, 8×V100, mapped to threads).
 
 mod checkpoint;
+mod dist;
 mod metrics;
 mod parallel;
 mod trainer;
+pub mod wire;
 
 pub use checkpoint::{
-    arch_record, load_checkpoint, load_model, load_training, read_records, save_checkpoint,
-    save_model, save_training, CheckpointError, Record,
+    apply_params_blob, arch_record, load_checkpoint, load_model, load_training, params_blob,
+    read_records, save_checkpoint, save_model, save_training, save_training_with_meta,
+    CheckpointError, Record,
+};
+pub use dist::{
+    compute_shard, run_coordinator, run_worker, DistConfig, DistOutcome, DistStats, JobSpec,
+    META_DIST_STEP,
 };
 pub use metrics::MetricLog;
 pub use parallel::ParallelTrainer;

@@ -1,0 +1,431 @@
+//! Length-prefixed binary wire protocol for `train-dist` (DESIGN.md
+//! §Distributed-Training).
+//!
+//! Frame layout (little-endian):
+//!   u32 magic | u32 payload_len | u32 crc32(payload) | payload
+//!
+//! The CRC precedes the payload so a reader can verify integrity while
+//! streaming; a mismatch, a bad magic, or an implausible length all
+//! surface as [`WireError::Corrupt`] and the connection is dropped —
+//! per-connection state is worthless once framing is lost, and the
+//! worker's reconnect path (capped exponential backoff) restores it with
+//! a fresh `Sync`. Torn frames (socket dies mid-payload) surface as the
+//! underlying io error.
+//!
+//! Payload: `u8 msg tag | fields`. Variable-size fields are u32
+//! length-prefixed. Weight and vote payloads reuse existing encodings
+//! ([`crate::coordinator::params_blob`] record bytes,
+//! [`crate::nn::ParamStore::grad_blob`]) rather than inventing a second
+//! serialization of the same tensors.
+
+use crate::util::crc32::crc32;
+use std::fmt;
+use std::io::{Read, Write};
+
+/// Frame magic: rejects cross-protocol connects (e.g. an HTTP client
+/// probing the coordinator port) on the first 4 bytes.
+pub const FRAME_MAGIC: u32 = 0xB01D_D157;
+
+/// Upper bound on a frame payload. Generous for full-model Sync frames
+/// (Boolean weights are 1 bit/weight) while keeping a torn length prefix
+/// from provoking a multi-GiB allocation.
+pub const MAX_PAYLOAD: u32 = 256 * 1024 * 1024;
+
+/// Protocol error: io (disconnect, timeout — retryable by reconnect) vs
+/// corruption (framing lost — drop the connection).
+#[derive(Debug)]
+pub enum WireError {
+    Io(std::io::Error),
+    Corrupt(String),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire io: {e}"),
+            WireError::Corrupt(m) => write!(f, "wire corrupt: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+impl WireError {
+    /// True when the error is a read timeout (the caller's heartbeat
+    /// cadence) rather than a dead or corrupt connection.
+    pub fn is_timeout(&self) -> bool {
+        matches!(
+            self,
+            WireError::Io(e) if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            )
+        )
+    }
+}
+
+/// One protocol message. Worker→coordinator: `Hello`, `ShardResult`,
+/// `Heartbeat`. Coordinator→worker: `Sync`, `Assign`, `Bye`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Worker introduction. `config_hash` fingerprints the job config +
+    /// dataset identity; a mismatched worker is turned away (`Bye`)
+    /// before it can pollute the vote stream.
+    Hello { worker_id: u64, config_hash: u64 },
+    /// Full-weight install: the committed state entering `step`. Sent on
+    /// join and after every optimizer step (the commit broadcast).
+    Sync { step: u64, params: Vec<u8> },
+    /// Compute shard `shard_id` of `step`: forward/backward over
+    /// `indices`, gradient scaled by `indices.len() / total`.
+    Assign { step: u64, shard_id: u32, total: u32, indices: Vec<u32> },
+    /// A shard's vote delta ([`crate::nn::ParamStore::grad_blob`]) plus
+    /// its loss/accuracy contribution. Idempotent per (step, shard_id):
+    /// the coordinator drops duplicates, so re-issued shards are safe.
+    ShardResult { step: u64, shard_id: u32, loss: f32, correct: u32, grads: Vec<u8> },
+    /// Worker liveness signal (sent when idle past the heartbeat period).
+    Heartbeat,
+    /// Orderly goodbye (job complete or config rejected).
+    Bye,
+}
+
+impl Msg {
+    /// Short label for logs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "hello",
+            Msg::Sync { .. } => "sync",
+            Msg::Assign { .. } => "assign",
+            Msg::ShardResult { .. } => "result",
+            Msg::Heartbeat => "heartbeat",
+            Msg::Bye => "bye",
+        }
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        match self {
+            Msg::Hello { worker_id, config_hash } => {
+                p.push(1);
+                p.extend_from_slice(&worker_id.to_le_bytes());
+                p.extend_from_slice(&config_hash.to_le_bytes());
+            }
+            Msg::Sync { step, params } => {
+                p.push(2);
+                p.extend_from_slice(&step.to_le_bytes());
+                p.extend_from_slice(&(params.len() as u32).to_le_bytes());
+                p.extend_from_slice(params);
+            }
+            Msg::Assign { step, shard_id, total, indices } => {
+                p.push(3);
+                p.extend_from_slice(&step.to_le_bytes());
+                p.extend_from_slice(&shard_id.to_le_bytes());
+                p.extend_from_slice(&total.to_le_bytes());
+                p.extend_from_slice(&(indices.len() as u32).to_le_bytes());
+                for &i in indices {
+                    p.extend_from_slice(&i.to_le_bytes());
+                }
+            }
+            Msg::ShardResult { step, shard_id, loss, correct, grads } => {
+                p.push(4);
+                p.extend_from_slice(&step.to_le_bytes());
+                p.extend_from_slice(&shard_id.to_le_bytes());
+                p.extend_from_slice(&loss.to_le_bytes());
+                p.extend_from_slice(&correct.to_le_bytes());
+                p.extend_from_slice(&(grads.len() as u32).to_le_bytes());
+                p.extend_from_slice(grads);
+            }
+            Msg::Heartbeat => p.push(5),
+            Msg::Bye => p.push(6),
+        }
+        p
+    }
+
+    fn decode(p: &[u8]) -> Result<Msg, WireError> {
+        fn take<'a>(p: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8], WireError> {
+            let end = pos
+                .checked_add(n)
+                .ok_or_else(|| WireError::Corrupt("length overflow".to_string()))?;
+            if end > p.len() {
+                return Err(WireError::Corrupt(format!(
+                    "message truncated at byte {pos} (want {n} more of {})",
+                    p.len()
+                )));
+            }
+            let s = &p[*pos..end];
+            *pos = end;
+            Ok(s)
+        }
+        fn r_u32(p: &[u8], pos: &mut usize) -> Result<u32, WireError> {
+            let b = take(p, pos, 4)?;
+            Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        }
+        fn r_u64(p: &[u8], pos: &mut usize) -> Result<u64, WireError> {
+            let b = take(p, pos, 8)?;
+            Ok(u64::from_le_bytes(b.try_into().expect("8 bytes")))
+        }
+        let mut pos = 1usize;
+        let tag = *p.first().ok_or_else(|| WireError::Corrupt("empty message".to_string()))?;
+        let msg = match tag {
+            1 => {
+                let worker_id = r_u64(p, &mut pos)?;
+                let config_hash = r_u64(p, &mut pos)?;
+                Msg::Hello { worker_id, config_hash }
+            }
+            2 => {
+                let step = r_u64(p, &mut pos)?;
+                let n = r_u32(p, &mut pos)? as usize;
+                Msg::Sync { step, params: take(p, &mut pos, n)?.to_vec() }
+            }
+            3 => {
+                let step = r_u64(p, &mut pos)?;
+                let shard_id = r_u32(p, &mut pos)?;
+                let total = r_u32(p, &mut pos)?;
+                let n = r_u32(p, &mut pos)? as usize;
+                let nbytes = n
+                    .checked_mul(4)
+                    .ok_or_else(|| WireError::Corrupt("index count overflow".to_string()))?;
+                let indices = take(p, &mut pos, nbytes)?
+                    .chunks_exact(4)
+                    .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Msg::Assign { step, shard_id, total, indices }
+            }
+            4 => {
+                let step = r_u64(p, &mut pos)?;
+                let shard_id = r_u32(p, &mut pos)?;
+                let loss =
+                    f32::from_le_bytes(take(p, &mut pos, 4)?.try_into().expect("4 bytes"));
+                let correct = r_u32(p, &mut pos)?;
+                let n = r_u32(p, &mut pos)? as usize;
+                let grads = take(p, &mut pos, n)?.to_vec();
+                Msg::ShardResult { step, shard_id, loss, correct, grads }
+            }
+            5 => Msg::Heartbeat,
+            6 => Msg::Bye,
+            t => return Err(WireError::Corrupt(format!("unknown message tag {t}"))),
+        };
+        if pos != p.len() && !matches!(msg, Msg::Heartbeat | Msg::Bye) {
+            return Err(WireError::Corrupt(format!("{} trailing bytes", p.len() - pos)));
+        }
+        if matches!(msg, Msg::Heartbeat | Msg::Bye) && p.len() != 1 {
+            return Err(WireError::Corrupt(format!("{} trailing bytes", p.len() - 1)));
+        }
+        Ok(msg)
+    }
+}
+
+/// Serialize `msg` into one frame on `w` (and flush — frames are the
+/// protocol's unit of progress, a buffered half-frame helps no one).
+pub fn write_frame(w: &mut impl Write, msg: &Msg) -> std::io::Result<()> {
+    let payload = msg.encode();
+    let mut head = [0u8; 12];
+    head[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+    head[4..8].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    head[8..12].copy_from_slice(&crc32(&payload).to_le_bytes());
+    w.write_all(&head)?;
+    w.write_all(&payload)?;
+    w.flush()
+}
+
+/// Read one frame from `r`, verifying magic, length sanity and CRC.
+pub fn read_frame(r: &mut impl Read) -> Result<Msg, WireError> {
+    let mut head = [0u8; 12];
+    r.read_exact(&mut head)?;
+    read_frame_with_head(r, head)
+}
+
+/// Read one frame from a stream with a read timeout, distinguishing
+/// "idle" (nothing arrived within the timeout — `Ok(None)`, the caller's
+/// heartbeat cue) from a mid-frame stall (bytes arrived, then the rest
+/// timed out — an error, because partially consumed bytes mean framing
+/// is lost and the connection must be dropped). The first read is a
+/// plain `read`, which either consumes bytes or nothing at all, so the
+/// idle path never tears a frame.
+pub fn read_frame_idle(r: &mut impl Read) -> Result<Option<Msg>, WireError> {
+    let mut head = [0u8; 12];
+    let mut got = 0usize;
+    while got == 0 {
+        match r.read(&mut head) {
+            Ok(0) => {
+                return Err(WireError::Io(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection closed",
+                )))
+            }
+            Ok(n) => got = n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                return Ok(None)
+            }
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    r.read_exact(&mut head[got..])?; // timeout past this point is fatal
+    Ok(Some(read_frame_with_head(r, head)?))
+}
+
+fn read_frame_with_head(r: &mut impl Read, head: [u8; 12]) -> Result<Msg, WireError> {
+    let magic = u32::from_le_bytes(head[0..4].try_into().expect("4 bytes"));
+    if magic != FRAME_MAGIC {
+        return Err(WireError::Corrupt(format!("bad frame magic {magic:#010x}")));
+    }
+    let len = u32::from_le_bytes(head[4..8].try_into().expect("4 bytes"));
+    if len > MAX_PAYLOAD {
+        return Err(WireError::Corrupt(format!("frame length {len} exceeds cap {MAX_PAYLOAD}")));
+    }
+    let want_crc = u32::from_le_bytes(head[8..12].try_into().expect("4 bytes"));
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    let got = crc32(&payload);
+    if got != want_crc {
+        return Err(WireError::Corrupt(format!(
+            "frame CRC mismatch (header {want_crc:#010x}, payload {got:#010x})"
+        )));
+    }
+    Msg::decode(&payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: &Msg) -> Msg {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, msg).unwrap();
+        read_frame(&mut buf.as_slice()).unwrap()
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        let msgs = vec![
+            Msg::Hello { worker_id: 3, config_hash: 0xDEAD_BEEF_CAFE_F00D },
+            Msg::Sync { step: 7, params: vec![1, 2, 3, 255, 0] },
+            Msg::Assign { step: 9, shard_id: 2, total: 48, indices: vec![0, 5, 17, u32::MAX] },
+            Msg::ShardResult {
+                step: 9,
+                shard_id: 2,
+                loss: -0.0, // sign bit must survive
+                correct: 11,
+                grads: vec![9; 100],
+            },
+            Msg::Heartbeat,
+            Msg::Bye,
+        ];
+        for m in &msgs {
+            assert_eq!(&roundtrip(m), m, "{} must round-trip", m.label());
+        }
+        // -0.0 sign bit check, since PartialEq treats -0.0 == 0.0
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msgs[3]).unwrap();
+        match read_frame(&mut buf.as_slice()).unwrap() {
+            Msg::ShardResult { loss, .. } => assert_eq!(loss.to_bits(), (-0.0f32).to_bits()),
+            _ => panic!("wrong message"),
+        }
+    }
+
+    #[test]
+    fn torn_frames_error_at_every_truncation_point() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Msg::Assign { step: 1, shard_id: 0, total: 8, indices: vec![1, 2, 3] })
+            .unwrap();
+        for cut in 0..buf.len() {
+            let r = read_frame(&mut &buf[..cut]);
+            assert!(r.is_err(), "torn frame at {cut}/{} must not parse", buf.len());
+        }
+    }
+
+    #[test]
+    fn bit_flips_anywhere_are_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Msg::ShardResult { step: 3, shard_id: 1, loss: 0.5, correct: 4, grads: vec![7; 32] })
+            .unwrap();
+        for i in 0..buf.len() {
+            let mut t = buf.clone();
+            t[i] ^= 0x10;
+            assert!(
+                read_frame(&mut t.as_slice()).is_err(),
+                "flip at byte {i} must be caught by magic/len/CRC"
+            );
+        }
+    }
+
+    #[test]
+    fn implausible_length_is_rejected_without_allocating() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+        buf.extend_from_slice(&u32::MAX.to_le_bytes()); // 4 GiB claim
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        match read_frame(&mut buf.as_slice()) {
+            Err(WireError::Corrupt(m)) => assert!(m.contains("exceeds cap"), "{m}"),
+            other => panic!("want Corrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cross_protocol_bytes_are_rejected_on_magic() {
+        let http = b"POST /v1/models/mlp/predict HTTP/1.1\r\n\r\n";
+        match read_frame(&mut &http[..]) {
+            Err(WireError::Corrupt(m)) => assert!(m.contains("magic"), "{m}"),
+            other => panic!("want Corrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn read_frame_idle_separates_idle_from_torn_and_eof() {
+        // a reader that yields WouldBlock before any byte: idle, no error
+        struct Idle;
+        impl std::io::Read for Idle {
+            fn read(&mut self, _b: &mut [u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "idle"))
+            }
+        }
+        assert!(matches!(read_frame_idle(&mut Idle), Ok(None)));
+
+        // a complete frame parses as usual
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Msg::Heartbeat).unwrap();
+        match read_frame_idle(&mut buf.as_slice()) {
+            Ok(Some(Msg::Heartbeat)) => {}
+            other => panic!("want heartbeat, got {other:?}"),
+        }
+
+        // WouldBlock AFTER the first bytes landed = torn frame = fatal
+        struct Torn {
+            sent: bool,
+        }
+        impl std::io::Read for Torn {
+            fn read(&mut self, b: &mut [u8]) -> std::io::Result<usize> {
+                if self.sent {
+                    return Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "stall"));
+                }
+                self.sent = true;
+                b[0] = 0x57; // first byte of FRAME_MAGIC (LE)
+                Ok(1)
+            }
+        }
+        assert!(read_frame_idle(&mut Torn { sent: false }).is_err());
+
+        // clean EOF before any byte is an error too (peer is gone)
+        assert!(read_frame_idle(&mut std::io::empty()).is_err());
+    }
+
+    #[test]
+    fn timeout_classification() {
+        let e = WireError::Io(std::io::Error::new(std::io::ErrorKind::WouldBlock, "t"));
+        assert!(e.is_timeout());
+        let e = WireError::Io(std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "t"));
+        assert!(!e.is_timeout());
+        assert!(!WireError::Corrupt("x".into()).is_timeout());
+    }
+}

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   train        [--config FILE] [--model M] [--method M] [--steps N] …
+//!   train-dist   --role coordinator|worker [--spawn N] …
+//!                                      (fault-tolerant multi-process training)
 //!   report       <fig1|table2|…|all> [--quick]
 //!   energy       [--arch vgg|resnet] [--base N] [--batch N]
 //!   serve-native [--model CKPT] [--workers N] [--batch N] …
@@ -26,6 +28,10 @@ USAGE:
   bold train  [--config FILE] [--model mlp|vgg|resnet] [--method bold|bold_bn|fp|binaryconnect|binarynet|xnornet]
               [--steps N] [--batch N] [--lr_bool X] [--lr_fp X] [--workers N] [--seed N]
               [--ckpt PATH] [--metrics CSV]
+  bold train-dist [--role coordinator|worker] [--listen HOST:PORT] [--connect HOST:PORT]
+              [--spawn N] [--worker-id N] [--ckpt PATH] [--ckpt-every N] [--resume]
+              [train flags: --steps --batch --workers --seed ...]
+              (multi-process data-parallel training; BOLD_DIST_* env knobs)
   bold report <{reports}|all> [--quick]
   bold energy [--arch vgg|resnet] [--base N] [--batch N] [--inference]
   bold serve-native [--model CKPT] [--workers N] [--batch N] [--requests N]
@@ -48,6 +54,7 @@ fn main() {
     let rest = &args[1..];
     let result = match cmd.as_str() {
         "train" => cmd_train(rest),
+        "train-dist" => cmd_train_dist(rest),
         "report" => cmd_report(rest),
         "energy" => cmd_energy(rest),
         "serve-native" => cmd_serve_native(rest),
@@ -73,7 +80,7 @@ fn parse_kv(args: &[String]) -> Result<(Vec<(String, String)>, Vec<String>), Str
     let mut i = 0;
     while i < args.len() {
         if let Some(key) = args[i].strip_prefix("--") {
-            if key == "quick" || key == "inference" {
+            if key == "quick" || key == "inference" || key == "resume" {
                 kv.push((key.to_string(), "true".to_string()));
                 i += 1;
             } else {
@@ -210,6 +217,126 @@ fn cmd_train(args: &[String]) -> Result<(), String> {
         println!("metrics written to {p}");
     }
     Ok(())
+}
+
+/// Multi-process data-parallel training over TCP (DESIGN.md
+/// §Distributed-Training): one coordinator owns model + optimizer and
+/// shards each batch across worker processes; final weights are
+/// bit-identical to single-process training regardless of worker churn.
+fn cmd_train_dist(args: &[String]) -> Result<(), String> {
+    use bold::coordinator::{run_coordinator, run_worker, DistConfig, JobSpec};
+    use std::net::TcpListener;
+
+    let (kv, _pos) = parse_kv(args)?;
+    let mut cfg = TrainConfig { model: "mlp".into(), ..TrainConfig::default() };
+    for (k, v) in &kv {
+        if k == "config" {
+            cfg = TrainConfig::from_file(v).map_err(|e| e.to_string())?;
+        }
+    }
+    let mut role = "coordinator".to_string();
+    let mut listen = "127.0.0.1:7979".to_string();
+    let mut connect: Option<String> = None;
+    let mut spawn = 0usize;
+    let mut worker_id = std::process::id() as u64;
+    let mut dcfg = DistConfig::from_env();
+    for (k, v) in &kv {
+        match k.as_str() {
+            "config" => {}
+            "role" => role = v.clone(),
+            "listen" => listen = v.clone(),
+            "connect" => connect = Some(v.clone()),
+            "spawn" => spawn = v.parse().map_err(|_| "bad --spawn")?,
+            "worker-id" => worker_id = v.parse().map_err(|_| "bad --worker-id")?,
+            "ckpt" => dcfg.ckpt_path = Some(v.clone()),
+            "ckpt-every" => dcfg.ckpt_every = v.parse().map_err(|_| "bad --ckpt-every")?,
+            "resume" => dcfg.resume = true,
+            _ => cfg.apply_override(k, v).map_err(|e| e.to_string())?,
+        }
+    }
+    let spec = JobSpec::new(cfg.clone())?;
+    match role.as_str() {
+        "worker" => {
+            let addr = connect.ok_or("--role worker needs --connect HOST:PORT")?;
+            let shards = run_worker(&spec, &addr, &dcfg, worker_id, true)?;
+            println!("worker {worker_id} done: {shards} shard(s) computed");
+            Ok(())
+        }
+        "coordinator" => {
+            let listener =
+                TcpListener::bind(&listen).map_err(|e| format!("bind {listen}: {e}"))?;
+            let addr = listener.local_addr().map_err(|e| e.to_string())?;
+            println!(
+                "coordinator on {addr}: {} shard(s)/step, {} steps",
+                spec.n_shards(),
+                cfg.steps
+            );
+            let mut children = Vec::new();
+            if spawn > 0 {
+                let exe = std::env::current_exe().map_err(|e| e.to_string())?;
+                let threads = bold::util::pool::child_budget(spawn);
+                // forward the training flags verbatim so every worker
+                // builds the exact same job (JobSpec::config_hash gates it)
+                let mut fwd: Vec<String> = Vec::new();
+                for (k, v) in &kv {
+                    let dist_only = matches!(
+                        k.as_str(),
+                        "role" | "listen" | "connect" | "spawn" | "worker-id" | "ckpt"
+                            | "ckpt-every" | "resume"
+                    );
+                    if !dist_only {
+                        fwd.push(format!("--{k}"));
+                        fwd.push(v.clone());
+                    }
+                }
+                for i in 0..spawn {
+                    let child = std::process::Command::new(&exe)
+                        .arg("train-dist")
+                        .args([
+                            "--role",
+                            "worker",
+                            "--connect",
+                            &addr.to_string(),
+                            "--worker-id",
+                            &i.to_string(),
+                        ])
+                        .args(&fwd)
+                        .env("BOLD_NUM_THREADS", threads.to_string())
+                        .stdout(std::process::Stdio::null())
+                        .spawn()
+                        .map_err(|e| format!("spawn worker {i}: {e}"))?;
+                    children.push(child);
+                }
+                println!("spawned {spawn} local worker(s), {threads} thread(s) each");
+            }
+            let outcome = run_coordinator(&spec, &dcfg, listener, true)?;
+            for mut c in children {
+                let _ = c.wait();
+            }
+            let r = &outcome.report;
+            let s = &outcome.stats;
+            println!(
+                "done: final loss {:.4}, val acc {:.2}% (started at step {})",
+                r.tail_loss(10),
+                r.val_acc * 100.0,
+                outcome.start_step
+            );
+            println!(
+                "fault log: {} join(s) ({} reconnect(s)), {} removed, {} re-issued shard(s), \
+                 {} duplicate(s), {} stale, {} rejected, {} corrupt frame(s)",
+                s.joins,
+                s.reconnects,
+                s.removed,
+                s.reissues,
+                s.duplicates,
+                s.stale,
+                s.rejected,
+                s.corrupt_frames
+            );
+            Ok(())
+        }
+        other => Err(format!("unknown --role '{other}' (coordinator|worker)")),
+    }
 }
 
 fn cmd_report(args: &[String]) -> Result<(), String> {
@@ -477,9 +604,20 @@ fn cmd_serve_http(args: &[String]) -> Result<(), String> {
         server.config().threads
     );
     println!("endpoints: POST /v1/models/<name>/predict · GET /healthz /v1/models /stats · POST /admin/shutdown");
-    match for_secs {
-        Some(secs) => std::thread::sleep(Duration::from_secs(secs)),
-        None => server.wait_for_shutdown(),
+    // park until something asks for a drain: `POST /admin/shutdown`,
+    // SIGINT/SIGTERM (zero-dep handler — an atomic flag polled here), or
+    // the --for-secs deadline. All three paths drain gracefully: stop
+    // accepting, answer in-flight requests, then join.
+    bold::util::signal::install_shutdown_handler();
+    let deadline = for_secs.map(|s| std::time::Instant::now() + Duration::from_secs(s));
+    while !server.is_draining() && !bold::util::signal::triggered() {
+        if deadline.is_some_and(|d| std::time::Instant::now() >= d) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    if bold::util::signal::triggered() {
+        println!("shutdown signal received — draining");
     }
     let stats = server.shutdown();
     println!(

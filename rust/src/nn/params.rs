@@ -220,6 +220,90 @@ impl ParamStore {
             }
         }
     }
+
+    /// Serialize every non-empty grad buffer to a flat little-endian blob
+    /// (the per-shard vote delta a `train-dist` worker ships to the
+    /// coordinator). Entries are written in registration order and carry
+    /// raw f32 bit patterns, so
+    /// `a.add_grads_from(&ParamStore::from_grad_blob(&b.grad_blob())?)`
+    /// is bit-identical to `a.add_grads_from(&b)` — the property the
+    /// distributed determinism argument rests on (DESIGN.md
+    /// §Distributed-Training).
+    pub fn grad_blob(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        let live: Vec<(&String, &ParamSlot)> = self
+            .names
+            .iter()
+            .zip(&self.slots)
+            .filter(|(_, s)| !s.grad.is_empty())
+            .collect();
+        out.extend_from_slice(&(live.len() as u32).to_le_bytes());
+        for (name, slot) in live {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&(slot.grad.shape.len() as u32).to_le_bytes());
+            for &d in &slot.grad.shape {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &v in &slot.grad.data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Inverse of [`ParamStore::grad_blob`]: rebuild a delta store with
+    /// the same registration order and bit-identical grad values. Rejects
+    /// truncated or structurally inconsistent blobs instead of panicking —
+    /// wire input is untrusted.
+    pub fn from_grad_blob(blob: &[u8]) -> Result<ParamStore, String> {
+        fn take<'a>(blob: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8], String> {
+            let end = pos.checked_add(n).ok_or("grad blob: length overflow")?;
+            if end > blob.len() {
+                return Err(format!("grad blob: truncated at byte {pos} (want {n} more)"));
+            }
+            let s = &blob[*pos..end];
+            *pos = end;
+            Ok(s)
+        }
+        fn r_u32(blob: &[u8], pos: &mut usize) -> Result<u32, String> {
+            let b = take(blob, pos, 4)?;
+            Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        }
+        let mut pos = 0usize;
+        let mut store = ParamStore::new();
+        let n = r_u32(blob, &mut pos)?;
+        for _ in 0..n {
+            let name_len = r_u32(blob, &mut pos)? as usize;
+            let name = String::from_utf8(take(blob, &mut pos, name_len)?.to_vec())
+                .map_err(|_| "grad blob: non-utf8 parameter name".to_string())?;
+            let rank = r_u32(blob, &mut pos)? as usize;
+            if rank > 8 {
+                return Err(format!("grad blob: implausible rank {rank} for '{name}'"));
+            }
+            let mut shape = Vec::with_capacity(rank);
+            let mut len = 1usize;
+            for _ in 0..rank {
+                let d = r_u32(blob, &mut pos)? as usize;
+                len = len
+                    .checked_mul(d)
+                    .ok_or_else(|| format!("grad blob: shape overflow for '{name}'"))?;
+                shape.push(d);
+            }
+            let bytes =
+                take(blob, &mut pos, len.checked_mul(4).ok_or("grad blob: size overflow")?)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let slot = store.slot_mut(&name);
+            slot.grad = Tensor::from_vec(&shape, data);
+        }
+        if pos != blob.len() {
+            return Err(format!("grad blob: {} trailing bytes", blob.len() - pos));
+        }
+        Ok(store)
+    }
 }
 
 #[cfg(test)]
@@ -260,6 +344,61 @@ mod tests {
         a.add_grads_from(&b);
         assert_eq!(a.grad("w").unwrap().data, vec![1.5, 1.0]);
         assert_eq!(a.grad("only_b").unwrap().data, vec![7.0]);
+    }
+
+    #[test]
+    fn grad_blob_round_trips_bit_exactly() {
+        let mut s = ParamStore::new();
+        s.accumulate("fc1.w", &Tensor::from_vec(&[2, 3], vec![1.0, -0.0, 1.5e-39, f32::MIN_POSITIVE, 3.25, -7.75]));
+        s.accumulate("fc2.b", &Tensor::from_vec(&[2], vec![0.1, -0.1]));
+        // empty-grad slot must be skipped, not serialized as a zero tensor
+        s.register("frozen.w");
+
+        let blob = s.grad_blob();
+        let back = ParamStore::from_grad_blob(&blob).unwrap();
+        assert_eq!(back.len(), 2);
+        let names: Vec<&str> = back.names().collect();
+        assert_eq!(names, vec!["fc1.w", "fc2.b"], "registration order preserved");
+        for name in ["fc1.w", "fc2.b"] {
+            let (a, b) = (s.grad(name).unwrap(), back.grad(name).unwrap());
+            assert_eq!(a.shape, b.shape);
+            let (ab, bb): (Vec<u32>, Vec<u32>) = (
+                a.data.iter().map(|v| v.to_bits()).collect(),
+                b.data.iter().map(|v| v.to_bits()).collect(),
+            );
+            assert_eq!(ab, bb, "'{name}' must round-trip bit-exactly (incl. -0.0, denormals)");
+        }
+
+        // aggregation through the blob is bit-identical to direct aggregation
+        let mut direct = ParamStore::new();
+        direct.accumulate("fc1.w", &Tensor::from_vec(&[2, 3], vec![0.5; 6]));
+        let mut via_blob = direct.clone();
+        direct.add_grads_from(&s);
+        via_blob.add_grads_from(&back);
+        for name in ["fc1.w", "fc2.b"] {
+            let (a, b) = (direct.grad(name).unwrap(), via_blob.grad(name).unwrap());
+            assert!(a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+    }
+
+    #[test]
+    fn grad_blob_rejects_corruption_without_panicking() {
+        let mut s = ParamStore::new();
+        s.accumulate("w", &Tensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]));
+        let blob = s.grad_blob();
+
+        // every truncation point must error, never panic or return Ok
+        for cut in 0..blob.len() {
+            assert!(ParamStore::from_grad_blob(&blob[..cut]).is_err(), "truncation at {cut}");
+        }
+        // trailing garbage is rejected too
+        let mut padded = blob.clone();
+        padded.push(0);
+        assert!(ParamStore::from_grad_blob(&padded).is_err());
+        // absurd entry count from a torn length prefix
+        let mut huge = blob.clone();
+        huge[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(ParamStore::from_grad_blob(&huge).is_err());
     }
 
     #[test]

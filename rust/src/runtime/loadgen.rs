@@ -318,3 +318,78 @@ pub fn open_loop(
     rep.goodput_per_s = rep.ok as f64 / wall.max(1e-9);
     rep
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    /// A loopback port that is guaranteed closed: bind to grab a free
+    /// port number, then drop the listener before returning.
+    fn closed_port_addr() -> String {
+        let l = TcpListener::bind("127.0.0.1:0").expect("bind probe");
+        let addr = l.local_addr().expect("probe addr").to_string();
+        drop(l);
+        addr
+    }
+
+    #[test]
+    fn refused_connections_count_as_io_errors_not_panics() {
+        let addr = closed_port_addr();
+        let req = render_predict("m", b"1,-1", "text/plain");
+
+        assert!(one_shot(&addr, &req).is_err(), "one_shot to a closed port must error");
+
+        let rep = open_loop(&addr, &req, 200.0, Duration::from_millis(120), 2);
+        assert!(rep.sent >= 1, "arrivals fire regardless of server state: {rep:?}");
+        assert_eq!(rep.ok, 0, "nothing can succeed against a closed port: {rep:?}");
+        assert_eq!(
+            rep.io_errors, rep.sent,
+            "every refused connect must be charged to io_errors: {rep:?}"
+        );
+        assert_eq!(rep.goodput_per_s, 0.0);
+
+        // closed-loop probe against the same dead port: zero rate, no hang
+        let rate = closed_loop_rate(&addr, &req, 2, Duration::from_millis(60));
+        assert_eq!(rate, 0.0, "closed-loop rate against a dead port must be zero");
+    }
+
+    #[test]
+    fn accept_then_close_resets_count_as_io_errors_and_reconnect() {
+        // A hostile/broken server: accepts each connection and drops it
+        // without reading. Clients see EOF (or RST) mid-roundtrip; the
+        // Client must discard the dead stream and reconnect for the next
+        // arrival rather than wedging on a stale socket.
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        listener.set_nonblocking(true).expect("nonblocking");
+        let addr = listener.local_addr().expect("addr").to_string();
+        let req = render_predict("m", b"1,-1", "text/plain");
+        let stop = AtomicBool::new(false);
+        let rep = std::thread::scope(|s| {
+            s.spawn(|| {
+                while !stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((conn, _)) => drop(conn), // immediate close
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            });
+            let rep = open_loop(&addr, &req, 200.0, Duration::from_millis(120), 2);
+            stop.store(true, Ordering::Relaxed);
+            rep
+        });
+        assert_eq!(rep.ok, 0, "a server that never answers yields no 200s: {rep:?}");
+        assert_eq!(
+            rep.io_errors, rep.sent,
+            "every accept-then-close roundtrip must be an io_error: {rep:?}"
+        );
+        assert!(
+            rep.sent >= 2,
+            "the client must keep reconnecting after resets, not stop at one: {rep:?}"
+        );
+    }
+}

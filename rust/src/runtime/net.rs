@@ -615,6 +615,16 @@ fn respond(
                         stream.write_all(writer.render(504, &[], body.as_bytes(), keep))?;
                         Ok(keep)
                     }
+                    Err(e) if e.msg.contains("panicked") => {
+                        // the batch worker panicked mid-forward: the fault
+                        // is contained (worker respawned, counted in
+                        // /stats) and THIS request failed — a server
+                        // error, not a drain, so keep-alive survives
+                        sh.count_status(500);
+                        body.push_str("{\"error\":\"batch worker panicked; request not served\"}\n");
+                        stream.write_all(writer.render(500, &[], body.as_bytes(), keep))?;
+                        Ok(keep)
+                    }
                     Err(_) => {
                         sh.count_status(503);
                         body.push_str("{\"error\":\"server shutting down\"}\n");
@@ -689,6 +699,14 @@ fn respond_aux(
                 st.server_err,
                 st.aborted
             );
+            // contained batch-worker panics, summed across models
+            let panics: usize = sh
+                .registry
+                .names()
+                .iter()
+                .map(|n| sh.registry.get(n).expect("registered").stats().worker_panics)
+                .sum();
+            let _ = write!(body, ",\"worker_panics\":{panics}");
             // per-worker GraphScratch footprints per model (bytes; zero
             // until a worker has run its first batch)
             let mut total = 0usize;

@@ -60,8 +60,8 @@ impl Default for ServeConfig {
     }
 }
 
-/// Serving error (bad request shape, server shut down, …).
-#[derive(Debug)]
+/// Serving error (bad request shape, server shut down, worker panic, …).
+#[derive(Debug, Clone)]
 pub struct ServeError {
     pub msg: String,
 }
@@ -111,9 +111,11 @@ pub struct Response {
     pub class: usize,
 }
 
-/// Handle to an in-flight request.
+/// Handle to an in-flight request. The channel carries a `Result` so a
+/// worker that panics mid-batch can still answer its in-flight requests
+/// with an error instead of silently dropping the sender.
 pub struct Pending {
-    rx: mpsc::Receiver<Response>,
+    rx: mpsc::Receiver<Result<Response, ServeError>>,
 }
 
 impl Pending {
@@ -121,12 +123,14 @@ impl Pending {
     pub fn wait(self) -> Result<Response, ServeError> {
         self.rx
             .recv()
-            .map_err(|_| ServeError::new("server shut down before answering"))
+            .map_err(|_| ServeError::new("server shut down before answering"))?
     }
 
-    /// Non-blocking poll.
+    /// Non-blocking poll. An errored request (worker panic) reads as
+    /// `None` here — use [`Self::wait`]/[`Self::wait_timeout`] where the
+    /// distinction matters.
     pub fn try_wait(&self) -> Option<Response> {
-        self.rx.try_recv().ok()
+        self.rx.try_recv().ok().and_then(|r| r.ok())
     }
 
     /// Deadline-bounded wait: `Ok(None)` when `timeout` expires first —
@@ -135,7 +139,7 @@ impl Pending {
     /// HTTP front-end maps `None` to `504`.
     pub fn wait_timeout(self, timeout: Duration) -> Result<Option<Response>, ServeError> {
         match self.rx.recv_timeout(timeout) {
-            Ok(r) => Ok(Some(r)),
+            Ok(r) => Ok(Some(r?)),
             Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 Err(ServeError::new("server shut down before answering"))
@@ -151,6 +155,9 @@ pub struct ServerStats {
     pub requests: usize,
     /// Batched forwards executed.
     pub batches: usize,
+    /// Worker panics contained: the batch's requests were answered with
+    /// an error and the worker respawned its scratch state in place.
+    pub worker_panics: usize,
 }
 
 impl ServerStats {
@@ -166,7 +173,7 @@ impl ServerStats {
 
 struct Request {
     words: Vec<u64>,
-    tx: mpsc::Sender<Response>,
+    tx: mpsc::Sender<Result<Response, ServeError>>,
 }
 
 struct Shared {
@@ -178,6 +185,12 @@ struct Shared {
     shutdown: AtomicBool,
     served: AtomicUsize,
     batches: AtomicUsize,
+    /// Batches whose forward panicked (contained; see [`worker_loop`]).
+    worker_panics: AtomicUsize,
+    /// Fault-injection hook: each batch decrements this and panics while
+    /// it is non-zero. Test-only by contract, compiled in always so the
+    /// integration suite (no cfg(test) in the lib) can reach it.
+    panic_inject: AtomicUsize,
     /// Per-worker [`GraphScratch::scratch_bytes`], refreshed after every
     /// batched forward (scratch only grows, so this is the worker's peak
     /// footprint) — surfaced in HTTP `/stats` and the serve benches.
@@ -211,6 +224,8 @@ impl NativeServer {
             shutdown: AtomicBool::new(false),
             served: AtomicUsize::new(0),
             batches: AtomicUsize::new(0),
+            worker_panics: AtomicUsize::new(0),
+            panic_inject: AtomicUsize::new(0),
             scratch_bytes,
         });
         let workers = (0..shared.cfg.workers)
@@ -345,7 +360,16 @@ impl NativeServer {
         ServerStats {
             requests: self.shared.served.load(Ordering::SeqCst),
             batches: self.shared.batches.load(Ordering::SeqCst),
+            worker_panics: self.shared.worker_panics.load(Ordering::SeqCst),
         }
+    }
+
+    /// Fault-injection hook for the test suites: the next `n` batched
+    /// forwards (across all workers) panic mid-batch. Not for production
+    /// use.
+    #[doc(hidden)]
+    pub fn inject_panics(&self, n: usize) {
+        self.shared.panic_inject.fetch_add(n, Ordering::SeqCst);
     }
 
     /// Stop accepting work, drain the queue, join the workers and return
@@ -432,23 +456,50 @@ fn worker_loop(sh: &Shared, idx: usize) {
         }
         sh.not_full.notify_all();
 
-        // one packed forward over the assembled batch: gather request rows
-        // straight into the reused input matrix (single copy, no staging)
-        x.assign_packed_rows(d, batch.iter().map(|r| r.words.as_slice()));
-        debug_assert_eq!(x.rows, batch.len());
-        sh.model.forward_bits_into(&x, &mut scratch);
-        sh.scratch_bytes[idx].store(scratch.scratch_bytes(), Ordering::Relaxed);
-        let logits = &scratch.logits;
-        logits.argmax_rows_into(&mut classes);
-        let n_out = logits.cols();
-        sh.served.fetch_add(batch.len(), Ordering::SeqCst);
-        sh.batches.fetch_add(1, Ordering::SeqCst);
-        for (i, req) in batch.drain(..).enumerate() {
-            // the response row is the one allocation left on this path:
-            // it is owned by the client and crosses the channel
-            let row = logits.data[i * n_out..(i + 1) * n_out].to_vec();
-            // a client that dropped its Pending is not an error
-            let _ = req.tx.send(Response { logits: row, class: classes[i] });
+        // one packed forward over the assembled batch, behind a panic
+        // boundary: a poisoned model input or a kernel bug must cost ONE
+        // batch, not the worker thread (a dead worker would silently
+        // shrink capacity until the server wedges).
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if sh
+                .panic_inject
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+                .is_ok()
+            {
+                panic!("injected test panic");
+            }
+            // gather request rows straight into the reused input matrix
+            // (single copy, no staging)
+            x.assign_packed_rows(d, batch.iter().map(|r| r.words.as_slice()));
+            debug_assert_eq!(x.rows, batch.len());
+            sh.model.forward_bits_into(&x, &mut scratch);
+            sh.scratch_bytes[idx].store(scratch.scratch_bytes(), Ordering::Relaxed);
+            let logits = &scratch.logits;
+            logits.argmax_rows_into(&mut classes);
+            let n_out = logits.cols();
+            sh.served.fetch_add(batch.len(), Ordering::SeqCst);
+            sh.batches.fetch_add(1, Ordering::SeqCst);
+            for (i, req) in batch.drain(..).enumerate() {
+                // the response row is the one allocation left on this path:
+                // it is owned by the client and crosses the channel
+                let row = logits.data[i * n_out..(i + 1) * n_out].to_vec();
+                // a client that dropped its Pending is not an error
+                let _ = req.tx.send(Ok(Response { logits: row, class: classes[i] }));
+            }
+        }));
+        if outcome.is_err() {
+            // contain: answer every in-flight request with an error, count
+            // the fault, and respawn the worker state in place — the
+            // half-written scratch/input buffers are unwind debris.
+            sh.worker_panics.fetch_add(1, Ordering::SeqCst);
+            sh.served.fetch_add(batch.len(), Ordering::SeqCst);
+            for req in batch.drain(..) {
+                let _ = req
+                    .tx
+                    .send(Err(ServeError::new("worker panicked during batched forward")));
+            }
+            scratch = GraphScratch::new();
+            x = BitMatrix::zeros(0, 0);
         }
     }
 }

@@ -1,0 +1,103 @@
+//! CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320), table-driven and
+//! dependency-free.
+//!
+//! One implementation shared by the checkpoint format (per-record integrity
+//! trailer, DESIGN.md §Training-system) and the distributed-training wire
+//! protocol (per-frame checksum, DESIGN.md §Distributed-Training). The
+//! variant matches zlib's `crc32()` so externally produced checksums can be
+//! cross-checked with any standard tool.
+
+/// 256-entry lookup table for the reflected IEEE polynomial, built at
+/// compile time so the hot path is a single table index per byte.
+const TABLE: [u32; 256] = build_table();
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// Incremental CRC-32 state. `Crc32::new().update(a).update(b).finish()`
+/// equals [`crc32`] over the concatenation of `a` and `b`.
+#[derive(Debug, Clone, Copy)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Crc32 {
+    pub fn new() -> Self {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    /// Fold `bytes` into the running checksum.
+    pub fn update(mut self, bytes: &[u8]) -> Self {
+        for &b in bytes {
+            self.state = TABLE[((self.state ^ b as u32) & 0xFF) as usize] ^ (self.state >> 8);
+        }
+        self
+    }
+
+    /// Final checksum value.
+    pub fn finish(self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+/// One-shot CRC-32 of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    Crc32::new().update(bytes).finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Reference values from zlib / RFC 3720 appendix examples.
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+        assert_eq!(crc32(&[0u8; 32]), 0x190A_55AD);
+        assert_eq!(crc32(&[0xFFu8; 32]), 0xFF6C_AB0B);
+    }
+
+    #[test]
+    fn incremental_equals_one_shot() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        let whole = crc32(&data);
+        for split in [0, 1, 7, 499, 999, 1000] {
+            let (a, b) = data.split_at(split);
+            assert_eq!(Crc32::new().update(a).update(b).finish(), whole);
+        }
+    }
+
+    #[test]
+    fn detects_single_bit_flips() {
+        let data = b"bold checkpoint record payload".to_vec();
+        let base = crc32(&data);
+        for i in 0..data.len() {
+            for bit in 0..8 {
+                let mut corrupt = data.clone();
+                corrupt[i] ^= 1 << bit;
+                assert_ne!(crc32(&corrupt), base, "flip at byte {i} bit {bit} undetected");
+            }
+        }
+    }
+}

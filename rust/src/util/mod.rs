@@ -7,9 +7,12 @@
 //! Likewise no `rayon`: [`pool`] is a std-only persistent thread pool that
 //! every hot kernel shards over (DESIGN.md §Parallelism).
 
+pub mod crc32;
 pub mod pool;
 pub mod rng;
+pub mod signal;
 pub mod timer;
 
+pub use crc32::{crc32, Crc32};
 pub use rng::Rng;
 pub use timer::Timer;

@@ -70,6 +70,15 @@ pub fn num_threads() -> usize {
     })
 }
 
+/// Fair intra-op thread budget for each of `n_children` child PROCESSES
+/// sharing this machine (e.g. `bold train-dist --spawn N` workers): the
+/// process-level face of the [`BudgetGuard`] composition rule. Children
+/// receive it via `BOLD_NUM_THREADS`, since a child's pool cannot consult
+/// the parent's thread-local budget.
+pub fn child_budget(n_children: usize) -> usize {
+    (num_threads() / n_children.max(1)).max(1)
+}
+
 fn pool() -> &'static Pool {
     POOL.get_or_init(|| {
         let queue: &'static Queue = Box::leak(Box::new(Queue {
@@ -399,6 +408,17 @@ impl<T> JobQueue<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn child_budget_splits_the_pool_fairly() {
+        let n = num_threads();
+        assert_eq!(child_budget(1), n.max(1));
+        assert!(child_budget(2) >= 1);
+        assert!(child_budget(2) <= n);
+        // degenerate inputs never hand out a zero budget
+        assert_eq!(child_budget(0), n.max(1));
+        assert_eq!(child_budget(usize::MAX), 1);
+    }
 
     #[test]
     fn run_scoped_executes_every_task_with_borrows() {

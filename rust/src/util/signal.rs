@@ -1,0 +1,108 @@
+//! Zero-dependency SIGINT/SIGTERM shutdown flag.
+//!
+//! `bold serve-http` and `bold train-dist` are long-running foreground
+//! processes; Ctrl-C under load must trigger the same graceful drain as
+//! `POST /admin/shutdown` instead of tearing connections mid-response. The
+//! offline registry has no `signal-hook` or `libc` crate, so on Unix we
+//! declare the two C symbols we need (`signal`, `raise` — already linked
+//! into every std binary) ourselves and install a handler that does the
+//! only async-signal-safe thing possible: set a static [`AtomicBool`]. The
+//! main loop polls [`triggered`] at its own cadence.
+//!
+//! Non-Unix targets compile to a no-op installer so the call sites stay
+//! unconditional.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static TRIGGERED: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+mod imp {
+    use super::*;
+
+    pub const SIGINT: i32 = 2;
+    pub const SIGTERM: i32 = 15;
+
+    // `sighandler_t` is `void (*)(int)`; `signal(2)` and `raise(3)` are in
+    // every libc that std itself links against, so no crate is needed.
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+        fn raise(signum: i32) -> i32;
+    }
+
+    extern "C" fn on_signal(_signum: i32) {
+        // Only async-signal-safe operation: a relaxed atomic store. The
+        // poller upgrades visibility with an Acquire load.
+        TRIGGERED.store(true, Ordering::Release);
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(SIGINT, on_signal as usize);
+            signal(SIGTERM, on_signal as usize);
+        }
+    }
+
+    /// Deliver `signum` to the current process (test hook).
+    pub fn raise_signal(signum: i32) {
+        unsafe {
+            raise(signum);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    pub const SIGINT: i32 = 2;
+    pub const SIGTERM: i32 = 15;
+    pub fn install() {}
+    pub fn raise_signal(_signum: i32) {}
+}
+
+pub use imp::{SIGINT, SIGTERM};
+
+/// Install the SIGINT/SIGTERM handler. Idempotent; call once at the top of
+/// a long-running command before entering its poll loop.
+pub fn install_shutdown_handler() {
+    imp::install();
+}
+
+/// True once SIGINT or SIGTERM has been received (sticky).
+pub fn triggered() -> bool {
+    TRIGGERED.load(Ordering::Acquire)
+}
+
+/// Reset the flag (tests only — production commands exit after a trigger).
+pub fn reset() {
+    TRIGGERED.store(false, Ordering::Release);
+}
+
+/// Send `signum` to the current process. Exposed for the integration tests
+/// that prove Ctrl-C drains gracefully without spawning a child process.
+pub fn raise_for_test(signum: i32) {
+    imp::raise_signal(signum);
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+
+    // Signal disposition is process-global state, so keep everything in
+    // one test to avoid cross-test races under the parallel harness.
+    #[test]
+    fn handler_sets_sticky_flag_for_int_and_term() {
+        install_shutdown_handler();
+        reset();
+        assert!(!triggered());
+
+        raise_for_test(SIGTERM);
+        assert!(triggered(), "SIGTERM must set the flag");
+        // Sticky: repeated polls still see it.
+        assert!(triggered());
+
+        reset();
+        raise_for_test(SIGINT);
+        assert!(triggered(), "SIGINT must set the flag");
+        reset();
+    }
+}

@@ -1,0 +1,366 @@
+//! Fault-injection suite for distributed training (ISSUE 8, DESIGN.md
+//! §Distributed-Training). The property under test is the strong one:
+//! the coordinator's final weights are **bit-identical** to the
+//! single-process `ParallelTrainer` reference no matter what faults the
+//! worker fleet suffers — a SIGKILLed worker process, a coordinator
+//! restart from a mid-run checkpoint, duplicate / torn / corrupt wire
+//! frames, or fewer live workers than shards.
+//!
+//! Worker processes are the real `bold train-dist --role worker` binary
+//! (`CARGO_BIN_EXE_bold`) where the fault is process death; scripted
+//! in-test peers speak `bold::coordinator::wire` directly where the
+//! fault is protocol-level.
+
+use bold::config::TrainConfig;
+use bold::coordinator::wire::{read_frame, write_frame, Msg};
+use bold::coordinator::{
+    apply_params_blob, compute_shard, run_coordinator, run_worker, DistConfig, JobSpec,
+    ParallelTrainer, TrainReport,
+};
+use bold::nn::{Layer, ParamRef, ParamStore, Sequential};
+use std::io::Write;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+fn small_cfg(workers: usize, steps: usize, seed: u64) -> TrainConfig {
+    TrainConfig {
+        model: "mlp".into(),
+        workers,
+        steps,
+        batch: 12,
+        train_size: 48,
+        val_size: 16,
+        lr_bool: 2.0,
+        cosine: true,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Test-tuned knobs: fast heartbeats, a deadline long enough that no
+/// shard is spuriously re-issued, and a give-up bound so a worker thread
+/// can never outlive its test by more than a few seconds.
+fn test_dcfg() -> DistConfig {
+    DistConfig {
+        heartbeat_ms: 50,
+        deadline_ms: 10_000,
+        backoff_base_ms: 10,
+        backoff_cap_ms: 100,
+        giveup_ms: 5_000,
+        ckpt_every: 0,
+        ckpt_path: None,
+        resume: false,
+    }
+}
+
+/// The single-process ground truth for `cfg`: report + leader model.
+fn reference(cfg: &TrainConfig) -> (TrainReport, Sequential) {
+    let spec = JobSpec::new(cfg.clone()).expect("valid job");
+    let (train, val) = spec.data();
+    let s2 = spec.clone();
+    let mut pt = ParallelTrainer::new(cfg.workers, cfg, move |_| s2.model());
+    let report = pt.fit(&train, &val, cfg, false);
+    (report, pt.replicas.swap_remove(0))
+}
+
+fn assert_params_bit_equal(a: &mut Sequential, b: &mut Sequential) {
+    let pa = a.params();
+    let pb = b.params();
+    assert_eq!(pa.len(), pb.len(), "param count diverged");
+    for (x, y) in pa.iter().zip(pb.iter()) {
+        match (x, y) {
+            (ParamRef::Bool { name, bits: ba }, ParamRef::Bool { bits: bb, .. }) => {
+                assert_eq!(ba.words, bb.words, "{name}: packed weights diverged");
+            }
+            (ParamRef::Real { name, w: wa }, ParamRef::Real { w: wb, .. }) => {
+                let (da, db): (Vec<u32>, Vec<u32>) = (
+                    wa.data.iter().map(|v| v.to_bits()).collect(),
+                    wb.data.iter().map(|v| v.to_bits()).collect(),
+                );
+                assert_eq!(da, db, "{name}: FP weights diverged");
+            }
+            _ => panic!("param kind mismatch"),
+        }
+    }
+}
+
+fn assert_losses_bit_equal(got: &[f32], want: &[f32], what: &str) {
+    let (dg, dw): (Vec<u32>, Vec<u32>) = (
+        got.iter().map(|l| l.to_bits()).collect(),
+        want.iter().map(|l| l.to_bits()).collect(),
+    );
+    assert_eq!(dg, dw, "{what}: loss curves must match bit-for-bit");
+}
+
+/// CLI argv for a real out-of-process worker: every field that feeds
+/// `JobSpec::config_hash` is forwarded explicitly so the child builds
+/// the exact same job.
+fn worker_args(cfg: &TrainConfig, addr: &str, wid: u64) -> Vec<String> {
+    let kv = [
+        ("role", "worker".to_string()),
+        ("connect", addr.to_string()),
+        ("worker-id", wid.to_string()),
+        ("seed", cfg.seed.to_string()),
+        ("batch", cfg.batch.to_string()),
+        ("steps", cfg.steps.to_string()),
+        ("train_size", cfg.train_size.to_string()),
+        ("val_size", cfg.val_size.to_string()),
+        ("classes", cfg.classes.to_string()),
+        ("workers", cfg.workers.to_string()),
+        ("lr_bool", cfg.lr_bool.to_string()),
+        ("lr_fp", cfg.lr_fp.to_string()),
+        ("cosine", cfg.cosine.to_string()),
+    ];
+    let mut args = vec!["train-dist".to_string()];
+    for (k, v) in kv {
+        args.push(format!("--{k}"));
+        args.push(v);
+    }
+    args
+}
+
+fn spawn_worker_process(cfg: &TrainConfig, addr: &str, wid: u64) -> std::process::Child {
+    std::process::Command::new(env!("CARGO_BIN_EXE_bold"))
+        .args(worker_args(cfg, addr, wid))
+        .env("BOLD_NUM_THREADS", "2")
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn bold worker")
+}
+
+fn tmp_ckpt(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("bold_dist_{tag}_{}.ckpt", std::process::id()))
+        .to_string_lossy()
+        .to_string()
+}
+
+/// Acceptance (a): a 3-worker-process run where one worker is SIGKILLed
+/// mid-run finishes with weights bit-identical to the in-process
+/// 3-worker `ParallelTrainer`.
+///
+/// The kill is made deterministic by sequencing, not sleeps: the victim
+/// is the ONLY worker until the step-1 checkpoint lands on disk, so at
+/// kill time it has provably joined and computed every shard of step 0,
+/// and ≥5 steps of the job remain for the replacements.
+#[test]
+fn sigkilled_worker_process_preserves_bit_exactness() {
+    let cfg = small_cfg(3, 6, 21);
+    let spec = JobSpec::new(cfg.clone()).expect("valid job");
+    let ckpt = tmp_ckpt("kill");
+    let _ = std::fs::remove_file(&ckpt);
+    let dcfg = DistConfig {
+        deadline_ms: 2_000,
+        ckpt_every: 1,
+        ckpt_path: Some(ckpt.clone()),
+        ..test_dcfg()
+    };
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+
+    let coord = {
+        let spec = spec.clone();
+        let dcfg = dcfg.clone();
+        std::thread::spawn(move || run_coordinator(&spec, &dcfg, listener, false))
+    };
+
+    let mut victim = spawn_worker_process(&cfg, &addr, 0);
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while std::fs::metadata(&ckpt).is_err() {
+        assert!(Instant::now() < deadline, "step-1 checkpoint never appeared");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    victim.kill().expect("SIGKILL worker 0");
+    let _ = victim.wait();
+
+    // replacement fleet carries steps 1..6 to completion
+    let mut rest: Vec<_> = (1..3).map(|wid| spawn_worker_process(&cfg, &addr, wid)).collect();
+    let outcome = coord.join().expect("coordinator thread").expect("coordinator run");
+    for c in &mut rest {
+        let _ = c.wait();
+    }
+    let _ = std::fs::remove_file(&ckpt);
+
+    assert!(outcome.stats.joins >= 3, "all three workers joined: {:?}", outcome.stats);
+    assert!(outcome.stats.removed >= 1, "the SIGKILL must be noticed: {:?}", outcome.stats);
+
+    let (want, mut ref_model) = reference(&cfg);
+    let mut got_model = outcome.model;
+    assert_params_bit_equal(&mut got_model, &mut ref_model);
+    assert_losses_bit_equal(&outcome.report.losses, &want.losses, "kill run");
+    assert_eq!(outcome.report.val_acc, want.val_acc);
+}
+
+/// Acceptance (b): a coordinator killed after step 3 of an 8-step job
+/// restarts from its checkpoint (fresh port, fresh workers) and the
+/// combined run is bit-identical to the uninterrupted 8-step reference.
+///
+/// `cosine: false` keeps the LR schedule prefix-stable (a cosine decay
+/// is parameterized on the total step count, which differs between the
+/// truncated first run and the reference); everything else — sampler
+/// cursor, Adam moments and `adam_t`, Boolean accumulators — rides in
+/// the checkpoint.
+#[test]
+fn coordinator_restart_from_checkpoint_is_bit_exact() {
+    let mut cfg_a = small_cfg(2, 3, 22);
+    cfg_a.cosine = false;
+    let mut cfg_b = cfg_a.clone();
+    cfg_b.steps = 8;
+    let ckpt = tmp_ckpt("resume");
+    let _ = std::fs::remove_file(&ckpt);
+
+    // run A: steps 0..3, checkpoint cursor lands at 3
+    let spec_a = JobSpec::new(cfg_a.clone()).expect("valid job");
+    let dcfg_a = DistConfig { ckpt_every: 2, ckpt_path: Some(ckpt.clone()), ..test_dcfg() };
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind A");
+    let addr = listener.local_addr().expect("addr A").to_string();
+    let outcome_a = std::thread::scope(|s| {
+        for wid in 0..2u64 {
+            let (spec, dcfg, addr) = (spec_a.clone(), dcfg_a.clone(), addr.clone());
+            s.spawn(move || run_worker(&spec, &addr, &dcfg, wid, false));
+        }
+        run_coordinator(&spec_a, &dcfg_a, listener, false).expect("run A")
+    });
+    assert_eq!(outcome_a.start_step, 0);
+    assert!(std::fs::metadata(&ckpt).is_ok(), "run A must leave a checkpoint");
+
+    // run B: resume at 3, continue to 8 — new port, new worker fleet
+    let spec_b = JobSpec::new(cfg_b.clone()).expect("valid job");
+    let dcfg_b =
+        DistConfig { ckpt_path: Some(ckpt.clone()), resume: true, ..test_dcfg() };
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind B");
+    let addr = listener.local_addr().expect("addr B").to_string();
+    let outcome_b = std::thread::scope(|s| {
+        for wid in 10..12u64 {
+            let (spec, dcfg, addr) = (spec_b.clone(), dcfg_b.clone(), addr.clone());
+            s.spawn(move || run_worker(&spec, &addr, &dcfg, wid, false));
+        }
+        run_coordinator(&spec_b, &dcfg_b, listener, false).expect("run B")
+    });
+    let _ = std::fs::remove_file(&ckpt);
+    assert_eq!(outcome_b.start_step, 3, "run B must resume at the cursor");
+
+    let (want, mut ref_model) = reference(&cfg_b);
+    assert_losses_bit_equal(&outcome_a.report.losses, &want.losses[..3], "pre-restart prefix");
+    assert_losses_bit_equal(&outcome_b.report.losses, &want.losses[3..], "post-restart suffix");
+    let mut got_model = outcome_b.model;
+    assert_params_bit_equal(&mut got_model, &mut ref_model);
+    assert_eq!(outcome_b.report.val_acc, want.val_acc);
+}
+
+/// Acceptance (c): duplicate shard results and torn/corrupt wire frames
+/// are rejected without corrupting vote state. A scripted peer speaks
+/// the protocol by hand: it double-sends a result inside one step
+/// (idempotence), tears a connection mid-frame, rejoins and feeds a
+/// corrupt-magic frame (severed), and a real worker then finishes the
+/// job — still bit-identical to the reference.
+#[test]
+fn duplicate_and_torn_frames_leave_vote_state_intact() {
+    let cfg = small_cfg(2, 4, 23);
+    let spec = JobSpec::new(cfg.clone()).expect("valid job");
+    let dcfg = test_dcfg();
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+
+    let outcome = std::thread::scope(|s| {
+        let coord = {
+            let (spec, dcfg) = (spec.clone(), dcfg.clone());
+            s.spawn(move || run_coordinator(&spec, &dcfg, listener, false))
+        };
+
+        // --- connection 1: honest step 0, but the first shard's result
+        // is sent TWICE, then the connection dies on a torn frame ---
+        let (train, _val) = spec.data();
+        let mut model = spec.model();
+        let mut store = ParamStore::new();
+        let mut s1 = TcpStream::connect(&addr).expect("conn 1");
+        write_frame(&mut s1, &Msg::Hello { worker_id: 7, config_hash: spec.config_hash() })
+            .expect("hello 1");
+        match read_frame(&mut s1).expect("sync 0") {
+            Msg::Sync { step, params } => {
+                assert_eq!(step, 0);
+                let mut p = model.params();
+                apply_params_blob(&mut p, &params).expect("install step-0 weights");
+            }
+            m => panic!("expected Sync, got {m:?}"),
+        }
+        let mut computed = Vec::new();
+        for _ in 0..2 {
+            match read_frame(&mut s1).expect("assign") {
+                Msg::Assign { step, shard_id, total, indices } => {
+                    assert_eq!(step, 0);
+                    let (loss, correct, grads) =
+                        compute_shard(&mut model, &mut store, &train, &indices, total);
+                    computed.push(Msg::ShardResult { step, shard_id, loss, correct, grads });
+                }
+                m => panic!("expected Assign, got {m:?}"),
+            }
+        }
+        write_frame(&mut s1, &computed[0]).expect("result 0");
+        write_frame(&mut s1, &computed[0].clone()).expect("duplicate of result 0");
+        write_frame(&mut s1, &computed[1]).expect("result 1");
+        // torn frame: a few header bytes, then gone
+        let _ = s1.write_all(&[0xB0, 0x1D, 0xD1]);
+        let _ = s1.shutdown(Shutdown::Both);
+        drop(s1);
+
+        // --- connection 2: valid rejoin, then a corrupt-magic frame —
+        // the coordinator must sever it without touching vote state ---
+        let mut s2 = TcpStream::connect(&addr).expect("conn 2");
+        write_frame(&mut s2, &Msg::Hello { worker_id: 7, config_hash: spec.config_hash() })
+            .expect("hello 2");
+        match read_frame(&mut s2).expect("rejoin sync") {
+            // usually step 1 (step 0 commits off conn 1's results), but the
+            // join can race the commit — either way weights arrive first
+            Msg::Sync { step, .. } => assert!(step <= 1, "unexpected sync step {step}"),
+            m => panic!("expected Sync, got {m:?}"),
+        }
+        s2.write_all(&[0xAB; 12]).expect("corrupt frame");
+        let _ = s2.shutdown(Shutdown::Both);
+        drop(s2);
+
+        // --- connection 3: a real worker finishes steps 1..4 ---
+        let shards = run_worker(&spec, &addr, &dcfg, 7, false).expect("recovery worker");
+        assert!(shards >= 6, "steps 1..4 × 2 shards re-run after the faults: {shards}");
+        coord.join().expect("coordinator thread").expect("coordinator run")
+    });
+
+    let st = &outcome.stats;
+    assert!(st.duplicates >= 1, "double-sent result must be dropped: {st:?}");
+    assert!(st.corrupt_frames >= 1, "corrupt magic must be counted: {st:?}");
+    assert!(st.removed >= 2, "torn and corrupt peers must be severed: {st:?}");
+    assert!(st.reconnects >= 2, "worker 7 rejoined twice: {st:?}");
+
+    let (want, mut ref_model) = reference(&cfg);
+    let mut got_model = outcome.model;
+    assert_params_bit_equal(&mut got_model, &mut ref_model);
+    assert_losses_bit_equal(&outcome.report.losses, &want.losses, "fault run");
+    assert_eq!(outcome.report.val_acc, want.val_acc);
+}
+
+/// Graceful degradation: 4 shards served by only 2 live workers must
+/// produce exactly the 4-worker reference — the shard count, not the
+/// fleet size, anchors determinism.
+#[test]
+fn fewer_live_workers_than_shards_is_bit_exact() {
+    let cfg = small_cfg(4, 3, 24);
+    let spec = JobSpec::new(cfg.clone()).expect("valid job");
+    let dcfg = test_dcfg();
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+
+    let outcome = std::thread::scope(|s| {
+        for wid in 0..2u64 {
+            let (spec, dcfg, addr) = (spec.clone(), dcfg.clone(), addr.clone());
+            s.spawn(move || run_worker(&spec, &addr, &dcfg, wid, false));
+        }
+        run_coordinator(&spec, &dcfg, listener, false).expect("coordinator run")
+    });
+
+    let (want, mut ref_model) = reference(&cfg);
+    let mut got_model = outcome.model;
+    assert_params_bit_equal(&mut got_model, &mut ref_model);
+    assert_losses_bit_equal(&outcome.report.losses, &want.losses, "degraded run");
+    assert_eq!(outcome.report.val_acc, want.val_acc);
+}

@@ -10,7 +10,9 @@
 
 use bold::models::{boolean_mlp, vgg_small, MlpConfig, VggConfig};
 use bold::nn::{Layer, Value};
-use bold::runtime::{HttpConfig, HttpLimits, HttpServer, ModelRegistry, PackedGraph, ServeConfig};
+use bold::runtime::{
+    HttpConfig, HttpLimits, HttpServer, ModelRegistry, NativeServer, PackedGraph, ServeConfig,
+};
 use bold::tensor::Tensor;
 use bold::util::Rng;
 use std::io::{Read, Write};
@@ -498,6 +500,72 @@ fn graceful_drain_answers_in_flight_requests() {
 
     let stats = server.shutdown();
     assert!(stats.ok >= 3, "all three requests answered: {stats:?}");
+}
+
+#[test]
+fn worker_panic_is_contained_and_worker_survives() {
+    // Direct NativeServer path: a panic inside the batched forward must
+    // answer the batch's in-flight requests with an error (not drop
+    // their senders), bump the worker_panics counter, and leave the
+    // worker thread alive with rebuilt scratch state.
+    let server = NativeServer::start(
+        mlp_graph(),
+        ServeConfig {
+            workers: 1,
+            max_batch: 4,
+            queue_cap: 16,
+            batch_window: Duration::from_micros(100),
+        },
+    );
+    let features: Vec<f32> =
+        (0..D_IN).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+
+    // sanity: clean request before the fault
+    server.submit(&features).expect("submit").wait().expect("pre-fault request");
+
+    server.inject_panics(1);
+    let err = server
+        .submit(&features)
+        .expect("submit")
+        .wait()
+        .expect_err("request in the panicked batch must get an error, not hang");
+    assert!(err.msg.contains("panicked"), "error must name the panic: {}", err.msg);
+
+    // the single worker must have survived the panic
+    for _ in 0..3 {
+        server.submit(&features).expect("submit").wait().expect("post-panic request");
+    }
+    let stats = server.stats();
+    assert!(stats.worker_panics >= 1, "contained panic must be counted: {stats:?}");
+    drop(server);
+}
+
+#[test]
+fn worker_panic_maps_to_500_and_stats_json() {
+    // HTTP path: the panicked batch's requests answer 500 (keep-alive
+    // preserved — the connection is healthy, the batch was not), later
+    // requests on the same connection succeed, and /stats exposes the
+    // worker_panics counter.
+    let (server, addr) = start(mlp_graph(), default_serve(), default_http());
+    server.registry().get("m").expect("registered").inject_panics(1);
+
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(&predict_raw(D_IN)).expect("send");
+    let resp = read_framed(&mut s);
+    assert_status(&resp, 500, "request in panicked batch");
+    assert!(resp.contains("panicked"), "500 body names the cause: {resp}");
+
+    // same keep-alive connection serves cleanly afterwards
+    s.write_all(&predict_raw(D_IN)).expect("send after panic");
+    let resp = read_framed(&mut s);
+    assert_status(&resp, 200, "request after contained panic");
+
+    let resp = roundtrip_to_eof(&addr, b"GET /stats HTTP/1.1\r\nConnection: close\r\n\r\n");
+    assert_status(&resp, 200, "stats");
+    assert!(resp.contains("\"worker_panics\":1"), "panic counter in /stats: {resp}");
+    assert_healthy(&addr, D_IN);
+    drop(server);
 }
 
 #[test]
