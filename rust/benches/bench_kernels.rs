@@ -19,6 +19,7 @@
 
 use bold::nn::{ParamRef, ParamStore};
 use bold::optim::BooleanOptimizer;
+use bold::runtime::{PackedLayer, PackedLut};
 use bold::tensor::simd::{self, Backend};
 use bold::tensor::{BitMatrix, Tensor};
 use bold::util::{pool, Rng, Timer};
@@ -179,6 +180,31 @@ fn main() {
         let mut bits_out = BitMatrix::zeros(0, 0);
         ab_row(&mut recs, "xnor_threshold", dims, macs, || {
             x.xnor_threshold_into(&w, None, 0.0, &mut bits_out);
+            std::hint::black_box(&bits_out);
+        });
+    }
+
+    println!("\n-- lut-fold vs popcount (low fan-in layers, DESIGN.md §LUT-Folding)");
+    for k in [2usize, 4, 6, 8, 10] {
+        let (b, n) = (8192usize, 256usize);
+        let x = BitMatrix::random(b, k, &mut rng);
+        let layer = PackedLayer {
+            weights: BitMatrix::random(n, k, &mut rng),
+            bias: None,
+            threshold: 0.5,
+            input_mask: None,
+        };
+        let lut = PackedLut::from_linear(&layer);
+        let macs = (b * n * k) as f64;
+        let dims = format!("{b}x{n}xk{k}");
+        let mut bits_out = BitMatrix::zeros(0, 0);
+        row(&mut recs, "xnor_threshold_lowfanin", dims.clone(), macs, || {
+            layer.apply_into(&x, &mut bits_out);
+            std::hint::black_box(&bits_out);
+        });
+        let (mut cols, mut buf, mut tile) = (Vec::new(), Vec::new(), Vec::new());
+        row(&mut recs, "lut_fold", dims, macs, || {
+            lut.apply_linear_into(&x, &mut bits_out, &mut cols, &mut buf, &mut tile);
             std::hint::black_box(&bits_out);
         });
     }

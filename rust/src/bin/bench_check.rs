@@ -22,8 +22,11 @@
 //!   skipped: freshly added rows are committed with zeros and become
 //!   binding once a measured run lands (EXPERIMENTS.md `_fill_`
 //!   convention);
-//! * rows present on only one side are reported but never fail the
-//!   check (benches gain/drop rows across PRs).
+//! * rows present on only one side never fail the check (benches
+//!   gain/drop rows across PRs) — but a current row missing from the
+//!   baseline is surfaced as a counted **warning**, so a bench section
+//!   landing without its zero-sentinel baseline rows is visible in CI
+//!   logs instead of silently unchecked.
 //!
 //! Zero dependencies: the "parser" is a field extractor good for exactly
 //! the flat records our emitters write, with unit tests pinning that
@@ -106,13 +109,16 @@ struct Regression {
     ratio: f64,
 }
 
-/// Compare and collect regressions beyond `tol` (0.20 = 20%).
-fn compare(baseline: &str, current: &str, tol: f64) -> (Vec<Regression>, usize, usize) {
+/// Compare and collect regressions beyond `tol` (0.20 = 20%). The last
+/// element counts current rows absent from the baseline — unchecked
+/// work the baseline should grow sentinel rows for.
+fn compare(baseline: &str, current: &str, tol: f64) -> (Vec<Regression>, usize, usize, usize) {
     let base = parse_records(baseline);
     let cur = parse_records(current);
     let mut regressions = Vec::new();
     let mut checked = 0usize;
     let mut skipped = 0usize;
+    let mut unbaselined = 0usize;
     for (id, bline) in &base {
         let Some(cline) = cur.get(id) else {
             println!("note: row only in baseline (skipped): {id}");
@@ -137,15 +143,27 @@ fn compare(baseline: &str, current: &str, tol: f64) -> (Vec<Regression>, usize, 
     }
     for id in cur.keys() {
         if !base.contains_key(id) {
-            println!("note: new row not in baseline (unchecked): {id}");
+            println!("warning: current row not in baseline (unchecked): {id}");
+            unbaselined += 1;
         }
     }
-    (regressions, checked, skipped)
+    (regressions, checked, skipped, unbaselined)
 }
 
 /// Structural validation of a committed baseline: parseable rows, each
-/// with an identity and at least one known metric.
+/// with an identity and at least one known metric, and no record-shaped
+/// line (`{...`) that the extractor fails to identify — a malformed row
+/// would otherwise be silently skipped by every future comparison.
 fn validate(path: &str, text: &str) -> Result<usize, String> {
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim().trim_end_matches(',');
+        if line.starts_with('{') && identity(line).is_none() {
+            return Err(format!(
+                "{path}: line {} looks like a record but has no identity fields: {line}",
+                ln + 1
+            ));
+        }
+    }
     let recs = parse_records(text);
     if recs.is_empty() {
         return Err(format!("{path}: no parseable records"));
@@ -236,10 +254,10 @@ fn main() -> ExitCode {
             return ExitCode::from(2);
         }
     };
-    let (regressions, checked, skipped) = compare(&btext, &ctext, tolerance);
+    let (regressions, checked, skipped, unbaselined) = compare(&btext, &ctext, tolerance);
     println!(
         "bench_check: {checked} metric(s) compared, {skipped} unfilled baseline metric(s) \
-         skipped, tolerance {:.0}%",
+         skipped, {unbaselined} current row(s) without a baseline, tolerance {:.0}%",
         tolerance * 100.0
     );
     if regressions.is_empty() {
@@ -296,7 +314,7 @@ mod tests {
     #[test]
     fn passes_within_tolerance() {
         let cur = SERVE.replace("\"req_per_s\":100000", "\"req_per_s\":85000");
-        let (regs, checked, _) = compare(SERVE, &cur, 0.20);
+        let (regs, checked, _, _) = compare(SERVE, &cur, 0.20);
         assert!(regs.is_empty(), "15% drop is within 20% tolerance");
         assert!(checked >= 3);
     }
@@ -304,7 +322,7 @@ mod tests {
     #[test]
     fn fails_beyond_tolerance_throughput() {
         let cur = SERVE.replace("\"req_per_s\":100000", "\"req_per_s\":70000");
-        let (regs, _, _) = compare(SERVE, &cur, 0.20);
+        let (regs, _, _, _) = compare(SERVE, &cur, 0.20);
         assert_eq!(regs.len(), 1);
         assert_eq!(regs[0].metric, "req_per_s");
     }
@@ -312,7 +330,7 @@ mod tests {
     #[test]
     fn fails_on_latency_increase() {
         let cur = KERNELS.replace("\"ns_per_iter\":1200.0", "\"ns_per_iter\":2000.0");
-        let (regs, _, _) = compare(KERNELS, &cur, 0.20);
+        let (regs, _, _, _) = compare(KERNELS, &cur, 0.20);
         // ns_per_iter 1200 -> 2000 is a 40% slowdown; gops unchanged
         assert!(regs.iter().any(|r| r.metric == "ns_per_iter"));
     }
@@ -321,7 +339,7 @@ mod tests {
     fn zero_baseline_is_unfilled_sentinel() {
         let base = SERVE.replace("\"req_per_s\":100000", "\"req_per_s\":0");
         let cur = SERVE.replace("\"req_per_s\":100000", "\"req_per_s\":1");
-        let (regs, _, skipped) = compare(&base, &cur, 0.20);
+        let (regs, _, skipped, _) = compare(&base, &cur, 0.20);
         assert!(regs.is_empty(), "zero baseline must be skipped, not compared");
         assert!(skipped >= 1);
     }
@@ -331,7 +349,7 @@ mod tests {
         // 262144 -> 393216 is +50% peak scratch: a memory regression,
         // gated exactly like a latency increase
         let cur = SERVE.replace("\"scratch_bytes\":262144", "\"scratch_bytes\":393216");
-        let (regs, _, _) = compare(SERVE, &cur, 0.20);
+        let (regs, _, _, _) = compare(SERVE, &cur, 0.20);
         assert_eq!(regs.len(), 1);
         assert_eq!(regs[0].metric, "scratch_bytes");
     }
@@ -339,7 +357,7 @@ mod tests {
     #[test]
     fn scratch_shrink_is_not_a_regression() {
         let cur = SERVE.replace("\"scratch_bytes\":262144", "\"scratch_bytes\":131072");
-        let (regs, _, _) = compare(SERVE, &cur, 0.20);
+        let (regs, _, _, _) = compare(SERVE, &cur, 0.20);
         assert!(regs.is_empty(), "halving scratch must pass");
     }
 
@@ -347,7 +365,7 @@ mod tests {
     fn fails_on_live_slot_growth() {
         // liveness pass losing coloring quality (2 -> 4 buffers) fails
         let cur = SERVE.replace("\"slots_live\":2,", "\"slots_live\":4,");
-        let (regs, _, _) = compare(SERVE, &cur, 0.20);
+        let (regs, _, _, _) = compare(SERVE, &cur, 0.20);
         assert_eq!(regs.len(), 1);
         assert_eq!(regs[0].metric, "slots_live");
     }
@@ -359,15 +377,24 @@ mod tests {
         let cur = SERVE
             .replace("\"scratch_bytes\":0,", "\"scratch_bytes\":999999999,")
             .replace("\"slots_live\":0,", "\"slots_live\":64,");
-        let (regs, _, skipped) = compare(SERVE, &cur, 0.20);
+        let (regs, _, skipped, _) = compare(SERVE, &cur, 0.20);
         assert!(regs.is_empty(), "unfilled memory baselines must be skipped");
         assert!(skipped >= 2);
     }
 
     #[test]
-    fn missing_rows_never_fail() {
-        let (regs, _, _) = compare(SERVE, KERNELS, 0.20);
+    fn missing_rows_never_fail_but_are_counted() {
+        // the KERNELS row has no counterpart in the SERVE baseline: no
+        // regression, but it must surface as an unbaselined warning
+        let (regs, _, _, unbaselined) = compare(SERVE, KERNELS, 0.20);
         assert!(regs.is_empty());
+        assert_eq!(unbaselined, 1);
+    }
+
+    #[test]
+    fn fully_baselined_run_has_no_warnings() {
+        let (_, _, _, unbaselined) = compare(SERVE, SERVE, 0.20);
+        assert_eq!(unbaselined, 0);
     }
 
     #[test]
@@ -376,5 +403,14 @@ mod tests {
         assert!(validate("k", KERNELS).is_ok());
         assert!(validate("e", "[]\n").is_err());
         assert!(validate("j", "{\"bench\":\"x\",\"config\":\"y\"}").is_err());
+    }
+
+    #[test]
+    fn validate_flags_record_shaped_line_without_identity() {
+        // a truncated/hand-mangled row would be silently dropped by
+        // parse_records; --validate must reject the file instead
+        let text = format!("{KERNELS}\n{{\"kernel\":\"xnor_gemm\",\"threa\n");
+        let err = validate("m", &text).unwrap_err();
+        assert!(err.contains("no identity fields"), "got: {err}");
     }
 }

@@ -180,6 +180,67 @@ pub fn conv_energy(
     }
 }
 
+/// Word-access comparison of a LUT-folded Boolean layer
+/// (`PackedOp::Lut`, DESIGN.md §LUT-Folding) against the XNOR+popcount
+/// kernel it replaces, for one forward batch. Counts are 64-bit word
+/// accesses — the unit the serving kernels actually move — so the delta
+/// is the memory-traffic side of the NullaNet fold, independent of the
+/// per-level pJ cascade above.
+#[derive(Debug, Clone, Copy)]
+pub struct LutCost {
+    /// Per-neuron fan-in K.
+    pub fanin: usize,
+    /// Output neurons (linear rows or conv channels).
+    pub n_out: usize,
+    /// 64-lane evaluation groups (⌈lanes/64⌉ per image/batch tile).
+    pub groups: usize,
+    /// Word accesses of the popcount path across all groups.
+    pub popcount_accesses: f64,
+    /// Word accesses of the bitsliced table path across all groups.
+    pub lut_accesses: f64,
+    /// Truth-table storage the fold carries (2^K bits × n_out).
+    pub table_bytes: usize,
+}
+
+impl LutCost {
+    /// Access reduction in percent (negative when the fold loses).
+    pub fn saving_pct(&self) -> f64 {
+        100.0 * (1.0 - self.lut_accesses / self.popcount_accesses)
+    }
+}
+
+/// Access-count model of a fan-in-K layer over `lanes` evaluation lanes
+/// (batch rows for a linear fold, spatial positions per image for a
+/// conv fold). Per 64-lane group:
+///
+/// * popcount: every neuron streams the 64 packed input rows plus its
+///   weight row (`wpr = ⌈K/64⌉` words each) and writes one output word
+///   → `m·(64+1)·wpr + m`.
+/// * LUT: the K bit-columns are gathered once (64 reads each, shared by
+///   all neurons), each neuron streams its `⌈2^K/64⌉`-word table and
+///   writes one output word → `64·K + m·(tw + 1)`.
+///
+/// The gather term is neuron-independent, so the fold wins when m is
+/// large relative to K and loses for small m at high K — the "when it
+/// loses" boundary documented in DESIGN.md.
+pub fn lut_layer_cost(fanin: usize, n_out: usize, lanes: usize) -> LutCost {
+    assert!(fanin >= 1 && lanes >= 1, "lut cost needs fanin, lanes >= 1");
+    let groups = lanes.div_ceil(64);
+    let wpr = fanin.div_ceil(64);
+    let tw = (1usize << fanin).div_ceil(64);
+    let m = n_out as f64;
+    let popcount = m * (64 + 1) as f64 * wpr as f64 + m;
+    let lut = (64 * fanin) as f64 + m * (tw + 1) as f64;
+    LutCost {
+        fanin,
+        n_out,
+        groups,
+        popcount_accesses: popcount * groups as f64,
+        lut_accesses: lut * groups as f64,
+        table_bytes: n_out * tw * 8,
+    }
+}
+
 /// Energy of a linear layer (1×1-conv special case).
 pub fn linear_energy(
     n: usize,
@@ -243,6 +304,36 @@ mod tests {
         // FP32 gradients keep the BNN backward within a small factor of FP
         // (Table 2 reports ~44% for the full iteration incl. optimizer).
         assert!(bnn.total() > fp.total() * 0.2, "bnn bwd {} vs fp {}", bnn.total(), fp.total());
+    }
+
+    #[test]
+    fn lut_fold_cuts_accesses_for_a_converted_archetype() {
+        // the acceptance archetype: fan-in 9, 70 neurons, 130-row batch
+        // (the packed_graph LUT parity fixture) must be strictly cheaper
+        let c = lut_layer_cost(9, 70, 130);
+        assert!(
+            c.lut_accesses < c.popcount_accesses,
+            "lut {} vs popcount {}",
+            c.lut_accesses,
+            c.popcount_accesses
+        );
+        assert!(c.saving_pct() > 0.0);
+        assert_eq!(c.groups, 3);
+        assert_eq!(c.table_bytes, 70 * 8 * 8); // 2^9 bits = 8 words per neuron
+    }
+
+    #[test]
+    fn lut_fold_loses_for_few_neurons_at_high_fanin() {
+        // the documented break-even: at K=10 a 4-neuron layer pays more
+        // for the column gather + 16-word tables than popcount ever did
+        let c = lut_layer_cost(10, 4, 64);
+        assert!(
+            c.lut_accesses > c.popcount_accesses,
+            "lut {} vs popcount {}",
+            c.lut_accesses,
+            c.popcount_accesses
+        );
+        assert!(c.saving_pct() < 0.0);
     }
 
     #[test]

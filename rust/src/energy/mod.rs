@@ -16,6 +16,12 @@
 //! bitwidths (B⊕LD 1/1/16, BNN latent-weight FP, FP32 baseline) determine
 //! the bytes moved and the arithmetic cost — regenerating the Cons.(%)
 //! columns of Tables 2/5 and Fig. 1.
+//!
+//! The serve-path LUT fold (DESIGN.md §LUT-Folding) has its own
+//! word-access model ([`lut_layer_cost`]): it compares the bitsliced
+//! truth-table kernel against the XNOR+popcount GEMM it replaces in the
+//! unit the kernels actually move (64-bit words), surfaced by
+//! `bold energy`.
 
 mod dataflow;
 mod hardware;
@@ -26,7 +32,9 @@ mod tiling;
 
 pub use dataflow::{access_counts_backward, access_counts_forward, AccessCounts};
 pub use hardware::{Hardware, MemLevel, ASCEND, V100};
-pub use layer_cost::{conv_energy, linear_energy, ConvShape, EnergyBreakdown, Phase};
+pub use layer_cost::{
+    conv_energy, linear_energy, lut_layer_cost, ConvShape, EnergyBreakdown, LutCost, Phase,
+};
 pub use methods::{method_bitwidths, Bitwidths, Method};
 pub use network::{network_energy, resnet18_shapes, vgg_small_shapes, NetworkEnergy};
 pub use tiling::{search_tiling, Tiling};

@@ -393,6 +393,26 @@ fn cmd_energy(args: &[String]) -> Result<(), String> {
             );
         }
     }
+    // Serve-path LUT-folding delta (DESIGN.md §LUT-Folding): 64-bit word
+    // accesses of a folded fan-in-K layer vs the XNOR+popcount kernel it
+    // replaces, per forward batch. Positive save% is where the `lut`
+    // graph pass converts profitably.
+    println!("--- LUT-fold word accesses per forward (batch {batch}, 64 neurons)");
+    println!(
+        "{:<8} {:>14} {:>14} {:>10} {:>12}",
+        "fanin", "popcount", "lut", "save%", "table (B)"
+    );
+    for k in [2usize, 4, 6, 8, 10] {
+        let c = bold::energy::lut_layer_cost(k, 64, batch);
+        println!(
+            "{:<8} {:>14.0} {:>14.0} {:>10.1} {:>12}",
+            k,
+            c.popcount_accesses,
+            c.lut_accesses,
+            c.saving_pct(),
+            c.table_bytes
+        );
+    }
     Ok(())
 }
 
@@ -692,8 +712,11 @@ fn cmd_info() -> Result<(), String> {
     );
     let pc = bold::runtime::PassConfig::from_env();
     println!(
-        "graph passes: fuse {}, liveness {} (BOLD_GRAPH_PASSES={{all,none,fuse,liveness}})",
+        "graph passes: fuse {}, lut {} (max fan-in {}, BOLD_LUT_MAX_FANIN), liveness {} \
+         (BOLD_GRAPH_PASSES={{all,none}} or comma list of fuse,liveness,lut)",
         if pc.fuse { "on" } else { "off" },
+        if pc.lut && pc.lut_max_fanin > 0 { "on" } else { "off" },
+        pc.lut_max_fanin,
         if pc.liveness { "on" } else { "off" }
     );
     let artifacts = std::path::Path::new("artifacts");

@@ -93,6 +93,206 @@ pub struct PackedConv {
     scratch_id: usize,
 }
 
+/// Conv geometry and the padded-border fallback carried by a LUT-folded
+/// conv op ([`PackedLut`]). The truth tables are built mask-independent
+/// (every support bit assumed valid); output positions whose im2col
+/// validity mask is not all-ones — only possible when `pad > 0` — replay
+/// the masked popcount per lane from `weights`/`thr`/`flip` instead, so
+/// the op stays bit-identical to [`PackedConv`] at every border.
+pub struct LutConv {
+    pub name: String,
+    pub c_in: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Original packed weights (`c_out` rows × `c_in·k·k` bits), kept
+    /// for the padded-border lane replay.
+    pub weights: BitMatrix,
+    pub thr: Vec<f32>,
+    pub flip: Vec<bool>,
+    scratch_id: usize,
+}
+
+/// A Boolean layer folded into per-neuron truth tables by the `lut`
+/// pass (DESIGN.md §LUT-Folding, the NullaNet direction): each output
+/// neuron of a fan-in-K layer is a Boolean function of K input bits,
+/// enumerated at compile time into a `2^K`-bit table that replays the
+/// layer's exact integer-count + f32-compare arithmetic (bias, shared
+/// input mask and per-channel BN-folded threshold/flip included). At
+/// serve time 64 lanes evaluate per word through the bitslice mux
+/// cascade ([`simd::lut_eval_word`]) — no XNOR GEMM, no popcounts.
+pub struct PackedLut {
+    /// Fan-in K: input bits per output neuron (= the layer's full
+    /// fan-in; Boolean layers are dense, so every neuron reads all K).
+    pub fanin: usize,
+    /// Output neurons (linear rows, or conv output channels).
+    pub n_out: usize,
+    /// Words per truth table: `max(1, 2^fanin / 64)`.
+    pub tw: usize,
+    /// `n_out × tw` table words, neuron-major, LSB-first bit order.
+    pub tables: Vec<u64>,
+    /// Conv geometry + border fallback when this folds a conv;
+    /// `None` for a linear layer.
+    pub conv: Option<LutConv>,
+}
+
+/// Truth-table word count for a fan-in-K neuron.
+fn table_words(fanin: usize) -> usize {
+    (1usize << fanin).div_ceil(64)
+}
+
+impl PackedLut {
+    /// Fold a fused Boolean linear layer ([`PackedLayer`]) into truth
+    /// tables, replaying `pack_threshold_row`'s exact arithmetic:
+    /// `s = base − 2·popc((x ⊕ w) & mask) + bias`, fire when
+    /// `(s as f32) >= threshold` — with `base` the tail-tolerant valid
+    /// count of the shared input mask (all of `fanin` when unmasked).
+    pub fn from_linear(l: &PackedLayer) -> Self {
+        Self::from_linear_thr(l, l.threshold)
+    }
+
+    /// [`Self::from_linear`] with an explicit threshold — the `lut` pass
+    /// uses this to fold a naive `LinearCounts` + scalar `Threshold`
+    /// pair directly (the pair computes the identical function).
+    pub(crate) fn from_linear_thr(l: &PackedLayer, thr: f32) -> Self {
+        let fanin = l.weights.cols;
+        let n_out = l.weights.rows;
+        assert!(
+            (1..=passes::LUT_HARD_MAX_FANIN).contains(&fanin),
+            "lut fold: fan-in {fanin} outside 1..={}",
+            passes::LUT_HARD_MAX_FANIN
+        );
+        let tw = table_words(fanin);
+        let tail = (1u64 << fanin) - 1;
+        // replay xnor_threshold_masked_into's tail-tolerant valid count
+        let mask = l.input_mask.as_ref().map(|m| m[0] & tail).unwrap_or(tail);
+        let base = if l.input_mask.is_some() { mask.count_ones() as i64 } else { fanin as i64 };
+        let mut tables = vec![0u64; n_out * tw];
+        for j in 0..n_out {
+            let w = l.weights.row(j)[0];
+            let b: i64 = match &l.bias {
+                Some(bm) => {
+                    if bm.get(0, j) {
+                        1
+                    } else {
+                        -1
+                    }
+                }
+                None => 0,
+            };
+            let trow = &mut tables[j * tw..(j + 1) * tw];
+            for idx in 0..(1usize << fanin) {
+                let diff = (idx as u64 ^ w) & mask;
+                let s = base - 2 * diff.count_ones() as i64 + b;
+                if (s as f32) >= thr {
+                    trow[idx / 64] |= 1u64 << (idx % 64);
+                }
+            }
+        }
+        PackedLut { fanin, n_out, tw, tables, conv: None }
+    }
+
+    /// Fold a Boolean conv into per-channel truth tables under the given
+    /// per-channel threshold/flip epilogue (the conv's own fused
+    /// epilogue, or a downstream standalone `Threshold`'s — both compare
+    /// the same masked-GEMM counts). Tables assume every im2col tap is
+    /// valid; padded borders replay per lane at serve time.
+    pub(crate) fn from_conv(c: &PackedConv, ft: &FusedThreshold) -> Self {
+        let fanin = c.weights.cols; // c_in·k·k
+        let n_out = c.c_out;
+        assert!(
+            (1..=passes::LUT_HARD_MAX_FANIN).contains(&fanin),
+            "lut fold: fan-in {fanin} outside 1..={}",
+            passes::LUT_HARD_MAX_FANIN
+        );
+        assert_eq!(ft.thr.len(), n_out, "lut fold '{}': threshold width", c.name);
+        let tw = table_words(fanin);
+        let mut tables = vec![0u64; n_out * tw];
+        for j in 0..n_out {
+            let w = c.weights.row(j)[0];
+            let trow = &mut tables[j * tw..(j + 1) * tw];
+            for idx in 0..(1usize << fanin) {
+                // all-valid mask row: popc(mask) = fanin, exactly the
+                // gemm_masked_rows count for an interior position
+                let s = (fanin as i64 - 2 * (idx as u64 ^ w).count_ones() as i64) as f32;
+                let fire = if ft.flip[j] { s <= ft.thr[j] } else { s >= ft.thr[j] };
+                if fire {
+                    trow[idx / 64] |= 1u64 << (idx % 64);
+                }
+            }
+        }
+        PackedLut {
+            fanin,
+            n_out,
+            tw,
+            tables,
+            conv: Some(LutConv {
+                name: c.name.clone(),
+                c_in: c.c_in,
+                k: c.k,
+                stride: c.stride,
+                pad: c.pad,
+                weights: c.weights.clone(),
+                thr: ft.thr.clone(),
+                flip: ft.flip.clone(),
+                scratch_id: c.scratch_id,
+            }),
+        }
+    }
+
+    /// Table storage in bytes (the op's whole parameter footprint for a
+    /// linear fold).
+    pub fn table_bytes(&self) -> usize {
+        self.tables.len() * 8
+    }
+
+    /// Serve-time evaluation of a linear fold: packed input
+    /// (B × fanin bits) → packed output (B × n_out bits), bit-identical
+    /// to [`PackedLayer::apply_into`]. Per 64-row lane group the K input
+    /// bit-columns are gathered once and shared by every neuron; each
+    /// neuron's eval word (lane = batch row) lands in a 64×64 tile that
+    /// one bit transpose turns into row-major output words. `cols`,
+    /// `buf` and `tile` are caller scratch ([`GraphScratch`] in the
+    /// executor), resized here.
+    pub fn apply_linear_into(
+        &self,
+        x: &BitMatrix,
+        out: &mut BitMatrix,
+        cols: &mut Vec<u64>,
+        buf: &mut Vec<u64>,
+        tile: &mut Vec<u64>,
+    ) {
+        assert!(self.conv.is_none(), "conv folds evaluate through the graph executor");
+        assert_eq!(x.cols, self.fanin, "lut fan-in mismatch {} vs {}", x.cols, self.fanin);
+        let n = x.rows;
+        out.zero_resize(n, self.n_out);
+        cols.resize(self.fanin, 0);
+        buf.resize(1usize << (self.fanin - 1), 0);
+        tile.resize(64, 0);
+        for row0 in (0..n).step_by(64) {
+            let lanes = (n - row0).min(64);
+            for (i, cw) in cols.iter_mut().enumerate() {
+                *cw = simd::gather_bit_column(&x.words, x.wpr, row0, lanes, i);
+            }
+            for j0 in (0..self.n_out).step_by(64) {
+                let jn = (self.n_out - j0).min(64);
+                for jj in 0..jn {
+                    let t = &self.tables[(j0 + jj) * self.tw..(j0 + jj + 1) * self.tw];
+                    tile[jj] = simd::lut_eval_word(t, self.fanin, cols, buf);
+                }
+                tile[jn..64].fill(0);
+                let tt: &mut [u64; 64] = tile.as_mut_slice().try_into().unwrap();
+                simd::transpose64(tt);
+                // j0 is 64-aligned and bits ≥ jn are zero after the
+                // transpose, so each deposit is one aligned word OR
+                for l in 0..lanes {
+                    simd::deposit(out.row_mut(row0 + l), j0, tile[l], jn);
+                }
+            }
+        }
+    }
+}
+
 /// FP conv (the paper keeps the stem in FP): exact replay of
 /// `nn::Conv2d` eval — im2col + `matmul_bt` + bias.
 pub struct FpConv {
@@ -139,6 +339,9 @@ pub enum PackedOp {
     LinearCounts(PackedLayer),
     /// Boolean conv: bits → bits (fused) or bits → f32 counts.
     Conv2d(PackedConv),
+    /// Low-fan-in Boolean layer folded into truth tables by the `lut`
+    /// pass: bits → bits, no GEMM (DESIGN.md §LUT-Folding).
+    Lut(PackedLut),
     /// FP stem conv: bits (decoded ±1) or f32 → f32.
     FpConv2d(FpConv),
     /// Explicit eval-mode BN (non-integer input only): f32 → f32.
@@ -175,6 +378,13 @@ impl PackedOp {
                 (Some(_), None) => "Conv2d+pool",
                 (Some(_), Some(_)) => "Conv2d+pool+thr",
             },
+            PackedOp::Lut(l) => {
+                if l.conv.is_some() {
+                    "Conv2dLut"
+                } else {
+                    "Lut"
+                }
+            }
             PackedOp::FpConv2d(_) => "FpConv2d",
             PackedOp::BatchNorm(_) => "BatchNorm",
             PackedOp::Threshold(_) => "Threshold",
@@ -283,6 +493,17 @@ impl ConvScratch {
     }
 }
 
+/// Reusable buffers for [`PackedOp::Lut`] evaluation: the K gathered
+/// input bit-columns, the mux-cascade fold scratch (`2^(K−1)` words) and
+/// the 64×64 transpose tile of the linear variant. Shared by every LUT
+/// op in the graph — sized by the widest one.
+#[derive(Default)]
+struct LutScratch {
+    cols: Vec<u64>,
+    buf: Vec<u64>,
+    tile: Vec<u64>,
+}
+
 /// Reusable per-caller buffers for [`PackedGraph::forward_bits_into`]:
 /// one activation slot per graph node (sized from the graph on first
 /// use), per-conv im2col scratch, the GEMM count buffer, the FP head's
@@ -301,6 +522,8 @@ pub struct GraphScratch {
     fp_in: Tensor,
     /// FP head scratch row.
     row: Vec<f32>,
+    /// Column-gather + table-fold scratch for LUT-folded ops.
+    lut: LutScratch,
     /// Logits of the last forward (B × d_out).
     pub logits: Tensor,
 }
@@ -314,6 +537,7 @@ impl GraphScratch {
             col: Vec::new(),
             fp_in: Tensor::zeros(&[0]),
             row: Vec::new(),
+            lut: LutScratch::default(),
             logits: Tensor::zeros(&[0]),
         }
     }
@@ -345,7 +569,8 @@ impl GraphScratch {
             + self.fp_in.data.len()
             + self.row.len()
             + self.logits.data.len();
-        slots + convs + f32s * 4
+        let lut = (self.lut.cols.len() + self.lut.buf.len() + self.lut.tile.len()) * 8;
+        slots + convs + f32s * 4 + lut
     }
 }
 
@@ -393,6 +618,12 @@ impl PackedGraph {
                             + l.bias.as_ref().map(|b| b.cols).unwrap_or(0)
                     }
                     PackedOp::Conv2d(c) => c.weights.rows * c.weights.cols,
+                    // a LUT fold's serving parameters are its tables
+                    // (plus the border-fallback weights for convs)
+                    PackedOp::Lut(l) => {
+                        l.tables.len() * 64
+                            + l.conv.as_ref().map(|g| g.weights.rows * g.weights.cols).unwrap_or(0)
+                    }
                     PackedOp::Residual { main, shortcut, .. } => bits(main) + bits(shortcut),
                     _ => 0,
                 })
@@ -439,6 +670,12 @@ impl PackedGraph {
             tags.push(format!(
                 "fuse(thr {}, pool {}, flat {})",
                 ps.fused_thresholds, ps.fused_pools, ps.elided_flattens
+            ));
+        }
+        if ps.lut {
+            tags.push(format!(
+                "lut(ops {}, neurons {}, tables {} B)",
+                ps.lut_ops, ps.lut_neurons, ps.lut_table_bytes
             ));
         }
         if ps.liveness {
@@ -532,8 +769,8 @@ impl PackedGraph {
             s0.shape.push(x.rows);
             s0.shape.extend_from_slice(&self.input_shape);
         }
-        let GraphScratch { slots, convs, counts, col, fp_in, row, logits } = scratch;
-        run_nodes(&self.nodes, slots, convs, counts, col, fp_in, row, logits);
+        let GraphScratch { slots, convs, counts, col, fp_in, row, lut, logits } = scratch;
+        run_nodes(&self.nodes, slots, convs, counts, col, fp_in, row, lut, logits);
     }
 
     /// Convenience: pack real-valued features (`v ≥ 0 ⇒ T`, the
@@ -606,13 +843,14 @@ fn run_nodes(
     col: &mut Vec<f32>,
     fp_in: &mut Tensor,
     row: &mut Vec<f32>,
+    lut: &mut LutScratch,
     logits: &mut Tensor,
 ) {
     for node in nodes {
         match &node.op {
             PackedOp::Residual { main, shortcut, main_out, short_out } => {
-                run_nodes(main, slots, convs, counts, col, fp_in, row, logits);
-                run_nodes(shortcut, slots, convs, counts, col, fp_in, row, logits);
+                run_nodes(main, slots, convs, counts, col, fp_in, row, lut, logits);
+                run_nodes(shortcut, slots, convs, counts, col, fp_in, row, lut, logits);
                 // the liveness pass never gives the merge output the
                 // color of either branch output (both are read here), so
                 // taking the dst slot out of the pool is alias-free
@@ -666,7 +904,7 @@ fn run_nodes(
                 // strictly after its last read)
                 debug_assert_ne!(node.src, node.dst, "op dst slot aliases its src");
                 let mut out = std::mem::take(&mut slots[node.dst]);
-                eval_op(op, &slots[node.src], &mut out, convs, counts, col, fp_in);
+                eval_op(op, &slots[node.src], &mut out, convs, counts, col, fp_in, lut);
                 slots[node.dst] = out;
             }
         }
@@ -682,6 +920,7 @@ fn eval_op(
     counts: &mut Tensor,
     col: &mut Vec<f32>,
     fp_in: &mut Tensor,
+    lut: &mut LutScratch,
 ) {
     match op {
         PackedOp::Linear(l) => {
@@ -689,6 +928,103 @@ fn eval_op(
             l.apply_into(&src.bits, &mut out.bits);
             out.is_bits = true;
             out.set_shape(&[src.shape[0], l.weights.rows]);
+        }
+        PackedOp::Lut(l) => {
+            assert!(src.is_bits, "Lut op needs packed input");
+            match &l.conv {
+                None => {
+                    l.apply_linear_into(
+                        &src.bits,
+                        &mut out.bits,
+                        &mut lut.cols,
+                        &mut lut.buf,
+                        &mut lut.tile,
+                    );
+                    out.set_shape(&[src.shape[0], l.n_out]);
+                }
+                Some(g) => {
+                    let (n, ch, h, w) = src.dims4();
+                    assert_eq!(ch, g.c_in, "conv '{}': {ch} channels vs c_in {}", g.name, g.c_in);
+                    let (oh, ow) = {
+                        let cs = &mut convs[g.scratch_id];
+                        bit_im2col(&src.bits, n, ch, h, w, g.k, g.stride, g.pad, cs)
+                    };
+                    let cs = &convs[g.scratch_id];
+                    let hw = oh * ow;
+                    out.bits.zero_resize(n, l.n_out * hw);
+                    lut.cols.resize(l.fanin, 0);
+                    lut.buf.resize(1usize << (l.fanin - 1), 0);
+                    // lanes = spatial positions within one image, so each
+                    // channel's eval word deposits contiguously at bit
+                    // `j·hw + p0` — the fused conv's channel-major layout,
+                    // no transpose needed
+                    for ni in 0..n {
+                        let row = out.bits.row_mut(ni);
+                        for p0 in (0..hw).step_by(64) {
+                            let lanes = (hw - p0).min(64);
+                            let lanes_mask =
+                                if lanes == 64 { u64::MAX } else { (1u64 << lanes) - 1 };
+                            let r0 = ni * hw + p0;
+                            for (i, cw) in lut.cols.iter_mut().enumerate() {
+                                *cw = simd::gather_bit_column(
+                                    &cs.patches.words,
+                                    cs.patches.wpr,
+                                    r0,
+                                    lanes,
+                                    i,
+                                );
+                            }
+                            // the tables assume every tap is valid; lanes
+                            // whose im2col validity mask has any zero read
+                            // padding and replay the masked popcount per
+                            // lane instead (pad == 0 ⇒ mask all-ones)
+                            let invalid = if g.pad > 0 {
+                                let mut inv = 0u64;
+                                for i in 0..l.fanin {
+                                    inv |= !simd::gather_bit_column(
+                                        &cs.mask.words,
+                                        cs.mask.wpr,
+                                        r0,
+                                        lanes,
+                                        i,
+                                    );
+                                }
+                                inv & lanes_mask
+                            } else {
+                                0
+                            };
+                            for j in 0..l.n_out {
+                                let t = &l.tables[j * l.tw..(j + 1) * l.tw];
+                                let mut word =
+                                    simd::lut_eval_word(t, l.fanin, &lut.cols, &mut lut.buf)
+                                        & lanes_mask;
+                                let mut inv = invalid;
+                                while inv != 0 {
+                                    let lb = inv.trailing_zeros() as usize;
+                                    inv &= inv - 1;
+                                    let (pr, mr) =
+                                        (cs.patches.row(r0 + lb), cs.mask.row(r0 + lb));
+                                    let wr = g.weights.row(j);
+                                    let (mut base, mut acc) = (0i64, 0i64);
+                                    for ((&p, &m), &wv) in pr.iter().zip(mr).zip(wr) {
+                                        base += m.count_ones() as i64;
+                                        acc += ((p ^ wv) & m).count_ones() as i64;
+                                    }
+                                    // gemm_masked_rows' count + the fused
+                                    // compare, per lane
+                                    let s = (base - 2 * acc) as f32;
+                                    let fire =
+                                        if g.flip[j] { s <= g.thr[j] } else { s >= g.thr[j] };
+                                    word = (word & !(1u64 << lb)) | ((fire as u64) << lb);
+                                }
+                                simd::deposit(row, j * hw + p0, word, lanes);
+                            }
+                        }
+                    }
+                    out.set_shape(&[n, l.n_out, oh, ow]);
+                }
+            }
+            out.is_bits = true;
         }
         PackedOp::LinearCounts(l) => {
             // naive decomposition of the fused Linear: XNOR GEMM to f32

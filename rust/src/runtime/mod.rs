@@ -8,8 +8,9 @@
 //!   forward-only as pure XNOR+POPCNT with BN folded into per-channel
 //!   integer thresholds — and [`serve`] wraps it in a multi-threaded
 //!   micro-batching server (`bold serve-native`). [`passes`] is the
-//!   compile-time pass pipeline between the two (op fusion +
-//!   slot-liveness buffer reuse, `BOLD_GRAPH_PASSES`). [`engine`] keeps
+//!   compile-time pass pipeline between the two (op fusion, LUT folding
+//!   of low-fan-in layers, slot-liveness buffer reuse —
+//!   `BOLD_GRAPH_PASSES`, DESIGN.md §LUT-Folding). [`engine`] keeps
 //!   the original linear-stack [`PackedMlp`] as the back-compat loader
 //!   for arch-less checkpoints.
 //! * **XLA path** (feature `xla-runtime`): `PjrtExecutor` compiles the
@@ -35,10 +36,10 @@ pub mod serve;
 
 pub use engine::{EngineError, EngineScratch, PackedLayer, PackedMlp};
 pub use graph::{
-    FusedThreshold, GraphScratch, Node, PackedConv, PackedGraph, PackedOp, PoolSpec,
-    ThresholdSpec,
+    FusedThreshold, GraphScratch, LutConv, Node, PackedConv, PackedGraph, PackedLut, PackedOp,
+    PoolSpec, ThresholdSpec,
 };
-pub use passes::{PassConfig, PassStats};
+pub use passes::{PassConfig, PassStats, LUT_DEFAULT_MAX_FANIN, LUT_HARD_MAX_FANIN};
 #[cfg(feature = "xla-runtime")]
 pub use pjrt::{literal_to_tensor, tensor_to_literal, PjrtError, PjrtExecutor};
 pub use http::{HttpError, HttpLimits, HttpParser, Parse, ResponseWriter};

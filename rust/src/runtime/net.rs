@@ -669,13 +669,15 @@ fn respond_aux(
                 let _ = write!(
                     body,
                     "{{\"name\":{name:?},\"d_in\":{},\"d_out\":{},\"ops\":{},\"queue_cap\":{},\
-                     \"slots_raw\":{},\"slots_live\":{}}}",
+                     \"slots_raw\":{},\"slots_live\":{},\"lut_neurons\":{},\"lut_table_bytes\":{}}}",
                     s.d_in(),
                     s.model().d_out(),
                     s.model().num_ops(),
                     s.queue_cap(),
                     ps.raw_slots,
-                    ps.live_slots
+                    ps.live_slots,
+                    ps.lut_neurons,
+                    ps.lut_table_bytes
                 );
             }
             body.push_str("]}\n");

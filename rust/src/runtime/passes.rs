@@ -24,10 +24,19 @@
 //!    allocates only the live-range chromatic number of buffers —
 //!    typically 2–3 slots regardless of depth — instead of one slot per
 //!    node.
+//! 3. **LUT folding** ([`PassConfig::lut`], DESIGN.md §LUT-Folding):
+//!    collapses Boolean layers whose per-output fan-in K is at or below
+//!    [`PassConfig::lut_max_fanin`] into [`PackedOp::Lut`] nodes — each
+//!    output neuron's `2^K`-entry truth table is enumerated at compile
+//!    time by replaying the exact popcount+compare the layer would run,
+//!    and the executor evaluates 64 lanes per word with a bitsliced mux
+//!    cascade instead of an XNOR+popcount GEMM. Runs between fusion and
+//!    liveness so fused threshold/flip epilogues fold into the tables.
 //!
-//! Pass selection comes from `BOLD_GRAPH_PASSES`
-//! (`all`|`none`|`fuse`|`liveness`, default `all`) via
-//! [`PassConfig::from_env`]; the unoptimized executor stays a living
+//! Pass selection comes from `BOLD_GRAPH_PASSES` (`all`, `none`, or a
+//! comma-separated subset of `fuse`/`liveness`/`lut`; default `all`)
+//! via [`PassConfig::from_env`], with the LUT fan-in cap from
+//! `BOLD_LUT_MAX_FANIN`; the unoptimized executor stays a living
 //! reference that CI runs the full parity suites against.
 //!
 //! Safety model: the passes assume the compiler's SSA discipline (each
@@ -39,8 +48,21 @@
 //! [`PackedGraph`]: super::graph::PackedGraph
 //! [`GraphScratch`]: super::graph::GraphScratch
 
-use super::graph::{FusedThreshold, Node, PackedGraph, PackedOp, PoolSpec, ThresholdSpec};
+use super::graph::{FusedThreshold, Node, PackedGraph, PackedLut, PackedOp, PoolSpec, ThresholdSpec};
 use std::collections::BTreeSet;
+
+/// Default fan-in cap of the LUT-folding pass (`BOLD_LUT_MAX_FANIN`
+/// override): a fan-in-K layer costs `2^K` table bits per neuron, and
+/// around K = 10 the table traffic starts rivalling the weight traffic
+/// it replaces (DESIGN.md §LUT-Folding).
+pub const LUT_DEFAULT_MAX_FANIN: usize = 10;
+
+/// Hard ceiling on the fan-in the pass will ever fold, whatever the env
+/// cap says: beyond 2^16 table bits per neuron the fold always loses to
+/// XNOR+popcount and the mux-cascade scratch (`2^(K−1)` words) stops
+/// being cache-resident. The env parse accepts up to the 64-bit gather
+/// word width; this bounds what conversion does with it.
+pub const LUT_HARD_MAX_FANIN: usize = 16;
 
 /// Which optimization passes to run on a freshly compiled graph.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -49,34 +71,74 @@ pub struct PassConfig {
     pub fuse: bool,
     /// Slot-liveness recoloring for scratch-buffer reuse.
     pub liveness: bool,
+    /// LUT folding: collapse low-fan-in Boolean layers into bitsliced
+    /// truth tables (runs after fusion, on fused and naive ops alike).
+    pub lut: bool,
+    /// Fan-in cap for the `lut` pass: layers with more input bits per
+    /// neuron stay on XNOR+popcount. `0` disables the pass entirely
+    /// (`BOLD_LUT_MAX_FANIN=0`).
+    pub lut_max_fanin: usize,
 }
 
 impl PassConfig {
     /// Every pass enabled (the default pipeline).
     pub fn all() -> Self {
-        PassConfig { fuse: true, liveness: true }
+        PassConfig { fuse: true, liveness: true, lut: true, lut_max_fanin: LUT_DEFAULT_MAX_FANIN }
     }
 
     /// No passes: the naive compiler output runs as-is (the living
     /// reference executor).
     pub fn none() -> Self {
-        PassConfig { fuse: false, liveness: false }
+        PassConfig { fuse: false, liveness: false, lut: false, lut_max_fanin: LUT_DEFAULT_MAX_FANIN }
     }
 
-    /// Parse a `BOLD_GRAPH_PASSES` value; `None` (unset) and anything
-    /// unrecognized select the full pipeline.
+    /// Parse a `BOLD_GRAPH_PASSES` value: `all`, `none`, or a
+    /// comma-separated subset of `fuse`/`liveness`/`lut` (each token
+    /// enables its pass; the single-token forms keep their original
+    /// meaning). `None` (unset) and anything unrecognized select the
+    /// full pipeline rather than silently serving unoptimized.
     pub fn parse(v: Option<&str>) -> Self {
+        let Some(raw) = v else { return Self::all() };
+        let raw = raw.trim();
+        match raw {
+            "none" => return Self::none(),
+            "all" => return Self::all(),
+            _ => {}
+        }
+        let mut cfg = Self::none();
+        for tok in raw.split(',') {
+            match tok.trim() {
+                "fuse" => cfg.fuse = true,
+                "liveness" => cfg.liveness = true,
+                "lut" => cfg.lut = true,
+                _ => return Self::all(),
+            }
+        }
+        cfg
+    }
+
+    /// Parse a `BOLD_LUT_MAX_FANIN` value: unset/empty keeps the
+    /// default, `0` disables the LUT pass, `1..=64` is accepted (the
+    /// bit-column gather indexes one 64-bit word), and anything else —
+    /// negative, non-numeric, above the word width — is rejected back
+    /// to the default.
+    pub fn parse_lut_cap(v: Option<&str>) -> usize {
         match v.map(str::trim) {
-            Some("none") => Self::none(),
-            Some("fuse") => PassConfig { fuse: true, liveness: false },
-            Some("liveness") => PassConfig { fuse: false, liveness: true },
-            _ => Self::all(),
+            None | Some("") => LUT_DEFAULT_MAX_FANIN,
+            Some(s) => match s.parse::<usize>() {
+                Ok(n) if n <= 64 => n,
+                _ => LUT_DEFAULT_MAX_FANIN,
+            },
         }
     }
 
-    /// Pass selection from the `BOLD_GRAPH_PASSES` environment variable.
+    /// Pass selection from the `BOLD_GRAPH_PASSES` environment variable,
+    /// with the LUT fan-in cap from `BOLD_LUT_MAX_FANIN`.
     pub fn from_env() -> Self {
-        Self::parse(std::env::var("BOLD_GRAPH_PASSES").ok().as_deref())
+        let mut cfg = Self::parse(std::env::var("BOLD_GRAPH_PASSES").ok().as_deref());
+        cfg.lut_max_fanin =
+            Self::parse_lut_cap(std::env::var("BOLD_LUT_MAX_FANIN").ok().as_deref());
+        cfg
     }
 }
 
@@ -101,6 +163,14 @@ pub struct PassStats {
     pub fused_pools: usize,
     /// `Flatten` nodes elided by slot rewriting.
     pub elided_flattens: usize,
+    /// The LUT-folding pass ran (enabled and fan-in cap > 0).
+    pub lut: bool,
+    /// Ops converted to [`PackedOp::Lut`].
+    pub lut_ops: usize,
+    /// Output neurons across all converted ops (one truth table each).
+    pub lut_neurons: usize,
+    /// Total truth-table storage in bytes across converted ops.
+    pub lut_table_bytes: usize,
     /// Slot count of the naive compiler output.
     pub raw_slots: usize,
     /// Slot count after recoloring (== `raw_slots` when liveness is off
@@ -123,6 +193,12 @@ pub(crate) fn run(graph: &mut PackedGraph, cfg: PassConfig) {
         elide_flattens(&mut graph.nodes, &mut stats);
         let uses = use_counts(&graph.nodes, raw);
         fuse_pairs(&mut graph.nodes, &uses, &mut stats);
+    }
+    if cfg.lut && cfg.lut_max_fanin > 0 {
+        stats.lut = true;
+        let cap = cfg.lut_max_fanin.min(LUT_HARD_MAX_FANIN);
+        let uses = use_counts(&graph.nodes, raw);
+        lut_fold(&mut graph.nodes, &uses, cap, &mut stats);
     }
     if cfg.liveness {
         if let Some(n) = recolor(&mut graph.nodes, raw) {
@@ -291,6 +367,101 @@ fn fuse_pairs(nodes: &mut Vec<Node>, uses: &[usize], stats: &mut PassStats) {
                 // absorb the following threshold
                 continue;
             }
+        }
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LUT-folding pass
+// ---------------------------------------------------------------------------
+
+/// Count one conversion into the stats.
+fn note_lut(stats: &mut PassStats, lut: &PackedLut) {
+    stats.lut_ops += 1;
+    stats.lut_neurons += lut.n_out;
+    stats.lut_table_bytes += lut.table_bytes();
+}
+
+/// Collapse Boolean layers with per-output fan-in `1..=cap` into
+/// [`PackedOp::Lut`] truth-table ops (DESIGN.md §LUT-Folding, recursing
+/// into residual branches). Two shapes convert:
+///
+/// * **Single ops** — a fused `Linear` (threshold/bias/input-mask
+///   already folded in, including everything `from_mlp` produces) or a
+///   `Conv2d` carrying a fused per-channel threshold epilogue. This is
+///   what the pass sees after `fuse` ran, so fuse→lut composes.
+/// * **Naive pairs** — `LinearCounts` + scalar `Threshold`, or an
+///   unfused pool-less `Conv2d` + `Threshold`, under the same
+///   single-reader pairing rule as the fusion pass. This makes
+///   `BOLD_GRAPH_PASSES=lut` work alone against the naive compiler
+///   output.
+///
+/// Convs that pool their counts (the threshold compares pooled values,
+/// not raw fan-in counts) and layers above the cap stay untouched —
+/// bit-exactness never depends on this pass running.
+fn lut_fold(nodes: &mut Vec<Node>, uses: &[usize], cap: usize, stats: &mut PassStats) {
+    for nd in nodes.iter_mut() {
+        if let PackedOp::Residual { main, shortcut, .. } = &mut nd.op {
+            lut_fold(main, uses, cap, stats);
+            lut_fold(shortcut, uses, cap, stats);
+        }
+    }
+    let mut i = 0;
+    while i < nodes.len() {
+        // pair forms first: the naive compiler output
+        if i + 1 < nodes.len() && nodes[i + 1].src == nodes[i].dst && uses[nodes[i].dst] == 1 {
+            let lut = match (&nodes[i].op, &nodes[i + 1].op) {
+                (PackedOp::LinearCounts(l), PackedOp::Threshold(ThresholdSpec::Scalar(t)))
+                    if (1..=cap).contains(&l.weights.cols) =>
+                {
+                    Some(PackedLut::from_linear_thr(l, *t))
+                }
+                (PackedOp::Conv2d(c), PackedOp::Threshold(spec))
+                    if c.fused.is_none()
+                        && c.pool.is_none()
+                        && (1..=cap).contains(&c.weights.cols) =>
+                {
+                    match spec {
+                        ThresholdSpec::Scalar(t) => Some(PackedLut::from_conv(
+                            c,
+                            &FusedThreshold {
+                                thr: vec![*t; c.c_out],
+                                flip: vec![false; c.c_out],
+                            },
+                        )),
+                        ThresholdSpec::PerChannel(ft) if ft.thr.len() == c.c_out => {
+                            Some(PackedLut::from_conv(c, ft))
+                        }
+                        _ => None,
+                    }
+                }
+                _ => None,
+            };
+            if let Some(lut) = lut {
+                note_lut(stats, &lut);
+                let consumer = nodes.remove(i + 1);
+                nodes[i].op = PackedOp::Lut(lut);
+                nodes[i].dst = consumer.dst;
+                i += 1;
+                continue;
+            }
+        }
+        // single-op forms: post-fusion output and from_mlp graphs
+        let lut = match &nodes[i].op {
+            PackedOp::Linear(l) if (1..=cap).contains(&l.weights.cols) => {
+                Some(PackedLut::from_linear(l))
+            }
+            PackedOp::Conv2d(c)
+                if c.pool.is_none() && (1..=cap).contains(&c.weights.cols) =>
+            {
+                c.fused.as_ref().map(|ft| PackedLut::from_conv(c, ft))
+            }
+            _ => None,
+        };
+        if let Some(lut) = lut {
+            note_lut(stats, &lut);
+            nodes[i].op = PackedOp::Lut(lut);
         }
         i += 1;
     }
@@ -467,14 +638,56 @@ mod tests {
         assert_eq!(PassConfig::parse(Some("none")), PassConfig::none());
         assert_eq!(
             PassConfig::parse(Some("fuse")),
-            PassConfig { fuse: true, liveness: false }
+            PassConfig { fuse: true, ..PassConfig::none() }
         );
         assert_eq!(
             PassConfig::parse(Some(" liveness ")),
-            PassConfig { fuse: false, liveness: true }
+            PassConfig { liveness: true, ..PassConfig::none() }
         );
         // unrecognized values select the full pipeline rather than
         // silently serving unoptimized
         assert_eq!(PassConfig::parse(Some("bogus")), PassConfig::all());
+    }
+
+    #[test]
+    fn pass_config_parses_lut_token_alone_and_in_combination() {
+        assert_eq!(
+            PassConfig::parse(Some("lut")),
+            PassConfig { lut: true, ..PassConfig::none() }
+        );
+        assert_eq!(
+            PassConfig::parse(Some("fuse,lut")),
+            PassConfig { fuse: true, lut: true, ..PassConfig::none() }
+        );
+        assert_eq!(
+            PassConfig::parse(Some(" lut , liveness ")),
+            PassConfig { lut: true, liveness: true, ..PassConfig::none() }
+        );
+        assert_eq!(
+            PassConfig::parse(Some("fuse,liveness,lut")),
+            PassConfig::all()
+        );
+        // an unknown token anywhere in the list falls back to the full
+        // pipeline, same as the single-token case
+        assert_eq!(PassConfig::parse(Some("fuse,bogus")), PassConfig::all());
+        assert_eq!(PassConfig::parse(Some("lut,nope")), PassConfig::all());
+    }
+
+    #[test]
+    fn lut_cap_parsing_bounds() {
+        // unset/empty keep the default
+        assert_eq!(PassConfig::parse_lut_cap(None), LUT_DEFAULT_MAX_FANIN);
+        assert_eq!(PassConfig::parse_lut_cap(Some("")), LUT_DEFAULT_MAX_FANIN);
+        assert_eq!(PassConfig::parse_lut_cap(Some("  ")), LUT_DEFAULT_MAX_FANIN);
+        // 0 disables the pass; anything up to the gather word width parses
+        assert_eq!(PassConfig::parse_lut_cap(Some("0")), 0);
+        assert_eq!(PassConfig::parse_lut_cap(Some("7")), 7);
+        assert_eq!(PassConfig::parse_lut_cap(Some(" 10 ")), 10);
+        assert_eq!(PassConfig::parse_lut_cap(Some("64")), 64);
+        // above the word width / non-numeric / negative → default
+        assert_eq!(PassConfig::parse_lut_cap(Some("65")), LUT_DEFAULT_MAX_FANIN);
+        assert_eq!(PassConfig::parse_lut_cap(Some("-1")), LUT_DEFAULT_MAX_FANIN);
+        assert_eq!(PassConfig::parse_lut_cap(Some("abc")), LUT_DEFAULT_MAX_FANIN);
+        assert_eq!(PassConfig::parse_lut_cap(Some("1e3")), LUT_DEFAULT_MAX_FANIN);
     }
 }

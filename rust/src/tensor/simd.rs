@@ -369,9 +369,12 @@ pub fn with_backend<R>(b: Backend, f: impl FnOnce() -> R) -> R {
 // ---------------------------------------------------------------------------
 
 /// OR `len ≤ 64` result bits (`w`, low bits) into `out` at row-local bit
-/// offset `pos`. `out` must be pre-zeroed over the target range.
+/// offset `pos`. `out` must be pre-zeroed over the target range and `w`
+/// must be zero above bit `len` (a straddling write ORs the whole word).
+/// Shared by the threshold re-pack below and the graph executor's LUT
+/// output writes.
 #[inline]
-fn deposit(out: &mut [u64], pos: usize, w: u64, len: usize) {
+pub fn deposit(out: &mut [u64], pos: usize, w: u64, len: usize) {
     if len == 0 {
         return;
     }
@@ -394,6 +397,96 @@ pub fn pack_cmp_into(out: &mut [u64], bit0: usize, data: &[f32], thr: f32, flip:
     for chunk in data.chunks(64) {
         deposit(out, pos, cmp(chunk, thr, flip), chunk.len());
         pos += chunk.len();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LUT-folding primitives (DESIGN.md §LUT-Folding)
+// ---------------------------------------------------------------------------
+//
+// The truth-table evaluation of a low-fan-in Boolean neuron is pure
+// word-wide logic (AND/XOR mux folding) with no arithmetic to vectorise
+// differently per ISA, so — unlike the popcount family — one portable
+// implementation IS the reference for every backend. It lives here,
+// alongside the dispatch table, so the AVX2/NEON/scalar paths all route
+// through the identical code and the bit-exactness contract holds by
+// construction.
+
+/// Gather one input bit-column across up to 64 consecutive packed rows:
+/// bit `l` of the result is bit `col` of row `row0 + l`. `words` is a
+/// row-major packed matrix with `wpr` words per row. Lanes `≥ nrows` are
+/// zero.
+#[inline]
+pub fn gather_bit_column(words: &[u64], wpr: usize, row0: usize, nrows: usize, col: usize) -> u64 {
+    debug_assert!(nrows <= 64);
+    let (wi, off) = (col / 64, col % 64);
+    let mut out = 0u64;
+    let mut base = row0 * wpr + wi;
+    for l in 0..nrows {
+        out |= ((words[base] >> off) & 1) << l;
+        base += wpr;
+    }
+    out
+}
+
+/// Bitsliced truth-table evaluation for 64 lanes at once: lane `l` of
+/// the result is bit `idx(l)` of `table`, where `idx(l) = Σ_i
+/// (cols[i] >> l & 1) << i` — i.e. each lane independently indexes the
+/// `2^fanin`-bit table with its own gathered input bits.
+///
+/// The evaluation is the standard bitslice mux cascade: level 0 seeds
+/// `2^(fanin-1)` words from adjacent table-bit pairs selected by
+/// `cols[0]` (constants broadcast to all-0/all-1 words, so the four
+/// pair cases collapse to `0`, `!0`, `cols[0]`, `!cols[0]`), then each
+/// further level halves the word count with `mux(a, b, s) = a ^ ((a ^
+/// b) & s)`. No per-lane branching anywhere.
+///
+/// `table` holds at least `max(1, 2^fanin / 64)` words (LSB-first bit
+/// order); `buf` is caller scratch of at least `2^(fanin-1)` words
+/// (1 for fanin ≤ 1).
+#[inline]
+pub fn lut_eval_word(table: &[u64], fanin: usize, cols: &[u64], buf: &mut [u64]) -> u64 {
+    debug_assert!(cols.len() >= fanin);
+    let bit = |i: usize| (table[i / 64] >> (i % 64)) & 1;
+    if fanin == 0 {
+        return 0u64.wrapping_sub(bit(0));
+    }
+    let half = 1usize << (fanin - 1);
+    debug_assert!(buf.len() >= half);
+    let c0 = cols[0];
+    for (j, b) in buf.iter_mut().take(half).enumerate() {
+        let a = 0u64.wrapping_sub(bit(2 * j));
+        let bb = 0u64.wrapping_sub(bit(2 * j + 1));
+        *b = a ^ ((a ^ bb) & c0);
+    }
+    for (i, &sel) in cols.iter().enumerate().take(fanin).skip(1) {
+        let width = 1usize << (fanin - 1 - i);
+        for j in 0..width {
+            let (a, b) = (buf[2 * j], buf[2 * j + 1]);
+            buf[j] = a ^ ((a ^ b) & sel);
+        }
+    }
+    buf[0]
+}
+
+/// In-place 64×64 bit-matrix transpose (recursive block swap, Hacker's
+/// Delight §7-3 adapted to LSB-first columns): bit `c` of word `r`
+/// swaps with bit `r` of word `c`. The graph executor uses this to turn
+/// 64 per-neuron LUT eval words (lane = batch row) into 64 row-major
+/// output words.
+pub fn transpose64(a: &mut [u64; 64]) {
+    let mut j = 32usize;
+    let mut m: u64 = 0xFFFF_FFFF_0000_0000;
+    while j != 0 {
+        let mut k = 0usize;
+        while k < 64 {
+            let t = (a[k] ^ (a[k + j] << j)) & m;
+            a[k] ^= t;
+            a[k + j] ^= t >> j;
+            k = ((k | j) + 1) & !j;
+        }
+        j >>= 1;
+        m ^= m >> j;
     }
 }
 
@@ -1181,6 +1274,65 @@ mod tests {
                 assert_eq!(out, want, "bit0={bit0} len={len} flip={flip}");
             }
         }
+    }
+
+    #[test]
+    fn gather_bit_column_matches_per_bit_reads() {
+        let mut rng = Rng::new(95);
+        for (wpr, nrows) in [(1usize, 64usize), (1, 17), (3, 64), (3, 1), (2, 33)] {
+            let rows = nrows + 5;
+            let words: Vec<u64> = (0..rows * wpr).map(|_| rng.next_u64()).collect();
+            for row0 in [0usize, 3] {
+                for col in [0usize, 1, 63, 64 * (wpr - 1) + wpr.min(2) - 1, wpr * 64 - 1] {
+                    let got = gather_bit_column(&words, wpr, row0, nrows, col);
+                    let mut want = 0u64;
+                    for l in 0..nrows {
+                        want |= ((words[(row0 + l) * wpr + col / 64] >> (col % 64)) & 1) << l;
+                    }
+                    assert_eq!(got, want, "wpr={wpr} nrows={nrows} row0={row0} col={col}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lut_eval_word_matches_per_lane_table_indexing() {
+        let mut rng = Rng::new(96);
+        for fanin in 0usize..=10 {
+            let tw = (1usize << fanin).div_ceil(64).max(1);
+            let table: Vec<u64> = (0..tw).map(|_| rng.next_u64()).collect();
+            let cols: Vec<u64> = (0..fanin.max(1)).map(|_| rng.next_u64()).collect();
+            let mut buf = vec![0u64; (1usize << fanin.saturating_sub(1)).max(1)];
+            let got = lut_eval_word(&table, fanin, &cols, &mut buf);
+            let mut want = 0u64;
+            for l in 0..64 {
+                let mut idx = 0usize;
+                for (i, c) in cols.iter().enumerate().take(fanin) {
+                    idx |= (((c >> l) & 1) as usize) << i;
+                }
+                want |= ((table[idx / 64] >> (idx % 64)) & 1) << l;
+            }
+            assert_eq!(got, want, "fanin={fanin}");
+        }
+    }
+
+    #[test]
+    fn transpose64_matches_naive_and_is_an_involution() {
+        let mut rng = Rng::new(97);
+        let orig: Vec<u64> = (0..64).map(|_| rng.next_u64()).collect();
+        let mut a: [u64; 64] = orig.clone().try_into().unwrap();
+        transpose64(&mut a);
+        for r in 0..64 {
+            for c in 0..64 {
+                assert_eq!(
+                    (a[r] >> c) & 1,
+                    (orig[c] >> r) & 1,
+                    "transposed bit ({r},{c})"
+                );
+            }
+        }
+        transpose64(&mut a);
+        assert_eq!(a.to_vec(), orig, "transpose is an involution");
     }
 
     #[test]

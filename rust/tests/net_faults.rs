@@ -575,6 +575,8 @@ fn stats_and_listing_endpoints_serve_json() {
     assert_status(&resp, 200, "model listing");
     assert!(resp.contains("\"name\":\"m\""), "{resp}");
     assert!(resp.contains(&format!("\"d_in\":{D_IN}")), "{resp}");
+    assert!(resp.contains("\"lut_neurons\":"), "LUT stats in listing: {resp}");
+    assert!(resp.contains("\"lut_table_bytes\":"), "LUT stats in listing: {resp}");
     let resp = roundtrip_to_eof(&addr, b"GET /stats HTTP/1.1\r\nConnection: close\r\n\r\n");
     assert_status(&resp, 200, "stats");
     assert!(resp.contains("\"connections\":"), "{resp}");

@@ -15,7 +15,8 @@ use bold::nn::{
     ParamRef, Sequential, ThresholdAct, Value,
 };
 use bold::runtime::{
-    GraphScratch, NativeServer, Node, PackedGraph, PackedOp, PassConfig, ServeConfig,
+    GraphScratch, NativeServer, Node, PackedGraph, PackedLayer, PackedMlp, PackedOp, PassConfig,
+    ServeConfig,
 };
 use bold::tensor::Tensor;
 use bold::util::Rng;
@@ -108,14 +109,16 @@ fn vgg_bn_folds_to_zero_op_thresholds() {
     assert!(ps.fused_pools >= 1, "no pools fused: {ps:?}");
 }
 
-/// The four `BOLD_GRAPH_PASSES` selections, labeled. Tests always pin
-/// the config through `from_layer_with`/`from_records_with` — never the
-/// environment variable, which other test threads read concurrently.
-fn pass_configs() -> [(&'static str, PassConfig); 4] {
+/// The interesting `BOLD_GRAPH_PASSES` selections, labeled. Tests always
+/// pin the config through `from_layer_with`/`from_records_with` — never
+/// the environment variable, which other test threads read concurrently.
+fn pass_configs() -> [(&'static str, PassConfig); 6] {
     [
         ("none", PassConfig::none()),
-        ("fuse", PassConfig { fuse: true, liveness: false }),
-        ("liveness", PassConfig { fuse: false, liveness: true }),
+        ("fuse", PassConfig { fuse: true, ..PassConfig::none() }),
+        ("liveness", PassConfig { liveness: true, ..PassConfig::none() }),
+        ("lut", PassConfig { lut: true, ..PassConfig::none() }),
+        ("fuse,lut", PassConfig { fuse: true, lut: true, ..PassConfig::none() }),
         ("all", PassConfig::all()),
     ]
 }
@@ -233,7 +236,7 @@ fn liveness_recoloring_is_alias_free_and_compacts_slots() {
             PackedGraph::from_layer_with(&mut model, PassConfig::none()).expect("naive graph");
         let live = PackedGraph::from_layer_with(
             &mut model,
-            PassConfig { fuse: false, liveness: true },
+            PassConfig { liveness: true, ..PassConfig::none() },
         )
         .expect("recolored graph");
 
@@ -276,7 +279,7 @@ fn flatten_is_elided_by_fusion_and_shapes_survive() {
     assert!(naive.summary().contains("Flatten"), "{}", naive.summary());
     let fused = PackedGraph::from_layer_with(
         &mut model,
-        PassConfig { fuse: true, liveness: false },
+        PassConfig { fuse: true, ..PassConfig::none() },
     )
     .expect("fused");
     assert!(!fused.summary().contains("Flatten"), "{}", fused.summary());
@@ -408,6 +411,253 @@ fn negative_and_zero_gamma_bn_channels_fold_correctly() {
     let graph = PackedGraph::from_layer(&mut model).expect("graph");
     let x = Tensor::rand_pm1(&[5, 1, 6, 6], &mut rng);
     assert_parity(&mut model, &graph, &x, "tiny conv, γ<0 / γ=0 channels");
+}
+
+/// Deterministic 64-bit mixer (splitmix64 finalizer) for hand-built
+/// weight words — keeps LUT fixtures reproducible without an Rng dance.
+fn mix(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A fan-in-`k` Boolean FC checkpoint: `BoolLinear(k → n_out)` +
+/// scalar ThresholdAct + FP head — exactly the shape the `lut` pass
+/// folds (via the naive LinearCounts/Threshold pair, or the fused
+/// Linear when `fuse` runs first).
+fn low_fanin_mlp_records(k: usize, n_out: usize, with_bias: bool, seed: u64) -> Vec<Record> {
+    let kmask = (1u64 << k) - 1;
+    let words: Vec<u64> = (0..n_out as u64).map(|j| mix(seed ^ j) & kmask).collect();
+    let mut records = vec![
+        Record::Arch {
+            name: "lutnet".into(),
+            input_shape: vec![k],
+            layers: vec![
+                LayerDesc::BoolLinear { name: "bl".into(), n_in: k, n_out, bias: with_bias },
+                LayerDesc::ThresholdAct { name: "act".into(), tau: 0.5, centered: false },
+                LayerDesc::Linear { name: "head".into(), n_in: n_out, n_out: 4 },
+            ],
+        },
+        Record::Bool { name: "bl.weight".into(), rows: n_out, cols: k, words },
+        Record::Real {
+            name: "head.w".into(),
+            data: (0..4 * n_out).map(|i| (i as f32 * 0.61).sin()).collect(),
+        },
+        Record::Real { name: "head.b".into(), data: vec![0.3, -0.1, 0.0, 0.2] },
+    ];
+    if with_bias {
+        let wpr = n_out.div_ceil(64);
+        let tail = match n_out % 64 {
+            0 => u64::MAX,
+            t => (1u64 << t) - 1,
+        };
+        let mut bias: Vec<u64> = (0..wpr as u64).map(|i| mix(seed ^ 0xB1A5 ^ i)).collect();
+        *bias.last_mut().unwrap() &= tail;
+        records.push(Record::Bool { name: "bl.bias".into(), rows: 1, cols: n_out, words: bias });
+    }
+    records
+}
+
+#[test]
+fn lut_fold_matches_popcount_across_fanins() {
+    // The tentpole acceptance sweep: every fan-in up to the default cap,
+    // with 70 output neurons (two transpose tiles, one partial) and a
+    // 130-row batch (two full lane groups plus a 2-lane tail). Odd
+    // fan-ins also carry a Boolean bias.
+    let mut rng = Rng::new(101);
+    for k in 1..=10usize {
+        let with_bias = k % 2 == 1;
+        let records = low_fanin_mlp_records(k, 70, with_bias, 0xC0FFEE + k as u64);
+        let x = Tensor::rand_pm1(&[130, k], &mut rng);
+        let reference = PackedGraph::from_records_with(&records, PassConfig::none())
+            .expect("reference graph")
+            .forward_f32(&x);
+        for (label, cfg) in pass_configs() {
+            let graph = PackedGraph::from_records_with(&records, cfg).expect("graph");
+            let y = graph.forward_f32(&x);
+            assert_eq!(
+                y.max_abs_diff(&reference),
+                0.0,
+                "fanin {k}: passes={label} diverged from popcount"
+            );
+            if cfg.lut {
+                let ps = graph.pass_stats();
+                assert!(graph.summary().contains("Lut"), "fanin {k}: {}", graph.summary());
+                assert_eq!(ps.lut_ops, 1, "fanin {k}: {ps:?}");
+                assert_eq!(ps.lut_neurons, 70, "fanin {k}: {ps:?}");
+                let tw = (1usize << k).div_ceil(64);
+                assert_eq!(ps.lut_table_bytes, 70 * tw * 8, "fanin {k}: {ps:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn lut_fold_conv_with_folded_bn_and_padding_is_bit_exact() {
+    // Fan-in 9 (1 input channel, k=3) sits under the default cap, so the
+    // conv folds to per-channel tables; pad=1 exercises the masked
+    // border-lane replay, and the γ<0 / γ=0 BN channels exercise flipped
+    // and constant tables.
+    let mut rng = Rng::new(107);
+    let mut model = Sequential::new("tiny");
+    model.push(Box::new(Binarize::new("bin")));
+    model.push(Box::new(BoolConv2d::new("c", 1, 3, 3, 1, 1, &mut rng)));
+    model.push(Box::new(BatchNorm2d::new("bn", 3)));
+    model.push(Box::new(
+        ThresholdAct::new("a", 0.0, BackwardScale::TanhPrime { fanin: 9 }).centered(),
+    ));
+    model.push(Box::new(Flatten::new("fl")));
+    model.push(Box::new(Linear::new("head", 3 * 6 * 6, 4, &mut rng)));
+    warm_up(&mut model, &[4, 1, 6, 6], 108);
+    for p in model.params() {
+        if let ParamRef::Real { name, w } = p {
+            if name == "bn.gamma" {
+                w.data[0] = -0.7;
+                w.data[1] = 0.0;
+            }
+        }
+    }
+    assert_pass_parity(&mut model, &[5, 1, 6, 6], &mut rng, "lut conv pad=1, γ<0/γ=0");
+    let graph = PackedGraph::from_layer_with(&mut model, PassConfig::all()).expect("graph");
+    assert!(graph.summary().contains("Conv2dLut"), "{}", graph.summary());
+    assert_eq!(graph.pass_stats().lut_neurons, 3, "{:?}", graph.pass_stats());
+}
+
+#[test]
+fn lut_fold_conv_pad0_scalar_threshold_is_bit_exact() {
+    // pad=0: every im2col tap is valid, so the serve path never takes
+    // the border fallback; the scalar ThresholdAct covers the
+    // Conv2d+Threshold(Scalar) pair form under `lut` alone.
+    let words: Vec<u64> = (0..4u64).map(|j| mix(0xBEEF ^ j) & 0x1FF).collect();
+    let records = vec![
+        Record::Arch {
+            name: "lutconv".into(),
+            input_shape: vec![1, 8, 8],
+            layers: vec![
+                LayerDesc::BoolConv2d {
+                    name: "c".into(),
+                    c_in: 1,
+                    c_out: 4,
+                    k: 3,
+                    stride: 1,
+                    pad: 0,
+                },
+                LayerDesc::ThresholdAct { name: "a".into(), tau: 0.5, centered: false },
+                LayerDesc::Flatten { name: "fl".into() },
+                LayerDesc::Linear { name: "head".into(), n_in: 4 * 6 * 6, n_out: 3 },
+            ],
+        },
+        Record::Bool { name: "c.weight".into(), rows: 4, cols: 9, words },
+        Record::Real {
+            name: "head.w".into(),
+            data: (0..3 * 144).map(|i| (i as f32 * 0.23).cos()).collect(),
+        },
+        Record::Real { name: "head.b".into(), data: vec![0.0, 0.1, -0.2] },
+    ];
+    let mut rng = Rng::new(109);
+    let x = Tensor::rand_pm1(&[5, 1, 8, 8], &mut rng);
+    let reference = PackedGraph::from_records_with(&records, PassConfig::none())
+        .expect("reference graph")
+        .forward_f32(&x);
+    for (label, cfg) in pass_configs() {
+        let graph = PackedGraph::from_records_with(&records, cfg).expect("graph");
+        let y = graph.forward_f32(&x);
+        assert_eq!(y.max_abs_diff(&reference), 0.0, "conv pad=0: passes={label}");
+        if cfg.lut {
+            assert!(graph.summary().contains("Conv2dLut"), "{}", graph.summary());
+        }
+    }
+}
+
+#[test]
+fn lut_fold_masked_linear_through_from_mlp_is_bit_exact() {
+    // A legacy PackedMlp layer with a ternary input mask (zero lanes are
+    // the three-valued 𝕄 zero): the shared mask folds into the truth
+    // tables, staying bit-identical to xnor_threshold_masked_into.
+    let k = 9usize;
+    let build = || {
+        let words: Vec<u64> = (0..70u64).map(|j| mix(0xA5A5 ^ j) & 0x1FF).collect();
+        let layer = PackedLayer {
+            weights: bold::tensor::BitMatrix::from_words(70, k, words),
+            bias: Some(bold::tensor::BitMatrix::from_words(
+                1,
+                70,
+                vec![mix(0x1234), mix(0x4321) & 0x3F],
+            )),
+            threshold: 1.5,
+            input_mask: Some(vec![0b1_0110_1101]), // 6 of 9 lanes valid
+        };
+        PackedMlp {
+            layers: vec![layer],
+            head_w: Tensor::from_vec(
+                &[3, 70],
+                (0..210).map(|i| (i as f32 * 0.37).sin()).collect(),
+            ),
+            head_b: Tensor::from_vec(&[3], vec![0.1, -0.3, 0.0]),
+        }
+    };
+    let mut rng = Rng::new(113);
+    let x = Tensor::rand_pm1(&[130, k], &mut rng);
+    let packed = bold::tensor::BitMatrix::from_pm1(&x.view(&[130, k]));
+    let reference = PackedGraph::from_mlp(build(), PassConfig::none()).forward_bits(&packed);
+    for (label, cfg) in pass_configs() {
+        let graph = PackedGraph::from_mlp(build(), cfg);
+        let y = graph.forward_bits(&packed);
+        assert_eq!(y.max_abs_diff(&reference), 0.0, "masked mlp: passes={label}");
+        if cfg.lut {
+            assert!(graph.summary().contains("Lut"), "{}", graph.summary());
+        }
+    }
+}
+
+#[test]
+fn wide_layers_stay_on_popcount_and_caps_gate_conversion() {
+    // Every fan-in of this MLP (70, 33, 17) exceeds the default cap of
+    // 10, so the full pipeline must leave the whole graph on popcount —
+    // the stats prove it ran and converted nothing.
+    let mut rng = Rng::new(127);
+    let cfg = MlpConfig { d_in: 70, hidden: vec![33, 17], d_out: 5, tanh_scale: true };
+    let mut model = boolean_mlp(&cfg, &mut rng);
+    let probe = Tensor::rand_pm1(&[2, 70], &mut rng);
+    let _ = model.forward(Value::bit_from_pm1(&probe), false);
+    let graph = PackedGraph::from_layer_with(&mut model, PassConfig::all()).expect("graph");
+    let ps = graph.pass_stats();
+    assert!(ps.lut, "{ps:?}");
+    assert_eq!((ps.lut_ops, ps.lut_neurons, ps.lut_table_bytes), (0, 0, 0), "{ps:?}");
+    assert!(!graph.summary().contains("Lut"), "{}", graph.summary());
+
+    // cap gating on a convertible fan-in-6 layer
+    let records = low_fanin_mlp_records(6, 12, false, 0xFACE);
+    let x = Tensor::rand_pm1(&[9, 6], &mut rng);
+    let reference = PackedGraph::from_records_with(&records, PassConfig::none())
+        .expect("reference graph")
+        .forward_f32(&x);
+    // BOLD_LUT_MAX_FANIN=0 disables the stage entirely
+    let off = PackedGraph::from_records_with(
+        &records,
+        PassConfig { lut_max_fanin: 0, ..PassConfig::all() },
+    )
+    .expect("graph");
+    assert!(!off.pass_stats().lut, "{:?}", off.pass_stats());
+    assert!(!off.summary().contains("Lut"), "{}", off.summary());
+    // a cap below the layer fan-in leaves it on popcount
+    let below = PackedGraph::from_records_with(
+        &records,
+        PassConfig { lut_max_fanin: 5, ..PassConfig::all() },
+    )
+    .expect("graph");
+    assert_eq!(below.pass_stats().lut_ops, 0, "{:?}", below.pass_stats());
+    // an over-wide env cap is clamped to the hard max and still converts
+    let clamped = PackedGraph::from_records_with(
+        &records,
+        PassConfig { lut_max_fanin: 64, ..PassConfig::all() },
+    )
+    .expect("graph");
+    assert_eq!(clamped.pass_stats().lut_ops, 1, "{:?}", clamped.pass_stats());
+    for (what, g) in [("cap 0", &off), ("cap 5", &below), ("cap 64", &clamped)] {
+        assert_eq!(g.forward_f32(&x).max_abs_diff(&reference), 0.0, "{what}");
+    }
 }
 
 #[test]
