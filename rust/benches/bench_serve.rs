@@ -295,7 +295,7 @@ fn open_loop_http(recs: &mut Vec<Rec>) {
     let (probe_s, run_s) = if quick { (1.0, 2.0) } else { (3.0, 8.0) };
     let conns = 32usize;
 
-    let mut registry = ModelRegistry::new();
+    let registry = ModelRegistry::new();
     registry
         .add(
             "mlp",
@@ -345,7 +345,8 @@ fn open_loop_http(recs: &mut Vec<Rec>) {
             us_per_iter: 0.0,
             extra: format!(
                 ",\"offered_per_s\":{:.0},\"p50_us\":{:.1},\"p99_us\":{:.1},\"p999_us\":{:.1},\
-                 \"sent\":{},\"shed\":{},\"expired\":{},\"io_errors\":{}{mem}",
+                 \"sent\":{},\"shed\":{},\"expired\":{},\"io_errors\":{},\"timeouts\":{},\
+                 \"connect_errors\":{},\"s500\":{}{mem}",
                 rep.offered_per_s,
                 rep.p50_us,
                 rep.p99_us,
@@ -353,7 +354,10 @@ fn open_loop_http(recs: &mut Vec<Rec>) {
                 rep.sent,
                 rep.shed,
                 rep.expired,
-                rep.io_errors
+                rep.io_errors,
+                rep.timeouts,
+                rep.connect_errors,
+                rep.by_5xx.iter().find(|(s, _)| *s == 500).map_or(0, |(_, n)| *n)
             ),
         });
     }

@@ -925,6 +925,70 @@ mod tests {
         }
     }
 
+    /// A tail record cut off inside its integrity trailer (the classic
+    /// crash-mid-write shape) must fail with an error NAMING the last
+    /// record — the model-lifecycle layer surfaces that name in
+    /// `/v1/models` when it quarantines the checkpoint.
+    #[test]
+    fn truncated_tail_record_error_names_the_record() {
+        let path = tmp("trunc_tail.ckpt");
+        let mcfg = MlpConfig { d_in: 64, hidden: vec![32], d_out: 4, tanh_scale: true };
+        let mut model = boolean_mlp(&mcfg, &mut Rng::new(3));
+        save_model(&mut model, &path).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        let last = read_records(&path).unwrap().last().expect("records").name().to_string();
+
+        // cut inside the final record's 4-byte CRC trailer: the payload
+        // parses, the trailer read fails, and the error cites the record
+        std::fs::write(&path, &clean[..clean.len() - 2]).unwrap();
+        let err = read_records(&path).expect_err("partial trailer must fail");
+        assert!(
+            err.msg.contains("truncated before integrity trailer"),
+            "unexpected error: {}",
+            err.msg
+        );
+        assert!(
+            err.msg.contains(&format!("'{last}'")),
+            "error must name the tail record '{last}': {}",
+            err.msg
+        );
+    }
+
+    /// A CRC flip in a MIDDLE record (not the first, not the last) is
+    /// detected and named — damage detection cannot depend on the
+    /// corruption being at either end of the file.
+    #[test]
+    fn crc_flipped_middle_record_error_names_the_record() {
+        let path = tmp("flip_mid.ckpt");
+        let mcfg = MlpConfig { d_in: 64, hidden: vec![32], d_out: 4, tanh_scale: true };
+        let mut model = boolean_mlp(&mcfg, &mut Rng::new(8));
+        save_model(&mut model, &path).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        let records = read_records(&path).unwrap();
+        assert!(records.len() >= 3, "need a middle record to corrupt");
+        let mid = records[records.len() / 2].name().to_string();
+
+        // flip one bit inside the middle record's payload; search for the
+        // LAST occurrence of the name so the arch record's layer list
+        // (which also spells parameter names) is not what gets hit
+        let needle = mid.as_bytes();
+        let at = (0..=clean.len() - needle.len())
+            .rev()
+            .find(|&i| &clean[i..i + needle.len()] == needle)
+            .expect("record name present");
+        let mut corrupt = clean.clone();
+        corrupt[at + needle.len() + 16] ^= 0x40;
+        std::fs::write(&path, &corrupt).unwrap();
+
+        let err = read_records(&path).expect_err("middle-record flip must be detected");
+        assert!(err.msg.contains("CRC mismatch"), "unexpected error: {}", err.msg);
+        assert!(
+            err.msg.contains(&format!("'{mid}'")),
+            "error must name the middle record '{mid}': {}",
+            err.msg
+        );
+    }
+
     /// Extra meta records (the dist coordinator's resume cursor) ride
     /// along without disturbing load_training, and read back exactly.
     #[test]

@@ -36,10 +36,12 @@ USAGE:
   bold energy [--arch vgg|resnet] [--base N] [--batch N] [--inference]
   bold serve-native [--model CKPT] [--workers N] [--batch N] [--requests N]
               [--clients N] [--window-us U] [--queue N]
-  bold serve-http [--listen HOST:PORT] [--model NAME=CKPT]... [--threads N]
-              [--workers N] [--batch N] [--queue N] [--window-us U]
+  bold serve-http [--listen HOST:PORT] [--model NAME=CKPT]... [--model-dir DIR]
+              [--threads N] [--workers N] [--batch N] [--queue N] [--window-us U]
               [--deadline-ms D] [--for-secs S]
-              (POST /v1/models/NAME/predict; GET /healthz /v1/models /stats)
+              (POST /v1/models/NAME/predict; GET /healthz /v1/models /stats;
+               POST /admin/models/NAME/load|unload|rollback; SIGHUP re-scans
+               --model-dir; BOLD_CANARY_* / BOLD_BREAKER_* env knobs)
   bold serve  [--artifacts DIR]                 (needs --features xla-runtime)
   bold info
 "#,
@@ -555,12 +557,13 @@ fn cmd_serve_native(args: &[String]) -> Result<(), String> {
 /// given as flags fall back to the `BOLD_HTTP_*` environment variables
 /// (see README §Serving knobs).
 fn cmd_serve_http(args: &[String]) -> Result<(), String> {
-    use bold::runtime::{HttpConfig, HttpServer, ModelRegistry, PackedGraph, ServeConfig};
+    use bold::runtime::{HttpConfig, HttpServer, LifecycleConfig, ModelRegistry, PackedGraph, ServeConfig};
     use std::time::Duration;
 
     let (kv, _) = parse_kv(args)?;
     let mut listen = "127.0.0.1:7878".to_string();
     let mut models: Vec<(String, String)> = Vec::new(); // (name, ckpt path)
+    let mut model_dir: Option<String> = None;
     let mut workers = 4usize;
     let mut batch = 64usize;
     let mut queue_cap = 1024usize;
@@ -576,6 +579,7 @@ fn cmd_serve_http(args: &[String]) -> Result<(), String> {
                     .ok_or_else(|| format!("--model wants NAME=CKPT, got '{v}'"))?;
                 models.push((name.to_string(), path.to_string()));
             }
+            "model-dir" => model_dir = Some(v.clone()),
             "threads" => cfg.threads = v.parse().map_err(|_| "bad --threads")?,
             "workers" => workers = v.parse().map_err(|_| "bad --workers")?,
             "batch" => batch = v.parse().map_err(|_| "bad --batch")?,
@@ -598,8 +602,10 @@ fn cmd_serve_http(args: &[String]) -> Result<(), String> {
         queue_cap,
         batch_window: Duration::from_micros(window_us),
     };
-    let mut registry = ModelRegistry::default();
-    if models.is_empty() {
+    // runtime-added models (admin load of a new name, --model-dir
+    // scans) inherit the same serve config
+    let registry = ModelRegistry::with_defaults(serve_cfg.clone(), LifecycleConfig::from_env());
+    if models.is_empty() && model_dir.is_none() {
         println!("no --model given — serving a randomly initialised MLP as 'mlp'");
         let mut model = boolean_mlp(&MlpConfig::default(), &mut Rng::new(7));
         let graph = bold::runtime::PackedGraph::from_layer(&mut model).map_err(|e| e.to_string())?;
@@ -616,6 +622,13 @@ fn cmd_serve_http(args: &[String]) -> Result<(), String> {
         );
         registry.add(name, graph, serve_cfg.clone()).map_err(|e| e.to_string())?;
     }
+    if let Some(dir) = &model_dir {
+        // initial scan: a corrupt checkpoint registers its entry
+        // quarantined (named in /v1/models) instead of aborting startup
+        for line in registry.rescan_dir(dir) {
+            println!("model-dir: {line}");
+        }
+    }
     let server = HttpServer::start(registry, &listen, cfg).map_err(|e| e.to_string())?;
     println!(
         "listening on http://{} — {} http thread(s), {workers} worker(s)/model, micro-batch \
@@ -623,16 +636,31 @@ fn cmd_serve_http(args: &[String]) -> Result<(), String> {
         server.local_addr(),
         server.config().threads
     );
-    println!("endpoints: POST /v1/models/<name>/predict · GET /healthz /v1/models /stats · POST /admin/shutdown");
+    println!(
+        "endpoints: POST /v1/models/<name>/predict · GET /healthz /v1/models /stats · \
+         POST /admin/models/<name>/load|unload|rollback · POST /admin/shutdown"
+    );
     // park until something asks for a drain: `POST /admin/shutdown`,
     // SIGINT/SIGTERM (zero-dep handler — an atomic flag polled here), or
     // the --for-secs deadline. All three paths drain gracefully: stop
-    // accepting, answer in-flight requests, then join.
+    // accepting, answer in-flight requests, then join. With --model-dir,
+    // SIGHUP triggers a hot re-scan from this loop (never a drain).
     bold::util::signal::install_shutdown_handler();
+    if model_dir.is_some() {
+        bold::util::signal::install_reload_handler();
+    }
     let deadline = for_secs.map(|s| std::time::Instant::now() + Duration::from_secs(s));
     while !server.is_draining() && !bold::util::signal::triggered() {
         if deadline.is_some_and(|d| std::time::Instant::now() >= d) {
             break;
+        }
+        if bold::util::signal::take_hup() {
+            if let Some(dir) = &model_dir {
+                println!("SIGHUP — re-scanning {dir}");
+                for line in server.registry().rescan_dir(dir) {
+                    println!("model-dir: {line}");
+                }
+            }
         }
         std::thread::sleep(Duration::from_millis(50));
     }

@@ -688,6 +688,27 @@ impl PackedGraph {
         }
     }
 
+    /// Behavioral fingerprint: FNV-1a over the bit patterns of the
+    /// logits produced for `n` deterministic seeded probe rows. Two
+    /// graphs agree on the fingerprint iff they are bit-exact on the
+    /// probe set regardless of how they were compiled (popcount vs LUT,
+    /// fused vs not), so the model lifecycle layer
+    /// (runtime/lifecycle.rs) uses it to tag promoted versions in
+    /// `/v1/models` and promotion reports.
+    pub fn behavior_fingerprint(&self, seed: u64, n: usize) -> u64 {
+        let mut rng = crate::util::Rng::new(seed);
+        let probe = BitMatrix::random(n.max(1), self.d_in(), &mut rng);
+        let logits = self.forward_bits(&probe);
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for v in &logits.data {
+            for b in v.to_bits().to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        h
+    }
+
     /// Load a frozen model from a [`crate::coordinator::save_model`]
     /// checkpoint: compiles the embedded `Record::Arch` when present,
     /// otherwise falls back to the [`PackedMlp`] linear-stack loader.

@@ -40,8 +40,19 @@ pub struct LoadReport {
     pub other_4xx: usize,
     /// `5xx` other than 503/504 — should be **zero** in any healthy run.
     pub other_5xx: usize,
-    /// Transport failures (connect/read/write errors).
+    /// [`LoadReport::other_5xx`] broken down by status code (sorted
+    /// ascending). `500` here means worker panics / model failures —
+    /// distinguishable from shed load (`503`) and deadline pressure
+    /// (`504`), which is what the canary and chaos runs diff on.
+    pub by_5xx: Vec<(u16, usize)>,
+    /// Residual transport failures (reset/EOF mid-stream) — what is left
+    /// of the old catch-all after [`LoadReport::timeouts`] and
+    /// [`LoadReport::connect_errors`] are split out.
     pub io_errors: usize,
+    /// Socket read/write deadlines hit mid-roundtrip (a hung server).
+    pub timeouts: usize,
+    /// Failures to establish the TCP connection (refused, unreachable).
+    pub connect_errors: usize,
     /// Latency percentiles over successful (`200`) requests, µs,
     /// measured from the scheduled arrival time.
     pub p50_us: f64,
@@ -62,12 +73,24 @@ impl LoadReport {
             self.goodput_per_s,
             self.shed,
             self.expired,
-            self.other_4xx + self.other_5xx + self.io_errors,
+            self.other_4xx + self.other_5xx + self.io_errors + self.timeouts + self.connect_errors,
             self.p50_us,
             self.p99_us,
             self.p999_us
         )
     }
+}
+
+/// Classified transport failure — which [`LoadReport`] bucket an
+/// `Err` from [`Client::roundtrip_classified`] belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum IoClass {
+    /// `TcpStream::connect` itself failed — the server is down/refusing.
+    Connect,
+    /// A read/write deadline fired mid-roundtrip — the server is hung.
+    Timeout,
+    /// Residual: reset/EOF mid-stream, protocol garbage, etc.
+    Io,
 }
 
 /// One keep-alive client connection with reusable buffers.
@@ -98,11 +121,27 @@ impl Client {
     /// close. The response body is read to completion (keep-alive
     /// framing) but not returned — the load path only needs the status.
     fn roundtrip(&mut self, request: &[u8]) -> std::io::Result<u16> {
-        let res = self.roundtrip_inner(request);
-        if res.is_err() {
-            self.stream = None; // force reconnect after any transport error
+        self.roundtrip_classified(request).map_err(|(_, e)| e)
+    }
+
+    /// [`Client::roundtrip`] plus an [`IoClass`] tag on failure, so
+    /// [`open_loop`] can split the old `io_errors` catch-all into
+    /// connect / timeout / residual buckets.
+    fn roundtrip_classified(&mut self, request: &[u8]) -> Result<u16, (IoClass, std::io::Error)> {
+        match self.roundtrip_inner(request) {
+            Ok(s) => Ok(s),
+            Err(e) => {
+                self.stream = None; // force reconnect after any transport error
+                let class = match e.kind() {
+                    // refused/unreachable surface from `connect`; a live
+                    // kernel never yields them mid-stream
+                    ErrorKind::ConnectionRefused | ErrorKind::AddrNotAvailable => IoClass::Connect,
+                    ErrorKind::TimedOut | ErrorKind::WouldBlock => IoClass::Timeout,
+                    _ => IoClass::Io,
+                };
+                Err((class, e))
+            }
         }
-        res
     }
 
     fn roundtrip_inner(&mut self, request: &[u8]) -> std::io::Result<u16> {
@@ -238,8 +277,17 @@ pub fn open_loop(
         expired: usize,
         other_4xx: usize,
         other_5xx: usize,
+        by_5xx: Vec<(u16, usize)>,
         io_errors: usize,
+        timeouts: usize,
+        connect_errors: usize,
         sent: usize,
+    }
+    fn bump(v: &mut Vec<(u16, usize)>, status: u16) {
+        match v.iter_mut().find(|(s, _)| *s == status) {
+            Some((_, n)) => *n += 1,
+            None => v.push((status, 1)),
+        }
     }
     let shards: Vec<Shard> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..conns)
@@ -252,7 +300,10 @@ pub fn open_loop(
                         expired: 0,
                         other_4xx: 0,
                         other_5xx: 0,
+                        by_5xx: Vec::new(),
                         io_errors: 0,
+                        timeouts: 0,
+                        connect_errors: 0,
                         sent: 0,
                     };
                     let mut client = Client::new(addr);
@@ -264,7 +315,7 @@ pub fn open_loop(
                             std::thread::sleep(due - now);
                         }
                         sh.sent += 1;
-                        match client.roundtrip(request) {
+                        match client.roundtrip_classified(request) {
                             Ok(status) => {
                                 // scheduled-time latency: queueing from a
                                 // late sender or a saturated server both
@@ -278,10 +329,15 @@ pub fn open_loop(
                                     503 => sh.shed += 1,
                                     504 => sh.expired += 1,
                                     400..=499 => sh.other_4xx += 1,
-                                    _ => sh.other_5xx += 1,
+                                    _ => {
+                                        sh.other_5xx += 1;
+                                        bump(&mut sh.by_5xx, status);
+                                    }
                                 }
                             }
-                            Err(_) => sh.io_errors += 1,
+                            Err((IoClass::Connect, _)) => sh.connect_errors += 1,
+                            Err((IoClass::Timeout, _)) => sh.timeouts += 1,
+                            Err((IoClass::Io, _)) => sh.io_errors += 1,
                         }
                         i += conns;
                     }
@@ -301,9 +357,18 @@ pub fn open_loop(
         rep.expired += sh.expired;
         rep.other_4xx += sh.other_4xx;
         rep.other_5xx += sh.other_5xx;
+        for (status, n) in sh.by_5xx {
+            match rep.by_5xx.iter_mut().find(|(s, _)| *s == status) {
+                Some((_, m)) => *m += n,
+                None => rep.by_5xx.push((status, n)),
+            }
+        }
         rep.io_errors += sh.io_errors;
+        rep.timeouts += sh.timeouts;
+        rep.connect_errors += sh.connect_errors;
         rep.sent += sh.sent;
     }
+    rep.by_5xx.sort_unstable();
     lat.sort_unstable_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
     let pct = |p: f64| {
         if lat.is_empty() {
@@ -335,7 +400,7 @@ mod tests {
     }
 
     #[test]
-    fn refused_connections_count_as_io_errors_not_panics() {
+    fn refused_connections_count_as_connect_errors_not_panics() {
         let addr = closed_port_addr();
         let req = render_predict("m", b"1,-1", "text/plain");
 
@@ -345,9 +410,14 @@ mod tests {
         assert!(rep.sent >= 1, "arrivals fire regardless of server state: {rep:?}");
         assert_eq!(rep.ok, 0, "nothing can succeed against a closed port: {rep:?}");
         assert_eq!(
-            rep.io_errors, rep.sent,
-            "every refused connect must be charged to io_errors: {rep:?}"
+            rep.connect_errors, rep.sent,
+            "every refused connect must be charged to connect_errors: {rep:?}"
         );
+        assert_eq!(
+            rep.io_errors, 0,
+            "a refused connect is a classified failure, not residual io: {rep:?}"
+        );
+        assert_eq!(rep.timeouts, 0, "no deadline ever fires on a dead port: {rep:?}");
         assert_eq!(rep.goodput_per_s, 0.0);
 
         // closed-loop probe against the same dead port: zero rate, no hang
@@ -383,10 +453,13 @@ mod tests {
             rep
         });
         assert_eq!(rep.ok, 0, "a server that never answers yields no 200s: {rep:?}");
+        // EOF/RST after a successful connect is the *residual* transport
+        // class — it must not leak into connect_errors or timeouts.
         assert_eq!(
             rep.io_errors, rep.sent,
-            "every accept-then-close roundtrip must be an io_error: {rep:?}"
+            "every accept-then-close roundtrip must stay an io_error: {rep:?}"
         );
+        assert_eq!(rep.connect_errors, 0, "the listener accepted every connect: {rep:?}");
         assert!(
             rep.sent >= 2,
             "the client must keep reconnecting after resets, not stop at one: {rep:?}"

@@ -21,12 +21,16 @@
 //!
 //! On top of the native path, [`http`] + [`net`] expose the server over
 //! real TCP with a zero-dependency HTTP/1.1 front-end (`bold
-//! serve-http`), and [`loadgen`] is the matching open-loop load harness
-//! (DESIGN.md §Network-Front-End).
+//! serve-http`), [`lifecycle`] keeps the model registry *live* (hot
+//! checkpoint reload behind a shadow-validation canary, per-model
+//! circuit breakers with automatic rollback — DESIGN.md
+//! §Model-Lifecycle), and [`loadgen`] is the matching open-loop load
+//! harness (DESIGN.md §Network-Front-End).
 
 pub mod engine;
 pub mod graph;
 pub mod http;
+pub mod lifecycle;
 pub mod loadgen;
 pub mod net;
 pub mod passes;
@@ -43,8 +47,12 @@ pub use passes::{PassConfig, PassStats, LUT_DEFAULT_MAX_FANIN, LUT_HARD_MAX_FANI
 #[cfg(feature = "xla-runtime")]
 pub use pjrt::{literal_to_tensor, tensor_to_literal, PjrtError, PjrtExecutor};
 pub use http::{HttpError, HttpLimits, HttpParser, Parse, ResponseWriter};
+pub use lifecycle::{
+    Admission, CanaryVerdict, EntrySnapshot, HealthState, LifecycleConfig, LifecycleError,
+    LifecycleErrorKind, ModelEntry, ModelRegistry, PromotionReport,
+};
 pub use loadgen::{closed_loop_rate, open_loop, render_predict, LoadReport};
-pub use net::{HttpConfig, HttpServer, HttpStats, ModelRegistry};
+pub use net::{HttpConfig, HttpServer, HttpStats};
 pub use serve::{
     NativeServer, Pending, Response, ServeConfig, ServeError, ServerStats, TrySubmitError,
 };

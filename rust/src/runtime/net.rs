@@ -25,6 +25,13 @@
 //! * a **multi-model registry** maps `POST /v1/models/<name>/predict`
 //!   to per-model [`NativeServer`]s, so one process serves several
 //!   checkpoints, each with its own bounded queue and micro-batcher.
+//!   The registry is *live* (runtime/lifecycle.rs): `POST
+//!   /admin/models/<name>/load|unload|rollback` stages checkpoints
+//!   through a shadow-validation canary and promotes them atomically
+//!   under load, and a per-model circuit breaker (Healthy → Degraded →
+//!   Quarantined) answers `503` + `Retry-After` for a quarantined
+//!   model — with frozen per-model counters — while every other model
+//!   keeps serving.
 //!
 //! Overload + robustness semantics (exercised by `tests/net_faults.rs`):
 //!
@@ -46,10 +53,14 @@
 //!   `Connection: close`), then drains the model queues — every
 //!   accepted request is answered.
 
-use super::graph::PackedGraph;
 use super::http::{HttpError, HttpLimits, HttpParser, Parse, ResponseWriter};
-use super::serve::{NativeServer, ServeConfig, ServeError, TrySubmitError};
+use super::lifecycle::{Admission, LifecycleError, LifecycleErrorKind};
+use super::serve::TrySubmitError;
 use crate::util::pool::JobQueue;
+
+// the registry lived here before the lifecycle subsystem; re-exported so
+// `runtime::net::ModelRegistry` call sites keep working
+pub use super::lifecycle::ModelRegistry;
 use std::fmt::Write as _;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -100,6 +111,11 @@ pub struct HttpConfig {
     pub request_deadline: Duration,
     /// Bounded accepted-connection queue (overflow ⇒ immediate `503`).
     pub conn_backlog: usize,
+    /// Enable the test-only `POST /admin/models/<name>/inject_panic`
+    /// endpoint (the chaos-soak suite drives a *separate process*'s
+    /// panic containment through it); `404` when off.
+    /// Env: `BOLD_FAULT_INJECT` (any non-`0` value ⇒ on).
+    pub fault_inject: bool,
 }
 
 impl Default for HttpConfig {
@@ -116,64 +132,9 @@ impl Default for HttpConfig {
             head_timeout: env_ms("BOLD_HTTP_HEAD_TIMEOUT_MS", 10_000),
             request_deadline: env_ms("BOLD_HTTP_DEADLINE_MS", 2_000),
             conn_backlog: env_usize("BOLD_HTTP_CONN_BACKLOG", 256),
+            fault_inject: std::env::var("BOLD_FAULT_INJECT")
+                .is_ok_and(|v| !v.is_empty() && v != "0"),
         }
-    }
-}
-
-/// Several frozen checkpoints behind one process: each entry owns a
-/// running [`NativeServer`] (bounded queue + batch workers), addressed
-/// by `POST /v1/models/<name>/predict`.
-pub struct ModelRegistry {
-    entries: Vec<(String, NativeServer)>,
-}
-
-impl ModelRegistry {
-    pub fn new() -> Self {
-        ModelRegistry { entries: Vec::new() }
-    }
-
-    /// Start a batch server for `model` under `name`. Names are path
-    /// segments: `[A-Za-z0-9._-]+`, unique within the registry.
-    pub fn add(
-        &mut self,
-        name: &str,
-        model: impl Into<PackedGraph>,
-        cfg: ServeConfig,
-    ) -> Result<(), ServeError> {
-        if name.is_empty()
-            || !name
-                .chars()
-                .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
-        {
-            return Err(ServeError { msg: format!("invalid model name '{name}'") });
-        }
-        if self.get(name).is_some() {
-            return Err(ServeError { msg: format!("duplicate model name '{name}'") });
-        }
-        self.entries.push((name.to_string(), NativeServer::start(model, cfg)));
-        Ok(())
-    }
-
-    pub fn get(&self, name: &str) -> Option<&NativeServer> {
-        self.entries.iter().find(|(n, _)| n == name).map(|(_, s)| s)
-    }
-
-    pub fn names(&self) -> Vec<&str> {
-        self.entries.iter().map(|(n, _)| n.as_str()).collect()
-    }
-
-    pub fn len(&self) -> usize {
-        self.entries.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
-    }
-}
-
-impl Default for ModelRegistry {
-    fn default() -> Self {
-        Self::new()
     }
 }
 
@@ -556,12 +517,32 @@ fn respond(
             stream.write_all(writer.render(405, &[("Allow", "POST")], body.as_bytes(), keep))?;
             return Ok(keep);
         }
-        let Some(server) = sh.registry.get(name) else {
+        let Some(entry) = sh.registry.entry(name) else {
             sh.count_status(404);
             let msg = format!("unknown model '{name}'");
             let _ = writeln!(body, "{{\"error\":{msg:?}}}");
             stream.write_all(writer.render(404, &[], body.as_bytes(), keep))?;
             return Ok(keep);
+        };
+        // circuit breaker gate: a quarantined model answers 503 +
+        // Retry-After without advancing any of its counters (the
+        // net_faults suite asserts the freeze), while the `Arc` returned
+        // for an admitted request pins its model version for the
+        // request's lifetime — a concurrent promotion retires the old
+        // server only after every admitted request is answered
+        let server = match entry.admit() {
+            Admission::Serve(s) => s,
+            Admission::Refused { reason } => {
+                sh.count_status(503);
+                let _ = writeln!(body, "{{\"error\":{reason:?}}}");
+                stream.write_all(writer.render(
+                    503,
+                    &[("Retry-After", "1")],
+                    body.as_bytes(),
+                    keep,
+                ))?;
+                return Ok(keep);
+            }
         };
         match parse_features(parser, server.d_in(), feats) {
             Ok(()) => {}
@@ -575,8 +556,11 @@ fn respond(
         match server.try_submit(feats) {
             Err(TrySubmitError::Full) => {
                 // admission control: the bounded queue is the overload
-                // contract — shed with Retry-After, never block or hang
+                // contract — shed with Retry-After, never block or hang.
+                // Shedding is overload, not model failure: it is tracked
+                // per model but never feeds the circuit breaker
                 sh.count_status(503);
+                entry.note_shed();
                 body.push_str("{\"error\":\"model queue full\"}\n");
                 stream.write_all(writer.render(
                     503,
@@ -593,10 +577,12 @@ fn respond(
                 Ok(false)
             }
             Ok(pending) => {
+                entry.note_submitted();
                 let remaining = sh.cfg.request_deadline.saturating_sub(t_ready.elapsed());
                 match pending.wait_timeout(remaining) {
                     Ok(Some(resp)) => {
                         sh.count_status(200);
+                        entry.note_ok();
                         let _ = write!(body, "{{\"model\":{name:?},\"class\":{}", resp.class);
                         body.push_str(",\"logits\":[");
                         for (i, l) in resp.logits.iter().enumerate() {
@@ -610,7 +596,10 @@ fn respond(
                         Ok(keep)
                     }
                     Ok(None) => {
+                        // deadline pressure is an overload signal, not a
+                        // broken model: tracked, but not a breaker input
                         sh.count_status(504);
+                        entry.note_expired();
                         body.push_str("{\"error\":\"deadline exceeded\"}\n");
                         stream.write_all(writer.render(504, &[], body.as_bytes(), keep))?;
                         Ok(keep)
@@ -619,8 +608,12 @@ fn respond(
                         // the batch worker panicked mid-forward: the fault
                         // is contained (worker respawned, counted in
                         // /stats) and THIS request failed — a server
-                        // error, not a drain, so keep-alive survives
+                        // error, not a drain, so keep-alive survives.
+                        // Panics are the breaker's strongest input:
+                        // enough of them in one window auto-rolls back
+                        // to last-known-good or quarantines the entry
                         sh.count_status(500);
+                        entry.note_failure(true);
                         body.push_str("{\"error\":\"batch worker panicked; request not served\"}\n");
                         stream.write_all(writer.render(500, &[], body.as_bytes(), keep))?;
                         Ok(keep)
@@ -634,9 +627,161 @@ fn respond(
                 }
             }
         }
+    } else if let Some(rest) = path.strip_prefix("/admin/models/") {
+        respond_admin(sh, rest, parser, writer, body, stream, keep)
     } else {
         respond_aux(sh, method, path, writer, body, stream, keep)
     }
+}
+
+/// `POST /admin/models/<name>/load|unload|rollback` (plus the
+/// fault-injection-gated `inject_panic`) — the model-lifecycle admin
+/// surface (runtime/lifecycle.rs). `load` takes a plain-text body: a
+/// checkpoint path, optionally followed by the token `allow_divergence`
+/// for genuinely retrained weights.
+fn respond_admin(
+    sh: &NetShared,
+    rest: &str,
+    parser: &HttpParser,
+    writer: &mut ResponseWriter,
+    body: &mut String,
+    stream: &mut TcpStream,
+    keep: bool,
+) -> std::io::Result<bool> {
+    let Some((name, action)) = rest.rsplit_once('/') else {
+        sh.count_status(404);
+        body.push_str("{\"error\":\"no such endpoint\"}\n");
+        stream.write_all(writer.render(404, &[], body.as_bytes(), keep))?;
+        return Ok(keep);
+    };
+    if parser.method() != "POST" {
+        sh.count_status(405);
+        body.push_str("{\"error\":\"model admin requires POST\"}\n");
+        stream.write_all(writer.render(405, &[("Allow", "POST")], body.as_bytes(), keep))?;
+        return Ok(keep);
+    }
+    match action {
+        "load" => {
+            let text = std::str::from_utf8(parser.body()).unwrap_or("");
+            let mut toks = text.split_ascii_whitespace();
+            let Some(ckpt) = toks.next() else {
+                sh.count_status(400);
+                body.push_str(
+                    "{\"error\":\"load requires a body: <checkpoint-path> [allow_divergence]\"}\n",
+                );
+                stream.write_all(writer.render(400, &[], body.as_bytes(), keep))?;
+                return Ok(keep);
+            };
+            let allow = toks.next() == Some("allow_divergence");
+            // staging + canary run on this HTTP worker thread, entirely
+            // off the predict path — the incumbent keeps serving via
+            // the other workers until the one-pointer-swap promotion
+            match sh.registry.load_checkpoint(name, ckpt, allow) {
+                Ok(rep) => {
+                    sh.count_status(200);
+                    let canary = rep.canary.describe();
+                    let _ = writeln!(
+                        body,
+                        "{{\"model\":{:?},\"version\":{},\"canary\":{canary:?},\
+                         \"fingerprint\":\"{:016x}\"}}",
+                        rep.model, rep.version, rep.fingerprint
+                    );
+                    stream.write_all(writer.render(200, &JSON_CT, body.as_bytes(), keep))?;
+                    Ok(keep)
+                }
+                Err(e) => write_lifecycle_error(sh, &e, writer, body, stream, keep),
+            }
+        }
+        "rollback" => match sh.registry.rollback(name) {
+            Ok(rep) => {
+                sh.count_status(200);
+                let _ = writeln!(
+                    body,
+                    "{{\"model\":{:?},\"version\":{},\"fingerprint\":\"{:016x}\"}}",
+                    rep.model, rep.version, rep.fingerprint
+                );
+                stream.write_all(writer.render(200, &JSON_CT, body.as_bytes(), keep))?;
+                Ok(keep)
+            }
+            Err(e) => write_lifecycle_error(sh, &e, writer, body, stream, keep),
+        },
+        "unload" => {
+            if sh.registry.unload(name) {
+                sh.count_status(200);
+                let _ = writeln!(body, "{{\"model\":{name:?},\"unloaded\":true}}");
+                stream.write_all(writer.render(200, &JSON_CT, body.as_bytes(), keep))?;
+            } else {
+                sh.count_status(404);
+                let msg = format!("unknown model '{name}'");
+                let _ = writeln!(body, "{{\"error\":{msg:?}}}");
+                stream.write_all(writer.render(404, &[], body.as_bytes(), keep))?;
+            }
+            Ok(keep)
+        }
+        "inject_panic" => {
+            if !sh.cfg.fault_inject {
+                sh.count_status(404);
+                body.push_str("{\"error\":\"no such endpoint\"}\n");
+                stream.write_all(writer.render(404, &[], body.as_bytes(), keep))?;
+                return Ok(keep);
+            }
+            let n = std::str::from_utf8(parser.body())
+                .ok()
+                .and_then(|s| s.trim().parse::<usize>().ok())
+                .unwrap_or(1);
+            match sh.registry.entry(name).map(|e| e.server()) {
+                Some(Some(server)) => {
+                    server.inject_panics(n);
+                    sh.count_status(200);
+                    let _ = writeln!(body, "{{\"injected\":{n}}}");
+                    stream.write_all(writer.render(200, &JSON_CT, body.as_bytes(), keep))?;
+                }
+                Some(None) => {
+                    sh.count_status(409);
+                    body.push_str("{\"error\":\"model is not serving\"}\n");
+                    stream.write_all(writer.render(409, &[], body.as_bytes(), keep))?;
+                }
+                None => {
+                    sh.count_status(404);
+                    let msg = format!("unknown model '{name}'");
+                    let _ = writeln!(body, "{{\"error\":{msg:?}}}");
+                    stream.write_all(writer.render(404, &[], body.as_bytes(), keep))?;
+                }
+            }
+            Ok(keep)
+        }
+        _ => {
+            sh.count_status(404);
+            body.push_str("{\"error\":\"no such endpoint\"}\n");
+            stream.write_all(writer.render(404, &[], body.as_bytes(), keep))?;
+            Ok(keep)
+        }
+    }
+}
+
+/// Map a lifecycle failure onto HTTP: corrupt/invalid input is the
+/// caller's `400`, unknown names `404`, and state conflicts (canary
+/// divergence, shape mismatch, nothing to roll back) `409` — the
+/// incumbent keeps serving in every case.
+fn write_lifecycle_error(
+    sh: &NetShared,
+    e: &LifecycleError,
+    writer: &mut ResponseWriter,
+    body: &mut String,
+    stream: &mut TcpStream,
+    keep: bool,
+) -> std::io::Result<bool> {
+    let status = match e.kind {
+        LifecycleErrorKind::InvalidName | LifecycleErrorKind::Corrupt => 400,
+        LifecycleErrorKind::NoSuchModel => 404,
+        LifecycleErrorKind::ShapeMismatch
+        | LifecycleErrorKind::CanaryDivergence
+        | LifecycleErrorKind::NothingToRollBack => 409,
+    };
+    sh.count_status(status);
+    let _ = writeln!(body, "{{\"error\":{:?}}}", e.msg);
+    stream.write_all(writer.render(status, &[], body.as_bytes(), keep))?;
+    Ok(keep)
 }
 
 /// The non-predict endpoints (health, registry listing, counters,
@@ -660,24 +805,46 @@ fn respond_aux(
         ("GET", "/v1/models") => {
             sh.count_status(200);
             body.push_str("{\"models\":[");
-            for (i, name) in sh.registry.names().iter().enumerate() {
-                let s = sh.registry.get(name).expect("registered");
+            for (i, entry) in sh.registry.entries().iter().enumerate() {
                 if i > 0 {
                     body.push(',');
                 }
-                let ps = s.model().pass_stats();
+                // quarantined entries keep their route identity
+                // (d_in/d_out from the registered route) and surface the
+                // quarantine reason — e.g. the failing checkpoint record
+                // — in `note`/`last_load_error`; compile-derived fields
+                // zero out while no version is serving
+                let snap = entry.snapshot();
+                let (ops, queue_cap, slots_raw, slots_live, lut_neurons, lut_table_bytes) =
+                    match &snap.server {
+                        Some(s) => {
+                            let ps = s.model().pass_stats();
+                            (
+                                s.model().num_ops(),
+                                s.queue_cap(),
+                                ps.raw_slots,
+                                ps.live_slots,
+                                ps.lut_neurons,
+                                ps.lut_table_bytes,
+                            )
+                        }
+                        None => (0, 0, 0, 0, 0, 0),
+                    };
                 let _ = write!(
                     body,
-                    "{{\"name\":{name:?},\"d_in\":{},\"d_out\":{},\"ops\":{},\"queue_cap\":{},\
-                     \"slots_raw\":{},\"slots_live\":{},\"lut_neurons\":{},\"lut_table_bytes\":{}}}",
-                    s.d_in(),
-                    s.model().d_out(),
-                    s.model().num_ops(),
-                    s.queue_cap(),
-                    ps.raw_slots,
-                    ps.live_slots,
-                    ps.lut_neurons,
-                    ps.lut_table_bytes
+                    "{{\"name\":{:?},\"d_in\":{},\"d_out\":{},\"ops\":{ops},\
+                     \"queue_cap\":{queue_cap},\"slots_raw\":{slots_raw},\
+                     \"slots_live\":{slots_live},\"lut_neurons\":{lut_neurons},\
+                     \"lut_table_bytes\":{lut_table_bytes},\"health\":{:?},\"version\":{},\
+                     \"fingerprint\":\"{:016x}\",\"note\":{},\"last_load_error\":{}}}",
+                    snap.name,
+                    snap.d_in,
+                    snap.d_out,
+                    snap.health.as_str(),
+                    snap.version,
+                    snap.fingerprint,
+                    json_opt(&snap.note),
+                    json_opt(&snap.last_load_error)
                 );
             }
             body.push_str("]}\n");
@@ -702,33 +869,57 @@ fn respond_aux(
                 st.aborted
             );
             // contained batch-worker panics, summed across models
-            let panics: usize = sh
-                .registry
-                .names()
-                .iter()
-                .map(|n| sh.registry.get(n).expect("registered").stats().worker_panics)
-                .sum();
+            // (includes retired versions — per-model totals never reset
+            // on promotion or quarantine)
+            let entries = sh.registry.entries();
+            let panics: usize = entries.iter().map(|e| e.snapshot().worker_panics).sum();
             let _ = write!(body, ",\"worker_panics\":{panics}");
             // per-worker GraphScratch footprints per model (bytes; zero
-            // until a worker has run its first batch)
+            // until a worker has run its first batch; empty while a
+            // model has no serving version)
             let mut total = 0usize;
             body.push_str(",\"scratch_per_worker\":{");
-            for (i, name) in sh.registry.names().iter().enumerate() {
-                let s = sh.registry.get(name).expect("registered");
+            for (i, e) in entries.iter().enumerate() {
                 if i > 0 {
                     body.push(',');
                 }
-                let _ = write!(body, "{name:?}:[");
-                for (j, b) in s.worker_scratch_bytes().iter().enumerate() {
-                    if j > 0 {
-                        body.push(',');
+                let _ = write!(body, "{:?}:[", e.name());
+                if let Some(s) = e.server() {
+                    for (j, b) in s.worker_scratch_bytes().iter().enumerate() {
+                        if j > 0 {
+                            body.push(',');
+                        }
+                        let _ = write!(body, "{b}");
+                        total += b;
                     }
-                    let _ = write!(body, "{b}");
-                    total += b;
                 }
                 body.push(']');
             }
-            let _ = writeln!(body, "}},\"scratch_bytes\":{total}}}");
+            let _ = write!(body, "}},\"scratch_bytes\":{total}");
+            // per-model lifecycle counters — the circuit breaker's
+            // view; a quarantined model's map entry stops moving
+            body.push_str(",\"models\":{");
+            for (i, e) in entries.iter().enumerate() {
+                if i > 0 {
+                    body.push(',');
+                }
+                let snap = e.snapshot();
+                let _ = write!(
+                    body,
+                    "{:?}:{{\"health\":{:?},\"version\":{},\"requests\":{},\"ok\":{},\
+                     \"errors\":{},\"shed\":{},\"expired\":{},\"worker_panics\":{}}}",
+                    snap.name,
+                    snap.health.as_str(),
+                    snap.version,
+                    snap.requests,
+                    snap.ok,
+                    snap.errors,
+                    snap.shed,
+                    snap.expired,
+                    snap.worker_panics
+                );
+            }
+            body.push_str("}}\n");
             stream.write_all(writer.render(200, &JSON_CT, body.as_bytes(), keep))?;
             Ok(keep)
         }
@@ -755,6 +946,14 @@ fn respond_aux(
 }
 
 const JSON_CT: [(&str, &str); 1] = [("Content-Type", "application/json")];
+
+/// `Some(s)` as an escaped JSON string, `None` as `null`.
+fn json_opt(v: &Option<String>) -> String {
+    match v {
+        Some(s) => format!("{s:?}"),
+        None => "null".to_string(),
+    }
+}
 
 /// Decode the request body into `d_in` f32 features, reusing `feats`.
 /// Two encodings: raw little-endian f32 (`Content-Type:

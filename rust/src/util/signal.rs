@@ -1,25 +1,30 @@
-//! Zero-dependency SIGINT/SIGTERM shutdown flag.
+//! Zero-dependency SIGINT/SIGTERM shutdown flag + SIGHUP reload flag.
 //!
 //! `bold serve-http` and `bold train-dist` are long-running foreground
 //! processes; Ctrl-C under load must trigger the same graceful drain as
-//! `POST /admin/shutdown` instead of tearing connections mid-response. The
-//! offline registry has no `signal-hook` or `libc` crate, so on Unix we
-//! declare the two C symbols we need (`signal`, `raise` — already linked
-//! into every std binary) ourselves and install a handler that does the
-//! only async-signal-safe thing possible: set a static [`AtomicBool`]. The
-//! main loop polls [`triggered`] at its own cadence.
+//! `POST /admin/shutdown` instead of tearing connections mid-response, and
+//! `kill -HUP` must trigger a `--model-dir` re-scan (hot checkpoint
+//! reload, DESIGN.md §Model-Lifecycle) without touching in-flight
+//! requests. The offline registry has no `signal-hook` or `libc` crate,
+//! so on Unix we declare the two C symbols we need (`signal`, `raise` —
+//! already linked into every std binary) ourselves and install handlers
+//! that do the only async-signal-safe thing possible: set a static
+//! [`AtomicBool`]. The main loop polls [`triggered`] / [`take_hup`] at
+//! its own cadence.
 //!
 //! Non-Unix targets compile to a no-op installer so the call sites stay
-//! unconditional.
+//! unconditional (and [`take_hup`] simply never fires).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 
 static TRIGGERED: AtomicBool = AtomicBool::new(false);
+static HUP: AtomicBool = AtomicBool::new(false);
 
 #[cfg(unix)]
 mod imp {
     use super::*;
 
+    pub const SIGHUP: i32 = 1;
     pub const SIGINT: i32 = 2;
     pub const SIGTERM: i32 = 15;
 
@@ -36,10 +41,20 @@ mod imp {
         TRIGGERED.store(true, Ordering::Release);
     }
 
+    extern "C" fn on_hup(_signum: i32) {
+        HUP.store(true, Ordering::Release);
+    }
+
     pub fn install() {
         unsafe {
             signal(SIGINT, on_signal as usize);
             signal(SIGTERM, on_signal as usize);
+        }
+    }
+
+    pub fn install_hup() {
+        unsafe {
+            signal(SIGHUP, on_hup as usize);
         }
     }
 
@@ -53,13 +68,15 @@ mod imp {
 
 #[cfg(not(unix))]
 mod imp {
+    pub const SIGHUP: i32 = 1;
     pub const SIGINT: i32 = 2;
     pub const SIGTERM: i32 = 15;
     pub fn install() {}
+    pub fn install_hup() {}
     pub fn raise_signal(_signum: i32) {}
 }
 
-pub use imp::{SIGINT, SIGTERM};
+pub use imp::{SIGHUP, SIGINT, SIGTERM};
 
 /// Install the SIGINT/SIGTERM handler. Idempotent; call once at the top of
 /// a long-running command before entering its poll loop.
@@ -67,14 +84,30 @@ pub fn install_shutdown_handler() {
     imp::install();
 }
 
+/// Install the SIGHUP handler ([`take_hup`] observes deliveries).
+/// Idempotent; `serve-http` installs it when `--model-dir` is given. As a
+/// side effect a HUP no longer kills the process (the default
+/// disposition), which is exactly what a hot-reload daemon wants.
+pub fn install_reload_handler() {
+    imp::install_hup();
+}
+
 /// True once SIGINT or SIGTERM has been received (sticky).
 pub fn triggered() -> bool {
     TRIGGERED.load(Ordering::Acquire)
 }
 
-/// Reset the flag (tests only — production commands exit after a trigger).
+/// Consume a pending SIGHUP: true at most once per delivery
+/// (edge-triggered — coalesced signals trigger one re-scan, which is
+/// fine because a re-scan examines every checkpoint anyway).
+pub fn take_hup() -> bool {
+    HUP.swap(false, Ordering::AcqRel)
+}
+
+/// Reset the flags (tests only — production commands exit after a trigger).
 pub fn reset() {
     TRIGGERED.store(false, Ordering::Release);
+    HUP.store(false, Ordering::Release);
 }
 
 /// Send `signum` to the current process. Exposed for the integration tests
@@ -92,6 +125,7 @@ mod tests {
     #[test]
     fn handler_sets_sticky_flag_for_int_and_term() {
         install_shutdown_handler();
+        install_reload_handler();
         reset();
         assert!(!triggered());
 
@@ -103,6 +137,15 @@ mod tests {
         reset();
         raise_for_test(SIGINT);
         assert!(triggered(), "SIGINT must set the flag");
+
+        // SIGHUP is a separate, edge-triggered flag: it must not touch
+        // the shutdown flag, and take_hup() consumes it.
+        reset();
+        assert!(!take_hup());
+        raise_for_test(SIGHUP);
+        assert!(!triggered(), "HUP is reload, not shutdown");
+        assert!(take_hup(), "first poll consumes the delivery");
+        assert!(!take_hup(), "edge-triggered: second poll sees nothing");
         reset();
     }
 }

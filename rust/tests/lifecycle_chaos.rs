@@ -1,0 +1,238 @@
+//! Chaos soak for the live model lifecycle (ISSUE 10), end to end over
+//! the real binary: spawn `bold serve-http` with two checkpoint-backed
+//! models, drive fixed-rate open-loop load against one while the other
+//! absorbs injected worker panics, hot-reload the loaded model
+//! mid-flight through the canary-gated admin endpoint, then drain over
+//! the wire. The acceptance contract: **zero hung requests** (every
+//! arrival is answered — no timeouts, no transport errors) and a clean
+//! process exit.
+//!
+//! The breaker thresholds are raised out of reach via env so the soak
+//! measures request-path stability in isolation; breaker trips,
+//! quarantine and rollback have their own suite in `tests/net_faults.rs`
+//! and `runtime/lifecycle.rs`.
+
+use bold::coordinator::save_model;
+use bold::models::{boolean_mlp, MlpConfig};
+use bold::runtime::loadgen;
+use bold::util::Rng;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+const D_IN: usize = 64;
+
+fn tmp(name: &str) -> String {
+    let dir = std::env::temp_dir().join("bold_lifecycle_chaos");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name).to_str().unwrap().to_string()
+}
+
+fn mlp_ckpt(path: &str, seed: u64) {
+    let cfg = MlpConfig { d_in: D_IN, hidden: vec![32], d_out: 10, tanh_scale: true };
+    let mut model = boolean_mlp(&cfg, &mut Rng::new(seed));
+    save_model(&mut model, path).expect("save checkpoint");
+}
+
+/// One raw request on a fresh connection; read one framed response
+/// (status line + headers + Content-Length body) with a 10 s timeout —
+/// a hang here is exactly the failure the soak exists to catch.
+fn roundtrip(addr: &str, raw: &[u8]) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(raw).expect("send");
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let head_end = loop {
+        if let Some(p) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break p + 4;
+        }
+        let n = s.read(&mut chunk).expect("read head");
+        assert!(n > 0, "connection closed before a full response head");
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).to_string();
+    let cl: usize = head
+        .lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.trim().eq_ignore_ascii_case("content-length").then(|| v.trim().parse().ok())?
+        })
+        .unwrap_or(0);
+    while buf.len() < head_end + cl {
+        let n = s.read(&mut chunk).expect("read body");
+        assert!(n > 0, "connection closed mid-body");
+        buf.extend_from_slice(&chunk[..n]);
+    }
+    String::from_utf8_lossy(&buf[..head_end + cl]).to_string()
+}
+
+fn post(addr: &str, path: &str, body: &str) -> String {
+    let raw = format!(
+        "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    roundtrip(addr, raw.as_bytes())
+}
+
+fn status_of(resp: &str) -> u16 {
+    resp.split_whitespace().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0)
+}
+
+/// Wait for the child to exit within `limit`, killing it on overrun so
+/// the suite fails with a message instead of wedging the CI job.
+fn wait_with_deadline(child: &mut Child, limit: Duration) -> std::process::ExitStatus {
+    let deadline = Instant::now() + limit;
+    loop {
+        if let Some(st) = child.try_wait().expect("try_wait") {
+            return st;
+        }
+        if Instant::now() >= deadline {
+            let _ = child.kill();
+            let _ = child.wait();
+            panic!("serve-http did not drain and exit within {limit:?}");
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+#[test]
+fn chaos_soak_reload_and_panics_under_load_drain_clean() {
+    let ckpt_a = tmp("soak_a.ckpt");
+    let ckpt_b = tmp("soak_b.ckpt");
+    mlp_ckpt(&ckpt_a, 11);
+    mlp_ckpt(&ckpt_b, 22);
+
+    let mut child = Command::new(env!("CARGO_BIN_EXE_bold"))
+        .args([
+            "serve-http",
+            "--listen",
+            "127.0.0.1:0",
+            "--model",
+            &format!("a={ckpt_a}"),
+            "--model",
+            &format!("b={ckpt_b}"),
+            "--threads",
+            "8",
+            "--workers",
+            "2",
+            "--batch",
+            "8",
+            "--queue",
+            "256",
+        ])
+        .env("BOLD_FAULT_INJECT", "1")
+        // keep the breaker far out of reach: the soak injects panics to
+        // prove request-path containment, not to exercise quarantine
+        .env("BOLD_BREAKER_PANICS", "1000")
+        .env("BOLD_BREAKER_ERRORS", "1000")
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn serve-http");
+
+    // the child binds an ephemeral port and prints it; parse the
+    // "listening on http://ADDR — ..." line, then keep draining stdout
+    // on a thread (a full pipe would wedge the server's println)
+    let stdout = child.stdout.take().expect("stdout piped");
+    let mut reader = BufReader::new(stdout);
+    let addr = loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("child stdout");
+        assert!(n > 0, "serve-http exited before announcing its address");
+        if let Some(rest) = line.split("http://").nth(1) {
+            break rest.split_whitespace().next().expect("addr token").to_string();
+        }
+    };
+    let tail: Arc<Mutex<String>> = Arc::new(Mutex::new(String::new()));
+    let tail_writer = Arc::clone(&tail);
+    let drain_thread = std::thread::spawn(move || {
+        let mut rest = String::new();
+        let _ = reader.read_to_string(&mut rest);
+        tail_writer.lock().unwrap().push_str(&rest);
+    });
+
+    let feats: Vec<f32> = (0..D_IN).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    let body: Vec<u8> = feats.iter().flat_map(|f| f.to_le_bytes()).collect();
+    let req_a = loadgen::render_predict("a", &body, "application/octet-stream");
+    let req_b = loadgen::render_predict("b", &body, "application/octet-stream");
+
+    // fixed-rate open-loop load on model a for the whole soak window;
+    // faults land on model b and a hot reload lands on a mid-flight
+    let rep = std::thread::scope(|s| {
+        let addr_ref = &addr;
+        let load = s.spawn(move || {
+            loadgen::open_loop(addr_ref, &req_a, 300.0, Duration::from_millis(1500), 4)
+        });
+
+        std::thread::sleep(Duration::from_millis(300));
+        // two injected worker panics on b: the two batches in flight
+        // answer 500, the workers survive, later requests answer 200 —
+        // and model a's load never notices
+        let resp = post(&addr, "/v1/models/b/inject_panic", "");
+        assert_eq!(status_of(&resp), 404, "inject_panic lives under /admin: {resp}");
+        let resp = post(&addr, "/admin/models/b/inject_panic", "2");
+        assert_eq!(status_of(&resp), 200, "panic injection (BOLD_FAULT_INJECT=1): {resp}");
+        let statuses: Vec<u16> =
+            (0..4).map(|_| status_of(&roundtrip(&addr, &req_b))).collect();
+        assert_eq!(
+            statuses.iter().filter(|&&s| s == 500).count(),
+            2,
+            "each injected panic fails exactly one batch: {statuses:?}"
+        );
+        assert!(
+            statuses.iter().all(|&s| s == 500 || s == 200),
+            "panicked batches answer, never hang or leak other statuses: {statuses:?}"
+        );
+
+        std::thread::sleep(Duration::from_millis(200));
+        // hot reload of a under load: same checkpoint, so the canary
+        // must pass bit-exact and promotion must be invisible to the
+        // open-loop clients
+        let resp = post(&addr, "/admin/models/a/load", &ckpt_a);
+        assert_eq!(status_of(&resp), 200, "hot reload under load: {resp}");
+        assert!(resp.contains("\"version\":2"), "reload promotes v2: {resp}");
+        assert!(resp.contains("bit-exact"), "canary replayed golden vectors: {resp}");
+
+        load.join().expect("load thread")
+    });
+
+    // zero hung or dropped requests across the soak: every arrival was
+    // answered 200 (or deliberately shed) — no timeouts, no transport
+    // errors, no unexpected statuses, through panics AND a promotion
+    assert!(rep.sent > 100, "soak actually ran: {rep:?}");
+    assert_eq!(rep.timeouts, 0, "hung requests during the soak: {rep:?}");
+    assert_eq!(rep.io_errors, 0, "transport errors during the soak: {rep:?}");
+    assert_eq!(rep.connect_errors, 0, "refused connects during the soak: {rep:?}");
+    assert_eq!(rep.other_5xx, 0, "model a must never 500: {rep:?}");
+    assert_eq!(rep.other_4xx, 0, "client errors during the soak: {rep:?}");
+    assert_eq!(
+        rep.ok + rep.shed + rep.expired,
+        rep.sent,
+        "every request accounted for: {rep:?}"
+    );
+    assert!(rep.ok >= rep.sent * 9 / 10, "goodput collapsed during the soak: {rep:?}");
+
+    // post-soak bookkeeping over the wire: a is serving its reloaded
+    // version, b's contained panics are counted
+    let stats = roundtrip(&addr, b"GET /stats HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert!(stats.contains("\"a\":{\"health\":\"healthy\",\"version\":2"), "{stats}");
+    let b_obj = {
+        let start = stats.find("\"b\":{").expect("b in stats") + 5;
+        let end = stats[start..].find('}').expect("b closes") + start;
+        &stats[start..end]
+    };
+    assert!(b_obj.contains("\"worker_panics\":2"), "panics counted for b: {b_obj}");
+
+    // drain over the wire; the process must exit cleanly and report it
+    let resp = post(&addr, "/admin/shutdown", "");
+    assert_eq!(status_of(&resp), 200, "shutdown: {resp}");
+    assert!(resp.contains("\"draining\":true"), "{resp}");
+    let st = wait_with_deadline(&mut child, Duration::from_secs(30));
+    assert!(st.success(), "serve-http must exit 0 after a drain, got {st:?}");
+    drain_thread.join().expect("stdout drain");
+    let tail = tail.lock().unwrap();
+    assert!(tail.contains("drained:"), "drain summary printed: {tail}");
+}

@@ -8,10 +8,12 @@
 //! Raw `TcpStream`s throughout: the faults are injected below the HTTP
 //! layer, exactly as a hostile peer would.
 
+use bold::coordinator::save_model;
 use bold::models::{boolean_mlp, vgg_small, MlpConfig, VggConfig};
 use bold::nn::{Layer, Value};
 use bold::runtime::{
-    HttpConfig, HttpLimits, HttpServer, ModelRegistry, NativeServer, PackedGraph, ServeConfig,
+    HttpConfig, HttpLimits, HttpServer, LifecycleConfig, ModelRegistry, NativeServer, PackedGraph,
+    ServeConfig,
 };
 use bold::tensor::Tensor;
 use bold::util::Rng;
@@ -40,11 +42,25 @@ fn slow_graph() -> PackedGraph {
 }
 
 fn start(graph: PackedGraph, serve: ServeConfig, cfg: HttpConfig) -> (HttpServer, String) {
-    let mut registry = ModelRegistry::new();
+    let registry = ModelRegistry::new();
     registry.add("m", graph, serve).expect("register");
     let server = HttpServer::start(registry, "127.0.0.1:0", cfg).expect("bind");
     let addr = server.local_addr().to_string();
     (server, addr)
+}
+
+fn tmp(name: &str) -> String {
+    let dir = std::env::temp_dir().join("bold_net_faults_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name).to_str().unwrap().to_string()
+}
+
+/// Save a fresh seed-`seed` MLP checkpoint with the suite's standard
+/// shape (`D_IN` → 64 → 32 → 10) at `path`.
+fn mlp_ckpt(path: &str, seed: u64) {
+    let cfg = MlpConfig { d_in: D_IN, hidden: vec![64, 32], d_out: 10, tanh_scale: true };
+    let mut model = boolean_mlp(&cfg, &mut Rng::new(seed));
+    save_model(&mut model, path).expect("save checkpoint");
 }
 
 fn default_serve() -> ServeConfig {
@@ -111,16 +127,37 @@ fn read_framed(s: &mut TcpStream) -> String {
     String::from_utf8_lossy(&buf[..head_end + cl]).to_string()
 }
 
-fn predict_raw(features: usize) -> Vec<u8> {
+fn predict_named(model: &str, features: usize) -> Vec<u8> {
     let body: String = (0..features)
         .map(|i| if i % 2 == 0 { "1" } else { "-1" })
         .collect::<Vec<_>>()
         .join(",");
     format!(
-        "POST /v1/models/m/predict HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        "POST /v1/models/{model}/predict HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
         body.len()
     )
     .into_bytes()
+}
+
+fn predict_raw(features: usize) -> Vec<u8> {
+    predict_named("m", features)
+}
+
+/// Render a `POST /admin/models/<name>/<action>` request.
+fn admin_raw(model: &str, action: &str, body: &str) -> Vec<u8> {
+    format!(
+        "POST /admin/models/{model}/{action} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// One request on a fresh keep-alive connection, one framed response.
+fn framed_roundtrip(addr: &str, raw: &[u8]) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(raw).expect("send");
+    read_framed(&mut s)
 }
 
 /// The no-worker-death probe: a fresh connection must complete a real
@@ -583,5 +620,134 @@ fn stats_and_listing_endpoints_serve_json() {
     // wrong method on an aux endpoint
     let resp = roundtrip_to_eof(&addr, b"POST /stats HTTP/1.1\r\nContent-Length: 0\r\nConnection: close\r\n\r\n");
     assert_status(&resp, 405, "POST /stats");
+    drop(server);
+}
+
+/// Extract the flat per-model counter object for `name` from a `/stats`
+/// response (`"models":{"<name>":{...}}` — no nested braces inside).
+fn model_stats(stats_json: &str, name: &str) -> String {
+    let key = format!("\"{name}\":{{");
+    let start = stats_json.find(&key).unwrap_or_else(|| panic!("{name} in stats: {stats_json}"))
+        + key.len();
+    let end = stats_json[start..].find('}').expect("counter object closes") + start;
+    stats_json[start..end].to_string()
+}
+
+#[test]
+fn admin_canary_gates_hot_reload_and_allows_explicit_divergence() {
+    // incumbent loaded from a checkpoint so the reload of the *same*
+    // file must replay bit-exact through the identical compile path
+    let base = tmp("reload_base.ckpt");
+    mlp_ckpt(&base, 3);
+    let graph = PackedGraph::load(&base).expect("base load");
+    let (server, addr) = start(graph, default_serve(), default_http());
+
+    let resp = framed_roundtrip(&addr, &admin_raw("m", "load", &base));
+    assert_status(&resp, 200, "bit-exact hot reload");
+    assert!(resp.contains("\"version\":2"), "promotion bumps the version: {resp}");
+    assert!(resp.contains("bit-exact"), "canary verdict in the response: {resp}");
+    assert_healthy(&addr, D_IN);
+
+    // retrained weights (same shape, different seed): the canary must
+    // reject the promotion and the incumbent must keep serving
+    let diverged = tmp("reload_diverged.ckpt");
+    mlp_ckpt(&diverged, 777);
+    let resp = framed_roundtrip(&addr, &admin_raw("m", "load", &diverged));
+    assert_status(&resp, 409, "canary divergence rejects");
+    assert!(resp.contains("canary divergence"), "409 names the cause: {resp}");
+    assert_healthy(&addr, D_IN);
+
+    // same checkpoint with the explicit override promotes (shape-checked)
+    let body = format!("{diverged} allow_divergence");
+    let resp = framed_roundtrip(&addr, &admin_raw("m", "load", &body));
+    assert_status(&resp, 200, "allow_divergence promotes retrained weights");
+    assert!(resp.contains("\"version\":3"), "{resp}");
+    assert_healthy(&addr, D_IN);
+
+    // manual rollback returns to the previous warm version, still serving
+    let resp = framed_roundtrip(&addr, &admin_raw("m", "rollback", ""));
+    assert_status(&resp, 200, "manual rollback");
+    assert!(resp.contains("\"version\":2"), "rollback restores v2: {resp}");
+    assert_healthy(&addr, D_IN);
+
+    // a nonexistent checkpoint path is a 400-class load failure for the
+    // admin caller; the incumbent keeps serving untouched
+    let resp = framed_roundtrip(&addr, &admin_raw("m", "load", "/nonexistent/path.ckpt"));
+    assert_status(&resp, 400, "unreadable checkpoint");
+    assert_healthy(&addr, D_IN);
+    drop(server);
+}
+
+#[test]
+fn breaker_quarantines_failing_model_isolates_healthy_one_and_freezes_counters() {
+    // tight programmatic thresholds: two worker panics open the circuit
+    let lc = LifecycleConfig {
+        canary_vectors: 4,
+        canary_seed: 7,
+        breaker_window: 8,
+        breaker_errors: 4,
+        breaker_panics: 2,
+    };
+    let registry = ModelRegistry::with_defaults(default_serve(), lc);
+    registry.add("good", mlp_graph(), default_serve()).expect("good");
+    registry.add("bad", mlp_graph(), default_serve()).expect("bad");
+    let server = HttpServer::start(registry, "127.0.0.1:0", default_http()).expect("bind");
+    let addr = server.local_addr().to_string();
+
+    for m in ["good", "bad"] {
+        let resp = framed_roundtrip(&addr, &predict_named(m, D_IN));
+        assert_status(&resp, 200, m);
+    }
+
+    // two injected worker panics answer 500 each; the second crosses
+    // breaker_panics, and v1 retains no last-known-good, so the model
+    // quarantines rather than rolling back
+    server.registry().get("bad").expect("bad serving").inject_panics(2);
+    for i in 0..2 {
+        let resp = framed_roundtrip(&addr, &predict_named("bad", D_IN));
+        assert_status(&resp, 500, &format!("panicked batch {i}"));
+    }
+    let resp = framed_roundtrip(&addr, &predict_named("bad", D_IN));
+    assert_status(&resp, 503, "quarantined model refuses");
+    assert!(resp.contains("Retry-After:"), "breaker 503 carries Retry-After: {resp}");
+
+    // the blast radius is one model: its neighbour still serves
+    let resp = framed_roundtrip(&addr, &predict_named("good", D_IN));
+    assert_status(&resp, 200, "healthy model unaffected by the neighbour's breaker");
+
+    // listing reflects the split-brain state and names the cause
+    let resp = roundtrip_to_eof(&addr, b"GET /v1/models HTTP/1.1\r\nConnection: close\r\n\r\n");
+    assert!(resp.contains("\"health\":\"quarantined\""), "{resp}");
+    assert!(resp.contains("\"health\":\"healthy\""), "{resp}");
+    assert!(resp.contains("circuit breaker tripped"), "{resp}");
+
+    // the quarantined model's counters are frozen: refused requests are
+    // answered 503 without advancing requests/errors/worker_panics
+    let stats = roundtrip_to_eof(&addr, b"GET /stats HTTP/1.1\r\nConnection: close\r\n\r\n");
+    let before = model_stats(&stats, "bad");
+    assert!(before.contains("\"health\":\"quarantined\""), "{before}");
+    for _ in 0..3 {
+        let resp = framed_roundtrip(&addr, &predict_named("bad", D_IN));
+        assert_status(&resp, 503, "still refused");
+    }
+    let stats = roundtrip_to_eof(&addr, b"GET /stats HTTP/1.1\r\nConnection: close\r\n\r\n");
+    let after = model_stats(&stats, "bad");
+    assert_eq!(before, after, "a quarantined model's counters must not advance");
+
+    // ... while the healthy model's counters do advance
+    let good_before = model_stats(&stats, "good");
+    let resp = framed_roundtrip(&addr, &predict_named("good", D_IN));
+    assert_status(&resp, 200, "good keeps serving");
+    let stats = roundtrip_to_eof(&addr, b"GET /stats HTTP/1.1\r\nConnection: close\r\n\r\n");
+    assert_ne!(good_before, model_stats(&stats, "good"), "healthy counters advance");
+
+    // manual recovery: load a fresh checkpoint into the quarantined slot
+    let rescue = tmp("breaker_rescue.ckpt");
+    mlp_ckpt(&rescue, 3);
+    let body = format!("{rescue} allow_divergence");
+    let resp = framed_roundtrip(&addr, &admin_raw("bad", "load", &body));
+    assert_status(&resp, 200, "load is the way out of quarantine");
+    let resp = framed_roundtrip(&addr, &predict_named("bad", D_IN));
+    assert_status(&resp, 200, "recovered model serves again");
     drop(server);
 }

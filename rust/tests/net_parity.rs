@@ -47,7 +47,7 @@ fn checkpoint_pair(model: &mut Sequential, name: &str) -> (PackedGraph, PackedGr
 }
 
 fn serve(graph: PackedGraph, serve_cfg: ServeConfig) -> (HttpServer, String) {
-    let mut registry = ModelRegistry::new();
+    let registry = ModelRegistry::new();
     registry.add("m", graph, serve_cfg).expect("register");
     let cfg = HttpConfig { threads: 8, ..HttpConfig::default() };
     let server = HttpServer::start(registry, "127.0.0.1:0", cfg).expect("bind");
@@ -274,6 +274,8 @@ fn fixed_rate_load_smoke_has_no_unexpected_errors() {
     assert_eq!(rep.other_5xx, 0, "unexpected 5xx under fixed-rate load: {rep:?}");
     assert_eq!(rep.other_4xx, 0, "unexpected 4xx under fixed-rate load: {rep:?}");
     assert_eq!(rep.io_errors, 0, "transport errors under fixed-rate load: {rep:?}");
+    assert_eq!(rep.timeouts, 0, "socket timeouts under fixed-rate load: {rep:?}");
+    assert_eq!(rep.connect_errors, 0, "refused connects under fixed-rate load: {rep:?}");
     assert_eq!(rep.expired, 0, "deadline expiries at 150 req/s: {rep:?}");
     assert!(
         rep.ok + rep.shed == rep.sent && rep.ok >= rep.sent * 9 / 10,
